@@ -1,0 +1,64 @@
+//! The paper's §1 motivating observation, reproduced in the analytical
+//! model: a single spread RAR job vs four identical jobs whose rings
+//! share the same inter-server links ([19]: 295 s solo -> 675 s each).
+//!
+//! ```bash
+//! cargo run --release --offline --example contention_demo
+//! ```
+
+use rarsched::cluster::{Cluster, JobPlacement, ServerId};
+use rarsched::contention::{ContentionParams, ContentionSnapshot};
+use rarsched::experiments::{motivation, ExperimentSetup};
+use rarsched::jobs::{JobId, JobSpec};
+
+fn main() -> rarsched::Result<()> {
+    let params = ContentionParams::paper();
+    let cluster = Cluster::uniform(2, 8, 1.0, 25.0);
+
+    // One 4-GPU job spread 2+2 across the two servers.
+    let job = {
+        let mut j = JobSpec::synthetic(JobId(0), 4);
+        j.iterations = 2000;
+        j
+    };
+    let spread = |base: usize| {
+        JobPlacement::new(vec![
+            cluster.global_gpu(ServerId(0), base),
+            cluster.global_gpu(ServerId(0), base + 1),
+            cluster.global_gpu(ServerId(1), base),
+            cluster.global_gpu(ServerId(1), base + 1),
+        ])
+    };
+
+    println!("== per-iteration time under increasing contention ==");
+    println!("{:<28} {:>10} {:>12}", "co-running spread jobs", "tau (slots)", "iters/slot");
+    for p in 1..=6usize {
+        let tau = params.tau(&cluster, &job, &spread(0), p);
+        println!("{:<28} {:>10.4} {:>12}", p, tau, params.phi(tau));
+    }
+    let colo = JobPlacement::new((0..4).map(|i| cluster.global_gpu(ServerId(0), i)).collect());
+    let tau_colo = params.tau(&cluster, &job, &colo, 0);
+    println!("{:<28} {:>10.4} {:>12}", "(co-located, no contention)", tau_colo, params.phi(tau_colo));
+
+    // Eq. 6 on the actual 4-job placement set.
+    let placements: Vec<_> =
+        (0..4).map(|i| (JobId(i), spread(2 * i))).collect();
+    let snap = ContentionSnapshot::build(&cluster, &placements);
+    println!("\nEq. 6 contention degree with all four jobs active:");
+    for (id, _) in &placements {
+        println!("  p_{id} = {}", snap.p_j(*id));
+    }
+
+    // End-to-end JCT comparison (the [19] experiment shape).
+    let (solo, contended) = motivation(&ExperimentSetup::paper())?;
+    println!("\n== completion time (simulated, Eq. 6-9) ==");
+    println!("1 spread job alone     : {solo} slots   (paper testbed: 295 s)");
+    println!(
+        "4 spread jobs together : {contended} slots   (paper testbed: 675 s)"
+    );
+    println!(
+        "slowdown               : {:.2}x     (paper testbed: 2.29x)",
+        contended as f64 / solo as f64
+    );
+    Ok(())
+}

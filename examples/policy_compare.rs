@@ -1,0 +1,50 @@
+//! Fig. 4 as a runnable example: all five policies over the (scaled)
+//! paper trace, with makespan, avg JCT, utilization and contention.
+//!
+//! ```bash
+//! cargo run --release --offline --example policy_compare          # 0.25x trace
+//! POLICY_SCALE=1.0 cargo run --release --offline --example policy_compare
+//! ```
+
+use rarsched::experiments::{run_policy, ExperimentSetup};
+use rarsched::sched::Policy;
+
+fn main() -> rarsched::Result<()> {
+    let mut setup = ExperimentSetup::paper();
+    setup.scale = std::env::var("POLICY_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    println!(
+        "{} jobs on {} servers / {} GPUs, T = {}\n",
+        jobs.len(),
+        cluster.num_servers(),
+        cluster.num_gpus(),
+        setup.horizon
+    );
+    println!(
+        "{:<10} {:>9} {:>10} {:>9} {:>8} {:>8} {:>11}",
+        "policy", "makespan", "avg JCT", "p95 JCT", "wait", "util%", "max contend"
+    );
+    let mut rows = Vec::new();
+    for policy in Policy::ALL {
+        let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+        println!(
+            "{:<10} {:>9} {:>10.1} {:>9} {:>8.1} {:>8.1} {:>11}",
+            s.policy,
+            s.makespan,
+            s.avg_jct,
+            s.p95_jct,
+            s.avg_wait,
+            s.gpu_utilization * 100.0,
+            s.max_contention
+        );
+        rows.push(s);
+    }
+    let best = rows.iter().min_by_key(|s| s.makespan).unwrap();
+    println!("\nbest makespan: {} ({} slots)", best.policy, best.makespan);
+    Ok(())
+}

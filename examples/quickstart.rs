@@ -1,0 +1,54 @@
+//! Quickstart: schedule a small job mix with SJF-BCO and inspect the
+//! realized makespan under the contention model.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::Simulator;
+use rarsched::trace::TraceGenerator;
+
+fn main() -> rarsched::Result<()> {
+    // A small multi-tenant cluster: 8 servers, random {4,8,16,32}-GPU.
+    let cluster = Cluster::random(8, 42);
+    println!(
+        "cluster: {} servers / {} GPUs (b^e={}, b^i={})",
+        cluster.num_servers(),
+        cluster.num_gpus(),
+        cluster.inter_bw,
+        cluster.intra_bw
+    );
+
+    // ~16 jobs following the paper's Philly-derived mix.
+    let jobs = TraceGenerator::paper_scaled(0.1).generate(42);
+    println!("jobs: {}", jobs.len());
+    let params = ContentionParams::paper();
+
+    // Schedule with the paper's SJF-BCO, then replay under Eq. 6-9.
+    let plan = schedule(Policy::SjfBco, &cluster, &jobs, &params, 10_000)?;
+    println!(
+        "plan: theta={:?} kappa={:?}, {} spread placements, max span {}",
+        plan.theta,
+        plan.kappa,
+        plan.num_spread(),
+        plan.max_span()
+    );
+
+    let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+    println!("makespan    : {} slots", outcome.makespan);
+    println!("avg JCT     : {:.1} slots", outcome.avg_jct);
+    println!("utilization : {:.1}%", outcome.gpu_utilization * 100.0);
+
+    // Compare against the random baseline.
+    let rand_plan = schedule(Policy::Random, &cluster, &jobs, &params, 10_000)?;
+    let rand_outcome = Simulator::new(&cluster, &jobs, &params).run(&rand_plan);
+    println!(
+        "RAND makespan: {} slots ({:.2}x SJF-BCO)",
+        rand_outcome.makespan,
+        rand_outcome.makespan as f64 / outcome.makespan as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Trace explorer: generate the Philly-derived trace, print its
+//! composition, save/reload it as JSON, and show the per-job τ bounds
+//! (ρ̂ estimates) the planners work with.
+//!
+//! ```bash
+//! cargo run --release --offline --example trace_explorer
+//! ```
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::ModelKind;
+use rarsched::sched::Estimator;
+use rarsched::trace::{Trace, TraceGenerator};
+
+fn main() -> rarsched::Result<()> {
+    let gen = TraceGenerator::paper();
+    let trace = gen.generate_trace(42);
+    println!("paper trace: {} jobs, total GPU demand {}", trace.jobs.len(), trace.total_gpu_demand());
+
+    // composition by size and by model kind
+    println!("\nby GPU count:");
+    for size in [1usize, 2, 4, 8, 16, 32] {
+        let n = trace.jobs.iter().filter(|j| j.gpus == size).count();
+        println!("  {size:>2} GPUs: {n:>3} jobs  {}", "#".repeat(n / 2));
+    }
+    println!("\nby workload kind:");
+    for kind in ModelKind::ALL {
+        let n = trace.jobs.iter().filter(|j| j.name.starts_with(kind.name())).count();
+        println!("  {:<14} {n:>3} jobs", kind.name());
+    }
+
+    // round-trip to disk
+    let path = std::env::temp_dir().join("rarsched_trace.json");
+    trace.save(&path)?;
+    let reloaded = Trace::load(&path)?;
+    assert_eq!(reloaded.jobs.len(), trace.jobs.len());
+    println!("\nsaved + reloaded {:?} ({} bytes)", path, std::fs::metadata(&path)?.len());
+
+    // what the planner sees: rho-hat bounds per job class
+    let cluster = Cluster::paper(42);
+    let params = ContentionParams::paper();
+    let est = Estimator::new(&cluster, &params);
+    println!("\nplanner estimates (first job of each size):");
+    println!("{:>5} {:>10} {:>10} {:>10} {:>8}", "GPUs", "rho_lo", "rho_hat", "rho_hi", "u/l");
+    for size in [1usize, 2, 4, 8, 16, 32] {
+        if let Some(job) = trace.jobs.iter().find(|j| j.gpus == size) {
+            let r = est.rho(job);
+            println!(
+                "{:>5} {:>10.1} {:>10.1} {:>10.1} {:>8.2}",
+                size,
+                r.rho_lower,
+                r.rho_hat,
+                r.rho_upper,
+                r.rho_upper / r.rho_lower
+            );
+        }
+    }
+    println!("\nworst-case estimate ratio phi*u/l = {:.2} (enters Theorem 5)", est.worst_ratio(&trace.jobs));
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT export: lower the L2 train step to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and executes via PJRT. HLO
+text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Per model preset this writes, under ``--out-dir``:
+
+* ``<model>/train_step.hlo.txt``  — (params..., x, y) -> (loss, params'...)
+* ``<model>/grad_step.hlo.txt``   — (params..., x, y) -> (loss, grads...)
+* ``<model>/apply_grads.hlo.txt`` — (params..., grads...) -> (params'...)
+* ``<model>/params_init.bin``     — f32 LE initial parameters (canonical order)
+* ``kernels/matmul_<n>.hlo.txt``  — standalone L1 kernel (runtime benches)
+* ``manifest.json``               — shapes, order, file map, numeric checks
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--models tiny,small]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def export_model(cfg: M.ModelConfig, out_dir: pathlib.Path) -> dict:
+    """Lower all three entry points for one preset; returns manifest entry."""
+    mdir = out_dir / cfg.name
+    mdir.mkdir(parents=True, exist_ok=True)
+    specs = M.param_specs(cfg)
+    p_specs = [_spec(s) for _, s in specs]
+    x_spec = _spec((cfg.batch, cfg.seq_len), jnp.int32)
+    n = len(p_specs)
+
+    def train_step_flat(*args):
+        params, (x, y) = list(args[:n]), args[n:]
+        loss, new_params = M.train_step(cfg, params, x, y)
+        return (loss, *new_params)
+
+    def grad_step_flat(*args):
+        params, (x, y) = list(args[:n]), args[n:]
+        loss, grads = M.grad_step(cfg, params, x, y)
+        return (loss, *grads)
+
+    def apply_flat(*args):
+        params, grads = list(args[:n]), list(args[n:])
+        return tuple(M.apply_grads(cfg, params, grads))
+
+    exports = {
+        "train_step": (train_step_flat, [*p_specs, x_spec, x_spec]),
+        "grad_step": (grad_step_flat, [*p_specs, x_spec, x_spec]),
+        "apply_grads": (apply_flat, [*p_specs, *p_specs]),
+    }
+    files = {}
+    for name, (fn, arg_specs) in exports.items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = mdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        files[name] = f"{cfg.name}/{name}.hlo.txt"
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    # --- initial parameters + numeric cross-check -------------------------
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    flat = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    (mdir / "params_init.bin").write_bytes(flat.astype("<f4").tobytes())
+
+    bx, by = M.make_batch(cfg, jax.random.PRNGKey(1))
+    loss0, grads = M.grad_step(cfg, params, bx, by)
+    params1 = M.apply_grads(cfg, params, grads)
+    loss1 = M.loss_fn(cfg, params1, bx, by)
+    check = {
+        "x": np.asarray(bx).reshape(-1).tolist(),
+        "y": np.asarray(by).reshape(-1).tolist(),
+        "loss_before": float(loss0),
+        "loss_after_step": float(loss1),
+    }
+
+    return {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+        },
+        "params": [
+            {"name": name, "shape": list(shape), "size": int(np.prod(shape))}
+            for name, shape in specs
+        ],
+        "total_params": M.num_params(cfg),
+        "artifacts": files,
+        "init_file": f"{cfg.name}/params_init.bin",
+        "check": check,
+    }
+
+
+def export_matmul_kernel(n: int, out_dir: pathlib.Path) -> dict:
+    kdir = out_dir / "kernels"
+    kdir.mkdir(parents=True, exist_ok=True)
+    spec = _spec((n, n))
+    lowered = jax.jit(lambda a, b: (matmul(a, b),)).lower(spec, spec)
+    path = kdir / f"matmul_{n}.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    print(f"  wrote {path}")
+    return {"file": f"kernels/matmul_{n}.hlo.txt", "m": n, "k": n, "n": n}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small",
+                    help="comma-separated presets (tiny,small,base)")
+    ap.add_argument("--matmul-sizes", default="128,256,512")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir).resolve()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"models": {}, "kernels": {}}
+
+    for name in [m.strip() for m in args.models.split(",") if m.strip()]:
+        cfg = M.ModelConfig.preset(name)
+        print(f"exporting model '{name}' ({M.num_params(cfg) / 1e6:.2f} M params)")
+        manifest["models"][name] = export_model(cfg, out_dir)
+
+    for n in [int(s) for s in args.matmul_sizes.split(",") if s.strip()]:
+        manifest["kernels"][f"matmul_{n}"] = export_matmul_kernel(n, out_dir)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

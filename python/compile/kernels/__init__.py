@@ -1,0 +1,20 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .attention import attention, attention_ad, attention_vmem_bytes
+from .matmul import matmul, matmul_ad, vmem_footprint
+from .ring_reduce import chunk_add, chunk_boundaries, rar_bytes_per_worker, ring_allreduce
+from .sgd import sgd_apply
+
+__all__ = [
+    "attention",
+    "attention_ad",
+    "attention_vmem_bytes",
+    "matmul",
+    "matmul_ad",
+    "vmem_footprint",
+    "chunk_add",
+    "chunk_boundaries",
+    "rar_bytes_per_worker",
+    "ring_allreduce",
+    "sgd_apply",
+]

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: fused causal scaled-dot-product attention.
+
+One grid step processes one (batch, head) pair entirely in VMEM:
+``softmax(q k^T / sqrt(d) + causal) v`` with a numerically-stable
+row-max softmax — the flash-attention insight restated for the TPU
+memory hierarchy (keep the (S, d_h) tiles resident in VMEM/scratch
+rather than streaming S×S scores through HBM). For the sequence lengths
+this repo trains (S ≤ 256, d_h ≤ 64) the whole head fits comfortably:
+S·d_h·3 + S² floats ≤ 0.5 MB « 16 MB VMEM.
+
+The backward pass is provided via ``jax.custom_vjp`` with jnp
+recomputation (correct, not memory-optimal; the fused forward is the
+hot path this repo exercises).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    # refs are (1, S, d_h) blocks for one (batch, head) pair
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[1], q.dtype))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # causal mask
+    idx = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(jdx <= idx, scores, -1e30)
+    # stable softmax
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              interpret: bool = True) -> jax.Array:
+    """Fused causal attention over ``(B, H, S, d_h)`` tensors."""
+    if q.shape != k.shape or q.shape != v.shape:
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    if q.ndim != 4:
+        raise ValueError(f"expected (B, H, S, d_h), got {q.shape}")
+    b, h, s, d = q.shape
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = pl.pallas_call(
+        _attn_kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def _attention_ref(q, k, v):
+    """Plain-jnp causal attention (also the VJP recompute path)."""
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+@jax.custom_vjp
+def attention_ad(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Differentiable fused attention (backward = jnp recompute)."""
+    return attention(q, k, v)
+
+
+def _fwd(q, k, v):
+    return attention(q, k, v), (q, k, v)
+
+
+def _bwd(res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(_attention_ref, q, k, v)
+    return vjp(do)
+
+
+attention_ad.defvjp(_fwd, _bwd)
+
+
+def attention_vmem_bytes(s: int, d_h: int, bytes_per_el: int = 4) -> int:
+    """Per-grid-step VMEM residency: q, k, v, o tiles + the score matrix."""
+    return (4 * s * d_h + s * s) * bytes_per_el

@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: tiled matrix multiplication.
+
+The paper's DDL jobs spend their compute time in dense layers (FP/BP,
+§4.1 2-2); this kernel is the compute hot-spot of the L2 model. It is
+authored for the TPU MXU: 128x128 output tiles (the systolic array shape),
+a K-strip loop that keeps one (bm, K) strip of `x` and one (K, bn) strip
+of `w` resident in VMEM, and f32 accumulation.
+
+On this testbed it must run under ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); numerics are identical, wallclock is
+CPU-numpy. Structural/VMEM analysis lives in :func:`vmem_footprint`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic-array shape: prefer 128x128 output tiles.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: full K-strip contraction.
+
+    x_ref: (bm, K) strip, w_ref: (K, bn) strip, o_ref: (bm, bn) tile.
+    The contraction uses ``preferred_element_type=float32`` so bf16 inputs
+    still accumulate in f32 (MXU-style mixed precision).
+    """
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w`` via the Pallas tile kernel.
+
+    Shapes are padded up to tile multiples and the result sliced back, so
+    arbitrary (M, K) x (K, N) inputs are supported.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block_m, max(m, 1))
+    bn = min(block_n, max(n, 1))
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul_ad(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable wrapper: Pallas kernels carry no automatic VJP, so
+    the backward pass is expressed with the same tile kernel
+    (``dx = dy @ w.T``, ``dw = x.T @ dy`` — both MXU matmuls)."""
+    return matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    return matmul(dy, w.T), matmul(x.T, dy)
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint(m: int, k: int, n: int, *, block_m: int = DEFAULT_BLOCK_M,
+                   block_n: int = DEFAULT_BLOCK_N, bytes_per_el: int = 4) -> dict:
+    """Static VMEM/MXU analysis of one grid step (for DESIGN.md §Perf).
+
+    Returns the per-step VMEM residency in bytes and the MXU tile
+    utilisation (fraction of the 128x128 array covered by the block).
+    """
+    bm, bn = min(block_m, m), min(block_n, n)
+    vmem = (bm * k + k * bn + bm * bn) * bytes_per_el
+    mxu_util = (min(bm, 128) * min(bn, 128)) / (128 * 128)
+    flops = 2 * m * k * n
+    return {
+        "block": (bm, k, bn),
+        "vmem_bytes_per_step": vmem,
+        "mxu_tile_utilization": mxu_util,
+        "total_flops": flops,
+        "grid_steps": ((m + bm - 1) // bm) * ((n + bn - 1) // bn),
+    }

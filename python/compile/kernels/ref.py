@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These are the ground truth the pytest suite compares the Pallas kernels
+against (``assert_allclose``); they are intentionally the most obvious
+possible implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def chunk_add_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def sgd_ref(w: jax.Array, g: jax.Array, lr) -> jax.Array:
+    return w - jnp.asarray(lr, dtype=w.dtype) * g
+
+
+def allreduce_ref(grads: list[jax.Array]) -> list[jax.Array]:
+    """Ground truth for ring_allreduce: every worker ends with the sum."""
+    total = grads[0]
+    for g in grads[1:]:
+        total = total + g
+    return [total for _ in grads]

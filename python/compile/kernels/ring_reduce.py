@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: the RAR share-reduce chunk step.
+
+One step of the ring-all-reduce Share-Reduce phase (paper §3, Fig. 1):
+a worker receives a gradient sub-vector from its upstream neighbour and
+adds it to its local chunk. The kernel is a blocked elementwise add —
+bandwidth-bound, so the tile shape targets the VPU lane width (128) with
+a sublane-friendly second dimension.
+
+`ring_allreduce` chains 2(w-1) of these steps in pure JAX exactly as the
+ring schedules them; it is used both as a correctness oracle for the Rust
+RAR engine and to verify the bandwidth-optimal volume accounting.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# VPU-friendly block: 8 sublanes x 128 lanes.
+DEFAULT_BLOCK = 1024
+
+
+def _chunk_add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def chunk_add(a: jax.Array, b: jax.Array, *, block: int = DEFAULT_BLOCK,
+              interpret: bool = True) -> jax.Array:
+    """Elementwise ``a + b`` over flat chunks via the Pallas kernel."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    blk = min(block, n) if n else 1
+    pad = (-n) % blk
+    ap = jnp.pad(flat, (0, pad))
+    bp = jnp.pad(b.reshape(-1), (0, pad))
+    out = pl.pallas_call(
+        _chunk_add_kernel,
+        grid=(ap.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
+                  pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(ap.shape, a.dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:n].reshape(a.shape)
+
+
+def chunk_boundaries(d: int, w: int) -> list[tuple[int, int]]:
+    """Split a length-`d` gradient into `w` contiguous chunks (the per-worker
+    sub-vectors of §3). Sizes differ by at most one element."""
+    base, rem = divmod(d, w)
+    bounds = []
+    start = 0
+    for i in range(w):
+        size = base + (1 if i < rem else 0)
+        bounds.append((start, start + size))
+        start += size
+    return bounds
+
+
+def ring_allreduce(grads: list[jax.Array], *, use_kernel: bool = True) -> list[jax.Array]:
+    """Execute the exact 2(w-1)-step RAR schedule over per-worker gradients.
+
+    ``grads[i]`` is worker *i*'s local gradient (all same shape). Returns
+    each worker's final fully-reduced gradient — all equal to
+    ``sum(grads)``. Chunk arithmetic goes through the Pallas
+    :func:`chunk_add` kernel when ``use_kernel`` (the L1 hot path);
+    otherwise plain ``+`` (oracle).
+    """
+    w = len(grads)
+    if w == 0:
+        raise ValueError("need at least one worker")
+    shape = grads[0].shape
+    d = int(np.prod(shape)) if shape else 1
+    bufs = [g.reshape(-1) for g in grads]
+    if w == 1:
+        return [bufs[0].reshape(shape)]
+    bounds = chunk_boundaries(d, w)
+    add = chunk_add if use_kernel else (lambda a, b: a + b)
+
+    # Share-Reduce phase: steps 1..w-1. In step s, worker i sends chunk
+    # (i - s + 1) mod w to worker i+1, which accumulates it.
+    for s in range(w - 1):
+        sends = []
+        for i in range(w):
+            c = (i - s) % w
+            lo, hi = bounds[c]
+            sends.append((c, bufs[i][lo:hi]))
+        for i in range(w):
+            src = (i - 1) % w
+            c, payload = sends[src]
+            lo, hi = bounds[c]
+            reduced = add(bufs[i][lo:hi], payload)
+            bufs[i] = bufs[i].at[lo:hi].set(reduced)
+
+    # Share-Only phase: steps w..2w-2. Worker i now owns the fully reduced
+    # chunk (i + 1) mod w; circulate copies around the ring.
+    for s in range(w - 1):
+        sends = []
+        for i in range(w):
+            c = (i + 1 - s) % w
+            lo, hi = bounds[c]
+            sends.append((c, bufs[i][lo:hi]))
+        for i in range(w):
+            src = (i - 1) % w
+            c, payload = sends[src]
+            lo, hi = bounds[c]
+            bufs[i] = bufs[i].at[lo:hi].set(payload)
+
+    return [b.reshape(shape) for b in bufs]
+
+
+def rar_bytes_per_worker(d: int, w: int, bytes_per_el: int = 4) -> int:
+    """Total bytes any worker transmits in one all-reduce:
+    ``2 d (w-1)/w`` elements (§3 — asymptotically independent of w)."""
+    if w <= 1:
+        return 0
+    total = 0
+    bounds = chunk_boundaries(d, w)
+    # each worker sends one chunk per step for 2(w-1) steps; chunk sizes
+    # rotate, so sum = 2 * (d - own chunk avg) ~ 2 d (w-1)/w
+    for s in range(2 * (w - 1)):
+        c = s % w
+        lo, hi = bounds[c]
+        total += (hi - lo) * bytes_per_el
+    return total

@@ -1,0 +1,223 @@
+"""L2: transformer language-model train step in JAX, built on the L1
+Pallas kernels.
+
+This is the *workload* the paper's scheduler schedules: an SGD-based DDL
+training job (paper §3.1). The model is a standard pre-LN transformer LM
+over byte-level tokens; every dense contraction in the MLP blocks goes
+through the Pallas tile kernel (``kernels.matmul_ad``), so the kernel
+lowers into the same HLO module that the Rust runtime executes.
+
+Three entry points are AOT-exported per model size (see ``aot.py``):
+
+* ``train_step``  — single-worker fused step: loss + grads + SGD update.
+* ``grad_step``   — distributed-worker half-step: loss + gradients only;
+  the Rust RAR engine all-reduces the gradients between workers.
+* ``apply_grads`` — the other half: SGD update from (all-reduced) grads,
+  via the fused Pallas SGD kernel.
+
+Parameters travel as a *flat, ordered list* of tensors; the order is
+defined by :func:`param_specs` and exported in the artifact manifest so
+the Rust side can address them by index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_ad, matmul_ad, sgd_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters (static; baked into the artifact)."""
+
+    name: str = "tiny"
+    vocab: int = 256          # byte-level tokens
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+    lr: float = 0.05
+    # Use the fused Pallas attention kernel (L1) instead of the jnp
+    # einsum path. Both are numerically equivalent (tested); the fused
+    # kernel keeps each (S, d_h) head resident in VMEM.
+    fused_attention: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @staticmethod
+    def preset(name: str) -> "ModelConfig":
+        presets = {
+            # ~0.6 M params — CI / unit tests
+            "tiny": ModelConfig(name="tiny"),
+            # ~3.2 M params — default e2e training demo
+            "small": ModelConfig(
+                name="small", d_model=256, n_layers=4, n_heads=8, d_ff=1024,
+                seq_len=128, batch=8, lr=0.05,
+            ),
+            # ~25 M params — the largest CPU-trainable-in-minutes variant
+            "base": ModelConfig(
+                name="base", d_model=512, n_layers=8, n_heads=8, d_ff=2048,
+                seq_len=256, batch=8, lr=0.02,
+            ),
+        }
+        if name not in presets:
+            raise ValueError(f"unknown preset '{name}' (tiny|small|base)")
+        return presets[name]
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """The flat parameter layout: (name, shape) in canonical order."""
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_scale", (cfg.d_model,)),
+            (p + "ln1_bias", (cfg.d_model,)),
+            (p + "attn_qkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn_out", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_scale", (cfg.d_model,)),
+            (p + "ln2_bias", (cfg.d_model,)),
+            (p + "mlp_w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp_b1", (cfg.d_ff,)),
+            (p + "mlp_w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp_b2", (cfg.d_model,)),
+        ]
+    specs += [
+        ("ln_f_scale", (cfg.d_model,)),
+        ("ln_f_bias", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> list[jax.Array]:
+    """Scaled-normal init in the canonical flat order."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_bias", "_b1", "_b2")) or "b1" in name or "b2" in name:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 0.02 if "emb" in name else (1.0 / max(fan_in, 1)) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _dense(x2d: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense contraction through the Pallas tile kernel (L1)."""
+    return matmul_ad(x2d, w)
+
+
+def forward(cfg: ModelConfig, params: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Logits for token ids ``x: i32[B, S]`` -> ``f32[B, S, V]``."""
+    it = iter(params)
+
+    def take(n: int) -> list[jax.Array]:
+        return [next(it) for _ in range(n)]
+
+    (tok_emb, pos_emb) = take(2)
+    b, s = x.shape
+    h = tok_emb[x] + pos_emb[None, :s, :]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    for _ in range(cfg.n_layers):
+        (ln1_s, ln1_b, w_qkv, w_out, ln2_s, ln2_b, w1, b1, w2, b2) = take(10)
+        # --- attention ---
+        hn = _layer_norm(h, ln1_s, ln1_b)
+        qkv = _dense(hn.reshape(b * s, cfg.d_model), w_qkv).reshape(b, s, 3 * cfg.d_model)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        if cfg.fused_attention:
+            out = attention_ad(q, k, v)
+        else:
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(cfg.head_dim))
+            att = jnp.where(causal[None, None], att, -1e30)
+            att = jax.nn.softmax(att, axis=-1)
+            out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        h = h + _dense(out, w_out).reshape(b, s, cfg.d_model)
+        # --- MLP ---
+        hn = _layer_norm(h, ln2_s, ln2_b)
+        z = _dense(hn.reshape(b * s, cfg.d_model), w1) + b1
+        z = jax.nn.gelu(z)
+        z = _dense(z, w2) + b2
+        h = h + z.reshape(b, s, cfg.d_model)
+
+    (ln_f_s, ln_f_b, head) = take(3)
+    h = _layer_norm(h, ln_f_s, ln_f_b)
+    logits = _dense(h.reshape(b * s, cfg.d_model), head)
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, params: list[jax.Array], x: jax.Array,
+            y: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy (`y` = `x` shifted by the caller)."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def grad_step(cfg: ModelConfig, params: list[jax.Array], x: jax.Array,
+              y: jax.Array) -> tuple[jax.Array, list[jax.Array]]:
+    """Distributed-worker half-step: (loss, gradients)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+    return loss, grads
+
+
+def apply_grads(cfg: ModelConfig, params: list[jax.Array],
+                grads: list[jax.Array]) -> list[jax.Array]:
+    """SGD update through the fused Pallas kernel."""
+    return [sgd_apply(w, g, cfg.lr) for w, g in zip(params, grads)]
+
+
+def train_step(cfg: ModelConfig, params: list[jax.Array], x: jax.Array,
+               y: jax.Array) -> tuple[jax.Array, list[jax.Array]]:
+    """Single-worker fused step: (loss, updated params)."""
+    loss, grads = grad_step(cfg, params, x, y)
+    return loss, apply_grads(cfg, params, grads)
+
+
+def make_batch(cfg: ModelConfig, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """A synthetic next-token batch (used by python-side tests only; the
+    Rust driver feeds real byte-level corpus batches)."""
+    data = jax.random.randint(key, (cfg.batch, cfg.seq_len + 1), 0, cfg.vocab)
+    return data[:, :-1], data[:, 1:]
+
+
+def flatten_count(params: Iterable[jax.Array]) -> int:
+    return sum(int(p.size) for p in params)

@@ -1,0 +1,111 @@
+"""L1/L2 performance analysis for the §Perf pass (build-time tooling).
+
+* L1 — Pallas matmul: VMEM residency + MXU tile utilisation per block
+  configuration, swept over the model's actual contraction shapes.
+  (interpret=True gives CPU-numpy wallclock only, which is NOT a TPU
+  proxy — we optimise structure, per the repo guidelines.)
+* L2 — lowered HLO: op histogram of the exported train step; fusion
+  count, convolution/dot count, all-reduce-relevant elementwise volume.
+
+Usage: python -m compile.perf_analysis [--model small] [--hlo ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import pathlib
+import re
+
+from . import model as M
+from .kernels import vmem_footprint
+
+# TPU v4-ish envelope used for the roofline *ratio* estimate.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_FLOPS_PER_CYCLE = 2 * 128 * 128  # one 128x128 MAC array
+
+
+def l1_report(cfg: M.ModelConfig) -> list[dict]:
+    """Sweep block shapes for every distinct matmul in the model."""
+    b, s, d, f, v = cfg.batch, cfg.seq_len, cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes = {
+        "qkv": (b * s, d, 3 * d),
+        "attn_out": (b * s, d, d),
+        "mlp_w1": (b * s, d, f),
+        "mlp_w2": (b * s, f, d),
+        "head": (b * s, d, v),
+    }
+    rows = []
+    for name, (m, k, n) in shapes.items():
+        best = None
+        for bm in (32, 64, 128, 256):
+            for bn in (32, 64, 128, 256):
+                fp = vmem_footprint(m, k, n, block_m=bm, block_n=bn)
+                if fp["vmem_bytes_per_step"] > VMEM_BYTES:
+                    continue  # would not fit VMEM with double buffering
+                score = (fp["mxu_tile_utilization"], -fp["grid_steps"])
+                if best is None or score > best[0]:
+                    best = (score, bm, bn, fp)
+        _, bm, bn, fp = best
+        rows.append({
+            "matmul": name,
+            "shape": (m, k, n),
+            "best_block": (bm, bn),
+            "vmem_bytes": fp["vmem_bytes_per_step"],
+            "vmem_frac": fp["vmem_bytes_per_step"] / VMEM_BYTES,
+            "mxu_util": fp["mxu_tile_utilization"],
+            "grid_steps": fp["grid_steps"],
+        })
+    return rows
+
+
+def l2_report(hlo_path: pathlib.Path) -> dict:
+    """Parse HLO text: op histogram and fusion stats."""
+    text = hlo_path.read_text()
+    ops = collections.Counter()
+    for line in text.splitlines():
+        m = re.search(r"=\s*[a-z0-9\[\],\{\} ]+?\s([a-z\-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return {
+        "file": str(hlo_path),
+        "total_ops": sum(ops.values()),
+        "dot": ops.get("dot", 0),
+        "fusion": ops.get("fusion", 0),
+        "broadcast": ops.get("broadcast", 0),
+        "transpose": ops.get("transpose", 0),
+        "top": ops.most_common(12),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="small")
+    ap.add_argument("--hlo", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig.preset(args.model)
+    print(f"== L1 block-shape sweep ({args.model}: {M.num_params(cfg)/1e6:.2f} M params) ==")
+    print(f"{'matmul':<10} {'M,K,N':>18} {'block':>10} {'VMEM':>9} {'MXU util':>9} {'steps':>6}")
+    for r in l1_report(cfg):
+        m, k, n = r["shape"]
+        bm, bn = r["best_block"]
+        print(
+            f"{r['matmul']:<10} {f'{m},{k},{n}':>18} {f'{bm}x{bn}':>10} "
+            f"{r['vmem_frac']*100:>8.1f}% {r['mxu_util']*100:>8.1f}% {r['grid_steps']:>6}"
+        )
+
+    root = pathlib.Path(args.hlo)
+    for entry in ("grad_step", "train_step"):
+        p = root / args.model / f"{entry}.hlo.txt"
+        if not p.exists():
+            print(f"(skip {p}: not exported)")
+            continue
+        rep = l2_report(p)
+        print(f"\n== L2 HLO stats: {entry} ==")
+        print(f"total ops {rep['total_ops']}, dot {rep['dot']}, fusion {rep['fusion']}")
+        print("top ops:", ", ".join(f"{k}:{v}" for k, v in rep["top"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""AOT export smoke tests: the HLO text must parse-ready (non-empty,
+ENTRY present), the manifest complete, and the init blob the right size."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = M.ModelConfig.preset("tiny")
+    entry = aot.export_model(cfg, out)
+    manifest = {"models": {"tiny": entry},
+                "kernels": {"matmul_64": aot.export_matmul_kernel(64, out)}}
+    (out / "manifest.json").write_text(json.dumps(manifest))
+    return out, entry
+
+
+def test_hlo_text_artifacts_exist(export_dir):
+    out, entry = export_dir
+    for name, rel in entry["artifacts"].items():
+        text = (out / rel).read_text()
+        assert len(text) > 1000, name
+        assert "ENTRY" in text, f"{name}: not HLO text"
+        assert "main" in text
+
+
+def test_manifest_schema(export_dir):
+    out, entry = export_dir
+    manifest = json.loads((out / "manifest.json").read_text())
+    m = manifest["models"]["tiny"]
+    assert m["total_params"] == M.num_params(M.ModelConfig.preset("tiny"))
+    assert [p["name"] for p in m["params"]][:2] == ["tok_emb", "pos_emb"]
+    assert set(m["artifacts"]) == {"train_step", "grad_step", "apply_grads"}
+    assert manifest["kernels"]["matmul_64"]["m"] == 64
+
+
+def test_init_blob_size(export_dir):
+    out, entry = export_dir
+    blob = (out / entry["init_file"]).read_bytes()
+    assert len(blob) == 4 * entry["total_params"]
+    arr = np.frombuffer(blob, "<f4")
+    assert np.isfinite(arr).all()
+    assert arr.std() > 0
+
+
+def test_check_values_recorded(export_dir):
+    _, entry = export_dir
+    check = entry["check"]
+    cfg = M.ModelConfig.preset("tiny")
+    assert len(check["x"]) == cfg.batch * cfg.seq_len
+    assert check["loss_before"] > check["loss_after_step"], \
+        "one SGD step must reduce loss on the same batch"
+    assert abs(check["loss_before"] - np.log(cfg.vocab)) < 0.5
+
+
+def test_cli_runs_end_to_end(tmp_path):
+    """python -m compile.aot with a tiny config must succeed."""
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    result = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--models", "tiny", "--matmul-sizes", "64"],
+        cwd=repo, capture_output=True, text=True, timeout=600,
+    )
+    assert result.returncode == 0, result.stderr
+    assert (tmp_path / "manifest.json").exists()
+    assert (tmp_path / "tiny" / "train_step.hlo.txt").exists()

@@ -1,0 +1,125 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is THE
+core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import chunk_add, matmul, matmul_ad, sgd_apply, vmem_footprint
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=260)
+SMALL_DIMS = st.integers(min_value=1, max_value=96)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul --
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_matmul_matches_ref_f32(m, k, n):
+    x = _rand(0, (m, k), jnp.float32)
+    w = _rand(1, (k, n), jnp.float32)
+    assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS)
+def test_matmul_matches_ref_bf16(m, k, n):
+    x = _rand(2, (m, k), jnp.bfloat16)
+    w = _rand(3, (k, n), jnp.bfloat16)
+    got = matmul(x, w).astype(jnp.float32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(32, 32), (64, 128), (128, 64)])
+def test_matmul_block_shapes_equivalent(block_m, block_n):
+    x = _rand(4, (100, 70), jnp.float32)
+    w = _rand(5, (70, 90), jnp.float32)
+    got = matmul(x, w, block_m=block_m, block_n=block_n)
+    assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    with pytest.raises(ValueError):
+        matmul(x, jnp.zeros((6, 3)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((4,)), jnp.zeros((4, 2)))
+
+
+def test_matmul_ad_gradients_match_jnp():
+    x = _rand(6, (33, 17), jnp.float32)
+    w = _rand(7, (17, 29), jnp.float32)
+
+    def f_kernel(x, w):
+        return jnp.sum(matmul_ad(x, w) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum((x @ w) ** 2)
+
+    gx_k, gw_k = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-4)
+    assert_allclose(gw_k, gw_r, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_analysis():
+    fp = vmem_footprint(512, 256, 512)
+    assert fp["block"] == (128, 256, 128)
+    # (128*256 + 256*128 + 128*128) * 4 bytes
+    assert fp["vmem_bytes_per_step"] == (128 * 256 * 2 + 128 * 128) * 4
+    assert fp["mxu_tile_utilization"] == 1.0
+    assert fp["grid_steps"] == 16
+    # small matrices under-fill the MXU tile
+    assert vmem_footprint(32, 32, 32)["mxu_tile_utilization"] < 0.1
+
+
+# ------------------------------------------------------------- chunk_add --
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=5000))
+def test_chunk_add_matches_ref(n):
+    a = _rand(8, (n,), jnp.float32)
+    b = _rand(9, (n,), jnp.float32)
+    assert_allclose(chunk_add(a, b), ref.chunk_add_ref(a, b), rtol=1e-6)
+
+
+def test_chunk_add_nd_shapes():
+    a = _rand(10, (7, 13, 3), jnp.float32)
+    b = _rand(11, (7, 13, 3), jnp.float32)
+    assert_allclose(chunk_add(a, b), a + b, rtol=1e-6)
+    with pytest.raises(ValueError):
+        chunk_add(a, b[:3])
+
+
+# ------------------------------------------------------------------- sgd --
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=4000),
+       lr=st.floats(min_value=1e-4, max_value=1.0))
+def test_sgd_matches_ref(n, lr):
+    w = _rand(12, (n,), jnp.float32)
+    g = _rand(13, (n,), jnp.float32)
+    assert_allclose(sgd_apply(w, g, lr), ref.sgd_ref(w, g, lr), rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_2d_and_zero_lr():
+    w = _rand(14, (31, 9), jnp.float32)
+    g = _rand(15, (31, 9), jnp.float32)
+    assert_allclose(sgd_apply(w, g, 0.0), w, rtol=0, atol=0)
+    got = sgd_apply(w, g, 0.1)
+    assert_allclose(got, w - 0.1 * g, rtol=1e-6)
+
+
+def test_sgd_shape_mismatch():
+    with pytest.raises(ValueError):
+        sgd_apply(jnp.zeros((3,)), jnp.zeros((4,)), 0.1)

@@ -1,0 +1,101 @@
+"""L2 model tests: shapes, training signal, and the equivalence
+train_step == grad_step + apply_grads (the invariant that lets the Rust
+RAR engine sit between the two halves)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+CFG = M.ModelConfig.preset("tiny")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return M.make_batch(CFG, jax.random.PRNGKey(1))
+
+
+def test_param_specs_order_is_stable(params):
+    specs = M.param_specs(CFG)
+    assert len(specs) == len(params)
+    assert specs[0][0] == "tok_emb"
+    assert specs[-1][0] == "head"
+    for (name, shape), p in zip(specs, params):
+        assert tuple(shape) == p.shape, name
+    # canonical count for the tiny preset
+    assert M.num_params(CFG) == sum(int(p.size) for p in params)
+
+
+def test_forward_shapes_and_finiteness(params, batch):
+    x, _ = batch
+    logits = M.forward(CFG, params, x)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(params, batch):
+    x, y = batch
+    loss = M.loss_fn(CFG, params, x, y)
+    # near ln(vocab) at init
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality(params):
+    """Future tokens must not influence earlier logits."""
+    x1 = jnp.zeros((1, CFG.seq_len), jnp.int32)
+    x2 = x1.at[0, -1].set(7)  # change only the last token
+    l1 = M.forward(CFG, params, x1)
+    l2 = M.forward(CFG, params, x2)
+    assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_loss_decreases_over_steps(params, batch):
+    x, y = batch
+    p = params
+    losses = []
+    for _ in range(8):
+        loss, p = M.train_step(CFG, p, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, f"no training signal: {losses}"
+
+
+def test_train_step_equals_grad_plus_apply(params, batch):
+    x, y = batch
+    loss_a, p_a = M.train_step(CFG, params, x, y)
+    loss_b, grads = M.grad_step(CFG, params, x, y)
+    p_b = M.apply_grads(CFG, params, grads)
+    assert float(loss_a) == pytest.approx(float(loss_b), rel=1e-6)
+    for a, b in zip(p_a, p_b):
+        assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_data_parallel_grad_average_matches_big_batch(params):
+    """Two workers on half-batches, averaged grads == full-batch grads —
+    the correctness contract of the RAR data-parallel path."""
+    x, y = M.make_batch(CFG, jax.random.PRNGKey(5))
+    half = CFG.batch // 2
+    _, g_full = M.grad_step(CFG, params, x, y)
+    _, g0 = M.grad_step(CFG, params, x[:half], y[:half])
+    _, g1 = M.grad_step(CFG, params, x[half:], y[half:])
+    for gf, a, b in zip(g_full, g0, g1):
+        assert_allclose((a + b) / 2, gf, rtol=2e-4, atol=2e-5)
+
+
+def test_presets_scale():
+    tiny = M.ModelConfig.preset("tiny")
+    small = M.ModelConfig.preset("small")
+    base = M.ModelConfig.preset("base")
+    assert M.num_params(tiny) < M.num_params(small) < M.num_params(base)
+    assert M.num_params(base) > 20e6
+    with pytest.raises(ValueError):
+        M.ModelConfig.preset("huge")

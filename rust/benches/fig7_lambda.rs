@@ -1,0 +1,44 @@
+//! Bench + regenerator for **Fig. 7**: makespan vs the LBSGF
+//! server-provisioning factor λ ∈ {1, 2, 4, 8} with κ = 1.
+//!
+//! Paper shape: makespan decreases monotonically in λ (more candidate
+//! servers → less contention and smaller overhead for the LBSGF jobs).
+
+use rarsched::experiments::{fig7, ExperimentSetup};
+use rarsched::util::bench::Bench;
+
+fn main() {
+    let mut setup = ExperimentSetup::paper();
+    if std::env::var("RARSCHED_FULL").is_err() {
+        setup.scale = 0.25;
+    }
+    let lambdas = [1.0, 2.0, 4.0, 8.0];
+    let report = fig7(&setup, &lambdas).expect("fig7");
+    println!("{}", report.to_table());
+
+    // weak monotonicity: the last point must not be worse than the first
+    let first = report.rows.first().unwrap().makespan;
+    let last = report.rows.last().unwrap().makespan;
+    assert!(
+        last <= first,
+        "lambda=8 should not be worse than lambda=1: {first} -> {last}"
+    );
+
+    let mut b = Bench::new("fig7");
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    for &lambda in &lambdas {
+        b.run(&format!("sjf-bco/lambda={lambda}"), || {
+            rarsched::sched::sjf_bco(
+                &cluster,
+                &jobs,
+                &params,
+                setup.horizon,
+                rarsched::sched::SjfBcoConfig { kappa: Some(1), lambda },
+            )
+            .unwrap()
+        });
+    }
+    b.report();
+}

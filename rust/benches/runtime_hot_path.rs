@@ -1,0 +1,74 @@
+//! Runtime + RAR hot-path benchmarks: the live (non-simulated) layers.
+//!
+//! * PJRT execution of the standalone Pallas matmul artifacts
+//! * one full grad_step / apply_grads on the tiny model
+//! * ring_all_reduce throughput at training-gradient sizes
+//!
+//! Requires `make artifacts`. Skips gracefully when artifacts are absent
+//! (prints SKIP) so `cargo bench` works on a fresh checkout.
+
+use rarsched::rar::{ring_all_reduce, LinkBank, RingSpec};
+use rarsched::runtime::{default_artifacts_dir, PjRt};
+use rarsched::util::bench::Bench;
+
+fn main() {
+    let artifacts = default_artifacts_dir();
+    let mut b = Bench::new("runtime");
+
+    // --- RAR engine (no PJRT needed) -----------------------------------
+    for (w, d) in [(2usize, 500_000usize), (4, 500_000), (8, 500_000)] {
+        let bufs: Vec<Vec<f32>> =
+            (0..w).map(|i| vec![i as f32 * 0.5; d]).collect();
+        let spec = RingSpec::colocated(w);
+        b.run(&format!("rar/allreduce-w{w}-d{d}"), || {
+            ring_all_reduce(bufs.clone(), &spec, None)
+        });
+    }
+    // regulated: 2x2 spread ring at 1 GB/s uplinks
+    let bank = LinkBank::new(2, 1.0e9, 20.0e9);
+    let spec = RingSpec { server_of: vec![0, 0, 1, 1] };
+    let bufs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 500_000]).collect();
+    b.run("rar/allreduce-regulated-w4", || {
+        ring_all_reduce(bufs.clone(), &spec, Some(&bank))
+    });
+
+    // --- PJRT paths -----------------------------------------------------
+    if !artifacts.join("manifest.json").exists() {
+        println!("SKIP pjrt benches: no artifacts at {artifacts:?} (run `make artifacts`)");
+        b.report();
+        return;
+    }
+    let pjrt = PjRt::cpu(&artifacts).expect("pjrt");
+    let manifest = pjrt.manifest().expect("manifest");
+
+    for (name, kernel) in &manifest.kernels {
+        let exe = pjrt.compile_hlo(&kernel.file).expect("compile");
+        let n = kernel.m;
+        let data = vec![0.5f32; n * n];
+        let a = xla::Literal::vec1(&data).reshape(&[n as i64, n as i64]).unwrap();
+        let bb = xla::Literal::vec1(&data).reshape(&[n as i64, n as i64]).unwrap();
+        let flops = 2.0 * (n as f64).powi(3);
+        let r = b.run(&format!("pjrt/{name}"), || {
+            exe.execute::<&xla::Literal>(&[&a, &bb]).unwrap()
+        });
+        let gflops = flops / r.mean.as_secs_f64() / 1e9;
+        println!("  -> {name}: {gflops:.1} GFLOP/s");
+    }
+
+    if let Ok(model) = pjrt.model("tiny") {
+        let params = model.init_params(&pjrt).expect("params");
+        let e = model.entry();
+        let x: Vec<i32> = (0..e.config.batch * e.config.seq_len)
+            .map(|i| (i % 251) as i32)
+            .collect();
+        let y = x.clone();
+        b.run("pjrt/tiny-grad_step", || model.grad_step(&params, &x, &y).unwrap());
+        let (_, grads) = model.grad_step(&params, &x, &y).unwrap();
+        b.run("pjrt/tiny-apply_grads", || model.apply_grads(&params, &grads).unwrap());
+        b.run("pjrt/tiny-flatten+unflatten", || {
+            let flat = model.flatten_grads(&grads).unwrap();
+            model.unflatten_grads(&flat).unwrap()
+        });
+    }
+    b.report();
+}

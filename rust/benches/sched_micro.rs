@@ -1,0 +1,90 @@
+//! Scheduler micro-benchmarks: the L3 hot paths in isolation.
+//!
+//! * contention snapshot construction (runs every simulated slot)
+//! * one full simulator replay
+//! * single (θ, κ) scheduling attempts for each placement subroutine
+//! * Theorem 6 scaling spot-check: SJF-BCO runtime ~ O(n_g·J·N log N log T)
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::{ContentionParams, ContentionSnapshot};
+use rarsched::experiments::ExperimentSetup;
+use rarsched::sched::{self, Policy, SjfBcoConfig};
+use rarsched::sim::Simulator;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::bench::Bench;
+
+fn main() {
+    let setup = ExperimentSetup::paper();
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut b = Bench::new("sched_micro");
+
+    // snapshot build over a realistic active set
+    let plan = sched::schedule(Policy::ListScheduling, &cluster, &jobs, &params, 10_000)
+        .expect("ls plan");
+    let active: Vec<_> =
+        plan.entries.iter().take(40).map(|e| (e.job, e.placement.clone())).collect();
+    b.run("contention_snapshot/40-active", || {
+        ContentionSnapshot::build(&cluster, &active)
+    });
+
+    // full simulator replay of a complete plan
+    b.run("simulate/replay-160-jobs", || {
+        Simulator::new(&cluster, &jobs, &params).run(&plan)
+    });
+
+    // single-policy plans
+    for policy in [Policy::FirstFit, Policy::ListScheduling, Policy::Gadget] {
+        b.run(&format!("plan/{}", policy.name()), || {
+            sched::schedule(policy, &cluster, &jobs, &params, 10_000).unwrap()
+        });
+    }
+    b.run("plan/SJF-BCO-fixed-kappa", || {
+        sched::sjf_bco(
+            &cluster,
+            &jobs,
+            &params,
+            10_000,
+            SjfBcoConfig { kappa: Some(8), lambda: 1.0 },
+        )
+        .unwrap()
+    });
+
+    // Theorem 6 scaling: double J, expect ~linear growth in plan time
+    let jobs_2x = {
+        let mut g = TraceGenerator::paper_scaled(2.0);
+        g.iters_min = 1000;
+        g.iters_max = 6000;
+        g.generate(setup.seed)
+    };
+    let big_cluster = Cluster::random(40, setup.seed);
+    let r1 = b
+        .run("scaling/J=160", || {
+            sched::sjf_bco(
+                &big_cluster,
+                &jobs,
+                &params,
+                10_000,
+                SjfBcoConfig::default(),
+            )
+            .unwrap()
+        })
+        .mean;
+    let r2 = b
+        .run("scaling/J=320", || {
+            sched::sjf_bco(
+                &big_cluster,
+                &jobs_2x,
+                &params,
+                10_000,
+                SjfBcoConfig::default(),
+            )
+            .unwrap()
+        })
+        .mean;
+    let ratio = r2.as_secs_f64() / r1.as_secs_f64();
+    println!("scaling ratio J x2 -> time x{ratio:.2} (Thm. 6 predicts ~2)");
+    assert!(ratio < 8.0, "super-polynomial blowup suspected: {ratio:.2}x");
+    b.report();
+}

@@ -1,0 +1,127 @@
+//! Minimal CLI argument parsing (offline build — no clap).
+//!
+//! Supports `--key value`, `--key=value`, bare flags and positional
+//! arguments, with typed accessors that report unknown keys.
+
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional, consumed: Default::default() })
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on any flag that no accessor consumed (typo protection).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for key in self.flags.keys() {
+            if !consumed.iter().any(|c| c == key) {
+                bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        // NOTE: bare boolean flags must come last or use --flag=true —
+        // `--verbose file.json` would swallow the positional as a value.
+        let a = Args::parse(&argv("run --seed 7 --scale=0.5 file.json --verbose")).unwrap();
+        assert_eq!(a.positional(), &["run", "file.json"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_or("policy", "sjf-bco"), "sjf-bco");
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = Args::parse(&argv("--oops 3")).unwrap();
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("oops");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(&argv("--seed abc")).unwrap();
+        assert!(a.get_u64("seed", 0).is_err());
+    }
+}

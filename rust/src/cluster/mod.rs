@@ -1,0 +1,184 @@
+//! Cluster substrate: servers, GPUs, link bandwidths, placements.
+//!
+//! This models the multi-tenant GPU cluster of the paper's §4.1: a set of
+//! servers `S`, each equipped with `O_s` homogeneous synchronized GPUs,
+//! connected by a network with fast intra-server links (bandwidth `b^i`,
+//! e.g. NVLink) and slower inter-server links (bandwidth `b^e`, e.g.
+//! 10 Gbps Ethernet), with `b^i >> b^e`.
+
+mod placement;
+mod server;
+mod state;
+
+pub use placement::{JobPlacement, PlacementBuilder};
+pub use server::{GpuId, Server, ServerId};
+pub use state::ClusterState;
+
+
+/// The whole multi-tenant GPU cluster.
+///
+/// Bandwidths are expressed in *model units per time-slot* — the same unit
+/// as job gradient sizes `m_j`, so `m_j / bandwidth` is a number of slots.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    servers: Vec<Server>,
+    /// Inter-server link bandwidth `b^e`.
+    pub inter_bw: f64,
+    /// Intra-server link bandwidth `b^i` (`b^i >> b^e` in practice).
+    pub intra_bw: f64,
+    /// Prefix sums of GPU counts for global-id mapping (`gpu_base[s]` is the
+    /// global id of server `s`'s first GPU).
+    gpu_base: Vec<usize>,
+}
+
+impl Cluster {
+    /// Build a cluster from per-server GPU capacities `O_s`.
+    pub fn new(capacities: &[usize], inter_bw: f64, intra_bw: f64) -> Self {
+        assert!(!capacities.is_empty(), "cluster needs at least one server");
+        assert!(inter_bw > 0.0 && intra_bw > 0.0, "bandwidths must be positive");
+        let servers: Vec<Server> = capacities
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Server::new(ServerId(i), c))
+            .collect();
+        let mut gpu_base = Vec::with_capacity(servers.len());
+        let mut acc = 0usize;
+        for s in &servers {
+            gpu_base.push(acc);
+            acc += s.capacity();
+        }
+        Cluster { servers, inter_bw, intra_bw, gpu_base }
+    }
+
+    /// A homogeneous cluster: `n_servers` servers with `gpus_per_server` each.
+    pub fn uniform(n_servers: usize, gpus_per_server: usize, inter_bw: f64, intra_bw: f64) -> Self {
+        Self::new(&vec![gpus_per_server; n_servers], inter_bw, intra_bw)
+    }
+
+    /// The paper's §7 cluster: 20 servers, `O_s` drawn u.a.r. from
+    /// {4, 8, 16, 32}, seeded for reproducibility.
+    pub fn paper(seed: u64) -> Self {
+        Self::random(20, seed)
+    }
+
+    /// A random cluster with `n_servers` servers and capacities drawn
+    /// u.a.r. from {4, 8, 16, 32} (paper §7), b^e = 1.0, b^i = 25.0.
+    ///
+    /// The bandwidth ratio 25:1 approximates NVLink (~300 GB/s effective)
+    /// vs 10 Gbps Ethernet used by [19], clipped to keep slot counts sane.
+    pub fn random(n_servers: usize, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let choices = [4usize, 8, 16, 32];
+        let caps: Vec<usize> = (0..n_servers).map(|_| *rng.choose(&choices)).collect();
+        Self::new(&caps, 1.0, 25.0)
+    }
+
+    /// Number of servers `|S|`.
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Total number of GPUs `N` in the cluster.
+    pub fn num_gpus(&self) -> usize {
+        self.gpu_base.last().map(|b| b + self.servers.last().unwrap().capacity()).unwrap_or(0)
+    }
+
+    /// GPU capacity `O_s` of server `s`.
+    pub fn capacity(&self, s: ServerId) -> usize {
+        self.servers[s.0].capacity()
+    }
+
+    /// Largest per-server GPU capacity `max_s O_s` — the worst-case
+    /// contention degree used in the paper's τ bounds (§5.1).
+    pub fn max_capacity(&self) -> usize {
+        self.servers.iter().map(|s| s.capacity()).max().unwrap_or(0)
+    }
+
+    /// Iterate over servers.
+    pub fn servers(&self) -> impl Iterator<Item = &Server> {
+        self.servers.iter()
+    }
+
+    /// All server ids.
+    pub fn server_ids(&self) -> impl Iterator<Item = ServerId> + '_ {
+        (0..self.servers.len()).map(ServerId)
+    }
+
+    /// Map a (server, local index) pair to a cluster-global GPU id.
+    pub fn global_gpu(&self, s: ServerId, local: usize) -> GpuId {
+        debug_assert!(local < self.capacity(s));
+        GpuId { server: s, index: local, global: self.gpu_base[s.0] + local }
+    }
+
+    /// Map a global GPU index back to its (server, local) identity.
+    pub fn gpu_from_global(&self, global: usize) -> GpuId {
+        debug_assert!(global < self.num_gpus());
+        // binary search over prefix sums
+        let s = match self.gpu_base.binary_search(&global) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        GpuId { server: ServerId(s), index: global - self.gpu_base[s], global }
+    }
+
+    /// All GPUs of a server.
+    pub fn gpus_of(&self, s: ServerId) -> impl Iterator<Item = GpuId> + '_ {
+        (0..self.capacity(s)).map(move |i| self.global_gpu(s, i))
+    }
+
+    /// All GPUs in the cluster in global-id order.
+    pub fn all_gpus(&self) -> impl Iterator<Item = GpuId> + '_ {
+        self.server_ids().flat_map(move |s| self.gpus_of(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cluster_counts() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0);
+        assert_eq!(c.num_servers(), 4);
+        assert_eq!(c.num_gpus(), 32);
+        assert_eq!(c.max_capacity(), 8);
+        for s in c.server_ids() {
+            assert_eq!(c.capacity(s), 8);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_global_ids_roundtrip() {
+        let c = Cluster::new(&[4, 16, 8, 32], 1.0, 25.0);
+        assert_eq!(c.num_gpus(), 60);
+        for g in 0..c.num_gpus() {
+            let gpu = c.gpu_from_global(g);
+            assert_eq!(gpu.global, g);
+            let back = c.global_gpu(gpu.server, gpu.index);
+            assert_eq!(back, gpu);
+        }
+    }
+
+    #[test]
+    fn paper_cluster_is_seeded() {
+        let a = Cluster::paper(7);
+        let b = Cluster::paper(7);
+        let caps_a: Vec<_> = a.servers().map(|s| s.capacity()).collect();
+        let caps_b: Vec<_> = b.servers().map(|s| s.capacity()).collect();
+        assert_eq!(caps_a, caps_b);
+        assert_eq!(a.num_servers(), 20);
+        assert!(caps_a.iter().all(|c| [4, 8, 16, 32].contains(c)));
+    }
+
+    #[test]
+    fn bandwidth_ordering() {
+        let c = Cluster::paper(0);
+        assert!(c.intra_bw > c.inter_bw, "paper assumes b^i >> b^e");
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_cluster_rejected() {
+        Cluster::new(&[], 1.0, 2.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Job placements: the per-job slice of a scheduling decision `y[t]`.
+//!
+//! Under gang scheduling (paper Eq. 3) a job's placement is fixed from its
+//! start slot `a_j` to its completion `T_j`, so a placement is a *static*
+//! assignment of GPUs rather than a per-slot function.
+
+use super::{Cluster, GpuId, ServerId};
+use std::collections::BTreeMap;
+
+/// The set of GPUs allocated to one job — `y_j = [y_js, ∀s]` plus the
+/// concrete GPU identities (needed for per-GPU execution-time accounting and
+/// for driving the live RAR engine).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobPlacement {
+    /// GPUs in ring order. The RAR ring visits GPUs in this order; workers
+    /// on the same server are contiguous so the ring crosses each server
+    /// boundary the minimum number of times.
+    gpus: Vec<GpuId>,
+    /// `y_js`: number of GPUs on each used server (no zero entries).
+    per_server: BTreeMap<ServerId, usize>,
+}
+
+impl JobPlacement {
+    /// Build a placement from a GPU list. GPUs are re-ordered so that
+    /// same-server workers are contiguous in the ring (the natural placement
+    /// the paper's Fig. 2 depicts, minimising inter-server hops).
+    pub fn new(mut gpus: Vec<GpuId>) -> Self {
+        assert!(!gpus.is_empty(), "placement must contain at least one GPU");
+        gpus.sort_by_key(|g| (g.server, g.index));
+        // Reject duplicate GPUs (each GPU hosts at most one worker, Eq. 2).
+        for w in gpus.windows(2) {
+            assert!(w[0] != w[1], "duplicate GPU in placement: {}", w[0]);
+        }
+        let mut per_server = BTreeMap::new();
+        for g in &gpus {
+            *per_server.entry(g.server).or_insert(0) += 1;
+        }
+        JobPlacement { gpus, per_server }
+    }
+
+    /// Number of workers `w_j` (== requested GPUs `G_j` under gang sched).
+    pub fn num_workers(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// `y_js` for server `s` (0 if unused).
+    pub fn gpus_on(&self, s: ServerId) -> usize {
+        self.per_server.get(&s).copied().unwrap_or(0)
+    }
+
+    /// Servers used by this job, i.e. `{s : y_js > 0}`.
+    pub fn servers(&self) -> impl Iterator<Item = ServerId> + '_ {
+        self.per_server.keys().copied()
+    }
+
+    /// `Σ_s 1{y_js > 0}` — the server span driving the communication
+    /// overhead term γ_j (paper §4.1 2-3).
+    pub fn span(&self) -> usize {
+        self.per_server.len()
+    }
+
+    /// True iff the job uses inter-server communication, i.e. there exists a
+    /// server with `0 < y_js < G_j` (the indicator in Eq. 6).
+    pub fn is_spread(&self) -> bool {
+        self.span() > 1
+    }
+
+    /// True iff this job's ring crosses server `s`'s inter-server link while
+    /// *not* being fully contained in `s`: the Eq. 6 indicator
+    /// `1{0 < y_js < G_j}`.
+    pub fn uses_uplink_of(&self, s: ServerId) -> bool {
+        let y = self.gpus_on(s);
+        y > 0 && y < self.num_workers()
+    }
+
+    /// GPUs in ring order.
+    pub fn gpus(&self) -> &[GpuId] {
+        &self.gpus
+    }
+
+    /// Ring links as (upstream, downstream) pairs — `L_j` in the paper.
+    /// A single-worker "ring" has no links.
+    pub fn ring_links(&self) -> Vec<(GpuId, GpuId)> {
+        if self.gpus.len() < 2 {
+            return Vec::new();
+        }
+        let mut links = Vec::with_capacity(self.gpus.len());
+        for i in 0..self.gpus.len() {
+            links.push((self.gpus[i], self.gpus[(i + 1) % self.gpus.len()]));
+        }
+        links
+    }
+
+    /// Number of ring links that cross servers (inter-server hops).
+    pub fn inter_server_hops(&self) -> usize {
+        self.ring_links().iter().filter(|(a, b)| a.server != b.server).count()
+    }
+}
+
+/// Incrementally builds a placement while checking capacity constraints
+/// against a cluster — used by the placement subroutines (Alg. 2/3).
+#[derive(Debug)]
+pub struct PlacementBuilder<'c> {
+    cluster: &'c Cluster,
+    gpus: Vec<GpuId>,
+}
+
+impl<'c> PlacementBuilder<'c> {
+    pub fn new(cluster: &'c Cluster) -> Self {
+        PlacementBuilder { cluster, gpus: Vec::new() }
+    }
+
+    /// Add one GPU; panics if it does not belong to the cluster.
+    pub fn push(&mut self, gpu: GpuId) -> &mut Self {
+        debug_assert!(gpu.global < self.cluster.num_gpus());
+        debug_assert_eq!(self.cluster.global_gpu(gpu.server, gpu.index), gpu);
+        self.gpus.push(gpu);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gpus.is_empty()
+    }
+
+    pub fn build(self) -> JobPlacement {
+        JobPlacement::new(self.gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::uniform(3, 4, 1.0, 25.0)
+    }
+
+    fn gpu(c: &Cluster, s: usize, i: usize) -> GpuId {
+        c.global_gpu(ServerId(s), i)
+    }
+
+    #[test]
+    fn colocated_placement() {
+        let c = cluster();
+        let p = JobPlacement::new(vec![gpu(&c, 1, 0), gpu(&c, 1, 1), gpu(&c, 1, 2)]);
+        assert_eq!(p.num_workers(), 3);
+        assert_eq!(p.span(), 1);
+        assert!(!p.is_spread());
+        assert!(!p.uses_uplink_of(ServerId(1)));
+        assert_eq!(p.inter_server_hops(), 0);
+    }
+
+    #[test]
+    fn spread_placement() {
+        let c = cluster();
+        let p = JobPlacement::new(vec![gpu(&c, 0, 0), gpu(&c, 0, 1), gpu(&c, 2, 0)]);
+        assert_eq!(p.span(), 2);
+        assert!(p.is_spread());
+        assert!(p.uses_uplink_of(ServerId(0)));
+        assert!(p.uses_uplink_of(ServerId(2)));
+        assert!(!p.uses_uplink_of(ServerId(1)));
+        // ring: s0g0 -> s0g1 -> s2g0 -> s0g0: two inter-server hops
+        assert_eq!(p.inter_server_hops(), 2);
+    }
+
+    #[test]
+    fn ring_links_wrap_around() {
+        let c = cluster();
+        let p = JobPlacement::new(vec![gpu(&c, 0, 0), gpu(&c, 1, 0), gpu(&c, 2, 0)]);
+        let links = p.ring_links();
+        assert_eq!(links.len(), 3);
+        assert_eq!(links[2].1, links[0].0, "ring closes");
+        assert_eq!(p.inter_server_hops(), 3);
+    }
+
+    #[test]
+    fn single_worker_has_no_links() {
+        let c = cluster();
+        let p = JobPlacement::new(vec![gpu(&c, 0, 0)]);
+        assert!(p.ring_links().is_empty());
+        assert!(!p.is_spread());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_gpu_rejected() {
+        let c = cluster();
+        JobPlacement::new(vec![gpu(&c, 0, 0), gpu(&c, 0, 0)]);
+    }
+
+    #[test]
+    fn builder_checks_membership() {
+        let c = cluster();
+        let mut b = PlacementBuilder::new(&c);
+        b.push(gpu(&c, 0, 0)).push(gpu(&c, 0, 1));
+        assert_eq!(b.len(), 2);
+        let p = b.build();
+        assert_eq!(p.num_workers(), 2);
+    }
+}

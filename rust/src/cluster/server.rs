@@ -1,0 +1,71 @@
+//! Server and GPU identities.
+
+
+/// Index of a server in the cluster (dense, 0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServerId(pub usize);
+
+impl std::fmt::Display for ServerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// A GPU identity: its server, its slot on that server, and its
+/// cluster-global index (used for the per-GPU execution-time accounting
+/// `U_s^g` in Algorithms 1–3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GpuId {
+    pub server: ServerId,
+    pub index: usize,
+    pub global: usize,
+}
+
+impl std::fmt::Display for GpuId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:g{}", self.server, self.index)
+    }
+}
+
+/// A server with `O_s` homogeneous GPUs (paper §4.1: equal computation
+/// speed, synchronized).
+#[derive(Debug, Clone)]
+pub struct Server {
+    id: ServerId,
+    capacity: usize,
+}
+
+impl Server {
+    pub fn new(id: ServerId, capacity: usize) -> Self {
+        assert!(capacity > 0, "server must host at least one GPU");
+        Server { id, capacity }
+    }
+
+    pub fn id(&self) -> ServerId {
+        self.id
+    }
+
+    /// GPU capacity `O_s`.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        let s = ServerId(3);
+        assert_eq!(s.to_string(), "s3");
+        let g = GpuId { server: s, index: 2, global: 14 };
+        assert_eq!(g.to_string(), "s3:g2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_server_rejected() {
+        Server::new(ServerId(0), 0);
+    }
+}

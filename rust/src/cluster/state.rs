@@ -1,0 +1,143 @@
+//! Live occupancy state of the cluster during simulation / coordination.
+
+use super::{Cluster, GpuId, JobPlacement, ServerId};
+use crate::jobs::JobId;
+
+/// Tracks which job (if any) occupies each GPU — enforcing the packing
+/// constraint Eq. 2 ("each GPU can only be occupied by one worker of some
+/// job at any given time").
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    /// `owner[global_gpu_id] = Some(job)` while occupied.
+    owner: Vec<Option<JobId>>,
+    /// Free-GPU count per server (derived, kept in sync for O(1) queries).
+    free_per_server: Vec<usize>,
+}
+
+impl ClusterState {
+    pub fn new(cluster: &Cluster) -> Self {
+        ClusterState {
+            owner: vec![None; cluster.num_gpus()],
+            free_per_server: cluster.servers().map(|s| s.capacity()).collect(),
+        }
+    }
+
+    /// Number of free GPUs on server `s`.
+    pub fn free_on(&self, s: ServerId) -> usize {
+        self.free_per_server[s.0]
+    }
+
+    /// Total free GPUs in the cluster.
+    pub fn total_free(&self) -> usize {
+        self.free_per_server.iter().sum()
+    }
+
+    /// Is this specific GPU free?
+    pub fn is_free(&self, gpu: GpuId) -> bool {
+        self.owner[gpu.global].is_none()
+    }
+
+    /// Owner of a GPU, if any.
+    pub fn owner_of(&self, gpu: GpuId) -> Option<JobId> {
+        self.owner[gpu.global]
+    }
+
+    /// Free GPUs of server `s` in local-index order.
+    pub fn free_gpus_of<'a>(
+        &'a self,
+        cluster: &'a Cluster,
+        s: ServerId,
+    ) -> impl Iterator<Item = GpuId> + 'a {
+        cluster.gpus_of(s).filter(move |g| self.is_free(*g))
+    }
+
+    /// Allocate all GPUs of `placement` to `job` (gang allocation, Eq. 1).
+    ///
+    /// Panics if any GPU is already occupied — schedulers must only emit
+    /// feasible placements.
+    pub fn allocate(&mut self, job: JobId, placement: &JobPlacement) {
+        for g in placement.gpus() {
+            assert!(
+                self.owner[g.global].is_none(),
+                "GPU {} already owned by {:?} while allocating {:?}",
+                g,
+                self.owner[g.global],
+                job
+            );
+            self.owner[g.global] = Some(job);
+            self.free_per_server[g.server.0] -= 1;
+        }
+    }
+
+    /// Release all GPUs of `placement` from `job` (simultaneous release on
+    /// completion, paper §4.1).
+    pub fn release(&mut self, job: JobId, placement: &JobPlacement) {
+        for g in placement.gpus() {
+            assert_eq!(
+                self.owner[g.global],
+                Some(job),
+                "GPU {} not owned by {:?} on release",
+                g,
+                job
+            );
+            self.owner[g.global] = None;
+            self.free_per_server[g.server.0] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Cluster, ClusterState) {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let st = ClusterState::new(&c);
+        (c, st)
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let (c, mut st) = setup();
+        assert_eq!(st.total_free(), 8);
+        let p = JobPlacement::new(vec![
+            c.global_gpu(ServerId(0), 0),
+            c.global_gpu(ServerId(0), 1),
+            c.global_gpu(ServerId(1), 0),
+        ]);
+        st.allocate(JobId(0), &p);
+        assert_eq!(st.total_free(), 5);
+        assert_eq!(st.free_on(ServerId(0)), 2);
+        assert_eq!(st.free_on(ServerId(1)), 3);
+        assert_eq!(st.owner_of(c.global_gpu(ServerId(0), 0)), Some(JobId(0)));
+        st.release(JobId(0), &p);
+        assert_eq!(st.total_free(), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_allocation_panics() {
+        let (c, mut st) = setup();
+        let p = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0)]);
+        st.allocate(JobId(0), &p);
+        st.allocate(JobId(1), &p);
+    }
+
+    #[test]
+    #[should_panic]
+    fn release_by_non_owner_panics() {
+        let (c, mut st) = setup();
+        let p = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0)]);
+        st.allocate(JobId(0), &p);
+        st.release(JobId(1), &p);
+    }
+
+    #[test]
+    fn free_gpu_iteration_skips_busy() {
+        let (c, mut st) = setup();
+        let p = JobPlacement::new(vec![c.global_gpu(ServerId(0), 1)]);
+        st.allocate(JobId(3), &p);
+        let free: Vec<_> = st.free_gpus_of(&c, ServerId(0)).map(|g| g.index).collect();
+        assert_eq!(free, vec![0, 2, 3]);
+    }
+}

@@ -1,0 +1,317 @@
+//! TOML configuration for experiments and the live coordinator.
+//!
+//! Everything a run needs is captured in one [`ExperimentConfig`] so runs
+//! are fully reproducible from a config file + seed. Parsing uses the
+//! in-tree TOML subset ([`crate::util::toml_lite`]); unknown keys are
+//! rejected to catch typos early.
+
+use crate::cluster::Cluster;
+use crate::contention::ContentionParams;
+use crate::sched::Policy;
+use crate::trace::TraceGenerator;
+use crate::util::{TomlDoc, TomlValue};
+use crate::Result;
+use std::path::Path;
+
+/// Cluster shape section.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of servers.
+    pub servers: usize,
+    /// Explicit per-server capacities; when empty, capacities are drawn
+    /// u.a.r. from {4, 8, 16, 32} (paper §7) with `seed`.
+    pub capacities: Vec<usize>,
+    /// Inter-server bandwidth `b^e`.
+    pub inter_bw: f64,
+    /// Intra-server bandwidth `b^i`.
+    pub intra_bw: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { servers: 20, capacities: Vec::new(), inter_bw: 1.0, intra_bw: 25.0 }
+    }
+}
+
+/// Workload section.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Scale factor on the paper's 160-job mix (1.0 = paper).
+    pub scale: f64,
+    pub iters_min: u64,
+    pub iters_max: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { scale: 1.0, iters_min: 1000, iters_max: 6000 }
+    }
+}
+
+/// Scheduler section.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    /// Fixed κ for SJF-BCO (None = sweep, Alg. 1).
+    pub kappa: Option<usize>,
+    /// λ for LBSGF.
+    pub lambda: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { policy: Policy::SjfBco, kappa: None, lambda: 1.0 }
+    }
+}
+
+/// Contention-model constants section (§4.1 / §7).
+#[derive(Debug, Clone)]
+pub struct ModelParamsConfig {
+    pub xi1: f64,
+    pub xi2: f64,
+    pub alpha: f64,
+    pub compute_speed: f64,
+}
+
+impl Default for ModelParamsConfig {
+    fn default() -> Self {
+        let p = ContentionParams::paper();
+        ModelParamsConfig {
+            xi1: p.xi1,
+            xi2: p.xi2,
+            alpha: p.alpha,
+            compute_speed: p.compute_speed,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Scheduling horizon `T` in slots (paper: 1200 / 1500).
+    pub horizon: Option<u64>,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub scheduler: SchedulerConfig,
+    pub model: ModelParamsConfig,
+}
+
+impl ExperimentConfig {
+    /// Paper §7 defaults (T = 1200).
+    pub fn paper() -> Self {
+        ExperimentConfig { horizon: Some(1200), ..Default::default() }
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = doc.get("", "seed") {
+            cfg.seed = v.as_u64()?;
+        }
+        if let Some(v) = doc.get("", "horizon") {
+            cfg.horizon = Some(v.as_u64()?);
+        }
+        if let Some(v) = doc.get("cluster", "servers") {
+            cfg.cluster.servers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("cluster", "capacities") {
+            cfg.cluster.capacities = v.as_int_array()?.iter().map(|&i| i as usize).collect();
+        }
+        if let Some(v) = doc.get("cluster", "inter_bw") {
+            cfg.cluster.inter_bw = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("cluster", "intra_bw") {
+            cfg.cluster.intra_bw = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("workload", "scale") {
+            cfg.workload.scale = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("workload", "iters_min") {
+            cfg.workload.iters_min = v.as_u64()?;
+        }
+        if let Some(v) = doc.get("workload", "iters_max") {
+            cfg.workload.iters_max = v.as_u64()?;
+        }
+        if let Some(v) = doc.get("scheduler", "policy") {
+            cfg.scheduler.policy = v.as_str()?.parse()?;
+        }
+        if let Some(v) = doc.get("scheduler", "kappa") {
+            let k = v.as_i64()?;
+            cfg.scheduler.kappa = if k < 0 { None } else { Some(k as usize) };
+        }
+        if let Some(v) = doc.get("scheduler", "lambda") {
+            cfg.scheduler.lambda = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("model", "xi1") {
+            cfg.model.xi1 = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("model", "xi2") {
+            cfg.model.xi2 = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("model", "alpha") {
+            cfg.model.alpha = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("model", "compute_speed") {
+            cfg.model.compute_speed = v.as_f64()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_toml_string(&self) -> String {
+        let mut doc = TomlDoc::default();
+        doc.set("", "seed", TomlValue::Int(self.seed as i64));
+        if let Some(h) = self.horizon {
+            doc.set("", "horizon", TomlValue::Int(h as i64));
+        }
+        doc.set("cluster", "servers", TomlValue::Int(self.cluster.servers as i64));
+        if !self.cluster.capacities.is_empty() {
+            doc.set(
+                "cluster",
+                "capacities",
+                TomlValue::IntArray(self.cluster.capacities.iter().map(|&c| c as i64).collect()),
+            );
+        }
+        doc.set("cluster", "inter_bw", TomlValue::Float(self.cluster.inter_bw));
+        doc.set("cluster", "intra_bw", TomlValue::Float(self.cluster.intra_bw));
+        doc.set("workload", "scale", TomlValue::Float(self.workload.scale));
+        doc.set("workload", "iters_min", TomlValue::Int(self.workload.iters_min as i64));
+        doc.set("workload", "iters_max", TomlValue::Int(self.workload.iters_max as i64));
+        doc.set(
+            "scheduler",
+            "policy",
+            TomlValue::Str(
+                match self.scheduler.policy {
+                    Policy::SjfBco => "sjf-bco",
+                    Policy::FirstFit => "ff",
+                    Policy::ListScheduling => "ls",
+                    Policy::Random => "rand",
+                    Policy::Gadget => "gadget",
+                }
+                .into(),
+            ),
+        );
+        if let Some(k) = self.scheduler.kappa {
+            doc.set("scheduler", "kappa", TomlValue::Int(k as i64));
+        }
+        doc.set("scheduler", "lambda", TomlValue::Float(self.scheduler.lambda));
+        doc.set("model", "xi1", TomlValue::Float(self.model.xi1));
+        doc.set("model", "xi2", TomlValue::Float(self.model.xi2));
+        doc.set("model", "alpha", TomlValue::Float(self.model.alpha));
+        doc.set("model", "compute_speed", TomlValue::Float(self.model.compute_speed));
+        doc.to_string()
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_toml_str(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_toml_string())?;
+        Ok(())
+    }
+
+    /// Materialise the cluster.
+    pub fn build_cluster(&self) -> Cluster {
+        if !self.cluster.capacities.is_empty() {
+            Cluster::new(&self.cluster.capacities, self.cluster.inter_bw, self.cluster.intra_bw)
+        } else {
+            // random capacities, seeded; then override bandwidths
+            let mut c = Cluster::random(self.cluster.servers, self.seed);
+            c.inter_bw = self.cluster.inter_bw;
+            c.intra_bw = self.cluster.intra_bw;
+            c
+        }
+    }
+
+    /// Materialise the trace generator.
+    pub fn build_generator(&self) -> TraceGenerator {
+        let mut g = if (self.workload.scale - 1.0).abs() < 1e-9 {
+            TraceGenerator::paper()
+        } else {
+            TraceGenerator::paper_scaled(self.workload.scale)
+        };
+        g.iters_min = self.workload.iters_min;
+        g.iters_max = self.workload.iters_max;
+        g
+    }
+
+    /// Materialise the contention parameters.
+    pub fn build_params(&self) -> ContentionParams {
+        ContentionParams {
+            xi1: self.model.xi1,
+            xi2: self.model.xi2,
+            alpha: self.model.alpha,
+            compute_speed: self.model.compute_speed,
+        }
+    }
+
+    /// Horizon with the paper default.
+    pub fn horizon(&self) -> u64 {
+        self.horizon.unwrap_or(1200)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.horizon(), 1200);
+        let c = cfg.build_cluster();
+        assert_eq!(c.num_servers(), 20);
+        assert_eq!(cfg.build_generator().num_jobs(), 160);
+        let p = cfg.build_params();
+        assert_eq!(p, ContentionParams::paper());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.scheduler.kappa = Some(4);
+        cfg.scheduler.policy = Policy::ListScheduling;
+        let dir = crate::util::temp_dir("rarsched-config").unwrap();
+        let path = dir.join("exp.toml");
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(back.horizon(), 1200);
+        assert_eq!(back.cluster.servers, 20);
+        assert_eq!(back.scheduler.kappa, Some(4));
+        assert_eq!(back.scheduler.policy, Policy::ListScheduling);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            seed = 9
+            [cluster]
+            servers = 10
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.cluster.servers, 10);
+        assert_eq!(cfg.cluster.intra_bw, 25.0);
+        assert_eq!(cfg.workload.scale, 1.0);
+        assert_eq!(cfg.scheduler.policy, Policy::SjfBco);
+    }
+
+    #[test]
+    fn explicit_capacities_win() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.capacities = vec![4, 4];
+        let c = cfg.build_cluster();
+        assert_eq!(c.num_servers(), 2);
+        assert_eq!(c.num_gpus(), 8);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let r = ExperimentConfig::from_toml_str("[scheduler]\npolicy = \"bogus\"\n");
+        assert!(r.is_err());
+    }
+}

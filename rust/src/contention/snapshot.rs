@@ -1,0 +1,114 @@
+//! Per-slot contention snapshot: evaluates Eq. 6 for all active jobs at once.
+
+use crate::cluster::{Cluster, JobPlacement};
+use crate::jobs::JobId;
+
+/// Evaluation of the contention degree `p_j[t]` (Eq. 6) for every active
+/// job in one time slot, in `O(Σ_j span_j)` total.
+///
+/// For each server `s`, we count the active jobs whose ring crosses `s`'s
+/// uplink (`1{0 < y_js < G_j}`); then `p_j` is the max of those counts over
+/// the servers job `j` itself crosses.
+///
+/// §Perf: job ids are dense, and this structure is rebuilt on every
+/// simulator event — storage is a flat `Vec` indexed by `JobId` rather
+/// than a hash map (the map dominated the simulator profile).
+#[derive(Debug, Clone)]
+pub struct ContentionSnapshot {
+    /// `p[job.0]`: `Some(p_j)` for active jobs, `None` otherwise.
+    p: Vec<Option<usize>>,
+    max_p: usize,
+}
+
+impl ContentionSnapshot {
+    /// Build the snapshot from all active placements in this slot.
+    pub fn build(cluster: &Cluster, active: &[(JobId, JobPlacement)]) -> Self {
+        Self::build_ref(cluster, &active.iter().map(|(j, p)| (*j, p)).collect::<Vec<_>>())
+    }
+
+    /// Same as [`build`](Self::build) but borrowing placements — the form
+    /// the simulator hot loop uses to avoid cloning placements every slot.
+    pub fn build_ref(cluster: &Cluster, active: &[(JobId, &JobPlacement)]) -> Self {
+        // spread_count[s] = Σ_{j'} 1{0 < y_j's < G_j'}
+        let mut spread_count = vec![0usize; cluster.num_servers()];
+        for (_, pl) in active {
+            if pl.is_spread() {
+                for s in pl.servers() {
+                    // for a spread job every used server satisfies
+                    // 0 < y_js < G_j
+                    spread_count[s.0] += 1;
+                }
+            }
+        }
+        let max_id = active.iter().map(|(j, _)| j.0).max().map_or(0, |m| m + 1);
+        let mut p = vec![None; max_id];
+        let mut max_p = 0;
+        for (j, pl) in active {
+            let pj = if pl.is_spread() {
+                pl.servers().map(|s| spread_count[s.0]).max().unwrap_or(0)
+            } else {
+                0
+            };
+            max_p = max_p.max(pj);
+            p[j.0] = Some(pj);
+        }
+        ContentionSnapshot { p, max_p }
+    }
+
+    /// `p_j[t]` for job `j`; 0 for co-located jobs, ≥ 1 for spread jobs
+    /// (which count themselves per Eq. 6).
+    pub fn p_j(&self, j: JobId) -> usize {
+        self.p.get(j.0).copied().flatten().expect("job not active in this snapshot")
+    }
+
+    /// Largest contention degree across all active jobs — a cluster-level
+    /// congestion indicator used by metrics.
+    pub fn max_contention(&self) -> usize {
+        self.max_p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerId;
+
+    #[test]
+    fn empty_snapshot() {
+        let c = Cluster::uniform(2, 2, 1.0, 25.0);
+        let snap = ContentionSnapshot::build(&c, &[]);
+        assert_eq!(snap.max_contention(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn querying_inactive_job_panics() {
+        let c = Cluster::uniform(2, 2, 1.0, 25.0);
+        let snap = ContentionSnapshot::build(&c, &[]);
+        snap.p_j(JobId(0));
+    }
+
+    #[test]
+    fn three_way_contention_on_one_server() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0);
+        // three spread jobs all touching server 0, one spread pair elsewhere
+        let mk = |pairs: &[(usize, usize)]| {
+            JobPlacement::new(
+                pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect(),
+            )
+        };
+        let active = vec![
+            (JobId(0), mk(&[(0, 0), (1, 0)])),
+            (JobId(1), mk(&[(0, 1), (2, 0)])),
+            (JobId(2), mk(&[(0, 2), (3, 0)])),
+            (JobId(3), mk(&[(2, 1), (3, 1)])),
+        ];
+        let snap = ContentionSnapshot::build(&c, &active);
+        assert_eq!(snap.p_j(JobId(0)), 3);
+        assert_eq!(snap.p_j(JobId(1)), 3);
+        assert_eq!(snap.p_j(JobId(2)), 3);
+        // job 3 shares server 2 with job 1 and server 3 with job 2: max = 2
+        assert_eq!(snap.p_j(JobId(3)), 2);
+        assert_eq!(snap.max_contention(), 3);
+    }
+}

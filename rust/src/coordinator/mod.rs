@@ -1,0 +1,14 @@
+//! The live coordinator: takes a schedule from the planner and *actually
+//! trains* the jobs — one worker thread per scheduled GPU, each running
+//! the AOT-compiled grad step via PJRT, exchanging gradients with its
+//! ring neighbours through the RAR engine under the bandwidth regulator.
+//!
+//! This is the layer that closes the loop of the paper: the scheduler's
+//! placement decisions (co-located vs spread, contended vs not) become
+//! measurable wall-clock differences on a real training workload.
+
+mod data;
+mod train;
+
+pub use data::Corpus;
+pub use train::{train_job, train_jobs_concurrently, TrainJobSpec, TrainReport};

@@ -1,0 +1,165 @@
+//! Live data-parallel training of one or more RAR jobs.
+//!
+//! Each scheduled worker is a thread that owns its own PJRT client and
+//! compiled executables (PJRT handles are not `Send`), computes gradients
+//! on its corpus shard, all-reduces them with its ring neighbours through
+//! the bandwidth-regulated RAR engine, and applies the averaged update —
+//! exactly the synchronous SGD loop of the paper's §3.
+
+use super::Corpus;
+use crate::cluster::JobPlacement;
+use crate::rar::{LinkBank, RingSpec, RingWorker};
+use crate::runtime::PjRt;
+use crate::Result;
+use anyhow::Context;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What to train and how.
+#[derive(Debug, Clone)]
+pub struct TrainJobSpec {
+    /// Model preset name from the artifact manifest ("tiny", "small"...).
+    pub model: String,
+    /// Training steps (a "few hundred" for the e2e demo).
+    pub steps: u64,
+    /// Corpus seed (per job, so concurrent jobs train on different text).
+    pub corpus_seed: u64,
+    /// Artifacts root.
+    pub artifacts: PathBuf,
+}
+
+/// Per-job training outcome.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Mean cross-worker loss per step.
+    pub losses: Vec<f32>,
+    /// Wall time per step (max over workers).
+    pub step_times: Vec<Duration>,
+    pub total: Duration,
+    pub workers: usize,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn initial_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    pub fn mean_step_time(&self) -> Duration {
+        if self.step_times.is_empty() {
+            return Duration::ZERO;
+        }
+        self.step_times.iter().sum::<Duration>() / self.step_times.len() as u32
+    }
+}
+
+/// Train one job on `placement` (one worker thread per scheduled GPU).
+///
+/// `links` regulates inter-server hops; pass the same bank to concurrent
+/// jobs to make them contend (Eq. 6 live).
+pub fn train_job(
+    spec: &TrainJobSpec,
+    placement: &JobPlacement,
+    links: Option<Arc<LinkBank>>,
+) -> Result<TrainReport> {
+    let w = placement.num_workers();
+    let ring_spec = RingSpec::from_placement(placement);
+    let endpoints = RingWorker::ring(&ring_spec);
+    let t0 = Instant::now();
+
+    let mut per_worker: Vec<Option<(Vec<f32>, Vec<Duration>)>> =
+        (0..w).map(|_| None).collect();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(w);
+        for endpoint in endpoints {
+            let spec = spec.clone();
+            let links = links.clone();
+            handles.push(scope.spawn(move || worker_loop(&spec, endpoint, w, links)));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let (losses, times) = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("worker {i} panicked"))?
+                .with_context(|| format!("worker {i}"))?;
+            per_worker[i] = Some((losses, times));
+        }
+        Ok(())
+    })?;
+
+    let per_worker: Vec<(Vec<f32>, Vec<Duration>)> =
+        per_worker.into_iter().map(|o| o.unwrap()).collect();
+    let steps = spec.steps as usize;
+    let mut losses = Vec::with_capacity(steps);
+    let mut step_times = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let mean =
+            per_worker.iter().map(|(l, _)| l[s]).sum::<f32>() / per_worker.len() as f32;
+        losses.push(mean);
+        step_times.push(per_worker.iter().map(|(_, t)| t[s]).max().unwrap());
+    }
+    Ok(TrainReport { losses, step_times, total: t0.elapsed(), workers: w })
+}
+
+/// One worker's synchronous-SGD loop.
+fn worker_loop(
+    spec: &TrainJobSpec,
+    ring: RingWorker,
+    world: usize,
+    links: Option<Arc<LinkBank>>,
+) -> Result<(Vec<f32>, Vec<Duration>)> {
+    // Each worker owns a PJRT client (handles are not Send) — this mirrors
+    // one process per GPU in a real deployment.
+    let pjrt = PjRt::cpu(&spec.artifacts)?;
+    let model = pjrt.model(&spec.model)?;
+    let cfg = model.entry().config.clone();
+    let mut params = model.init_params(&pjrt)?;
+    let mut corpus = Corpus::synthetic(spec.corpus_seed, 200_000).shard(ring.index, world);
+
+    let mut losses = Vec::with_capacity(spec.steps as usize);
+    let mut times = Vec::with_capacity(spec.steps as usize);
+    let inv_world = 1.0 / world as f32;
+    for _ in 0..spec.steps {
+        let t0 = Instant::now();
+        let (x, y) = corpus.next_batch(cfg.batch, cfg.seq_len);
+        let (out, grads) = model.grad_step(&params, &x, &y)?;
+        // all-reduce the flat gradient with ring neighbours, then average
+        let mut flat = model.flatten_grads(&grads)?;
+        ring.all_reduce(&mut flat, links.as_deref())?;
+        if world > 1 {
+            for v in flat.iter_mut() {
+                *v *= inv_world;
+            }
+        }
+        let reduced = model.unflatten_grads(&flat)?;
+        params = model.apply_grads(&params, &reduced)?;
+        losses.push(out.loss);
+        times.push(t0.elapsed());
+    }
+    Ok((losses, times))
+}
+
+/// Run several jobs concurrently over one shared link bank (the
+/// multi-tenant setting): returns one report per job, in input order.
+pub fn train_jobs_concurrently(
+    jobs: &[(TrainJobSpec, JobPlacement)],
+    links: Arc<LinkBank>,
+) -> Result<Vec<TrainReport>> {
+    let mut out: Vec<Option<TrainReport>> = (0..jobs.len()).map(|_| None).collect();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(jobs.len());
+        for (spec, placement) in jobs {
+            let links = links.clone();
+            handles.push(scope.spawn(move || train_job(spec, placement, Some(links))));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            out[i] =
+                Some(h.join().map_err(|_| anyhow::anyhow!("job {i} panicked"))??);
+        }
+        Ok(())
+    })?;
+    Ok(out.into_iter().map(|o| o.unwrap()).collect())
+}

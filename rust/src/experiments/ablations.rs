@@ -1,0 +1,126 @@
+//! Ablations over the model's design choices — the knobs the paper fixes
+//! but whose values drive the contention/overhead trade-off:
+//!
+//! * the bandwidth-degradation slope α of `f(α, k) = k + α (k − 1)`;
+//! * the contention weight ξ1 and the per-server overhead weight ξ2;
+//! * the workload mix (comm-heavy vs compute-heavy jobs).
+//!
+//! Each returns a [`FigureReport`] and is exposed via
+//! `rarsched figures --fig ablations` and `benches/ablations.rs`.
+
+use super::{run_policy, ExperimentSetup};
+use crate::jobs::{JobSpec, ModelKind, WorkloadProfile};
+use crate::metrics::FigureReport;
+use crate::sched::Policy;
+use crate::Result;
+
+/// Makespan sensitivity to the degradation slope α (0 = ideal fair
+/// share; larger = steeper penalty for sharing a link).
+pub fn ablation_alpha(setup: &ExperimentSetup, alphas: &[f64]) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let mut report = FigureReport::new("Ablation — degradation slope alpha", "policy/alpha");
+    for policy in [Policy::SjfBco, Policy::ListScheduling] {
+        for &alpha in alphas {
+            let mut params = setup.params();
+            params.alpha = alpha;
+            let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+            report.push(format!("{}/{alpha}", policy.name()), s.makespan, s.avg_jct);
+        }
+    }
+    Ok(report)
+}
+
+/// Makespan sensitivity to the contention weight ξ1 (Eq. 7). At ξ1 → 0
+/// contention vanishes and spreading becomes free; as ξ1 grows the
+/// locality-aware policies should widen their lead.
+pub fn ablation_xi1(setup: &ExperimentSetup, xi1s: &[f64]) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let mut report = FigureReport::new("Ablation — contention weight xi1", "policy/xi1");
+    for policy in [Policy::SjfBco, Policy::ListScheduling, Policy::Random] {
+        for &xi1 in xi1s {
+            let mut params = setup.params();
+            params.xi1 = xi1;
+            let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+            report.push(format!("{}/{xi1}", policy.name()), s.makespan, s.avg_jct);
+        }
+    }
+    Ok(report)
+}
+
+/// Makespan sensitivity to the per-server overhead ξ2 (§4.1 2-3).
+pub fn ablation_xi2(setup: &ExperimentSetup, xi2s: &[f64]) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let mut report = FigureReport::new("Ablation — overhead weight xi2", "policy/xi2");
+    for policy in [Policy::SjfBco, Policy::ListScheduling] {
+        for &xi2 in xi2s {
+            let mut params = setup.params();
+            params.xi2 = xi2;
+            let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+            report.push(format!("{}/{xi2}", policy.name()), s.makespan, s.avg_jct);
+        }
+    }
+    Ok(report)
+}
+
+/// Workload-mix ablation: all jobs forced to one model family.
+pub fn ablation_mix(setup: &ExperimentSetup) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let params = setup.params();
+    let mut report = FigureReport::new("Ablation — workload mix", "mix/policy");
+    for kind in ModelKind::ALL {
+        let prof = WorkloadProfile::for_kind(kind);
+        let jobs: Vec<JobSpec> = setup
+            .jobs()
+            .into_iter()
+            .map(|mut j| {
+                j.grad_size = prof.grad_size;
+                j.batch_size = prof.batch_size;
+                j.fwd_per_sample = prof.fwd_per_sample;
+                j.bwd = prof.bwd;
+                j
+            })
+            .collect();
+        for policy in [Policy::SjfBco, Policy::FirstFit] {
+            let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+            report.push(format!("{}/{}", kind.name(), policy.name()), s.makespan, s.avg_jct);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke() -> ExperimentSetup {
+        ExperimentSetup::smoke()
+    }
+
+    #[test]
+    fn alpha_rows_complete() {
+        let r = ablation_alpha(&smoke(), &[0.0, 1.0]).unwrap();
+        assert_eq!(r.rows.len(), 4);
+    }
+
+    #[test]
+    fn xi1_zero_softens_contention() {
+        // with xi1 ~ 0 (no effective contenders) RAND's makespan should
+        // not exceed its value under strong contention
+        let setup = smoke();
+        let low = ablation_xi1(&setup, &[0.05]).unwrap();
+        let high = ablation_xi1(&setup, &[1.0]).unwrap();
+        let rand_low = low.rows.iter().find(|r| r.x.starts_with("RAND")).unwrap().makespan;
+        let rand_high = high.rows.iter().find(|r| r.x.starts_with("RAND")).unwrap().makespan;
+        assert!(rand_low <= rand_high + 2, "{rand_low} vs {rand_high}");
+    }
+
+    #[test]
+    fn mix_covers_kinds_and_policies() {
+        let r = ablation_mix(&smoke()).unwrap();
+        assert_eq!(r.rows.len(), 6);
+        assert!(r.rows.iter().any(|row| row.x.contains("comm-heavy")));
+    }
+}

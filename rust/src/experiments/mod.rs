@@ -1,0 +1,254 @@
+//! Paper-evaluation experiments (Figs. 4–7) as reusable functions: the
+//! CLI (`rarsched figures`) and the bench targets both call these, so the
+//! figure regenerators are a single source of truth.
+//!
+//! Every experiment follows the paper's §7 settings by default; a `scale`
+//! knob shrinks the trace for quick runs while preserving the job-type
+//! mix. Acceptance is *shape*, not absolute numbers — see EXPERIMENTS.md.
+
+pub mod ablations;
+pub mod online;
+
+use crate::cluster::Cluster;
+use crate::contention::ContentionParams;
+use crate::jobs::JobSpec;
+use crate::metrics::{FigureReport, PolicySummary};
+use crate::sched::{self, Policy, SjfBcoConfig};
+use crate::sim::Simulator;
+use crate::trace::TraceGenerator;
+use crate::Result;
+
+/// Shared experiment context.
+#[derive(Debug, Clone)]
+pub struct ExperimentSetup {
+    pub seed: u64,
+    /// Trace scale factor (1.0 = the paper's 160 jobs).
+    pub scale: f64,
+    pub horizon: u64,
+    pub servers: usize,
+    /// Inter-server bandwidth `b^e` for the figure experiments.
+    ///
+    /// The paper runs its §7 simulation in a *comm-light* regime — "the
+    /// extra time cost brought by communication contention and overhead
+    /// is within 15% of the total actual execution time" — whereas its §1
+    /// motivation cites the comm-heavy testbed of [19] (295 s → 675 s).
+    /// These are different operating points: figures use `b^e = 10`
+    /// (inter-server comm ≲15–20 % of τ), the motivation experiment keeps
+    /// the heavy `b^e = 1` regime. See EXPERIMENTS.md §Calibration.
+    pub inter_bw: f64,
+}
+
+impl ExperimentSetup {
+    /// Paper §7 defaults for Figs. 4 and 5 (20 servers, full trace).
+    ///
+    /// Horizon note: the paper uses T = 1200 with ρ̂ ∈ [50, 300]; our slot
+    /// normalisation (τ calibrated to [0.01, 0.05] with F ∈ [1000, 6000])
+    /// yields ρ̂ ∈ [11, 190] but RAND realizes makespans up to ~3.2k slots
+    /// under live contention, so we set T = 4000 to admit every baseline
+    /// at the paper's relative tightness. Fig. 6 scales it by the same
+    /// 1500/1200 ratio (→ 5000). Shapes are unaffected (EXPERIMENTS.md).
+    pub fn paper() -> Self {
+        ExperimentSetup { seed: 42, scale: 1.0, horizon: 4000, servers: 20, inter_bw: 10.0 }
+    }
+
+    /// A fast smoke setup (~16 jobs) for tests and CI benches.
+    pub fn smoke() -> Self {
+        ExperimentSetup { seed: 42, scale: 0.1, horizon: 1200, servers: 8, inter_bw: 10.0 }
+    }
+
+    pub fn cluster(&self) -> Cluster {
+        let mut c = Cluster::random(self.servers, self.seed);
+        c.inter_bw = self.inter_bw;
+        c
+    }
+
+    pub fn jobs(&self) -> Vec<JobSpec> {
+        let gen = if (self.scale - 1.0).abs() < 1e-9 {
+            TraceGenerator::paper()
+        } else {
+            TraceGenerator::paper_scaled(self.scale)
+        };
+        gen.generate(self.seed)
+    }
+
+    pub fn params(&self) -> ContentionParams {
+        ContentionParams::paper()
+    }
+}
+
+/// Schedule + simulate one policy; returns the realized summary.
+pub fn run_policy(
+    policy: Policy,
+    cluster: &Cluster,
+    jobs: &[JobSpec],
+    params: &ContentionParams,
+    horizon: u64,
+) -> Result<PolicySummary> {
+    let plan = sched::schedule(policy, cluster, jobs, params, horizon)?;
+    let outcome = Simulator::new(cluster, jobs, params).run(&plan);
+    Ok(PolicySummary::from_outcome(policy.name(), plan.est_makespan(), &outcome))
+}
+
+/// **Fig. 4** — makespan + average JCT across SJF-BCO / FF / LS / RAND
+/// (plus the GADGET comparator). Paper shape: SJF-BCO wins on both.
+pub fn fig4(setup: &ExperimentSetup) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut report = FigureReport::new(
+        format!("Fig. 4 — makespan by policy (seed {}, {} jobs)", setup.seed, jobs.len()),
+        "policy",
+    );
+    for policy in Policy::ALL {
+        let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+        report.push_summary(&s);
+    }
+    Ok(report)
+}
+
+/// **Fig. 5** — makespan vs κ for SJF-BCO (T = 1200). Paper shape: drop →
+/// rise → slight drop (two turning points).
+pub fn fig5(setup: &ExperimentSetup, kappas: &[usize]) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut report =
+        FigureReport::new(format!("Fig. 5 — impact of kappa (seed {})", setup.seed), "kappa");
+    for &kappa in kappas {
+        let cfg = SjfBcoConfig { kappa: Some(kappa), lambda: 1.0 };
+        let plan = sched::sjf_bco(&cluster, &jobs, &params, setup.horizon, cfg)?;
+        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        report.push(kappa.to_string(), outcome.makespan, outcome.avg_jct);
+    }
+    Ok(report)
+}
+
+/// **Fig. 6** — makespan vs number of servers for FF / LS / SJF-BCO
+/// (T = 1500). Paper shape: all decrease with more servers; FF steepest.
+pub fn fig6(setup: &ExperimentSetup, server_counts: &[usize]) -> Result<FigureReport> {
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut report = FigureReport::new(
+        format!("Fig. 6 — makespan vs #servers (seed {})", setup.seed),
+        "policy/servers",
+    );
+    for policy in [Policy::FirstFit, Policy::ListScheduling, Policy::SjfBco] {
+        for &n in server_counts {
+            let mut cluster = Cluster::random(n, setup.seed);
+            cluster.inter_bw = setup.inter_bw;
+            let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+            report.push(format!("{}/{}", policy.name(), n), s.makespan, s.avg_jct);
+        }
+    }
+    Ok(report)
+}
+
+/// **Fig. 7** — makespan vs λ for SJF-BCO with κ = 1. Paper shape:
+/// monotone decrease in λ.
+pub fn fig7(setup: &ExperimentSetup, lambdas: &[f64]) -> Result<FigureReport> {
+    let cluster = setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut report =
+        FigureReport::new(format!("Fig. 7 — impact of lambda (seed {})", setup.seed), "lambda");
+    for &lambda in lambdas {
+        let cfg = SjfBcoConfig { kappa: Some(1), lambda };
+        let plan = sched::sjf_bco(&cluster, &jobs, &params, setup.horizon, cfg)?;
+        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        report.push(format!("{lambda}"), outcome.makespan, outcome.avg_jct);
+    }
+    Ok(report)
+}
+
+/// §1 motivation experiment: one spread 4-GPU job alone vs four identical
+/// spread jobs co-running (the 295 s → 675 s observation of [19]).
+/// Returns (solo JCT, per-job JCT when four co-run).
+pub fn motivation(setup: &ExperimentSetup) -> Result<(u64, u64)> {
+    use crate::cluster::{JobPlacement, ServerId};
+    use crate::jobs::JobId;
+    use crate::sched::{Plan, PlannedJob};
+
+    // two 8-GPU servers; each job's ring spans both (Fig. 2(b)), so all
+    // four concurrent jobs compete for the same pair of uplinks — the
+    // "four jobs of the same type scheduled across GPU servers" setup
+    // of [19] that the paper's §1 cites (295 s solo vs 675 s contended).
+    let cluster = Cluster::uniform(2, 8, 1.0, 25.0);
+    let params = setup.params();
+    let mk_job = |id: usize| {
+        let mut j = JobSpec::synthetic(JobId(id), 4);
+        j.iterations = 2000;
+        j
+    };
+    let spread = |id: usize| {
+        JobPlacement::new(vec![
+            cluster.global_gpu(ServerId(0), 2 * id),
+            cluster.global_gpu(ServerId(0), 2 * id + 1),
+            cluster.global_gpu(ServerId(1), 2 * id),
+            cluster.global_gpu(ServerId(1), 2 * id + 1),
+        ])
+    };
+    // Solo run
+    let solo_jobs = vec![mk_job(0)];
+    let solo_plan = Plan::new(
+        "solo",
+        vec![PlannedJob {
+            job: JobId(0),
+            placement: spread(0),
+            est_start: 0.0,
+            est_finish: 0.0,
+        }],
+    );
+    let solo = Simulator::new(&cluster, &solo_jobs, &params).run(&solo_plan);
+
+    // Four concurrent spread jobs
+    let jobs: Vec<_> = (0..4).map(mk_job).collect();
+    let plan = Plan::new(
+        "contended",
+        (0..4)
+            .map(|i| PlannedJob {
+                job: JobId(i),
+                placement: spread(i),
+                est_start: 0.0,
+                est_finish: 0.0,
+            })
+            .collect(),
+    );
+    let contended = Simulator::new(&cluster, &jobs, &params).run(&plan);
+    let worst = contended.records.iter().map(|r| r.jct()).max().unwrap();
+    Ok((solo.makespan, worst))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_smoke_has_all_policies() {
+        let report = fig4(&ExperimentSetup::smoke()).unwrap();
+        assert_eq!(report.rows.len(), Policy::ALL.len());
+        assert!(report.rows.iter().all(|r| r.makespan > 0));
+    }
+
+    #[test]
+    fn fig5_smoke_sweeps_kappa() {
+        let report = fig5(&ExperimentSetup::smoke(), &[1, 4, 32]).unwrap();
+        assert_eq!(report.rows.len(), 3);
+    }
+
+    #[test]
+    fn fig7_smoke_lambda_monotone_trend() {
+        let report = fig7(&ExperimentSetup::smoke(), &[1.0, 8.0]).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        // λ=8 should not be (much) worse than λ=1 on the smoke setup
+        assert!(report.rows[1].makespan <= report.rows[0].makespan + 5);
+    }
+
+    #[test]
+    fn motivation_shows_contention_blowup() {
+        let (solo, contended) = motivation(&ExperimentSetup::smoke()).unwrap();
+        assert!(
+            contended as f64 >= solo as f64 * 1.5,
+            "contended {contended} vs solo {solo}: expected >=1.5x blowup"
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! RAR-based DDL job model (paper §4.1).
+//!
+//! Each job `j` requests `G_j` GPUs and `F_j` training iterations; its
+//! per-iteration cost is driven by its gradient size `m_j`, mini-batch size
+//! `M_j`, and forward/backward pass constants `Δ^f_j`, `Δ^b_j` (Eq. 8).
+
+mod spec;
+mod zoo;
+
+pub use spec::{JobId, JobSpec};
+pub use zoo::{ModelKind, WorkloadProfile};
+
+/// A batch of jobs waiting at the start of the scheduling horizon.
+pub type JobSet = Vec<JobSpec>;
+
+/// Sort jobs by `G_j` in non-decreasing order — "smallest job first"
+/// (Alg. 1 Line 3). Ties break by id for determinism.
+pub fn sort_smallest_first(jobs: &mut [JobSpec]) {
+    jobs.sort_by_key(|j| (j.gpus, j.id));
+}
+
+/// `n_g = max_j G_j` as defined in Theorem 1.
+pub fn max_job_size(jobs: &[JobSpec]) -> usize {
+    jobs.iter().map(|j| j.gpus).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_is_by_size_then_id() {
+        let mut jobs = vec![
+            JobSpec::synthetic(JobId(2), 4),
+            JobSpec::synthetic(JobId(0), 8),
+            JobSpec::synthetic(JobId(1), 4),
+        ];
+        sort_smallest_first(&mut jobs);
+        let order: Vec<_> = jobs.iter().map(|j| (j.gpus, j.id.0)).collect();
+        assert_eq!(order, vec![(4, 1), (4, 2), (8, 0)]);
+    }
+
+    #[test]
+    fn max_job_size_empty_is_zero() {
+        assert_eq!(max_job_size(&[]), 0);
+        let jobs = vec![JobSpec::synthetic(JobId(0), 16)];
+        assert_eq!(max_job_size(&jobs), 16);
+    }
+}

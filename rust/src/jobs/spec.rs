@@ -1,0 +1,190 @@
+//! Job specification.
+
+
+/// Dense job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub usize);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// Static description of an RAR-based DDL training job, as submitted by its
+/// user (paper §4.1: both `G_j` and `F_j` are user-requested).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    /// Human-readable tag (model name in the trace).
+    pub name: String,
+    /// `G_j`: number of GPUs requested (== ring width `w_j` once placed).
+    pub gpus: usize,
+    /// `F_j`: total number of training iterations requested.
+    pub iterations: u64,
+    /// `m_j`: gradient size in model units (same unit as link bandwidth per
+    /// slot, so `m_j / B` is a slot count).
+    pub grad_size: f64,
+    /// `M_j`: mini-batch size.
+    pub batch_size: u64,
+    /// `Δ^f_j`: forward-pass time per sample (slots); total FP time is
+    /// `Δ^f_j · M_j` (paper §4.1 2-2).
+    pub fwd_per_sample: f64,
+    /// `Δ^b_j`: backward-pass time (slots), independent of `M_j`.
+    pub bwd: f64,
+    /// Arrival slot. The paper's batch setting has all jobs waiting at
+    /// t = 0 (§4.1); staggered arrivals are an extension honoured by the
+    /// simulator (a job cannot start before `arrival`).
+    pub arrival: u64,
+}
+
+impl JobSpec {
+    /// A small deterministic job useful in unit tests.
+    pub fn synthetic(id: JobId, gpus: usize) -> Self {
+        JobSpec {
+            id,
+            name: format!("synthetic-{}", id.0),
+            gpus,
+            iterations: 1000,
+            grad_size: 0.01,
+            batch_size: 32,
+            fwd_per_sample: 1e-4,
+            bwd: 2e-3,
+            arrival: 0,
+        }
+    }
+
+    /// Ring width `w_j` == `G_j` under gang scheduling.
+    pub fn ring_width(&self) -> usize {
+        self.gpus
+    }
+
+    /// Per-worker chunk volume sent in one RAR step: `m_j / w_j`.
+    pub fn chunk_size(&self) -> f64 {
+        self.grad_size / self.gpus as f64
+    }
+
+    /// Total data any worker transmits per RAR iteration:
+    /// `2 m_j (w_j - 1) / w_j` (paper §3 — bandwidth-optimal).
+    pub fn rar_volume(&self) -> f64 {
+        2.0 * self.grad_size * (self.gpus as f64 - 1.0) / self.gpus as f64
+    }
+
+    /// Amount of data reduced per iteration: `m_j (w_j - 1) / w_j`
+    /// (paper §4.1 2-2).
+    pub fn reduce_volume(&self) -> f64 {
+        self.grad_size * (self.gpus as f64 - 1.0) / self.gpus as f64
+    }
+
+    /// Fixed per-iteration compute (FP+BP) in slots: `Δ^f_j M_j + Δ^b_j`.
+    pub fn fp_bp_time(&self) -> f64 {
+        self.fwd_per_sample * self.batch_size as f64 + self.bwd
+    }
+
+    /// Serialise to a JSON value.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("id", Json::Num(self.id.0 as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("gpus", Json::Num(self.gpus as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("grad_size", Json::Num(self.grad_size)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("fwd_per_sample", Json::Num(self.fwd_per_sample)),
+            ("bwd", Json::Num(self.bwd)),
+            ("arrival", Json::Num(self.arrival as f64)),
+        ])
+    }
+
+    /// Parse from a JSON value produced by [`to_json`](Self::to_json).
+    pub fn from_json(v: &crate::util::Json) -> crate::Result<Self> {
+        Ok(JobSpec {
+            id: JobId(v.req("id")?.as_usize()?),
+            name: v.req("name")?.as_str()?.to_string(),
+            gpus: v.req("gpus")?.as_usize()?,
+            iterations: v.req("iterations")?.as_u64()?,
+            grad_size: v.req("grad_size")?.as_f64()?,
+            batch_size: v.req("batch_size")?.as_u64()?,
+            fwd_per_sample: v.req("fwd_per_sample")?.as_f64()?,
+            bwd: v.req("bwd")?.as_f64()?,
+            // absent in traces written before the online extension
+            arrival: v.get("arrival").map(|a| a.as_u64()).transpose()?.unwrap_or(0),
+        })
+    }
+
+    /// Basic sanity validation; returns a description of the first problem.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.gpus == 0 {
+            return Err(format!("{}: G_j must be >= 1", self.id));
+        }
+        if self.iterations == 0 {
+            return Err(format!("{}: F_j must be >= 1", self.id));
+        }
+        if !(self.grad_size > 0.0) {
+            return Err(format!("{}: m_j must be positive", self.id));
+        }
+        if self.fwd_per_sample < 0.0 || self.bwd < 0.0 {
+            return Err(format!("{}: FP/BP times must be non-negative", self.id));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rar_volume_is_bandwidth_optimal() {
+        // As w grows, per-worker volume tends to 2 m_j, independent of w.
+        let mut prev = 0.0;
+        for w in 2..=64 {
+            let mut j = JobSpec::synthetic(JobId(0), w);
+            j.grad_size = 1.0;
+            let v = j.rar_volume();
+            assert!(v > prev, "volume increases monotonically");
+            assert!(v < 2.0, "bounded by 2 m_j");
+            prev = v;
+        }
+        assert!((prev - 2.0).abs() < 0.05, "asymptotically 2 m_j, got {prev}");
+    }
+
+    #[test]
+    fn single_worker_has_zero_comm() {
+        let j = JobSpec::synthetic(JobId(0), 1);
+        assert_eq!(j.rar_volume(), 0.0);
+        assert_eq!(j.reduce_volume(), 0.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let mut j = JobSpec::synthetic(JobId(0), 4);
+        assert!(j.validate().is_ok());
+        j.gpus = 0;
+        assert!(j.validate().is_err());
+        j.gpus = 4;
+        j.grad_size = 0.0;
+        assert!(j.validate().is_err());
+        j.grad_size = 0.5;
+        j.iterations = 0;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn fp_bp_combines_batch_scaling() {
+        let mut j = JobSpec::synthetic(JobId(0), 2);
+        j.fwd_per_sample = 0.001;
+        j.batch_size = 100;
+        j.bwd = 0.05;
+        assert!((j.fp_bp_time() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = JobSpec::synthetic(JobId(9), 8);
+        let s = j.to_json().to_string();
+        let back = JobSpec::from_json(&crate::util::Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(j, back);
+    }
+}

@@ -1,0 +1,41 @@
+//! # rarsched
+//!
+//! Contention-aware scheduling of **ring-all-reduce (RAR)** distributed deep
+//! learning jobs in multi-tenant GPU clusters — a full reproduction of
+//! *"On Scheduling Ring-All-Reduce Learning Jobs in Multi-Tenant GPU Clusters
+//! with Communication Contention"* (Yu, Ji, Rajan, Liu — ACM MobiHoc 2022).
+//!
+//! The crate is organised as a three-layer system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the cluster
+//!   model, the communication-contention model (Eq. 6–9), the discrete-event
+//!   simulator, the SJF-BCO scheduler (Alg. 1) with its FA-FFP (Alg. 2) and
+//!   LBSGF (Alg. 3) placement subroutines, the FF / LS / RAND baselines, a
+//!   GADGET-style reserved-bandwidth comparator, a real multi-threaded
+//!   ring-all-reduce engine, and a PJRT runtime that executes AOT-compiled
+//!   XLA train steps.
+//! * **L2 (python/compile/model.py)** — a transformer LM train step written
+//!   in JAX, calling the L1 Pallas kernels, lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled matmul, ring
+//!   reduce chunk step, fused SGD), validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once, and the Rust binary loads `artifacts/*.hlo.txt` through PJRT.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod contention;
+pub mod experiments;
+pub mod coordinator;
+pub mod jobs;
+pub mod metrics;
+pub mod rar;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,302 @@
+//! `rarsched` — the launcher.
+//!
+//! Subcommands:
+//!
+//! * `simulate` — schedule a trace with one policy and replay it under
+//!   the full contention model (Eq. 6–9).
+//! * `figures`  — regenerate the paper's evaluation figures (4–7) plus
+//!   the §1 motivation experiment.
+//! * `trace`    — emit a reproducible Philly-derived trace as JSON.
+//! * `train`    — live data-parallel RAR training of a transformer LM
+//!   through the PJRT runtime (requires `make artifacts`).
+//! * `verify`   — numeric cross-check of the Rust runtime vs the
+//!   python-recorded losses in the artifact manifest.
+
+use rarsched::cli::Args;
+use rarsched::config::ExperimentConfig;
+use rarsched::coordinator::{train_job, TrainJobSpec};
+use rarsched::experiments::{self, ExperimentSetup};
+use rarsched::metrics::PolicySummary;
+use rarsched::runtime::{default_artifacts_dir, PjRt};
+use rarsched::sched::{self, Policy};
+use rarsched::sim::Simulator;
+use rarsched::util::logger;
+use rarsched::Result;
+
+const USAGE: &str = "\
+rarsched — contention-aware RAR job scheduling (MobiHoc'22 SJF-BCO)
+
+USAGE: rarsched <COMMAND> [OPTIONS]
+
+COMMANDS:
+  simulate   --policy <sjf-bco|ff|ls|rand|gadget> [--config f.toml]
+             [--seed N] [--servers N] [--horizon T] [--scale F] [--json]
+  figures    --fig <4|5|6|7|motivation|ablations|online|all> [--seed N] [--scale F]
+             [--out dir] [--full]
+  trace      --out trace.json [--seed N] [--scale F]
+  train      --model <tiny|small|base> [--workers W] [--steps N]
+             [--spread] [--artifacts dir]
+  verify     [--model tiny] [--artifacts dir]
+  help       print this message
+";
+
+fn main() {
+    logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "trace" => cmd_trace(&args),
+        "train" => cmd_train(&args),
+        "verify" => cmd_verify(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn setup_from(args: &Args) -> Result<ExperimentSetup> {
+    let mut setup = ExperimentSetup::paper();
+    setup.seed = args.get_u64("seed", setup.seed)?;
+    setup.scale = args.get_f64("scale", setup.scale)?;
+    setup.horizon = args.get_u64("horizon", setup.horizon)?;
+    setup.servers = args.get_usize("servers", setup.servers)?;
+    Ok(setup)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (cluster, jobs, params, horizon, policy);
+    if let Some(path) = args.get("config") {
+        let cfg = ExperimentConfig::load(std::path::Path::new(path))?;
+        cluster = cfg.build_cluster();
+        jobs = cfg.build_generator().generate(cfg.seed);
+        params = cfg.build_params();
+        horizon = cfg.horizon();
+        policy = cfg.scheduler.policy;
+    } else {
+        let setup = setup_from(args)?;
+        cluster = setup.cluster();
+        jobs = setup.jobs();
+        params = setup.params();
+        horizon = setup.horizon;
+        policy = args.get_or("policy", "sjf-bco").parse::<Policy>()?;
+    }
+    let json = args.get_bool("json");
+    args.reject_unknown()?;
+
+    log::info!(
+        "scheduling {} jobs on {} servers / {} GPUs with {policy}",
+        jobs.len(),
+        cluster.num_servers(),
+        cluster.num_gpus()
+    );
+    let plan = sched::schedule(policy, &cluster, &jobs, &params, horizon)?;
+    let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+    let summary = PolicySummary::from_outcome(policy.name(), plan.est_makespan(), &outcome);
+    if json {
+        println!(
+            "{{\"policy\":\"{}\",\"makespan\":{},\"avg_jct\":{:.2},\"p95_jct\":{},\
+             \"utilization\":{:.4},\"max_contention\":{}}}",
+            summary.policy,
+            summary.makespan,
+            summary.avg_jct,
+            summary.p95_jct,
+            summary.gpu_utilization,
+            summary.max_contention
+        );
+    } else {
+        println!("policy          : {}", summary.policy);
+        println!("theta / kappa   : {:?} / {:?}", plan.theta, plan.kappa);
+        println!("est. makespan   : {:.1} slots", summary.est_makespan);
+        println!("makespan        : {} slots", summary.makespan);
+        println!("avg JCT         : {:.1} slots", summary.avg_jct);
+        println!("p95 JCT         : {} slots", summary.p95_jct);
+        println!("avg wait        : {:.1} slots", summary.avg_wait);
+        println!("GPU utilization : {:.1}%", summary.gpu_utilization * 100.0);
+        println!("max contention  : {} jobs on one uplink", summary.max_contention);
+        if summary.truncated {
+            println!("WARNING: simulation truncated at the safety horizon");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.get_or("fig", "all").to_string();
+    let full = args.get_bool("full");
+    let explicit_scale = args.get("scale").is_some();
+    let mut setup = setup_from(args)?;
+    if !full && !explicit_scale {
+        // default to a fast but representative run; --full for paper scale
+        setup.scale = 0.25;
+    }
+    let out_dir = args.get("out").map(std::path::PathBuf::from);
+    args.reject_unknown()?;
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+
+    let mut reports = Vec::new();
+    if which == "4" || which == "all" {
+        reports.push(("fig4", experiments::fig4(&setup)?));
+    }
+    if which == "5" || which == "all" {
+        let kappas: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
+        reports.push(("fig5", experiments::fig5(&setup, &kappas)?));
+    }
+    if which == "6" || which == "all" {
+        let mut s = setup.clone();
+        s.horizon = 5000; // paper: 1500 (= 1200 x 1.25); our slot scale, see ExperimentSetup
+        reports.push(("fig6", experiments::fig6(&s, &[10, 12, 14, 16, 18, 20])?));
+    }
+    if which == "7" || which == "all" {
+        reports.push(("fig7", experiments::fig7(&setup, &[1.0, 2.0, 4.0, 8.0])?));
+    }
+    if which == "online" {
+        reports.push((
+            "online",
+            rarsched::experiments::online::online_sweep(&setup, &[0.0, 1.0, 5.0, 20.0])?,
+        ));
+    }
+    if which == "ablations" {
+        use rarsched::experiments::ablations as ab;
+        reports.push(("ablation_alpha", ab::ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0])?));
+        reports.push(("ablation_xi1", ab::ablation_xi1(&setup, &[0.1, 0.5, 1.0])?));
+        reports.push(("ablation_xi2", ab::ablation_xi2(&setup, &[0.0, 5.0e-4, 5.0e-3])?));
+        reports.push(("ablation_mix", ab::ablation_mix(&setup)?));
+    }
+    if which == "motivation" || which == "all" {
+        let (solo, contended) = experiments::motivation(&setup)?;
+        println!("== §1 motivation ==");
+        println!("solo spread job JCT      : {solo} slots");
+        println!(
+            "4 contending jobs, worst : {contended} slots ({:.2}x)",
+            contended as f64 / solo as f64
+        );
+        println!();
+    }
+    for (name, report) in &reports {
+        println!("{}", report.to_table());
+        if let Some(d) = &out_dir {
+            report.save_csv(&d.join(format!("{name}.csv")))?;
+            std::fs::write(d.join(format!("{name}.json")), report.to_json()?)?;
+            log::info!("wrote {name}.csv / {name}.json to {d:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let setup = setup_from(args)?;
+    let out = args.get_or("out", "trace.json").to_string();
+    args.reject_unknown()?;
+    let gen = if (setup.scale - 1.0).abs() < 1e-9 {
+        rarsched::trace::TraceGenerator::paper()
+    } else {
+        rarsched::trace::TraceGenerator::paper_scaled(setup.scale)
+    };
+    let trace = gen.generate_trace(setup.seed);
+    trace.save(std::path::Path::new(&out))?;
+    println!(
+        "wrote {} jobs ({} GPUs total demand) to {out}",
+        trace.jobs.len(),
+        trace.total_gpu_demand()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use rarsched::cluster::{Cluster, JobPlacement, ServerId};
+    use rarsched::rar::LinkBank;
+    use std::sync::Arc;
+
+    let model = args.get_or("model", "tiny").to_string();
+    let workers = args.get_usize("workers", 2)?;
+    let steps = args.get_u64("steps", 50)?;
+    let spread = args.get_bool("spread");
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    args.reject_unknown()?;
+
+    // a 2-server demo cluster; --spread places half the ring on each server
+    let cluster = Cluster::uniform(2, workers.max(1), 1.0, 25.0);
+    let gpus: Vec<_> = if spread {
+        (0..workers).map(|i| cluster.global_gpu(ServerId(i % 2), i / 2)).collect()
+    } else {
+        (0..workers).map(|i| cluster.global_gpu(ServerId(0), i)).collect()
+    };
+    let placement = JobPlacement::new(gpus);
+    let links = Arc::new(LinkBank::new(2, 100.0e6, 5.0e9));
+    let spec = TrainJobSpec { model, steps, corpus_seed: 7, artifacts };
+
+    log::info!(
+        "training '{}' on {} workers ({}), {} steps",
+        spec.model,
+        workers,
+        if spread { "spread over 2 servers" } else { "co-located" },
+        steps
+    );
+    let report = train_job(&spec, &placement, Some(links))?;
+    for (i, loss) in report.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == report.losses.len() {
+            println!("step {i:>4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "loss {:.4} -> {:.4} over {} steps; mean step {:?}; total {:?}",
+        report.initial_loss(),
+        report.final_loss(),
+        steps,
+        report.mean_step_time(),
+        report.total
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny").to_string();
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    args.reject_unknown()?;
+    let pjrt = PjRt::cpu(&artifacts)?;
+    println!("platform: {}", pjrt.platform());
+    let runtime = pjrt.model(&model)?;
+    println!(
+        "model '{}': {} param tensors, {} parameters",
+        model,
+        runtime.num_param_tensors(),
+        runtime.entry().total_params
+    );
+    runtime.verify(&pjrt, 5e-3)?;
+    println!(
+        "verify OK: rust losses match python export (before {:.4}, after {:.4})",
+        runtime.entry().check_loss_before,
+        runtime.entry().check_loss_after
+    );
+    Ok(())
+}

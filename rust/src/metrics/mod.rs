@@ -1,0 +1,69 @@
+//! Result aggregation and reporting: figure-style tables, CSV/JSON export.
+
+mod report;
+
+pub use report::{ComparisonRow, FigureReport};
+
+use crate::sim::SimOutcome;
+
+/// Summary statistics of a single policy run — one row of Fig. 4.
+#[derive(Debug, Clone)]
+pub struct PolicySummary {
+    pub policy: String,
+    pub makespan: u64,
+    pub avg_jct: f64,
+    pub p95_jct: u64,
+    pub avg_wait: f64,
+    pub gpu_utilization: f64,
+    pub max_contention: usize,
+    pub est_makespan: f64,
+    pub truncated: bool,
+}
+
+impl PolicySummary {
+    pub fn from_outcome(policy: &str, est_makespan: f64, out: &SimOutcome) -> Self {
+        PolicySummary {
+            policy: policy.to_string(),
+            makespan: out.makespan,
+            avg_jct: out.avg_jct,
+            p95_jct: out.jct_percentile(95.0),
+            avg_wait: out.avg_wait(),
+            gpu_utilization: out.gpu_utilization,
+            max_contention: out.records.iter().map(|r| r.max_p).max().unwrap_or(0),
+            est_makespan,
+            truncated: out.truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::JobRecord;
+    use crate::jobs::JobId;
+
+    #[test]
+    fn summary_from_outcome() {
+        let out = SimOutcome {
+            makespan: 100,
+            avg_jct: 60.0,
+            gpu_utilization: 0.7,
+            records: vec![JobRecord {
+                job: JobId(0),
+                arrival: 0,
+                start: 0,
+                finish: 100,
+                span: 2,
+                max_p: 3,
+                mean_tau: 0.02,
+                iterations_done: 1000,
+            }],
+            slots_simulated: 100,
+            truncated: false,
+        };
+        let s = PolicySummary::from_outcome("FF", 90.0, &out);
+        assert_eq!(s.makespan, 100);
+        assert_eq!(s.max_contention, 3);
+        assert_eq!(s.p95_jct, 100);
+    }
+}

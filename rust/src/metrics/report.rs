@@ -1,0 +1,178 @@
+//! Figure-style reports: aligned console tables, CSV and JSON emitters,
+//! matching the rows/series the paper's Figs. 4–7 plot.
+
+use super::PolicySummary;
+
+/// One (x, y…) row of a figure sweep — e.g. (κ, makespan) for Fig. 5.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    /// Sweep variable value (κ, λ, #servers…) or policy name for Fig. 4.
+    pub x: String,
+    pub makespan: u64,
+    pub avg_jct: f64,
+}
+
+/// A reproducible figure: title, axis label and rows.
+#[derive(Debug, Clone)]
+pub struct FigureReport {
+    pub figure: String,
+    pub x_label: String,
+    pub rows: Vec<ComparisonRow>,
+}
+
+impl FigureReport {
+    pub fn new(figure: impl Into<String>, x_label: impl Into<String>) -> Self {
+        FigureReport { figure: figure.into(), x_label: x_label.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: impl Into<String>, makespan: u64, avg_jct: f64) {
+        self.rows.push(ComparisonRow { x: x.into(), makespan, avg_jct });
+    }
+
+    pub fn push_summary(&mut self, s: &PolicySummary) {
+        self.rows.push(ComparisonRow {
+            x: s.policy.clone(),
+            makespan: s.makespan,
+            avg_jct: s.avg_jct,
+        });
+    }
+
+    /// Render an aligned console table.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.figure));
+        let w = self
+            .rows
+            .iter()
+            .map(|r| r.x.len())
+            .chain(std::iter::once(self.x_label.len()))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        out.push_str(&format!(
+            "{:<w$} {:>12} {:>12}\n",
+            self.x_label,
+            "makespan",
+            "avg JCT",
+            w = w
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<w$} {:>12} {:>12.1}\n",
+                r.x,
+                r.makespan,
+                r.avg_jct,
+                w = w
+            ));
+        }
+        out
+    }
+
+    /// Render CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("{},makespan,avg_jct\n", self.x_label);
+        for r in &self.rows {
+            out.push_str(&format!("{},{},{:.3}\n", r.x, r.makespan, r.avg_jct));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> crate::Result<String> {
+        use crate::util::Json;
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("x", Json::Str(r.x.clone())),
+                    ("makespan", Json::Num(r.makespan as f64)),
+                    ("avg_jct", Json::Num(r.avg_jct)),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("figure", Json::Str(self.figure.clone())),
+            ("x_label", Json::Str(self.x_label.clone())),
+            ("rows", Json::arr(rows)),
+        ])
+        .to_pretty())
+    }
+
+    /// Parse a report back from [`to_json`](Self::to_json) output.
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        use crate::util::Json;
+        let v = Json::parse(s)?;
+        let rows = v
+            .req("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(ComparisonRow {
+                    x: r.req("x")?.as_str()?.to_string(),
+                    makespan: r.req("makespan")?.as_u64()?,
+                    avg_jct: r.req("avg_jct")?.as_f64()?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(FigureReport {
+            figure: v.req("figure")?.as_str()?.to_string(),
+            x_label: v.req("x_label")?.as_str()?.to_string(),
+            rows,
+        })
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Best (minimum-makespan) row.
+    pub fn best(&self) -> Option<&ComparisonRow> {
+        self.rows.iter().min_by_key(|r| r.makespan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> FigureReport {
+        let mut f = FigureReport::new("Fig. 4", "policy");
+        f.push("SJF-BCO", 700, 320.0);
+        f.push("FF", 920, 410.0);
+        f.push("RAND", 1100, 520.0);
+        f
+    }
+
+    #[test]
+    fn table_contains_all_rows() {
+        let t = report().to_table();
+        assert!(t.contains("SJF-BCO"));
+        assert!(t.contains("920"));
+        assert!(t.contains("makespan"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = report().to_csv();
+        let lines: Vec<_> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "policy,makespan,avg_jct");
+        assert!(lines[1].starts_with("SJF-BCO,700,"));
+    }
+
+    #[test]
+    fn best_is_min_makespan() {
+        assert_eq!(report().best().unwrap().x, "SJF-BCO");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = report();
+        let s = f.to_json().unwrap();
+        let back = FigureReport::from_json(&s).unwrap();
+        assert_eq!(back.rows.len(), 3);
+        assert_eq!(back.rows[0].x, "SJF-BCO");
+        assert_eq!(back.figure, f.figure);
+    }
+}

@@ -1,0 +1,145 @@
+//! Bandwidth regulation for shared links.
+//!
+//! Each server has one uplink. A transfer of `n` bytes sleeps for
+//! `n * flows / bandwidth` seconds, where `flows` is the number of
+//! transfers concurrently holding the link — a fair-share approximation
+//! of the paper's `b^e / k_j` contention model that makes contention
+//! *observable in wall-clock time* on the live path.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Telemetry for one link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Total bytes transferred.
+    pub bytes: u64,
+    /// Total transfers.
+    pub transfers: u64,
+    /// Max concurrent flows observed.
+    pub max_flows: u64,
+}
+
+struct Link {
+    active: AtomicUsize,
+    bytes: AtomicU64,
+    transfers: AtomicU64,
+    max_flows: AtomicU64,
+}
+
+/// One uplink per server plus a shared intra-server bandwidth.
+pub struct LinkBank {
+    links: Vec<Link>,
+    /// Inter-server (uplink) bandwidth, bytes/sec.
+    pub inter_bw: f64,
+    /// Intra-server bandwidth, bytes/sec (`b^i >> b^e`).
+    pub intra_bw: f64,
+}
+
+impl LinkBank {
+    pub fn new(num_servers: usize, inter_bw: f64, intra_bw: f64) -> Self {
+        assert!(inter_bw > 0.0 && intra_bw > 0.0);
+        LinkBank {
+            links: (0..num_servers)
+                .map(|_| Link {
+                    active: AtomicUsize::new(0),
+                    bytes: AtomicU64::new(0),
+                    transfers: AtomicU64::new(0),
+                    max_flows: AtomicU64::new(0),
+                })
+                .collect(),
+            inter_bw,
+            intra_bw,
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Transmit `bytes` across the uplink of `server` (inter-server hop):
+    /// sleeps for the fair-share duration under current contention.
+    pub fn transmit_inter(&self, server: usize, bytes: usize) {
+        let link = &self.links[server];
+        let flows = link.active.fetch_add(1, Ordering::SeqCst) + 1;
+        link.max_flows.fetch_max(flows as u64, Ordering::Relaxed);
+        link.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        link.transfers.fetch_add(1, Ordering::Relaxed);
+        let secs = bytes as f64 * flows as f64 / self.inter_bw;
+        spin_sleep(Duration::from_secs_f64(secs));
+        link.active.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Transmit `bytes` inside a server (NVLink-class; uncontended model).
+    pub fn transmit_intra(&self, bytes: usize) {
+        let secs = bytes as f64 / self.intra_bw;
+        spin_sleep(Duration::from_secs_f64(secs));
+    }
+
+    /// Telemetry snapshot for a server's uplink.
+    pub fn stats(&self, server: usize) -> LinkStats {
+        let l = &self.links[server];
+        LinkStats {
+            bytes: l.bytes.load(Ordering::Relaxed),
+            transfers: l.transfers.load(Ordering::Relaxed),
+            max_flows: l.max_flows.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Sleep that stays accurate for sub-millisecond durations (thread::sleep
+/// granularity is too coarse for small chunk transfers).
+fn spin_sleep(d: Duration) {
+    if d >= Duration::from_millis(2) {
+        std::thread::sleep(d);
+    } else {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn transfer_duration_scales_with_bytes() {
+        let bank = LinkBank::new(1, 10.0e6, 1.0e9); // 10 MB/s
+        let t0 = Instant::now();
+        bank.transmit_inter(0, 100_000); // 10 ms at fair share 1
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(9), "{dt:?}");
+        assert!(dt < Duration::from_millis(100), "{dt:?}");
+        let s = bank.stats(0);
+        assert_eq!(s.bytes, 100_000);
+        assert_eq!(s.transfers, 1);
+        assert_eq!(s.max_flows, 1);
+    }
+
+    #[test]
+    fn concurrent_flows_share_bandwidth() {
+        let bank = LinkBank::new(1, 50.0e6, 1.0e9);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| bank.transmit_inter(0, 250_000));
+            }
+        });
+        let dt = t0.elapsed();
+        // 4 flows x 250 kB at 50 MB/s fair-shared: >= 4x the solo 5 ms
+        assert!(dt >= Duration::from_millis(15), "{dt:?}");
+        assert!(bank.stats(0).max_flows >= 2);
+    }
+
+    #[test]
+    fn intra_is_fast() {
+        let bank = LinkBank::new(1, 1.0, 1.0e9);
+        let t0 = Instant::now();
+        bank.transmit_intra(1_000_000); // 1 ms at 1 GB/s
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert_eq!(bank.stats(0).bytes, 0);
+    }
+}

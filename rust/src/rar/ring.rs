@@ -1,0 +1,218 @@
+//! The chunked ring schedule over worker threads.
+
+use super::LinkBank;
+use crate::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Static shape of a ring: which server hosts each worker, in ring order
+/// (same-server workers contiguous — see `JobPlacement::new`).
+#[derive(Debug, Clone)]
+pub struct RingSpec {
+    pub server_of: Vec<usize>,
+}
+
+impl RingSpec {
+    /// All workers on one server (no uplink traffic).
+    pub fn colocated(w: usize) -> Self {
+        RingSpec { server_of: vec![0; w] }
+    }
+
+    /// Build from a placement (ring order == placement GPU order).
+    pub fn from_placement(p: &crate::cluster::JobPlacement) -> Self {
+        RingSpec { server_of: p.gpus().iter().map(|g| g.server.0).collect() }
+    }
+
+    pub fn width(&self) -> usize {
+        self.server_of.len()
+    }
+
+    /// Does the hop from worker `i` to its downstream cross servers?
+    pub fn hop_crosses(&self, i: usize) -> bool {
+        let w = self.width();
+        self.server_of[i] != self.server_of[(i + 1) % w]
+    }
+}
+
+/// Contiguous chunk boundaries: `w` chunks over a `d`-vector, sizes
+/// differing by at most one (mirrors `kernels/ring_reduce.py`).
+pub fn chunk_bounds(d: usize, w: usize) -> Vec<(usize, usize)> {
+    let (base, rem) = (d / w, d % w);
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let size = base + usize::from(i < rem);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+/// One worker's endpoints in a ring: a sender to its downstream neighbour
+/// and a receiver from its upstream neighbour.
+pub struct RingWorker {
+    pub index: usize,
+    spec: RingSpec,
+    tx_down: Sender<Vec<f32>>,
+    rx_up: Receiver<Vec<f32>>,
+}
+
+impl RingWorker {
+    /// Wire up a `w`-worker ring; returns one endpoint set per worker
+    /// (move each into its thread).
+    pub fn ring(spec: &RingSpec) -> Vec<RingWorker> {
+        let w = spec.width();
+        let mut txs = Vec::with_capacity(w);
+        let mut rxs = Vec::with_capacity(w);
+        for _ in 0..w {
+            let (tx, rx) = channel::<Vec<f32>>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        // worker i sends to (i+1) % w, so worker i receives on rx[i] and
+        // worker i's tx targets channel (i+1) % w
+        let mut workers: Vec<RingWorker> = Vec::with_capacity(w);
+        let mut rx_iter = rxs.into_iter();
+        for i in 0..w {
+            let tx_down = txs[(i + 1) % w].clone();
+            let rx_up = rx_iter.next().unwrap();
+            workers.push(RingWorker { index: i, spec: spec.clone(), tx_down, rx_up });
+        }
+        workers
+    }
+
+    fn send(&self, payload: Vec<f32>, links: Option<&LinkBank>) -> Result<()> {
+        if let Some(bank) = links {
+            let bytes = payload.len() * std::mem::size_of::<f32>();
+            if bytes > 0 {
+                if self.spec.hop_crosses(self.index) {
+                    bank.transmit_inter(self.spec.server_of[self.index], bytes);
+                } else {
+                    bank.transmit_intra(bytes);
+                }
+            }
+        }
+        self.tx_down
+            .send(payload)
+            .map_err(|_| anyhow::anyhow!("ring neighbour hung up"))
+    }
+
+    fn recv(&self) -> Result<Vec<f32>> {
+        self.rx_up.recv().map_err(|_| anyhow::anyhow!("ring upstream hung up"))
+    }
+
+    /// Execute one all-reduce over `buf` in place: after return, `buf`
+    /// holds the elementwise sum over all workers (paper §3: steps
+    /// 1..w−1 Share-Reduce, w..2w−2 Share-Only).
+    pub fn all_reduce(&self, buf: &mut [f32], links: Option<&LinkBank>) -> Result<()> {
+        let w = self.spec.width();
+        if w == 1 {
+            return Ok(());
+        }
+        let bounds = chunk_bounds(buf.len(), w);
+        let i = self.index;
+
+        // Share-Reduce: in step s, send chunk (i - s) mod w downstream,
+        // receive chunk (i - 1 - s) mod w from upstream, accumulate.
+        for s in 0..w - 1 {
+            let send_c = (i + w - s % w) % w;
+            let (lo, hi) = bounds[send_c];
+            self.send(buf[lo..hi].to_vec(), links)?;
+            let recv_c = (i + w - 1 - s % w) % w;
+            let payload = self.recv()?;
+            let (lo, hi) = bounds[recv_c];
+            debug_assert_eq!(payload.len(), hi - lo);
+            for (dst, src) in buf[lo..hi].iter_mut().zip(&payload) {
+                *dst += *src;
+            }
+        }
+
+        // Share-Only: worker i now owns fully-reduced chunk (i + 1) mod w.
+        for s in 0..w - 1 {
+            let send_c = (i + 1 + w - s % w) % w;
+            let (lo, hi) = bounds[send_c];
+            self.send(buf[lo..hi].to_vec(), links)?;
+            let recv_c = (i + w - s % w) % w;
+            let payload = self.recv()?;
+            let (lo, hi) = bounds[recv_c];
+            for (dst, src) in buf[lo..hi].iter_mut().zip(&payload) {
+                *dst = *src;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: all-reduce a set of per-worker buffers on scoped threads;
+/// returns every worker's final buffer (all equal to the sum).
+pub fn ring_all_reduce(
+    buffers: Vec<Vec<f32>>,
+    spec: &RingSpec,
+    links: Option<&LinkBank>,
+) -> Vec<Vec<f32>> {
+    assert_eq!(buffers.len(), spec.width(), "one buffer per ring worker");
+    let workers = RingWorker::ring(spec);
+    let mut out: Vec<Option<Vec<f32>>> = (0..spec.width()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = workers
+            .into_iter()
+            .zip(buffers)
+            .map(|(worker, mut buf)| {
+                scope.spawn(move || {
+                    worker.all_reduce(&mut buf, links).expect("ring failure");
+                    (worker.index, buf)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (i, buf) = h.join().expect("ring worker panicked");
+            out[i] = Some(buf);
+        }
+    });
+    out.into_iter().map(|b| b.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_bounds_partition() {
+        for d in [0usize, 1, 7, 100, 101] {
+            for w in [1usize, 2, 3, 8] {
+                let b = chunk_bounds(d, w);
+                assert_eq!(b.len(), w);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[w - 1].1, d);
+                let sizes: Vec<_> = b.iter().map(|(lo, hi)| hi - lo).collect();
+                assert_eq!(sizes.iter().sum::<usize>(), d);
+                assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn hop_crossing_detection() {
+        let spec = RingSpec { server_of: vec![0, 0, 1, 1] };
+        assert!(!spec.hop_crosses(0)); // 0 -> 0
+        assert!(spec.hop_crosses(1)); // 0 -> 1
+        assert!(!spec.hop_crosses(2)); // 1 -> 1
+        assert!(spec.hop_crosses(3)); // 1 -> 0 (wrap)
+    }
+
+    #[test]
+    fn two_worker_ring() {
+        let got = ring_all_reduce(
+            vec![vec![1.0, 2.0, 3.0], vec![10.0, 20.0, 30.0]],
+            &RingSpec::colocated(2),
+            None,
+        );
+        assert_eq!(got[0], vec![11.0, 22.0, 33.0]);
+        assert_eq!(got[1], vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn empty_buffer_ok() {
+        let got = ring_all_reduce(vec![vec![], vec![]], &RingSpec::colocated(2), None);
+        assert!(got[0].is_empty() && got[1].is_empty());
+    }
+}

@@ -1,0 +1,228 @@
+//! Model runtime: compiled entry points + parameter state management.
+
+use super::manifest::ModelEntry;
+use super::{xerr, PjRt};
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// Output of one grad/train step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+}
+
+/// A loaded model: three compiled executables plus the canonical
+/// parameter layout. Parameters are held as `xla::Literal`s in manifest
+/// order; the gradient tensors of `grad_step` come back in the same
+/// order, which is what the RAR engine all-reduces.
+pub struct ModelRuntime {
+    pjrt_platform: String,
+    entry: ModelEntry,
+    train_step: xla::PjRtLoadedExecutable,
+    grad_step: xla::PjRtLoadedExecutable,
+    apply_grads: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    pub fn load(pjrt: &PjRt, entry: ModelEntry) -> Result<Self> {
+        let need = ["train_step", "grad_step", "apply_grads"];
+        for n in need {
+            if !entry.artifacts.contains_key(n) {
+                bail!("model '{}' missing artifact '{n}'", entry.name);
+            }
+        }
+        Ok(ModelRuntime {
+            pjrt_platform: pjrt.platform(),
+            train_step: pjrt.compile_hlo(&entry.artifacts["train_step"])?,
+            grad_step: pjrt.compile_hlo(&entry.artifacts["grad_step"])?,
+            apply_grads: pjrt.compile_hlo(&entry.artifacts["apply_grads"])?,
+            entry,
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.pjrt_platform
+    }
+
+    pub fn num_param_tensors(&self) -> usize {
+        self.entry.params.len()
+    }
+
+    /// Load the initial parameters exported by aot.py (f32 LE blob in
+    /// canonical order) into literals.
+    pub fn init_params(&self, pjrt: &PjRt) -> Result<Vec<xla::Literal>> {
+        let path = pjrt.root().join(&self.entry.init_file);
+        let blob = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let want = 4 * self.entry.total_params;
+        if blob.len() != want {
+            bail!("init blob {path:?}: {} bytes, want {want}", blob.len());
+        }
+        let mut params = Vec::with_capacity(self.entry.params.len());
+        let mut offset = 0usize;
+        for spec in &self.entry.params {
+            let bytes = &blob[offset * 4..(offset + spec.size) * 4];
+            params.push(
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &spec.shape,
+                    bytes,
+                )
+                .map_err(xerr)?,
+            );
+            offset += spec.size;
+        }
+        Ok(params)
+    }
+
+    /// Build the (x, y) token-batch literals.
+    pub fn batch_literals(&self, x: &[i32], y: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+        let (b, s) = (self.entry.config.batch, self.entry.config.seq_len);
+        if x.len() != b * s || y.len() != b * s {
+            bail!("batch must be {b}x{s} tokens, got {} / {}", x.len(), y.len());
+        }
+        let mk = |data: &[i32]| -> Result<xla::Literal> {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &[b, s],
+                bytes,
+            )
+            .map_err(xerr)
+        };
+        Ok((mk(x)?, mk(y)?))
+    }
+
+    fn run_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<&xla::Literal>(args).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        lit.to_tuple().map_err(xerr)
+    }
+
+    /// Fused single-worker step: returns (loss, new params).
+    pub fn train_step(
+        &self,
+        params: &[xla::Literal],
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<(StepOutput, Vec<xla::Literal>)> {
+        let (lx, ly) = self.batch_literals(x, y)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&lx);
+        args.push(&ly);
+        let mut out = self.run_tuple(&self.train_step, &args)?;
+        if out.len() != params.len() + 1 {
+            bail!("train_step returned {} tensors, want {}", out.len(), params.len() + 1);
+        }
+        let loss = out.remove(0).to_vec::<f32>().map_err(xerr)?[0];
+        Ok((StepOutput { loss }, out))
+    }
+
+    /// Distributed-worker half-step: returns (loss, gradients).
+    pub fn grad_step(
+        &self,
+        params: &[xla::Literal],
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<(StepOutput, Vec<xla::Literal>)> {
+        let (lx, ly) = self.batch_literals(x, y)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&lx);
+        args.push(&ly);
+        let mut out = self.run_tuple(&self.grad_step, &args)?;
+        if out.len() != params.len() + 1 {
+            bail!("grad_step returned {} tensors, want {}", out.len(), params.len() + 1);
+        }
+        let loss = out.remove(0).to_vec::<f32>().map_err(xerr)?[0];
+        Ok((StepOutput { loss }, out))
+    }
+
+    /// SGD update from (all-reduced) gradients.
+    pub fn apply_grads(
+        &self,
+        params: &[xla::Literal],
+        grads: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if grads.len() != params.len() {
+            bail!("got {} grads for {} params", grads.len(), params.len());
+        }
+        let args: Vec<&xla::Literal> = params.iter().chain(grads.iter()).collect();
+        let out = self.run_tuple(&self.apply_grads, &args)?;
+        if out.len() != params.len() {
+            bail!("apply_grads returned {} tensors, want {}", out.len(), params.len());
+        }
+        Ok(out)
+    }
+
+    /// Flatten gradient literals into one f32 vector in canonical order —
+    /// the buffer the RAR engine reduces.
+    pub fn flatten_grads(&self, grads: &[xla::Literal]) -> Result<Vec<f32>> {
+        let mut flat = Vec::with_capacity(self.entry.total_params);
+        for g in grads {
+            flat.extend(g.to_vec::<f32>().map_err(xerr)?);
+        }
+        Ok(flat)
+    }
+
+    /// Rebuild gradient literals from a flat f32 vector (post all-reduce).
+    pub fn unflatten_grads(&self, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+        if flat.len() != self.entry.total_params {
+            bail!("flat grads len {} != total params {}", flat.len(), self.entry.total_params);
+        }
+        let mut grads = Vec::with_capacity(self.entry.params.len());
+        let mut offset = 0;
+        for spec in &self.entry.params {
+            let slice = &flat[offset..offset + spec.size];
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(slice.as_ptr() as *const u8, slice.len() * 4)
+            };
+            grads.push(
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &spec.shape,
+                    bytes,
+                )
+                .map_err(xerr)?,
+            );
+            offset += spec.size;
+        }
+        Ok(grads)
+    }
+
+    /// Run the manifest's numeric cross-check: one grad_step + apply on
+    /// the recorded batch must land within `tol` of the python-side loss.
+    pub fn verify(&self, pjrt: &PjRt, tol: f64) -> Result<()> {
+        let params = self.init_params(pjrt)?;
+        let (out, grads) =
+            self.grad_step(&params, &self.entry.check_x, &self.entry.check_y)?;
+        let diff = (out.loss as f64 - self.entry.check_loss_before).abs();
+        if diff > tol {
+            bail!(
+                "loss mismatch: rust {} vs python {} (diff {diff} > tol {tol})",
+                out.loss,
+                self.entry.check_loss_before
+            );
+        }
+        let new_params = self.apply_grads(&params, &grads)?;
+        let (out2, _) =
+            self.grad_step(&new_params, &self.entry.check_x, &self.entry.check_y)?;
+        let diff2 = (out2.loss as f64 - self.entry.check_loss_after).abs();
+        if diff2 > tol {
+            bail!(
+                "post-step loss mismatch: rust {} vs python {} (diff {diff2} > tol {tol})",
+                out2.loss,
+                self.entry.check_loss_after
+            );
+        }
+        Ok(())
+    }
+}

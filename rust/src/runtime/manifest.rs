@@ -1,0 +1,196 @@
+//! Artifact manifest: the contract between `aot.py` and the Rust runtime.
+
+use crate::util::Json;
+use crate::Result;
+use anyhow::Context;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parameter tensor in canonical flat order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// Model hyper-parameters as baked into the artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfigEntry {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+/// One exported model preset.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub config: ModelConfigEntry,
+    pub params: Vec<ParamSpec>,
+    pub total_params: usize,
+    /// entry-point -> relative HLO path (train_step, grad_step, apply_grads)
+    pub artifacts: BTreeMap<String, String>,
+    pub init_file: String,
+    /// Numeric cross-check recorded at export time.
+    pub check_x: Vec<i32>,
+    pub check_y: Vec<i32>,
+    pub check_loss_before: f64,
+    pub check_loss_after: f64,
+}
+
+/// A standalone kernel artifact (runtime benches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEntry {
+    pub file: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+    pub kernels: BTreeMap<String, KernelEntry>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("models") {
+            for (name, entry) in m {
+                models.insert(name.clone(), parse_model(name, entry)?);
+            }
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(Json::Obj(k)) = v.get("kernels") {
+            for (name, entry) in k {
+                kernels.insert(
+                    name.clone(),
+                    KernelEntry {
+                        file: entry.req("file")?.as_str()?.to_string(),
+                        m: entry.req("m")?.as_usize()?,
+                        k: entry.req("k")?.as_usize()?,
+                        n: entry.req("n")?.as_usize()?,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { models, kernels })
+    }
+}
+
+fn parse_model(name: &str, v: &Json) -> Result<ModelEntry> {
+    let cfg = v.req("config")?;
+    let config = ModelConfigEntry {
+        vocab: cfg.req("vocab")?.as_usize()?,
+        d_model: cfg.req("d_model")?.as_usize()?,
+        n_layers: cfg.req("n_layers")?.as_usize()?,
+        n_heads: cfg.req("n_heads")?.as_usize()?,
+        d_ff: cfg.req("d_ff")?.as_usize()?,
+        seq_len: cfg.req("seq_len")?.as_usize()?,
+        batch: cfg.req("batch")?.as_usize()?,
+        lr: cfg.req("lr")?.as_f64()?,
+    };
+    let params = v
+        .req("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.req("name")?.as_str()?.to_string(),
+                shape: p
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                size: p.req("size")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut artifacts = BTreeMap::new();
+    if let Json::Obj(a) = v.req("artifacts")? {
+        for (k, p) in a {
+            artifacts.insert(k.clone(), p.as_str()?.to_string());
+        }
+    }
+    let check = v.req("check")?;
+    let ints = |key: &str| -> Result<Vec<i32>> {
+        check.req(key)?.as_arr()?.iter().map(|x| Ok(x.as_f64()? as i32)).collect()
+    };
+    Ok(ModelEntry {
+        name: name.to_string(),
+        config,
+        params,
+        total_params: v.req("total_params")?.as_usize()?,
+        artifacts,
+        init_file: v.req("init_file")?.as_str()?.to_string(),
+        check_x: ints("x")?,
+        check_y: ints("y")?,
+        check_loss_before: check.req("loss_before")?.as_f64()?,
+        check_loss_after: check.req("loss_after_step")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": {
+        "tiny": {
+          "config": {"vocab":256,"d_model":128,"n_layers":2,"n_heads":4,
+                     "d_ff":512,"seq_len":64,"batch":8,"lr":0.05},
+          "params": [
+            {"name":"tok_emb","shape":[256,128],"size":32768},
+            {"name":"head","shape":[128,256],"size":32768}
+          ],
+          "total_params": 65536,
+          "artifacts": {"train_step":"tiny/train_step.hlo.txt",
+                        "grad_step":"tiny/grad_step.hlo.txt",
+                        "apply_grads":"tiny/apply_grads.hlo.txt"},
+          "init_file": "tiny/params_init.bin",
+          "check": {"x":[1,2],"y":[2,3],"loss_before":5.54,"loss_after_step":5.1}
+        }
+      },
+      "kernels": {"matmul_128": {"file":"kernels/matmul_128.hlo.txt","m":128,"k":128,"n":128}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let tiny = &m.models["tiny"];
+        assert_eq!(tiny.config.d_model, 128);
+        assert_eq!(tiny.params.len(), 2);
+        assert_eq!(tiny.params[0].name, "tok_emb");
+        assert_eq!(tiny.params[0].shape, vec![256, 128]);
+        assert_eq!(tiny.total_params, 65536);
+        assert_eq!(tiny.artifacts["grad_step"], "tiny/grad_step.hlo.txt");
+        assert_eq!(tiny.check_x, vec![1, 2]);
+        assert!(tiny.check_loss_before > tiny.check_loss_after);
+        assert_eq!(m.kernels["matmul_128"].n, 128);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"models": {"x": {}}}"#).is_err());
+        // empty manifest is fine (no models exported)
+        let m = Manifest::parse("{}").unwrap();
+        assert!(m.models.is_empty());
+    }
+}

@@ -1,0 +1,89 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the artifacts directory (HLO text + manifest +
+//! initial parameter blob) is the entire interface between the build-time
+//! compile path and the Rust serving/training path.
+
+mod executor;
+mod manifest;
+
+pub use executor::{ModelRuntime, StepOutput};
+pub use manifest::{KernelEntry, Manifest, ModelConfigEntry, ModelEntry, ParamSpec};
+
+use crate::Result;
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus the artifact root. Compiled executables are created
+/// once per model and cached by the callers ([`ModelRuntime`]).
+pub struct PjRt {
+    client: xla::PjRtClient,
+    root: PathBuf,
+}
+
+impl PjRt {
+    /// CPU PJRT client over an artifacts directory.
+    pub fn cpu(artifacts_root: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(PjRt { client, root: artifacts_root.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile one HLO-text artifact (path relative to the root).
+    pub fn compile_hlo(&self, rel_path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.root.join(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+    }
+
+    /// Load the artifact manifest.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.root).context("loading artifacts manifest")
+    }
+
+    /// Load a model runtime by preset name (compiles all three entry
+    /// points once; reuse the returned runtime across steps).
+    pub fn model(&self, name: &str) -> Result<ModelRuntime> {
+        let manifest = self.manifest()?;
+        let entry = manifest
+            .models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))?;
+        ModelRuntime::load(self, entry.clone())
+    }
+}
+
+/// Convert an `xla::Error` into anyhow.
+pub(crate) fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+/// Locate the repo's default artifacts directory: `$RARSCHED_ARTIFACTS`,
+/// else `./artifacts` relative to the current dir or the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("RARSCHED_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

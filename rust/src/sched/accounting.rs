@@ -1,0 +1,145 @@
+//! Per-GPU execution-time ledger `U_s^g` (paper Alg. 1–3).
+//!
+//! Two quantities are tracked per GPU:
+//!
+//! * `busy` — the paper's `U_s^g`: the sum of `ρ̂_j/u` of jobs committed to
+//!   this GPU. This is the quantity checked against the limit θ_u
+//!   (Alg. 2 Line 2, Alg. 3 Line 5) and what Lemma 2 equates to θ̃_u.
+//! * `free_at` — the earliest slot at which the GPU is available,
+//!   *including* gang-synchronisation idling (a job starts at
+//!   `max free_at` over its gang). Used to compute the planner's estimated
+//!   start/finish times; the gap between `free_at` and `busy` is exactly
+//!   the idle time bounded by Lemma 3.
+
+use crate::cluster::{Cluster, GpuId};
+
+/// GPU ledger for one planning pass.
+#[derive(Debug, Clone)]
+pub struct GpuLedger {
+    busy: Vec<f64>,
+    free_at: Vec<f64>,
+}
+
+impl GpuLedger {
+    pub fn new(cluster: &Cluster) -> Self {
+        let n = cluster.num_gpus();
+        GpuLedger { busy: vec![0.0; n], free_at: vec![0.0; n] }
+    }
+
+    /// `U_s^g` for a GPU.
+    pub fn busy(&self, g: GpuId) -> f64 {
+        self.busy[g.global]
+    }
+
+    /// Earliest availability (with gang idle).
+    pub fn free_at(&self, g: GpuId) -> f64 {
+        self.free_at[g.global]
+    }
+
+    /// Eligibility check of Alg. 2 Line 2 / Alg. 3 Line 5:
+    /// `U_s^g + ρ̂/u ≤ θ_u`.
+    pub fn eligible(&self, g: GpuId, rho_over_u: f64, theta: f64) -> bool {
+        self.busy[g.global] + rho_over_u <= theta + 1e-9
+    }
+
+    /// Mean `U` over a server's GPUs — the LBSGF server key
+    /// `Σ_g U_s^g / O_s` (Alg. 3 Line 2).
+    pub fn server_load(&self, cluster: &Cluster, s: crate::cluster::ServerId) -> f64 {
+        let cap = cluster.capacity(s) as f64;
+        cluster.gpus_of(s).map(|g| self.busy[g.global]).sum::<f64>() / cap
+    }
+
+    /// Number of GPUs on a server that have ever been assigned work —
+    /// used as the fragmentation-awareness tie-break (prefer already-warm
+    /// servers when packing small jobs).
+    pub fn server_occupancy(&self, cluster: &Cluster, s: crate::cluster::ServerId) -> usize {
+        cluster.gpus_of(s).filter(|g| self.busy[g.global] > 0.0).count()
+    }
+
+    /// Commit a gang to a set of GPUs: the job starts at
+    /// `max_g free_at(g)` and runs for `rho_over_u` estimated slots.
+    /// Returns (est_start, est_finish).
+    pub fn commit(&mut self, gpus: &[GpuId], rho_over_u: f64) -> (f64, f64) {
+        let start = gpus.iter().map(|g| self.free_at[g.global]).fold(0.0, f64::max);
+        let finish = start + rho_over_u;
+        for g in gpus {
+            self.busy[g.global] += rho_over_u;
+            self.free_at[g.global] = finish;
+        }
+        (start, finish)
+    }
+
+    /// Max `U_s^g` over all GPUs — `Ŵ_max` of Lemma 2.
+    pub fn max_busy(&self) -> f64 {
+        self.busy.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Max `free_at` over all GPUs — the planner's estimated makespan
+    /// including gang idle.
+    pub fn max_free_at(&self) -> f64 {
+        self.free_at.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerId;
+
+    #[test]
+    fn commit_updates_busy_and_free() {
+        let c = Cluster::uniform(2, 2, 1.0, 25.0);
+        let mut led = GpuLedger::new(&c);
+        let g0 = c.global_gpu(ServerId(0), 0);
+        let g1 = c.global_gpu(ServerId(0), 1);
+        let (s, f) = led.commit(&[g0, g1], 10.0);
+        assert_eq!((s, f), (0.0, 10.0));
+        assert_eq!(led.busy(g0), 10.0);
+        assert_eq!(led.free_at(g1), 10.0);
+
+        // second job only on g1 starts when g1 frees
+        let (s2, f2) = led.commit(&[g1], 5.0);
+        assert_eq!((s2, f2), (10.0, 15.0));
+        assert_eq!(led.busy(g1), 15.0);
+
+        // gang across g0 (free at 10) and a fresh gpu: idles the fresh one
+        let g2 = c.global_gpu(ServerId(1), 0);
+        let (s3, _) = led.commit(&[g0, g2], 3.0);
+        assert_eq!(s3, 10.0);
+        assert_eq!(led.busy(g2), 3.0, "busy excludes gang idle (paper U)");
+        assert_eq!(led.free_at(g2), 13.0, "free_at includes gang idle");
+    }
+
+    #[test]
+    fn eligibility_is_against_busy_not_free_at() {
+        let c = Cluster::uniform(1, 2, 1.0, 25.0);
+        let mut led = GpuLedger::new(&c);
+        let g0 = c.global_gpu(ServerId(0), 0);
+        let g1 = c.global_gpu(ServerId(0), 1);
+        led.commit(&[g0], 8.0);
+        led.commit(&[g0, g1], 2.0); // g1 busy=2, free_at=10
+        assert!(led.eligible(g1, 5.0, 7.0), "busy 2 + 5 <= 7");
+        assert!(!led.eligible(g0, 5.0, 7.0), "busy 8 + 5 > 7");
+    }
+
+    #[test]
+    fn server_load_averages() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut led = GpuLedger::new(&c);
+        led.commit(&[c.global_gpu(ServerId(0), 0)], 8.0);
+        assert!((led.server_load(&c, ServerId(0)) - 2.0).abs() < 1e-12);
+        assert_eq!(led.server_load(&c, ServerId(1)), 0.0);
+        assert_eq!(led.server_occupancy(&c, ServerId(0)), 1);
+    }
+
+    #[test]
+    fn max_trackers() {
+        let c = Cluster::uniform(1, 2, 1.0, 25.0);
+        let mut led = GpuLedger::new(&c);
+        assert_eq!(led.max_busy(), 0.0);
+        led.commit(&[c.global_gpu(ServerId(0), 0)], 4.0);
+        led.commit(&[c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(0), 1)], 2.0);
+        assert_eq!(led.max_busy(), 6.0);
+        assert_eq!(led.max_free_at(), 6.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Execution-time estimation ρ̂_j(y^k) and its l/u bounds (paper §5.3).
+//!
+//! The exact processing time ρ_j(y^k) is intractable at planning time
+//! because it depends on which jobs *later* end up co-running (Eq. 6). The
+//! paper instead works with an estimate bounded as
+//! `ρ̂_j(y^k) ∈ [l·ρ_j(y^k), u·ρ_j(y^k)]` and schedules with the
+//! conservative `ρ̂_j(y^k)/u ≤ ρ_j(y^k)`.
+//!
+//! We realise this concretely from the τ bounds of §5.1:
+//!
+//! * `τ_lo` — fully co-located, contention-free (the best case);
+//! * `τ_hi` — span `G_j`, worst-case contention `p = max_s O_s`;
+//! * `τ̂ = sqrt(τ_lo · τ_hi)` — geometric midpoint, our ρ̂ basis.
+//!
+//! With ρ̂ = F_j·τ̂, u = τ̂/τ_lo and l = τ̂/τ_hi, so that
+//! `ρ̂/u = F_j·τ_lo` is a *guaranteed* lower bound on any realised
+//! execution time and `u/l = τ_hi/τ_lo` is the ratio entering the
+//! approximation factor of Theorem 5.
+
+use crate::cluster::Cluster;
+use crate::contention::ContentionParams;
+use crate::jobs::JobSpec;
+
+/// Per-job execution-time estimates used by all planners.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RhoEstimate {
+    /// `ρ̂_j` — the nominal estimate (slots).
+    pub rho_hat: f64,
+    /// `ρ̂_j / u = F_j · τ_lo` — conservative lower bound (slots). This is
+    /// the quantity added to GPU ledgers `U_s^g` in Algorithms 1–3.
+    pub rho_lower: f64,
+    /// `F_j · τ_hi` — worst-case execution time (slots).
+    pub rho_upper: f64,
+}
+
+impl RhoEstimate {
+    /// `u = ρ̂ / (ρ̂/u)` — the over-estimation factor.
+    pub fn u(&self) -> f64 {
+        self.rho_hat / self.rho_lower
+    }
+
+    /// `l` such that `l·ρ_upper = ρ̂`.
+    pub fn l(&self) -> f64 {
+        self.rho_hat / self.rho_upper
+    }
+}
+
+/// Estimator bound to one cluster + parameter set.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimator<'a> {
+    pub cluster: &'a Cluster,
+    pub params: &'a ContentionParams,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(cluster: &'a Cluster, params: &'a ContentionParams) -> Self {
+        Estimator { cluster, params }
+    }
+
+    /// Estimate ρ̂ and its bounds for one job (placement-independent, as in
+    /// the paper's §7 where ρ̂ is drawn per job from the τ·F product).
+    pub fn rho(&self, job: &JobSpec) -> RhoEstimate {
+        let (tau_lo, tau_hi) = self.params.tau_bounds(self.cluster, job);
+        debug_assert!(tau_lo > 0.0 && tau_hi >= tau_lo);
+        let tau_mid = (tau_lo * tau_hi).sqrt();
+        let f = job.iterations as f64;
+        RhoEstimate { rho_hat: f * tau_mid, rho_lower: f * tau_lo, rho_upper: f * tau_hi }
+    }
+
+    /// The worst-case estimate ratio `φ·u/l` of Lemma 4 / Theorem 5 for a
+    /// job set: `max_j ρ_upper/ρ_lower` (since our ρ̂ construction makes
+    /// `φ·u/l = max_j τ_hi/τ_lo`).
+    pub fn worst_ratio(&self, jobs: &[JobSpec]) -> f64 {
+        jobs.iter()
+            .map(|j| {
+                let r = self.rho(j);
+                r.rho_upper / r.rho_lower
+            })
+            .fold(1.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::JobId;
+
+    fn setup() -> (Cluster, ContentionParams) {
+        (Cluster::uniform(4, 8, 1.0, 25.0), ContentionParams::paper())
+    }
+
+    #[test]
+    fn bounds_ordering() {
+        let (c, p) = setup();
+        let est = Estimator::new(&c, &p);
+        for gpus in [1, 2, 4, 8, 16] {
+            let job = JobSpec::synthetic(JobId(0), gpus);
+            let r = est.rho(&job);
+            assert!(r.rho_lower <= r.rho_hat && r.rho_hat <= r.rho_upper);
+            assert!(r.u() >= 1.0);
+            assert!(r.l() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn single_gpu_job_has_tight_bounds() {
+        let (c, p) = setup();
+        let est = Estimator::new(&c, &p);
+        let job = JobSpec::synthetic(JobId(0), 1);
+        let r = est.rho(&job);
+        // no comm, no overhead: lower == upper
+        assert!((r.rho_upper - r.rho_lower).abs() < 1e-9);
+        assert!((r.u() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rho_scales_with_iterations() {
+        let (c, p) = setup();
+        let est = Estimator::new(&c, &p);
+        let mut a = JobSpec::synthetic(JobId(0), 4);
+        a.iterations = 1000;
+        let mut b = a.clone();
+        b.iterations = 2000;
+        let ra = est.rho(&a);
+        let rb = est.rho(&b);
+        assert!((rb.rho_hat / ra.rho_hat - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worst_ratio_at_least_one() {
+        let (c, p) = setup();
+        let est = Estimator::new(&c, &p);
+        let jobs: Vec<_> = (0..5).map(|i| JobSpec::synthetic(JobId(i), 1 + i)).collect();
+        assert!(est.worst_ratio(&jobs) >= 1.0);
+    }
+}

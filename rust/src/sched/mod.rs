@@ -1,0 +1,118 @@
+//! Scheduling policies: the paper's SJF-BCO (Alg. 1–3) and the §7
+//! baselines, all producing a [`Plan`] that the simulator or the live
+//! coordinator executes.
+
+mod accounting;
+mod baselines;
+mod estimator;
+mod plan;
+mod sjf_bco;
+
+pub use accounting::GpuLedger;
+pub use baselines::{first_fit, gadget_locality, list_scheduling, random_policy};
+pub use estimator::{Estimator, RhoEstimate};
+pub use plan::{Plan, PlannedJob};
+pub use sjf_bco::{sjf_bco, SjfBcoConfig};
+
+use crate::cluster::Cluster;
+use crate::contention::ContentionParams;
+use crate::jobs::JobSpec;
+use crate::Result;
+
+/// The scheduling policies available from the CLI / benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Paper contribution: smallest-job-first with balanced contention and
+    /// overhead (Alg. 1).
+    SjfBco,
+    /// First-Fit [17].
+    FirstFit,
+    /// List-Scheduling (least-loaded GPUs first) [17].
+    ListScheduling,
+    /// Random placement [19].
+    Random,
+    /// GADGET-style locality-first packing (reserved-bandwidth assumption,
+    /// contention-blind) [22].
+    Gadget,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 5] =
+        [Policy::SjfBco, Policy::FirstFit, Policy::ListScheduling, Policy::Random, Policy::Gadget];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::SjfBco => "SJF-BCO",
+            Policy::FirstFit => "FF",
+            Policy::ListScheduling => "LS",
+            Policy::Random => "RAND",
+            Policy::Gadget => "GADGET",
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sjf-bco" | "sjfbco" | "sjf_bco" => Ok(Policy::SjfBco),
+            "ff" | "first-fit" | "firstfit" | "first_fit" => Ok(Policy::FirstFit),
+            "ls" | "list-scheduling" | "list" => Ok(Policy::ListScheduling),
+            "rand" | "random" => Ok(Policy::Random),
+            "gadget" => Ok(Policy::Gadget),
+            other => anyhow::bail!(
+                "unknown policy '{other}' (expected sjf-bco|ff|ls|rand|gadget)"
+            ),
+        }
+    }
+}
+
+/// Schedule `jobs` on `cluster` under `policy` with default tunables.
+/// `horizon` is the scheduling horizon `T` in slots.
+pub fn schedule(
+    policy: Policy,
+    cluster: &Cluster,
+    jobs: &[JobSpec],
+    params: &ContentionParams,
+    horizon: u64,
+) -> Result<Plan> {
+    match policy {
+        Policy::SjfBco => sjf_bco(cluster, jobs, params, horizon, SjfBcoConfig::default()),
+        Policy::FirstFit => first_fit(cluster, jobs, params, horizon),
+        Policy::ListScheduling => list_scheduling(cluster, jobs, params, horizon),
+        Policy::Random => random_policy(cluster, jobs, params, horizon, 0x5eed),
+        Policy::Gadget => gadget_locality(cluster, jobs, params, horizon),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceGenerator;
+
+    #[test]
+    fn dispatcher_covers_all_policies() {
+        let cluster = Cluster::uniform(4, 8, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let jobs = TraceGenerator::tiny().generate(0);
+        for policy in Policy::ALL {
+            let plan = schedule(policy, &cluster, &jobs, &params, 100_000).unwrap();
+            assert_eq!(plan.entries.len(), jobs.len(), "{policy}");
+        }
+    }
+
+    #[test]
+    fn policy_names_unique() {
+        let mut names: Vec<_> = Policy::ALL.iter().map(|p| p.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), Policy::ALL.len());
+    }
+}

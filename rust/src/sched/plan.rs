@@ -1,0 +1,84 @@
+//! Schedule plans: the output of every scheduling policy.
+
+use crate::cluster::JobPlacement;
+use crate::jobs::JobId;
+
+/// One job's entry in a plan: its placement (`y_j`, fixed over the job's
+/// lifetime under gang scheduling) and the planner's *estimates* of start
+/// and finish (in slots) from per-GPU execution-time accounting `U_s^g`.
+#[derive(Debug, Clone)]
+pub struct PlannedJob {
+    pub job: JobId,
+    pub placement: JobPlacement,
+    /// Estimated start slot `a_j(y^k)` under the ρ̂/u accounting.
+    pub est_start: f64,
+    /// Estimated completion slot `T_j` under the ρ̂/u accounting.
+    pub est_finish: f64,
+}
+
+/// A full schedule for a job set: entries in *dispatch order* — the order
+/// in which the planner committed jobs to GPUs. The simulator replays this
+/// order: a job starts once all GPUs of its placement are free, with
+/// earlier entries winning contested GPUs.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub policy: String,
+    /// The execution-time limit θ̃_u selected by bisection (SJF-BCO only).
+    pub theta: Option<f64>,
+    /// The server-span threshold κ selected (SJF-BCO only).
+    pub kappa: Option<usize>,
+    pub entries: Vec<PlannedJob>,
+}
+
+impl Plan {
+    pub fn new(policy: impl Into<String>, entries: Vec<PlannedJob>) -> Self {
+        Plan { policy: policy.into(), theta: None, kappa: None, entries }
+    }
+
+    /// Planner-estimated makespan: `max_j (a_j + ρ̂_j)`.
+    pub fn est_makespan(&self) -> f64 {
+        self.entries.iter().map(|e| e.est_finish).fold(0.0, f64::max)
+    }
+
+    /// Entry for a given job, if scheduled.
+    pub fn entry(&self, job: JobId) -> Option<&PlannedJob> {
+        self.entries.iter().find(|e| e.job == job)
+    }
+
+    /// Maximum server span over all placements.
+    pub fn max_span(&self) -> usize {
+        self.entries.iter().map(|e| e.placement.span()).max().unwrap_or(0)
+    }
+
+    /// Number of jobs whose placements are spread across servers.
+    pub fn num_spread(&self) -> usize {
+        self.entries.iter().filter(|e| e.placement.is_spread()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ServerId};
+
+    #[test]
+    fn plan_aggregates() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let colo =
+            JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(0), 1)]);
+        let spread =
+            JobPlacement::new(vec![c.global_gpu(ServerId(0), 2), c.global_gpu(ServerId(1), 0)]);
+        let plan = Plan::new(
+            "test",
+            vec![
+                PlannedJob { job: JobId(0), placement: colo, est_start: 0.0, est_finish: 10.0 },
+                PlannedJob { job: JobId(1), placement: spread, est_start: 0.0, est_finish: 25.0 },
+            ],
+        );
+        assert_eq!(plan.est_makespan(), 25.0);
+        assert_eq!(plan.max_span(), 2);
+        assert_eq!(plan.num_spread(), 1);
+        assert!(plan.entry(JobId(1)).is_some());
+        assert!(plan.entry(JobId(7)).is_none());
+    }
+}

@@ -1,0 +1,402 @@
+//! SJF-BCO — Smallest Job First with Balanced Contention and Overhead
+//! (paper Algorithm 1), with its two placement subroutines:
+//!
+//! * **FA-FFP** (Algorithm 2, "fragment-aware first-fit packing") for small
+//!   jobs (`G_j ≤ κ`): pick the `G_j` eligible GPUs with least accumulated
+//!   execution time `U_s^g`, tie-breaking towards servers that already host
+//!   work (packing — avoids fragmenting fresh servers with small jobs).
+//! * **LBSGF** (Algorithm 3, "least busy server-GPU first") for large jobs
+//!   (`G_j > κ`): restrict attention to the `m` least-loaded servers whose
+//!   joint capacity covers `λ_j · G_j`, then take the least-busy eligible
+//!   GPUs inside them (opens fresh servers — bounds contention + overhead
+//!   for big rings).
+//!
+//! Algorithm 1 wraps both in a bisection search for the tightest per-GPU
+//! execution-time limit θ_u (Problem 14) crossed with a sweep over the
+//! size threshold κ, and returns the (θ, κ) plan with the smallest
+//! estimated makespan.
+
+use super::accounting::GpuLedger;
+use super::estimator::Estimator;
+use super::{Plan, PlannedJob};
+use crate::cluster::{Cluster, GpuId, JobPlacement};
+use crate::contention::ContentionParams;
+use crate::jobs::{sort_smallest_first, JobSpec};
+use crate::Result;
+use anyhow::bail;
+
+/// Tunables of Algorithm 1.
+#[derive(Debug, Clone, Copy)]
+pub struct SjfBcoConfig {
+    /// Fixed κ (server-span threshold). `None` sweeps κ as in Alg. 1
+    /// Line 7. The sweep visits the *distinct job sizes* (plus 1 and n_g):
+    /// the branch `G_j ≤ κ` only changes at those values, so intermediate
+    /// κ are redundant (perf: 6 values instead of 32 on the paper mix).
+    pub kappa: Option<usize>,
+    /// λ_j ≥ 1 (Alg. 3): server over-provisioning factor; larger λ lets
+    /// LBSGF draw from more servers (less contention, more overhead).
+    pub lambda: f64,
+}
+
+impl Default for SjfBcoConfig {
+    fn default() -> Self {
+        SjfBcoConfig { kappa: None, lambda: 1.0 }
+    }
+}
+
+/// Run SJF-BCO (Algorithm 1) and return the best plan found.
+pub fn sjf_bco(
+    cluster: &Cluster,
+    jobs: &[JobSpec],
+    params: &ContentionParams,
+    horizon: u64,
+    config: SjfBcoConfig,
+) -> Result<Plan> {
+    if jobs.is_empty() {
+        return Ok(Plan::new("sjf-bco", Vec::new()));
+    }
+    if config.lambda < 1.0 {
+        bail!("lambda must be >= 1 (Alg. 3)");
+    }
+    for j in jobs {
+        if let Err(e) = j.validate() {
+            bail!("invalid job: {e}");
+        }
+        if j.gpus > cluster.num_gpus() {
+            bail!("{} requests {} GPUs but the cluster only has {}", j.id, j.gpus, cluster.num_gpus());
+        }
+    }
+
+    // Alg. 1 Line 3: sort jobs by G_j non-decreasing.
+    let mut sorted: Vec<JobSpec> = jobs.to_vec();
+    sort_smallest_first(&mut sorted);
+    let est = Estimator::new(cluster, params);
+
+    let kappas: Vec<usize> = match config.kappa {
+        Some(k) => vec![k],
+        None => {
+            // distinct job sizes; always include 1 and n_g endpoints
+            let mut ks: Vec<usize> = sorted.iter().map(|j| j.gpus).collect();
+            ks.push(1);
+            ks.sort_unstable();
+            ks.dedup();
+            ks
+        }
+    };
+
+    // Alg. 1 Lines 4–23: bisection on θ_u over [1, T].
+    //
+    // Candidate (θ, κ) schedules are scored by *evaluating* them through
+    // the analytical model (Eq. 6–9) — the paper's Fig. 3 framework:
+    // "search a schedule, then τ_j[t] can be efficiently evaluated to
+    // estimate the makespan" — rather than by the placement-blind ρ̂
+    // ledger estimate alone.
+    let evaluate = |plan: &Plan| -> f64 {
+        crate::sim::Simulator::new(cluster, jobs, params).run(plan).makespan as f64
+    };
+    let (mut left, mut right) = (1u64, horizon);
+    let mut best: Option<(f64, Plan)> = None; // (evaluated makespan, plan)
+    while left <= right {
+        let theta = (left + right) / 2;
+        // inner κ sweep (Lines 7–18)
+        let mut best_for_theta: Option<(f64, Plan)> = None;
+        for &kappa in &kappas {
+            if let Some((_ledger_makespan, entries)) =
+                try_schedule(cluster, &sorted, &est, theta as f64, kappa, config.lambda)
+            {
+                let mut plan = Plan::new("sjf-bco", entries);
+                plan.theta = Some(theta as f64);
+                plan.kappa = Some(kappa);
+                let makespan = evaluate(&plan);
+                let better = best_for_theta.as_ref().map_or(true, |(m, _)| makespan < *m);
+                if better {
+                    best_for_theta = Some((makespan, plan));
+                }
+            }
+        }
+        match best_for_theta {
+            // Found a feasible schedule at this θ whose makespan fits the
+            // horizon: record if globally better, then tighten θ (Line 21).
+            // Ties update too: the bisection walks θ downward, so on equal
+            // makespans the *tightest* feasible θ̃_u wins (Lemma 2).
+            Some((makespan, plan)) if makespan < horizon as f64 => {
+                if best.as_ref().map_or(true, |(m, _)| makespan <= *m) {
+                    best = Some((makespan, plan));
+                }
+                right = theta - 1;
+            }
+            // Infeasible (or exceeds horizon): relax θ (Line 23).
+            _ => left = theta + 1,
+        }
+    }
+
+    match best {
+        Some((_, plan)) => Ok(plan),
+        None => bail!(
+            "SJF-BCO found no feasible schedule within horizon T={horizon} \
+             (total demand exceeds cluster-time capacity?)"
+        ),
+    }
+}
+
+/// One (θ, κ) attempt: schedule every job, smallest first. Returns the
+/// estimated makespan and the plan entries, or `None` if some job cannot
+/// be placed under the θ limit (Alg. 1 Lines 14–15).
+fn try_schedule(
+    cluster: &Cluster,
+    sorted: &[JobSpec],
+    est: &Estimator<'_>,
+    theta: f64,
+    kappa: usize,
+    lambda: f64,
+) -> Option<(f64, Vec<PlannedJob>)> {
+    let mut ledger = GpuLedger::new(cluster);
+    let mut entries = Vec::with_capacity(sorted.len());
+    let mut makespan = 0.0f64;
+    for job in sorted {
+        let rho = est.rho(job);
+        let gpus = if job.gpus <= kappa {
+            fa_ffp(cluster, &ledger, job, rho.rho_lower, theta)
+        } else {
+            lbsgf(cluster, &ledger, job, rho.rho_lower, theta, lambda)
+        }?;
+        let (start, finish) = ledger.commit(&gpus, rho.rho_lower);
+        makespan = makespan.max(finish);
+        entries.push(PlannedJob {
+            job: job.id,
+            placement: JobPlacement::new(gpus),
+            est_start: start,
+            est_finish: finish,
+        });
+    }
+    Some((makespan, entries))
+}
+
+/// Algorithm 2 — Fragment-Aware First-Fit Packing.
+///
+/// Eligible = GPUs with `U + ρ̂/u ≤ θ`. Picks the `G_j` least-busy
+/// eligible GPUs (Line 4), tie-breaking towards servers that already host
+/// load (the "fragment-aware" packing bias), then by (server, index) for
+/// determinism.
+pub(crate) fn fa_ffp(
+    cluster: &Cluster,
+    ledger: &GpuLedger,
+    job: &JobSpec,
+    rho_over_u: f64,
+    theta: f64,
+) -> Option<Vec<GpuId>> {
+    let mut eligible: Vec<GpuId> =
+        cluster.all_gpus().filter(|g| ledger.eligible(*g, rho_over_u, theta)).collect();
+    if eligible.len() < job.gpus {
+        return None; // Alg. 2 Lines 8–10: no capacity under θ
+    }
+    // occupancy per server (computed once per call)
+    let occ: Vec<usize> =
+        cluster.server_ids().map(|s| ledger.server_occupancy(cluster, s)).collect();
+    let cmp = |a: &GpuId, b: &GpuId| {
+        ledger
+            .busy(*a)
+            .partial_cmp(&ledger.busy(*b))
+            .unwrap()
+            .then(occ[b.server.0].cmp(&occ[a.server.0])) // prefer warm servers
+            .then(a.server.cmp(&b.server))
+            .then(a.index.cmp(&b.index))
+    };
+    // §Perf: selection instead of a full sort — only the top-G_j least
+    // loaded GPUs matter, and placements are order-insensitive.
+    if eligible.len() > job.gpus {
+        eligible.select_nth_unstable_by(job.gpus - 1, cmp);
+        eligible.truncate(job.gpus);
+    }
+    Some(eligible)
+}
+
+/// Algorithm 3 — Least Busy Server-GPU First.
+///
+/// Sort servers by average load `Σ_g U_s^g / O_s`, take the `m` least
+/// loaded whose capacities sum to `≥ λ_j G_j` (Line 2), then pick the
+/// `G_j` least-busy eligible GPUs within them (Lines 4–7).
+pub(crate) fn lbsgf(
+    cluster: &Cluster,
+    ledger: &GpuLedger,
+    job: &JobSpec,
+    rho_over_u: f64,
+    theta: f64,
+    lambda: f64,
+) -> Option<Vec<GpuId>> {
+    let mut servers: Vec<_> = cluster.server_ids().collect();
+    servers.sort_by(|a, b| {
+        ledger
+            .server_load(cluster, *a)
+            .partial_cmp(&ledger.server_load(cluster, *b))
+            .unwrap()
+            .then(a.cmp(b))
+    });
+    let need = (lambda * job.gpus as f64).ceil() as usize;
+    let mut selected = Vec::new();
+    let mut cap = 0usize;
+    for s in servers {
+        selected.push(s);
+        cap += cluster.capacity(s);
+        if cap >= need {
+            break;
+        }
+    }
+    // (if λ G_j exceeds total capacity, all servers are selected)
+    //
+    // Alg. 3 Lines 4–5: within each selected server (already in
+    // least-loaded order) sort GPUs by U non-decreasing, then *append* —
+    // the candidate list is server-major: all of the quietest server's
+    // eligible GPUs come first. "Pick top-G_j workers" then fills whole
+    // quiet servers before touching busier ones, which keeps the ring
+    // span small AND lands it on low-contention servers. This is the λ
+    // mechanism of Fig. 7: a larger λ widens the candidate pool, so a
+    // tight θ_u stays feasible (fresh servers can be opened) and the
+    // bisection settles at a smaller execution-time limit.
+    let mut eligible: Vec<GpuId> = Vec::new();
+    for s in &selected {
+        let mut gs: Vec<GpuId> = cluster
+            .gpus_of(*s)
+            .filter(|g| ledger.eligible(*g, rho_over_u, theta))
+            .collect();
+        gs.sort_by(|a, b| {
+            ledger.busy(*a).partial_cmp(&ledger.busy(*b)).unwrap().then(a.index.cmp(&b.index))
+        });
+        eligible.extend(gs);
+    }
+    if eligible.len() < job.gpus {
+        return None; // Alg. 3 Lines 11–13
+    }
+    Some(eligible[..job.gpus].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceGenerator;
+
+    fn setup() -> (Cluster, ContentionParams) {
+        (Cluster::uniform(4, 8, 1.0, 25.0), ContentionParams::paper())
+    }
+
+    #[test]
+    fn empty_jobset_gives_empty_plan() {
+        let (c, p) = setup();
+        let plan = sjf_bco(&c, &[], &p, 100, SjfBcoConfig::default()).unwrap();
+        assert!(plan.entries.is_empty());
+    }
+
+    #[test]
+    fn schedules_every_job_exactly_once() {
+        let (c, p) = setup();
+        let jobs = TraceGenerator::tiny().generate(1);
+        let plan = sjf_bco(&c, &jobs, &p, 100_000, SjfBcoConfig::default()).unwrap();
+        assert_eq!(plan.entries.len(), jobs.len());
+        let mut seen: Vec<_> = plan.entries.iter().map(|e| e.job).collect();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), jobs.len());
+        // gang scheduling: every placement has exactly G_j GPUs
+        for e in &plan.entries {
+            let spec = jobs.iter().find(|j| j.id == e.job).unwrap();
+            assert_eq!(e.placement.num_workers(), spec.gpus);
+        }
+        assert!(plan.theta.is_some());
+        assert!(plan.kappa.is_some());
+    }
+
+    #[test]
+    fn dispatch_order_is_smallest_first() {
+        let (c, p) = setup();
+        let jobs = TraceGenerator::tiny().generate(2);
+        let plan = sjf_bco(&c, &jobs, &p, 100_000, SjfBcoConfig::default()).unwrap();
+        let sizes: Vec<_> = plan.entries.iter().map(|e| e.placement.num_workers()).collect();
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable();
+        assert_eq!(sizes, sorted);
+    }
+
+    #[test]
+    fn respects_theta_limit() {
+        // Lemma 2: max busy time equals the tightest θ̃_u the bisection
+        // settles on — in particular no GPU exceeds it.
+        let (c, p) = setup();
+        let jobs = TraceGenerator::tiny().generate(3);
+        let plan = sjf_bco(&c, &jobs, &p, 100_000, SjfBcoConfig::default()).unwrap();
+        let theta = plan.theta.unwrap();
+        // replay the ledger
+        let est = Estimator::new(&c, &p);
+        let mut ledger = GpuLedger::new(&c);
+        for e in &plan.entries {
+            let spec = jobs.iter().find(|j| j.id == e.job).unwrap();
+            ledger.commit(e.placement.gpus(), est.rho(spec).rho_lower);
+        }
+        assert!(ledger.max_busy() <= theta + 1e-6);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected() {
+        let (c, p) = setup();
+        let job = JobSpec::synthetic(crate::jobs::JobId(0), 1000);
+        assert!(sjf_bco(&c, &[job], &p, 1000, SjfBcoConfig::default()).is_err());
+    }
+
+    #[test]
+    fn fixed_kappa_one_forces_lbsgf_for_multigpu() {
+        let (c, p) = setup();
+        let jobs = TraceGenerator::tiny().generate(4);
+        let cfg = SjfBcoConfig { kappa: Some(1), lambda: 1.0 };
+        let plan = sjf_bco(&c, &jobs, &p, 100_000, cfg).unwrap();
+        assert_eq!(plan.kappa, Some(1));
+        assert_eq!(plan.entries.len(), jobs.len());
+    }
+
+    #[test]
+    fn lambda_below_one_rejected() {
+        let (c, p) = setup();
+        let cfg = SjfBcoConfig { kappa: None, lambda: 0.5 };
+        assert!(sjf_bco(&c, &TraceGenerator::tiny().generate(0), &p, 1000, cfg).is_err());
+    }
+
+    #[test]
+    fn fa_ffp_packs_warm_servers_on_ties() {
+        let (c, p) = setup();
+        let est = Estimator::new(&c, &p);
+        let mut ledger = GpuLedger::new(&c);
+        // warm up server 2 with a tiny committed job
+        let warm = c.global_gpu(crate::cluster::ServerId(2), 0);
+        ledger.commit(&[warm], 1e-6);
+        let job = JobSpec::synthetic(crate::jobs::JobId(1), 2);
+        let rho = est.rho(&job);
+        let gpus = fa_ffp(&c, &ledger, &job, rho.rho_lower, 1e9).unwrap();
+        // all fresh GPUs tie at busy=0; tie-break prefers warm server 2
+        assert!(gpus.iter().all(|g| g.server.0 == 2), "picked {gpus:?}");
+    }
+
+    #[test]
+    fn lbsgf_limits_server_span_via_lambda() {
+        let (c, p) = setup();
+        let est = Estimator::new(&c, &p);
+        let ledger = GpuLedger::new(&c);
+        let job = JobSpec::synthetic(crate::jobs::JobId(0), 8);
+        let rho = est.rho(&job);
+        // λ = 1: 8 GPUs fit on one 8-GPU server → span 1
+        let gpus = lbsgf(&c, &ledger, &job, rho.rho_lower, 1e9, 1.0).unwrap();
+        let placement = JobPlacement::new(gpus);
+        assert_eq!(placement.span(), 1);
+    }
+
+    #[test]
+    fn bisection_tightens_theta() {
+        // A generous horizon should not inflate θ: the returned θ must be
+        // near the minimal feasible limit, not near T.
+        let (c, p) = setup();
+        let jobs = TraceGenerator::tiny().generate(5);
+        let plan_a = sjf_bco(&c, &jobs, &p, 50_000, SjfBcoConfig::default()).unwrap();
+        let plan_b = sjf_bco(&c, &jobs, &p, 500_000, SjfBcoConfig::default()).unwrap();
+        let (ta, tb) = (plan_a.theta.unwrap(), plan_b.theta.unwrap());
+        // bisection granularity differs, but both should land well below T
+        assert!(ta < 25_000.0, "theta {ta} not tightened");
+        assert!(tb < 25_000.0, "theta {tb} not tightened");
+    }
+}

@@ -1,0 +1,251 @@
+//! The time-slotted simulation engine.
+
+use super::{JobRecord, SimOutcome};
+use crate::cluster::{Cluster, ClusterState, JobPlacement};
+use crate::contention::{ContentionParams, ContentionSnapshot};
+use crate::jobs::{JobId, JobSpec};
+use crate::sched::Plan;
+use std::collections::HashMap;
+
+/// Engine options.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Safety horizon: stop after this many slots even if jobs remain
+    /// (guards against mis-calibrated τ ≥ 1 where `φ = ⌊1/τ⌋ = 0`).
+    pub max_slots: u64,
+    /// When `φ_j[t]` floors to zero, fall back to fractional progress
+    /// `1/τ` instead of stalling forever. Off by default (paper-faithful).
+    pub fractional_progress: bool,
+    /// Event-driven fast path (§Perf): between admissions/completions the
+    /// active set — and therefore every `p_j`, `τ_j`, `φ_j` — is constant,
+    /// so the engine jumps straight to the next event instead of ticking
+    /// slot by slot. Produces *identical* results to the slot-by-slot
+    /// reference (asserted by `fast_path_matches_reference`); disable only
+    /// for cross-checking.
+    pub event_driven: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { max_slots: 1_000_000, fractional_progress: false, event_driven: true }
+    }
+}
+
+/// Replays a [`Plan`] against the analytical model, slot by slot.
+pub struct Simulator<'a> {
+    cluster: &'a Cluster,
+    specs: HashMap<JobId, &'a JobSpec>,
+    params: &'a ContentionParams,
+    options: SimOptions,
+}
+
+struct ActiveJob<'a, 'p> {
+    job: JobId,
+    spec: &'a JobSpec,
+    placement: &'p JobPlacement,
+    start: u64,
+    progress: f64,
+    tau_sum: f64,
+    tau_slots: u64,
+    max_p: usize,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cluster: &'a Cluster, jobs: &'a [JobSpec], params: &'a ContentionParams) -> Self {
+        Simulator {
+            cluster,
+            specs: jobs.iter().map(|j| (j.id, j)).collect(),
+            params,
+            options: SimOptions::default(),
+        }
+    }
+
+    pub fn with_options(mut self, options: SimOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Run the plan to completion (or the safety horizon) and report the
+    /// realized makespan / JCTs under live contention.
+    pub fn run<'p>(&self, plan: &'p Plan) -> SimOutcome {
+        let mut state = ClusterState::new(self.cluster);
+        let mut pending: std::collections::VecDeque<usize> = (0..plan.entries.len()).collect();
+        let mut active: Vec<ActiveJob<'a, 'p>> = Vec::new();
+        // Borrow placements from the plan; they must outlive active jobs.
+        let entries = &plan.entries;
+        let mut records: Vec<JobRecord> = Vec::with_capacity(entries.len());
+        let mut busy_gpu_slots: u64 = 0;
+        let mut t: u64 = 0;
+
+        while (!pending.is_empty() || !active.is_empty()) && t < self.options.max_slots {
+            // 1) Admission: walk the queue in dispatch order; start every
+            //    job whose gang of GPUs is entirely free. Earlier entries
+            //    win contested GPUs (we allocate as we scan).
+            let mut admitted_any = true;
+            while admitted_any {
+                admitted_any = false;
+                let mut i = 0;
+                while i < pending.len() {
+                    let idx = pending[i];
+                    let e = &entries[idx];
+                    let placement: &JobPlacement = &e.placement;
+                    // online extension: a job cannot start before arrival
+                    if self.specs[&e.job].arrival > t {
+                        i += 1;
+                        continue;
+                    }
+                    if placement.gpus().iter().all(|g| state.is_free(*g)) {
+                        state.allocate(e.job, placement);
+                        let spec = self.specs[&e.job];
+                        active.push(ActiveJob {
+                            job: e.job,
+                            spec,
+                            placement: &entries[idx].placement,
+                            start: t,
+                            progress: 0.0,
+                            tau_sum: 0.0,
+                            tau_slots: 0,
+                            max_p: 0,
+                        });
+                        pending.remove(i);
+                        admitted_any = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+
+            if active.is_empty() {
+                // nothing runnable yet (all pending jobs have future
+                // arrivals); advance to the next arrival.
+                if self.options.event_driven {
+                    let next_arrival = pending
+                        .iter()
+                        .map(|&idx| self.specs[&entries[idx].job].arrival)
+                        .filter(|&a| a > t)
+                        .min();
+                    t = next_arrival.unwrap_or(t + 1).min(self.options.max_slots);
+                } else {
+                    t += 1;
+                }
+                continue;
+            }
+
+            // 2) Contention snapshot (Eq. 6 over the active set) — constant
+            //    until the next admission or completion event.
+            let refs: Vec<(JobId, &JobPlacement)> =
+                active.iter().map(|a| (a.job, a.placement)).collect();
+            let snap = ContentionSnapshot::build_ref(self.cluster, &refs);
+
+            // Per-job rates for this period.
+            let rates: Vec<(usize, f64, f64)> = active
+                .iter()
+                .map(|a| {
+                    let p = snap.p_j(a.job);
+                    let tau = self.params.tau(self.cluster, a.spec, a.placement, p);
+                    let phi = self.params.phi(tau);
+                    let inc = if phi == 0 && self.options.fractional_progress {
+                        1.0 / tau
+                    } else {
+                        phi as f64
+                    };
+                    (p, tau, inc)
+                })
+                .collect();
+
+            // 3) Period length dt: 1 slot (reference mode), or jump to the
+            //    next completion/arrival (event-driven fast path).
+            let dt = if !self.options.event_driven {
+                1
+            } else {
+                let mut dt = u64::MAX;
+                for (a, (_, _, inc)) in active.iter().zip(&rates) {
+                    let remaining = a.spec.iterations as f64 - a.progress;
+                    let slots = if *inc > 0.0 {
+                        (remaining / inc).ceil().max(1.0) as u64
+                    } else {
+                        u64::MAX // stalled: bounded below by max_slots
+                    };
+                    dt = dt.min(slots);
+                }
+                // the next future arrival can unlock an admission
+                let next_arrival = pending
+                    .iter()
+                    .map(|&idx| self.specs[&entries[idx].job].arrival)
+                    .filter(|&a| a > t)
+                    .min();
+                if let Some(na) = next_arrival {
+                    dt = dt.min(na - t);
+                }
+                dt.min(self.options.max_slots - t).max(1)
+            };
+
+            // 4) Progress every active job by dt periods of φ_j.
+            for (a, (p, tau, inc)) in active.iter_mut().zip(&rates) {
+                a.progress += inc * dt as f64;
+                a.tau_sum += tau * dt as f64;
+                a.tau_slots += dt;
+                a.max_p = a.max_p.max(*p);
+                busy_gpu_slots += a.placement.num_workers() as u64 * dt;
+            }
+            t += dt;
+
+            // 5) Completions at the end of the period.
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].progress >= active[i].spec.iterations as f64 {
+                    let a = active.swap_remove(i);
+                    state.release(a.job, a.placement);
+                    records.push(JobRecord {
+                        job: a.job,
+                        arrival: a.spec.arrival,
+                        start: a.start,
+                        finish: t,
+                        span: a.placement.span(),
+                        max_p: a.max_p,
+                        mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
+                        iterations_done: a.spec.iterations,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        let truncated = !pending.is_empty() || !active.is_empty();
+        // Record unfinished jobs (truncation) with what they achieved.
+        for a in active {
+            records.push(JobRecord {
+                job: a.job,
+                arrival: a.spec.arrival,
+                start: a.start,
+                finish: t,
+                span: a.placement.span(),
+                max_p: a.max_p,
+                mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
+                iterations_done: a.progress as u64,
+            });
+        }
+        records.sort_by_key(|r| r.job);
+
+        let makespan = records.iter().map(|r| r.finish).max().unwrap_or(0);
+        let avg_jct = if records.is_empty() {
+            0.0
+        } else {
+            records.iter().map(|r| r.jct() as f64).sum::<f64>() / records.len() as f64
+        };
+        let gpu_utilization = if makespan == 0 {
+            0.0
+        } else {
+            busy_gpu_slots as f64 / (makespan * self.cluster.num_gpus() as u64) as f64
+        };
+        SimOutcome {
+            makespan,
+            avg_jct,
+            gpu_utilization,
+            records,
+            slots_simulated: t,
+            truncated,
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Discrete-event (time-slotted) evaluation of a schedule under the full
+//! contention model.
+//!
+//! The planner side of the paper works with *estimated* execution times
+//! ρ̂_j(y^k)/u; this simulator is the "evaluate τ_j[t]" half of the search
+//! framework (paper Fig. 3): it replays a [`Plan`](crate::sched::Plan)
+//! slot-by-slot, recomputing each active job's contention degree `p_j[t]`
+//! (Eq. 6), bandwidth `B_j(y[t])`, per-iteration time `τ_j[t]` (Eq. 8) and
+//! progress `φ_j[t]` (Eq. 9) from the *live* set of co-running jobs — so
+//! the reported makespan reflects actual contention, not estimates.
+
+mod engine;
+mod outcome;
+
+pub use engine::{SimOptions, Simulator};
+pub use outcome::{JobRecord, SimOutcome};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, JobPlacement, ServerId};
+    use crate::contention::ContentionParams;
+    use crate::jobs::{JobId, JobSpec};
+    use crate::sched::{Plan, PlannedJob};
+
+    fn one_job_plan(c: &Cluster, job: &JobSpec, gpus: Vec<(usize, usize)>) -> Plan {
+        let placement = JobPlacement::new(
+            gpus.into_iter().map(|(s, i)| c.global_gpu(ServerId(s), i)).collect(),
+        );
+        Plan::new(
+            "test",
+            vec![PlannedJob { job: job.id, placement, est_start: 0.0, est_finish: 0.0 }],
+        )
+    }
+
+    #[test]
+    fn single_colocated_job_runs_at_model_speed() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let mut job = JobSpec::synthetic(JobId(0), 2);
+        job.iterations = 500;
+        let plan = one_job_plan(&c, &job, vec![(0, 0), (0, 1)]);
+        let jobs = vec![job.clone()];
+        let out = Simulator::new(&c, &jobs, &params).run(&plan);
+        // expected: tau colocated, phi per slot, ceil(F/phi) slots
+        let placement = &plan.entries[0].placement;
+        let tau = params.tau(&c, &job, placement, 0);
+        let phi = params.phi(tau);
+        let expect = (job.iterations + phi - 1) / phi;
+        assert_eq!(out.makespan, expect);
+        assert_eq!(out.records.len(), 1);
+        assert_eq!(out.records[0].start, 0);
+    }
+
+    #[test]
+    fn contention_slows_spread_jobs() {
+        let c = Cluster::uniform(2, 8, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let mk_job = |id: usize| {
+            let mut j = JobSpec::synthetic(JobId(id), 4);
+            j.iterations = 1000;
+            j
+        };
+        let jobs: Vec<_> = (0..3).map(mk_job).collect();
+
+        // Case A: each job spread alone (sequential plans) vs
+        // Case B: all three spread concurrently.
+        let spread = |base: usize| {
+            JobPlacement::new(vec![
+                c.global_gpu(ServerId(0), base),
+                c.global_gpu(ServerId(0), base + 1),
+                c.global_gpu(ServerId(1), base),
+                c.global_gpu(ServerId(1), base + 1),
+            ])
+        };
+        let solo_plan = Plan::new(
+            "solo",
+            vec![PlannedJob {
+                job: JobId(0),
+                placement: spread(0),
+                est_start: 0.0,
+                est_finish: 0.0,
+            }],
+        );
+        let solo = Simulator::new(&c, &jobs[..1].to_vec(), &params).run(&solo_plan);
+
+        let all_plan = Plan::new(
+            "concurrent",
+            (0..3)
+                .map(|i| PlannedJob {
+                    job: JobId(i),
+                    placement: spread(2 * i),
+                    est_start: 0.0,
+                    est_finish: 0.0,
+                })
+                .collect(),
+        );
+        let all = Simulator::new(&c, &jobs, &params).run(&all_plan);
+        assert!(
+            all.makespan > solo.makespan,
+            "contention must slow concurrent spread jobs: {} vs {}",
+            all.makespan,
+            solo.makespan
+        );
+        // every record saw contention degree 3 while all three ran
+        assert!(all.records.iter().all(|r| r.max_p >= 2));
+    }
+
+    #[test]
+    fn queued_job_waits_for_gpus() {
+        let c = Cluster::uniform(1, 4, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let mut j0 = JobSpec::synthetic(JobId(0), 4);
+        j0.iterations = 200;
+        let mut j1 = JobSpec::synthetic(JobId(1), 4);
+        j1.iterations = 200;
+        let jobs = vec![j0, j1];
+        let placement = JobPlacement::new(
+            (0..4).map(|i| c.global_gpu(ServerId(0), i)).collect::<Vec<_>>(),
+        );
+        let plan = Plan::new(
+            "fifo",
+            vec![
+                PlannedJob {
+                    job: JobId(0),
+                    placement: placement.clone(),
+                    est_start: 0.0,
+                    est_finish: 0.0,
+                },
+                PlannedJob {
+                    job: JobId(1),
+                    placement,
+                    est_start: 0.0,
+                    est_finish: 0.0,
+                },
+            ],
+        );
+        let out = Simulator::new(&c, &jobs, &params).run(&plan);
+        let r0 = out.records.iter().find(|r| r.job == JobId(0)).unwrap();
+        let r1 = out.records.iter().find(|r| r.job == JobId(1)).unwrap();
+        assert_eq!(r0.start, 0);
+        assert_eq!(r1.start, r0.finish, "gang job starts when GPUs release");
+        assert_eq!(out.makespan, r1.finish);
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        // the event-driven engine must reproduce the slot-by-slot
+        // reference exactly, record for record
+        let mut rng = crate::util::Rng::seed_from_u64(99);
+        for case in 0..25 {
+            let c = Cluster::random(4, rng.next_u64());
+            let params = ContentionParams::paper();
+            let n = rng.gen_usize(2, 8);
+            let jobs: Vec<JobSpec> = (0..n)
+                .map(|i| {
+                    let mut j = JobSpec::synthetic(JobId(i), rng.gen_usize(1, 4));
+                    j.iterations = rng.gen_u64(100, 3000);
+                    j.arrival = if rng.gen_f64() < 0.5 { rng.gen_u64(0, 40) } else { 0 };
+                    j
+                })
+                .collect();
+            let plan = crate::sched::schedule(
+                crate::sched::Policy::ListScheduling,
+                &c,
+                &jobs,
+                &params,
+                1_000_000,
+            )
+            .unwrap();
+            let fast = Simulator::new(&c, &jobs, &params).run(&plan);
+            let slow = Simulator::new(&c, &jobs, &params)
+                .with_options(SimOptions {
+                    event_driven: false,
+                    ..SimOptions::default()
+                })
+                .run(&plan);
+            assert_eq!(fast.makespan, slow.makespan, "case {case}");
+            assert_eq!(fast.avg_jct, slow.avg_jct, "case {case}");
+            assert_eq!(fast.records.len(), slow.records.len());
+            for (a, b) in fast.records.iter().zip(&slow.records) {
+                assert_eq!((a.job, a.start, a.finish), (b.job, b.start, b.finish));
+                assert_eq!(a.max_p, b.max_p);
+                assert!((a.mean_tau - b.mean_tau).abs() < 1e-9);
+            }
+            assert_eq!(fast.gpu_utilization, slow.gpu_utilization);
+        }
+    }
+
+    #[test]
+    fn arrival_gates_start() {
+        let c = Cluster::uniform(1, 4, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let mut job = JobSpec::synthetic(JobId(0), 2);
+        job.iterations = 100;
+        job.arrival = 25;
+        let plan = one_job_plan(&c, &job, vec![(0, 0), (0, 1)]);
+        let jobs = vec![job];
+        let out = Simulator::new(&c, &jobs, &params).run(&plan);
+        let r = &out.records[0];
+        assert_eq!(r.start, 25, "job must wait for its arrival");
+        assert_eq!(r.arrival, 25);
+        assert_eq!(r.wait(), 0, "no queueing beyond arrival on an empty cluster");
+        assert_eq!(r.jct(), r.finish - 25);
+    }
+
+    #[test]
+    fn makespan_counts_all_jobs() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let jobs: Vec<_> = (0..6)
+            .map(|i| {
+                let mut j = JobSpec::synthetic(JobId(i), 1 + (i % 3));
+                j.iterations = 300 + 50 * i as u64;
+                j
+            })
+            .collect();
+        let plan = crate::sched::schedule(
+            crate::sched::Policy::FirstFit,
+            &c,
+            &jobs,
+            &params,
+            10_000,
+        )
+        .unwrap();
+        let out = Simulator::new(&c, &jobs, &params).run(&plan);
+        assert_eq!(out.records.len(), 6);
+        assert_eq!(out.makespan, out.records.iter().map(|r| r.finish).max().unwrap());
+        assert!(out.avg_jct > 0.0);
+    }
+}

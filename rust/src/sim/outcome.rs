@@ -1,0 +1,126 @@
+//! Simulation results.
+
+use crate::jobs::JobId;
+
+/// Per-job outcome of a simulated schedule.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub job: JobId,
+    /// Arrival slot (0 in the paper's batch setting).
+    pub arrival: u64,
+    /// Actual start slot `a_j` (when all gang GPUs became free).
+    pub start: u64,
+    /// Actual completion slot `T_j` (Eq. 9).
+    pub finish: u64,
+    /// Server span of the placement.
+    pub span: usize,
+    /// Max contention degree `p_j[t]` observed over the job's lifetime.
+    pub max_p: usize,
+    /// Time-average per-iteration time (slots).
+    pub mean_tau: f64,
+    /// Iterations completed (== F_j on success).
+    pub iterations_done: u64,
+}
+
+impl JobRecord {
+    /// Job completion time (finish − arrival).
+    pub fn jct(&self) -> u64 {
+        self.finish - self.arrival
+    }
+
+    /// Queueing delay before the gang started.
+    pub fn wait(&self) -> u64 {
+        self.start - self.arrival
+    }
+}
+
+/// Aggregate outcome of one simulated schedule.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// `max_j T_j` — the paper's objective.
+    pub makespan: u64,
+    /// Mean job completion time (paper Fig. 4 also reports avg JCT).
+    pub avg_jct: f64,
+    /// Fraction of GPU-slots spent busy up to the makespan.
+    pub gpu_utilization: f64,
+    /// Per-job records, sorted by job id.
+    pub records: Vec<JobRecord>,
+    /// Slots actually simulated (== makespan unless truncated).
+    pub slots_simulated: u64,
+    /// True if the safety horizon truncated the run before all jobs done.
+    pub truncated: bool,
+}
+
+impl SimOutcome {
+    pub fn record(&self, job: JobId) -> Option<&JobRecord> {
+        self.records.iter().find(|r| r.job == job)
+    }
+
+    /// p-th percentile of JCT (p in [0, 100]).
+    pub fn jct_percentile(&self, p: f64) -> u64 {
+        if self.records.is_empty() {
+            return 0;
+        }
+        let mut jcts: Vec<u64> = self.records.iter().map(|r| r.jct()).collect();
+        jcts.sort_unstable();
+        let idx = ((p / 100.0) * (jcts.len() - 1) as f64).round() as usize;
+        jcts[idx.min(jcts.len() - 1)]
+    }
+
+    /// Mean queueing delay.
+    pub fn avg_wait(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.wait() as f64).sum::<f64>() / self.records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, start: u64, finish: u64) -> JobRecord {
+        JobRecord {
+            job: JobId(id),
+            arrival: 0,
+            start,
+            finish,
+            span: 1,
+            max_p: 0,
+            mean_tau: 0.02,
+            iterations_done: 100,
+        }
+    }
+
+    #[test]
+    fn percentiles_and_waits() {
+        let out = SimOutcome {
+            makespan: 40,
+            avg_jct: 25.0,
+            gpu_utilization: 0.5,
+            records: vec![rec(0, 0, 10), rec(1, 5, 20), rec(2, 10, 40)],
+            slots_simulated: 40,
+            truncated: false,
+        };
+        assert_eq!(out.jct_percentile(0.0), 10);
+        assert_eq!(out.jct_percentile(100.0), 40);
+        assert_eq!(out.jct_percentile(50.0), 20);
+        assert!((out.avg_wait() - 5.0).abs() < 1e-12);
+        assert!(out.record(JobId(1)).is_some());
+    }
+
+    #[test]
+    fn empty_outcome_is_safe() {
+        let out = SimOutcome {
+            makespan: 0,
+            avg_jct: 0.0,
+            gpu_utilization: 0.0,
+            records: vec![],
+            slots_simulated: 0,
+            truncated: false,
+        };
+        assert_eq!(out.jct_percentile(50.0), 0);
+        assert_eq!(out.avg_wait(), 0.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Philly-derived synthetic trace generator.
+
+use super::Trace;
+use crate::jobs::{JobId, JobSet, JobSpec, ModelKind, WorkloadProfile};
+use crate::util::Rng;
+
+/// The paper's job-type histogram: (GPU count, number of jobs).
+pub const PAPER_MIX: [(usize, usize); 6] =
+    [(1, 80), (2, 14), (4, 26), (8, 30), (16, 8), (32, 2)];
+
+/// Configurable trace generator. `TraceGenerator::paper()` reproduces the
+/// §7 settings exactly; other constructors scale the mix for smaller or
+/// larger experiments.
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    /// (gpu_count, job_count) pairs.
+    pub mix: Vec<(usize, usize)>,
+    /// Range of requested iterations `F_j` (inclusive).
+    pub iters_min: u64,
+    pub iters_max: u64,
+    /// Whether to assign model kinds round-robin (deterministic) or
+    /// randomly from the seed.
+    pub random_kinds: bool,
+}
+
+impl TraceGenerator {
+    /// Paper §7: 160 jobs, `F_j ∈ [1000, 6000]`.
+    pub fn paper() -> Self {
+        TraceGenerator {
+            mix: PAPER_MIX.to_vec(),
+            iters_min: 1000,
+            iters_max: 6000,
+            random_kinds: true,
+        }
+    }
+
+    /// Scale the paper mix by `factor` (≥ 1 job per class kept when the
+    /// class is non-empty). `factor = 0.1` gives a ~16-job smoke trace.
+    pub fn paper_scaled(factor: f64) -> Self {
+        assert!(factor > 0.0);
+        let mix = PAPER_MIX
+            .iter()
+            .map(|&(g, n)| (g, (((n as f64) * factor).round() as usize).max(1)))
+            .collect();
+        TraceGenerator { mix, ..Self::paper() }
+    }
+
+    /// A tiny deterministic mix for unit tests.
+    pub fn tiny() -> Self {
+        TraceGenerator {
+            mix: vec![(1, 2), (2, 2), (4, 2)],
+            iters_min: 100,
+            iters_max: 200,
+            random_kinds: false,
+        }
+    }
+
+    /// Total number of jobs this generator emits.
+    pub fn num_jobs(&self) -> usize {
+        self.mix.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Generate the job set with a seeded RNG (fully reproducible).
+    pub fn generate(&self, seed: u64) -> JobSet {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut jobs = Vec::with_capacity(self.num_jobs());
+        let mut id = 0usize;
+        for &(gpus, count) in &self.mix {
+            for _ in 0..count {
+                let kind = if self.random_kinds {
+                    *rng.choose(&ModelKind::ALL)
+                } else {
+                    ModelKind::ALL[id % ModelKind::ALL.len()]
+                };
+                let prof = WorkloadProfile::for_kind(kind);
+                let iterations = rng.gen_u64(self.iters_min, self.iters_max);
+                jobs.push(JobSpec {
+                    id: JobId(id),
+                    name: format!("{}-{}g-{}", kind.name(), gpus, id),
+                    gpus,
+                    iterations,
+                    grad_size: prof.grad_size,
+                    batch_size: prof.batch_size,
+                    fwd_per_sample: prof.fwd_per_sample,
+                    bwd: prof.bwd,
+                    arrival: 0,
+                });
+                id += 1;
+            }
+        }
+        jobs
+    }
+
+    /// Generate jobs with Poisson arrivals of mean inter-arrival
+    /// `mean_gap` slots (online extension; paper §4.1 is batch-at-0).
+    /// Arrival order is randomized across the mix classes.
+    pub fn generate_online(&self, seed: u64, mean_gap: f64) -> JobSet {
+        assert!(mean_gap >= 0.0);
+        let mut jobs = self.generate(seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA551_17ED);
+        rng.shuffle(&mut jobs);
+        let mut t = 0.0f64;
+        for job in jobs.iter_mut() {
+            job.arrival = t as u64;
+            // exponential inter-arrival via inverse CDF
+            let u: f64 = rng.gen_f64().max(1e-12);
+            t += -mean_gap * u.ln();
+        }
+        jobs.sort_by_key(|j| (j.arrival, j.id));
+        jobs
+    }
+
+    /// Generate a [`Trace`] wrapper (jobs + provenance).
+    pub fn generate_trace(&self, seed: u64) -> Trace {
+        Trace {
+            seed,
+            description: format!(
+                "philly-derived mix {:?}, F_j in [{}, {}]",
+                self.mix, self.iters_min, self.iters_max
+            ),
+            jobs: self.generate(seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mix_matches_section7() {
+        let g = TraceGenerator::paper();
+        assert_eq!(g.num_jobs(), 160);
+        let jobs = g.generate(0);
+        assert_eq!(jobs.len(), 160);
+        let count = |n: usize| jobs.iter().filter(|j| j.gpus == n).count();
+        assert_eq!(count(1), 80);
+        assert_eq!(count(2), 14);
+        assert_eq!(count(4), 26);
+        assert_eq!(count(8), 30);
+        assert_eq!(count(16), 8);
+        assert_eq!(count(32), 2);
+    }
+
+    #[test]
+    fn iterations_within_range() {
+        let jobs = TraceGenerator::paper().generate(1);
+        assert!(jobs.iter().all(|j| (1000..=6000).contains(&j.iterations)));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = TraceGenerator::paper().generate(99);
+        let b = TraceGenerator::paper().generate(99);
+        assert_eq!(a, b);
+        let c = TraceGenerator::paper().generate(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ids_are_dense_and_valid() {
+        let jobs = TraceGenerator::paper().generate(2);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id.0, i);
+            assert!(j.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn online_arrivals_are_poisson_like() {
+        let jobs = TraceGenerator::paper().generate_online(3, 5.0);
+        assert_eq!(jobs.len(), 160);
+        // sorted by arrival, deterministic, spread out
+        let arrivals: Vec<u64> = jobs.iter().map(|j| j.arrival).collect();
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(arrivals[0], 0);
+        let span = *arrivals.last().unwrap();
+        // mean gap 5 over 160 jobs: total span roughly 160*5 = 800
+        assert!((300..2500).contains(&span), "span {span}");
+        let again = TraceGenerator::paper().generate_online(3, 5.0);
+        assert_eq!(jobs, again);
+    }
+
+    #[test]
+    fn zero_gap_online_equals_batch_arrivals() {
+        let jobs = TraceGenerator::tiny().generate_online(1, 0.0);
+        assert!(jobs.iter().all(|j| j.arrival == 0));
+    }
+
+    #[test]
+    fn scaled_mix_keeps_classes() {
+        let g = TraceGenerator::paper_scaled(0.1);
+        let jobs = g.generate(0);
+        // every class keeps >= 1 job
+        for &(gpus, _) in &PAPER_MIX {
+            assert!(jobs.iter().any(|j| j.gpus == gpus), "missing class {gpus}");
+        }
+        assert!(jobs.len() < 40);
+    }
+}

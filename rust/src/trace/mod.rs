@@ -1,0 +1,89 @@
+//! Workload trace generation (paper §7, derived from the Microsoft Philly
+//! trace [9]).
+//!
+//! The paper scales the Philly trace down to 160 DDL jobs following the
+//! job-type (GPU-count) distribution: 80 single-GPU, 14 two-GPU, 26
+//! four-GPU, 30 eight-GPU, 8 sixteen-GPU and 2 thirty-two-GPU jobs, with
+//! requested iterations `F_j ∈ [1000, 6000]`.
+
+mod generator;
+
+pub use generator::TraceGenerator;
+
+use crate::jobs::{JobSet, JobSpec};
+use crate::util::Json;
+
+/// A serialisable trace: the job set plus the generator settings that
+/// produced it, for exact reproducibility.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub seed: u64,
+    pub description: String,
+    pub jobs: JobSet,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> crate::Result<String> {
+        let v = Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("description", Json::Str(self.description.clone())),
+            ("jobs", Json::arr(self.jobs.iter().map(|j| j.to_json()).collect())),
+        ]);
+        Ok(v.to_pretty())
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let v = Json::parse(s)?;
+        let jobs = v
+            .req("jobs")?
+            .as_arr()?
+            .iter()
+            .map(JobSpec::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Trace {
+            seed: v.req("seed")?.as_u64()?,
+            description: v.req("description")?.as_str()?.to_string(),
+            jobs,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json()?)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Total GPU demand `Σ_j G_j`.
+    pub fn total_gpu_demand(&self) -> usize {
+        self.jobs.iter().map(|j| j.gpus).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let t = TraceGenerator::paper().generate_trace(5);
+        let s = t.to_json().unwrap();
+        let back = Trace::from_json(&s).unwrap();
+        assert_eq!(back.jobs.len(), t.jobs.len());
+        assert_eq!(back.seed, 5);
+        assert_eq!(back.jobs, t.jobs);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = TraceGenerator::paper().generate_trace(5);
+        let dir = crate::util::temp_dir("rarsched-trace").unwrap();
+        let p = dir.join("trace.json");
+        t.save(&p).unwrap();
+        let back = Trace::load(&p).unwrap();
+        assert_eq!(back.jobs, t.jobs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use rarsched::util::bench::Bench;
+//! let mut b = Bench::new("fig4");
+//! b.run("sjf-bco/plan", || { /* workload */ });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over adaptively-chosen iterations
+//! until the total runtime budget is met; mean, stddev, and min are
+//! reported.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl CaseResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// A collection of benchmark cases with a shared time budget per case.
+pub struct Bench {
+    pub suite: String,
+    pub budget: Duration,
+    pub warmup: Duration,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // keep default budgets modest: bench targets double as figure
+        // generators and run in CI
+        let budget_ms: u64 = std::env::var("RARSCHED_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1500);
+        Bench {
+            suite: suite.to_string(),
+            budget: Duration::from_millis(budget_ms),
+            warmup: Duration::from_millis(budget_ms / 5),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, discarding its output. Returns the case result.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &CaseResult {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+        let target_iters = if per_iter.is_zero() {
+            1000
+        } else {
+            (self.budget.as_nanos() / per_iter.as_nanos().max(1)).clamp(5, 100_000) as u64
+        };
+
+        let mut samples = Vec::with_capacity(target_iters as usize);
+        for _ in 0..target_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let n = samples.len() as f64;
+        let mean_s = samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n;
+        let var = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n.max(1.0);
+        let result = CaseResult {
+            name: name.to_string(),
+            iters: target_iters,
+            mean: Duration::from_secs_f64(mean_s),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: samples.iter().min().copied().unwrap_or_default(),
+        };
+        println!(
+            "{}/{:<40} {:>12.3} ms/iter (±{:.3} ms, min {:.3} ms, n={})",
+            self.suite,
+            result.name,
+            result.mean_ms(),
+            result.stddev.as_secs_f64() * 1e3,
+            result.min.as_secs_f64() * 1e3,
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a closing summary (and return the results).
+    pub fn report(&self) -> &[CaseResult] {
+        println!("-- {}: {} case(s) --", self.suite, self.results.len());
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("RARSCHED_BENCH_MS", "20");
+        let mut b = Bench::new("selftest");
+        let r = b.run("sum", || (0..1000u64).sum::<u64>());
+        assert!(r.iters >= 5);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.min <= r.mean);
+        assert_eq!(b.report().len(), 1);
+    }
+}

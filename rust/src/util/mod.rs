@@ -1,0 +1,39 @@
+//! In-tree substrates: deterministic RNG, JSON, TOML-subset config,
+//! logging, micro-bench statistics and a tiny property-testing harness.
+//! (The build is fully offline; see Cargo.toml.)
+
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod proptest_lite;
+pub mod rng;
+pub mod toml_lite;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use toml_lite::{TomlDoc, TomlValue};
+
+/// Create a unique temporary directory under the system temp dir.
+/// The caller owns cleanup (tests usually leave it to the OS).
+pub fn temp_dir(prefix: &str) -> crate::Result<std::path::PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("{prefix}-{pid}-{n}"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn temp_dirs_are_unique() {
+        let a = super::temp_dir("rarsched-test").unwrap();
+        let b = super::temp_dir("rarsched-test").unwrap();
+        assert_ne!(a, b);
+        assert!(a.exists() && b.exists());
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+}

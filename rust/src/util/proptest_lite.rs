@@ -1,0 +1,80 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use rarsched::util::proptest_lite::check;
+//! check("sum commutes", 200, |rng| {
+//!     let (a, b) = (rng.gen_u64(0, 100), rng.gen_u64(0, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Replay one case with `RARSCHED_PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+/// Number of cases, overridable via `RARSCHED_PROP_CASES`.
+pub fn default_cases(requested: u64) -> u64 {
+    std::env::var("RARSCHED_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(requested)
+}
+
+/// Run `property` over `cases` seeded RNGs. Panics (with the seed) on the
+/// first failing case.
+pub fn check(name: &str, cases: u64, mut property: impl FnMut(&mut Rng)) {
+    if let Ok(seed) = std::env::var("RARSCHED_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("RARSCHED_PROP_SEED must be a u64");
+        let mut rng = Rng::seed_from_u64(seed);
+        property(&mut rng);
+        return;
+    }
+    let cases = default_cases(cases);
+    for case in 0..cases {
+        // decorrelate consecutive case seeds
+        let seed = case.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1B5_4A32_D192_ED03;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with RARSCHED_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails-late", 20, |rng| {
+                // fail on roughly half the cases
+                assert!(rng.gen_f64() < 0.5, "unlucky draw");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("RARSCHED_PROP_SEED="), "got: {msg}");
+    }
+}

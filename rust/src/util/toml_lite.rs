@@ -1,0 +1,270 @@
+//! A TOML subset reader/writer for experiment configs (offline build —
+//! no external toml crate). Supports: `[section]` headers, `key = value`
+//! with string / bool / integer / float / array-of-integer values, `#`
+//! comments, and blank lines. Nested tables beyond one level are not
+//! needed by the config schema.
+
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    IntArray(Vec<i64>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("expected unsigned integer, got {i}");
+        }
+        Ok(i as u64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    /// Float accessor that also accepts integers (TOML writers often emit
+    /// `1` for `1.0`).
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_int_array(&self) -> Result<&[i64]> {
+        match self {
+            TomlValue::IntArray(a) => Ok(a),
+            _ => bail!("expected integer array, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed document: `doc[section][key] = value`. Top-level keys live in
+/// the `""` section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(input: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                };
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = key.trim().to_string();
+            let value = parse_value(value.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections.entry(current.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: TomlValue) {
+        self.sections.entry(section.to_string()).or_default().insert(key.to_string(), value);
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    /// Serialise back to TOML text.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        // top-level first
+        if let Some(top) = self.sections.get("") {
+            for (k, v) in top {
+                out.push_str(&format!("{k} = {}\n", emit_value(v)));
+            }
+        }
+        for (name, table) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{name}]\n"));
+            for (k, v) in table {
+                out.push_str(&format!("{k} = {}\n", emit_value(v)));
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string {s}");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated array {s}");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::IntArray(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(part.trim().parse::<i64>()?);
+        }
+        return Ok(TomlValue::IntArray(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn emit_value(v: &TomlValue) -> String {
+    match v {
+        TomlValue::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        TomlValue::Bool(b) => b.to_string(),
+        TomlValue::Int(i) => i.to_string(),
+        TomlValue::Float(f) => {
+            if f.fract() == 0.0 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        TomlValue::IntArray(a) => {
+            let items: Vec<String> = a.iter().map(|i| i.to_string()).collect();
+            format!("[{}]", items.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            seed = 42              # top-level
+            [cluster]
+            servers = 20
+            inter_bw = 1.0
+            capacities = [4, 8, 16]
+            name = "philly # scaled"
+            random = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "seed").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(doc.get("cluster", "servers").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(doc.get("cluster", "inter_bw").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(doc.get("cluster", "capacities").unwrap().as_int_array().unwrap(), &[4, 8, 16]);
+        assert_eq!(doc.get("cluster", "name").unwrap().as_str().unwrap(), "philly # scaled");
+        assert!(doc.get("cluster", "random").unwrap().as_bool().unwrap());
+        assert!(doc.get("cluster", "missing").is_none());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc = TomlDoc::default();
+        doc.set("", "seed", TomlValue::Int(7));
+        doc.set("model", "alpha", TomlValue::Float(0.2));
+        doc.set("model", "tag", TomlValue::Str("a\"b".into()));
+        doc.set("cluster", "caps", TomlValue::IntArray(vec![4, 8]));
+        let text = doc.to_string();
+        let back = TomlDoc::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn int_accepted_as_float() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = @").is_err());
+        assert!(TomlDoc::parse("a = [1, b]").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_negative() {
+        let doc = TomlDoc::parse("a = []\nb = -5").unwrap();
+        assert!(doc.get("", "a").unwrap().as_int_array().unwrap().is_empty());
+        assert_eq!(doc.get("", "b").unwrap().as_i64().unwrap(), -5);
+        assert!(doc.get("", "b").unwrap().as_u64().is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Theorem-5-shaped properties on random instances:
+//!
+//! * Lemma 2: the planner ledger's max busy time equals/below θ̃_u.
+//! * Lemma 3 (realized form): the simulated makespan stays within
+//!   `n_g · θ̃_u · (u/l)` — the worst-case chain of Theorem 5 with the
+//!   estimate ratio accounting for actual-vs-lower-bound execution times.
+//! * SJF-BCO is never catastrophically worse than the best baseline.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::{max_job_size, JobSpec};
+use rarsched::sched::{self, Estimator, GpuLedger, Policy, SjfBcoConfig};
+use rarsched::sim::Simulator;
+use rarsched::util::proptest_lite::check;
+use rarsched::util::Rng;
+
+fn random_instance(rng: &mut Rng) -> (Cluster, Vec<JobSpec>) {
+    let cluster = Cluster::random(rng.gen_usize(3, 10), rng.next_u64());
+    let max_gpu = cluster.num_gpus().min(12);
+    let jobs: Vec<JobSpec> = (0..rng.gen_usize(2, 10))
+        .map(|i| {
+            let mut j = JobSpec::synthetic(rarsched::jobs::JobId(i), rng.gen_usize(1, max_gpu));
+            j.iterations = rng.gen_u64(100, 2000);
+            j
+        })
+        .collect();
+    (cluster, jobs)
+}
+
+#[test]
+fn lemma2_max_busy_within_theta() {
+    check("Lemma 2", 40, |rng| {
+        let (cluster, jobs) = random_instance(rng);
+        let params = ContentionParams::paper();
+        let plan =
+            sched::sjf_bco(&cluster, &jobs, &params, 1_000_000, SjfBcoConfig::default())
+                .unwrap();
+        let theta = plan.theta.unwrap();
+        let est = Estimator::new(&cluster, &params);
+        let mut ledger = GpuLedger::new(&cluster);
+        for e in &plan.entries {
+            let spec = jobs.iter().find(|j| j.id == e.job).unwrap();
+            ledger.commit(e.placement.gpus(), est.rho(spec).rho_lower);
+        }
+        assert!(
+            ledger.max_busy() <= theta + 1e-6,
+            "W_max {} exceeds theta {}",
+            ledger.max_busy(),
+            theta
+        );
+    });
+}
+
+#[test]
+fn theorem5_realized_makespan_bound() {
+    check("Theorem 5 (realized)", 40, |rng| {
+        let (cluster, jobs) = random_instance(rng);
+        let params = ContentionParams::paper();
+        let plan =
+            sched::sjf_bco(&cluster, &jobs, &params, 1_000_000, SjfBcoConfig::default())
+                .unwrap();
+        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        assert!(!outcome.truncated);
+
+        let n_g = max_job_size(&jobs) as f64;
+        let theta = plan.theta.unwrap();
+        let est = Estimator::new(&cluster, &params);
+        let ratio = est.worst_ratio(&jobs); // u/l proxy: tau_hi / tau_lo
+        // +1 slot per job for phi-floor rounding slack
+        let bound = n_g * theta * ratio + jobs.len() as f64;
+        assert!(
+            (outcome.makespan as f64) <= bound,
+            "makespan {} exceeds Theorem-5 bound {:.1} (n_g={n_g}, theta={theta}, ratio={ratio:.2})",
+            outcome.makespan,
+            bound
+        );
+    });
+}
+
+#[test]
+fn sjf_bco_competitive_with_baselines() {
+    check("SJF-BCO competitiveness", 25, |rng| {
+        let (cluster, jobs) = random_instance(rng);
+        let params = ContentionParams::paper();
+        let run = |p: Policy| -> u64 {
+            let plan = sched::schedule(p, &cluster, &jobs, &params, 1_000_000).unwrap();
+            Simulator::new(&cluster, &jobs, &params).run(&plan).makespan
+        };
+        let ours = run(Policy::SjfBco);
+        let best_baseline = [Policy::FirstFit, Policy::ListScheduling, Policy::Random]
+            .into_iter()
+            .map(run)
+            .min()
+            .unwrap();
+        // never more than 2x the best baseline on small random instances
+        assert!(
+            ours <= best_baseline * 2 + 2,
+            "SJF-BCO {ours} vs best baseline {best_baseline}"
+        );
+    });
+}

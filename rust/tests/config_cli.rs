@@ -1,0 +1,85 @@
+//! Config-file and report plumbing integration: a TOML config drives a
+//! full schedule+simulate run; figure reports round-trip to CSV/JSON.
+
+use rarsched::config::ExperimentConfig;
+use rarsched::metrics::FigureReport;
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::Simulator;
+
+#[test]
+fn config_file_drives_a_run() {
+    let toml = r#"
+        seed = 5
+        horizon = 100000
+        [cluster]
+        servers = 4
+        capacities = [8, 8, 8, 8]
+        [workload]
+        scale = 0.05
+        iters_min = 100
+        iters_max = 300
+        [scheduler]
+        policy = "sjf-bco"
+        lambda = 2.0
+    "#;
+    let dir = rarsched::util::temp_dir("rarsched-itest").unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(&path, toml).unwrap();
+
+    let cfg = ExperimentConfig::load(&path).unwrap();
+    assert_eq!(cfg.scheduler.policy, Policy::SjfBco);
+    assert_eq!(cfg.scheduler.lambda, 2.0);
+    let cluster = cfg.build_cluster();
+    assert_eq!(cluster.num_gpus(), 32);
+    let jobs = cfg.build_generator().generate(cfg.seed);
+    assert!(!jobs.is_empty());
+    let params = cfg.build_params();
+
+    let plan = schedule(cfg.scheduler.policy, &cluster, &jobs, &params, cfg.horizon()).unwrap();
+    let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+    assert!(!outcome.truncated);
+    assert!(outcome.makespan > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn save_then_load_preserves_run_outcome() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.workload.scale = 0.05;
+    cfg.cluster.servers = 5;
+    cfg.horizon = Some(100_000);
+    let dir = rarsched::util::temp_dir("rarsched-itest2").unwrap();
+    let path = dir.join("exp.toml");
+    cfg.save(&path).unwrap();
+    let cfg2 = ExperimentConfig::load(&path).unwrap();
+
+    let run = |c: &ExperimentConfig| -> u64 {
+        let cluster = c.build_cluster();
+        let jobs = c.build_generator().generate(c.seed);
+        let params = c.build_params();
+        let plan =
+            schedule(c.scheduler.policy, &cluster, &jobs, &params, c.horizon()).unwrap();
+        Simulator::new(&cluster, &jobs, &params).run(&plan).makespan
+    };
+    assert_eq!(run(&cfg), run(&cfg2), "config round-trip changed the experiment");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn figure_report_files() {
+    let mut report = FigureReport::new("Fig. test", "x");
+    report.push("a", 10, 5.0);
+    report.push("b", 20, 9.5);
+    let dir = rarsched::util::temp_dir("rarsched-itest3").unwrap();
+    let csv_path = dir.join("fig.csv");
+    report.save_csv(&csv_path).unwrap();
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("x,makespan,avg_jct"));
+    assert!(csv.contains("b,20,9.5"));
+
+    let json = report.to_json().unwrap();
+    let back = FigureReport::from_json(&json).unwrap();
+    assert_eq!(back.rows.len(), 2);
+    assert_eq!(back.rows[1].makespan, 20);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,95 @@
+//! Property tests: every policy's plans satisfy the paper's scheduling
+//! constraints (Eq. 1–5) on randomized instances, and the simulator
+//! completes every job exactly (covering constraint, Eq. 9).
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::JobSpec;
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::Simulator;
+use rarsched::util::proptest_lite::check;
+use rarsched::util::Rng;
+use std::collections::HashSet;
+
+fn random_instance(rng: &mut Rng) -> (Cluster, Vec<JobSpec>) {
+    let servers = rng.gen_usize(2, 8);
+    let cluster = Cluster::random(servers, rng.next_u64());
+    let max_gpu = cluster.num_gpus().min(16);
+    let n_jobs = rng.gen_usize(1, 12);
+    let jobs: Vec<JobSpec> = (0..n_jobs)
+        .map(|i| {
+            let mut j = JobSpec::synthetic(rarsched::jobs::JobId(i), rng.gen_usize(1, max_gpu));
+            j.iterations = rng.gen_u64(50, 500);
+            j.grad_size = rng.gen_f64_range(0.004, 0.02);
+            j
+        })
+        .collect();
+    (cluster, jobs)
+}
+
+#[test]
+fn plans_satisfy_gang_constraints() {
+    check("gang constraints (Eq. 1-5)", 60, |rng| {
+        let (cluster, jobs) = random_instance(rng);
+        let params = ContentionParams::paper();
+        let policy = *rng.choose(&Policy::ALL);
+        let plan = schedule(policy, &cluster, &jobs, &params, 1_000_000)
+            .unwrap_or_else(|e| panic!("{policy} failed: {e}"));
+
+        // Eq. 1: exactly G_j workers per job, each job planned once
+        assert_eq!(plan.entries.len(), jobs.len(), "{policy}");
+        let mut seen = HashSet::new();
+        for e in &plan.entries {
+            let spec = jobs.iter().find(|j| j.id == e.job).expect("unknown job in plan");
+            assert_eq!(e.placement.num_workers(), spec.gpus, "{policy}: Eq. 1");
+            assert!(seen.insert(e.job), "{policy}: duplicate job");
+            // Eq. 2 (static form): per-server counts within capacity
+            for s in e.placement.servers() {
+                assert!(
+                    e.placement.gpus_on(s) <= cluster.capacity(s),
+                    "{policy}: Eq. 2 capacity"
+                );
+            }
+            // Eq. 5: all worker counts positive integers by construction
+            assert!(e.placement.gpus().len() == spec.gpus);
+        }
+    });
+}
+
+#[test]
+fn simulation_completes_every_job() {
+    check("covering: all F_j iterations run (Eq. 9)", 40, |rng| {
+        let (cluster, jobs) = random_instance(rng);
+        let params = ContentionParams::paper();
+        let policy = *rng.choose(&Policy::ALL);
+        let plan = schedule(policy, &cluster, &jobs, &params, 1_000_000).unwrap();
+        // the simulator asserts Eq. 2 internally on every allocate/release
+        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        assert!(!outcome.truncated, "{policy}: truncated");
+        assert_eq!(outcome.records.len(), jobs.len());
+        for r in &outcome.records {
+            let spec = jobs.iter().find(|j| j.id == r.job).unwrap();
+            assert_eq!(r.iterations_done, spec.iterations, "{policy}: job under-trained");
+            assert!(r.finish > r.start, "{policy}: empty execution window");
+        }
+        assert_eq!(
+            outcome.makespan,
+            outcome.records.iter().map(|r| r.finish).max().unwrap()
+        );
+    });
+}
+
+#[test]
+fn sjf_bco_never_truncates_on_feasible_instances() {
+    check("sjf-bco robustness", 30, |rng| {
+        let (cluster, jobs) = random_instance(rng);
+        let params = ContentionParams::paper();
+        let plan = schedule(Policy::SjfBco, &cluster, &jobs, &params, 1_000_000).unwrap();
+        assert!(plan.theta.is_some() && plan.kappa.is_some());
+        // dispatch order is smallest-first
+        let sizes: Vec<usize> = plan.entries.iter().map(|e| e.placement.num_workers()).collect();
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable();
+        assert_eq!(sizes, sorted, "SJF order violated");
+    });
+}

@@ -1,0 +1,135 @@
+//! Integration over the PJRT runtime + RAR engine + coordinator.
+//! These tests need `make artifacts`; they are skipped (with a message)
+//! when the artifacts directory is absent so `cargo test` works on a
+//! fresh checkout.
+
+use rarsched::cluster::{Cluster, JobPlacement, ServerId};
+use rarsched::coordinator::{train_job, Corpus, TrainJobSpec};
+use rarsched::rar::LinkBank;
+use rarsched::runtime::{default_artifacts_dir, PjRt};
+use std::sync::Arc;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_and_model_load() {
+    let Some(dir) = artifacts() else { return };
+    let pjrt = PjRt::cpu(&dir).unwrap();
+    let manifest = pjrt.manifest().unwrap();
+    assert!(manifest.models.contains_key("tiny"));
+    let model = pjrt.model("tiny").unwrap();
+    assert_eq!(model.entry().config.vocab, 256);
+    assert!(model.entry().total_params > 100_000);
+    let params = model.init_params(&pjrt).unwrap();
+    assert_eq!(params.len(), model.num_param_tensors());
+}
+
+#[test]
+fn rust_losses_match_python_export() {
+    let Some(dir) = artifacts() else { return };
+    let pjrt = PjRt::cpu(&dir).unwrap();
+    let model = pjrt.model("tiny").unwrap();
+    model.verify(&pjrt, 5e-3).expect("numeric cross-check vs python");
+}
+
+#[test]
+fn grad_flatten_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let pjrt = PjRt::cpu(&dir).unwrap();
+    let model = pjrt.model("tiny").unwrap();
+    let params = model.init_params(&pjrt).unwrap();
+    let e = model.entry().clone();
+    let (_, grads) = model.grad_step(&params, &e.check_x, &e.check_y).unwrap();
+    let flat = model.flatten_grads(&grads).unwrap();
+    assert_eq!(flat.len(), e.total_params);
+    let back = model.unflatten_grads(&flat).unwrap();
+    let flat2 = model.flatten_grads(&back).unwrap();
+    assert_eq!(flat, flat2, "flatten/unflatten must be lossless");
+}
+
+#[test]
+fn train_step_equals_grad_plus_apply_in_rust() {
+    let Some(dir) = artifacts() else { return };
+    let pjrt = PjRt::cpu(&dir).unwrap();
+    let model = pjrt.model("tiny").unwrap();
+    let params = model.init_params(&pjrt).unwrap();
+    let e = model.entry().clone();
+    let (loss_a, fused) = model.train_step(&params, &e.check_x, &e.check_y).unwrap();
+    let (loss_b, grads) = model.grad_step(&params, &e.check_x, &e.check_y).unwrap();
+    let two_phase = model.apply_grads(&params, &grads).unwrap();
+    assert!((loss_a.loss - loss_b.loss).abs() < 1e-5);
+    for (a, b) in fused.iter().zip(&two_phase) {
+        let va = a.to_vec::<f32>().unwrap();
+        let vb = b.to_vec::<f32>().unwrap();
+        for (x, y) in va.iter().zip(&vb) {
+            assert!((x - y).abs() < 1e-5, "fused vs two-phase params differ");
+        }
+    }
+}
+
+#[test]
+fn two_worker_training_reduces_loss() {
+    let Some(dir) = artifacts() else { return };
+    let cluster = Cluster::uniform(2, 2, 1.0, 25.0);
+    let placement = JobPlacement::new(vec![
+        cluster.global_gpu(ServerId(0), 0),
+        cluster.global_gpu(ServerId(1), 0),
+    ]);
+    let links = Arc::new(LinkBank::new(2, 500.0e6, 10.0e9));
+    let spec =
+        TrainJobSpec { model: "tiny".into(), steps: 12, corpus_seed: 3, artifacts: dir };
+    let report = train_job(&spec, &placement, Some(links)).unwrap();
+    assert_eq!(report.losses.len(), 12);
+    assert_eq!(report.workers, 2);
+    assert!(
+        report.final_loss() < report.initial_loss(),
+        "loss must decrease: {} -> {}",
+        report.initial_loss(),
+        report.final_loss()
+    );
+}
+
+#[test]
+fn data_parallel_workers_stay_in_sync() {
+    // after an all-reduce every worker applies the same averaged gradient
+    // to the same initial params -> identical parameters forever. We test
+    // the weaker observable: training twice with the same seeds gives the
+    // same loss curve (full determinism of the distributed path).
+    let Some(dir) = artifacts() else { return };
+    let cluster = Cluster::uniform(1, 2, 1.0, 25.0);
+    let placement = JobPlacement::new(vec![
+        cluster.global_gpu(ServerId(0), 0),
+        cluster.global_gpu(ServerId(0), 1),
+    ]);
+    let spec = TrainJobSpec {
+        model: "tiny".into(),
+        steps: 5,
+        corpus_seed: 9,
+        artifacts: dir,
+    };
+    let a = train_job(&spec, &placement, None).unwrap();
+    let b = train_job(&spec, &placement, None).unwrap();
+    assert_eq!(a.losses, b.losses, "distributed training must be deterministic");
+}
+
+#[test]
+fn corpus_feeds_model_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let pjrt = PjRt::cpu(&dir).unwrap();
+    let model = pjrt.model("tiny").unwrap();
+    let cfg = model.entry().config.clone();
+    let mut corpus = Corpus::synthetic(1, 100_000);
+    let (x, y) = corpus.next_batch(cfg.batch, cfg.seq_len);
+    let params = model.init_params(&pjrt).unwrap();
+    let (out, grads) = model.grad_step(&params, &x, &y).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert_eq!(grads.len(), model.num_param_tensors());
+}

@@ -1,0 +1,111 @@
+//! Monotonicity / sanity properties of the contention model and the
+//! simulator on random instances.
+
+use rarsched::cluster::{Cluster, JobPlacement, ServerId};
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::{JobId, JobSpec};
+use rarsched::sched::{schedule, Plan, PlannedJob, Policy};
+use rarsched::sim::Simulator;
+use rarsched::util::proptest_lite::check;
+
+#[test]
+fn tau_monotone_in_bandwidth() {
+    check("tau decreases with more inter-server bandwidth", 50, |rng| {
+        let mut lo = Cluster::uniform(2, 8, 1.0, 25.0);
+        let mut hi = Cluster::uniform(2, 8, 1.0, 25.0);
+        lo.inter_bw = rng.gen_f64_range(0.2, 1.0);
+        hi.inter_bw = lo.inter_bw * rng.gen_f64_range(1.5, 4.0);
+        let params = ContentionParams::paper();
+        let mut job = JobSpec::synthetic(JobId(0), rng.gen_usize(2, 8));
+        job.grad_size = rng.gen_f64_range(0.005, 0.02);
+        let half = job.gpus / 2;
+        let placement = JobPlacement::new(
+            (0..job.gpus)
+                .map(|i| {
+                    let s = if i < half { 0 } else { 1 };
+                    lo.global_gpu(ServerId(s), i % 8)
+                })
+                .collect(),
+        );
+        let p = rng.gen_usize(1, 5);
+        assert!(
+            params.tau(&hi, &job, &placement, p) <= params.tau(&lo, &job, &placement, p) + 1e-12
+        );
+    });
+}
+
+#[test]
+fn adding_a_job_never_shrinks_makespan() {
+    check("makespan monotone in workload", 30, |rng| {
+        let cluster = Cluster::random(rng.gen_usize(3, 6), rng.next_u64());
+        let params = ContentionParams::paper();
+        let n = rng.gen_usize(2, 8);
+        let jobs: Vec<JobSpec> = (0..n)
+            .map(|i| {
+                let mut j = JobSpec::synthetic(JobId(i), rng.gen_usize(1, 4));
+                j.iterations = rng.gen_u64(100, 800);
+                j
+            })
+            .collect();
+        let run = |jobs: &[JobSpec]| -> u64 {
+            let plan =
+                schedule(Policy::FirstFit, &cluster, jobs, &params, 1_000_000).unwrap();
+            Simulator::new(&cluster, jobs, &params).run(&plan).makespan
+        };
+        let full = run(&jobs);
+        let fewer = run(&jobs[..n - 1]);
+        assert!(
+            fewer <= full,
+            "removing a job increased makespan: {fewer} > {full}"
+        );
+    });
+}
+
+#[test]
+fn colocated_plan_beats_maximally_spread_plan() {
+    check("locality beats spread without load reasons", 30, |rng| {
+        // one job, free cluster: a co-located placement must finish no
+        // later than a maximally spread one (overhead + slower links)
+        let cluster = Cluster::uniform(4, 8, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let mut job = JobSpec::synthetic(JobId(0), 4);
+        job.iterations = rng.gen_u64(200, 3000);
+        job.grad_size = rng.gen_f64_range(0.005, 0.02);
+        let jobs = vec![job];
+
+        let colo = JobPlacement::new(
+            (0..4).map(|i| cluster.global_gpu(ServerId(0), i)).collect(),
+        );
+        let spread = JobPlacement::new(
+            (0..4).map(|i| cluster.global_gpu(ServerId(i), 0)).collect(),
+        );
+        let mk = |p: JobPlacement| {
+            Plan::new(
+                "t",
+                vec![PlannedJob { job: JobId(0), placement: p, est_start: 0.0, est_finish: 0.0 }],
+            )
+        };
+        let m_colo = Simulator::new(&cluster, &jobs, &params).run(&mk(colo)).makespan;
+        let m_spread = Simulator::new(&cluster, &jobs, &params).run(&mk(spread)).makespan;
+        assert!(m_colo <= m_spread, "colo {m_colo} > spread {m_spread}");
+    });
+}
+
+#[test]
+fn simulator_is_deterministic() {
+    check("replay determinism", 20, |rng| {
+        let cluster = Cluster::random(4, rng.next_u64());
+        let params = ContentionParams::paper();
+        let jobs: Vec<JobSpec> = (0..5)
+            .map(|i| JobSpec::synthetic(JobId(i), rng.gen_usize(1, 4)))
+            .collect();
+        let plan = schedule(Policy::ListScheduling, &cluster, &jobs, &params, 100_000).unwrap();
+        let a = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        let b = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.avg_jct, b.avg_jct);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!((x.start, x.finish), (y.start, y.finish));
+        }
+    });
+}
