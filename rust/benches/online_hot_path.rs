@@ -1,0 +1,85 @@
+//! Online event-loop hot path: incremental contention tracking vs the
+//! full per-event `ContentionSnapshot` rebuild it replaces.
+//!
+//! Per scheduling event the loop needs (a) updated per-uplink counts and
+//! (b) `p_j` for the jobs it re-rates. The offline engine pays a full
+//! `O(active × span)` rebuild + allocation for that; the tracker pays
+//! `O(span)` of the one churned job. Run with `--release` so the
+//! tracker's debug cross-check (which itself rebuilds) is compiled out.
+
+use rarsched::cluster::{Cluster, GpuId, JobPlacement};
+use rarsched::contention::ContentionSnapshot;
+use rarsched::jobs::JobId;
+use rarsched::online::ContentionTracker;
+use rarsched::util::bench::Bench;
+use rarsched::util::Rng;
+
+fn random_placement(cluster: &Cluster, rng: &mut Rng, k: usize) -> JobPlacement {
+    let mut gpus: Vec<GpuId> = cluster.all_gpus().collect();
+    rng.shuffle(&mut gpus);
+    gpus.truncate(k);
+    JobPlacement::new(gpus)
+}
+
+fn main() {
+    let cluster = Cluster::random(20, 7);
+    let mut rng = Rng::seed_from_u64(42);
+    let mut b = Bench::new("online_hot_path");
+
+    for &active_jobs in &[16usize, 64, 256] {
+        // a realistic standing set: mixed 2–8 GPU gangs, mostly spread
+        let placements: Vec<(JobId, JobPlacement)> = (0..active_jobs)
+            .map(|i| (JobId(i), random_placement(&cluster, &mut rng, 2 + (i % 7))))
+            .collect();
+        let mut tracker = ContentionTracker::new(&cluster);
+        for (job, pl) in &placements {
+            tracker.admit(*job, pl);
+        }
+        let churn_job = JobId(active_jobs);
+        let churn_pl = random_placement(&cluster, &mut rng, 4);
+
+        // Incremental: one admit + p_j query + one complete per event.
+        let inc = b
+            .run(&format!("tracker/admit+p_j+complete-{active_jobs}act"), || {
+                tracker.admit(churn_job, &churn_pl);
+                let p = tracker.p_j(churn_job);
+                tracker.complete(churn_job);
+                p
+            })
+            .mean;
+
+        // Baseline: what the offline engine does per event — rebuild the
+        // snapshot over the whole active set, then query.
+        let refs: Vec<(JobId, &JobPlacement)> = placements
+            .iter()
+            .map(|(j, pl)| (*j, pl))
+            .chain(std::iter::once((churn_job, &churn_pl)))
+            .collect();
+        let full = b
+            .run(&format!("snapshot/full-rebuild-{active_jobs}act"), || {
+                let snap = ContentionSnapshot::build_ref(&cluster, &refs);
+                snap.p_j(churn_job)
+            })
+            .mean;
+
+        println!(
+            "  -> {active_jobs} active: incremental {:.3}us vs rebuild {:.3}us ({:.1}x)",
+            inc.as_secs_f64() * 1e6,
+            full.as_secs_f64() * 1e6,
+            full.as_secs_f64() / inc.as_secs_f64().max(1e-12)
+        );
+    }
+
+    // Sanity: results agree (release builds skip the internal debug check).
+    let mut tracker = ContentionTracker::new(&cluster);
+    let pls: Vec<(JobId, JobPlacement)> =
+        (0..32).map(|i| (JobId(i), random_placement(&cluster, &mut rng, 3))).collect();
+    for (job, pl) in &pls {
+        tracker.admit(*job, pl);
+    }
+    let snap = tracker.full_rebuild(&cluster);
+    for (job, _) in &pls {
+        assert_eq!(tracker.p_j(*job), snap.p_j(*job));
+    }
+    b.report();
+}

@@ -74,6 +74,17 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Comma-separated list value (`--policies a,b,c`); `default` when the
+    /// flag is absent. Empty items are dropped.
+    pub fn get_list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get(key)
+            .unwrap_or(default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -123,5 +134,13 @@ mod tests {
     fn bad_numbers_error() {
         let a = Args::parse(&argv("--seed abc")).unwrap();
         assert!(a.get_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn list_values_split_on_commas() {
+        let a = Args::parse(&argv("--policies sjf-bco,fifo,ff,")).unwrap();
+        assert_eq!(a.get_list("policies", "x"), vec!["sjf-bco", "fifo", "ff"]);
+        assert_eq!(a.get_list("absent", "a,b"), vec!["a", "b"]);
+        a.reject_unknown().unwrap();
     }
 }

@@ -1,46 +1,151 @@
-//! Online-arrival extension experiment (beyond the paper's batch setting).
+//! Online-arrival experiments (beyond the paper's batch setting).
 //!
 //! The paper schedules a batch of jobs all waiting at t = 0 (§4.1). Real
-//! clusters see staggered arrivals; this experiment drives the same
-//! policies with Poisson arrivals of varying intensity and reports
-//! makespan and mean JCT (JCT measured from each job's arrival). The
-//! planners remain clairvoyant (they see the full trace, as in the
-//! paper); the simulator enforces that no job starts before it arrives.
+//! clusters see staggered arrivals, and two regimes must be compared:
+//!
+//! * **Clairvoyant** — the paper's planners see the *whole* trace up
+//!   front (future arrivals included) and commit a full plan; the
+//!   simulator replays it, never starting a job before its arrival. This
+//!   is an upper bound no deployed scheduler can achieve.
+//! * **Online (non-clairvoyant)** — the [`online`](crate::online)
+//!   subsystem reacts to arrival/completion events with no future
+//!   knowledge, the way GADGET-style schedulers must operate.
+//!
+//! [`online_sweep`] emits paired rows (`CLAIR-*` vs online policies) per
+//! arrival intensity; [`online_comparison`] produces the richer
+//! queueing-delay / utilization table the `online` CLI subcommand prints.
+//! JCT is measured from each job's *arrival* in both regimes, and no
+//! policy may start a job before it arrives (asserted in tests).
 
 use super::ExperimentSetup;
-use crate::metrics::FigureReport;
+use crate::metrics::{FigureReport, MetricTable};
+use crate::online::{OnlineOptions, OnlinePolicyKind, OnlineScheduler};
 use crate::sched::{self, Policy};
-use crate::sim::Simulator;
+use crate::sim::{SimOutcome, Simulator};
 use crate::trace::TraceGenerator;
 use crate::Result;
 
-/// Sweep mean inter-arrival gaps (slots/job). `0.0` reproduces the batch
-/// setting exactly.
-pub fn online_sweep(setup: &ExperimentSetup, gaps: &[f64]) -> Result<FigureReport> {
-    let cluster = setup.cluster();
-    let params = setup.params();
-    let gen = if (setup.scale - 1.0).abs() < 1e-9 {
+fn generator(setup: &ExperimentSetup) -> TraceGenerator {
+    if (setup.scale - 1.0).abs() < 1e-9 {
         TraceGenerator::paper()
     } else {
         TraceGenerator::paper_scaled(setup.scale)
-    };
+    }
+}
+
+/// Clairvoyant reference: plan the whole (future-inclusive) trace with a
+/// batch policy, then replay it under arrival gating.
+pub fn clairvoyant_run(
+    setup: &ExperimentSetup,
+    policy: Policy,
+    jobs: &[crate::jobs::JobSpec],
+) -> Result<SimOutcome> {
+    let cluster = setup.cluster();
+    let params = setup.params();
+    let plan = sched::schedule(policy, &cluster, jobs, &params, setup.horizon * 4)?;
+    Ok(Simulator::new(&cluster, jobs, &params).run(&plan))
+}
+
+/// Non-clairvoyant run of the same trace under one online policy.
+pub fn online_run(
+    setup: &ExperimentSetup,
+    kind: OnlinePolicyKind,
+    jobs: &[crate::jobs::JobSpec],
+) -> SimOutcome {
+    let cluster = setup.cluster();
+    let params = setup.params();
+    let mut policy = kind.build();
+    OnlineScheduler::new(&cluster, jobs, &params)
+        .with_options(OnlineOptions::default())
+        .run(policy.as_mut())
+        .outcome
+}
+
+/// Sweep mean inter-arrival gaps (slots/job; `0.0` reproduces the batch
+/// setting) and emit clairvoyant-vs-online comparison rows: for each gap,
+/// the clairvoyant SJF-BCO upper bound (`CLAIR-SJF-BCO/gap`) next to
+/// every non-clairvoyant online policy (`ON-SJF-BCO/gap`, `FIFO/gap`, …).
+pub fn online_sweep(setup: &ExperimentSetup, gaps: &[f64]) -> Result<FigureReport> {
+    let gen = generator(setup);
     let mut report = FigureReport::new(
-        format!("Online arrivals — makespan vs arrival intensity (seed {})", setup.seed),
+        format!(
+            "Online arrivals — clairvoyant vs non-clairvoyant (seed {})",
+            setup.seed
+        ),
         "policy/mean-gap",
     );
-    for policy in [Policy::SjfBco, Policy::FirstFit, Policy::Random] {
-        for &gap in gaps {
-            let jobs = gen.generate_online(setup.seed, gap);
-            let plan = sched::schedule(policy, &cluster, &jobs, &params, setup.horizon * 4)?;
-            let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+    // truncated runs are labelled, never silently reported as complete
+    let tag = |truncated: bool| if truncated { " !trunc" } else { "" };
+    for &gap in gaps {
+        let jobs = gen.generate_online(setup.seed, gap);
+        let clair = clairvoyant_run(setup, Policy::SjfBco, &jobs)?;
+        report.push(
+            format!("CLAIR-SJF-BCO/{gap}{}", tag(clair.truncated)),
+            clair.makespan,
+            clair.avg_jct,
+        );
+        for kind in OnlinePolicyKind::ALL {
+            let out = online_run(setup, kind, &jobs);
             report.push(
-                format!("{}/{}", policy.name(), gap),
-                outcome.makespan,
-                outcome.avg_jct,
+                format!("{}/{gap}{}", kind.name(), tag(out.truncated)),
+                out.makespan,
+                out.avg_jct,
             );
         }
     }
     Ok(report)
+}
+
+/// One-gap deep comparison: makespan, mean/p95 JCT, mean/p95 queueing
+/// delay and time-averaged utilization for the clairvoyant reference and
+/// every online policy — the table behind `rarsched online`.
+pub fn online_comparison(
+    setup: &ExperimentSetup,
+    gap: f64,
+    kinds: &[OnlinePolicyKind],
+    include_clairvoyant: bool,
+) -> Result<MetricTable> {
+    let gen = generator(setup);
+    let jobs = gen.generate_online(setup.seed, gap);
+    let cluster = setup.cluster();
+    let num_gpus = cluster.num_gpus();
+    let mut table = MetricTable::new(
+        format!(
+            "online — {} jobs, mean gap {gap} slots, seed {} ({} servers / {} GPUs)",
+            jobs.len(),
+            setup.seed,
+            cluster.num_servers(),
+            num_gpus
+        ),
+        "policy",
+        &["makespan", "avg_jct", "p95_jct", "avg_wait", "p95_wait", "util"],
+    );
+    let mut push = |label: String, out: &SimOutcome| {
+        // a truncated run's metrics are clamped at the horizon — label it
+        // loudly rather than report them as valid (cmd_online warns on it)
+        let label =
+            if out.truncated { format!("{label} (TRUNCATED)") } else { label };
+        table.push(
+            label,
+            vec![
+                out.makespan as f64,
+                out.avg_jct,
+                out.jct_percentile(95.0) as f64,
+                out.avg_wait(),
+                out.wait_percentile(95.0) as f64,
+                out.service_utilization(num_gpus),
+            ],
+        );
+    };
+    if include_clairvoyant {
+        let clair = clairvoyant_run(setup, Policy::SjfBco, &jobs)?;
+        push("CLAIR-SJF-BCO".to_string(), &clair);
+    }
+    for &kind in kinds {
+        let out = online_run(setup, kind, &jobs);
+        push(kind.name().to_string(), &out);
+    }
+    Ok(table)
 }
 
 #[cfg(test)]
@@ -48,24 +153,67 @@ mod tests {
     use super::*;
 
     #[test]
-    fn online_sweep_rows_complete() {
+    fn online_sweep_pairs_clairvoyant_with_online_rows() {
         let setup = ExperimentSetup::smoke();
         let report = online_sweep(&setup, &[0.0, 2.0]).unwrap();
-        assert_eq!(report.rows.len(), 6);
+        // per gap: 1 clairvoyant + 4 online rows
+        assert_eq!(report.rows.len(), 2 * (1 + OnlinePolicyKind::ALL.len()));
         assert!(report.rows.iter().all(|r| r.makespan > 0));
+        assert!(report.rows.iter().any(|r| r.x.starts_with("CLAIR-SJF-BCO/")));
+        assert!(report.rows.iter().any(|r| r.x.starts_with("ON-SJF-BCO/")));
+        assert!(report.rows.iter().any(|r| r.x.starts_with("FIFO/")));
     }
 
     #[test]
-    fn sparse_arrivals_reduce_avg_jct() {
+    fn sparse_arrivals_reduce_online_avg_jct() {
         // with very sparse arrivals each job runs nearly alone: mean JCT
         // (from arrival) must not exceed the batch setting's mean JCT,
         // while the makespan naturally grows with the arrival span.
         let setup = ExperimentSetup::smoke();
-        let report = online_sweep(&setup, &[0.0, 50.0]).unwrap();
-        let get = |x: &str| report.rows.iter().find(|r| r.x == x).unwrap();
-        let batch = get("SJF-BCO/0");
-        let sparse = get("SJF-BCO/50");
-        assert!(sparse.avg_jct <= batch.avg_jct + 1.0, "{} vs {}", sparse.avg_jct, batch.avg_jct);
+        let gen = generator(&setup);
+        let batch = online_run(&setup, OnlinePolicyKind::SjfBco, &gen.generate_online(setup.seed, 0.0));
+        let sparse =
+            online_run(&setup, OnlinePolicyKind::SjfBco, &gen.generate_online(setup.seed, 50.0));
+        assert!(!batch.truncated && !sparse.truncated);
+        assert!(
+            sparse.avg_jct <= batch.avg_jct + 1.0,
+            "{} vs {}",
+            sparse.avg_jct,
+            batch.avg_jct
+        );
         assert!(sparse.makespan >= batch.makespan);
+    }
+
+    #[test]
+    fn comparison_table_has_all_metrics() {
+        let setup = ExperimentSetup::smoke();
+        let table = online_comparison(&setup, 5.0, &OnlinePolicyKind::ALL, true).unwrap();
+        assert_eq!(table.rows.len(), 1 + OnlinePolicyKind::ALL.len());
+        for kind in OnlinePolicyKind::ALL {
+            let util = table.get(kind.name(), "util").unwrap();
+            assert!(util > 0.0 && util <= 1.0 + 1e-9, "{kind}: util {util}");
+            assert!(table.get(kind.name(), "makespan").unwrap() > 0.0);
+        }
+        // queueing delay exists as a column even when zero
+        assert!(table.get("FIFO", "p95_wait").is_some());
+    }
+
+    #[test]
+    fn clairvoyance_is_an_upper_bound_in_the_batch_case() {
+        // gap 0 reduces online SJF-BCO and the batch planner to the same
+        // information set; the clairvoyant plan (with its θ/κ search)
+        // should not lose badly to the greedy online loop.
+        let setup = ExperimentSetup::smoke();
+        let gen = generator(&setup);
+        let jobs = gen.generate_online(setup.seed, 0.0);
+        let clair = clairvoyant_run(&setup, Policy::SjfBco, &jobs).unwrap();
+        let online = online_run(&setup, OnlinePolicyKind::SjfBco, &jobs);
+        assert!(!clair.truncated && !online.truncated);
+        assert!(
+            clair.makespan as f64 <= online.makespan as f64 * 1.5 + 10.0,
+            "clairvoyant {} vs online {}",
+            clair.makespan,
+            online.makespan
+        );
     }
 }

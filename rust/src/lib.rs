@@ -21,6 +21,34 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, and the Rust binary loads `artifacts/*.hlo.txt` through PJRT.
+//!
+//! ## Batch (clairvoyant) vs online (non-clairvoyant) scheduling
+//!
+//! The paper solves the *batch* setting: every job waits at t = 0 and the
+//! planner sees the whole job set before committing a plan ([`sched`]
+//! produces a [`sched::Plan`]; [`sim`] replays it). Even with staggered
+//! arrivals that pipeline stays **clairvoyant** — the planner reads future
+//! arrivals out of the trace.
+//!
+//! The [`online`] subsystem drops that assumption for production-style
+//! serving. An event-driven loop ([`online::OnlineScheduler`]) owns a live
+//! pending queue and running set, reacts to job-arrival / job-completion
+//! events, and consults a pluggable [`online::OnlinePolicy`]
+//! (`ON-SJF-BCO`, `FIFO`, `ON-FF`, `BACKFILL`) whose API receives only the
+//! already-arrived queue and current cluster occupancy — non-clairvoyance
+//! is enforced by construction, the information set of GADGET-style online
+//! RAR schedulers. Three pieces keep the loop fast and honest:
+//!
+//! * [`sim::kernel`] — the period arithmetic (rates `p/τ/φ`, jump-to-next-
+//!   event) shared with the offline engine, so online and clairvoyant runs
+//!   are comparable slot for slot;
+//! * [`online::ContentionTracker`] — Eq. 6 per-uplink counts maintained
+//!   incrementally in `O(span)` per admit/complete (debug builds
+//!   cross-check against a full [`contention::ContentionSnapshot`]
+//!   rebuild; `benches/online_hot_path.rs` measures the gap);
+//! * queueing metrics — [`sim::SimOutcome`] reports mean/p95 wait and
+//!   time-averaged service utilization, surfaced by the `online` CLI
+//!   subcommand and `experiments::online`'s clairvoyant-vs-online rows.
 
 pub mod cli;
 pub mod cluster;
@@ -30,6 +58,7 @@ pub mod experiments;
 pub mod coordinator;
 pub mod jobs;
 pub mod metrics;
+pub mod online;
 pub mod rar;
 pub mod runtime;
 pub mod sched;

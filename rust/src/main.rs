@@ -4,9 +4,13 @@
 //!
 //! * `simulate` — schedule a trace with one policy and replay it under
 //!   the full contention model (Eq. 6–9).
+//! * `online`   — drive a Poisson-arrival trace through the
+//!   non-clairvoyant event-driven scheduler under one or more online
+//!   policies (vs the clairvoyant SJF-BCO upper bound).
 //! * `figures`  — regenerate the paper's evaluation figures (4–7) plus
 //!   the §1 motivation experiment.
-//! * `trace`    — emit a reproducible Philly-derived trace as JSON.
+//! * `trace`    — emit a reproducible Philly-derived trace as JSON
+//!   (optionally arrival-timestamped via `--gap`).
 //! * `train`    — live data-parallel RAR training of a transformer LM
 //!   through the PJRT runtime (requires `make artifacts`).
 //! * `verify`   — numeric cross-check of the Rust runtime vs the
@@ -31,9 +35,12 @@ USAGE: rarsched <COMMAND> [OPTIONS]
 COMMANDS:
   simulate   --policy <sjf-bco|ff|ls|rand|gadget> [--config f.toml]
              [--seed N] [--servers N] [--horizon T] [--scale F] [--json]
+  online     [--policies sjf-bco,fifo,ff,backfill] [--gap F] [--seed N]
+             [--servers N] [--scale F] [--no-clairvoyant] [--json]
+             [--out dir]
   figures    --fig <4|5|6|7|motivation|ablations|online|all> [--seed N] [--scale F]
              [--out dir] [--full]
-  trace      --out trace.json [--seed N] [--scale F]
+  trace      --out trace.json [--seed N] [--scale F] [--gap F]
   train      --model <tiny|small|base> [--workers W] [--steps N]
              [--spread] [--artifacts dir]
   verify     [--model tiny] [--artifacts dir]
@@ -57,6 +64,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
+        "online" => cmd_online(&args),
         "figures" => cmd_figures(&args),
         "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
@@ -133,11 +141,54 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("avg JCT         : {:.1} slots", summary.avg_jct);
         println!("p95 JCT         : {} slots", summary.p95_jct);
         println!("avg wait        : {:.1} slots", summary.avg_wait);
+        println!("p95 wait        : {} slots", summary.p95_wait);
         println!("GPU utilization : {:.1}%", summary.gpu_utilization * 100.0);
         println!("max contention  : {} jobs on one uplink", summary.max_contention);
         if summary.truncated {
             println!("WARNING: simulation truncated at the safety horizon");
         }
+    }
+    Ok(())
+}
+
+fn cmd_online(args: &Args) -> Result<()> {
+    use rarsched::online::OnlinePolicyKind;
+
+    let setup = setup_from(args)?;
+    let gap = args.get_f64("gap", 5.0)?;
+    let kinds: Vec<OnlinePolicyKind> = args
+        .get_list("policies", "sjf-bco,fifo,ff,backfill")
+        .iter()
+        .map(|s| s.parse())
+        .collect::<Result<_>>()?;
+    let clairvoyant = !args.get_bool("no-clairvoyant");
+    let json = args.get_bool("json");
+    let out_dir = args.get("out").map(std::path::PathBuf::from);
+    args.reject_unknown()?;
+
+    log::info!(
+        "online run: mean gap {gap} slots, {} polic{}, clairvoyant reference {}",
+        kinds.len(),
+        if kinds.len() == 1 { "y" } else { "ies" },
+        if clairvoyant { "on" } else { "off" }
+    );
+    let table = experiments::online::online_comparison(&setup, gap, &kinds, clairvoyant)?;
+    if json {
+        println!("{}", table.to_json()?);
+    } else {
+        println!("{}", table.to_table());
+    }
+    if table.rows.iter().any(|(label, _)| label.contains("(TRUNCATED)")) {
+        eprintln!(
+            "WARNING: one or more runs hit the safety horizon before all jobs \
+             finished; their metrics are clamped (rows marked TRUNCATED)"
+        );
+    }
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+        table.save_csv(&d.join("online.csv"))?;
+        std::fs::write(d.join("online.json"), table.to_json()?)?;
+        log::info!("wrote online.csv / online.json to {d:?}");
     }
     Ok(())
 }
@@ -210,18 +261,27 @@ fn cmd_figures(args: &Args) -> Result<()> {
 fn cmd_trace(args: &Args) -> Result<()> {
     let setup = setup_from(args)?;
     let out = args.get_or("out", "trace.json").to_string();
+    let gap = args.get("gap").map(|g| g.parse::<f64>()).transpose()?;
     args.reject_unknown()?;
     let gen = if (setup.scale - 1.0).abs() < 1e-9 {
         rarsched::trace::TraceGenerator::paper()
     } else {
         rarsched::trace::TraceGenerator::paper_scaled(setup.scale)
     };
-    let trace = gen.generate_trace(setup.seed);
+    // --gap emits an arrival-timestamped trace for the online scheduler
+    let trace = match gap {
+        Some(g) => gen.generate_online_trace(setup.seed, g),
+        None => gen.generate_trace(setup.seed),
+    };
     trace.save(std::path::Path::new(&out))?;
     println!(
-        "wrote {} jobs ({} GPUs total demand) to {out}",
+        "wrote {} jobs ({} GPUs total demand{}) to {out}",
         trace.jobs.len(),
-        trace.total_gpu_demand()
+        trace.total_gpu_demand(),
+        match gap {
+            Some(g) => format!(", poisson arrivals mean gap {g}"),
+            None => String::new(),
+        }
     );
     Ok(())
 }

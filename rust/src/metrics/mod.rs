@@ -2,7 +2,7 @@
 
 mod report;
 
-pub use report::{ComparisonRow, FigureReport};
+pub use report::{ComparisonRow, FigureReport, MetricTable};
 
 use crate::sim::SimOutcome;
 
@@ -14,6 +14,8 @@ pub struct PolicySummary {
     pub avg_jct: f64,
     pub p95_jct: u64,
     pub avg_wait: f64,
+    /// 95th-percentile queueing delay (arrival → start).
+    pub p95_wait: u64,
     pub gpu_utilization: f64,
     pub max_contention: usize,
     pub est_makespan: f64,
@@ -28,6 +30,7 @@ impl PolicySummary {
             avg_jct: out.avg_jct,
             p95_jct: out.jct_percentile(95.0),
             avg_wait: out.avg_wait(),
+            p95_wait: out.wait_percentile(95.0),
             gpu_utilization: out.gpu_utilization,
             max_contention: out.records.iter().map(|r| r.max_p).max().unwrap_or(0),
             est_makespan,
@@ -54,6 +57,7 @@ mod tests {
                 start: 0,
                 finish: 100,
                 span: 2,
+                workers: 4,
                 max_p: 3,
                 mean_tau: 0.02,
                 iterations_done: 1000,
@@ -65,5 +69,6 @@ mod tests {
         assert_eq!(s.makespan, 100);
         assert_eq!(s.max_contention, 3);
         assert_eq!(s.p95_jct, 100);
+        assert_eq!(s.p95_wait, 0);
     }
 }

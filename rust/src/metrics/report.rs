@@ -132,6 +132,121 @@ impl FigureReport {
     }
 }
 
+/// A free-form metric table: one labelled row per run, an arbitrary set
+/// of numeric columns. Used by the online subcommand / experiments, whose
+/// rows carry more than the (makespan, avg JCT) pair of the paper figures
+/// (queueing delay percentiles, utilization, ...).
+#[derive(Debug, Clone)]
+pub struct MetricTable {
+    pub title: String,
+    pub label: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl MetricTable {
+    pub fn new(
+        title: impl Into<String>,
+        label: impl Into<String>,
+        columns: &[&str],
+    ) -> Self {
+        MetricTable {
+            title: title.into(),
+            label: label.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row; `values.len()` must equal the column count.
+    pub fn push(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width != column count");
+        self.rows.push((label.into(), values));
+    }
+
+    /// Look up a row's value by labels.
+    pub fn get(&self, row: &str, column: &str) -> Option<f64> {
+        let c = self.columns.iter().position(|x| x == column)?;
+        let (_, values) = self.rows.iter().find(|(l, _)| l == row)?;
+        values.get(c).copied()
+    }
+
+    /// Render an aligned console table.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(self.label.len()))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        out.push_str(&format!("{:<w$}", self.label, w = w));
+        for c in &self.columns {
+            out.push_str(&format!(" {:>12}", c));
+        }
+        out.push('\n');
+        for (label, values) in &self.rows {
+            out.push_str(&format!("{:<w$}", label, w = w));
+            for v in values {
+                // integers print clean, fractions keep 3 decimals
+                if (v.fract()).abs() < 1e-9 && v.abs() < 1e15 {
+                    out.push_str(&format!(" {:>12}", *v as i64));
+                } else {
+                    out.push_str(&format!(" {:>12.3}", v));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.label.clone();
+        for c in &self.columns {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for (label, values) in &self.rows {
+            out.push_str(label);
+            for v in values {
+                out.push_str(&format!(",{v:.4}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> crate::Result<String> {
+        use crate::util::Json;
+        let rows = self
+            .rows
+            .iter()
+            .map(|(label, values)| {
+                let mut fields = vec![(self.label.as_str(), Json::Str(label.clone()))];
+                fields.extend(
+                    self.columns.iter().zip(values).map(|(c, v)| (c.as_str(), Json::Num(*v))),
+                );
+                Json::obj(fields)
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("rows", Json::arr(rows)),
+        ])
+        .to_pretty())
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +289,41 @@ mod tests {
         assert_eq!(back.rows.len(), 3);
         assert_eq!(back.rows[0].x, "SJF-BCO");
         assert_eq!(back.figure, f.figure);
+    }
+
+    fn metric_table() -> MetricTable {
+        let mut t = MetricTable::new(
+            "online — gap 5",
+            "policy",
+            &["makespan", "avg_jct", "avg_wait", "p95_wait", "util"],
+        );
+        t.push("ON-SJF-BCO", vec![700.0, 320.5, 12.0, 40.0, 0.81]);
+        t.push("FIFO", vec![950.0, 410.0, 55.5, 130.0, 0.64]);
+        t
+    }
+
+    #[test]
+    fn metric_table_renders_and_queries() {
+        let t = metric_table();
+        let table = t.to_table();
+        assert!(table.contains("ON-SJF-BCO"));
+        assert!(table.contains("p95_wait"));
+        assert!(table.contains("700"), "integer-valued cells print clean");
+        let csv = t.to_csv();
+        let lines: Vec<_> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "policy,makespan,avg_jct,avg_wait,p95_wait,util");
+        assert!(lines[1].starts_with("ON-SJF-BCO,700.0000,"));
+        assert_eq!(t.get("FIFO", "avg_wait"), Some(55.5));
+        assert_eq!(t.get("FIFO", "nope"), None);
+        assert_eq!(t.get("nope", "util"), None);
+        assert!(t.to_json().unwrap().contains("\"p95_wait\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn metric_table_rejects_ragged_rows() {
+        let mut t = MetricTable::new("x", "policy", &["a", "b"]);
+        t.push("row", vec![1.0]);
     }
 }

@@ -1,0 +1,122 @@
+//! Scheduling events and the per-run event log.
+//!
+//! The online loop is driven entirely by events: a job **arrival** puts a
+//! job in the pending queue, a **start** moves it onto its gang of GPUs,
+//! a **completion** frees them. The log records the realized sequence so
+//! tests and tooling can audit causality (a job never starts before it
+//! arrives, never completes before it starts) without re-simulating.
+
+use crate::jobs::JobId;
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// The job entered the pending queue.
+    Arrival,
+    /// The scheduler placed the job's gang on GPUs.
+    Start,
+    /// The job finished its `F_j` iterations and released its gang.
+    Completion,
+}
+
+/// One timestamped event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OnlineEvent {
+    /// Slot at which the event took effect.
+    pub at: u64,
+    pub job: JobId,
+    pub kind: EventKind,
+}
+
+/// Chronological record of one online run.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<OnlineEvent>,
+}
+
+impl EventLog {
+    pub fn push(&mut self, at: u64, job: JobId, kind: EventKind) {
+        self.events.push(OnlineEvent { at, job, kind });
+    }
+
+    pub fn events(&self) -> &[OnlineEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of events of one kind.
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// All events of one job, in log order.
+    pub fn for_job(&self, job: JobId) -> impl Iterator<Item = &OnlineEvent> {
+        self.events.iter().filter(move |e| e.job == job)
+    }
+
+    /// Causality audit: the log is globally time-ordered, and every job's
+    /// own events run Arrival → Start → Completion with non-decreasing
+    /// timestamps (a prefix of that sequence is fine — truncated runs).
+    pub fn is_causally_ordered(&self) -> bool {
+        if self.events.windows(2).any(|w| w[0].at > w[1].at) {
+            return false;
+        }
+        let max_id = self.events.iter().map(|e| e.job.0).max().map_or(0, |m| m + 1);
+        let mut stage: Vec<(u8, u64)> = vec![(0, 0); max_id]; // (next expected stage, last at)
+        for e in &self.events {
+            let (expect, last_at) = stage[e.job.0];
+            let got = match e.kind {
+                EventKind::Arrival => 0,
+                EventKind::Start => 1,
+                EventKind::Completion => 2,
+            };
+            if got != expect || e.at < last_at {
+                return false;
+            }
+            stage[e.job.0] = (expect + 1, e.at);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_ordering() {
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(3, JobId(1), EventKind::Arrival);
+        log.push(5, JobId(0), EventKind::Completion);
+        log.push(5, JobId(1), EventKind::Start);
+        assert_eq!(log.len(), 5);
+        assert_eq!(log.count(EventKind::Arrival), 2);
+        assert_eq!(log.count(EventKind::Completion), 1);
+        assert_eq!(log.for_job(JobId(0)).count(), 3);
+        assert!(log.is_causally_ordered());
+    }
+
+    #[test]
+    fn start_before_arrival_is_flagged() {
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Start);
+        assert!(!log.is_causally_ordered());
+    }
+
+    #[test]
+    fn time_regression_is_flagged() {
+        let mut log = EventLog::default();
+        log.push(5, JobId(0), EventKind::Arrival);
+        log.push(3, JobId(0), EventKind::Start);
+        assert!(!log.is_causally_ordered());
+    }
+}

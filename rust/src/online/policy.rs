@@ -1,0 +1,408 @@
+//! Pluggable non-clairvoyant online policies.
+//!
+//! Non-clairvoyance is enforced **by the API**: a policy's only inputs
+//! are the jobs that have already arrived ([`QueuedJob`], every
+//! `spec.arrival ≤ now`) and the current cluster occupancy
+//! ([`ClusterView`]). There is no handle to the trace, to future
+//! arrivals, or to remaining execution times of running jobs — the
+//! information set of GADGET-style online RAR schedulers.
+
+use crate::cluster::{Cluster, ClusterState, GpuId, JobPlacement};
+use crate::jobs::{JobId, JobSpec};
+use crate::sched::{fa_ffp_select, lbsgf_select};
+use crate::Result;
+
+/// One waiting job as a policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedJob<'a> {
+    pub spec: &'a JobSpec,
+    /// Slots waited so far (`now − arrival`).
+    pub waited: u64,
+}
+
+/// Read-only view of the cluster at the current instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterView<'a> {
+    pub cluster: &'a Cluster,
+    state: &'a ClusterState,
+    /// Cumulative busy slots per GPU since t = 0 (the online analogue of
+    /// the ledger's `U_s^g` — a *historical* load key, not future info).
+    busy_history: &'a [f64],
+    pub now: u64,
+}
+
+impl<'a> ClusterView<'a> {
+    pub fn new(
+        cluster: &'a Cluster,
+        state: &'a ClusterState,
+        busy_history: &'a [f64],
+        now: u64,
+    ) -> Self {
+        debug_assert_eq!(busy_history.len(), cluster.num_gpus());
+        ClusterView { cluster, state, busy_history, now }
+    }
+
+    /// Is this GPU free right now?
+    pub fn is_free(&self, g: GpuId) -> bool {
+        self.state.is_free(g)
+    }
+
+    /// Total free GPUs.
+    pub fn total_free(&self) -> usize {
+        self.state.total_free()
+    }
+
+    /// Cumulative busy slots of one GPU.
+    pub fn busy_history(&self, g: GpuId) -> f64 {
+        self.busy_history[g.global]
+    }
+}
+
+/// A non-clairvoyant scheduling policy.
+///
+/// On every event the loop calls [`dispatch`](Self::dispatch) repeatedly:
+/// each call may start **one** queued job (returning its id and a
+/// placement of exactly `G_j` currently-free GPUs), or decline with
+/// `None` to wait for the next event. The loop validates the returned
+/// placement (gang size, GPUs actually free, job actually queued).
+pub trait OnlinePolicy {
+    fn name(&self) -> &'static str;
+
+    fn dispatch(
+        &mut self,
+        queue: &[QueuedJob<'_>],
+        view: &ClusterView<'_>,
+    ) -> Option<(JobId, JobPlacement)>;
+}
+
+impl<P: OnlinePolicy + ?Sized> OnlinePolicy for Box<P> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn dispatch(
+        &mut self,
+        queue: &[QueuedJob<'_>],
+        view: &ClusterView<'_>,
+    ) -> Option<(JobId, JobPlacement)> {
+        (**self).dispatch(queue, view)
+    }
+}
+
+/// First-fit over the currently free GPUs, in (server, index) order.
+fn first_fit_free(view: &ClusterView<'_>, gpus_needed: usize) -> Option<Vec<GpuId>> {
+    let mut picked = Vec::with_capacity(gpus_needed);
+    for g in view.cluster.all_gpus() {
+        if view.is_free(g) {
+            picked.push(g);
+            if picked.len() == gpus_needed {
+                return Some(picked);
+            }
+        }
+    }
+    None
+}
+
+/// **FIFO** — strict arrival order with head-of-line blocking: only the
+/// head of the queue may start; if its gang does not fit, nothing starts
+/// until the next completion.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl OnlinePolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn dispatch(
+        &mut self,
+        queue: &[QueuedJob<'_>],
+        view: &ClusterView<'_>,
+    ) -> Option<(JobId, JobPlacement)> {
+        let head = queue.first()?;
+        let gpus = first_fit_free(view, head.spec.gpus)?;
+        Some((head.spec.id, JobPlacement::new(gpus)))
+    }
+}
+
+/// **Online first-fit** — walk the queue in arrival order and start the
+/// first job whose gang fits the free GPUs (no head-of-line blocking,
+/// no size preference).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineFirstFit;
+
+impl OnlinePolicy for OnlineFirstFit {
+    fn name(&self) -> &'static str {
+        "ON-FF"
+    }
+
+    fn dispatch(
+        &mut self,
+        queue: &[QueuedJob<'_>],
+        view: &ClusterView<'_>,
+    ) -> Option<(JobId, JobPlacement)> {
+        for q in queue {
+            if let Some(gpus) = first_fit_free(view, q.spec.gpus) {
+                return Some((q.spec.id, JobPlacement::new(gpus)));
+            }
+        }
+        None
+    }
+}
+
+/// **FIFO + backfill** — arrival order, but when the head's gang does not
+/// fit, *strictly smaller* jobs may jump ahead (EASY-style backfill
+/// without reservations: a non-clairvoyant scheduler cannot predict when
+/// the head will fit, so only jobs that cannot delay it by definition —
+/// smaller ones that fit *now* — are promoted).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FifoBackfill;
+
+impl OnlinePolicy for FifoBackfill {
+    fn name(&self) -> &'static str {
+        "BACKFILL"
+    }
+
+    fn dispatch(
+        &mut self,
+        queue: &[QueuedJob<'_>],
+        view: &ClusterView<'_>,
+    ) -> Option<(JobId, JobPlacement)> {
+        let head = queue.first()?;
+        if let Some(gpus) = first_fit_free(view, head.spec.gpus) {
+            return Some((head.spec.id, JobPlacement::new(gpus)));
+        }
+        for q in &queue[1..] {
+            if q.spec.gpus < head.spec.gpus {
+                if let Some(gpus) = first_fit_free(view, q.spec.gpus) {
+                    return Some((q.spec.id, JobPlacement::new(gpus)));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// **Online SJF-BCO** — the paper's Algorithm 1 greedy core made
+/// non-clairvoyant: whenever capacity frees, start the *smallest queued
+/// job* (by `G_j`, then requested iterations, then id), placed with the
+/// same two subroutines as the batch planner — FA-FFP (Alg. 2) for small
+/// jobs (`G_j ≤ κ`), LBSGF (Alg. 3) for large ones — over the free GPUs,
+/// with cumulative historical busy time as the load key.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlineSjfBco {
+    /// Server-span threshold κ selecting FA-FFP vs LBSGF. The batch
+    /// planner sweeps κ over job sizes; online we fix it (default 8, the
+    /// paper mix's modal large-job size).
+    pub kappa: usize,
+    /// λ ≥ 1 over-provisioning of LBSGF's server pool.
+    pub lambda: f64,
+}
+
+impl Default for OnlineSjfBco {
+    fn default() -> Self {
+        OnlineSjfBco { kappa: 8, lambda: 1.0 }
+    }
+}
+
+impl OnlinePolicy for OnlineSjfBco {
+    fn name(&self) -> &'static str {
+        "ON-SJF-BCO"
+    }
+
+    fn dispatch(
+        &mut self,
+        queue: &[QueuedJob<'_>],
+        view: &ClusterView<'_>,
+    ) -> Option<(JobId, JobPlacement)> {
+        let q = queue
+            .iter()
+            .min_by_key(|q| (q.spec.gpus, q.spec.iterations, q.spec.id))?;
+        let free = |g: GpuId| view.is_free(g);
+        let load = |g: GpuId| view.busy_history(g);
+        // "warm" must be *current* occupancy, not cumulative history —
+        // history marks every server warm once each GPU has run anything.
+        let warm = |g: GpuId| !view.is_free(g);
+        let gpus = if q.spec.gpus <= self.kappa {
+            fa_ffp_select(view.cluster, q.spec.gpus, free, load, warm)
+        } else {
+            // LBSGF restricts to the least-loaded servers by *capacity*;
+            // under live occupancy those may not hold enough free GPUs,
+            // so fall back to cluster-wide FA-FFP rather than stall.
+            lbsgf_select(view.cluster, q.spec.gpus, self.lambda, free, load)
+                .or_else(|| fa_ffp_select(view.cluster, q.spec.gpus, free, load, warm))
+        }?;
+        Some((q.spec.id, JobPlacement::new(gpus)))
+    }
+}
+
+/// The online policies available from the CLI / benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OnlinePolicyKind {
+    SjfBco,
+    Fifo,
+    FirstFit,
+    Backfill,
+}
+
+impl OnlinePolicyKind {
+    pub const ALL: [OnlinePolicyKind; 4] = [
+        OnlinePolicyKind::SjfBco,
+        OnlinePolicyKind::Fifo,
+        OnlinePolicyKind::FirstFit,
+        OnlinePolicyKind::Backfill,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OnlinePolicyKind::SjfBco => "ON-SJF-BCO",
+            OnlinePolicyKind::Fifo => "FIFO",
+            OnlinePolicyKind::FirstFit => "ON-FF",
+            OnlinePolicyKind::Backfill => "BACKFILL",
+        }
+    }
+
+    /// Instantiate the policy with default tunables.
+    pub fn build(self) -> Box<dyn OnlinePolicy> {
+        match self {
+            OnlinePolicyKind::SjfBco => Box::new(OnlineSjfBco::default()),
+            OnlinePolicyKind::Fifo => Box::new(Fifo),
+            OnlinePolicyKind::FirstFit => Box::new(OnlineFirstFit),
+            OnlinePolicyKind::Backfill => Box::new(FifoBackfill),
+        }
+    }
+}
+
+impl std::fmt::Display for OnlinePolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for OnlinePolicyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sjf-bco" | "sjfbco" | "sjf_bco" | "on-sjf-bco" => Ok(OnlinePolicyKind::SjfBco),
+            "fifo" => Ok(OnlinePolicyKind::Fifo),
+            "ff" | "first-fit" | "firstfit" | "first_fit" | "on-ff" => {
+                Ok(OnlinePolicyKind::FirstFit)
+            }
+            "backfill" | "fifo-backfill" => Ok(OnlinePolicyKind::Backfill),
+            other => anyhow::bail!(
+                "unknown online policy '{other}' (expected sjf-bco|fifo|ff|backfill)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerId;
+
+    fn view_fixture(
+        cluster: &Cluster,
+        taken: &[(usize, usize)],
+    ) -> (ClusterState, Vec<f64>) {
+        let mut state = ClusterState::new(cluster);
+        if !taken.is_empty() {
+            let pl = JobPlacement::new(
+                taken.iter().map(|&(s, i)| cluster.global_gpu(ServerId(s), i)).collect(),
+            );
+            state.allocate(JobId(99), &pl);
+        }
+        (state, vec![0.0; cluster.num_gpus()])
+    }
+
+    #[test]
+    fn fifo_blocks_behind_big_head() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        // 6 of 8 GPUs taken: a 4-GPU head cannot fit, a 2-GPU job could
+        let (state, hist) = view_fixture(&c, &[(0, 0), (0, 1), (0, 2), (0, 3), (1, 0), (1, 1)]);
+        let view = ClusterView::new(&c, &state, &hist, 10);
+        let big = JobSpec::synthetic(JobId(0), 4);
+        let small = JobSpec::synthetic(JobId(1), 2);
+        let queue =
+            [QueuedJob { spec: &big, waited: 5 }, QueuedJob { spec: &small, waited: 1 }];
+        assert!(Fifo.dispatch(&queue, &view).is_none(), "FIFO must block");
+        let (job, pl) = FifoBackfill.dispatch(&queue, &view).expect("backfill promotes");
+        assert_eq!(job, JobId(1));
+        assert_eq!(pl.num_workers(), 2);
+        let (job, _) = OnlineFirstFit.dispatch(&queue, &view).expect("first fit skips");
+        assert_eq!(job, JobId(1));
+    }
+
+    #[test]
+    fn backfill_never_promotes_equal_or_larger_jobs() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let (state, hist) = view_fixture(&c, &[(0, 0), (0, 1), (0, 2), (0, 3), (1, 0), (1, 1)]);
+        let view = ClusterView::new(&c, &state, &hist, 10);
+        let head = JobSpec::synthetic(JobId(0), 4);
+        let peer = JobSpec::synthetic(JobId(1), 4); // same size: would fit? no (only 2 free)
+        let equal_small = JobSpec::synthetic(JobId(2), 2);
+        // make the "equal" job the same size as the head: must NOT jump
+        let mut same = equal_small.clone();
+        same.gpus = 4;
+        let queue = [
+            QueuedJob { spec: &head, waited: 0 },
+            QueuedJob { spec: &peer, waited: 0 },
+            QueuedJob { spec: &same, waited: 0 },
+        ];
+        assert!(FifoBackfill.dispatch(&queue, &view).is_none());
+    }
+
+    #[test]
+    fn sjf_picks_smallest_and_packs() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let (state, hist) = view_fixture(&c, &[]);
+        let view = ClusterView::new(&c, &state, &hist, 0);
+        let big = JobSpec::synthetic(JobId(0), 4);
+        let small = JobSpec::synthetic(JobId(1), 2);
+        let queue =
+            [QueuedJob { spec: &big, waited: 0 }, QueuedJob { spec: &small, waited: 0 }];
+        let mut policy = OnlineSjfBco::default();
+        let (job, pl) = policy.dispatch(&queue, &view).unwrap();
+        assert_eq!(job, JobId(1), "smallest job first");
+        assert_eq!(pl.span(), 1, "FA-FFP packs a 2-GPU ring onto one server");
+    }
+
+    #[test]
+    fn sjf_large_job_uses_lbsgf_with_fallback() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let (state, hist) = view_fixture(&c, &[(0, 0)]);
+        let view = ClusterView::new(&c, &state, &hist, 0);
+        let big = JobSpec::synthetic(JobId(0), 12);
+        let queue = [QueuedJob { spec: &big, waited: 0 }];
+        let mut policy = OnlineSjfBco { kappa: 4, lambda: 1.0 };
+        let (_, pl) = policy.dispatch(&queue, &view).expect("12 free GPUs exist");
+        assert_eq!(pl.num_workers(), 12);
+    }
+
+    #[test]
+    fn nothing_fits_returns_none_for_all_policies() {
+        let c = Cluster::uniform(1, 2, 1.0, 25.0);
+        let (state, hist) = view_fixture(&c, &[(0, 0), (0, 1)]);
+        let view = ClusterView::new(&c, &state, &hist, 0);
+        let j = JobSpec::synthetic(JobId(0), 1);
+        let queue = [QueuedJob { spec: &j, waited: 0 }];
+        for kind in OnlinePolicyKind::ALL {
+            assert!(kind.build().dispatch(&queue, &view).is_none(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn kind_parsing_roundtrip() {
+        for kind in OnlinePolicyKind::ALL {
+            let back: OnlinePolicyKind = match kind {
+                OnlinePolicyKind::SjfBco => "sjf-bco".parse().unwrap(),
+                OnlinePolicyKind::Fifo => "fifo".parse().unwrap(),
+                OnlinePolicyKind::FirstFit => "ff".parse().unwrap(),
+                OnlinePolicyKind::Backfill => "backfill".parse().unwrap(),
+            };
+            assert_eq!(back, kind);
+        }
+        assert!("nope".parse::<OnlinePolicyKind>().is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! The live pending queue: jobs that have arrived but not yet started.
+//!
+//! Kept in arrival order (FIFO); policies see it read-only through the
+//! [`QueuedJob`](super::policy::QueuedJob) view the scheduler builds, so
+//! a policy can reorder *its choice* but never mutate the queue itself.
+
+use crate::jobs::JobId;
+
+/// Arrival-ordered queue of waiting jobs.
+#[derive(Debug, Clone, Default)]
+pub struct PendingQueue {
+    /// (job, arrival slot) in arrival order.
+    entries: Vec<(JobId, u64)>,
+}
+
+impl PendingQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a newly arrived job. Arrivals must be pushed in
+    /// chronological order (the event loop guarantees this).
+    pub fn push(&mut self, job: JobId, arrival: u64) {
+        debug_assert!(
+            self.entries.last().map_or(true, |&(_, a)| a <= arrival),
+            "arrivals must be enqueued in chronological order"
+        );
+        debug_assert!(!self.contains(job), "{job} already queued");
+        self.entries.push((job, arrival));
+    }
+
+    /// Remove a job (on start); returns whether it was queued.
+    pub fn remove(&mut self, job: JobId) -> bool {
+        match self.entries.iter().position(|&(j, _)| j == job) {
+            Some(i) => {
+                self.entries.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Head of the queue (earliest arrival still waiting).
+    pub fn head(&self) -> Option<JobId> {
+        self.entries.first().map(|&(j, _)| j)
+    }
+
+    /// (job, arrival) pairs in arrival order.
+    pub fn iter(&self) -> impl Iterator<Item = (JobId, u64)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    pub fn contains(&self, job: JobId) -> bool {
+        self.entries.iter().any(|&(j, _)| j == job)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_removal() {
+        let mut q = PendingQueue::new();
+        q.push(JobId(3), 0);
+        q.push(JobId(1), 2);
+        q.push(JobId(2), 2);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.head(), Some(JobId(3)));
+        assert!(q.contains(JobId(1)));
+        assert!(q.remove(JobId(1)));
+        assert!(!q.remove(JobId(1)), "second removal is a no-op");
+        let order: Vec<_> = q.iter().map(|(j, _)| j.0).collect();
+        assert_eq!(order, vec![3, 2]);
+        assert!(q.remove(JobId(3)));
+        assert_eq!(q.head(), Some(JobId(2)));
+        assert!(q.remove(JobId(2)));
+        assert!(q.is_empty());
+        assert_eq!(q.head(), None);
+    }
+}

@@ -1,0 +1,224 @@
+//! Incremental contention tracking for the online event loop.
+//!
+//! The offline simulator rebuilds a [`ContentionSnapshot`] from scratch at
+//! every event — `O(Σ_j span_j)` over *all* active jobs, plus an
+//! allocation for the dense `p_j` table. That is fine for replaying one
+//! plan, but the online scheduler fields a continuous arrival stream
+//! where most events touch a single job. This tracker maintains the
+//! per-uplink active-job counts of Eq. 6 *incrementally*: admitting or
+//! completing a job costs `O(span_j)` of that one job, and `p_j` queries
+//! read the maintained counts directly with no rebuild and no allocation.
+//!
+//! In debug builds every mutation cross-checks the incremental counts
+//! against a full from-scratch rebuild (the invariant the
+//! `online_hot_path` bench exploits in release builds).
+
+use crate::cluster::{Cluster, JobPlacement};
+use crate::contention::ContentionSnapshot;
+use crate::jobs::JobId;
+
+/// Live per-uplink contention state of the running set.
+#[derive(Debug, Clone)]
+pub struct ContentionTracker {
+    /// `uplink_jobs[s] = Σ_{j active} 1{0 < y_js < G_j}` — the Eq. 6
+    /// count of spread rings crossing server `s`'s uplink.
+    uplink_jobs: Vec<usize>,
+    /// Active placements, indexed by dense `JobId`.
+    active: Vec<Option<JobPlacement>>,
+    num_active: usize,
+}
+
+impl ContentionTracker {
+    pub fn new(cluster: &Cluster) -> Self {
+        ContentionTracker {
+            uplink_jobs: vec![0; cluster.num_servers()],
+            active: Vec::new(),
+            num_active: 0,
+        }
+    }
+
+    /// Number of currently active jobs.
+    pub fn num_active(&self) -> usize {
+        self.num_active
+    }
+
+    /// Admit one job: `O(span_j)` count updates.
+    ///
+    /// Panics if the job is already active.
+    pub fn admit(&mut self, job: JobId, placement: &JobPlacement) {
+        if self.active.len() <= job.0 {
+            self.active.resize(job.0 + 1, None);
+        }
+        assert!(self.active[job.0].is_none(), "{job} already active in tracker");
+        if placement.is_spread() {
+            for s in placement.servers() {
+                self.uplink_jobs[s.0] += 1;
+            }
+        }
+        self.active[job.0] = Some(placement.clone());
+        self.num_active += 1;
+        self.debug_check_against_rebuild();
+    }
+
+    /// Complete one job: `O(span_j)` count updates.
+    ///
+    /// Panics if the job is not active.
+    pub fn complete(&mut self, job: JobId) {
+        let placement = self
+            .active
+            .get_mut(job.0)
+            .and_then(Option::take)
+            .unwrap_or_else(|| panic!("{job} not active in tracker"));
+        if placement.is_spread() {
+            for s in placement.servers() {
+                self.uplink_jobs[s.0] -= 1;
+            }
+        }
+        self.num_active -= 1;
+        self.debug_check_against_rebuild();
+    }
+
+    /// Contention degree `p_j[t]` (Eq. 6) of an active job: 0 for
+    /// co-located jobs, else the max maintained count over the servers its
+    /// ring crosses — `O(span_j)`, no rebuild.
+    pub fn p_j(&self, job: JobId) -> usize {
+        let pl = self
+            .active
+            .get(job.0)
+            .and_then(|o| o.as_ref())
+            .unwrap_or_else(|| panic!("{job} not active in tracker"));
+        if pl.is_spread() {
+            pl.servers().map(|s| self.uplink_jobs[s.0]).max().unwrap_or(0)
+        } else {
+            0
+        }
+    }
+
+    /// Placement of an active job, if any.
+    pub fn placement(&self, job: JobId) -> Option<&JobPlacement> {
+        self.active.get(job.0).and_then(|o| o.as_ref())
+    }
+
+    /// Largest contention degree across all active jobs — equals
+    /// `max_s uplink_jobs[s]`, `O(|S|)`.
+    pub fn max_contention(&self) -> usize {
+        self.uplink_jobs.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Active (job, placement) pairs in job-id order.
+    pub fn active_jobs(&self) -> impl Iterator<Item = (JobId, &JobPlacement)> {
+        self.active
+            .iter()
+            .enumerate()
+            .filter_map(|(i, o)| o.as_ref().map(|pl| (JobId(i), pl)))
+    }
+
+    /// Full from-scratch [`ContentionSnapshot`] over the active set — the
+    /// `O(jobs × span)` baseline the tracker replaces (kept for the debug
+    /// cross-check, property tests and the hot-path bench).
+    pub fn full_rebuild(&self, cluster: &Cluster) -> ContentionSnapshot {
+        let refs: Vec<(JobId, &JobPlacement)> = self.active_jobs().collect();
+        ContentionSnapshot::build_ref(cluster, &refs)
+    }
+
+    /// Debug invariant: incremental counts equal a full recount.
+    fn debug_check_against_rebuild(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut expect = vec![0usize; self.uplink_jobs.len()];
+            for pl in self.active.iter().flatten() {
+                if pl.is_spread() {
+                    for s in pl.servers() {
+                        expect[s.0] += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(
+                expect, self.uplink_jobs,
+                "incremental uplink counts diverged from full rebuild"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerId;
+
+    fn mk(c: &Cluster, pairs: &[(usize, usize)]) -> JobPlacement {
+        JobPlacement::new(pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect())
+    }
+
+    #[test]
+    fn matches_snapshot_on_the_three_way_case() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (2, 0)]));
+        tr.admit(JobId(2), &mk(&c, &[(0, 2), (3, 0)]));
+        tr.admit(JobId(3), &mk(&c, &[(2, 1), (3, 1)]));
+        assert_eq!(tr.p_j(JobId(0)), 3);
+        assert_eq!(tr.p_j(JobId(1)), 3);
+        assert_eq!(tr.p_j(JobId(2)), 3);
+        assert_eq!(tr.p_j(JobId(3)), 2);
+        assert_eq!(tr.max_contention(), 3);
+        let snap = tr.full_rebuild(&c);
+        for (j, _) in tr.active_jobs() {
+            assert_eq!(tr.p_j(j), snap.p_j(j));
+        }
+        assert_eq!(tr.max_contention(), snap.max_contention());
+    }
+
+    #[test]
+    fn completion_decrements_counts() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (1, 1)]));
+        assert_eq!(tr.p_j(JobId(0)), 2);
+        tr.complete(JobId(1));
+        assert_eq!(tr.p_j(JobId(0)), 1, "job counts only itself after the peer leaves");
+        tr.complete(JobId(0));
+        assert_eq!(tr.num_active(), 0);
+        assert_eq!(tr.max_contention(), 0);
+    }
+
+    #[test]
+    fn colocated_jobs_do_not_contend() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (0, 1)]));
+        tr.admit(JobId(1), &mk(&c, &[(0, 2), (1, 0)]));
+        assert_eq!(tr.p_j(JobId(0)), 0, "co-located ring never crosses an uplink");
+        assert_eq!(tr.p_j(JobId(1)), 1, "spread ring counts itself");
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_admit_panics() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        let pl = mk(&c, &[(0, 0)]);
+        tr.admit(JobId(0), &pl);
+        tr.admit(JobId(0), &pl);
+    }
+
+    #[test]
+    #[should_panic]
+    fn completing_inactive_job_panics() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.complete(JobId(7));
+    }
+
+    #[test]
+    fn id_reuse_after_completion_is_allowed() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        tr.complete(JobId(0));
+        tr.admit(JobId(0), &mk(&c, &[(0, 1), (1, 1)]));
+        assert_eq!(tr.p_j(JobId(0)), 1);
+    }
+}

@@ -172,31 +172,38 @@ fn try_schedule(
     Some((makespan, entries))
 }
 
-/// Algorithm 2 — Fragment-Aware First-Fit Packing.
+/// Algorithm 2 — Fragment-Aware First-Fit Packing, as a *single-job*
+/// selection subroutine over arbitrary eligibility/load views.
 ///
-/// Eligible = GPUs with `U + ρ̂/u ≤ θ`. Picks the `G_j` least-busy
-/// eligible GPUs (Line 4), tie-breaking towards servers that already host
-/// load (the "fragment-aware" packing bias), then by (server, index) for
-/// determinism.
-pub(crate) fn fa_ffp(
+/// Picks the `gpus_needed` least-busy eligible GPUs (Line 4),
+/// tie-breaking towards servers that already host work per `warm` (the
+/// "fragment-aware" packing bias), then by (server, index) for
+/// determinism. `warm` is separate from `busy` because the two notions
+/// diverge for online callers: the batch planner calls this through
+/// [`fa_ffp`] with the ledger's `U + ρ̂/u ≤ θ` eligibility and
+/// `warm = U > 0`; the [`online`](crate::online) policies pass "GPU
+/// currently free" eligibility, *cumulative* busy history as the load
+/// key, and `warm = currently occupied` — cumulative history would mark
+/// every server warm once each GPU has run anything, silencing the bias.
+pub fn fa_ffp_select(
     cluster: &Cluster,
-    ledger: &GpuLedger,
-    job: &JobSpec,
-    rho_over_u: f64,
-    theta: f64,
+    gpus_needed: usize,
+    eligible: impl Fn(GpuId) -> bool,
+    busy: impl Fn(GpuId) -> f64,
+    warm: impl Fn(GpuId) -> bool,
 ) -> Option<Vec<GpuId>> {
-    let mut eligible: Vec<GpuId> =
-        cluster.all_gpus().filter(|g| ledger.eligible(*g, rho_over_u, theta)).collect();
-    if eligible.len() < job.gpus {
+    let mut candidates: Vec<GpuId> = cluster.all_gpus().filter(|g| eligible(*g)).collect();
+    if candidates.len() < gpus_needed {
         return None; // Alg. 2 Lines 8–10: no capacity under θ
     }
     // occupancy per server (computed once per call)
-    let occ: Vec<usize> =
-        cluster.server_ids().map(|s| ledger.server_occupancy(cluster, s)).collect();
+    let occ: Vec<usize> = cluster
+        .server_ids()
+        .map(|s| cluster.gpus_of(s).filter(|g| warm(*g)).count())
+        .collect();
     let cmp = |a: &GpuId, b: &GpuId| {
-        ledger
-            .busy(*a)
-            .partial_cmp(&ledger.busy(*b))
+        busy(*a)
+            .partial_cmp(&busy(*b))
             .unwrap()
             .then(occ[b.server.0].cmp(&occ[a.server.0])) // prefer warm servers
             .then(a.server.cmp(&b.server))
@@ -204,35 +211,52 @@ pub(crate) fn fa_ffp(
     };
     // §Perf: selection instead of a full sort — only the top-G_j least
     // loaded GPUs matter, and placements are order-insensitive.
-    if eligible.len() > job.gpus {
-        eligible.select_nth_unstable_by(job.gpus - 1, cmp);
-        eligible.truncate(job.gpus);
+    if candidates.len() > gpus_needed {
+        candidates.select_nth_unstable_by(gpus_needed - 1, cmp);
+        candidates.truncate(gpus_needed);
     }
-    Some(eligible)
+    Some(candidates)
 }
 
-/// Algorithm 3 — Least Busy Server-GPU First.
-///
-/// Sort servers by average load `Σ_g U_s^g / O_s`, take the `m` least
-/// loaded whose capacities sum to `≥ λ_j G_j` (Line 2), then pick the
-/// `G_j` least-busy eligible GPUs within them (Lines 4–7).
-pub(crate) fn lbsgf(
+/// Ledger-eligibility wrapper of [`fa_ffp_select`] used by Algorithm 1:
+/// eligible = GPUs with `U + ρ̂/u ≤ θ`, load key = `U_s^g`.
+pub(crate) fn fa_ffp(
     cluster: &Cluster,
     ledger: &GpuLedger,
     job: &JobSpec,
     rho_over_u: f64,
     theta: f64,
-    lambda: f64,
 ) -> Option<Vec<GpuId>> {
+    fa_ffp_select(
+        cluster,
+        job.gpus,
+        |g| ledger.eligible(g, rho_over_u, theta),
+        |g| ledger.busy(g),
+        |g| ledger.busy(g) > 0.0,
+    )
+}
+
+/// Algorithm 3 — Least Busy Server-GPU First, as a *single-job* selection
+/// subroutine over arbitrary eligibility/load views.
+///
+/// Sort servers by average load `Σ_g busy / O_s`, take the `m` least
+/// loaded whose capacities sum to `≥ λ · gpus_needed` (Line 2), then pick
+/// the `gpus_needed` least-busy eligible GPUs within them (Lines 4–7).
+pub fn lbsgf_select(
+    cluster: &Cluster,
+    gpus_needed: usize,
+    lambda: f64,
+    eligible: impl Fn(GpuId) -> bool,
+    busy: impl Fn(GpuId) -> f64,
+) -> Option<Vec<GpuId>> {
+    let server_load = |s: crate::cluster::ServerId| -> f64 {
+        cluster.gpus_of(s).map(&busy).sum::<f64>() / cluster.capacity(s) as f64
+    };
     let mut servers: Vec<_> = cluster.server_ids().collect();
     servers.sort_by(|a, b| {
-        ledger
-            .server_load(cluster, *a)
-            .partial_cmp(&ledger.server_load(cluster, *b))
-            .unwrap()
-            .then(a.cmp(b))
+        server_load(*a).partial_cmp(&server_load(*b)).unwrap().then(a.cmp(b))
     });
-    let need = (lambda * job.gpus as f64).ceil() as usize;
+    let need = (lambda * gpus_needed as f64).ceil() as usize;
     let mut selected = Vec::new();
     let mut cap = 0usize;
     for s in servers {
@@ -253,21 +277,36 @@ pub(crate) fn lbsgf(
     // mechanism of Fig. 7: a larger λ widens the candidate pool, so a
     // tight θ_u stays feasible (fresh servers can be opened) and the
     // bisection settles at a smaller execution-time limit.
-    let mut eligible: Vec<GpuId> = Vec::new();
+    let mut candidates: Vec<GpuId> = Vec::new();
     for s in &selected {
-        let mut gs: Vec<GpuId> = cluster
-            .gpus_of(*s)
-            .filter(|g| ledger.eligible(*g, rho_over_u, theta))
-            .collect();
+        let mut gs: Vec<GpuId> = cluster.gpus_of(*s).filter(|g| eligible(*g)).collect();
         gs.sort_by(|a, b| {
-            ledger.busy(*a).partial_cmp(&ledger.busy(*b)).unwrap().then(a.index.cmp(&b.index))
+            busy(*a).partial_cmp(&busy(*b)).unwrap().then(a.index.cmp(&b.index))
         });
-        eligible.extend(gs);
+        candidates.extend(gs);
     }
-    if eligible.len() < job.gpus {
+    if candidates.len() < gpus_needed {
         return None; // Alg. 3 Lines 11–13
     }
-    Some(eligible[..job.gpus].to_vec())
+    Some(candidates[..gpus_needed].to_vec())
+}
+
+/// Ledger-eligibility wrapper of [`lbsgf_select`] used by Algorithm 1.
+pub(crate) fn lbsgf(
+    cluster: &Cluster,
+    ledger: &GpuLedger,
+    job: &JobSpec,
+    rho_over_u: f64,
+    theta: f64,
+    lambda: f64,
+) -> Option<Vec<GpuId>> {
+    lbsgf_select(
+        cluster,
+        job.gpus,
+        lambda,
+        |g| ledger.eligible(g, rho_over_u, theta),
+        |g| ledger.busy(g),
+    )
 }
 
 #[cfg(test)]

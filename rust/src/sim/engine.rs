@@ -1,5 +1,6 @@
 //! The time-slotted simulation engine.
 
+use super::kernel::{self, RatePoint};
 use super::{JobRecord, SimOutcome};
 use crate::cluster::{Cluster, ClusterState, JobPlacement};
 use crate::contention::{ContentionParams, ContentionSnapshot};
@@ -137,19 +138,18 @@ impl<'a> Simulator<'a> {
                 active.iter().map(|a| (a.job, a.placement)).collect();
             let snap = ContentionSnapshot::build_ref(self.cluster, &refs);
 
-            // Per-job rates for this period.
-            let rates: Vec<(usize, f64, f64)> = active
+            // Per-job rates for this period (shared kernel arithmetic).
+            let rates: Vec<RatePoint> = active
                 .iter()
                 .map(|a| {
-                    let p = snap.p_j(a.job);
-                    let tau = self.params.tau(self.cluster, a.spec, a.placement, p);
-                    let phi = self.params.phi(tau);
-                    let inc = if phi == 0 && self.options.fractional_progress {
-                        1.0 / tau
-                    } else {
-                        phi as f64
-                    };
-                    (p, tau, inc)
+                    kernel::rate_point(
+                        self.params,
+                        self.cluster,
+                        a.spec,
+                        a.placement,
+                        snap.p_j(a.job),
+                        self.options.fractional_progress,
+                    )
                 })
                 .collect();
 
@@ -159,14 +159,10 @@ impl<'a> Simulator<'a> {
                 1
             } else {
                 let mut dt = u64::MAX;
-                for (a, (_, _, inc)) in active.iter().zip(&rates) {
+                for (a, r) in active.iter().zip(&rates) {
                     let remaining = a.spec.iterations as f64 - a.progress;
-                    let slots = if *inc > 0.0 {
-                        (remaining / inc).ceil().max(1.0) as u64
-                    } else {
-                        u64::MAX // stalled: bounded below by max_slots
-                    };
-                    dt = dt.min(slots);
+                    // stalled jobs yield u64::MAX, bounded below by max_slots
+                    dt = dt.min(kernel::slots_until_done(remaining, r.inc));
                 }
                 // the next future arrival can unlock an admission
                 let next_arrival = pending
@@ -181,11 +177,11 @@ impl<'a> Simulator<'a> {
             };
 
             // 4) Progress every active job by dt periods of φ_j.
-            for (a, (p, tau, inc)) in active.iter_mut().zip(&rates) {
-                a.progress += inc * dt as f64;
-                a.tau_sum += tau * dt as f64;
+            for (a, r) in active.iter_mut().zip(&rates) {
+                a.progress += r.inc * dt as f64;
+                a.tau_sum += r.tau * dt as f64;
                 a.tau_slots += dt;
-                a.max_p = a.max_p.max(*p);
+                a.max_p = a.max_p.max(r.p);
                 busy_gpu_slots += a.placement.num_workers() as u64 * dt;
             }
             t += dt;
@@ -202,6 +198,7 @@ impl<'a> Simulator<'a> {
                         start: a.start,
                         finish: t,
                         span: a.placement.span(),
+                        workers: a.placement.num_workers(),
                         max_p: a.max_p,
                         mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
                         iterations_done: a.spec.iterations,
@@ -221,6 +218,7 @@ impl<'a> Simulator<'a> {
                 start: a.start,
                 finish: t,
                 span: a.placement.span(),
+                workers: a.placement.num_workers(),
                 max_p: a.max_p,
                 mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
                 iterations_done: a.progress as u64,

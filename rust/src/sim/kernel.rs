@@ -1,0 +1,93 @@
+//! The event-driven simulation core shared by the offline replay engine
+//! ([`Simulator`](super::Simulator)) and the non-clairvoyant
+//! [`online`](crate::online) scheduler loop.
+//!
+//! Between two scheduling events (an admission or a completion) the active
+//! set is constant, so every job's contention degree `p_j`, per-iteration
+//! time `τ_j` (Eq. 8) and progress rate `φ_j` (Eq. 9) are constant too.
+//! Both engines therefore advance time in *periods*: compute each active
+//! job's [`RatePoint`], jump `dt = min(next completion, next arrival)`
+//! slots at once, and only then re-evaluate. These helpers are that
+//! shared per-period arithmetic — keeping the two engines numerically
+//! identical by construction.
+
+use crate::cluster::{Cluster, JobPlacement};
+use crate::contention::ContentionParams;
+use crate::jobs::JobSpec;
+
+/// One active job's constant-rate operating point for the current period.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RatePoint {
+    /// Contention degree `p_j[t]` (Eq. 6).
+    pub p: usize,
+    /// Per-iteration time `τ_j[t]` in slots (Eq. 8).
+    pub tau: f64,
+    /// Iterations completed per slot: `φ_j = ⌊1/τ⌋`, or the fractional
+    /// fallback `1/τ` when enabled and `φ` floors to zero.
+    pub inc: f64,
+}
+
+/// Evaluate one job's operating point given its contention degree.
+pub fn rate_point(
+    params: &ContentionParams,
+    cluster: &Cluster,
+    spec: &JobSpec,
+    placement: &JobPlacement,
+    p: usize,
+    fractional_progress: bool,
+) -> RatePoint {
+    let tau = params.tau(cluster, spec, placement, p);
+    let phi = params.phi(tau);
+    let inc = if phi == 0 && fractional_progress { 1.0 / tau } else { phi as f64 };
+    RatePoint { p, tau, inc }
+}
+
+/// Slots until `remaining` iterations finish at `inc` iterations/slot
+/// (at least 1); `u64::MAX` for a stalled job (`inc == 0`), which the
+/// caller bounds by its safety horizon.
+pub fn slots_until_done(remaining: f64, inc: f64) -> u64 {
+    if inc > 0.0 {
+        (remaining / inc).ceil().max(1.0) as u64
+    } else {
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerId;
+    use crate::jobs::JobId;
+
+    #[test]
+    fn rate_point_matches_params() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let job = JobSpec::synthetic(JobId(0), 2);
+        let pl = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(0), 1)]);
+        let r = rate_point(&params, &c, &job, &pl, 0, false);
+        assert_eq!(r.p, 0);
+        assert!((r.tau - params.tau(&c, &job, &pl, 0)).abs() < 1e-15);
+        assert_eq!(r.inc, params.phi(r.tau) as f64);
+    }
+
+    #[test]
+    fn fractional_fallback_only_when_enabled() {
+        let c = Cluster::uniform(2, 4, 0.001, 25.0); // starved inter-server link
+        let params = ContentionParams::paper();
+        let job = JobSpec::synthetic(JobId(0), 2);
+        let pl = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(1), 0)]);
+        let stalled = rate_point(&params, &c, &job, &pl, 1, false);
+        assert_eq!(stalled.inc, 0.0, "tau {} should floor phi to 0", stalled.tau);
+        let frac = rate_point(&params, &c, &job, &pl, 1, true);
+        assert!(frac.inc > 0.0 && frac.inc < 1.0);
+    }
+
+    #[test]
+    fn slots_until_done_edges() {
+        assert_eq!(slots_until_done(100.0, 50.0), 2);
+        assert_eq!(slots_until_done(101.0, 50.0), 3);
+        assert_eq!(slots_until_done(0.5, 50.0), 1, "at least one slot");
+        assert_eq!(slots_until_done(10.0, 0.0), u64::MAX, "stalled");
+    }
+}

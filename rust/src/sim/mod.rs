@@ -10,6 +10,7 @@
 //! the reported makespan reflects actual contention, not estimates.
 
 mod engine;
+pub mod kernel;
 mod outcome;
 
 pub use engine::{SimOptions, Simulator};

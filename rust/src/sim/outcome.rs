@@ -14,6 +14,8 @@ pub struct JobRecord {
     pub finish: u64,
     /// Server span of the placement.
     pub span: usize,
+    /// Workers (GPUs) in the gang — `G_j`.
+    pub workers: usize,
     /// Max contention degree `p_j[t]` observed over the job's lifetime.
     pub max_p: usize,
     /// Time-average per-iteration time (slots).
@@ -51,6 +53,18 @@ pub struct SimOutcome {
     pub truncated: bool,
 }
 
+/// Nearest-rank percentile (p in [0, 100]) over unsorted values; 0 when
+/// empty. Shared by every per-job percentile metric so the rank rule
+/// cannot drift between them.
+fn percentile_of(mut values: Vec<u64>, p: f64) -> u64 {
+    if values.is_empty() {
+        return 0;
+    }
+    values.sort_unstable();
+    let idx = ((p / 100.0) * (values.len() - 1) as f64).round() as usize;
+    values[idx.min(values.len() - 1)]
+}
+
 impl SimOutcome {
     pub fn record(&self, job: JobId) -> Option<&JobRecord> {
         self.records.iter().find(|r| r.job == job)
@@ -58,13 +72,7 @@ impl SimOutcome {
 
     /// p-th percentile of JCT (p in [0, 100]).
     pub fn jct_percentile(&self, p: f64) -> u64 {
-        if self.records.is_empty() {
-            return 0;
-        }
-        let mut jcts: Vec<u64> = self.records.iter().map(|r| r.jct()).collect();
-        jcts.sort_unstable();
-        let idx = ((p / 100.0) * (jcts.len() - 1) as f64).round() as usize;
-        jcts[idx.min(jcts.len() - 1)]
+        percentile_of(self.records.iter().map(|r| r.jct()).collect(), p)
     }
 
     /// Mean queueing delay.
@@ -73,6 +81,30 @@ impl SimOutcome {
             return 0.0;
         }
         self.records.iter().map(|r| r.wait() as f64).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// p-th percentile of queueing delay (arrival → start), p in [0, 100].
+    pub fn wait_percentile(&self, p: f64) -> u64 {
+        percentile_of(self.records.iter().map(|r| r.wait()).collect(), p)
+    }
+
+    /// Time-averaged GPU utilization over the span the cluster was
+    /// actually in service: busy GPU-slots divided by capacity between the
+    /// first start and the last finish. Under staggered arrivals this
+    /// excludes the leading idle period [`gpu_utilization`](Self::gpu_utilization)
+    /// charges to the cluster, so it is the fairer online metric.
+    pub fn service_utilization(&self, num_gpus: usize) -> f64 {
+        let first_start = self.records.iter().map(|r| r.start).min().unwrap_or(0);
+        let span = self.makespan.saturating_sub(first_start);
+        if span == 0 || num_gpus == 0 {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .records
+            .iter()
+            .map(|r| (r.finish - r.start) as f64 * r.workers as f64)
+            .sum();
+        busy / (span * num_gpus as u64) as f64
     }
 }
 
@@ -87,6 +119,7 @@ mod tests {
             start,
             finish,
             span: 1,
+            workers: 1,
             max_p: 0,
             mean_tau: 0.02,
             iterations_done: 100,
@@ -108,6 +141,12 @@ mod tests {
         assert_eq!(out.jct_percentile(50.0), 20);
         assert!((out.avg_wait() - 5.0).abs() < 1e-12);
         assert!(out.record(JobId(1)).is_some());
+        assert_eq!(out.wait_percentile(0.0), 0);
+        assert_eq!(out.wait_percentile(100.0), 10);
+        assert_eq!(out.wait_percentile(50.0), 5);
+        // busy = 10 + 15 + 30 = 55 GPU-slots over 40 slots x 1 GPU... the
+        // fixture pretends a 2-GPU cluster for a fractional check:
+        assert!((out.service_utilization(2) - 55.0 / 80.0).abs() < 1e-12);
     }
 
     #[test]
@@ -122,5 +161,7 @@ mod tests {
         };
         assert_eq!(out.jct_percentile(50.0), 0);
         assert_eq!(out.avg_wait(), 0.0);
+        assert_eq!(out.wait_percentile(95.0), 0);
+        assert_eq!(out.service_utilization(8), 0.0);
     }
 }

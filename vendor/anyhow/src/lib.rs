@@ -1,0 +1,159 @@
+//! Minimal offline shim of the `anyhow` API surface used by `rarsched`.
+//!
+//! Provides [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros and
+//! the [`Context`] extension trait. An error is a message plus a chain of
+//! context frames; `{:#}` renders the whole chain ("outermost: cause:
+//! ...") like the real crate.
+
+use std::fmt;
+
+/// A dynamic error: the outermost message first, then successively deeper
+/// causes (the reverse of how contexts were attached).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach a higher-level context message (becomes the new outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the chain from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (deepest message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, outermost first
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug mirrors the real crate: message plus causes.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Blanket conversion from any std error (io, parse, ...). `Error` itself
+// deliberately does NOT implement `std::error::Error`, exactly like the
+// real anyhow, so this impl cannot overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to any
+/// `Result` whose error converts into [`Error`] (std errors and `Error`
+/// itself).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{anyhow, bail};
+
+    fn parse(s: &str) -> Result<u64> {
+        let n: u64 = s.parse()?; // std error converts via `?`
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_chains_render_alternate() {
+        let e: Error = parse("x").context("reading config").unwrap_err();
+        let plain = format!("{e}");
+        let full = format!("{e:#}");
+        assert_eq!(plain, "reading config");
+        assert!(full.starts_with("reading config: "), "got {full}");
+        assert!(full.len() > plain.len());
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(f(false).unwrap_err().root_cause(), "fell through");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

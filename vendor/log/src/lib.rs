@@ -1,0 +1,219 @@
+//! Minimal offline shim of the `log` facade API used by `rarsched`.
+//!
+//! Provides the five level macros, [`Level`] / [`LevelFilter`],
+//! [`Metadata`] / [`Record`], the [`Log`] trait and the global logger
+//! registry (`set_logger` / `set_max_level` / `max_level`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Verbosity level of one record, most severe first (matches the real
+/// crate's ordering: `Error < Warn < Info < Debug < Trace`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Maximum-verbosity filter (`Off` disables everything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of one record: its level and target (module path).
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the pre-formatted arguments.
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: Mutex<Option<&'static dyn Log>> = Mutex::new(None);
+
+/// Install the global logger; fails if one is already set.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let mut slot = LOGGER.lock().unwrap();
+    if slot.is_some() {
+        return Err(SetLoggerError(()));
+    }
+    *slot = Some(logger);
+    Ok(())
+}
+
+/// Set the global maximum verbosity.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current global maximum verbosity.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __dispatch(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level > max_level() {
+        return;
+    }
+    let slot = LOGGER.lock().unwrap();
+    if let Some(logger) = *slot {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__dispatch($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(!(Level::Error <= LevelFilter::Off));
+    }
+
+    // One combined test: the global max-level is process-wide state, and
+    // the libtest harness runs tests concurrently.
+    #[test]
+    fn max_level_roundtrip_and_dispatch_without_logger() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Trace);
+        assert_eq!(max_level(), LevelFilter::Trace);
+        crate::info!("no logger installed — must not panic: {}", 42);
+        set_max_level(LevelFilter::Off);
+        assert_eq!(max_level(), LevelFilter::Off);
+    }
+}

@@ -1,0 +1,219 @@
+//! Offline **stub** of the PJRT/XLA binding surface used by `rarsched`.
+//!
+//! The scheduler, simulator and online subsystem never touch XLA; only the
+//! live-training runtime (`rarsched::runtime`, the `train`/`verify`
+//! subcommands and the artifact-gated tests) does. Those paths are gated
+//! on an artifacts directory produced by `make artifacts`, and skip
+//! cleanly when it is absent — so this stub only needs to *type-check*
+//! the runtime layer. Every entry point that would require a real PJRT
+//! backend returns [`Error::Unavailable`] with a clear message.
+//!
+//! Swap this crate for real PJRT bindings by changing the `xla` path
+//! dependency in `rust/Cargo.toml`.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type of the stub. `Unavailable` marks the entry points that need
+/// a real backend.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+    Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT backend not available in this offline build \
+                 (the `xla` dependency is the in-tree stub; see vendor/README.md)"
+            ),
+            Error::Other(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type XResult<T> = std::result::Result<T, Error>;
+
+/// Element dtypes used by the runtime layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// A host-side literal (stub: carries only shape/dtype bookkeeping).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dtype: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Literal { dtype: ElementType::F32, dims: vec![values.len() as i64], bytes }
+    }
+
+    /// Reshape to new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> XResult<Literal> {
+        let want: i64 = dims.iter().product();
+        let have: i64 = self.dims.iter().product();
+        if want != have {
+            return Err(Error::Other(format!(
+                "reshape: cannot view {have} elements as {dims:?}"
+            )));
+        }
+        Ok(Literal { dtype: self.dtype, dims: dims.to_vec(), bytes: self.bytes.clone() })
+    }
+
+    /// Build a literal from a shape and raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        dtype: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> XResult<Literal> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * 4 {
+            return Err(Error::Other(format!(
+                "literal: {} bytes for shape {dims:?} (want {})",
+                data.len(),
+                elems * 4
+            )));
+        }
+        Ok(Literal {
+            dtype,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    /// Copy out as a typed vector (stub: f32 only carries real data).
+    pub fn to_vec<T: FromLeBytes>(&self) -> XResult<Vec<T>> {
+        Ok(self.bytes.chunks_exact(4).map(T::from_le_4).collect())
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples, so
+    /// this is only reachable after an `Unavailable` error upstream.
+    pub fn to_tuple(&self) -> XResult<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Helper trait for [`Literal::to_vec`] (f32 / i32 payloads).
+pub trait FromLeBytes {
+    fn from_le_4(b: &[u8]) -> Self;
+}
+
+impl FromLeBytes for f32 {
+    fn from_le_4(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl FromLeBytes for i32 {
+    fn from_le_4(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails — it would need XLA).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> XResult<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XResult<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> XResult<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client (stub: construction fails with a clear message).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> XResult<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> XResult<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let sq = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(sq.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn untyped_data_size_checked() {
+        let ok = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2],
+            &[1, 0, 0, 0, 2, 0, 0, 0],
+        )
+        .unwrap();
+        assert_eq!(ok.to_vec::<i32>().unwrap(), vec![1, 2]);
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn backend_paths_report_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("offline"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
