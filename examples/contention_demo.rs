@@ -46,7 +46,10 @@ fn main() -> rarsched::Result<()> {
     let snap = ContentionSnapshot::build(&cluster, &placements);
     println!("\nEq. 6 contention degree with all four jobs active:");
     for (id, _) in &placements {
-        println!("  p_{id} = {}", snap.p_j(*id));
+        // try_p_j: reporting tolerates jobs absent from the snapshot
+        // (completed / not yet admitted) instead of panicking.
+        let p = snap.try_p_j(*id).map_or("-".to_string(), |p| p.to_string());
+        println!("  p_{id} = {p}");
     }
 
     // End-to-end JCT comparison (the [19] experiment shape).

@@ -18,8 +18,13 @@ fn main() -> rarsched::Result<()> {
     let gap = 5.0;
 
     // 1) The full comparison table (same as `rarsched online --gap 5`).
-    let table = online_comparison(&setup, gap, &OnlinePolicyKind::ALL, true)?;
+    let table = online_comparison(&setup, gap, &OnlinePolicyKind::ALL, true, None)?;
     println!("{}", table.to_table());
+
+    // 1b) The same stream squeezed into bursts (`--burst 25:100`).
+    let bursty =
+        online_comparison(&setup, gap, &[OnlinePolicyKind::SjfBco], false, Some((25, 100)))?;
+    println!("{}", bursty.to_table());
 
     // 2) Peek inside one run: the event sequence the loop reacted to.
     let cluster = setup.cluster();

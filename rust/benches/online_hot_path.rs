@@ -1,18 +1,25 @@
 //! Online event-loop hot path: incremental contention tracking vs the
-//! full per-event `ContentionSnapshot` rebuild it replaces.
+//! full per-event `ContentionSnapshot` rebuild it replaces — on the flat
+//! fabric AND on a rack fabric, where the tracker maintains per-link
+//! (server uplink + ToR) counts in `O(path)` per admit/complete.
 //!
-//! Per scheduling event the loop needs (a) updated per-uplink counts and
-//! (b) `p_j` for the jobs it re-rates. The offline engine pays a full
-//! `O(active × span)` rebuild + allocation for that; the tracker pays
-//! `O(span)` of the one churned job. Run with `--release` so the
+//! Per scheduling event the loop needs (a) updated per-link counts and
+//! (b) the bottleneck for the jobs it re-rates. The offline engine pays a
+//! full `O(active × span)` rebuild + allocation for that; the tracker
+//! pays `O(path)` of the one churned job. Run with `--release` so the
 //! tracker's debug cross-check (which itself rebuilds) is compiled out.
+//!
+//! Results are also written to `BENCH_topology.json` (override the path
+//! with `RARSCHED_BENCH_OUT`) so `scripts/verify.sh` records the perf
+//! trajectory across PRs.
 
 use rarsched::cluster::{Cluster, GpuId, JobPlacement};
 use rarsched::contention::ContentionSnapshot;
 use rarsched::jobs::JobId;
 use rarsched::online::ContentionTracker;
-use rarsched::util::bench::Bench;
-use rarsched::util::Rng;
+use rarsched::topology::Topology;
+use rarsched::util::bench::{Bench, CaseResult};
+use rarsched::util::{Json, Rng};
 
 fn random_placement(cluster: &Cluster, rng: &mut Rng, k: usize) -> JobPlacement {
     let mut gpus: Vec<GpuId> = cluster.all_gpus().collect();
@@ -21,26 +28,24 @@ fn random_placement(cluster: &Cluster, rng: &mut Rng, k: usize) -> JobPlacement 
     JobPlacement::new(gpus)
 }
 
-fn main() {
-    let cluster = Cluster::random(20, 7);
-    let mut rng = Rng::seed_from_u64(42);
-    let mut b = Bench::new("online_hot_path");
-
+/// One fabric's sweep: churn one job against standing sets of growing
+/// size, timing the incremental tracker against the full rebuild.
+fn sweep(b: &mut Bench, tag: &str, cluster: &Cluster, rng: &mut Rng) {
     for &active_jobs in &[16usize, 64, 256] {
         // a realistic standing set: mixed 2–8 GPU gangs, mostly spread
         let placements: Vec<(JobId, JobPlacement)> = (0..active_jobs)
-            .map(|i| (JobId(i), random_placement(&cluster, &mut rng, 2 + (i % 7))))
+            .map(|i| (JobId(i), random_placement(cluster, rng, 2 + (i % 7))))
             .collect();
-        let mut tracker = ContentionTracker::new(&cluster);
+        let mut tracker = ContentionTracker::new(cluster);
         for (job, pl) in &placements {
             tracker.admit(*job, pl);
         }
         let churn_job = JobId(active_jobs);
-        let churn_pl = random_placement(&cluster, &mut rng, 4);
+        let churn_pl = random_placement(cluster, rng, 4);
 
-        // Incremental: one admit + p_j query + one complete per event.
+        // Incremental: one admit + bottleneck query + one complete.
         let inc = b
-            .run(&format!("tracker/admit+p_j+complete-{active_jobs}act"), || {
+            .run(&format!("tracker/{tag}/admit+p_j+complete-{active_jobs}act"), || {
                 tracker.admit(churn_job, &churn_pl);
                 let p = tracker.p_j(churn_job);
                 tracker.complete(churn_job);
@@ -56,30 +61,76 @@ fn main() {
             .chain(std::iter::once((churn_job, &churn_pl)))
             .collect();
         let full = b
-            .run(&format!("snapshot/full-rebuild-{active_jobs}act"), || {
-                let snap = ContentionSnapshot::build_ref(&cluster, &refs);
+            .run(&format!("snapshot/{tag}/full-rebuild-{active_jobs}act"), || {
+                let snap = ContentionSnapshot::build_ref(cluster, &refs);
                 snap.p_j(churn_job)
             })
             .mean;
 
         println!(
-            "  -> {active_jobs} active: incremental {:.3}us vs rebuild {:.3}us ({:.1}x)",
+            "  -> {tag}, {active_jobs} active: incremental {:.3}us vs rebuild {:.3}us ({:.1}x)",
             inc.as_secs_f64() * 1e6,
             full.as_secs_f64() * 1e6,
             full.as_secs_f64() / inc.as_secs_f64().max(1e-12)
         );
     }
+}
+
+fn results_json(results: &[CaseResult]) -> Json {
+    Json::obj(vec![
+        ("suite", Json::Str("online_hot_path".into())),
+        (
+            "cases",
+            Json::arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::Str(r.name.clone())),
+                            ("mean_ms", Json::Num(r.mean_ms())),
+                            ("min_ms", Json::Num(r.min.as_secs_f64() * 1e3)),
+                            ("iters", Json::Num(r.iters as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(42);
+    let mut b = Bench::new("online_hot_path");
+
+    // Flat fabric (the seed benchmark, unchanged semantics).
+    let flat = Cluster::random(20, 7);
+    sweep(&mut b, "flat", &flat, &mut rng);
+
+    // Rack fabric: 5 racks of 4 servers, 2x oversubscribed ToRs — the
+    // per-link tracker now also maintains ToR counts per event.
+    let racked = flat.clone().with_topology(Topology::racks(20, 4, 2.0));
+    sweep(&mut b, "rack4x2.0", &racked, &mut rng);
 
     // Sanity: results agree (release builds skip the internal debug check).
-    let mut tracker = ContentionTracker::new(&cluster);
-    let pls: Vec<(JobId, JobPlacement)> =
-        (0..32).map(|i| (JobId(i), random_placement(&cluster, &mut rng, 3))).collect();
-    for (job, pl) in &pls {
-        tracker.admit(*job, pl);
+    for cluster in [&flat, &racked] {
+        let mut tracker = ContentionTracker::new(cluster);
+        let pls: Vec<(JobId, JobPlacement)> =
+            (0..32).map(|i| (JobId(i), random_placement(cluster, &mut rng, 3))).collect();
+        for (job, pl) in &pls {
+            tracker.admit(*job, pl);
+        }
+        let snap = tracker.full_rebuild(cluster);
+        for (job, _) in &pls {
+            assert_eq!(tracker.p_j(*job), snap.p_j(*job));
+            assert_eq!(tracker.bottleneck(*job), snap.bottleneck(*job));
+        }
     }
-    let snap = tracker.full_rebuild(&cluster);
-    for (job, _) in &pls {
-        assert_eq!(tracker.p_j(*job), snap.p_j(*job));
+
+    let results = b.report();
+    let out = std::env::var("RARSCHED_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_topology.json".to_string());
+    match std::fs::write(&out, results_json(results).to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
     }
-    b.report();
 }

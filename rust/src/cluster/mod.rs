@@ -14,6 +14,7 @@ pub use placement::{JobPlacement, PlacementBuilder};
 pub use server::{GpuId, Server, ServerId};
 pub use state::ClusterState;
 
+use crate::topology::Topology;
 
 /// The whole multi-tenant GPU cluster.
 ///
@@ -29,6 +30,10 @@ pub struct Cluster {
     /// Prefix sums of GPU counts for global-id mapping (`gpu_base[s]` is the
     /// global id of server `s`'s first GPU).
     gpu_base: Vec<usize>,
+    /// The shared-link fabric above the servers. Every constructor builds
+    /// the paper's flat 1-tier fabric (Eq. 6 exactly); use
+    /// [`with_topology`](Self::with_topology) to mount a rack tier.
+    topology: Topology,
 }
 
 impl Cluster {
@@ -47,7 +52,25 @@ impl Cluster {
             gpu_base.push(acc);
             acc += s.capacity();
         }
-        Cluster { servers, inter_bw, intra_bw, gpu_base }
+        let topology = Topology::flat(servers.len());
+        Cluster { servers, inter_bw, intra_bw, gpu_base, topology }
+    }
+
+    /// Replace the network fabric (builder style). Panics if the topology
+    /// was built for a different server count.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        assert_eq!(
+            topology.num_servers(),
+            self.servers.len(),
+            "topology server count must match the cluster"
+        );
+        self.topology = topology;
+        self
+    }
+
+    /// The shared-link fabric above the servers.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
     }
 
     /// A homogeneous cluster: `n_servers` servers with `gpus_per_server` each.
@@ -180,5 +203,27 @@ mod tests {
     #[should_panic]
     fn empty_cluster_rejected() {
         Cluster::new(&[], 1.0, 2.0);
+    }
+
+    #[test]
+    fn default_topology_is_flat() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0);
+        assert!(!c.topology().has_racks());
+        assert_eq!(c.topology().num_servers(), 4);
+    }
+
+    #[test]
+    fn with_topology_mounts_a_rack_tier() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0)
+            .with_topology(crate::topology::Topology::racks(4, 2, 2.0));
+        assert!(c.topology().has_racks());
+        assert_eq!(c.topology().num_racks(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_topology_rejected() {
+        let _ = Cluster::uniform(4, 8, 1.0, 25.0)
+            .with_topology(crate::topology::Topology::flat(5));
     }
 }

@@ -8,9 +8,11 @@
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;
 use crate::sched::Policy;
+use crate::topology::TopologySpec;
 use crate::trace::TraceGenerator;
 use crate::util::{TomlDoc, TomlValue};
 use crate::Result;
+use anyhow::bail;
 use std::path::Path;
 
 /// Cluster shape section.
@@ -92,6 +94,9 @@ pub struct ExperimentConfig {
     /// Scheduling horizon `T` in slots (paper: 1200 / 1500).
     pub horizon: Option<u64>,
     pub cluster: ClusterConfig,
+    /// Network fabric above the servers (`[topology]` section; absent =
+    /// the paper's flat 1-tier fabric).
+    pub topology: TopologySpec,
     pub workload: WorkloadConfig,
     pub scheduler: SchedulerConfig,
     pub model: ModelParamsConfig,
@@ -123,6 +128,22 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get("cluster", "intra_bw") {
             cfg.cluster.intra_bw = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("topology", "servers_per_rack") {
+            let spr = v.as_usize()?;
+            if spr == 0 {
+                bail!("topology.servers_per_rack must be >= 1");
+            }
+            let oversub = match doc.get("topology", "oversub") {
+                Some(o) => o.as_f64()?,
+                None => 1.0,
+            };
+            if !(oversub >= 1.0) {
+                bail!("topology.oversub must be >= 1, got {oversub}");
+            }
+            cfg.topology = TopologySpec::Rack { servers_per_rack: spr, oversub };
+        } else if doc.get("topology", "oversub").is_some() {
+            bail!("topology.oversub requires topology.servers_per_rack");
         }
         if let Some(v) = doc.get("workload", "scale") {
             cfg.workload.scale = v.as_f64()?;
@@ -174,6 +195,10 @@ impl ExperimentConfig {
         }
         doc.set("cluster", "inter_bw", TomlValue::Float(self.cluster.inter_bw));
         doc.set("cluster", "intra_bw", TomlValue::Float(self.cluster.intra_bw));
+        if let TopologySpec::Rack { servers_per_rack, oversub } = self.topology {
+            doc.set("topology", "servers_per_rack", TomlValue::Int(servers_per_rack as i64));
+            doc.set("topology", "oversub", TomlValue::Float(oversub));
+        }
         doc.set("workload", "scale", TomlValue::Float(self.workload.scale));
         doc.set("workload", "iters_min", TomlValue::Int(self.workload.iters_min as i64));
         doc.set("workload", "iters_max", TomlValue::Int(self.workload.iters_max as i64));
@@ -211,9 +236,9 @@ impl ExperimentConfig {
         Ok(())
     }
 
-    /// Materialise the cluster.
+    /// Materialise the cluster (including its network fabric).
     pub fn build_cluster(&self) -> Cluster {
-        if !self.cluster.capacities.is_empty() {
+        let c = if !self.cluster.capacities.is_empty() {
             Cluster::new(&self.cluster.capacities, self.cluster.inter_bw, self.cluster.intra_bw)
         } else {
             // random capacities, seeded; then override bandwidths
@@ -221,7 +246,9 @@ impl ExperimentConfig {
             c.inter_bw = self.cluster.inter_bw;
             c.intra_bw = self.cluster.intra_bw;
             c
-        }
+        };
+        let n = c.num_servers();
+        c.with_topology(self.topology.build(n))
     }
 
     /// Materialise the trace generator.
@@ -313,5 +340,30 @@ mod tests {
     fn bad_policy_rejected() {
         let r = ExperimentConfig::from_toml_str("[scheduler]\npolicy = \"bogus\"\n");
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn topology_section_roundtrips_and_builds() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.topology = TopologySpec::Rack { servers_per_rack: 4, oversub: 2.0 };
+        let text = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.topology, cfg.topology);
+        let c = back.build_cluster();
+        assert!(c.topology().has_racks());
+        assert_eq!(c.topology().num_racks(), 5, "20 servers in racks of 4");
+        // default stays flat
+        let flat = ExperimentConfig::paper().build_cluster();
+        assert!(!flat.topology().has_racks());
+    }
+
+    #[test]
+    fn bad_topology_rejected() {
+        assert!(ExperimentConfig::from_toml_str("[topology]\nservers_per_rack = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[topology]\nservers_per_rack = 4\noversub = 0.5\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[topology]\noversub = 2.0\n").is_err());
     }
 }

@@ -13,6 +13,12 @@
 //!   connection-establishment overhead, linear in the server span.
 //! * `τ_j[t]` — per-iteration time (Eq. 8) and `φ_j[t] = ⌊1/τ_j[t]⌋` —
 //!   iterations completed per slot.
+//!
+//! Eq. 6 is evaluated against the cluster's [`Topology`](crate::topology):
+//! active-ring counts are kept per fabric link (server uplinks, and ToR
+//! uplinks when a rack tier exists), and each job's degree is taken at its
+//! [`Bottleneck`](crate::topology::Bottleneck) link. The flat 1-tier
+//! fabric reproduces the paper's per-server-uplink model bit for bit.
 
 mod params;
 mod snapshot;

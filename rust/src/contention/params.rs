@@ -2,6 +2,7 @@
 
 use crate::cluster::{Cluster, JobPlacement};
 use crate::jobs::JobSpec;
+use crate::topology::Bottleneck;
 
 /// All constants of the analytical model (§4.1, §7).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -43,20 +44,44 @@ impl ContentionParams {
 
     /// Effective contenders `k_j = ξ1 · p_j`, clamped to ≥ 1 for spread
     /// jobs (a spread job always occupies the link itself, so its share
-    /// never exceeds `b^e`).
+    /// never exceeds `b^e`). Delegates to [`effective_load`](Self::effective_load)
+    /// so the scalar and topology paths share one Eq. 7 implementation.
     pub fn effective_contenders(&self, p_j: usize) -> f64 {
         debug_assert!(p_j >= 1, "only meaningful for spread jobs");
-        (self.xi1 * p_j as f64).max(1.0)
+        self.effective_load(p_j as f64)
+    }
+
+    /// Eq. 7 over a fractional effective degree (`p × oversub` at the
+    /// bottleneck link of a hierarchical fabric), with the same ≥ 1 clamp.
+    pub fn effective_load(&self, p_eff: f64) -> f64 {
+        debug_assert!(p_eff >= 1.0, "only meaningful for spread jobs");
+        (self.xi1 * p_eff).max(1.0)
     }
 
     /// Bottleneck bandwidth `B_j(y[t])` (§4.1 2-1): `b^i` when co-located;
     /// `b^e / f(α, k_j)` when spread with contention degree `p_j`.
+    ///
+    /// Flat-fabric wrapper of [`bandwidth_at`](Self::bandwidth_at) — one
+    /// code path, so Eq. 6 is the exact 1-tier special case.
     pub fn bandwidth(&self, cluster: &Cluster, placement: &JobPlacement, p_j: usize) -> f64 {
+        self.bandwidth_at(cluster, placement, Bottleneck::flat(p_j))
+    }
+
+    /// Bottleneck bandwidth under a hierarchical fabric: `b^i` when
+    /// co-located, else `b^e / f(α, k_j)` with `k_j = ξ1 · p · o` taken at
+    /// the job's bottleneck link (count `p`, oversubscription `o`). With
+    /// `o = 1.0` this is Eq. 7 bit for bit.
+    pub fn bandwidth_at(
+        &self,
+        cluster: &Cluster,
+        placement: &JobPlacement,
+        bottleneck: Bottleneck,
+    ) -> f64 {
         if !placement.is_spread() {
             cluster.intra_bw
         } else {
-            debug_assert!(p_j >= 1, "spread job must count itself in Eq. 6");
-            cluster.inter_bw / self.degradation(self.effective_contenders(p_j))
+            debug_assert!(bottleneck.p >= 1, "spread job must count itself in Eq. 6");
+            cluster.inter_bw / self.degradation(self.effective_load(bottleneck.effective()))
         }
     }
 
@@ -76,6 +101,8 @@ impl ContentionParams {
     /// ```text
     /// τ = 2 m_j (w_j−1)/w_j / B_j  +  m_j (w_j−1)/w_j / C  +  γ_j  +  Δ^f M_j + Δ^b
     /// ```
+    ///
+    /// Flat-fabric wrapper of [`tau_at`](Self::tau_at).
     pub fn tau(
         &self,
         cluster: &Cluster,
@@ -83,9 +110,21 @@ impl ContentionParams {
         placement: &JobPlacement,
         p_j: usize,
     ) -> f64 {
+        self.tau_at(cluster, job, placement, Bottleneck::flat(p_j))
+    }
+
+    /// Eq. 8 under a hierarchical fabric: identical arithmetic with `B_j`
+    /// taken at the job's bottleneck link.
+    pub fn tau_at(
+        &self,
+        cluster: &Cluster,
+        job: &JobSpec,
+        placement: &JobPlacement,
+        bottleneck: Bottleneck,
+    ) -> f64 {
         debug_assert_eq!(placement.num_workers(), job.gpus, "gang scheduling: w_j == G_j");
         let comm = if job.gpus > 1 {
-            job.rar_volume() / self.bandwidth(cluster, placement, p_j)
+            job.rar_volume() / self.bandwidth_at(cluster, placement, bottleneck)
         } else {
             0.0
         };
@@ -216,6 +255,25 @@ mod tests {
         assert_eq!(p.phi(0.02), 50);
         assert_eq!(p.phi(0.021), 47);
         assert_eq!(p.phi(1.5), 0);
+    }
+
+    #[test]
+    fn oversubscribed_bottleneck_slows_tau() {
+        use crate::topology::{Bottleneck, LinkId};
+        let c = cluster();
+        let p = ContentionParams::paper();
+        let job = JobSpec::synthetic(JobId(0), 4);
+        let pl = spread(&c, 4);
+        let flat = p.tau_at(&c, &job, &pl, Bottleneck::flat(4));
+        let over =
+            p.tau_at(&c, &job, &pl, Bottleneck { p: 4, oversub: 2.0, link: Some(LinkId(0)) });
+        assert!(over > flat, "oversubscription must slow the ring: {over} vs {flat}");
+        // the scalar wrappers are the oversub = 1.0 instance, bit for bit
+        assert_eq!(p.tau(&c, &job, &pl, 3), p.tau_at(&c, &job, &pl, Bottleneck::flat(3)));
+        assert_eq!(
+            p.bandwidth(&c, &pl, 2),
+            p.bandwidth_at(&c, &pl, Bottleneck::flat(2))
+        );
     }
 
     #[test]

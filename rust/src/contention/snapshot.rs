@@ -1,22 +1,29 @@
-//! Per-slot contention snapshot: evaluates Eq. 6 for all active jobs at once.
+//! Per-slot contention snapshot: evaluates the generalized Eq. 6 for all
+//! active jobs at once.
 
 use crate::cluster::{Cluster, JobPlacement};
 use crate::jobs::JobId;
+use crate::topology::Bottleneck;
 
-/// Evaluation of the contention degree `p_j[t]` (Eq. 6) for every active
-/// job in one time slot, in `O(Σ_j span_j)` total.
+/// Evaluation of the contention degree `p_j[t]` (Eq. 6, generalized to the
+/// cluster's [`Topology`](crate::topology::Topology)) for every active job
+/// in one time slot, in `O(Σ_j span_j)` total.
 ///
-/// For each server `s`, we count the active jobs whose ring crosses `s`'s
-/// uplink (`1{0 < y_js < G_j}`); then `p_j` is the max of those counts over
-/// the servers job `j` itself crosses.
+/// For each link `ℓ` of the fabric we count the active jobs whose ring
+/// crosses it (`0 < Σ_{s ∈ sub(ℓ)} y_js < G_j`; for a server uplink this
+/// is Eq. 6's `1{0 < y_js < G_j}`); each job's [`Bottleneck`] is then the
+/// crossed link with the largest effective degree `count × oversub`. On a
+/// flat fabric this reduces to "p_j = max of the server-uplink counts over
+/// the servers job j crosses" — the seed model, bit for bit.
 ///
 /// §Perf: job ids are dense, and this structure is rebuilt on every
 /// simulator event — storage is a flat `Vec` indexed by `JobId` rather
 /// than a hash map (the map dominated the simulator profile).
 #[derive(Debug, Clone)]
 pub struct ContentionSnapshot {
-    /// `p[job.0]`: `Some(p_j)` for active jobs, `None` otherwise.
-    p: Vec<Option<usize>>,
+    /// `bn[job.0]`: `Some(bottleneck)` for active jobs, `None` otherwise.
+    bn: Vec<Option<Bottleneck>>,
+    /// Largest active-ring count on any single link.
     max_p: usize,
 }
 
@@ -29,40 +36,48 @@ impl ContentionSnapshot {
     /// Same as [`build`](Self::build) but borrowing placements — the form
     /// the simulator hot loop uses to avoid cloning placements every slot.
     pub fn build_ref(cluster: &Cluster, active: &[(JobId, &JobPlacement)]) -> Self {
-        // spread_count[s] = Σ_{j'} 1{0 < y_j's < G_j'}
-        let mut spread_count = vec![0usize; cluster.num_servers()];
+        let topo = cluster.topology();
+        // link_jobs[ℓ] = Σ_{j'} 1{ring j' crosses ℓ}
+        let mut link_jobs = vec![0usize; topo.num_links()];
         for (_, pl) in active {
-            if pl.is_spread() {
-                for s in pl.servers() {
-                    // for a spread job every used server satisfies
-                    // 0 < y_js < G_j
-                    spread_count[s.0] += 1;
-                }
-            }
+            topo.for_each_crossed(pl, |l| link_jobs[l.0] += 1);
         }
         let max_id = active.iter().map(|(j, _)| j.0).max().map_or(0, |m| m + 1);
-        let mut p = vec![None; max_id];
-        let mut max_p = 0;
+        let mut bn = vec![None; max_id];
         for (j, pl) in active {
-            let pj = if pl.is_spread() {
-                pl.servers().map(|s| spread_count[s.0]).max().unwrap_or(0)
-            } else {
-                0
-            };
-            max_p = max_p.max(pj);
-            p[j.0] = Some(pj);
+            bn[j.0] = Some(topo.bottleneck(pl, &link_jobs));
         }
-        ContentionSnapshot { p, max_p }
+        let max_p = link_jobs.iter().copied().max().unwrap_or(0);
+        ContentionSnapshot { bn, max_p }
     }
 
     /// `p_j[t]` for job `j`; 0 for co-located jobs, ≥ 1 for spread jobs
-    /// (which count themselves per Eq. 6).
+    /// (which count themselves per Eq. 6). Panics when the job is not
+    /// active in this snapshot — use [`try_p_j`](Self::try_p_j) on paths
+    /// where a missing job is not a logic error.
     pub fn p_j(&self, j: JobId) -> usize {
-        self.p.get(j.0).copied().flatten().expect("job not active in this snapshot")
+        self.try_p_j(j).expect("job not active in this snapshot")
     }
 
-    /// Largest contention degree across all active jobs — a cluster-level
-    /// congestion indicator used by metrics.
+    /// Non-panicking [`p_j`](Self::p_j): `None` when the job is absent
+    /// from the snapshot (already completed, not yet admitted…).
+    pub fn try_p_j(&self, j: JobId) -> Option<usize> {
+        self.try_bottleneck(j).map(|b| b.p)
+    }
+
+    /// The job's bottleneck link; panics when the job is not active.
+    pub fn bottleneck(&self, j: JobId) -> Bottleneck {
+        self.try_bottleneck(j).expect("job not active in this snapshot")
+    }
+
+    /// Non-panicking [`bottleneck`](Self::bottleneck).
+    pub fn try_bottleneck(&self, j: JobId) -> Option<Bottleneck> {
+        self.bn.get(j.0).copied().flatten()
+    }
+
+    /// Largest active-ring count on any single link — a cluster-level
+    /// congestion indicator used by metrics. On a flat fabric this equals
+    /// the largest contention degree across all active jobs.
     pub fn max_contention(&self) -> usize {
         self.max_p
     }
@@ -72,6 +87,7 @@ impl ContentionSnapshot {
 mod tests {
     use super::*;
     use crate::cluster::ServerId;
+    use crate::topology::Topology;
 
     #[test]
     fn empty_snapshot() {
@@ -86,6 +102,22 @@ mod tests {
         let c = Cluster::uniform(2, 2, 1.0, 25.0);
         let snap = ContentionSnapshot::build(&c, &[]);
         snap.p_j(JobId(0));
+    }
+
+    #[test]
+    fn try_p_j_is_none_for_inactive_jobs() {
+        let c = Cluster::uniform(2, 2, 1.0, 25.0);
+        let snap = ContentionSnapshot::build(&c, &[]);
+        assert_eq!(snap.try_p_j(JobId(0)), None);
+        assert_eq!(snap.try_bottleneck(JobId(7)), None);
+        let active = vec![(
+            JobId(1),
+            JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(1), 0)]),
+        )];
+        let snap = ContentionSnapshot::build(&c, &active);
+        assert_eq!(snap.try_p_j(JobId(1)), Some(1));
+        assert_eq!(snap.try_p_j(JobId(0)), None, "dense hole below max id");
+        assert_eq!(snap.try_p_j(JobId(99)), None, "beyond the dense table");
     }
 
     #[test]
@@ -109,6 +141,50 @@ mod tests {
         assert_eq!(snap.p_j(JobId(2)), 3);
         // job 3 shares server 2 with job 1 and server 3 with job 2: max = 2
         assert_eq!(snap.p_j(JobId(3)), 2);
+        assert_eq!(snap.max_contention(), 3);
+        // flat fabric: every bottleneck is a plain server uplink
+        for (j, _) in &active {
+            assert_eq!(snap.bottleneck(*j).oversub, 1.0);
+        }
+    }
+
+    #[test]
+    fn oversubscribed_tor_becomes_the_bottleneck() {
+        // 4 servers in 2 racks of 2, ToR oversubscribed 4x. Two cross-rack
+        // rings share both ToR uplinks; each also shares a server with a
+        // third, rack-local ring.
+        let c = Cluster::uniform(4, 8, 1.0, 25.0)
+            .with_topology(Topology::racks(4, 2, 4.0));
+        let mk = |pairs: &[(usize, usize)]| {
+            JobPlacement::new(
+                pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect(),
+            )
+        };
+        let active = vec![
+            (JobId(0), mk(&[(0, 0), (2, 0)])), // cross-rack
+            (JobId(1), mk(&[(0, 1), (3, 0)])), // cross-rack
+            (JobId(2), mk(&[(0, 2), (1, 0)])), // rack-local, shares server 0
+        ];
+        let snap = ContentionSnapshot::build(&c, &active);
+        let topo = c.topology();
+        // server 0 uplink carries 3 rings; ToR uplinks carry 2 each, but
+        // at 4x oversubscription their effective degree 2·4 = 8 beats 3.
+        for id in [0, 1] {
+            let bn = snap.bottleneck(JobId(id));
+            assert_eq!(bn.p, 2, "job {id}");
+            assert_eq!(bn.oversub, 4.0, "job {id}");
+            assert!(
+                bn.link == Some(topo.rack_uplink(0)) || bn.link == Some(topo.rack_uplink(1)),
+                "job {id}: bottleneck {:?}",
+                bn.link
+            );
+        }
+        // the rack-local ring never crosses a ToR: its bottleneck is the
+        // crowded server-0 uplink.
+        let bn2 = snap.bottleneck(JobId(2));
+        assert_eq!(bn2.p, 3);
+        assert_eq!(bn2.link, Some(topo.server_uplink(ServerId(0))));
+        // max_contention reports the most-crowded single link (server 0)
         assert_eq!(snap.max_contention(), 3);
     }
 }

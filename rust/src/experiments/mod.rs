@@ -8,6 +8,9 @@
 
 pub mod ablations;
 pub mod online;
+pub mod topology;
+
+pub use self::topology::topology_sweep;
 
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;
@@ -15,6 +18,7 @@ use crate::jobs::JobSpec;
 use crate::metrics::{FigureReport, PolicySummary};
 use crate::sched::{self, Policy, SjfBcoConfig};
 use crate::sim::Simulator;
+use crate::topology::TopologySpec;
 use crate::trace::TraceGenerator;
 use crate::Result;
 
@@ -26,6 +30,8 @@ pub struct ExperimentSetup {
     pub scale: f64,
     pub horizon: u64,
     pub servers: usize,
+    /// Network fabric above the servers (flat = the paper's model).
+    pub topology: TopologySpec,
     /// Inter-server bandwidth `b^e` for the figure experiments.
     ///
     /// The paper runs its §7 simulation in a *comm-light* regime — "the
@@ -48,18 +54,33 @@ impl ExperimentSetup {
     /// at the paper's relative tightness. Fig. 6 scales it by the same
     /// 1500/1200 ratio (→ 5000). Shapes are unaffected (EXPERIMENTS.md).
     pub fn paper() -> Self {
-        ExperimentSetup { seed: 42, scale: 1.0, horizon: 4000, servers: 20, inter_bw: 10.0 }
+        ExperimentSetup {
+            seed: 42,
+            scale: 1.0,
+            horizon: 4000,
+            servers: 20,
+            topology: TopologySpec::Flat,
+            inter_bw: 10.0,
+        }
     }
 
     /// A fast smoke setup (~16 jobs) for tests and CI benches.
     pub fn smoke() -> Self {
-        ExperimentSetup { seed: 42, scale: 0.1, horizon: 1200, servers: 8, inter_bw: 10.0 }
+        ExperimentSetup {
+            seed: 42,
+            scale: 0.1,
+            horizon: 1200,
+            servers: 8,
+            topology: TopologySpec::Flat,
+            inter_bw: 10.0,
+        }
     }
 
     pub fn cluster(&self) -> Cluster {
         let mut c = Cluster::random(self.servers, self.seed);
         c.inter_bw = self.inter_bw;
-        c
+        let n = c.num_servers();
+        c.with_topology(self.topology.build(n))
     }
 
     pub fn jobs(&self) -> Vec<JobSpec> {

@@ -99,19 +99,31 @@ pub fn online_sweep(setup: &ExperimentSetup, gaps: &[f64]) -> Result<FigureRepor
 /// One-gap deep comparison: makespan, mean/p95 JCT, mean/p95 queueing
 /// delay and time-averaged utilization for the clairvoyant reference and
 /// every online policy — the table behind `rarsched online`.
+///
+/// `burst = Some((on, off))` gates the Poisson stream with an on/off
+/// window (bursty arrivals, `--burst ON:OFF` on the CLI); `None` is the
+/// plain Poisson process.
 pub fn online_comparison(
     setup: &ExperimentSetup,
     gap: f64,
     kinds: &[OnlinePolicyKind],
     include_clairvoyant: bool,
+    burst: Option<(u64, u64)>,
 ) -> Result<MetricTable> {
     let gen = generator(setup);
-    let jobs = gen.generate_online(setup.seed, gap);
+    let jobs = match burst {
+        Some((on, off)) => gen.generate_bursty(setup.seed, gap, on, off),
+        None => gen.generate_online(setup.seed, gap),
+    };
     let cluster = setup.cluster();
     let num_gpus = cluster.num_gpus();
+    let arrivals = match burst {
+        Some((on, off)) => format!("bursty on {on}/off {off}, mean gap {gap}"),
+        None => format!("poisson mean gap {gap}"),
+    };
     let mut table = MetricTable::new(
         format!(
-            "online — {} jobs, mean gap {gap} slots, seed {} ({} servers / {} GPUs)",
+            "online — {} jobs, {arrivals} slots, seed {} ({} servers / {} GPUs)",
             jobs.len(),
             setup.seed,
             cluster.num_servers(),
@@ -185,9 +197,27 @@ mod tests {
     }
 
     #[test]
+    fn bursty_comparison_runs_and_labels_the_process() {
+        let setup = ExperimentSetup::smoke();
+        let table = online_comparison(
+            &setup,
+            2.0,
+            &[OnlinePolicyKind::SjfBco, OnlinePolicyKind::Fifo],
+            false,
+            Some((25, 100)),
+        )
+        .unwrap();
+        assert_eq!(table.rows.len(), 2);
+        assert!(table.title.contains("bursty on 25/off 100"));
+        for kind in ["ON-SJF-BCO", "FIFO"] {
+            assert!(table.get(kind, "makespan").unwrap() > 0.0, "{kind}");
+        }
+    }
+
+    #[test]
     fn comparison_table_has_all_metrics() {
         let setup = ExperimentSetup::smoke();
-        let table = online_comparison(&setup, 5.0, &OnlinePolicyKind::ALL, true).unwrap();
+        let table = online_comparison(&setup, 5.0, &OnlinePolicyKind::ALL, true, None).unwrap();
         assert_eq!(table.rows.len(), 1 + OnlinePolicyKind::ALL.len());
         for kind in OnlinePolicyKind::ALL {
             let util = table.get(kind.name(), "util").unwrap();

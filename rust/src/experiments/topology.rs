@@ -1,0 +1,137 @@
+//! Topology experiments: makespan vs fabric oversubscription.
+//!
+//! The paper's figures assume a flat, non-blocking fabric. This sweep
+//! quantifies what a rack tier with an oversubscribed ToR uplink costs —
+//! and what a topology-aware scheduler claws back:
+//!
+//! * `replay/<o>` rows — the **flat-planned** SJF-BCO schedule replayed
+//!   under a `rack:<spr>:<o>` fabric. Placements are held fixed, so the
+//!   only change is per-link contention: makespan is monotonically
+//!   non-decreasing in the oversubscription factor (asserted by the
+//!   acceptance test).
+//! * `replan/<o>` rows — SJF-BCO re-run **on** the rack fabric, so the
+//!   topology-aware FA-FFP/LBSGF tie-breaks (rack-local before crossing
+//!   the spine) can route around the bottleneck.
+//!
+//! Note on `o = 1`: a ToR uplink is modeled as a single `b^e`-class link,
+//! so even a non-oversubscribed rack tier *aggregates* every cross-rack
+//! ring of its rack onto one shared link — the truly non-blocking fabric
+//! is the flat topology (no ToR tier), which is the exact Eq. 6 special
+//! case. Replay rows therefore never beat the flat baseline, and grow
+//! monotonically with `o`.
+
+use super::ExperimentSetup;
+use crate::metrics::FigureReport;
+use crate::sched::{self, Policy};
+use crate::sim::Simulator;
+use crate::topology::Topology;
+use crate::Result;
+
+/// Sweep ToR oversubscription factors on a fixed trace.
+///
+/// `servers_per_rack` shapes the rack tier; `oversubs` are the swept
+/// factors (each ≥ 1). Returns paired `replay/…` and `replan/…` rows plus
+/// the flat baseline.
+pub fn topology_sweep(
+    setup: &ExperimentSetup,
+    servers_per_rack: usize,
+    oversubs: &[f64],
+) -> Result<FigureReport> {
+    // The baseline must be genuinely flat regardless of any --topology the
+    // caller put in the setup: force the 1-tier fabric for it.
+    let mut flat_setup = setup.clone();
+    flat_setup.topology = crate::topology::TopologySpec::Flat;
+    let flat_cluster = flat_setup.cluster();
+    let jobs = setup.jobs();
+    let params = setup.params();
+    let mut report = FigureReport::new(
+        format!(
+            "Topology — makespan vs ToR oversubscription (racks of {servers_per_rack}, \
+             seed {}, {} jobs)",
+            setup.seed,
+            jobs.len()
+        ),
+        "row/oversub",
+    );
+
+    // Flat baseline (the paper's model) and the fixed plan the replay rows
+    // share: placements never change, only the fabric under them does.
+    let flat_plan = sched::schedule(Policy::SjfBco, &flat_cluster, &jobs, &params, setup.horizon)?;
+    let flat = Simulator::new(&flat_cluster, &jobs, &params).run(&flat_plan);
+    report.push("flat", flat.makespan, flat.avg_jct);
+
+    for &oversub in oversubs {
+        let racked = flat_cluster
+            .clone()
+            .with_topology(Topology::racks(flat_cluster.num_servers(), servers_per_rack, oversub));
+
+        // Same placements, oversubscribed fabric: isolates the contention
+        // effect of the rack tier.
+        let replay = Simulator::new(&racked, &jobs, &params).run(&flat_plan);
+        report.push(format!("replay/{oversub}"), replay.makespan, replay.avg_jct);
+
+        // Topology-aware re-plan on the same trace. The feasibility
+        // horizon is relaxed in proportion to the oversubscription — a
+        // slower fabric legitimately needs a longer schedule, and an
+        // unrelaxed T would make the bisection reject every candidate.
+        let horizon = setup.horizon.saturating_mul((oversub.ceil() as u64).max(1));
+        let plan = sched::schedule(Policy::SjfBco, &racked, &jobs, &params, horizon)?;
+        let replan = Simulator::new(&racked, &jobs, &params).run(&plan);
+        report.push(format!("replan/{oversub}"), replan.makespan, replan.avg_jct);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_emits_flat_plus_paired_rows() {
+        let report = topology_sweep(&ExperimentSetup::smoke(), 2, &[1.0, 4.0]).unwrap();
+        assert_eq!(report.rows.len(), 1 + 2 * 2);
+        assert_eq!(report.rows[0].x, "flat");
+        assert!(report.rows.iter().any(|r| r.x == "replay/4"));
+        assert!(report.rows.iter().any(|r| r.x == "replan/4"));
+        assert!(report.rows.iter().all(|r| r.makespan > 0));
+    }
+
+    #[test]
+    fn rack_tier_never_beats_the_flat_fabric_on_replay() {
+        // the ToR is an extra shared link: holding placements fixed, a
+        // rack tier can only add contention relative to the flat fabric.
+        let report = topology_sweep(&ExperimentSetup::smoke(), 2, &[1.0]).unwrap();
+        let flat = &report.rows[0];
+        let replay = report.rows.iter().find(|r| r.x == "replay/1").unwrap();
+        assert!(
+            replay.makespan >= flat.makespan,
+            "replay {} beat flat {}",
+            replay.makespan,
+            flat.makespan
+        );
+    }
+
+    #[test]
+    fn makespan_is_monotone_in_oversubscription_on_replay_rows() {
+        // the acceptance criterion: fixed trace, fixed placements — more
+        // oversubscription can only slow rings down.
+        let oversubs = [1.0, 2.0, 4.0, 8.0];
+        let report = topology_sweep(&ExperimentSetup::smoke(), 2, &oversubs).unwrap();
+        let replay: Vec<u64> = oversubs
+            .iter()
+            .map(|o| {
+                report
+                    .rows
+                    .iter()
+                    .find(|r| r.x == format!("replay/{o}"))
+                    .unwrap()
+                    .makespan
+            })
+            .collect();
+        for w in replay.windows(2) {
+            assert!(w[0] <= w[1], "makespan not monotone in oversub: {replay:?}");
+        }
+        // and the flat baseline lower-bounds every replay row
+        assert!(report.rows[0].makespan <= replay[0]);
+    }
+}

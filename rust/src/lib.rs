@@ -42,13 +42,25 @@
 //! * [`sim::kernel`] — the period arithmetic (rates `p/τ/φ`, jump-to-next-
 //!   event) shared with the offline engine, so online and clairvoyant runs
 //!   are comparable slot for slot;
-//! * [`online::ContentionTracker`] — Eq. 6 per-uplink counts maintained
-//!   incrementally in `O(span)` per admit/complete (debug builds
+//! * [`online::ContentionTracker`] — Eq. 6 per-link counts maintained
+//!   incrementally in `O(path)` per admit/complete (debug builds
 //!   cross-check against a full [`contention::ContentionSnapshot`]
 //!   rebuild; `benches/online_hot_path.rs` measures the gap);
 //! * queueing metrics — [`sim::SimOutcome`] reports mean/p95 wait and
 //!   time-averaged service utilization, surfaced by the `online` CLI
 //!   subcommand and `experiments::online`'s clairvoyant-vs-online rows.
+//!
+//! ## Hierarchical fabric (Eq. 6 generalized)
+//!
+//! The [`topology`] subsystem generalizes the contention model from server
+//! uplinks to a multi-tier fabric (server uplink → ToR → spine, per-link
+//! oversubscription). Per-link active-ring counts replace the per-server
+//! counts everywhere — [`contention::ContentionSnapshot`],
+//! [`online::ContentionTracker`], the [`sim::kernel`] rate points — and a
+//! job's rate is driven by its [`topology::Bottleneck`] link. The flat
+//! 1-tier instance reproduces the paper's `p_j`, makespans and JCTs bit
+//! for bit (enforced by `tests/topology_equivalence.rs`), so the paper
+//! reproduction is preserved while the model is strictly more general.
 
 pub mod cli;
 pub mod cluster;
@@ -63,6 +75,7 @@ pub mod rar;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod topology;
 pub mod trace;
 pub mod util;
 

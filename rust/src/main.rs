@@ -34,18 +34,33 @@ USAGE: rarsched <COMMAND> [OPTIONS]
 
 COMMANDS:
   simulate   --policy <sjf-bco|ff|ls|rand|gadget> [--config f.toml]
-             [--seed N] [--servers N] [--horizon T] [--scale F] [--json]
-  online     [--policies sjf-bco,fifo,ff,backfill] [--gap F] [--seed N]
-             [--servers N] [--scale F] [--no-clairvoyant] [--json]
-             [--out dir]
-  figures    --fig <4|5|6|7|motivation|ablations|online|all> [--seed N] [--scale F]
-             [--out dir] [--full]
+             [--seed N] [--servers N] [--horizon T] [--scale F]
+             [--topology flat|rack:<spr>:<oversub>] [--json]
+  online     [--policies sjf-bco,fifo,ff,backfill] [--gap F]
+             [--burst ON:OFF] [--seed N] [--servers N] [--scale F]
+             [--topology flat|rack:<spr>:<oversub>] [--no-clairvoyant]
+             [--json] [--out dir]
+  figures    --fig <4|5|6|7|motivation|ablations|online|topology|all>
+             [--seed N] [--scale F] [--out dir] [--full]
   trace      --out trace.json [--seed N] [--scale F] [--gap F]
+             [--burst ON:OFF]
   train      --model <tiny|small|base> [--workers W] [--steps N]
              [--spread] [--artifacts dir]
   verify     [--model tiny] [--artifacts dir]
   help       print this message
 ";
+
+/// Parse `--burst ON:OFF` (slots) into an on/off window.
+fn parse_burst(s: &str) -> rarsched::Result<(u64, u64)> {
+    let err = || anyhow::anyhow!("--burst expects <on_slots>:<off_slots>, got '{s}'");
+    let (on, off) = s.split_once(':').ok_or_else(err)?;
+    let on: u64 = on.parse().map_err(|_| err())?;
+    let off: u64 = off.parse().map_err(|_| err())?;
+    if on == 0 {
+        anyhow::bail!("--burst ON window must be at least one slot");
+    }
+    Ok((on, off))
+}
 
 fn main() {
     logger::init();
@@ -90,6 +105,9 @@ fn setup_from(args: &Args) -> Result<ExperimentSetup> {
     setup.scale = args.get_f64("scale", setup.scale)?;
     setup.horizon = args.get_u64("horizon", setup.horizon)?;
     setup.servers = args.get_usize("servers", setup.servers)?;
+    if let Some(t) = args.get("topology") {
+        setup.topology = t.parse()?;
+    }
     Ok(setup)
 }
 
@@ -156,6 +174,7 @@ fn cmd_online(args: &Args) -> Result<()> {
 
     let setup = setup_from(args)?;
     let gap = args.get_f64("gap", 5.0)?;
+    let burst = args.get("burst").map(parse_burst).transpose()?;
     let kinds: Vec<OnlinePolicyKind> = args
         .get_list("policies", "sjf-bco,fifo,ff,backfill")
         .iter()
@@ -167,12 +186,16 @@ fn cmd_online(args: &Args) -> Result<()> {
     args.reject_unknown()?;
 
     log::info!(
-        "online run: mean gap {gap} slots, {} polic{}, clairvoyant reference {}",
+        "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}",
+        match burst {
+            Some((on, off)) => format!(" (bursty on {on}/off {off})"),
+            None => String::new(),
+        },
         kinds.len(),
         if kinds.len() == 1 { "y" } else { "ies" },
         if clairvoyant { "on" } else { "off" }
     );
-    let table = experiments::online::online_comparison(&setup, gap, &kinds, clairvoyant)?;
+    let table = experiments::online::online_comparison(&setup, gap, &kinds, clairvoyant, burst)?;
     if json {
         println!("{}", table.to_json()?);
     } else {
@@ -230,6 +253,12 @@ fn cmd_figures(args: &Args) -> Result<()> {
             rarsched::experiments::online::online_sweep(&setup, &[0.0, 1.0, 5.0, 20.0])?,
         ));
     }
+    if which == "topology" {
+        reports.push((
+            "topology",
+            experiments::topology_sweep(&setup, 4, &[1.0, 2.0, 4.0, 8.0])?,
+        ));
+    }
     if which == "ablations" {
         use rarsched::experiments::ablations as ab;
         reports.push(("ablation_alpha", ab::ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0])?));
@@ -262,25 +291,35 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let setup = setup_from(args)?;
     let out = args.get_or("out", "trace.json").to_string();
     let gap = args.get("gap").map(|g| g.parse::<f64>()).transpose()?;
+    let burst = args.get("burst").map(parse_burst).transpose()?;
     args.reject_unknown()?;
     let gen = if (setup.scale - 1.0).abs() < 1e-9 {
         rarsched::trace::TraceGenerator::paper()
     } else {
         rarsched::trace::TraceGenerator::paper_scaled(setup.scale)
     };
-    // --gap emits an arrival-timestamped trace for the online scheduler
-    let trace = match gap {
-        Some(g) => gen.generate_online_trace(setup.seed, g),
-        None => gen.generate_trace(setup.seed),
+    // --gap emits an arrival-timestamped trace for the online scheduler;
+    // --burst ON:OFF additionally gates the stream into bursts (and
+    // requires an explicit --gap so no in-burst rate is silently assumed).
+    let trace = match (gap, burst) {
+        (Some(g), Some((on, off))) => gen.generate_bursty_trace(setup.seed, g, on, off),
+        (None, Some(_)) => {
+            anyhow::bail!("--burst requires --gap <mean inter-arrival slots>")
+        }
+        (Some(g), None) => gen.generate_online_trace(setup.seed, g),
+        (None, None) => gen.generate_trace(setup.seed),
     };
     trace.save(std::path::Path::new(&out))?;
     println!(
         "wrote {} jobs ({} GPUs total demand{}) to {out}",
         trace.jobs.len(),
         trace.total_gpu_demand(),
-        match gap {
-            Some(g) => format!(", poisson arrivals mean gap {g}"),
-            None => String::new(),
+        match (gap, burst) {
+            (Some(g), Some((on, off))) => {
+                format!(", bursty arrivals mean gap {g} (on {on}/off {off})")
+            }
+            (Some(g), None) => format!(", poisson arrivals mean gap {g}"),
+            _ => String::new(),
         }
     );
     Ok(())

@@ -11,9 +11,11 @@
 //!   ([`policy::OnlineSjfBco`], [`policy::Fifo`],
 //!   [`policy::OnlineFirstFit`], [`policy::FifoBackfill`]) whose API
 //!   admits no future knowledge;
-//! * [`tracker::ContentionTracker`] — Eq. 6 per-uplink counts maintained
-//!   incrementally in `O(span)` per admit/complete instead of a full
-//!   `O(jobs × span)` snapshot rebuild per event;
+//! * [`tracker::ContentionTracker`] — generalized Eq. 6 per-link counts
+//!   (server uplinks + ToR uplinks of the cluster's
+//!   [`Topology`](crate::topology::Topology)) maintained incrementally in
+//!   `O(path)` per admit/complete instead of a full `O(jobs × span)`
+//!   snapshot rebuild per event;
 //! * [`OnlineScheduler`] — the loop itself, advancing time with the same
 //!   [`sim::kernel`](crate::sim::kernel) period arithmetic as the offline
 //!   replay engine, so online and clairvoyant runs are directly
@@ -184,8 +186,9 @@ impl<'a> OnlineScheduler<'a> {
                 }
             }
 
-            // 3) Constant-rate period: p_j from the incremental tracker,
-            //    τ/φ from the shared simulation kernel.
+            // 3) Constant-rate period: the bottleneck link from the
+            //    incremental tracker, τ/φ from the shared simulation
+            //    kernel.
             let rates: Vec<RatePoint> = running
                 .iter()
                 .map(|r| {
@@ -194,7 +197,7 @@ impl<'a> OnlineScheduler<'a> {
                         self.cluster,
                         r.spec,
                         &r.placement,
-                        tracker.p_j(r.job),
+                        tracker.bottleneck(r.job),
                         self.options.fractional_progress,
                     )
                 })

@@ -5,9 +5,11 @@
 //! allocation for the dense `p_j` table. That is fine for replaying one
 //! plan, but the online scheduler fields a continuous arrival stream
 //! where most events touch a single job. This tracker maintains the
-//! per-uplink active-job counts of Eq. 6 *incrementally*: admitting or
-//! completing a job costs `O(span_j)` of that one job, and `p_j` queries
-//! read the maintained counts directly with no rebuild and no allocation.
+//! per-link active-ring counts of the generalized Eq. 6 *incrementally*:
+//! admitting or completing a job costs `O(path)` — the job's crossed
+//! links, `O(span_j)` for a fixed number of fabric tiers — and
+//! `p_j` / bottleneck queries read the maintained counts directly with no
+//! rebuild and no allocation.
 //!
 //! In debug builds every mutation cross-checks the incremental counts
 //! against a full from-scratch rebuild (the invariant the
@@ -16,13 +18,17 @@
 use crate::cluster::{Cluster, JobPlacement};
 use crate::contention::ContentionSnapshot;
 use crate::jobs::JobId;
+use crate::topology::{Bottleneck, Topology};
 
-/// Live per-uplink contention state of the running set.
+/// Live per-link contention state of the running set.
 #[derive(Debug, Clone)]
 pub struct ContentionTracker {
-    /// `uplink_jobs[s] = Σ_{j active} 1{0 < y_js < G_j}` — the Eq. 6
-    /// count of spread rings crossing server `s`'s uplink.
-    uplink_jobs: Vec<usize>,
+    /// The fabric the counts are indexed by (cloned from the cluster —
+    /// a handful of small `Vec`s).
+    topology: Topology,
+    /// `link_jobs[ℓ] = Σ_{j active} 1{ring j crosses ℓ}` — the generalized
+    /// Eq. 6 count per fabric link (server uplinks first, then ToRs).
+    link_jobs: Vec<usize>,
     /// Active placements, indexed by dense `JobId`.
     active: Vec<Option<JobPlacement>>,
     num_active: usize,
@@ -30,11 +36,9 @@ pub struct ContentionTracker {
 
 impl ContentionTracker {
     pub fn new(cluster: &Cluster) -> Self {
-        ContentionTracker {
-            uplink_jobs: vec![0; cluster.num_servers()],
-            active: Vec::new(),
-            num_active: 0,
-        }
+        let topology = cluster.topology().clone();
+        let link_jobs = vec![0; topology.num_links()];
+        ContentionTracker { topology, link_jobs, active: Vec::new(), num_active: 0 }
     }
 
     /// Number of currently active jobs.
@@ -42,7 +46,7 @@ impl ContentionTracker {
         self.num_active
     }
 
-    /// Admit one job: `O(span_j)` count updates.
+    /// Admit one job: `O(path)` count updates along its crossed links.
     ///
     /// Panics if the job is already active.
     pub fn admit(&mut self, job: JobId, placement: &JobPlacement) {
@@ -50,17 +54,14 @@ impl ContentionTracker {
             self.active.resize(job.0 + 1, None);
         }
         assert!(self.active[job.0].is_none(), "{job} already active in tracker");
-        if placement.is_spread() {
-            for s in placement.servers() {
-                self.uplink_jobs[s.0] += 1;
-            }
-        }
+        let link_jobs = &mut self.link_jobs;
+        self.topology.for_each_crossed(placement, |l| link_jobs[l.0] += 1);
         self.active[job.0] = Some(placement.clone());
         self.num_active += 1;
         self.debug_check_against_rebuild();
     }
 
-    /// Complete one job: `O(span_j)` count updates.
+    /// Complete one job: `O(path)` count updates.
     ///
     /// Panics if the job is not active.
     pub fn complete(&mut self, job: JobId) {
@@ -69,29 +70,36 @@ impl ContentionTracker {
             .get_mut(job.0)
             .and_then(Option::take)
             .unwrap_or_else(|| panic!("{job} not active in tracker"));
-        if placement.is_spread() {
-            for s in placement.servers() {
-                self.uplink_jobs[s.0] -= 1;
-            }
-        }
+        let link_jobs = &mut self.link_jobs;
+        self.topology.for_each_crossed(&placement, |l| link_jobs[l.0] -= 1);
         self.num_active -= 1;
         self.debug_check_against_rebuild();
     }
 
-    /// Contention degree `p_j[t]` (Eq. 6) of an active job: 0 for
-    /// co-located jobs, else the max maintained count over the servers its
-    /// ring crosses — `O(span_j)`, no rebuild.
+    /// Contention degree `p_j[t]` (generalized Eq. 6) of an active job: 0
+    /// for co-located jobs, else the ring count at its bottleneck link —
+    /// `O(path)`, no rebuild. Panics if the job is not active; use
+    /// [`try_p_j`](Self::try_p_j) where absence is not a logic error.
     pub fn p_j(&self, job: JobId) -> usize {
-        let pl = self
-            .active
-            .get(job.0)
-            .and_then(|o| o.as_ref())
-            .unwrap_or_else(|| panic!("{job} not active in tracker"));
-        if pl.is_spread() {
-            pl.servers().map(|s| self.uplink_jobs[s.0]).max().unwrap_or(0)
-        } else {
-            0
-        }
+        self.bottleneck(job).p
+    }
+
+    /// Non-panicking [`p_j`](Self::p_j).
+    pub fn try_p_j(&self, job: JobId) -> Option<usize> {
+        self.try_bottleneck(job).map(|b| b.p)
+    }
+
+    /// The bottleneck link of an active job's ring under the maintained
+    /// counts. Panics if the job is not active.
+    pub fn bottleneck(&self, job: JobId) -> Bottleneck {
+        self.try_bottleneck(job)
+            .unwrap_or_else(|| panic!("{job} not active in tracker"))
+    }
+
+    /// Non-panicking [`bottleneck`](Self::bottleneck).
+    pub fn try_bottleneck(&self, job: JobId) -> Option<Bottleneck> {
+        let pl = self.active.get(job.0).and_then(|o| o.as_ref())?;
+        Some(self.topology.bottleneck(pl, &self.link_jobs))
     }
 
     /// Placement of an active job, if any.
@@ -99,10 +107,11 @@ impl ContentionTracker {
         self.active.get(job.0).and_then(|o| o.as_ref())
     }
 
-    /// Largest contention degree across all active jobs — equals
-    /// `max_s uplink_jobs[s]`, `O(|S|)`.
+    /// Largest active-ring count on any single fabric link — `O(L)`. On a
+    /// flat fabric this equals the largest contention degree across all
+    /// active jobs.
     pub fn max_contention(&self) -> usize {
-        self.uplink_jobs.iter().copied().max().unwrap_or(0)
+        self.link_jobs.iter().copied().max().unwrap_or(0)
     }
 
     /// Active (job, placement) pairs in job-id order.
@@ -125,17 +134,13 @@ impl ContentionTracker {
     fn debug_check_against_rebuild(&self) {
         #[cfg(debug_assertions)]
         {
-            let mut expect = vec![0usize; self.uplink_jobs.len()];
+            let mut expect = vec![0usize; self.link_jobs.len()];
             for pl in self.active.iter().flatten() {
-                if pl.is_spread() {
-                    for s in pl.servers() {
-                        expect[s.0] += 1;
-                    }
-                }
+                self.topology.for_each_crossed(pl, |l| expect[l.0] += 1);
             }
             debug_assert_eq!(
-                expect, self.uplink_jobs,
-                "incremental uplink counts diverged from full rebuild"
+                expect, self.link_jobs,
+                "incremental per-link counts diverged from full rebuild"
             );
         }
     }
@@ -166,6 +171,7 @@ mod tests {
         let snap = tr.full_rebuild(&c);
         for (j, _) in tr.active_jobs() {
             assert_eq!(tr.p_j(j), snap.p_j(j));
+            assert_eq!(tr.bottleneck(j), snap.bottleneck(j));
         }
         assert_eq!(tr.max_contention(), snap.max_contention());
     }
@@ -192,6 +198,56 @@ mod tests {
         tr.admit(JobId(1), &mk(&c, &[(0, 2), (1, 0)]));
         assert_eq!(tr.p_j(JobId(0)), 0, "co-located ring never crosses an uplink");
         assert_eq!(tr.p_j(JobId(1)), 1, "spread ring counts itself");
+        assert_eq!(tr.bottleneck(JobId(0)), Bottleneck::NONE);
+    }
+
+    #[test]
+    fn try_queries_survive_inactive_jobs() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        assert_eq!(tr.try_p_j(JobId(0)), None);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        assert_eq!(tr.try_p_j(JobId(0)), Some(1));
+        tr.complete(JobId(0));
+        assert_eq!(tr.try_p_j(JobId(0)), None);
+        assert_eq!(tr.try_bottleneck(JobId(42)), None);
+    }
+
+    #[test]
+    fn rack_tier_counts_track_incrementally() {
+        use crate::topology::Topology;
+        // 4 servers, 2 racks of 2, ToR oversubscribed 2x.
+        let c = Cluster::uniform(4, 4, 1.0, 25.0)
+            .with_topology(Topology::racks(4, 2, 2.0));
+        let mut tr = ContentionTracker::new(&c);
+        // rack-local spread ring: bottleneck stays a server uplink
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        assert_eq!(tr.bottleneck(JobId(0)).oversub, 1.0);
+        // cross-rack ring: its ToR uplinks (count 1, oversub 2) now beat
+        // the shared server-0 uplink (count 2) on effective degree 1·2 vs
+        // … no: server 0 carries both rings, effective 2·1 = 2 ties 1·2 —
+        // the higher raw count wins the tie, keeping the server uplink.
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (2, 0)]));
+        let bn = tr.bottleneck(JobId(1));
+        assert_eq!((bn.p, bn.oversub), (2, 1.0), "tie prefers the higher count");
+        // a second cross-rack ring tips the ToR: count 2, effective 4
+        tr.admit(JobId(2), &mk(&c, &[(1, 1), (3, 0)]));
+        let bn = tr.bottleneck(JobId(2));
+        assert_eq!((bn.p, bn.oversub), (2, 2.0));
+        assert_eq!(bn.link, Some(c.topology().rack_uplink(0)));
+        // completions unwind the rack counts too: with only one cross-rack
+        // ring left the ToR's effective degree 1·2 ties the server-1 uplink
+        // it shares with job 0 (count 2), and the higher count wins again.
+        tr.complete(JobId(1));
+        let bn = tr.bottleneck(JobId(2));
+        assert_eq!((bn.p, bn.oversub), (2, 1.0));
+        assert_eq!(bn.link, Some(c.topology().server_uplink(ServerId(1))));
+        // tracker agrees with the from-scratch snapshot on the rack fabric
+        let snap = tr.full_rebuild(&c);
+        for (j, _) in tr.active_jobs() {
+            assert_eq!(tr.bottleneck(j), snap.bottleneck(j), "{j}");
+        }
+        assert_eq!(tr.max_contention(), snap.max_contention());
     }
 
     #[test]

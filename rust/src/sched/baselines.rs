@@ -194,9 +194,10 @@ pub fn random_policy(
 
 /// **GADGET-style locality-first** [22]: pack each ring into the fewest
 /// servers (best-fit into a single server when possible; otherwise
-/// greedily take the servers with the most eligible GPUs). GADGET assumes
-/// per-job reserved bandwidth, so it optimises locality only and is blind
-/// to the contention its placements cause.
+/// greedily take the servers with the most eligible GPUs, rack-major when
+/// the fabric has a rack tier so the ring also crosses the fewest ToR
+/// uplinks). GADGET assumes per-job reserved bandwidth, so it optimises
+/// locality only and is blind to the contention its placements cause.
 pub fn gadget_locality(
     cluster: &Cluster,
     jobs: &[JobSpec],
@@ -223,9 +224,30 @@ pub fn gadget_locality(
         {
             return Some(gs[..job.gpus].to_vec());
         }
-        // otherwise minimise span: repeatedly take the server with the most
-        // eligible GPUs
-        per_server.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
+        // Otherwise minimise span: fill from the rack with the most
+        // eligible GPUs (rack tiers only — flat fabrics skip straight to
+        // the seed rule), and within it the fullest servers first.
+        let topo = c.topology();
+        let rack_eligible: Option<Vec<usize>> = topo.has_racks().then(|| {
+            let mut re = vec![0usize; topo.num_racks()];
+            for (s, gs) in &per_server {
+                re[topo.rack_index(crate::cluster::ServerId(*s))] += gs.len();
+            }
+            re
+        });
+        per_server.sort_by(|a, b| {
+            let rack_key = match &rack_eligible {
+                Some(re) => {
+                    let (ra, rb) = (
+                        topo.rack_index(crate::cluster::ServerId(a.0)),
+                        topo.rack_index(crate::cluster::ServerId(b.0)),
+                    );
+                    re[rb].cmp(&re[ra]).then(ra.cmp(&rb))
+                }
+                None => std::cmp::Ordering::Equal,
+            };
+            rack_key.then(b.1.len().cmp(&a.1.len())).then(a.0.cmp(&b.0))
+        });
         let mut picked = Vec::with_capacity(job.gpus);
         for (_, gs) in per_server {
             for g in gs {

@@ -177,8 +177,12 @@ fn try_schedule(
 ///
 /// Picks the `gpus_needed` least-busy eligible GPUs (Line 4),
 /// tie-breaking towards servers that already host work per `warm` (the
-/// "fragment-aware" packing bias), then by (server, index) for
-/// determinism. `warm` is separate from `busy` because the two notions
+/// "fragment-aware" packing bias), then — when the cluster's fabric has a
+/// rack tier — towards *racks* that already host work (keeping small
+/// rings below their ToR instead of opening fresh racks and crossing the
+/// spine), then by (server, index) for determinism. On a flat fabric the
+/// rack tie-break is skipped entirely, so the seed behaviour is
+/// unchanged. `warm` is separate from `busy` because the two notions
 /// diverge for online callers: the batch planner calls this through
 /// [`fa_ffp`] with the ledger's `U + ρ̂/u ≤ θ` eligibility and
 /// `warm = U > 0`; the [`online`](crate::online) policies pass "GPU
@@ -201,11 +205,26 @@ pub fn fa_ffp_select(
         .server_ids()
         .map(|s| cluster.gpus_of(s).filter(|g| warm(*g)).count())
         .collect();
+    // warm occupancy per rack — only when a rack tier exists (on a flat
+    // fabric every server is its own rack and the tie-break is redundant)
+    let topo = cluster.topology();
+    let rack_occ: Option<Vec<usize>> = topo.has_racks().then(|| {
+        let mut ro = vec![0usize; topo.num_racks()];
+        for s in cluster.server_ids() {
+            ro[topo.rack_index(s)] += occ[s.0];
+        }
+        ro
+    });
     let cmp = |a: &GpuId, b: &GpuId| {
         busy(*a)
             .partial_cmp(&busy(*b))
             .unwrap()
             .then(occ[b.server.0].cmp(&occ[a.server.0])) // prefer warm servers
+            .then(match &rack_occ {
+                // …then warm racks (rack-local before crossing the spine)
+                Some(ro) => ro[topo.rack_index(b.server)].cmp(&ro[topo.rack_index(a.server)]),
+                None => std::cmp::Ordering::Equal,
+            })
             .then(a.server.cmp(&b.server))
             .then(a.index.cmp(&b.index))
     };
@@ -242,6 +261,14 @@ pub(crate) fn fa_ffp(
 /// Sort servers by average load `Σ_g busy / O_s`, take the `m` least
 /// loaded whose capacities sum to `≥ λ · gpus_needed` (Line 2), then pick
 /// the `gpus_needed` least-busy eligible GPUs within them (Lines 4–7).
+///
+/// Topology generalization: when the fabric has a rack tier and a single
+/// rack's capacity covers the over-provisioned pool `λ · G_j`, the server
+/// pool is restricted to the least-loaded such rack — the ring then never
+/// crosses an (oversubscribed) ToR uplink. If the rack-local pool cannot
+/// yield `G_j` eligible GPUs, selection falls back to the cluster-wide
+/// rule, so feasibility never shrinks. Flat fabrics skip the restriction
+/// and behave exactly as the seed.
 pub fn lbsgf_select(
     cluster: &Cluster,
     gpus_needed: usize,
@@ -249,14 +276,70 @@ pub fn lbsgf_select(
     eligible: impl Fn(GpuId) -> bool,
     busy: impl Fn(GpuId) -> f64,
 ) -> Option<Vec<GpuId>> {
+    let need = (lambda * gpus_needed as f64).ceil() as usize;
+    let topo = cluster.topology();
+    if topo.has_racks() {
+        if let Some(rack) = least_loaded_covering_rack(cluster, need, &busy) {
+            if let Some(sel) =
+                lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, Some(rack))
+            {
+                return Some(sel);
+            }
+        }
+    }
+    lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, None)
+}
+
+/// The least-loaded rack whose total GPU capacity covers `need`, if any
+/// (load = mean per-GPU busy time over the rack; ties by rack id).
+/// Single `O(S + R)` pass — this sits on the per-job placement path of
+/// the planner's bisection loop.
+fn least_loaded_covering_rack(
+    cluster: &Cluster,
+    need: usize,
+    busy: &impl Fn(GpuId) -> f64,
+) -> Option<usize> {
+    let topo = cluster.topology();
+    let mut cap = vec![0usize; topo.num_racks()];
+    let mut load = vec![0.0f64; topo.num_racks()];
+    for s in cluster.server_ids() {
+        let r = topo.rack_index(s);
+        cap[r] += cluster.capacity(s);
+        load[r] += cluster.gpus_of(s).map(busy).sum::<f64>();
+    }
+    let mut best: Option<(f64, usize)> = None;
+    for rack in 0..topo.num_racks() {
+        if cap[rack] < need {
+            continue;
+        }
+        let avg = load[rack] / cap[rack] as f64;
+        if best.map_or(true, |(b, _)| avg < b) {
+            best = Some((avg, rack));
+        }
+    }
+    best.map(|(_, r)| r)
+}
+
+/// The core of Alg. 3 over an optional rack-restricted server pool.
+fn lbsgf_pool(
+    cluster: &Cluster,
+    gpus_needed: usize,
+    need: usize,
+    eligible: &impl Fn(GpuId) -> bool,
+    busy: &impl Fn(GpuId) -> f64,
+    rack: Option<usize>,
+) -> Option<Vec<GpuId>> {
+    let topo = cluster.topology();
     let server_load = |s: crate::cluster::ServerId| -> f64 {
-        cluster.gpus_of(s).map(&busy).sum::<f64>() / cluster.capacity(s) as f64
+        cluster.gpus_of(s).map(busy).sum::<f64>() / cluster.capacity(s) as f64
     };
-    let mut servers: Vec<_> = cluster.server_ids().collect();
+    let mut servers: Vec<_> = cluster
+        .server_ids()
+        .filter(|s| rack.map_or(true, |r| topo.rack_index(*s) == r))
+        .collect();
     servers.sort_by(|a, b| {
         server_load(*a).partial_cmp(&server_load(*b)).unwrap().then(a.cmp(b))
     });
-    let need = (lambda * gpus_needed as f64).ceil() as usize;
     let mut selected = Vec::new();
     let mut cap = 0usize;
     for s in servers {
@@ -266,7 +349,7 @@ pub fn lbsgf_select(
             break;
         }
     }
-    // (if λ G_j exceeds total capacity, all servers are selected)
+    // (if λ G_j exceeds the pool's capacity, every pool server is selected)
     //
     // Alg. 3 Lines 4–5: within each selected server (already in
     // least-loaded order) sort GPUs by U non-decreasing, then *append* —
@@ -423,6 +506,77 @@ mod tests {
         let gpus = lbsgf(&c, &ledger, &job, rho.rho_lower, 1e9, 1.0).unwrap();
         let placement = JobPlacement::new(gpus);
         assert_eq!(placement.span(), 1);
+    }
+
+    #[test]
+    fn fa_ffp_prefers_warm_racks_when_servers_tie() {
+        use crate::cluster::ServerId;
+        use crate::topology::Topology;
+        // 4 servers x 2 GPUs, racks {0,1} and {2,3}. Server 3 is fully
+        // occupied: every *candidate* server has zero warm occupancy, so
+        // the server tie-break is silent and the rack tie-break must pull
+        // the job into rack 1 (server 2) instead of server 0.
+        let c = Cluster::uniform(4, 2, 1.0, 25.0)
+            .with_topology(Topology::racks(4, 2, 2.0));
+        let occupied = |g: crate::cluster::GpuId| g.server == ServerId(3);
+        let gpus = fa_ffp_select(
+            &c,
+            2,
+            |g| !occupied(g),
+            |_| 0.0,
+            occupied,
+        )
+        .unwrap();
+        assert!(gpus.iter().all(|g| g.server == ServerId(2)), "picked {gpus:?}");
+
+        // sanity: on the flat fabric the same tie falls through to the
+        // lowest server id (the seed rule).
+        let flat = Cluster::uniform(4, 2, 1.0, 25.0);
+        let gpus = fa_ffp_select(&flat, 2, |g| !occupied(g), |_| 0.0, occupied).unwrap();
+        assert!(gpus.iter().all(|g| g.server == ServerId(0)), "picked {gpus:?}");
+    }
+
+    #[test]
+    fn lbsgf_restricts_to_a_covering_rack() {
+        use crate::cluster::ServerId;
+        use crate::topology::Topology;
+        // capacities [2,4,4,4], racks {0,1} (cap 6) and {2,3} (cap 8):
+        // an 8-GPU ring fits below rack 1's ToR, so LBSGF must stay there
+        // instead of taking the flat least-loaded prefix {0,1,2} that
+        // crosses the spine.
+        let c = Cluster::new(&[2, 4, 4, 4], 1.0, 25.0)
+            .with_topology(Topology::custom_racks(&[2, 2], &[2.0, 2.0]));
+        let gpus = lbsgf_select(&c, 8, 1.0, |_| true, |_| 0.0).unwrap();
+        let pl = JobPlacement::new(gpus);
+        assert!(
+            pl.servers().all(|s| s == ServerId(2) || s == ServerId(3)),
+            "ring must stay in rack 1, got span over {:?}",
+            pl.servers().collect::<Vec<_>>()
+        );
+        // flat fabric keeps the seed prefix rule (servers 0,1,2)
+        let flat = Cluster::new(&[2, 4, 4, 4], 1.0, 25.0);
+        let gpus = lbsgf_select(&flat, 8, 1.0, |_| true, |_| 0.0).unwrap();
+        let pl = JobPlacement::new(gpus);
+        assert!(pl.servers().any(|s| s == ServerId(0)), "flat rule unchanged");
+    }
+
+    #[test]
+    fn lbsgf_falls_back_to_the_cluster_when_the_rack_pool_is_ineligible() {
+        use crate::cluster::ServerId;
+        use crate::topology::Topology;
+        // racks {0,1} (cap 8, covers the ring) and {2} (cap 4). Server 1
+        // is fully loaded AND ineligible under θ, so the rack-restricted
+        // pool yields only 4 eligible GPUs — the selection must fall back
+        // to the global rule (whose load-sorted prefix is {0, 2}) and
+        // still place all 8 workers.
+        let c = Cluster::uniform(3, 4, 1.0, 25.0)
+            .with_topology(Topology::custom_racks(&[2, 1], &[2.0, 2.0]));
+        let busy = |g: crate::cluster::GpuId| if g.server == ServerId(1) { 100.0 } else { 0.0 };
+        let gpus = lbsgf_select(&c, 8, 1.0, |g| g.server != ServerId(1), busy).unwrap();
+        assert_eq!(gpus.len(), 8);
+        let pl = JobPlacement::new(gpus);
+        assert_eq!(pl.gpus_on(ServerId(0)), 4);
+        assert_eq!(pl.gpus_on(ServerId(2)), 4);
     }
 
     #[test]

@@ -132,13 +132,15 @@ impl<'a> Simulator<'a> {
                 continue;
             }
 
-            // 2) Contention snapshot (Eq. 6 over the active set) — constant
-            //    until the next admission or completion event.
+            // 2) Contention snapshot (generalized Eq. 6 over the active
+            //    set, per fabric link) — constant until the next admission
+            //    or completion event.
             let refs: Vec<(JobId, &JobPlacement)> =
                 active.iter().map(|a| (a.job, a.placement)).collect();
             let snap = ContentionSnapshot::build_ref(self.cluster, &refs);
 
-            // Per-job rates for this period (shared kernel arithmetic).
+            // Per-job rates for this period (shared kernel arithmetic),
+            // each taken at the job's bottleneck link.
             let rates: Vec<RatePoint> = active
                 .iter()
                 .map(|a| {
@@ -147,7 +149,7 @@ impl<'a> Simulator<'a> {
                         self.cluster,
                         a.spec,
                         a.placement,
-                        snap.p_j(a.job),
+                        snap.bottleneck(a.job),
                         self.options.fractional_progress,
                     )
                 })

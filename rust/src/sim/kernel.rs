@@ -14,11 +14,13 @@
 use crate::cluster::{Cluster, JobPlacement};
 use crate::contention::ContentionParams;
 use crate::jobs::JobSpec;
+use crate::topology::Bottleneck;
 
 /// One active job's constant-rate operating point for the current period.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RatePoint {
-    /// Contention degree `p_j[t]` (Eq. 6).
+    /// Ring count at the job's bottleneck link — Eq. 6's `p_j[t]` on a
+    /// flat fabric.
     pub p: usize,
     /// Per-iteration time `τ_j[t]` in slots (Eq. 8).
     pub tau: f64,
@@ -27,19 +29,20 @@ pub struct RatePoint {
     pub inc: f64,
 }
 
-/// Evaluate one job's operating point given its contention degree.
+/// Evaluate one job's operating point given its bottleneck-link
+/// contention (use [`Bottleneck::flat`] for a scalar Eq. 6 degree).
 pub fn rate_point(
     params: &ContentionParams,
     cluster: &Cluster,
     spec: &JobSpec,
     placement: &JobPlacement,
-    p: usize,
+    bottleneck: Bottleneck,
     fractional_progress: bool,
 ) -> RatePoint {
-    let tau = params.tau(cluster, spec, placement, p);
+    let tau = params.tau_at(cluster, spec, placement, bottleneck);
     let phi = params.phi(tau);
     let inc = if phi == 0 && fractional_progress { 1.0 / tau } else { phi as f64 };
-    RatePoint { p, tau, inc }
+    RatePoint { p: bottleneck.p, tau, inc }
 }
 
 /// Slots until `remaining` iterations finish at `inc` iterations/slot
@@ -65,7 +68,7 @@ mod tests {
         let params = ContentionParams::paper();
         let job = JobSpec::synthetic(JobId(0), 2);
         let pl = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(0), 1)]);
-        let r = rate_point(&params, &c, &job, &pl, 0, false);
+        let r = rate_point(&params, &c, &job, &pl, Bottleneck::NONE, false);
         assert_eq!(r.p, 0);
         assert!((r.tau - params.tau(&c, &job, &pl, 0)).abs() < 1e-15);
         assert_eq!(r.inc, params.phi(r.tau) as f64);
@@ -77,10 +80,30 @@ mod tests {
         let params = ContentionParams::paper();
         let job = JobSpec::synthetic(JobId(0), 2);
         let pl = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(1), 0)]);
-        let stalled = rate_point(&params, &c, &job, &pl, 1, false);
+        let stalled = rate_point(&params, &c, &job, &pl, Bottleneck::flat(1), false);
         assert_eq!(stalled.inc, 0.0, "tau {} should floor phi to 0", stalled.tau);
-        let frac = rate_point(&params, &c, &job, &pl, 1, true);
+        let frac = rate_point(&params, &c, &job, &pl, Bottleneck::flat(1), true);
         assert!(frac.inc > 0.0 && frac.inc < 1.0);
+    }
+
+    #[test]
+    fn oversubscribed_bottleneck_reduces_rate() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let job = JobSpec::synthetic(JobId(0), 2);
+        let pl = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(1), 0)]);
+        let flat = rate_point(&params, &c, &job, &pl, Bottleneck::flat(4), false);
+        let over = rate_point(
+            &params,
+            &c,
+            &job,
+            &pl,
+            Bottleneck { p: 4, oversub: 2.0, link: None },
+            false,
+        );
+        assert!(over.tau > flat.tau);
+        assert!(over.inc <= flat.inc);
+        assert_eq!(over.p, 4, "RatePoint reports the bottleneck ring count");
     }
 
     #[test]

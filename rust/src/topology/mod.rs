@@ -1,0 +1,480 @@
+//! Hierarchical network fabric: the tree of shared links above the servers.
+//!
+//! The paper's contention model (Eq. 6) counts the active rings crossing a
+//! *server uplink*, which implicitly assumes every uplink attaches to one
+//! flat, non-blocking switch. Real multi-tenant clusters are rack-structured
+//! and oversubscribed: servers attach to a top-of-rack (ToR) switch, and
+//! ToR uplinks into the spine typically carry less capacity than the sum of
+//! the server links below them (an *oversubscription factor* `o_ℓ ≥ 1`).
+//!
+//! This module models that fabric as a tree of links (identified by
+//! [`LinkId`], tiered per [`LinkTier`]):
+//!
+//! * **tier 0** — one uplink per server (the links of Eq. 6),
+//! * **tier 1** — one uplink per rack (ToR → spine), present only when the
+//!   topology actually has a rack tier,
+//! * the spine itself is the root and owns no uplink: a ring confined to
+//!   the cluster never crosses it.
+//!
+//! A job's ring **crosses** link `ℓ` iff the servers in `ℓ`'s subtree hold
+//! some but not all of the job's workers — `0 < Σ_{s ∈ sub(ℓ)} y_js < G_j`.
+//! For a server uplink the subtree is the server itself and this is exactly
+//! the Eq. 6 indicator `1{0 < y_js < G_j}`; for a rack uplink it is the
+//! natural generalization one tier up. The per-link contention count is the
+//! number of active rings crossing the link, and a job's effective
+//! contention is taken at its [`Bottleneck`] — the crossed link maximizing
+//! `count × oversub` (an `o`-times oversubscribed link serving `n` rings
+//! behaves like a full-rate link serving `n·o`).
+//!
+//! Every inter-server link is modeled at the reference capacity `b^e`
+//! scaled down by its factor, so a ToR uplink — even at `o = 1` —
+//! *aggregates* all cross-rack rings of its rack onto one shared link.
+//! The truly non-blocking fabric is therefore the flat topology (no ToR
+//! tier); per-link absolute capacities are a tracked follow-on.
+//!
+//! **Eq. 6 is the exact 1-tier special case**: with [`Topology::flat`]
+//! (no rack tier, all oversubscription 1.0) the only links are the server
+//! uplinks, `count × 1.0` reduces to the Eq. 6 count, and the bottleneck
+//! degree equals the paper's `p_j[t]` bit for bit — the flat-equivalence
+//! property test in `tests/topology_equivalence.rs` enforces this.
+//!
+//! Follow-ons tracked in ROADMAP: heterogeneous per-link speeds (absolute
+//! capacities instead of a scalar factor) and job-level bandwidth shares.
+
+use crate::cluster::ServerId;
+use crate::cluster::JobPlacement;
+use crate::Result;
+use anyhow::bail;
+
+/// Index of a link in the topology (dense; see [`Topology`] for layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub usize);
+
+impl std::fmt::Display for LinkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "l{}", self.0)
+    }
+}
+
+/// Which tier of the fabric a link belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    /// Server → ToR (the links of Eq. 6).
+    ServerUplink,
+    /// ToR → spine.
+    RackUplink,
+}
+
+/// The bottleneck link of one job's ring in the current slot: Eq. 6's
+/// `p_j[t]` generalized to a multi-tier fabric.
+///
+/// `p` is the number of active rings crossing the bottleneck link
+/// (including the job itself) and `oversub` that link's oversubscription
+/// factor; the *effective* contention degree driving Eq. 7 is
+/// `p × oversub`. On a flat topology `oversub == 1.0` and `p` is exactly
+/// the paper's `p_j[t]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bottleneck {
+    /// Active-ring count on the bottleneck link (`p_j[t]` when flat).
+    pub p: usize,
+    /// Oversubscription factor of that link (1.0 when flat).
+    pub oversub: f64,
+    /// The bottleneck link itself; `None` for co-located jobs (no link
+    /// crossed).
+    pub link: Option<LinkId>,
+}
+
+impl Bottleneck {
+    /// A co-located job: crosses no link, contention degree 0.
+    pub const NONE: Bottleneck = Bottleneck { p: 0, oversub: 1.0, link: None };
+
+    /// The flat-fabric bottleneck with Eq. 6 degree `p` — the adapter the
+    /// scalar [`ContentionParams::tau`](crate::contention::ContentionParams::tau)
+    /// wrappers use, guaranteeing the 1-tier model is the same code path.
+    pub fn flat(p: usize) -> Bottleneck {
+        Bottleneck { p, oversub: 1.0, link: None }
+    }
+
+    /// Effective contention degree `p × oversub` feeding Eq. 7's
+    /// `k_j = ξ1 · p_eff`. Multiplying by 1.0 is exact in IEEE arithmetic,
+    /// so the flat case reproduces `p as f64` bit for bit.
+    pub fn effective(&self) -> f64 {
+        self.p as f64 * self.oversub
+    }
+
+    /// Severity order used to pick the bottleneck among crossed links:
+    /// larger effective degree wins; on ties the larger raw count (more
+    /// informative in reports). Remaining ties keep the first-visited
+    /// link, which is deterministic.
+    pub fn dominates(&self, other: &Bottleneck) -> bool {
+        self.effective() > other.effective()
+            || (self.effective() == other.effective() && self.p > other.p)
+    }
+}
+
+/// The shared-link tree above the servers.
+///
+/// Link layout: ids `[0, num_servers)` are the server uplinks (tier 0,
+/// link `s` belongs to server `s`); ids `[num_servers, num_links)` are the
+/// rack uplinks (tier 1, one per rack) when a rack tier exists.
+///
+/// Rack assignment must be nondecreasing in server id (rack 0 holds the
+/// lowest-numbered servers, and so on) — this lets every crossing query
+/// run in `O(span)` with no allocation by grouping a placement's sorted
+/// server list into rack runs.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    num_servers: usize,
+    /// Rack id per server (nondecreasing); empty ⇒ flat fabric (no rack
+    /// tier, Eq. 6 exactly).
+    rack_of: Vec<usize>,
+    num_racks: usize,
+    /// Oversubscription factor per link, indexed by [`LinkId`].
+    oversub: Vec<f64>,
+}
+
+impl Topology {
+    /// The paper's implicit 1-tier fabric: server uplinks only, no
+    /// oversubscription. Eq. 6 exactly.
+    pub fn flat(num_servers: usize) -> Self {
+        assert!(num_servers > 0, "topology needs at least one server");
+        Topology {
+            num_servers,
+            rack_of: Vec::new(),
+            num_racks: 0,
+            oversub: vec![1.0; num_servers],
+        }
+    }
+
+    /// A homogeneous rack tier: consecutive groups of `servers_per_rack`
+    /// servers share a ToR whose spine uplink is oversubscribed by
+    /// `oversub` (1.0 = non-blocking). The last rack may be smaller.
+    pub fn racks(num_servers: usize, servers_per_rack: usize, oversub: f64) -> Self {
+        assert!(num_servers > 0, "topology needs at least one server");
+        assert!(servers_per_rack >= 1, "racks must hold at least one server");
+        assert!(oversub >= 1.0, "oversubscription factor must be >= 1");
+        let num_racks = (num_servers + servers_per_rack - 1) / servers_per_rack;
+        let rack_of = (0..num_servers).map(|s| s / servers_per_rack).collect();
+        let mut ov = vec![1.0; num_servers];
+        ov.extend(std::iter::repeat(oversub).take(num_racks));
+        Topology { num_servers, rack_of, num_racks, oversub: ov }
+    }
+
+    /// Heterogeneous racks: `rack_sizes[r]` consecutive servers in rack
+    /// `r`, each rack uplink with its own oversubscription factor.
+    pub fn custom_racks(rack_sizes: &[usize], rack_oversub: &[f64]) -> Self {
+        assert!(!rack_sizes.is_empty(), "topology needs at least one rack");
+        assert_eq!(rack_sizes.len(), rack_oversub.len(), "one factor per rack");
+        assert!(rack_sizes.iter().all(|&n| n >= 1), "racks must hold servers");
+        assert!(rack_oversub.iter().all(|&o| o >= 1.0), "oversubscription >= 1");
+        let num_servers: usize = rack_sizes.iter().sum();
+        let mut rack_of = Vec::with_capacity(num_servers);
+        for (r, &n) in rack_sizes.iter().enumerate() {
+            rack_of.extend(std::iter::repeat(r).take(n));
+        }
+        let mut oversub = vec![1.0; num_servers];
+        oversub.extend_from_slice(rack_oversub);
+        Topology { num_servers, rack_of, num_racks: rack_sizes.len(), oversub }
+    }
+
+    /// Number of servers (tier-0 leaves).
+    pub fn num_servers(&self) -> usize {
+        self.num_servers
+    }
+
+    /// Number of racks; 0 for a flat fabric.
+    pub fn num_racks(&self) -> usize {
+        self.num_racks
+    }
+
+    /// Total number of links in the tree.
+    pub fn num_links(&self) -> usize {
+        self.oversub.len()
+    }
+
+    /// Whether a rack tier exists. A flat fabric recovers Eq. 6 exactly;
+    /// topology-aware placement tie-breaks are no-ops on it.
+    pub fn has_racks(&self) -> bool {
+        self.num_racks > 0
+    }
+
+    /// Oversubscription factor of one link.
+    pub fn oversub(&self, l: LinkId) -> f64 {
+        self.oversub[l.0]
+    }
+
+    /// Which tier a link belongs to.
+    pub fn tier(&self, l: LinkId) -> LinkTier {
+        if l.0 < self.num_servers { LinkTier::ServerUplink } else { LinkTier::RackUplink }
+    }
+
+    /// The uplink of server `s` (tier 0 — the Eq. 6 link).
+    pub fn server_uplink(&self, s: ServerId) -> LinkId {
+        debug_assert!(s.0 < self.num_servers);
+        LinkId(s.0)
+    }
+
+    /// The spine uplink of rack `r` (tier 1). Panics on a flat fabric.
+    pub fn rack_uplink(&self, r: usize) -> LinkId {
+        assert!(r < self.num_racks, "rack {r} out of range (flat fabric?)");
+        LinkId(self.num_servers + r)
+    }
+
+    /// Rack index of a server. On a flat fabric every server is its own
+    /// "rack" — the natural degenerate grouping schedulers can rely on.
+    pub fn rack_index(&self, s: ServerId) -> usize {
+        if self.rack_of.is_empty() { s.0 } else { self.rack_of[s.0] }
+    }
+
+    /// Servers of one rack, in id order.
+    pub fn servers_in_rack(&self, rack: usize) -> impl Iterator<Item = ServerId> + '_ {
+        (0..self.num_servers)
+            .filter(move |&s| self.rack_index(ServerId(s)) == rack)
+            .map(ServerId)
+    }
+
+    /// Visit every link crossed by `placement`'s ring — the generalized
+    /// Eq. 6 indicator `0 < Σ_{s ∈ sub(ℓ)} y_js < G_j` — in `O(span)` with
+    /// no allocation. Co-located jobs cross nothing.
+    pub fn for_each_crossed(&self, placement: &JobPlacement, mut f: impl FnMut(LinkId)) {
+        if !placement.is_spread() {
+            return; // span 1: every subtree holds all or none of the workers
+        }
+        let total = placement.num_workers();
+        if self.rack_of.is_empty() {
+            // Flat: exactly the Eq. 6 server-uplink indicators.
+            for s in placement.servers() {
+                f(self.server_uplink(s));
+            }
+            return;
+        }
+        // Servers iterate in ascending id order and rack assignment is
+        // nondecreasing, so used racks form contiguous runs: accumulate
+        // each run's worker count and emit its uplink when the rack holds
+        // a strict subset of the ring.
+        let mut cur_rack = usize::MAX;
+        let mut in_rack = 0usize;
+        for s in placement.servers() {
+            // a spread ring crosses every used server's uplink (y < G_j)
+            f(self.server_uplink(s));
+            let r = self.rack_of[s.0];
+            if r != cur_rack {
+                if cur_rack != usize::MAX && in_rack < total {
+                    f(self.rack_uplink(cur_rack));
+                }
+                cur_rack = r;
+                in_rack = 0;
+            }
+            in_rack += placement.gpus_on(s);
+        }
+        if cur_rack != usize::MAX && in_rack < total {
+            f(self.rack_uplink(cur_rack));
+        }
+    }
+
+    /// All links crossed by a placement (allocating convenience wrapper of
+    /// [`for_each_crossed`](Self::for_each_crossed)).
+    pub fn crossed_links(&self, placement: &JobPlacement) -> Vec<LinkId> {
+        let mut out = Vec::new();
+        self.for_each_crossed(placement, |l| out.push(l));
+        out
+    }
+
+    /// The bottleneck of a placement given per-link active-ring counts
+    /// (`counts[l.0]`): the crossed link with the largest effective degree
+    /// `count × oversub`. [`Bottleneck::NONE`] for co-located jobs.
+    pub fn bottleneck(&self, placement: &JobPlacement, counts: &[usize]) -> Bottleneck {
+        debug_assert_eq!(counts.len(), self.num_links());
+        let mut best = Bottleneck::NONE;
+        self.for_each_crossed(placement, |l| {
+            let cand =
+                Bottleneck { p: counts[l.0], oversub: self.oversub(l), link: Some(l) };
+            if best.link.is_none() || cand.dominates(&best) {
+                best = cand;
+            }
+        });
+        best
+    }
+
+    /// Human-readable link name for logs and reports.
+    pub fn describe(&self, l: LinkId) -> String {
+        match self.tier(l) {
+            LinkTier::ServerUplink => format!("uplink(s{})", l.0),
+            LinkTier::RackUplink => format!("tor(r{})", l.0 - self.num_servers),
+        }
+    }
+}
+
+/// CLI / config form of a topology, resolved against a cluster's server
+/// count at build time: `flat` or `rack:<servers_per_rack>:<oversub>`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TopologySpec {
+    /// 1-tier fabric (the paper's model).
+    Flat,
+    /// Homogeneous racks with an oversubscribed ToR uplink.
+    Rack { servers_per_rack: usize, oversub: f64 },
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        TopologySpec::Flat
+    }
+}
+
+impl TopologySpec {
+    /// Materialise for a concrete cluster size.
+    pub fn build(&self, num_servers: usize) -> Topology {
+        match *self {
+            TopologySpec::Flat => Topology::flat(num_servers),
+            TopologySpec::Rack { servers_per_rack, oversub } => {
+                Topology::racks(num_servers, servers_per_rack, oversub)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for TopologySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologySpec::Flat => f.write_str("flat"),
+            TopologySpec::Rack { servers_per_rack, oversub } => {
+                write!(f, "rack:{servers_per_rack}:{oversub}")
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for TopologySpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if s.eq_ignore_ascii_case("flat") {
+            return Ok(TopologySpec::Flat);
+        }
+        let mut parts = s.split(':');
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some("rack"), Some(spr), oversub, None) => {
+                let servers_per_rack: usize =
+                    spr.parse().map_err(|_| anyhow::anyhow!("bad rack size '{spr}'"))?;
+                if servers_per_rack == 0 {
+                    bail!("rack size must be >= 1");
+                }
+                let oversub: f64 = match oversub {
+                    None => 1.0,
+                    Some(o) => o.parse().map_err(|_| anyhow::anyhow!("bad oversub '{o}'"))?,
+                };
+                if !(oversub >= 1.0) {
+                    bail!("oversubscription factor must be >= 1, got {oversub}");
+                }
+                Ok(TopologySpec::Rack { servers_per_rack, oversub })
+            }
+            _ => bail!(
+                "unknown topology '{s}' (expected flat | rack:<servers_per_rack>:<oversub>)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    fn place(c: &Cluster, pairs: &[(usize, usize)]) -> JobPlacement {
+        JobPlacement::new(
+            pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect(),
+        )
+    }
+
+    #[test]
+    fn flat_crossing_is_eq6() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let t = Topology::flat(4);
+        assert!(!t.has_racks());
+        assert_eq!(t.num_links(), 4);
+        // spread over servers 0 and 2: exactly those uplinks
+        let pl = place(&c, &[(0, 0), (0, 1), (2, 0)]);
+        assert_eq!(t.crossed_links(&pl), vec![LinkId(0), LinkId(2)]);
+        // co-located: nothing
+        assert!(t.crossed_links(&place(&c, &[(1, 0), (1, 1)])).is_empty());
+    }
+
+    #[test]
+    fn rack_crossing_adds_tor_uplinks_only_across_racks() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        // racks {0,1} and {2,3}
+        let t = Topology::racks(4, 2, 2.0);
+        assert_eq!(t.num_racks(), 2);
+        assert_eq!(t.num_links(), 6);
+        // intra-rack spread (servers 0,1): server uplinks crossed, the
+        // whole ring stays below the ToR — no rack uplink.
+        let intra = place(&c, &[(0, 0), (1, 0)]);
+        assert_eq!(t.crossed_links(&intra), vec![LinkId(0), LinkId(1)]);
+        // cross-rack spread (servers 1,2): both server uplinks AND both
+        // rack uplinks (rack runs flush after their last server).
+        let cross = place(&c, &[(1, 0), (2, 0)]);
+        let mut links = t.crossed_links(&cross);
+        links.sort();
+        assert_eq!(links, vec![LinkId(1), LinkId(2), t.rack_uplink(0), t.rack_uplink(1)]);
+    }
+
+    #[test]
+    fn uneven_last_rack_and_custom_racks() {
+        let t = Topology::racks(5, 2, 1.5);
+        assert_eq!(t.num_racks(), 3);
+        assert_eq!(t.rack_index(ServerId(4)), 2);
+        assert_eq!(t.servers_in_rack(2).count(), 1);
+        let h = Topology::custom_racks(&[3, 1], &[1.0, 4.0]);
+        assert_eq!(h.num_servers(), 4);
+        assert_eq!(h.oversub(h.rack_uplink(1)), 4.0);
+        assert_eq!(h.rack_index(ServerId(2)), 0);
+        assert_eq!(h.tier(LinkId(4)), LinkTier::RackUplink);
+    }
+
+    #[test]
+    fn bottleneck_prefers_effective_degree() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let t = Topology::racks(4, 2, 2.0);
+        // one cross-rack job; counts: its server uplinks 1 each, rack
+        // uplinks 1 each → effective 1·2 = 2 on the ToR beats 1·1.
+        let pl = place(&c, &[(0, 0), (2, 0)]);
+        let mut counts = vec![0usize; t.num_links()];
+        t.for_each_crossed(&pl, |l| counts[l.0] += 1);
+        let bn = t.bottleneck(&pl, &counts);
+        assert_eq!(bn.link, Some(t.rack_uplink(0)));
+        assert_eq!(bn.p, 1);
+        assert_eq!(bn.oversub, 2.0);
+        assert_eq!(bn.effective(), 2.0);
+    }
+
+    #[test]
+    fn colocated_bottleneck_is_none() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let t = Topology::racks(2, 2, 8.0);
+        let pl = place(&c, &[(0, 0), (0, 1)]);
+        let counts = vec![0usize; t.num_links()];
+        assert_eq!(t.bottleneck(&pl, &counts), Bottleneck::NONE);
+    }
+
+    #[test]
+    fn spec_parsing_roundtrip() {
+        assert_eq!("flat".parse::<TopologySpec>().unwrap(), TopologySpec::Flat);
+        let r: TopologySpec = "rack:4:2.5".parse().unwrap();
+        assert_eq!(r, TopologySpec::Rack { servers_per_rack: 4, oversub: 2.5 });
+        assert_eq!(r.to_string().parse::<TopologySpec>().unwrap(), r);
+        let d: TopologySpec = "rack:8".parse().unwrap();
+        assert_eq!(d, TopologySpec::Rack { servers_per_rack: 8, oversub: 1.0 });
+        assert!("rack:0:2".parse::<TopologySpec>().is_err());
+        assert!("rack:4:0.5".parse::<TopologySpec>().is_err());
+        assert!("mesh".parse::<TopologySpec>().is_err());
+        assert!("rack:4:2:9".parse::<TopologySpec>().is_err());
+    }
+
+    #[test]
+    fn spec_builds_matching_topology() {
+        let t = TopologySpec::Rack { servers_per_rack: 3, oversub: 2.0 }.build(7);
+        assert_eq!(t.num_racks(), 3);
+        assert_eq!(t.num_servers(), 7);
+        assert_eq!(TopologySpec::Flat.build(5).num_links(), 5);
+    }
+}

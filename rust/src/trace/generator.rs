@@ -95,12 +95,55 @@ impl TraceGenerator {
     /// `mean_gap` slots (online extension; paper §4.1 is batch-at-0).
     /// Arrival order is randomized across the mix classes.
     pub fn generate_online(&self, seed: u64, mean_gap: f64) -> JobSet {
+        self.assign_arrivals(seed, mean_gap, None)
+    }
+
+    /// Generate jobs with **bursty (on/off) arrivals**: a Poisson process
+    /// of mean inter-arrival `mean_gap` slots that is only live during the
+    /// ON phase of a repeating `on_slots`/`off_slots` cycle — arrivals
+    /// falling into an OFF window are deferred to the next burst. This is
+    /// the classic interrupted-Poisson model of diurnal / bursty cluster
+    /// load; `off_slots = 0` reduces to [`generate_online`] exactly
+    /// (identical RNG stream, identical trace).
+    pub fn generate_bursty(
+        &self,
+        seed: u64,
+        mean_gap: f64,
+        on_slots: u64,
+        off_slots: u64,
+    ) -> JobSet {
+        assert!(on_slots >= 1, "burst ON window must be at least one slot");
+        self.assign_arrivals(seed, mean_gap, Some((on_slots, off_slots)))
+    }
+
+    /// Shared arrival-assignment core: exponential gaps, optionally gated
+    /// by an on/off window. One code path keeps Poisson the exact
+    /// `off = 0` special case of bursty.
+    fn assign_arrivals(
+        &self,
+        seed: u64,
+        mean_gap: f64,
+        window: Option<(u64, u64)>,
+    ) -> JobSet {
         assert!(mean_gap >= 0.0);
         let mut jobs = self.generate(seed);
         let mut rng = Rng::seed_from_u64(seed ^ 0xA551_17ED);
         rng.shuffle(&mut jobs);
         let mut t = 0.0f64;
         for job in jobs.iter_mut() {
+            if let Some((on, off)) = window {
+                if off > 0 {
+                    // Defer an OFF-phase arrival to the next burst start.
+                    // Integer phase arithmetic on the floored slot keeps
+                    // the gate exact (arrivals are slot-quantised anyway).
+                    let cycle = on + off;
+                    let slot = t as u64;
+                    let phase = slot % cycle;
+                    if phase >= on {
+                        t = (slot - phase + cycle) as f64;
+                    }
+                }
+            }
             job.arrival = t as u64;
             // exponential inter-arrival via inverse CDF
             let u: f64 = rng.gen_f64().max(1e-12);
@@ -134,6 +177,27 @@ impl TraceGenerator {
                 self.mix, self.iters_min, self.iters_max, mean_gap
             ),
             jobs: self.generate_online(seed, mean_gap),
+        }
+    }
+
+    /// Bursty-arrival [`Trace`] (on/off-gated Poisson, see
+    /// [`generate_bursty`](Self::generate_bursty)); provenance records the
+    /// full arrival process so the trace is exactly reproducible.
+    pub fn generate_bursty_trace(
+        &self,
+        seed: u64,
+        mean_gap: f64,
+        on_slots: u64,
+        off_slots: u64,
+    ) -> Trace {
+        Trace {
+            seed,
+            description: format!(
+                "philly-derived mix {:?}, F_j in [{}, {}], bursty arrivals mean gap {} \
+                 (on {on_slots} / off {off_slots} slots)",
+                self.mix, self.iters_min, self.iters_max, mean_gap
+            ),
+            jobs: self.generate_bursty(seed, mean_gap, on_slots, off_slots),
         }
     }
 }
@@ -209,6 +273,39 @@ mod tests {
         assert!(t.jobs.iter().any(|j| j.arrival > 0));
         let back = crate::trace::Trace::from_json(&t.to_json().unwrap()).unwrap();
         assert_eq!(back.jobs, t.jobs, "arrival timestamps survive serialisation");
+    }
+
+    #[test]
+    fn bursty_arrivals_land_in_on_windows() {
+        let (on, off) = (20u64, 80u64);
+        let jobs = TraceGenerator::paper().generate_bursty(9, 2.0, on, off);
+        assert_eq!(jobs.len(), 160);
+        let cycle = on + off;
+        for j in &jobs {
+            let phase = j.arrival % cycle;
+            assert!(phase < on, "{} arrived at {} (phase {phase}) in an OFF window", j.id, j.arrival);
+        }
+        // sorted + deterministic
+        assert!(jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert_eq!(jobs, TraceGenerator::paper().generate_bursty(9, 2.0, on, off));
+        // actually bursty: arrivals span multiple cycles
+        let last = jobs.last().unwrap().arrival;
+        assert!(last >= cycle, "trace too short to exercise the OFF gate: {last}");
+    }
+
+    #[test]
+    fn zero_off_window_is_exactly_poisson() {
+        let poisson = TraceGenerator::paper().generate_online(4, 5.0);
+        let bursty = TraceGenerator::paper().generate_bursty(4, 5.0, 10, 0);
+        assert_eq!(poisson, bursty, "off = 0 must share the Poisson code path bit for bit");
+    }
+
+    #[test]
+    fn bursty_trace_roundtrips() {
+        let t = TraceGenerator::tiny().generate_bursty_trace(5, 3.0, 15, 45);
+        assert!(t.description.contains("on 15 / off 45"));
+        let back = crate::trace::Trace::from_json(&t.to_json().unwrap()).unwrap();
+        assert_eq!(back.jobs, t.jobs);
     }
 
     #[test]

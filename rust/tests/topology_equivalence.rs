@@ -1,0 +1,217 @@
+//! Flat-equivalence guarantee of the hierarchical topology refactor: a
+//! 1-rack, non-oversubscribed fabric must reproduce the seed flat model
+//! *exactly* — identical `ContentionSnapshot` values and identical
+//! `SimOutcome` (makespan, avg JCT, per-job records) across randomized
+//! traces — plus bottleneck-link selection checks on a 2-rack
+//! oversubscribed fabric.
+
+use rarsched::cluster::{Cluster, GpuId, JobPlacement, ServerId};
+use rarsched::contention::{ContentionParams, ContentionSnapshot};
+use rarsched::jobs::{JobId, JobSpec};
+use rarsched::online::{ContentionTracker, OnlinePolicyKind, OnlineScheduler};
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::{SimOutcome, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::proptest_lite::check;
+use rarsched::util::Rng;
+
+/// The hierarchical twin of a flat cluster: one rack spanning every
+/// server, no oversubscription. Structurally 2-tier, numerically Eq. 6.
+fn one_rack_twin(flat: &Cluster) -> Cluster {
+    let n = flat.num_servers();
+    flat.clone().with_topology(Topology::racks(n, n, 1.0))
+}
+
+fn random_placement(cluster: &Cluster, rng: &mut Rng, k: usize) -> JobPlacement {
+    let mut gpus: Vec<GpuId> = cluster.all_gpus().collect();
+    rng.shuffle(&mut gpus);
+    gpus.truncate(k);
+    JobPlacement::new(gpus)
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.avg_jct, b.avg_jct, "{ctx}: avg JCT (bitwise)");
+    assert_eq!(a.gpu_utilization, b.gpu_utilization, "{ctx}: utilization");
+    assert_eq!(a.slots_simulated, b.slots_simulated, "{ctx}: slots");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncation");
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.job, y.job, "{ctx}");
+        assert_eq!((x.arrival, x.start, x.finish), (y.arrival, y.start, y.finish), "{ctx}: {}", x.job);
+        assert_eq!((x.span, x.workers, x.max_p), (y.span, y.workers, y.max_p), "{ctx}: {}", x.job);
+        assert_eq!(x.mean_tau, y.mean_tau, "{ctx}: {} mean_tau (bitwise)", x.job);
+        assert_eq!(x.iterations_done, y.iterations_done, "{ctx}: {}", x.job);
+    }
+}
+
+#[test]
+fn one_rack_snapshots_match_flat_exactly() {
+    check("1-rack snapshot == flat snapshot", 100, |rng| {
+        let flat = Cluster::random(rng.gen_usize(2, 6), rng.next_u64());
+        let hier = one_rack_twin(&flat);
+        // random non-overlapping placements
+        let mut free: Vec<GpuId> = flat.all_gpus().collect();
+        rng.shuffle(&mut free);
+        let mut placements = Vec::new();
+        let mut id = 0usize;
+        while free.len() >= 2 && id < 8 {
+            let k = rng.gen_usize(1, free.len().min(6));
+            let gpus: Vec<GpuId> = free.drain(..k).collect();
+            placements.push((JobId(id), JobPlacement::new(gpus)));
+            id += 1;
+        }
+        let a = ContentionSnapshot::build(&flat, &placements);
+        let b = ContentionSnapshot::build(&hier, &placements);
+        for (j, _) in &placements {
+            assert_eq!(a.p_j(*j), b.p_j(*j), "{j}");
+            assert_eq!(a.try_p_j(*j), b.try_p_j(*j), "{j}");
+            assert_eq!(b.bottleneck(*j).oversub, 1.0, "{j}: no ToR can bottleneck");
+        }
+        assert_eq!(a.max_contention(), b.max_contention());
+    });
+}
+
+#[test]
+fn one_rack_tracker_matches_flat_tracker() {
+    check("1-rack tracker == flat tracker", 60, |rng| {
+        let flat = Cluster::random(rng.gen_usize(2, 5), rng.next_u64());
+        let hier = one_rack_twin(&flat);
+        let mut tr_a = ContentionTracker::new(&flat);
+        let mut tr_b = ContentionTracker::new(&hier);
+        let mut active: Vec<JobId> = Vec::new();
+        let mut next = 0usize;
+        for _ in 0..30 {
+            if active.is_empty() || rng.gen_f64() < 0.6 {
+                let k = rng.gen_usize(1, flat.num_gpus().min(6));
+                let pl = random_placement(&flat, rng, k);
+                let job = JobId(next);
+                next += 1;
+                tr_a.admit(job, &pl);
+                tr_b.admit(job, &pl);
+                active.push(job);
+            } else {
+                let victim = active.swap_remove(rng.gen_usize(0, active.len() - 1));
+                tr_a.complete(victim);
+                tr_b.complete(victim);
+            }
+            for &job in &active {
+                assert_eq!(tr_a.p_j(job), tr_b.p_j(job), "{job}");
+            }
+            assert_eq!(tr_a.max_contention(), tr_b.max_contention());
+        }
+    });
+}
+
+#[test]
+fn one_rack_simulation_is_bit_identical_to_flat() {
+    // The full pipeline: schedule on each twin (plans must agree — the
+    // topology-aware tie-breaks are no-ops with a single rack), then
+    // simulate; every outcome field must match bit for bit.
+    check("1-rack SimOutcome == flat SimOutcome", 8, |rng| {
+        // uniform 8-GPU servers: ≥ 40 GPUs, so the paper mix's 32-GPU
+        // class always fits and schedule() cannot reject the trace
+        let flat = Cluster::uniform(rng.gen_usize(5, 9), 8, 1.0, 25.0);
+        let hier = one_rack_twin(&flat);
+        let params = ContentionParams::paper();
+        let gap = rng.gen_f64_range(0.0, 10.0);
+        let jobs = TraceGenerator::paper_scaled(0.08).generate_online(rng.next_u64(), gap);
+        for policy in [Policy::SjfBco, Policy::FirstFit, Policy::Gadget] {
+            let plan_a = schedule(policy, &flat, &jobs, &params, 1_000_000).unwrap();
+            let plan_b = schedule(policy, &hier, &jobs, &params, 1_000_000).unwrap();
+            for (ea, eb) in plan_a.entries.iter().zip(&plan_b.entries) {
+                assert_eq!(ea.job, eb.job, "{policy}");
+                assert_eq!(ea.placement, eb.placement, "{policy}: {} placement", ea.job);
+            }
+            let out_a = Simulator::new(&flat, &jobs, &params).run(&plan_a);
+            let out_b = Simulator::new(&hier, &jobs, &params).run(&plan_b);
+            assert_outcomes_identical(&out_a, &out_b, policy.name());
+        }
+    });
+}
+
+#[test]
+fn one_rack_online_loop_is_bit_identical_to_flat() {
+    check("1-rack online == flat online", 6, |rng| {
+        let flat = Cluster::uniform(rng.gen_usize(5, 9), 8, 1.0, 25.0);
+        let hier = one_rack_twin(&flat);
+        let params = ContentionParams::paper();
+        let jobs = TraceGenerator::paper_scaled(0.08)
+            .generate_online(rng.next_u64(), rng.gen_f64_range(0.5, 8.0));
+        for kind in OnlinePolicyKind::ALL {
+            let mut pa = kind.build();
+            let mut pb = kind.build();
+            let out_a = OnlineScheduler::new(&flat, &jobs, &params).run(pa.as_mut());
+            let out_b = OnlineScheduler::new(&hier, &jobs, &params).run(pb.as_mut());
+            assert_outcomes_identical(&out_a.outcome, &out_b.outcome, kind.name());
+        }
+    });
+}
+
+#[test]
+fn two_rack_oversubscribed_bottleneck_selection() {
+    // 4 servers x 4 GPUs in 2 racks of 2, ToR oversubscribed 3x.
+    let cluster = Cluster::uniform(4, 4, 1.0, 25.0)
+        .with_topology(Topology::racks(4, 2, 3.0));
+    let topo = cluster.topology();
+    let mk = |pairs: &[(usize, usize)]| {
+        JobPlacement::new(pairs.iter().map(|&(s, i)| cluster.global_gpu(ServerId(s), i)).collect())
+    };
+    // two cross-rack rings and one rack-local ring sharing server 0
+    let placements = vec![
+        (JobId(0), mk(&[(0, 0), (2, 0)])),
+        (JobId(1), mk(&[(0, 1), (3, 0)])),
+        (JobId(2), mk(&[(0, 2), (1, 0)])),
+    ];
+    let snap = ContentionSnapshot::build(&cluster, &placements);
+    // cross-rack rings: ToR count 2, effective 2·3 = 6 > server-0 count 3
+    for id in [0usize, 1] {
+        let bn = snap.bottleneck(JobId(id));
+        assert_eq!((bn.p, bn.oversub), (2, 3.0), "job {id}");
+        assert!(
+            bn.link == Some(topo.rack_uplink(0)) || bn.link == Some(topo.rack_uplink(1)),
+            "job {id} must bottleneck on a ToR, got {:?}",
+            bn.link
+        );
+    }
+    // the rack-local ring never crosses a ToR: server-0 uplink (count 3)
+    let bn = snap.bottleneck(JobId(2));
+    assert_eq!((bn.p, bn.oversub), (3, 1.0));
+    assert_eq!(bn.link, Some(topo.server_uplink(ServerId(0))));
+
+    // τ follows the bottleneck: the cross-rack ring is slower than the
+    // same ring would be on the flat fabric with the same counts.
+    let params = ContentionParams::paper();
+    let job = JobSpec::synthetic(JobId(0), 2);
+    let pl = mk(&[(0, 0), (2, 0)]);
+    let tau_hier = params.tau_at(&cluster, &job, &pl, snap.bottleneck(JobId(0)));
+    let tau_flat = params.tau(&cluster, &job, &pl, 2);
+    assert!(tau_hier > tau_flat, "oversubscribed ToR must slow the ring");
+}
+
+#[test]
+fn oversubscription_degrades_a_fixed_schedule_monotonically() {
+    // Fixed trace + fixed flat plan replayed under growing ToR
+    // oversubscription: makespan must be non-decreasing (the topology
+    // sweep's acceptance shape, checked here at the simulator level).
+    let flat = Cluster::uniform(6, 8, 1.0, 25.0);
+    let params = ContentionParams::paper();
+    let jobs = TraceGenerator::paper_scaled(0.1).generate(7);
+    let plan = schedule(Policy::ListScheduling, &flat, &jobs, &params, 1_000_000).unwrap();
+    let mut prev = None;
+    for oversub in [1.0, 2.0, 4.0, 8.0, 16.0] {
+        let racked =
+            flat.clone().with_topology(Topology::racks(6, 2, oversub));
+        let out = Simulator::new(&racked, &jobs, &params).run(&plan);
+        assert!(!out.truncated, "oversub {oversub} truncated");
+        if let Some(p) = prev {
+            assert!(
+                out.makespan >= p,
+                "makespan dropped from {p} to {} at oversub {oversub}",
+                out.makespan
+            );
+        }
+        prev = Some(out.makespan);
+    }
+}

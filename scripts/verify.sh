@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Tier-1 verification pipeline: fmt-check -> release build -> tests ->
+# bench smoke. The bench smoke also emits BENCH_topology.json (the
+# online_hot_path / per-link tracker numbers) so the perf trajectory is
+# recorded across PRs.
+#
+# Usage: scripts/verify.sh           # from anywhere inside the repo
+#   RARSCHED_BENCH_MS=200            # (default here) bench budget per case
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== [1/4] cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    # fmt never gates the build offline, but drift is reported loudly
+    cargo fmt --all -- --check || echo "WARN: rustfmt reports drift (non-fatal)"
+else
+    echo "WARN: rustfmt unavailable in this toolchain; skipping"
+fi
+
+echo "== [2/4] cargo build --release =="
+cargo build --release --offline
+
+echo "== [3/4] cargo test -q =="
+cargo test -q --offline
+
+echo "== [4/4] bench smoke (online_hot_path -> BENCH_topology.json) =="
+# cargo runs bench binaries with cwd at the package root (rust/), so pin
+# the output path to the repo root explicitly.
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_OUT="$PWD/BENCH_topology.json" \
+    cargo bench --offline --bench online_hot_path
+
+if [ -f BENCH_topology.json ]; then
+    echo "OK: BENCH_topology.json written"
+else
+    echo "ERROR: bench smoke did not emit BENCH_topology.json" >&2
+    exit 1
+fi
+
+echo "verify: all stages passed"
