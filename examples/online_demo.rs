@@ -9,7 +9,9 @@
 
 use rarsched::contention::ContentionParams;
 use rarsched::experiments::{online::online_comparison, ExperimentSetup};
-use rarsched::online::{EventKind, OnlinePolicyKind, OnlineScheduler, OnlineSjfBco};
+use rarsched::online::{
+    EventKind, OnlineOptions, OnlinePolicyKind, OnlineScheduler, OnlineSjfBco,
+};
 use rarsched::trace::TraceGenerator;
 
 fn main() -> rarsched::Result<()> {
@@ -18,12 +20,26 @@ fn main() -> rarsched::Result<()> {
     let gap = 5.0;
 
     // 1) The full comparison table (same as `rarsched online --gap 5`).
-    let table = online_comparison(&setup, gap, &OnlinePolicyKind::ALL, true, None)?;
+    //    Default OnlineOptions: θ-admission and migration off.
+    let table = online_comparison(
+        &setup,
+        gap,
+        &OnlinePolicyKind::ALL,
+        true,
+        None,
+        OnlineOptions::default(),
+    )?;
     println!("{}", table.to_table());
 
     // 1b) The same stream squeezed into bursts (`--burst 25:100`).
-    let bursty =
-        online_comparison(&setup, gap, &[OnlinePolicyKind::SjfBco], false, Some((25, 100)))?;
+    let bursty = online_comparison(
+        &setup,
+        gap,
+        &[OnlinePolicyKind::SjfBco],
+        false,
+        Some((25, 100)),
+        OnlineOptions::default(),
+    )?;
     println!("{}", bursty.to_table());
 
     // 2) Peek inside one run: the event sequence the loop reacted to.

@@ -76,14 +76,49 @@ fn sweep(b: &mut Bench, tag: &str, cluster: &Cluster, rng: &mut Rng) {
     }
 }
 
-fn results_json(results: &[CaseResult]) -> Json {
+/// The θ-admission / migration hot path: speculative what-if evaluation
+/// against a standing active set — `whatif_bottleneck` (arrival
+/// projection) and `whatif_rebottleneck` (migration candidate), next to
+/// the mutate-query-undo round trip they replace.
+fn whatif_sweep(b: &mut Bench, tag: &str, cluster: &Cluster, rng: &mut Rng) {
+    for &active_jobs in &[16usize, 64, 256] {
+        let placements: Vec<(JobId, JobPlacement)> = (0..active_jobs)
+            .map(|i| (JobId(i), random_placement(cluster, rng, 2 + (i % 7))))
+            .collect();
+        let mut tracker = ContentionTracker::new(cluster);
+        for (job, pl) in &placements {
+            tracker.admit(*job, pl);
+        }
+        let candidate = random_placement(cluster, rng, 4);
+        let probe_job = JobId(active_jobs / 2); // an active mid-set job
+
+        b.run(&format!("whatif/{tag}/admission-{active_jobs}act"), || {
+            tracker.whatif_bottleneck(&candidate)
+        });
+        b.run(&format!("whatif/{tag}/migration-{active_jobs}act"), || {
+            tracker.whatif_rebottleneck(probe_job, &candidate)
+        });
+        // the naive alternative the speculative path replaces: mutate,
+        // query, undo (churns counts twice per probe)
+        let churn = JobId(active_jobs);
+        b.run(&format!("whatif/{tag}/admit-query-undo-{active_jobs}act"), || {
+            tracker.admit(churn, &candidate);
+            let bn = tracker.bottleneck(churn);
+            let _ = tracker.complete(churn);
+            bn
+        });
+    }
+}
+
+fn results_json(suite: &str, results: &[CaseResult], keep: impl Fn(&str) -> bool) -> Json {
     Json::obj(vec![
-        ("suite", Json::Str("online_hot_path".into())),
+        ("suite", Json::Str(suite.into())),
         (
             "cases",
             Json::arr(
                 results
                     .iter()
+                    .filter(|r| keep(&r.name))
                     .map(|r| {
                         Json::obj(vec![
                             ("name", Json::Str(r.name.clone())),
@@ -111,6 +146,10 @@ fn main() {
     let racked = flat.clone().with_topology(Topology::racks(20, 4, 2.0));
     sweep(&mut b, "rack4x2.0", &racked, &mut rng);
 
+    // Speculative what-if path (θ-admission / migration candidates).
+    whatif_sweep(&mut b, "flat", &flat, &mut rng);
+    whatif_sweep(&mut b, "rack4x2.0", &racked, &mut rng);
+
     // Sanity: results agree (release builds skip the internal debug check).
     for cluster in [&flat, &racked] {
         let mut tracker = ContentionTracker::new(cluster);
@@ -126,11 +165,37 @@ fn main() {
         }
     }
 
+    // Sanity: the speculative what-if agrees with actually admitting.
+    for cluster in [&flat, &racked] {
+        let mut tracker = ContentionTracker::new(cluster);
+        for i in 0..16 {
+            tracker.admit(JobId(i), &random_placement(cluster, &mut rng, 3));
+        }
+        let cand = random_placement(cluster, &mut rng, 4);
+        let preview = tracker.whatif_bottleneck(&cand);
+        tracker.admit(JobId(99), &cand);
+        assert_eq!(preview, tracker.bottleneck(JobId(99)));
+        let _ = tracker.complete(JobId(99));
+    }
+
     let results = b.report();
+    // tracker-vs-rebuild cases ONLY → BENCH_topology.json: the case set
+    // must stay diffable against the PR 2 baseline, so the new whatif/*
+    // cases are excluded here (they get their own artifact below).
     let out = std::env::var("RARSCHED_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_topology.json".to_string());
-    match std::fs::write(&out, results_json(results).to_pretty()) {
+    let topology = results_json("online_hot_path", results, |n| !n.starts_with("whatif/"));
+    match std::fs::write(&out, topology.to_pretty()) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+    // speculative what-if cases → BENCH_online_overload.json (the
+    // θ-admission / migration hot path added with the overload controls)
+    let overload_out = std::env::var("RARSCHED_BENCH_OVERLOAD_OUT")
+        .unwrap_or_else(|_| "BENCH_online_overload.json".to_string());
+    let json = results_json("online_overload_whatif", results, |n| n.starts_with("whatif/"));
+    match std::fs::write(&overload_out, json.to_pretty()) {
+        Ok(()) => println!("wrote {overload_out}"),
+        Err(e) => eprintln!("warning: could not write {overload_out}: {e}"),
     }
 }

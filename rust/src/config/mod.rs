@@ -7,6 +7,7 @@
 
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;
+use crate::online::{AdmissionControl, MigrationControl, OnlineOptions};
 use crate::sched::Policy;
 use crate::topology::TopologySpec;
 use crate::trace::TraceGenerator;
@@ -66,6 +67,62 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Online overload-control section (`[online]`): θ-admission, queue cap
+/// and completion-event migration for the non-clairvoyant scheduler.
+/// Every default leaves the control inert (θ = ∞, unbounded queue,
+/// migration off — the control-free loop bit for bit).
+///
+/// Keys: `theta` (float > 0; absent = ∞ / disabled), `queue_cap`
+/// (int ≥ 1; absent = unbounded), `migrate` (bool, default false),
+/// `max_moves` (int ≥ 1, default 2), `restart_slots` (int ≥ 0,
+/// default 10).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OnlineConfig {
+    /// θ-threshold on the projected bottleneck effective degree
+    /// (`count × oversub`); `f64::INFINITY` disables.
+    pub theta: f64,
+    /// Pending-queue hard cap; `None` = unbounded.
+    pub queue_cap: Option<usize>,
+    /// Enable completion-event preemption/migration.
+    pub migrate: bool,
+    /// Max re-placements per completion event (K).
+    pub max_moves: usize,
+    /// Checkpoint-restart penalty charged per move, in slots.
+    pub restart_slots: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        let m = MigrationControl::default();
+        OnlineConfig {
+            theta: f64::INFINITY,
+            queue_cap: None,
+            migrate: false,
+            max_moves: m.max_moves,
+            restart_slots: m.restart_slots,
+        }
+    }
+}
+
+impl OnlineConfig {
+    /// Materialise loop options (other [`OnlineOptions`] fields stay at
+    /// their defaults).
+    pub fn build_options(&self) -> OnlineOptions {
+        OnlineOptions {
+            admission: AdmissionControl {
+                theta: self.theta,
+                queue_cap: self.queue_cap.unwrap_or(usize::MAX),
+            },
+            migration: MigrationControl {
+                enabled: self.migrate,
+                max_moves: self.max_moves,
+                restart_slots: self.restart_slots,
+            },
+            ..OnlineOptions::default()
+        }
+    }
+}
+
 /// Contention-model constants section (§4.1 / §7).
 #[derive(Debug, Clone)]
 pub struct ModelParamsConfig {
@@ -100,6 +157,8 @@ pub struct ExperimentConfig {
     pub workload: WorkloadConfig,
     pub scheduler: SchedulerConfig,
     pub model: ModelParamsConfig,
+    /// Online overload controls (`[online]` section; absent = all off).
+    pub online: OnlineConfig,
 }
 
 impl ExperimentConfig {
@@ -144,6 +203,33 @@ impl ExperimentConfig {
             cfg.topology = TopologySpec::Rack { servers_per_rack: spr, oversub };
         } else if doc.get("topology", "oversub").is_some() {
             bail!("topology.oversub requires topology.servers_per_rack");
+        }
+        if let Some(v) = doc.get("online", "theta") {
+            let theta = v.as_f64()?;
+            if !(theta > 0.0) {
+                bail!("online.theta must be positive, got {theta}");
+            }
+            cfg.online.theta = theta;
+        }
+        if let Some(v) = doc.get("online", "queue_cap") {
+            let cap = v.as_usize()?;
+            if cap == 0 {
+                bail!("online.queue_cap must be >= 1 (omit the key to disable)");
+            }
+            cfg.online.queue_cap = Some(cap);
+        }
+        if let Some(v) = doc.get("online", "migrate") {
+            cfg.online.migrate = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("online", "max_moves") {
+            let k = v.as_usize()?;
+            if k == 0 {
+                bail!("online.max_moves must be >= 1");
+            }
+            cfg.online.max_moves = k;
+        }
+        if let Some(v) = doc.get("online", "restart_slots") {
+            cfg.online.restart_slots = v.as_u64()?;
         }
         if let Some(v) = doc.get("workload", "scale") {
             cfg.workload.scale = v.as_f64()?;
@@ -198,6 +284,28 @@ impl ExperimentConfig {
         if let TopologySpec::Rack { servers_per_rack, oversub } = self.topology {
             doc.set("topology", "servers_per_rack", TomlValue::Int(servers_per_rack as i64));
             doc.set("topology", "oversub", TomlValue::Float(oversub));
+        }
+        // [online] — only non-default keys are emitted (θ = ∞ has no TOML
+        // representation; absence IS the disabled state)
+        if self.online.theta.is_finite() {
+            doc.set("online", "theta", TomlValue::Float(self.online.theta));
+        }
+        if let Some(cap) = self.online.queue_cap {
+            doc.set("online", "queue_cap", TomlValue::Int(cap as i64));
+        }
+        if self.online.migrate {
+            doc.set("online", "migrate", TomlValue::Bool(true));
+        }
+        let mig_defaults = OnlineConfig::default();
+        if self.online.max_moves != mig_defaults.max_moves {
+            doc.set("online", "max_moves", TomlValue::Int(self.online.max_moves as i64));
+        }
+        if self.online.restart_slots != mig_defaults.restart_slots {
+            doc.set(
+                "online",
+                "restart_slots",
+                TomlValue::Int(self.online.restart_slots as i64),
+            );
         }
         doc.set("workload", "scale", TomlValue::Float(self.workload.scale));
         doc.set("workload", "iters_min", TomlValue::Int(self.workload.iters_min as i64));
@@ -355,6 +463,48 @@ mod tests {
         // default stays flat
         let flat = ExperimentConfig::paper().build_cluster();
         assert!(!flat.topology().has_racks());
+    }
+
+    #[test]
+    fn online_section_defaults_roundtrip_and_build() {
+        // absent section = every control inert
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.online, OnlineConfig::default());
+        let opts = cfg.online.build_options();
+        assert!(!opts.admission.is_active());
+        assert!(!opts.migration.enabled);
+        // and no [online] keys are emitted for the defaults
+        assert!(!cfg.to_toml_string().contains("[online]"));
+
+        // a fully-specified section roundtrips
+        let mut cfg = ExperimentConfig::paper();
+        cfg.online = OnlineConfig {
+            theta: 6.5,
+            queue_cap: Some(32),
+            migrate: true,
+            max_moves: 3,
+            restart_slots: 25,
+        };
+        let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.online, cfg.online);
+        let opts = back.online.build_options();
+        assert!(opts.admission.is_active());
+        assert_eq!(opts.admission.theta, 6.5);
+        assert_eq!(opts.admission.queue_cap, 32);
+        assert!(opts.migration.enabled);
+        assert_eq!(opts.migration.max_moves, 3);
+        assert_eq!(opts.migration.restart_slots, 25);
+    }
+
+    #[test]
+    fn bad_online_section_rejected() {
+        assert!(ExperimentConfig::from_toml_str("[online]\ntheta = 0.0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[online]\ntheta = -3.0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[online]\nqueue_cap = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[online]\nmax_moves = 0\n").is_err());
+        // integers are accepted where floats are expected (toml_lite rule)
+        let cfg = ExperimentConfig::from_toml_str("[online]\ntheta = 4\n").unwrap();
+        assert_eq!(cfg.online.theta, 4.0);
     }
 
     #[test]

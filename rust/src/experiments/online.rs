@@ -19,7 +19,10 @@
 
 use super::ExperimentSetup;
 use crate::metrics::{FigureReport, MetricTable};
-use crate::online::{OnlineOptions, OnlinePolicyKind, OnlineScheduler};
+use crate::online::{
+    AdmissionControl, MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind,
+    OnlineScheduler,
+};
 use crate::sched::{self, Policy};
 use crate::sim::{SimOutcome, Simulator};
 use crate::trace::TraceGenerator;
@@ -52,13 +55,25 @@ pub fn online_run(
     kind: OnlinePolicyKind,
     jobs: &[crate::jobs::JobSpec],
 ) -> SimOutcome {
+    online_run_full(setup, kind, jobs, OnlineOptions::default()).outcome
+}
+
+/// [`online_run`] with explicit [`OnlineOptions`] (θ-admission, queue
+/// cap, migration), returning the full [`OnlineOutcome`] — the overload
+/// experiments need the rejection/migration ledger, not just the
+/// [`SimOutcome`].
+pub fn online_run_full(
+    setup: &ExperimentSetup,
+    kind: OnlinePolicyKind,
+    jobs: &[crate::jobs::JobSpec],
+    options: OnlineOptions,
+) -> OnlineOutcome {
     let cluster = setup.cluster();
     let params = setup.params();
     let mut policy = kind.build();
     OnlineScheduler::new(&cluster, jobs, &params)
-        .with_options(OnlineOptions::default())
+        .with_options(options)
         .run(policy.as_mut())
-        .outcome
 }
 
 /// Sweep mean inter-arrival gaps (slots/job; `0.0` reproduces the batch
@@ -97,18 +112,23 @@ pub fn online_sweep(setup: &ExperimentSetup, gaps: &[f64]) -> Result<FigureRepor
 }
 
 /// One-gap deep comparison: makespan, mean/p95 JCT, mean/p95 queueing
-/// delay and time-averaged utilization for the clairvoyant reference and
-/// every online policy — the table behind `rarsched online`.
+/// delay, time-averaged utilization plus the overload-control ledger
+/// (rejection rate, migrations) for the clairvoyant reference and every
+/// online policy — the table behind `rarsched online`.
 ///
 /// `burst = Some((on, off))` gates the Poisson stream with an on/off
 /// window (bursty arrivals, `--burst ON:OFF` on the CLI); `None` is the
-/// plain Poisson process.
+/// plain Poisson process. `options` carries the θ-admission / queue-cap /
+/// migration controls (`OnlineOptions::default()` = all off; the
+/// clairvoyant reference never rejects or migrates — it is the
+/// full-information upper bound).
 pub fn online_comparison(
     setup: &ExperimentSetup,
     gap: f64,
     kinds: &[OnlinePolicyKind],
     include_clairvoyant: bool,
     burst: Option<(u64, u64)>,
+    options: OnlineOptions,
 ) -> Result<MetricTable> {
     let gen = generator(setup);
     let jobs = match burst {
@@ -130,9 +150,13 @@ pub fn online_comparison(
             num_gpus
         ),
         "policy",
-        &["makespan", "avg_jct", "p95_jct", "avg_wait", "p95_wait", "util"],
+        &[
+            "makespan", "avg_jct", "p95_jct", "avg_wait", "p95_wait", "util", "rej_rate",
+            "migrations",
+        ],
     );
-    let mut push = |label: String, out: &SimOutcome| {
+    let offered = jobs.len();
+    let mut push = |label: String, out: &SimOutcome, rej_rate: f64, migrations: usize| {
         // a truncated run's metrics are clamped at the horizon — label it
         // loudly rather than report them as valid (cmd_online warns on it)
         let label =
@@ -146,18 +170,123 @@ pub fn online_comparison(
                 out.avg_wait(),
                 out.wait_percentile(95.0) as f64,
                 out.service_utilization(num_gpus),
+                rej_rate,
+                migrations as f64,
             ],
         );
     };
     if include_clairvoyant {
         let clair = clairvoyant_run(setup, Policy::SjfBco, &jobs)?;
-        push("CLAIR-SJF-BCO".to_string(), &clair);
+        push("CLAIR-SJF-BCO".to_string(), &clair, 0.0, 0);
     }
     for &kind in kinds {
-        let out = online_run(setup, kind, &jobs);
-        push(kind.name().to_string(), &out);
+        let out = online_run_full(setup, kind, &jobs, options);
+        push(
+            kind.name().to_string(),
+            &out.outcome,
+            out.rejection_rate(offered),
+            out.migration_count(),
+        );
     }
     Ok(table)
+}
+
+/// **Overload sweep** — the open-system regime the control-free loop
+/// silently mishandles: arrival rate λ held *above* service capacity
+/// (small mean gap), trace length swept over `scales`, and three control
+/// settings compared per length:
+///
+/// * `none/<scale>`     — no admission, no migration: the pending queue
+///   (and with it p95 queueing delay) grows with the trace length;
+/// * `theta/<scale>`    — θ-admission + queue cap: the backlog is bounded
+///   (`max_pending ≤ cap`), so p95 delay stays flat as the trace grows,
+///   at the cost of a non-zero rejection rate;
+/// * `theta+mig/<scale>` — additionally re-places running jobs when
+///   completions free better capacity.
+///
+/// Columns include the per-class p95 wait (single-GPU vs multi-GPU
+/// gangs) — under overload the classes diverge sharply.
+pub fn overload_sweep(
+    setup: &ExperimentSetup,
+    gap: f64,
+    scales: &[f64],
+    admission: AdmissionControl,
+    migration: MigrationControl,
+) -> Result<MetricTable> {
+    let cluster = setup.cluster();
+    let num_gpus = cluster.num_gpus();
+    let mut table = MetricTable::new(
+        format!(
+            "overload — mean gap {gap} slots (lambda > capacity), theta {}, cap {}, \
+             seed {} ({} servers / {} GPUs, {})",
+            admission.theta,
+            admission.queue_cap,
+            setup.seed,
+            cluster.num_servers(),
+            num_gpus,
+            setup.topology,
+        ),
+        "control/scale",
+        &[
+            "jobs", "makespan", "p95_wait", "p95_wait_1g", "p95_wait_multi", "max_pending",
+            "rej_rate", "migrations", "util",
+        ],
+    );
+    let configs: [(&str, OnlineOptions); 3] = [
+        ("none", OnlineOptions::default()),
+        ("theta", OnlineOptions { admission, ..OnlineOptions::default() }),
+        (
+            "theta+mig",
+            OnlineOptions {
+                admission,
+                migration: MigrationControl { enabled: true, ..migration },
+                ..OnlineOptions::default()
+            },
+        ),
+    ];
+    for &scale in scales {
+        let mut sweep_setup = setup.clone();
+        sweep_setup.scale = scale;
+        let jobs = generator(&sweep_setup).generate_online(setup.seed, gap);
+        let offered = jobs.len();
+        for &(name, options) in configs.iter() {
+            let out =
+                online_run_full(&sweep_setup, OnlinePolicyKind::SjfBco, &jobs, options);
+            let o = &out.outcome;
+            // horizon-clamped rows are labelled loudly, same rule as
+            // online_comparison — a clamped baseline UNDERSTATES the
+            // unbounded-delay growth this sweep exists to demonstrate
+            let label = if o.truncated {
+                format!("{name}/{scale} (TRUNCATED)")
+            } else {
+                format!("{name}/{scale}")
+            };
+            table.push(
+                label,
+                vec![
+                    offered as f64,
+                    o.makespan as f64,
+                    o.wait_percentile(95.0) as f64,
+                    o.wait_percentile_where(95.0, |r| r.workers == 1) as f64,
+                    o.wait_percentile_where(95.0, |r| r.workers > 1) as f64,
+                    out.max_pending as f64,
+                    out.rejection_rate(offered),
+                    out.migration_count() as f64,
+                    o.service_utilization(num_gpus),
+                ],
+            );
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+fn assert_no_truncated_rows(table: &MetricTable) {
+    assert!(
+        table.rows.iter().all(|(l, _)| !l.contains("(TRUNCATED)")),
+        "overload sweep rows unexpectedly truncated: {:?}",
+        table.rows.iter().map(|(l, _)| l.clone()).collect::<Vec<_>>()
+    );
 }
 
 #[cfg(test)]
@@ -205,6 +334,7 @@ mod tests {
             &[OnlinePolicyKind::SjfBco, OnlinePolicyKind::Fifo],
             false,
             Some((25, 100)),
+            OnlineOptions::default(),
         )
         .unwrap();
         assert_eq!(table.rows.len(), 2);
@@ -217,15 +347,76 @@ mod tests {
     #[test]
     fn comparison_table_has_all_metrics() {
         let setup = ExperimentSetup::smoke();
-        let table = online_comparison(&setup, 5.0, &OnlinePolicyKind::ALL, true, None).unwrap();
+        let table = online_comparison(
+            &setup,
+            5.0,
+            &OnlinePolicyKind::ALL,
+            true,
+            None,
+            OnlineOptions::default(),
+        )
+        .unwrap();
         assert_eq!(table.rows.len(), 1 + OnlinePolicyKind::ALL.len());
         for kind in OnlinePolicyKind::ALL {
             let util = table.get(kind.name(), "util").unwrap();
             assert!(util > 0.0 && util <= 1.0 + 1e-9, "{kind}: util {util}");
             assert!(table.get(kind.name(), "makespan").unwrap() > 0.0);
+            // controls off: nothing rejected, nothing migrated
+            assert_eq!(table.get(kind.name(), "rej_rate"), Some(0.0), "{kind}");
+            assert_eq!(table.get(kind.name(), "migrations"), Some(0.0), "{kind}");
         }
         // queueing delay exists as a column even when zero
         assert!(table.get("FIFO", "p95_wait").is_some());
+    }
+
+    #[test]
+    fn overload_baseline_delay_grows_with_trace_length_but_theta_stays_bounded() {
+        // λ far above capacity: a 4-server cluster (88 GPUs at seed 42)
+        // against traces demanding ~154 (scale 0.2) and ~260 (scale 0.4)
+        // GPUs, arriving at mean gap 0.2 slots. The no-admission backlog
+        // (and with it p95 wait + max_pending) must grow as the trace
+        // doubles; the θ+cap rows stay bounded by the cap and their p95
+        // wait must not keep pace.
+        let mut setup = ExperimentSetup::smoke();
+        setup.servers = 4; // 88 GPUs: genuinely oversubscribed by the trace
+        let admission = AdmissionControl { theta: 6.0, queue_cap: 4 };
+        let migration = MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 };
+        let table =
+            overload_sweep(&setup, 0.2, &[0.2, 0.4], admission, migration).unwrap();
+        assert_eq!(table.rows.len(), 6, "3 controls x 2 scales");
+        assert_no_truncated_rows(&table);
+        let get = |row: &str, col: &str| table.get(row, col).unwrap();
+        // the uncontrolled backlog grows with the offered load
+        assert!(
+            get("none/0.4", "max_pending") > get("none/0.2", "max_pending"),
+            "baseline backlog must grow: {} vs {}",
+            get("none/0.2", "max_pending"),
+            get("none/0.4", "max_pending")
+        );
+        assert!(
+            get("none/0.4", "p95_wait") > get("none/0.2", "p95_wait"),
+            "baseline p95 wait must grow with trace length"
+        );
+        // θ + cap: the queue is bounded by the cap at every length
+        for scale in ["0.2", "0.4"] {
+            for control in ["theta", "theta+mig"] {
+                assert!(
+                    get(&format!("{control}/{scale}"), "max_pending") <= 4.0,
+                    "{control}/{scale}: queue must respect the cap"
+                );
+            }
+        }
+        // the doubled trace must overflow the cap: rejections happen
+        assert!(
+            get("theta/0.4", "rej_rate") > 0.0,
+            "overload must actually reject under the cap"
+        );
+        // bounded: θ's p95 wait at the doubled trace stays at or below
+        // the baseline's, which keeps growing
+        assert!(
+            get("theta/0.4", "p95_wait") <= get("none/0.4", "p95_wait"),
+            "admission must not queue longer than no admission"
+        );
     }
 
     #[test]

@@ -50,6 +50,20 @@
 //!   time-averaged service utilization, surfaced by the `online` CLI
 //!   subcommand and `experiments::online`'s clairvoyant-vs-online rows.
 //!
+//! The **overload regime** (arrival rate above service capacity — the
+//! open-system setting the batch formulation cannot express) is handled
+//! by two composable controls, both inert by default:
+//! [`online::AdmissionControl`] rejects an arrival whose *projected*
+//! bottleneck effective degree (`count × oversub`, generalized Eq. 6,
+//! evaluated speculatively without mutating the tracker) exceeds θ, and
+//! hard-caps the pending queue; [`online::MigrationControl`] reacts to
+//! completion events by re-placing up to K running jobs onto a freed
+//! server or rack — only when the move strictly lowers the job's
+//! bottleneck AND pays for its checkpoint-restart slots
+//! ([`sim::kernel::migration_pays`]). `rarsched online --theta 8
+//! --queue-cap 16 --migrate` drives them; `figures --fig overload`
+//! sweeps λ > capacity with and without the controls.
+//!
 //! ## Hierarchical fabric (Eq. 6 generalized)
 //!
 //! The [`topology`] subsystem generalizes the contention model from server

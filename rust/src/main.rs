@@ -39,9 +39,21 @@ COMMANDS:
   online     [--policies sjf-bco,fifo,ff,backfill] [--gap F]
              [--burst ON:OFF] [--seed N] [--servers N] [--scale F]
              [--topology flat|rack:<spr>:<oversub>] [--no-clairvoyant]
-             [--json] [--out dir]
-  figures    --fig <4|5|6|7|motivation|ablations|online|topology|all>
-             [--seed N] [--scale F] [--out dir] [--full]
+             [--theta F] [--queue-cap N] [--migrate|--no-migrate]
+             [--max-moves K] [--restart N] [--config f.toml] [--json]
+             [--out dir]
+             overload controls: --theta rejects an arrival whose projected
+             bottleneck effective degree (count x oversub, generalized
+             Eq. 6) exceeds F; --queue-cap N hard-caps the pending queue;
+             --migrate re-places up to --max-moves running jobs per
+             completion when their bottleneck strictly improves net of
+             --restart slots of checkpoint-restart. --config seeds these
+             from the file's [online] section (keys: theta, queue_cap,
+             migrate, max_moves, restart_slots); explicit flags override.
+             Defaults: theta inf, cap unbounded, migration off (= the
+             control-free scheduler bit for bit).
+  figures    --fig <4|5|6|7|motivation|ablations|online|topology|
+             overload|all> [--seed N] [--scale F] [--out dir] [--full]
   trace      --out trace.json [--seed N] [--scale F] [--gap F]
              [--burst ON:OFF]
   train      --model <tiny|small|base> [--workers W] [--steps N]
@@ -99,8 +111,10 @@ fn main() {
     }
 }
 
-fn setup_from(args: &Args) -> Result<ExperimentSetup> {
-    let mut setup = ExperimentSetup::paper();
+/// Apply the shared experiment flags on top of `base` (the paper
+/// defaults, or a `--config`-derived setup — flags always win).
+fn setup_from(args: &Args, base: ExperimentSetup) -> Result<ExperimentSetup> {
+    let mut setup = base;
     setup.seed = args.get_u64("seed", setup.seed)?;
     setup.scale = args.get_f64("scale", setup.scale)?;
     setup.horizon = args.get_u64("horizon", setup.horizon)?;
@@ -121,7 +135,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         horizon = cfg.horizon();
         policy = cfg.scheduler.policy;
     } else {
-        let setup = setup_from(args)?;
+        let setup = setup_from(args, ExperimentSetup::paper())?;
         cluster = setup.cluster();
         jobs = setup.jobs();
         params = setup.params();
@@ -169,10 +183,109 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_online(args: &Args) -> Result<()> {
-    use rarsched::online::OnlinePolicyKind;
+/// Build the online overload controls: `base` (from a `--config` file's
+/// `[online]` section, or the inert defaults) overridden by any CLI flags
+/// actually passed (`--theta`, `--queue-cap`, `--migrate`, `--max-moves`,
+/// `--restart`).
+fn online_options_from(
+    args: &Args,
+    base: rarsched::online::OnlineOptions,
+) -> Result<rarsched::online::OnlineOptions> {
+    let mut opts = base;
+    if let Some(v) = args.get("theta") {
+        let theta: f64 = v.parse()?;
+        if theta <= 0.0 {
+            anyhow::bail!("--theta must be positive (got {theta})");
+        }
+        opts.admission.theta = theta;
+    }
+    if let Some(v) = args.get("queue-cap") {
+        let cap: usize = v.parse()?;
+        if cap == 0 {
+            anyhow::bail!("--queue-cap must be >= 1 (omit the flag to disable the cap)");
+        }
+        opts.admission.queue_cap = cap;
+    }
+    if args.get_bool("migrate") {
+        opts.migration.enabled = true;
+    }
+    if args.get_bool("no-migrate") {
+        // explicit off-switch so a config file's `migrate = true` can be
+        // overridden from the CLI, as the help text promises
+        opts.migration.enabled = false;
+    }
+    if let Some(v) = args.get("max-moves") {
+        let k: usize = v.parse()?;
+        if k == 0 {
+            anyhow::bail!("--max-moves must be >= 1");
+        }
+        opts.migration.max_moves = k;
+    }
+    if let Some(v) = args.get("restart") {
+        opts.migration.restart_slots = v.parse()?;
+    }
+    Ok(opts)
+}
 
-    let setup = setup_from(args)?;
+fn cmd_online(args: &Args) -> Result<()> {
+    use rarsched::online::{OnlineOptions, OnlinePolicyKind};
+
+    // --config seeds both the experiment shape (seed, servers, topology,
+    // scale, horizon, inter_bw) and the [online] overload controls;
+    // explicit CLI flags always override it. Sections an online setup
+    // cannot represent are called out instead of silently dropped.
+    let (base_setup, base_options) = match args.get("config") {
+        Some(path) => {
+            let cfg = ExperimentConfig::load(std::path::Path::new(path))?;
+            if !cfg.cluster.capacities.is_empty() {
+                log::warn!(
+                    "online: explicit [cluster].capacities are not supported by this \
+                     subcommand and are ignored (seeded random {}-server cluster used)",
+                    cfg.cluster.servers
+                );
+            }
+            if cfg.build_params() != rarsched::contention::ContentionParams::paper() {
+                log::warn!(
+                    "online: the [model] section is not supported by this subcommand \
+                     and is ignored (paper contention parameters used)"
+                );
+            }
+            {
+                let dflt = rarsched::config::WorkloadConfig::default();
+                if cfg.workload.iters_min != dflt.iters_min
+                    || cfg.workload.iters_max != dflt.iters_max
+                {
+                    log::warn!(
+                        "online: [workload].iters_min/iters_max are not supported by \
+                         this subcommand and are ignored (defaults used)"
+                    );
+                }
+            }
+            {
+                let dflt = rarsched::config::SchedulerConfig::default();
+                if cfg.scheduler.policy != dflt.policy
+                    || cfg.scheduler.kappa != dflt.kappa
+                    || cfg.scheduler.lambda != dflt.lambda
+                {
+                    log::warn!(
+                        "online: the [scheduler] section is not supported by this \
+                         subcommand and is ignored (use --policies; the clairvoyant \
+                         reference is always SJF-BCO)"
+                    );
+                }
+            }
+            let mut s = ExperimentSetup::paper();
+            s.seed = cfg.seed;
+            s.scale = cfg.workload.scale;
+            s.horizon = cfg.horizon();
+            s.servers = cfg.cluster.servers;
+            s.topology = cfg.topology;
+            s.inter_bw = cfg.cluster.inter_bw;
+            (s, cfg.online.build_options())
+        }
+        None => (ExperimentSetup::paper(), OnlineOptions::default()),
+    };
+    let setup = setup_from(args, base_setup)?;
     let gap = args.get_f64("gap", 5.0)?;
     let burst = args.get("burst").map(parse_burst).transpose()?;
     let kinds: Vec<OnlinePolicyKind> = args
@@ -181,21 +294,33 @@ fn cmd_online(args: &Args) -> Result<()> {
         .map(|s| s.parse())
         .collect::<Result<_>>()?;
     let clairvoyant = !args.get_bool("no-clairvoyant");
+    let options = online_options_from(args, base_options)?;
     let json = args.get_bool("json");
     let out_dir = args.get("out").map(std::path::PathBuf::from);
     args.reject_unknown()?;
 
     log::info!(
-        "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}",
+        "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}, \
+         theta {}, queue cap {}, migration {}",
         match burst {
             Some((on, off)) => format!(" (bursty on {on}/off {off})"),
             None => String::new(),
         },
         kinds.len(),
         if kinds.len() == 1 { "y" } else { "ies" },
-        if clairvoyant { "on" } else { "off" }
+        if clairvoyant { "on" } else { "off" },
+        options.admission.theta,
+        options.admission.queue_cap,
+        if options.migration.enabled { "on" } else { "off" }
     );
-    let table = experiments::online::online_comparison(&setup, gap, &kinds, clairvoyant, burst)?;
+    let table = experiments::online::online_comparison(
+        &setup,
+        gap,
+        &kinds,
+        clairvoyant,
+        burst,
+        options,
+    )?;
     if json {
         println!("{}", table.to_json()?);
     } else {
@@ -220,7 +345,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     let which = args.get_or("fig", "all").to_string();
     let full = args.get_bool("full");
     let explicit_scale = args.get("scale").is_some();
-    let mut setup = setup_from(args)?;
+    let mut setup = setup_from(args, ExperimentSetup::paper())?;
     if !full && !explicit_scale {
         // default to a fast but representative run; --full for paper scale
         setup.scale = 0.25;
@@ -259,6 +384,26 @@ fn cmd_figures(args: &Args) -> Result<()> {
             experiments::topology_sweep(&setup, 4, &[1.0, 2.0, 4.0, 8.0])?,
         ));
     }
+    if which == "overload" {
+        use rarsched::online::{AdmissionControl, MigrationControl};
+        // λ above capacity: a deliberately small cluster against growing
+        // trace lengths, so the no-admission baseline genuinely backlogs.
+        let mut overload_setup = setup.clone();
+        overload_setup.servers = overload_setup.servers.min(6);
+        let table = rarsched::experiments::online::overload_sweep(
+            &overload_setup,
+            0.5,
+            &[0.2, 0.4, 0.8],
+            AdmissionControl { theta: 8.0, queue_cap: 16 },
+            MigrationControl { enabled: true, ..MigrationControl::default() },
+        )?;
+        println!("{}", table.to_table());
+        if let Some(d) = &out_dir {
+            table.save_csv(&d.join("overload.csv"))?;
+            std::fs::write(d.join("overload.json"), table.to_json()?)?;
+            log::info!("wrote overload.csv / overload.json to {d:?}");
+        }
+    }
     if which == "ablations" {
         use rarsched::experiments::ablations as ab;
         reports.push(("ablation_alpha", ab::ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0])?));
@@ -288,7 +433,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
-    let setup = setup_from(args)?;
+    let setup = setup_from(args, ExperimentSetup::paper())?;
     let out = args.get_or("out", "trace.json").to_string();
     let gap = args.get("gap").map(|g| g.parse::<f64>()).transpose()?;
     let burst = args.get("burst").map(parse_burst).transpose()?;

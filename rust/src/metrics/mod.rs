@@ -61,6 +61,7 @@ mod tests {
                 max_p: 3,
                 mean_tau: 0.02,
                 iterations_done: 1000,
+                migrations: 0,
             }],
             slots_simulated: 100,
             truncated: false,

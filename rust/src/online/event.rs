@@ -17,6 +17,14 @@ pub enum EventKind {
     Start,
     /// The job finished its `F_j` iterations and released its gang.
     Completion,
+    /// Admission control turned the arrival away (θ-threshold exceeded or
+    /// the pending-queue cap was hit): the job never queues, never runs.
+    Rejected,
+    /// A completion freed capacity that strictly lowers this running
+    /// job's bottleneck: it was preempted and re-placed (checkpoint
+    /// restart charged in slots). May repeat; always between Start and
+    /// Completion.
+    Migrated,
 }
 
 /// One timestamped event.
@@ -62,25 +70,35 @@ impl EventLog {
     }
 
     /// Causality audit: the log is globally time-ordered, and every job's
-    /// own events run Arrival → Start → Completion with non-decreasing
-    /// timestamps (a prefix of that sequence is fine — truncated runs).
+    /// own events follow the lifecycle state machine with non-decreasing
+    /// timestamps (a prefix is fine — truncated runs):
+    ///
+    /// ```text
+    /// Arrival ──▶ Start ──▶ (Migrated)* ──▶ Completion
+    ///    └──────▶ Rejected                      (both terminal)
+    /// ```
     pub fn is_causally_ordered(&self) -> bool {
         if self.events.windows(2).any(|w| w[0].at > w[1].at) {
             return false;
         }
         let max_id = self.events.iter().map(|e| e.job.0).max().map_or(0, |m| m + 1);
-        let mut stage: Vec<(u8, u64)> = vec![(0, 0); max_id]; // (next expected stage, last at)
+        // per-job (lifecycle stage, last event slot); stages:
+        // 0 = unseen, 1 = arrived, 2 = running, 3 = terminal
+        let mut stage: Vec<(u8, u64)> = vec![(0, 0); max_id];
         for e in &self.events {
-            let (expect, last_at) = stage[e.job.0];
-            let got = match e.kind {
-                EventKind::Arrival => 0,
-                EventKind::Start => 1,
-                EventKind::Completion => 2,
-            };
-            if got != expect || e.at < last_at {
+            let (at_stage, last_at) = stage[e.job.0];
+            if e.at < last_at {
                 return false;
             }
-            stage[e.job.0] = (expect + 1, e.at);
+            let next = match (at_stage, e.kind) {
+                (0, EventKind::Arrival) => 1,
+                (1, EventKind::Start) => 2,
+                (1, EventKind::Rejected) => 3,
+                (2, EventKind::Migrated) => 2,
+                (2, EventKind::Completion) => 3,
+                _ => return false,
+            };
+            stage[e.job.0] = (next, e.at);
         }
         true
     }
@@ -118,5 +136,45 @@ mod tests {
         log.push(5, JobId(0), EventKind::Arrival);
         log.push(3, JobId(0), EventKind::Start);
         assert!(!log.is_causally_ordered());
+    }
+
+    #[test]
+    fn rejection_is_terminal_after_arrival() {
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Rejected);
+        assert!(log.is_causally_ordered());
+        assert_eq!(log.count(EventKind::Rejected), 1);
+        // a rejected job can never start
+        log.push(2, JobId(0), EventKind::Start);
+        assert!(!log.is_causally_ordered());
+        // nor be rejected before it arrives
+        let mut bad = EventLog::default();
+        bad.push(0, JobId(1), EventKind::Rejected);
+        assert!(!bad.is_causally_ordered());
+    }
+
+    #[test]
+    fn migrations_repeat_between_start_and_completion() {
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(4, JobId(0), EventKind::Migrated);
+        log.push(9, JobId(0), EventKind::Migrated);
+        log.push(20, JobId(0), EventKind::Completion);
+        assert!(log.is_causally_ordered());
+        assert_eq!(log.count(EventKind::Migrated), 2);
+        // migrating a job that never started is flagged
+        let mut bad = EventLog::default();
+        bad.push(0, JobId(0), EventKind::Arrival);
+        bad.push(1, JobId(0), EventKind::Migrated);
+        assert!(!bad.is_causally_ordered());
+        // and nothing may follow a completion
+        let mut bad = EventLog::default();
+        bad.push(0, JobId(0), EventKind::Arrival);
+        bad.push(0, JobId(0), EventKind::Start);
+        bad.push(5, JobId(0), EventKind::Completion);
+        bad.push(6, JobId(0), EventKind::Migrated);
+        assert!(!bad.is_causally_ordered());
     }
 }

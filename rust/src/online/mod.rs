@@ -19,7 +19,17 @@
 //! * [`OnlineScheduler`] — the loop itself, advancing time with the same
 //!   [`sim::kernel`](crate::sim::kernel) period arithmetic as the offline
 //!   replay engine, so online and clairvoyant runs are directly
-//!   comparable slot for slot.
+//!   comparable slot for slot;
+//! * **overload controls** — [`policy::AdmissionControl`] (θ-threshold on
+//!   the *projected* bottleneck degree `count × oversub` of each arrival,
+//!   evaluated speculatively by
+//!   [`tracker::ContentionTracker::whatif_bottleneck`], plus an
+//!   unconditional pending-queue cap) and [`policy::MigrationControl`]
+//!   (completion-event preemption: up to K running jobs re-placed onto
+//!   freed capacity when their bottleneck strictly improves net of a
+//!   checkpoint-restart penalty). Both are inert by default, reproducing
+//!   the control-free loop bit for bit; arrivals turned away log
+//!   [`EventKind::Rejected`], accepted moves log [`EventKind::Migrated`].
 //!
 //! The clairvoyant-vs-online comparison lives in
 //! [`experiments::online`](crate::experiments::online); the `online` CLI
@@ -32,41 +42,97 @@ pub mod tracker;
 
 pub use event::{EventKind, EventLog, OnlineEvent};
 pub use policy::{
-    ClusterView, Fifo, FifoBackfill, OnlineFirstFit, OnlinePolicy, OnlinePolicyKind,
-    OnlineSjfBco, QueuedJob,
+    AdmissionControl, ClusterView, Fifo, FifoBackfill, MigrationControl, OnlineFirstFit,
+    OnlinePolicy, OnlinePolicyKind, OnlineSjfBco, QueuedJob,
 };
 pub use queue::PendingQueue;
 pub use tracker::ContentionTracker;
 
-use crate::cluster::{Cluster, ClusterState, JobPlacement};
+use crate::cluster::{Cluster, ClusterState, GpuId, JobPlacement};
 use crate::contention::ContentionParams;
 use crate::jobs::{JobId, JobSpec};
+use crate::sched::fa_ffp_select;
 use crate::sim::kernel::{self, RatePoint};
 use crate::sim::{JobRecord, SimOutcome};
+use crate::topology::Bottleneck;
 use std::collections::HashMap;
 
 /// Loop options (mirrors [`SimOptions`](crate::sim::SimOptions)).
+///
+/// The overload controls default to inert ([`AdmissionControl::default`]
+/// is `θ = ∞` + unbounded queue, [`MigrationControl::default`] is off),
+/// and the loop skips their branches entirely when inert — so the default
+/// options reproduce the control-free scheduler bit for bit (enforced by
+/// `tests/online_scheduler.rs`).
 #[derive(Debug, Clone, Copy)]
 pub struct OnlineOptions {
     /// Safety horizon: stop after this many slots even if jobs remain.
     pub max_slots: u64,
     /// Fall back to fractional progress `1/τ` when `φ` floors to zero.
     pub fractional_progress: bool,
+    /// θ-admission + queue cap consulted once per arrival.
+    pub admission: AdmissionControl,
+    /// Completion-event preemption/migration of running jobs.
+    pub migration: MigrationControl,
 }
 
 impl Default for OnlineOptions {
     fn default() -> Self {
-        OnlineOptions { max_slots: 1_000_000, fractional_progress: false }
+        OnlineOptions {
+            max_slots: 1_000_000,
+            fractional_progress: false,
+            admission: AdmissionControl::default(),
+            migration: MigrationControl::default(),
+        }
     }
 }
 
+/// One accepted preemption/re-placement, for metrics and the
+/// strict-improvement property tests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationRecord {
+    pub job: JobId,
+    /// Slot at which the move was committed.
+    pub at: u64,
+    /// Effective bottleneck degree `count × oversub` before the move.
+    pub from_effective: f64,
+    /// Effective bottleneck degree after the move (strictly smaller).
+    pub to_effective: f64,
+    /// Checkpoint-restart penalty charged (slots of frozen progress).
+    pub restart_slots: u64,
+}
+
 /// Result of one online run: the standard simulation outcome plus the
-/// realized event sequence.
+/// realized event sequence and the overload-control ledger.
 #[derive(Debug, Clone)]
 pub struct OnlineOutcome {
     pub policy: String,
     pub outcome: SimOutcome,
     pub events: EventLog,
+    /// Arrivals turned away by admission control (θ or queue cap), in
+    /// rejection order. Rejected jobs never queue and have no
+    /// [`JobRecord`].
+    pub rejected: Vec<JobId>,
+    /// Every committed migration, in commit order.
+    pub migrations: Vec<MigrationRecord>,
+    /// High-water mark of the pending-queue length over the run.
+    pub max_pending: usize,
+}
+
+impl OnlineOutcome {
+    /// Fraction of the offered load turned away: `rejected / offered`.
+    pub fn rejection_rate(&self, offered: usize) -> f64 {
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejected.len() as f64 / offered as f64
+        }
+    }
+
+    /// Number of committed migrations.
+    pub fn migration_count(&self) -> usize {
+        self.migrations.len()
+    }
 }
 
 struct Running<'a> {
@@ -78,6 +144,11 @@ struct Running<'a> {
     tau_sum: f64,
     tau_slots: u64,
     max_p: usize,
+    /// Checkpoint-restart gate: the job makes no progress before this
+    /// slot (0 = never frozen; set to `t + restart_slots` on migration).
+    freeze_until: u64,
+    /// Times this job was preempted/re-placed.
+    migrations: usize,
 }
 
 /// Event-driven non-clairvoyant scheduler over one cluster + job stream.
@@ -101,6 +172,125 @@ impl<'a> OnlineScheduler<'a> {
         self
     }
 
+    /// Speculative θ-admission projection for one arrival: place the gang
+    /// with the same FA-FFP selection the dispatch policies use — over
+    /// the free GPUs when a gang fits now, else over all GPUs (the
+    /// structural floor on the contention the job must cause) — and read
+    /// the bottleneck it *would* see from the incremental tracker without
+    /// mutating any count. `None` iff the job can never be placed
+    /// (`G_j` exceeds the cluster).
+    fn projected_bottleneck(
+        &self,
+        state: &ClusterState,
+        busy_history: &[f64],
+        tracker: &ContentionTracker,
+        gpus: usize,
+    ) -> Option<Bottleneck> {
+        let load = |g: GpuId| busy_history[g.global];
+        let warm = |g: GpuId| !state.is_free(g);
+        let sel = fa_ffp_select(self.cluster, gpus, |g| state.is_free(g), load, warm)
+            .or_else(|| fa_ffp_select(self.cluster, gpus, |_| true, load, warm));
+        sel.map(|g| tracker.whatif_bottleneck(&JobPlacement::new(g)))
+    }
+
+    /// Candidate gang for a migration, locality-first — the freed
+    /// capacity the move should exploit, per the contention model's
+    /// preference order:
+    ///
+    /// 1. a single **server** with a free gang (co-location: the ring
+    ///    crosses no link at all),
+    /// 2. a single **rack** with a free gang (the ring stays below one
+    ///    ToR; densest servers first to minimize uplink crossings),
+    /// 3. cluster-wide FA-FFP over the free GPUs (fallback).
+    ///
+    /// Ties break by cumulative busy history (coolest capacity first),
+    /// then ids — deterministic.
+    fn migration_candidate(
+        &self,
+        state: &ClusterState,
+        busy_history: &[f64],
+        gpus: usize,
+    ) -> Option<JobPlacement> {
+        use crate::cluster::ServerId;
+        // "coolest capacity" = the sum over the `gpus` least-busy free
+        // GPUs of the pool — the GPUs a selection would actually take —
+        // NOT over every free GPU (which would bias toward servers with
+        // fewer free GPUs regardless of how hot they run).
+        let coolest_sum = |busies: &mut Vec<f64>| -> f64 {
+            busies.sort_by(|a, b| a.partial_cmp(b).expect("busy history is finite"));
+            busies.iter().take(gpus).sum()
+        };
+        // (1) co-location on one server
+        let mut best: Option<(f64, ServerId)> = None;
+        for s in self.cluster.server_ids() {
+            if state.free_on(s) >= gpus {
+                let mut busies: Vec<f64> = state
+                    .free_gpus_of(self.cluster, s)
+                    .map(|g| busy_history[g.global])
+                    .collect();
+                let load = coolest_sum(&mut busies);
+                if best.map_or(true, |(b, _)| load < b) {
+                    best = Some((load, s));
+                }
+            }
+        }
+        if let Some((_, s)) = best {
+            let mut gs: Vec<GpuId> = state.free_gpus_of(self.cluster, s).collect();
+            gs.sort_by(|a, b| {
+                busy_history[a.global]
+                    .partial_cmp(&busy_history[b.global])
+                    .expect("busy history is finite")
+                    .then(a.index.cmp(&b.index))
+            });
+            gs.truncate(gpus);
+            return Some(JobPlacement::new(gs));
+        }
+        // (2) rack-local gang (rack tiers only; on a flat fabric every
+        // server is its own rack, already covered by (1))
+        let topo = self.cluster.topology();
+        if topo.has_racks() {
+            let mut best: Option<(f64, usize)> = None;
+            for rack in 0..topo.num_racks() {
+                let free: usize = topo.servers_in_rack(rack).map(|s| state.free_on(s)).sum();
+                if free >= gpus {
+                    let mut busies: Vec<f64> = topo
+                        .servers_in_rack(rack)
+                        .flat_map(|s| state.free_gpus_of(self.cluster, s))
+                        .map(|g| busy_history[g.global])
+                        .collect();
+                    let load = coolest_sum(&mut busies);
+                    if best.map_or(true, |(b, _)| load < b) {
+                        best = Some((load, rack));
+                    }
+                }
+            }
+            if let Some((_, rack)) = best {
+                // densest free servers first: fewest servers → fewest
+                // crossed server uplinks inside the rack
+                let mut servers: Vec<ServerId> = topo.servers_in_rack(rack).collect();
+                servers.sort_by_key(|&s| (std::cmp::Reverse(state.free_on(s)), s));
+                let mut gs: Vec<GpuId> = Vec::with_capacity(gpus);
+                for s in servers {
+                    gs.extend(state.free_gpus_of(self.cluster, s));
+                    if gs.len() >= gpus {
+                        break;
+                    }
+                }
+                gs.truncate(gpus);
+                return Some(JobPlacement::new(gs));
+            }
+        }
+        // (3) cluster-wide fallback
+        fa_ffp_select(
+            self.cluster,
+            gpus,
+            |g| state.is_free(g),
+            |g| busy_history[g.global],
+            |g| !state.is_free(g),
+        )
+        .map(JobPlacement::new)
+    }
+
     /// Run the stream to completion (or the safety horizon) under one
     /// policy and report realized makespan / JCTs / waits under live
     /// contention.
@@ -118,17 +308,51 @@ impl<'a> OnlineScheduler<'a> {
         let mut busy_history = vec![0.0f64; self.cluster.num_gpus()];
         let mut running: Vec<Running<'a>> = Vec::new();
         let mut records: Vec<JobRecord> = Vec::with_capacity(self.jobs.len());
+        let mut rejected: Vec<JobId> = Vec::new();
+        let mut migrations: Vec<MigrationRecord> = Vec::new();
+        let mut max_pending = 0usize;
         let mut busy_gpu_slots: u64 = 0;
         let mut next_arrival = 0usize;
         let mut t: u64 = 0;
+        let admission_active = self.options.admission.is_active();
 
         loop {
-            // 1) Reveal arrivals due by now.
+            // 1) Reveal arrivals due by now. With admission control armed,
+            //    each arrival passes the queue-cap and θ guards before it
+            //    may enter the pending queue; a turned-away job logs
+            //    Arrival → Rejected and is gone (an open system's caller
+            //    retries elsewhere — there is no hidden backlog).
             while next_arrival < order.len() && order[next_arrival].arrival <= t {
                 let spec = order[next_arrival];
-                pending.push(spec.id, spec.arrival);
-                events.push(spec.arrival, spec.id, EventKind::Arrival);
                 next_arrival += 1;
+                events.push(spec.arrival, spec.id, EventKind::Arrival);
+                if admission_active {
+                    let reject = if spec.gpus > self.cluster.num_gpus() {
+                        // never placeable: every armed admission guard
+                        // turns it away instead of letting it wedge the
+                        // queue into truncation (queue-cap-only included)
+                        true
+                    } else if self.options.admission.queue_full(pending.len()) {
+                        true
+                    } else if self.options.admission.theta.is_finite() {
+                        let projected = self.projected_bottleneck(
+                            &state,
+                            &busy_history,
+                            &tracker,
+                            spec.gpus,
+                        );
+                        self.options.admission.theta_exceeded(projected)
+                    } else {
+                        false
+                    };
+                    if reject {
+                        events.push(spec.arrival, spec.id, EventKind::Rejected);
+                        rejected.push(spec.id);
+                        continue;
+                    }
+                }
+                pending.push(spec.id, spec.arrival);
+                max_pending = max_pending.max(pending.len());
             }
 
             // Horizon guard sits *before* dispatch so no job can start at
@@ -167,6 +391,8 @@ impl<'a> OnlineScheduler<'a> {
                     tau_sum: 0.0,
                     tau_slots: 0,
                     max_p: 0,
+                    freeze_until: 0,
+                    migrations: 0,
                 });
             }
 
@@ -188,26 +414,38 @@ impl<'a> OnlineScheduler<'a> {
 
             // 3) Constant-rate period: the bottleneck link from the
             //    incremental tracker, τ/φ from the shared simulation
-            //    kernel.
+            //    kernel. A frozen (restarting) job's rate is never read
+            //    this period — steps 4/5 branch on the freeze first — so
+            //    its O(span) evaluation is skipped entirely.
             let rates: Vec<RatePoint> = running
                 .iter()
                 .map(|r| {
-                    kernel::rate_point(
-                        self.params,
-                        self.cluster,
-                        r.spec,
-                        &r.placement,
-                        tracker.bottleneck(r.job),
-                        self.options.fractional_progress,
-                    )
+                    if t < r.freeze_until {
+                        RatePoint { p: 0, tau: 0.0, inc: 0.0 }
+                    } else {
+                        kernel::rate_point(
+                            self.params,
+                            self.cluster,
+                            r.spec,
+                            &r.placement,
+                            tracker.bottleneck(r.job),
+                            self.options.fractional_progress,
+                        )
+                    }
                 })
                 .collect();
 
-            // 4) Jump to the next event: completion, arrival or horizon.
+            // 4) Jump to the next event: completion, thaw of a restarting
+            //    (migrated) job, arrival or horizon. A period never spans
+            //    a thaw boundary, so "frozen" is constant within it.
             let mut dt = u64::MAX;
             for (r, rate) in running.iter().zip(&rates) {
-                let remaining = r.spec.iterations as f64 - r.progress;
-                dt = dt.min(kernel::slots_until_done(remaining, rate.inc));
+                if t < r.freeze_until {
+                    dt = dt.min(r.freeze_until - t); // re-rate at thaw
+                } else {
+                    let remaining = r.spec.iterations as f64 - r.progress;
+                    dt = dt.min(kernel::slots_until_done(remaining, rate.inc));
+                }
             }
             if let Some(spec) = order.get(next_arrival) {
                 debug_assert!(spec.arrival > t, "due arrivals were revealed in step 1");
@@ -215,12 +453,17 @@ impl<'a> OnlineScheduler<'a> {
             }
             let dt = dt.min(self.options.max_slots - t).max(1);
 
-            // 5) Progress every running job by dt slots.
+            // 5) Progress every running job by dt slots. A job inside its
+            //    checkpoint-restart window holds its GPUs (they stay busy
+            //    for utilization accounting) but makes no progress and
+            //    accrues no τ statistics.
             for (r, rate) in running.iter_mut().zip(&rates) {
-                r.progress += rate.inc * dt as f64;
-                r.tau_sum += rate.tau * dt as f64;
-                r.tau_slots += dt;
-                r.max_p = r.max_p.max(rate.p);
+                if t >= r.freeze_until {
+                    r.progress += rate.inc * dt as f64;
+                    r.tau_sum += rate.tau * dt as f64;
+                    r.tau_slots += dt;
+                    r.max_p = r.max_p.max(rate.p);
+                }
                 busy_gpu_slots += r.placement.num_workers() as u64 * dt;
                 for g in r.placement.gpus() {
                     busy_history[g.global] += dt as f64;
@@ -229,13 +472,15 @@ impl<'a> OnlineScheduler<'a> {
             t += dt;
 
             // 6) Completions at the end of the period.
+            let mut completed_any = false;
             let mut i = 0;
             while i < running.len() {
                 if running[i].progress >= running[i].spec.iterations as f64 {
                     let r = running.swap_remove(i);
                     state.release(r.job, &r.placement);
-                    tracker.complete(r.job);
+                    let _ = tracker.complete(r.job);
                     events.push(t, r.job, EventKind::Completion);
+                    completed_any = true;
                     records.push(JobRecord {
                         job: r.job,
                         arrival: r.spec.arrival,
@@ -246,9 +491,107 @@ impl<'a> OnlineScheduler<'a> {
                         max_p: r.max_p,
                         mean_tau: r.tau_sum / r.tau_slots.max(1) as f64,
                         iterations_done: r.spec.iterations,
+                        migrations: r.migrations,
                     });
                 } else {
                     i += 1;
+                }
+            }
+
+            // 7) Migration hook: completions freed capacity — re-place up
+            //    to K running jobs whose bottleneck strictly improves net
+            //    of the checkpoint-restart cost. Worst bottleneck first
+            //    (they gain the most), deterministic tie-break by job id.
+            if self.options.migration.enabled && completed_any && !running.is_empty() {
+                let mig = self.options.migration;
+                // one O(span) bottleneck walk per job, not per comparison
+                let mut by_pressure: Vec<(f64, usize)> = running
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| (tracker.bottleneck(r.job).effective(), i))
+                    .collect();
+                by_pressure.sort_by(|a, b| {
+                    b.0.partial_cmp(&a.0)
+                        .expect("effective degrees are finite")
+                        .then(running[a.1].job.cmp(&running[b.1].job))
+                });
+                let mut moved = 0usize;
+                for (_, idx) in by_pressure {
+                    if moved >= mig.max_moves {
+                        break;
+                    }
+                    let (job, spec, cur_bn, remaining) = {
+                        let r = &running[idx];
+                        if t < r.freeze_until {
+                            continue; // still restarting from an earlier move
+                        }
+                        (
+                            r.job,
+                            r.spec,
+                            tracker.bottleneck(r.job),
+                            r.spec.iterations as f64 - r.progress,
+                        )
+                    };
+                    if cur_bn.link.is_none() {
+                        continue; // co-located: nothing to improve
+                    }
+                    // locality-first candidate over the freed capacity:
+                    // one server, else one rack, else cluster-wide FA-FFP
+                    let Some(candidate) =
+                        self.migration_candidate(&state, &busy_history, spec.gpus)
+                    else {
+                        continue;
+                    };
+                    let Some(new_bn) = tracker.whatif_rebottleneck(job, &candidate) else {
+                        continue;
+                    };
+                    // guard 1: strictly lower bottleneck effective degree
+                    if new_bn.effective() >= cur_bn.effective() {
+                        continue;
+                    }
+                    // guard 2: completion-time gain net of restart cost
+                    // (shared kernel arithmetic, same rates the loop uses)
+                    let old_rate = kernel::rate_point(
+                        self.params,
+                        self.cluster,
+                        spec,
+                        &running[idx].placement,
+                        cur_bn,
+                        self.options.fractional_progress,
+                    );
+                    let new_rate = kernel::rate_point(
+                        self.params,
+                        self.cluster,
+                        spec,
+                        &candidate,
+                        new_bn,
+                        self.options.fractional_progress,
+                    );
+                    if !kernel::migration_pays(
+                        remaining,
+                        old_rate.inc,
+                        new_rate.inc,
+                        mig.restart_slots,
+                    ) {
+                        continue;
+                    }
+                    // commit: occupancy, tracker counts, event, freeze
+                    state.release(job, &running[idx].placement);
+                    state.allocate(job, &candidate);
+                    tracker.migrate(job, &candidate);
+                    events.push(t, job, EventKind::Migrated);
+                    migrations.push(MigrationRecord {
+                        job,
+                        at: t,
+                        from_effective: cur_bn.effective(),
+                        to_effective: new_bn.effective(),
+                        restart_slots: mig.restart_slots,
+                    });
+                    let r = &mut running[idx];
+                    r.placement = candidate;
+                    r.freeze_until = t.saturating_add(mig.restart_slots);
+                    r.migrations += 1;
+                    moved += 1;
                 }
             }
         }
@@ -266,6 +609,7 @@ impl<'a> OnlineScheduler<'a> {
                 max_p: r.max_p,
                 mean_tau: r.tau_sum / r.tau_slots.max(1) as f64,
                 iterations_done: r.progress as u64,
+                migrations: r.migrations,
             });
         }
         records.sort_by_key(|r| r.job);
@@ -292,6 +636,9 @@ impl<'a> OnlineScheduler<'a> {
                 truncated,
             },
             events,
+            rejected,
+            migrations,
+            max_pending,
         }
     }
 }
@@ -360,12 +707,138 @@ mod tests {
             j.arrival = (i as u64) * 10_000;
         }
         let out = OnlineScheduler::new(&c, &jobs, &p)
-            .with_options(OnlineOptions { max_slots: 10_000_000, fractional_progress: false })
+            .with_options(OnlineOptions { max_slots: 10_000_000, ..OnlineOptions::default() })
             .run(&mut Fifo);
         assert!(!out.outcome.truncated);
         for r in &out.outcome.records {
             assert_eq!(r.start, r.arrival, "{} queued on an empty cluster", r.job);
         }
+    }
+
+    #[test]
+    fn queue_cap_rejects_overflow_arrivals() {
+        // 1 server x 2 GPUs, 2-GPU jobs: strictly one at a time. Six jobs
+        // at t = 0 with a queue cap of 2: arrivals are all revealed
+        // before any dispatch, so two enter the queue and four are
+        // rejected on arrival.
+        let c = Cluster::uniform(1, 2, 1.0, 25.0);
+        let p = ContentionParams::paper();
+        let jobs: Vec<JobSpec> = (0..6)
+            .map(|i| {
+                let mut j = JobSpec::synthetic(JobId(i), 2);
+                j.iterations = 100;
+                j
+            })
+            .collect();
+        let opts = OnlineOptions {
+            admission: AdmissionControl { theta: f64::INFINITY, queue_cap: 2 },
+            ..OnlineOptions::default()
+        };
+        let out = OnlineScheduler::new(&c, &jobs, &p).with_options(opts).run(&mut Fifo);
+        assert!(!out.outcome.truncated);
+        assert_eq!(out.rejected.len(), 4, "cap 2 admits exactly 2 of 6 batch arrivals");
+        assert_eq!(out.outcome.records.len(), 2, "rejected jobs have no records");
+        assert!(out.max_pending <= 2, "queue never exceeds the cap");
+        assert_eq!(out.events.count(EventKind::Rejected), 4);
+        assert_eq!(out.events.count(EventKind::Arrival), 6, "every arrival is logged");
+        assert!(out.events.is_causally_ordered());
+        assert!((out.rejection_rate(jobs.len()) - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_zero_rejects_every_spread_arrival() {
+        // 2 servers x 1 GPU: any 2-GPU gang must spread, so its projected
+        // bottleneck effective degree is >= 1 > θ = 0.5 → rejected. A
+        // 1-GPU job projects co-located (degree 0) and is admitted.
+        let c = Cluster::uniform(2, 1, 1.0, 25.0);
+        let p = ContentionParams::paper();
+        let mut spread = JobSpec::synthetic(JobId(0), 2);
+        spread.iterations = 50;
+        let mut solo = JobSpec::synthetic(JobId(1), 1);
+        solo.iterations = 50;
+        let jobs = vec![spread, solo];
+        let opts = OnlineOptions {
+            admission: AdmissionControl { theta: 0.5, queue_cap: usize::MAX },
+            ..OnlineOptions::default()
+        };
+        let out = OnlineScheduler::new(&c, &jobs, &p).with_options(opts).run(&mut Fifo);
+        assert!(!out.outcome.truncated);
+        assert_eq!(out.rejected, vec![JobId(0)]);
+        assert_eq!(out.outcome.records.len(), 1);
+        assert_eq!(out.outcome.records[0].job, JobId(1));
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_under_admission_not_stuck() {
+        // the control-free loop truncates on a never-placeable job (see
+        // oversized_job_truncates_instead_of_hanging); with EITHER guard
+        // armed — θ or the queue cap alone — admission turns it away
+        // cleanly instead of letting it wedge the queue.
+        let (c, p) = setup();
+        let mut jobs = vec![JobSpec::synthetic(JobId(0), 1)];
+        jobs.push(JobSpec::synthetic(JobId(1), c.num_gpus() + 1));
+        for admission in [
+            AdmissionControl { theta: 1e9, queue_cap: usize::MAX },
+            AdmissionControl { theta: f64::INFINITY, queue_cap: 8 }, // cap-only
+        ] {
+            let opts = OnlineOptions { admission, ..OnlineOptions::default() };
+            let out =
+                OnlineScheduler::new(&c, &jobs, &p).with_options(opts).run(&mut Fifo);
+            assert!(!out.outcome.truncated, "rejection unblocks the stream");
+            assert_eq!(out.rejected, vec![JobId(1)]);
+            assert_eq!(out.outcome.records.len(), 1);
+        }
+    }
+
+    #[test]
+    fn migration_colocates_a_spread_ring_when_capacity_frees() {
+        // 2 servers x 4 GPUs, starved inter-server link so spread rings
+        // crawl. FIFO packs jA (3 GPUs, ~29 slots co-located) onto
+        // s0g0-2; jB (2 GPUs) is forced to spread over s0g3 + s1g0 and
+        // crawls at the starved uplink (~1000 slots). When jA completes,
+        // the never-used s1g1/s1g2 are the least-busy free pair, so the
+        // migration candidate co-locates jB on server 1: bottleneck
+        // 1 → 0, and the rate jump dwarfs the restart cost. The move must
+        // fire, strictly improve, and beat the migration-off makespan.
+        let c = Cluster::uniform(2, 4, 0.05, 25.0);
+        let p = ContentionParams::paper();
+        let mk = |id: usize, gpus: usize, iters: u64| {
+            let mut j = JobSpec::synthetic(JobId(id), gpus);
+            j.iterations = iters;
+            j
+        };
+        let jobs = vec![mk(0, 3, 4000), mk(1, 2, 4000)];
+        let base = OnlineOptions { max_slots: 10_000_000, ..OnlineOptions::default() };
+        let off = OnlineScheduler::new(&c, &jobs, &p).with_options(base).run(&mut Fifo);
+        let on_opts = OnlineOptions {
+            migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+            ..base
+        };
+        let on = OnlineScheduler::new(&c, &jobs, &p).with_options(on_opts).run(&mut Fifo);
+        assert!(!off.outcome.truncated && !on.outcome.truncated);
+        assert!(!on.migrations.is_empty(), "freed server must trigger the move");
+        for m in &on.migrations {
+            assert!(
+                m.to_effective < m.from_effective,
+                "{}: bottleneck must strictly improve ({} -> {})",
+                m.job,
+                m.from_effective,
+                m.to_effective
+            );
+        }
+        assert_eq!(out_migrations_total(&on), on.migrations.len());
+        assert!(
+            on.outcome.makespan < off.outcome.makespan,
+            "migration-on {} vs off {}",
+            on.outcome.makespan,
+            off.outcome.makespan
+        );
+        assert!(on.events.is_causally_ordered());
+        assert_eq!(on.events.count(EventKind::Migrated), on.migrations.len());
+    }
+
+    fn out_migrations_total(o: &OnlineOutcome) -> usize {
+        o.outcome.records.iter().map(|r| r.migrations).sum()
     }
 
     #[test]

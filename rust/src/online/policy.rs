@@ -236,6 +236,94 @@ impl OnlinePolicy for OnlineSjfBco {
     }
 }
 
+/// θ-style **admission control** for the overload regime, composing with
+/// every [`OnlinePolicy`] (FIFO, ON-FF, BACKFILL, ON-SJF-BCO alike): the
+/// event loop consults it once per *arrival*, before the job may enter
+/// the pending queue.
+///
+/// Two independent guards, both inactive at their defaults so the
+/// control-free loop is reproduced bit for bit (`theta = ∞`,
+/// `queue_cap = usize::MAX` — enforced by the equivalence tests):
+///
+/// * **θ-threshold** — reject an arrival whose *projected* admission
+///   would push any fabric link's effective degree `count × oversub`
+///   (generalized Eq. 6, evaluated speculatively by
+///   [`ContentionTracker::whatif_bottleneck`](super::ContentionTracker::whatif_bottleneck))
+///   strictly past `theta`. The projection places the job with the same
+///   FA-FFP selection the dispatch policies use — over the free GPUs when
+///   a gang fits, else over all GPUs (the structural lower bound on the
+///   contention it must cause).
+/// * **queue cap** — unconditionally reject once the pending queue holds
+///   `queue_cap` jobs: under `λ > capacity` no threshold on contention
+///   bounds the backlog, only a cap does.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionControl {
+    /// Largest tolerated projected effective degree `count × oversub` at
+    /// any link the arrival's ring would cross. `f64::INFINITY` disables
+    /// the threshold.
+    pub theta: f64,
+    /// Hard cap on the pending-queue length. `usize::MAX` disables it.
+    pub queue_cap: usize,
+}
+
+impl Default for AdmissionControl {
+    fn default() -> Self {
+        AdmissionControl { theta: f64::INFINITY, queue_cap: usize::MAX }
+    }
+}
+
+impl AdmissionControl {
+    /// Is any guard armed? When false the event loop skips the admission
+    /// branch entirely (bit-for-bit equivalence with the control-free
+    /// loop).
+    pub fn is_active(&self) -> bool {
+        self.theta.is_finite() || self.queue_cap != usize::MAX
+    }
+
+    /// The queue-cap guard: would an arrival overflow the pending queue?
+    pub fn queue_full(&self, pending_len: usize) -> bool {
+        pending_len >= self.queue_cap
+    }
+
+    /// The θ guard against a projected bottleneck: `None` projection means
+    /// the job can never be placed (G_j exceeds the cluster) — under
+    /// admission control that is a rejection, not an unbounded wait.
+    pub fn theta_exceeded(&self, projected: Option<crate::topology::Bottleneck>) -> bool {
+        if !self.theta.is_finite() {
+            return false;
+        }
+        match projected {
+            Some(bn) => bn.effective() > self.theta,
+            None => true,
+        }
+    }
+}
+
+/// Completion-event **preemption/migration** policy, composing with every
+/// [`OnlinePolicy`]: when completions free a server (or rack), up to
+/// `max_moves` running jobs may be re-placed onto the freed capacity —
+/// but only when the move *strictly* lowers the job's bottleneck
+/// effective degree AND the projected completion improves net of the
+/// checkpoint-restart penalty
+/// ([`kernel::migration_pays`](crate::sim::kernel::migration_pays)).
+/// Disabled by default: the control-free loop is reproduced bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationControl {
+    /// Master switch; off reproduces the no-migration loop exactly.
+    pub enabled: bool,
+    /// At most this many re-placements per completion event (K).
+    pub max_moves: usize,
+    /// Checkpoint-restart penalty in slots: the migrated job makes no
+    /// progress for this long after the move.
+    pub restart_slots: u64,
+}
+
+impl Default for MigrationControl {
+    fn default() -> Self {
+        MigrationControl { enabled: false, max_moves: 2, restart_slots: 10 }
+    }
+}
+
 /// The online policies available from the CLI / benches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OnlinePolicyKind {
@@ -390,6 +478,42 @@ mod tests {
         for kind in OnlinePolicyKind::ALL {
             assert!(kind.build().dispatch(&queue, &view).is_none(), "{kind}");
         }
+    }
+
+    #[test]
+    fn admission_defaults_are_inert() {
+        let a = AdmissionControl::default();
+        assert!(!a.is_active());
+        assert!(!a.queue_full(1_000_000));
+        assert!(!a.theta_exceeded(Some(crate::topology::Bottleneck::flat(1_000))));
+        assert!(!a.theta_exceeded(None), "theta off ignores unplaceable jobs too");
+    }
+
+    #[test]
+    fn admission_guards_fire_independently() {
+        use crate::topology::Bottleneck;
+        let a = AdmissionControl { theta: 4.0, queue_cap: 3 };
+        assert!(a.is_active());
+        assert!(!a.queue_full(2));
+        assert!(a.queue_full(3), "cap is inclusive: len == cap rejects");
+        // θ compares the *effective* degree count × oversub
+        assert!(!a.theta_exceeded(Some(Bottleneck::flat(4))), "4 × 1.0 = θ: admitted");
+        assert!(a.theta_exceeded(Some(Bottleneck::flat(5))));
+        assert!(
+            a.theta_exceeded(Some(Bottleneck { p: 3, oversub: 2.0, link: None })),
+            "3 × 2.0 > 4"
+        );
+        assert!(!a.theta_exceeded(Some(Bottleneck::NONE)), "co-located projection");
+        assert!(a.theta_exceeded(None), "unplaceable jobs are rejected under θ");
+        // queue cap alone also arms the control
+        assert!(AdmissionControl { theta: f64::INFINITY, queue_cap: 8 }.is_active());
+    }
+
+    #[test]
+    fn migration_default_is_off() {
+        let m = MigrationControl::default();
+        assert!(!m.enabled);
+        assert!(m.max_moves >= 1);
     }
 
     #[test]

@@ -61,25 +61,42 @@ impl ContentionTracker {
         self.debug_check_against_rebuild();
     }
 
-    /// Complete one job: `O(path)` count updates.
-    ///
-    /// Panics if the job is not active.
-    pub fn complete(&mut self, job: JobId) {
-        let placement = self
-            .active
-            .get_mut(job.0)
-            .and_then(Option::take)
-            .unwrap_or_else(|| panic!("{job} not active in tracker"));
+    /// Complete one job: `O(path)` count updates. Returns the placement
+    /// the job held, or `None` if the job was not active. Completing an
+    /// inactive job is always a caller bug (the event loop only completes
+    /// members of its running set), so debug builds assert; release
+    /// builds deliberately degrade to a reported no-op instead of tearing
+    /// down a long-lived scheduler process — callers observe the `None`
+    /// and the debug cross-check catches any count desync in CI.
+    pub fn complete(&mut self, job: JobId) -> Option<JobPlacement> {
+        let slot = self.active.get_mut(job.0).and_then(Option::take);
+        debug_assert!(slot.is_some(), "{job} not active in tracker");
+        let placement = slot?;
         let link_jobs = &mut self.link_jobs;
         self.topology.for_each_crossed(&placement, |l| link_jobs[l.0] -= 1);
         self.num_active -= 1;
         self.debug_check_against_rebuild();
+        Some(placement)
+    }
+
+    /// Re-place an active job atomically (preemption/migration): its old
+    /// per-link counts are released and the new placement's charged, both
+    /// in `O(path)`. Returns the old placement, or `None` (no-op) if the
+    /// job was not active.
+    pub fn migrate(&mut self, job: JobId, placement: &JobPlacement) -> Option<JobPlacement> {
+        // explicit pre-check: an inactive job is a quiet no-op here (the
+        // debug_assert! in `complete` is reserved for completion events)
+        self.active.get(job.0).and_then(|o| o.as_ref())?;
+        let old = self.complete(job)?;
+        self.admit(job, placement);
+        Some(old)
     }
 
     /// Contention degree `p_j[t]` (generalized Eq. 6) of an active job: 0
     /// for co-located jobs, else the ring count at its bottleneck link —
-    /// `O(path)`, no rebuild. Panics if the job is not active; use
-    /// [`try_p_j`](Self::try_p_j) where absence is not a logic error.
+    /// `O(path)`, no rebuild. An inactive job is a debug-asserted logic
+    /// error and reads as 0 (co-located / no contention) in release; use
+    /// [`try_p_j`](Self::try_p_j) where absence is expected.
     pub fn p_j(&self, job: JobId) -> usize {
         self.bottleneck(job).p
     }
@@ -90,10 +107,14 @@ impl ContentionTracker {
     }
 
     /// The bottleneck link of an active job's ring under the maintained
-    /// counts. Panics if the job is not active.
+    /// counts. An inactive job is a debug-asserted logic error; release
+    /// builds degrade to [`Bottleneck::NONE`] (the contention-free
+    /// operating point) instead of tearing down the event loop — use
+    /// [`try_bottleneck`](Self::try_bottleneck) where absence is expected.
     pub fn bottleneck(&self, job: JobId) -> Bottleneck {
-        self.try_bottleneck(job)
-            .unwrap_or_else(|| panic!("{job} not active in tracker"))
+        let bn = self.try_bottleneck(job);
+        debug_assert!(bn.is_some(), "{job} not active in tracker");
+        bn.unwrap_or(Bottleneck::NONE)
     }
 
     /// Non-panicking [`bottleneck`](Self::bottleneck).
@@ -105,6 +126,56 @@ impl ContentionTracker {
     /// Placement of an active job, if any.
     pub fn placement(&self, job: JobId) -> Option<&JobPlacement> {
         self.active.get(job.0).and_then(|o| o.as_ref())
+    }
+
+    /// **Speculative** bottleneck a *not-yet-admitted* placement would see
+    /// if admitted right now: every crossed link evaluated at `count + 1`
+    /// (the candidate ring counts itself, Eq. 6). `O(path)`, zero
+    /// mutation, zero allocation — the θ-admission hot path.
+    pub fn whatif_bottleneck(&self, placement: &JobPlacement) -> Bottleneck {
+        let mut best = Bottleneck::NONE;
+        self.topology.for_each_crossed(placement, |l| {
+            let cand = Bottleneck {
+                p: self.link_jobs[l.0] + 1,
+                oversub: self.topology.oversub(l),
+                link: Some(l),
+            };
+            if best.link.is_none() || cand.dominates(&best) {
+                best = cand;
+            }
+        });
+        best
+    }
+
+    /// **Speculative** bottleneck an *active* job would see after moving to
+    /// `candidate`: its current placement's link contributions are deducted
+    /// before the candidate's crossed links are evaluated at `count + 1`.
+    /// `O(span_old × span_new)` worst case (tiny in practice — crossed
+    /// links are unique per placement), zero mutation. `None` if the job
+    /// is not active — the migration what-if of a completed job is
+    /// meaningless.
+    pub fn whatif_rebottleneck(
+        &self,
+        job: JobId,
+        candidate: &JobPlacement,
+    ) -> Option<Bottleneck> {
+        let current = self.active.get(job.0).and_then(|o| o.as_ref())?;
+        let mut own: Vec<usize> = Vec::new();
+        self.topology.for_each_crossed(current, |l| own.push(l.0));
+        let mut best = Bottleneck::NONE;
+        self.topology.for_each_crossed(candidate, |l| {
+            // each link appears at most once in a placement's crossed set
+            let minus = usize::from(own.contains(&l.0));
+            let cand = Bottleneck {
+                p: self.link_jobs[l.0] - minus + 1,
+                oversub: self.topology.oversub(l),
+                link: Some(l),
+            };
+            if best.link.is_none() || cand.dominates(&best) {
+                best = cand;
+            }
+        });
+        Some(best)
     }
 
     /// Largest active-ring count on any single fabric link — `O(L)`. On a
@@ -260,12 +331,99 @@ mod tests {
         tr.admit(JobId(0), &pl);
     }
 
+    // The inactive-complete contract is split by build profile: debug
+    // builds assert (logic error), release paths degrade to a no-op that
+    // reports the absence via `None`.
     #[test]
     #[should_panic]
-    fn completing_inactive_job_panics() {
+    #[cfg(debug_assertions)]
+    fn completing_inactive_job_panics_in_debug() {
         let c = Cluster::uniform(2, 4, 1.0, 25.0);
         let mut tr = ContentionTracker::new(&c);
-        tr.complete(JobId(7));
+        let _ = tr.complete(JobId(7));
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn completing_inactive_job_is_a_none_noop_in_release() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        assert!(tr.complete(JobId(7)).is_none());
+        assert_eq!(tr.num_active(), 0);
+        assert_eq!(tr.bottleneck(JobId(7)), Bottleneck::NONE);
+    }
+
+    #[test]
+    fn complete_returns_the_released_placement() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        let pl = mk(&c, &[(0, 0), (1, 0)]);
+        tr.admit(JobId(0), &pl);
+        assert_eq!(tr.complete(JobId(0)).as_ref(), Some(&pl));
+    }
+
+    #[test]
+    fn whatif_bottleneck_previews_admission_without_mutating() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        let counts_before = tr.max_contention();
+        // a second ring crossing server 0 would see count 2 there
+        let cand = mk(&c, &[(0, 1), (2, 0)]);
+        let bn = tr.whatif_bottleneck(&cand);
+        assert_eq!(bn.p, 2, "counts itself plus the standing ring");
+        // co-located candidate: nothing crossed
+        assert_eq!(tr.whatif_bottleneck(&mk(&c, &[(2, 1), (2, 2)])), Bottleneck::NONE);
+        // the preview mutated nothing
+        assert_eq!(tr.max_contention(), counts_before);
+        assert_eq!(tr.num_active(), 1);
+        // and admitting for real reproduces the preview exactly
+        tr.admit(JobId(1), &cand);
+        assert_eq!(tr.bottleneck(JobId(1)), bn);
+    }
+
+    #[test]
+    fn whatif_rebottleneck_deducts_the_jobs_own_contribution() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        // two rings sharing server 0's uplink
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (2, 0)]));
+        assert_eq!(tr.p_j(JobId(1)), 2);
+        // moving job 1 fully onto server 2: co-located, contention gone
+        let colo = mk(&c, &[(2, 1), (2, 2)]);
+        assert_eq!(tr.whatif_rebottleneck(JobId(1), &colo), Some(Bottleneck::NONE));
+        // moving job 1 onto servers 1+2 avoids server 0 but still spreads:
+        // server 1 already carries job 0's ring → count 2 there
+        let moved = mk(&c, &[(1, 1), (2, 1)]);
+        let bn = tr.whatif_rebottleneck(JobId(1), &moved).unwrap();
+        assert_eq!(bn.p, 2);
+        // staying put must reproduce the live bottleneck (self-deduction
+        // then self-recount is the identity)
+        let stay = tr.whatif_rebottleneck(JobId(1), &mk(&c, &[(0, 1), (2, 0)])).unwrap();
+        assert_eq!(stay, tr.bottleneck(JobId(1)));
+        // inactive job: no what-if
+        assert!(tr.whatif_rebottleneck(JobId(9), &colo).is_none());
+    }
+
+    #[test]
+    fn migrate_moves_counts_atomically() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        let old_pl = mk(&c, &[(0, 0), (1, 0)]);
+        tr.admit(JobId(0), &old_pl);
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (2, 0)]));
+        let new_pl = mk(&c, &[(2, 1), (2, 2)]);
+        assert_eq!(tr.migrate(JobId(0), &new_pl).as_ref(), Some(&old_pl));
+        assert_eq!(tr.num_active(), 2);
+        assert_eq!(tr.p_j(JobId(0)), 0, "co-located after the move");
+        assert_eq!(tr.p_j(JobId(1)), 1, "old contender no longer shares server 0");
+        // counts agree with a from-scratch rebuild after the move
+        let snap = tr.full_rebuild(&c);
+        for (j, _) in tr.active_jobs() {
+            assert_eq!(tr.bottleneck(j), snap.bottleneck(j), "{j}");
+        }
+        assert!(tr.migrate(JobId(9), &new_pl).is_none(), "inactive: no-op");
     }
 
     #[test]

@@ -204,6 +204,7 @@ impl<'a> Simulator<'a> {
                         max_p: a.max_p,
                         mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
                         iterations_done: a.spec.iterations,
+                        migrations: 0,
                     });
                 } else {
                     i += 1;
@@ -224,6 +225,7 @@ impl<'a> Simulator<'a> {
                 max_p: a.max_p,
                 mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
                 iterations_done: a.progress as u64,
+                migrations: 0,
             });
         }
         records.sort_by_key(|r| r.job);

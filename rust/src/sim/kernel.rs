@@ -48,12 +48,44 @@ pub fn rate_point(
 /// Slots until `remaining` iterations finish at `inc` iterations/slot
 /// (at least 1); `u64::MAX` for a stalled job (`inc == 0`), which the
 /// caller bounds by its safety horizon.
+///
+/// The division can overflow f64 (`remaining = ∞`, or a subnormal `inc`
+/// like `f64::MIN_POSITIVE`) or go undefined (`∞ / ∞ = NaN`); both cases
+/// saturate explicitly to the stalled sentinel instead of relying on the
+/// platform's float→int cast behaviour.
 pub fn slots_until_done(remaining: f64, inc: f64) -> u64 {
     if inc > 0.0 {
-        (remaining / inc).ceil().max(1.0) as u64
+        let ratio = remaining / inc;
+        if !ratio.is_finite() {
+            return u64::MAX; // overflowed or NaN: indistinguishable from stalled
+        }
+        let slots = ratio.ceil().max(1.0);
+        if slots >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            slots as u64
+        }
     } else {
         u64::MAX
     }
+}
+
+/// Completion-time estimate for a job that must pay a checkpoint-restart
+/// penalty of `restart_slots` before resuming at rate `inc`: the shared
+/// arithmetic behind the migration decision (saturating — a stalled rate
+/// stays the `u64::MAX` sentinel).
+pub fn slots_until_done_with_restart(remaining: f64, inc: f64, restart_slots: u64) -> u64 {
+    slots_until_done(remaining, inc).saturating_add(restart_slots)
+}
+
+/// Does moving a job with `remaining` iterations from rate `inc_old` to
+/// rate `inc_new` pay off *net of* a `restart_slots` checkpoint-restart
+/// penalty? True iff the projected completion strictly improves — the
+/// guard the online [`MigrationPolicy`](crate::online::MigrationControl)
+/// applies before preempting a running job.
+pub fn migration_pays(remaining: f64, inc_old: f64, inc_new: f64, restart_slots: u64) -> bool {
+    slots_until_done_with_restart(remaining, inc_new, restart_slots)
+        < slots_until_done(remaining, inc_old)
 }
 
 #[cfg(test)]
@@ -112,5 +144,42 @@ mod tests {
         assert_eq!(slots_until_done(101.0, 50.0), 3);
         assert_eq!(slots_until_done(0.5, 50.0), 1, "at least one slot");
         assert_eq!(slots_until_done(10.0, 0.0), u64::MAX, "stalled");
+    }
+
+    #[test]
+    fn slots_until_done_saturates_on_non_finite_ratios() {
+        // subnormal rate: the division overflows f64 → stalled sentinel
+        assert_eq!(
+            slots_until_done(1000.0, f64::MIN_POSITIVE),
+            u64::MAX,
+            "overflowing ratio must saturate, not wrap through the cast"
+        );
+        // infinite remaining work: sentinel regardless of the rate
+        assert_eq!(slots_until_done(f64::INFINITY, 50.0), u64::MAX);
+        // ∞ / ∞ = NaN: still the sentinel (NOT 1 via NaN.max(1.0))
+        assert_eq!(slots_until_done(f64::INFINITY, f64::INFINITY), u64::MAX);
+        // finite but > u64::MAX slots: saturates exactly
+        assert_eq!(slots_until_done(1.0e30, 1.0e-9), u64::MAX);
+        // a large-but-representable count still passes through
+        assert_eq!(slots_until_done(1.0e12, 1.0), 1_000_000_000_000);
+    }
+
+    #[test]
+    fn restart_arithmetic_and_migration_guard() {
+        assert_eq!(slots_until_done_with_restart(100.0, 50.0, 10), 12);
+        assert_eq!(
+            slots_until_done_with_restart(10.0, 0.0, 10),
+            u64::MAX,
+            "stalled stays saturated through the restart add"
+        );
+        // 100 iters: old rate 1/slot = 100 slots; new rate 4/slot = 25 + restart
+        assert!(migration_pays(100.0, 1.0, 4.0, 10), "25 + 10 < 100");
+        assert!(!migration_pays(100.0, 1.0, 4.0, 80), "25 + 80 > 100");
+        assert!(!migration_pays(100.0, 1.0, 1.0, 0), "equal rates never strictly pay");
+        assert!(
+            migration_pays(100.0, 0.0, 1.0, 1_000),
+            "unsticking a stalled job always pays"
+        );
+        assert!(!migration_pays(100.0, 1.0, 0.0, 0), "never migrate into a stall");
     }
 }

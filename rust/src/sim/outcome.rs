@@ -22,6 +22,10 @@ pub struct JobRecord {
     pub mean_tau: f64,
     /// Iterations completed (== F_j on success).
     pub iterations_done: u64,
+    /// Preemption/migration count over the job's lifetime (0 in the
+    /// offline replay engine — plans never re-place a running job; the
+    /// online loop's completion-event migration policy increments it).
+    pub migrations: usize,
 }
 
 impl JobRecord {
@@ -88,6 +92,25 @@ impl SimOutcome {
         percentile_of(self.records.iter().map(|r| r.wait()).collect(), p)
     }
 
+    /// p-th percentile of queueing delay over the records matching `pred`
+    /// — per-class wait under overload (e.g. single-GPU vs multi-GPU
+    /// gangs queue very differently once admission control bites).
+    pub fn wait_percentile_where(
+        &self,
+        p: f64,
+        pred: impl Fn(&JobRecord) -> bool,
+    ) -> u64 {
+        percentile_of(
+            self.records.iter().filter(|r| pred(r)).map(|r| r.wait()).collect(),
+            p,
+        )
+    }
+
+    /// Total migrations over all records (0 for offline replays).
+    pub fn total_migrations(&self) -> usize {
+        self.records.iter().map(|r| r.migrations).sum()
+    }
+
     /// Time-averaged GPU utilization over the span the cluster was
     /// actually in service: busy GPU-slots divided by capacity between the
     /// first start and the last finish. Under staggered arrivals this
@@ -123,6 +146,7 @@ mod tests {
             max_p: 0,
             mean_tau: 0.02,
             iterations_done: 100,
+            migrations: 0,
         }
     }
 
@@ -144,6 +168,11 @@ mod tests {
         assert_eq!(out.wait_percentile(0.0), 0);
         assert_eq!(out.wait_percentile(100.0), 10);
         assert_eq!(out.wait_percentile(50.0), 5);
+        // filtered percentile: only jobs 1 and 2 (waits 5 and 10)
+        assert_eq!(out.wait_percentile_where(100.0, |r| r.job.0 >= 1), 10);
+        assert_eq!(out.wait_percentile_where(0.0, |r| r.job.0 >= 1), 5);
+        assert_eq!(out.wait_percentile_where(50.0, |r| r.job.0 >= 99), 0, "empty class");
+        assert_eq!(out.total_migrations(), 0);
         // busy = 10 + 15 + 30 = 55 GPU-slots over 40 slots x 1 GPU... the
         // fixture pretends a 2-GPU cluster for a fractional check:
         assert!((out.service_utilization(2) - 55.0 / 80.0).abs() < 1e-12);

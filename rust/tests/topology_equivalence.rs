@@ -43,6 +43,7 @@ fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
         assert_eq!((x.span, x.workers, x.max_p), (y.span, y.workers, y.max_p), "{ctx}: {}", x.job);
         assert_eq!(x.mean_tau, y.mean_tau, "{ctx}: {} mean_tau (bitwise)", x.job);
         assert_eq!(x.iterations_done, y.iterations_done, "{ctx}: {}", x.job);
+        assert_eq!(x.migrations, y.migrations, "{ctx}: {}", x.job);
     }
 }
 

@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verification pipeline: fmt-check -> release build -> tests ->
-# bench smoke. The bench smoke also emits BENCH_topology.json (the
-# online_hot_path / per-link tracker numbers) so the perf trajectory is
-# recorded across PRs.
+# bench smoke. The bench smoke emits BENCH_topology.json (the
+# online_hot_path / per-link tracker numbers) and
+# BENCH_online_overload.json (the speculative what-if tracker path behind
+# θ-admission and migration) so the perf trajectory is recorded across
+# PRs.
+#
+# Failure policy: when cargo is PRESENT, every stage is a hard gate —
+# fmt drift, a build error, a test failure or a missing bench artifact
+# all fail the script. The only soft-skip is rustfmt being absent from
+# the toolchain (reported loudly; the fmt *check* itself is never
+# soft-failed).
 #
 # Usage: scripts/verify.sh           # from anywhere inside the repo
 #   RARSCHED_BENCH_MS=200            # (default here) bench budget per case
@@ -10,12 +18,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: cargo not found on PATH — tier-1 verification cannot run." >&2
+    echo "       (cargo build --release && cargo test -q is the gate; do not ship unverified.)" >&2
+    exit 1
+fi
+
 echo "== [1/4] cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
-    # fmt never gates the build offline, but drift is reported loudly
-    cargo fmt --all -- --check || echo "WARN: rustfmt reports drift (non-fatal)"
+    # fmt drift is a hard failure (gated step)
+    cargo fmt --all -- --check
 else
-    echo "WARN: rustfmt unavailable in this toolchain; skipping"
+    echo "WARN: rustfmt unavailable in this toolchain; fmt gate skipped"
 fi
 
 echo "== [2/4] cargo build --release =="
@@ -24,18 +38,21 @@ cargo build --release --offline
 echo "== [3/4] cargo test -q =="
 cargo test -q --offline
 
-echo "== [4/4] bench smoke (online_hot_path -> BENCH_topology.json) =="
+echo "== [4/4] bench smoke (online_hot_path -> BENCH_topology.json + BENCH_online_overload.json) =="
 # cargo runs bench binaries with cwd at the package root (rust/), so pin
-# the output path to the repo root explicitly.
+# the output paths to the repo root explicitly.
 RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_OUT="$PWD/BENCH_topology.json" \
+    RARSCHED_BENCH_OVERLOAD_OUT="$PWD/BENCH_online_overload.json" \
     cargo bench --offline --bench online_hot_path
 
-if [ -f BENCH_topology.json ]; then
-    echo "OK: BENCH_topology.json written"
-else
-    echo "ERROR: bench smoke did not emit BENCH_topology.json" >&2
-    exit 1
-fi
+for artifact in BENCH_topology.json BENCH_online_overload.json; do
+    if [ -f "$artifact" ]; then
+        echo "OK: $artifact written"
+    else
+        echo "ERROR: bench smoke did not emit $artifact" >&2
+        exit 1
+    fi
+done
 
 echo "verify: all stages passed"
