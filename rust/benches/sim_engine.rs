@@ -1,0 +1,146 @@
+//! Batch-engine hot path: snapshot-rebuild vs tracker + dirty-set
+//! contention evaluation, flat and 2-rack fabrics, three cluster sizes.
+//!
+//! Each case replays one fixed plan end to end and reports the engine's
+//! event-period throughput (events/sec, ns/event — an "event" is one
+//! constant-rate period: rate refresh + jump). The two modes are
+//! bit-identical by construction (asserted below and property-tested in
+//! `tests/sim_engine_equivalence.rs`); this bench records what the
+//! dirty-set buys over the per-period `O(Σ span)` rebuild.
+//!
+//! Results are written to `BENCH_sim_engine.json` (override with
+//! `RARSCHED_BENCH_SIM_OUT`) so `scripts/verify.sh` tracks the engine
+//! baseline across PRs. Run with `--release`: debug builds run the
+//! tracker's per-mutation full-rebuild cross-check, which erases the gap
+//! being measured.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::sched;
+use rarsched::sim::{ContentionMode, SimOptions, SimScratch, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::bench::Bench;
+use rarsched::util::Json;
+
+struct Case {
+    name: String,
+    mean_ms: f64,
+    periods: u64,
+    jobs: usize,
+    servers: usize,
+}
+
+fn main() {
+    let params = ContentionParams::paper();
+    let mut b = Bench::new("sim_engine");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // Three cluster sizes; the trace scales with the cluster so every
+    // case keeps a substantial standing active set (the regime the
+    // dirty-set targets). Arrivals are staggered (mean gap 1 slot) so
+    // admissions interleave with completions the way an online-style
+    // replay does.
+    for &(size_tag, servers, scale) in
+        &[("8srv", 8usize, 0.4f64), ("14srv", 14, 0.7), ("20srv", 20, 1.0)]
+    {
+        let flat = Cluster::random(servers, 7);
+        // the 2-rack bench case of the acceptance criterion: two racks of
+        // servers/2, ToR uplinks 2x oversubscribed
+        let racked =
+            flat.clone().with_topology(Topology::racks(servers, servers / 2, 2.0));
+        let jobs = TraceGenerator::paper_scaled(scale).generate_online(42, 1.0);
+        for (fabric_tag, cluster) in [("flat", &flat), ("rack2x2.0", &racked)] {
+            // one-pass RAND plan: cheap to build, and its placements are
+            // deliberately contention-heavy (spread rings), stressing the
+            // per-period contention evaluation both modes must perform
+            let plan =
+                sched::random_policy(cluster, &jobs, &params, 1_000_000, 0x5eed).unwrap();
+            for (mode_tag, mode) in [
+                ("snapshot", ContentionMode::SnapshotRebuild),
+                ("tracker", ContentionMode::TrackerDirtySet),
+            ] {
+                let sim = Simulator::new(cluster, &jobs, &params)
+                    .with_options(SimOptions { contention: mode, ..SimOptions::default() });
+                let mut scratch = SimScratch::new(cluster);
+                let reference = sim.run_with(&mut scratch, &plan);
+                assert!(!reference.truncated, "{mode_tag}/{fabric_tag}-{size_tag}");
+                let name = format!("{mode_tag}/{fabric_tag}-{size_tag}");
+                let mean_ms = {
+                    let r = b.run(&name, || sim.run_with(&mut scratch, &plan).makespan);
+                    r.mean_ms()
+                };
+                cases.push(Case {
+                    name,
+                    mean_ms,
+                    periods: reference.periods,
+                    jobs: jobs.len(),
+                    servers,
+                });
+            }
+
+            // sanity: the two modes agree record for record on this case
+            let fast = Simulator::new(cluster, &jobs, &params).run(&plan);
+            let snap = Simulator::new(cluster, &jobs, &params)
+                .with_options(SimOptions {
+                    contention: ContentionMode::SnapshotRebuild,
+                    ..SimOptions::default()
+                })
+                .run(&plan);
+            assert_eq!(fast.makespan, snap.makespan, "{fabric_tag}-{size_tag}");
+            assert_eq!(fast.avg_jct, snap.avg_jct, "{fabric_tag}-{size_tag}");
+            assert_eq!(fast.periods, snap.periods, "{fabric_tag}-{size_tag}");
+            for (x, y) in fast.records.iter().zip(&snap.records) {
+                assert_eq!((x.job, x.start, x.finish), (y.job, y.start, y.finish));
+                assert_eq!(x.mean_tau, y.mean_tau, "bitwise");
+            }
+        }
+    }
+    b.report();
+
+    // per-case throughput + tracker-vs-snapshot speedups per (fabric, size)
+    for pair in cases.chunks(2) {
+        if let [snap, track] = pair {
+            println!(
+                "  -> {}: snapshot {:.1} vs tracker {:.1} kevents/sec ({:.2}x)",
+                &track.name["tracker/".len()..],
+                snap.periods as f64 / snap.mean_ms,
+                track.periods as f64 / track.mean_ms,
+                snap.mean_ms / track.mean_ms.max(1e-12)
+            );
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("suite", Json::Str("sim_engine".into())),
+        (
+            "cases",
+            Json::arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        let secs = c.mean_ms / 1e3;
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("mean_ms", Json::Num(c.mean_ms)),
+                            ("periods", Json::Num(c.periods as f64)),
+                            ("events_per_sec", Json::Num(c.periods as f64 / secs.max(1e-12))),
+                            (
+                                "ns_per_event",
+                                Json::Num(c.mean_ms * 1e6 / (c.periods as f64).max(1.0)),
+                            ),
+                            ("jobs", Json::Num(c.jobs as f64)),
+                            ("servers", Json::Num(c.servers as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = std::env::var("RARSCHED_BENCH_SIM_OUT")
+        .unwrap_or_else(|_| "BENCH_sim_engine.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+}

@@ -1,0 +1,331 @@
+//! Link-keyed **dirty-set** invalidation for incremental contention
+//! engines.
+//!
+//! Both event-driven engines (the batch replay
+//! [`Simulator`](crate::sim::Simulator) and the
+//! [`online`](crate::online) loop) cache one [`RatePoint`]
+//! (`p`/`τ`/`φ`, [`crate::sim::kernel::RatePoint`]) per active job and
+//! advance whole constant-rate periods at a time. A cached rate is a pure
+//! function of the job's placement and its bottleneck link, and the
+//! bottleneck is the max of `count × oversub` over the job's *crossed*
+//! links — so the cache entry stays valid until one of those per-link
+//! counts changes.
+//!
+//! **Invalidation rule**: an admit / complete / migrate event changes the
+//! count of exactly the links the churned job's ring crosses (the
+//! tracker's `O(path)` delta). A cached rate must be recomputed iff the
+//! job's crossed-link set intersects that *touched* set; every other
+//! job's bottleneck — and therefore its rate — is unchanged by
+//! construction. This structure maintains the reverse index
+//! (link → member jobs) needed to apply that rule in
+//! `O(touched links × members)` per event instead of `O(active jobs)`:
+//!
+//! * [`on_admit`](DirtySet::on_admit) — record the newcomer as a member
+//!   of its crossed links, mark those links touched, and mark the job
+//!   itself dirty (it has no cached rate yet);
+//! * [`on_complete`](DirtySet::on_complete) — mark the leaver's crossed
+//!   links touched; its member entries are purged lazily when those
+//!   links drain (a link's member list is filtered against the live
+//!   active set exactly when it is touched, which includes every link
+//!   the leaver crossed);
+//! * [`drain`](DirtySet::drain) — fold the touched links into dirty
+//!   jobs, then hand every dirty *still-active* job to the caller for a
+//!   rate recompute. All buffers are retained across calls — the drain
+//!   allocates nothing once the structure has warmed up.
+//!
+//! A migration is a complete followed by an admit, so callers invoke
+//! both hooks; the job is marked dirty through the admit half and its
+//! stale membership purged through the touched links of both halves.
+
+use crate::cluster::JobPlacement;
+use crate::jobs::JobId;
+use crate::topology::{LinkId, Topology};
+
+/// Reverse (link → jobs) index plus touched/dirty sets, with every buffer
+/// reused across events and across runs ([`reset`](Self::reset)).
+#[derive(Debug, Clone)]
+pub struct DirtySet {
+    /// `members[ℓ]`: jobs whose ring crosses link `ℓ`. May hold stale
+    /// entries for departed jobs; filtered against the live set when the
+    /// link is touched (see module docs for why that is exact).
+    members: Vec<Vec<JobId>>,
+    /// Links whose count changed since the last [`drain`](Self::drain).
+    touched: Vec<bool>,
+    touched_list: Vec<LinkId>,
+    /// Jobs whose cached rate must be recomputed (dense by `JobId`).
+    dirty: Vec<bool>,
+    dirty_list: Vec<JobId>,
+}
+
+impl DirtySet {
+    pub fn new(num_links: usize) -> Self {
+        DirtySet {
+            members: vec![Vec::new(); num_links],
+            touched: vec![false; num_links],
+            touched_list: Vec::new(),
+            dirty: Vec::new(),
+            dirty_list: Vec::new(),
+        }
+    }
+
+    /// Clear all state (start of a fresh run) without deallocating.
+    pub fn reset(&mut self) {
+        for m in &mut self.members {
+            m.clear();
+        }
+        for &l in &self.touched_list {
+            self.touched[l.0] = false;
+        }
+        self.touched_list.clear();
+        for &j in &self.dirty_list {
+            self.dirty[j.0] = false;
+        }
+        self.dirty_list.clear();
+    }
+
+    fn touch(&mut self, l: LinkId) {
+        if !self.touched[l.0] {
+            self.touched[l.0] = true;
+            self.touched_list.push(l);
+        }
+    }
+
+    fn mark_dirty(&mut self, job: JobId) {
+        if self.dirty.len() <= job.0 {
+            self.dirty.resize(job.0 + 1, false);
+        }
+        if !self.dirty[job.0] {
+            self.dirty[job.0] = true;
+            self.dirty_list.push(job);
+        }
+    }
+
+    /// A job was admitted with `placement`: it joins the member lists of
+    /// its crossed links, those links are touched, and the job itself is
+    /// dirty (no cached rate yet — co-located rings cross nothing but
+    /// still need their first rate).
+    pub fn on_admit(&mut self, topo: &Topology, job: JobId, placement: &JobPlacement) {
+        self.mark_dirty(job);
+        // split borrows: members/touched are disjoint fields
+        let members = &mut self.members;
+        let touched = &mut self.touched;
+        let touched_list = &mut self.touched_list;
+        topo.for_each_crossed(placement, |l| {
+            members[l.0].push(job);
+            if !touched[l.0] {
+                touched[l.0] = true;
+                touched_list.push(l);
+            }
+        });
+    }
+
+    /// A job departed (completion): its crossed links are touched so
+    /// surviving members re-rate; its own member entries are purged when
+    /// those links drain (the leaver fails the drain's `is_active`
+    /// filter).
+    pub fn on_complete(&mut self, topo: &Topology, placement: &JobPlacement) {
+        let touched = &mut self.touched;
+        let touched_list = &mut self.touched_list;
+        topo.for_each_crossed(placement, |l| {
+            if !touched[l.0] {
+                touched[l.0] = true;
+                touched_list.push(l);
+            }
+        });
+    }
+
+    /// An *active* job atomically re-placed from `old` to `new`
+    /// (preemption/migration). Unlike a completion, the job stays active,
+    /// so the lazy activity-filtered purge would never drop its stale
+    /// memberships on the old links — they are removed eagerly here, then
+    /// the new placement is recorded via [`on_admit`](Self::on_admit)
+    /// (which also marks the migrant itself dirty for its post-move
+    /// re-rate).
+    pub fn on_migrate(
+        &mut self,
+        topo: &Topology,
+        job: JobId,
+        old: &JobPlacement,
+        new: &JobPlacement,
+    ) {
+        let members = &mut self.members;
+        let touched = &mut self.touched;
+        let touched_list = &mut self.touched_list;
+        topo.for_each_crossed(old, |l| {
+            if let Some(pos) = members[l.0].iter().position(|&j| j == job) {
+                members[l.0].swap_remove(pos);
+            }
+            if !touched[l.0] {
+                touched[l.0] = true;
+                touched_list.push(l);
+            }
+        });
+        self.on_admit(topo, job, new);
+    }
+
+    /// Fold touched links into dirty jobs, then call `recompute` once per
+    /// dirty job that `is_active` — clearing both sets for the next event
+    /// period. `O(touched links × members + dirty)`.
+    pub fn drain(
+        &mut self,
+        mut is_active: impl FnMut(JobId) -> bool,
+        mut recompute: impl FnMut(JobId),
+    ) {
+        for i in 0..self.touched_list.len() {
+            let l = self.touched_list[i];
+            // purge departed members exactly when their links are touched
+            self.members[l.0].retain(|&j| is_active(j));
+            for k in 0..self.members[l.0].len() {
+                let j = self.members[l.0][k];
+                self.mark_dirty(j);
+            }
+            self.touched[l.0] = false;
+        }
+        self.touched_list.clear();
+        let mut dirty_list = std::mem::take(&mut self.dirty_list);
+        for &j in &dirty_list {
+            self.dirty[j.0] = false;
+            if is_active(j) {
+                recompute(j);
+            }
+        }
+        dirty_list.clear();
+        self.dirty_list = dirty_list; // keep the capacity
+    }
+
+    /// Number of links with a pending (undrained) count change.
+    pub fn touched_len(&self) -> usize {
+        self.touched_list.len()
+    }
+
+    /// Number of jobs currently marked dirty (undrained).
+    pub fn dirty_len(&self) -> usize {
+        self.dirty_list.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ServerId};
+
+    fn mk(c: &Cluster, pairs: &[(usize, usize)]) -> JobPlacement {
+        JobPlacement::new(pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect())
+    }
+
+    #[test]
+    fn admit_marks_newcomer_and_link_sharers_dirty() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        let pl0 = mk(&c, &[(0, 0), (1, 0)]);
+        let pl1 = mk(&c, &[(0, 1), (2, 0)]); // shares server 0's uplink
+        ds.on_admit(topo, JobId(0), &pl0);
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(seen, vec![JobId(0)]);
+        // second admit shares link 0 with job 0: both become dirty
+        ds.on_admit(topo, JobId(1), &pl1);
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        seen.sort();
+        assert_eq!(seen, vec![JobId(0), JobId(1)]);
+        // nothing touched → nothing dirty
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        assert!(seen.is_empty());
+    }
+
+    #[test]
+    fn disjoint_jobs_do_not_invalidate_each_other() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        ds.on_admit(topo, JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        ds.drain(|_| true, |_| {});
+        // a link-disjoint admit must dirty only itself
+        ds.on_admit(topo, JobId(1), &mk(&c, &[(2, 0), (3, 0)]));
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(seen, vec![JobId(1)], "job 0 shares no link with job 1");
+    }
+
+    #[test]
+    fn complete_purges_the_leaver_and_dirties_survivors() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        let pl0 = mk(&c, &[(0, 0), (1, 0)]);
+        let pl1 = mk(&c, &[(0, 1), (2, 0)]);
+        ds.on_admit(topo, JobId(0), &pl0);
+        ds.on_admit(topo, JobId(1), &pl1);
+        ds.drain(|_| true, |_| {});
+        // job 1 leaves: job 0 (sharing server 0's uplink) must re-rate,
+        // and the departed job must not be handed back
+        ds.on_complete(topo, &pl1);
+        let mut seen = Vec::new();
+        ds.drain(|j| j == JobId(0), |j| seen.push(j));
+        assert_eq!(seen, vec![JobId(0)]);
+        // the leaver's membership is purged: re-touching link 0 via a new
+        // admit only dirties live members
+        ds.on_admit(topo, JobId(2), &mk(&c, &[(0, 2), (1, 1)]));
+        let mut seen = Vec::new();
+        ds.drain(|j| j != JobId(1), |j| seen.push(j));
+        seen.sort();
+        assert_eq!(seen, vec![JobId(0), JobId(2)]);
+    }
+
+    #[test]
+    fn colocated_jobs_touch_nothing_but_rate_once() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        ds.on_admit(topo, JobId(0), &mk(&c, &[(0, 0), (0, 1)]));
+        assert_eq!(ds.touched_len(), 0, "co-located ring crosses no link");
+        assert_eq!(ds.dirty_len(), 1, "but still needs its first rate");
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(seen, vec![JobId(0)]);
+    }
+
+    #[test]
+    fn migrate_purges_stale_memberships_eagerly() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        let old_pl = mk(&c, &[(0, 0), (1, 0)]);
+        let new_pl = mk(&c, &[(2, 0), (3, 0)]);
+        ds.on_admit(topo, JobId(0), &old_pl);
+        ds.on_admit(topo, JobId(1), &mk(&c, &[(0, 1), (1, 1)])); // shares old links
+        ds.drain(|_| true, |_| {});
+        // job 0 moves off servers 0/1 entirely; both it and the old-link
+        // sharer must re-rate
+        ds.on_migrate(topo, JobId(0), &old_pl, &new_pl);
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        seen.sort();
+        assert_eq!(seen, vec![JobId(0), JobId(1)]);
+        // the stale old-link membership is gone: touching server 0's
+        // uplink again must NOT dirty the (still active) migrant
+        ds.on_admit(topo, JobId(2), &mk(&c, &[(0, 2), (1, 2)]));
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        seen.sort();
+        assert_eq!(seen, vec![JobId(1), JobId(2)], "migrant no longer crosses those links");
+    }
+
+    #[test]
+    fn reset_clears_without_leaking_members() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        ds.on_admit(topo, JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        ds.reset();
+        assert_eq!((ds.touched_len(), ds.dirty_len()), (0, 0));
+        // stale membership must not resurface after reset
+        ds.on_admit(topo, JobId(1), &mk(&c, &[(0, 1), (1, 1)]));
+        let mut seen = Vec::new();
+        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(seen, vec![JobId(1)]);
+    }
+}

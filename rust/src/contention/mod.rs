@@ -20,9 +20,11 @@
 //! [`Bottleneck`](crate::topology::Bottleneck) link. The flat 1-tier
 //! fabric reproduces the paper's per-server-uplink model bit for bit.
 
+mod dirty;
 mod params;
 mod snapshot;
 
+pub use dirty::DirtySet;
 pub use params::ContentionParams;
 pub use snapshot::ContentionSnapshot;
 

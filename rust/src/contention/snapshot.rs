@@ -23,32 +23,73 @@ use crate::topology::Bottleneck;
 pub struct ContentionSnapshot {
     /// `bn[job.0]`: `Some(bottleneck)` for active jobs, `None` otherwise.
     bn: Vec<Option<Bottleneck>>,
+    /// `link_jobs[ℓ] = Σ_{j'} 1{ring j' crosses ℓ}` — retained across
+    /// [`rebuild_iter`](Self::rebuild_iter) calls so report/metrics paths
+    /// that rebuild per event reuse the buffer instead of reallocating.
+    link_jobs: Vec<usize>,
     /// Largest active-ring count on any single link.
     max_p: usize,
 }
 
 impl ContentionSnapshot {
+    /// An empty snapshot sized for `cluster`'s fabric — the reusable
+    /// scratch form: call [`rebuild_iter`](Self::rebuild_iter) per event
+    /// and no per-event allocation survives warm-up.
+    pub fn empty(cluster: &Cluster) -> Self {
+        ContentionSnapshot {
+            bn: Vec::new(),
+            link_jobs: vec![0; cluster.topology().num_links()],
+            max_p: 0,
+        }
+    }
+
     /// Build the snapshot from all active placements in this slot.
     pub fn build(cluster: &Cluster, active: &[(JobId, JobPlacement)]) -> Self {
-        Self::build_ref(cluster, &active.iter().map(|(j, p)| (*j, p)).collect::<Vec<_>>())
+        Self::build_iter(cluster, active.iter().map(|(j, p)| (*j, p)))
     }
 
     /// Same as [`build`](Self::build) but borrowing placements — the form
     /// the simulator hot loop uses to avoid cloning placements every slot.
     pub fn build_ref(cluster: &Cluster, active: &[(JobId, &JobPlacement)]) -> Self {
+        Self::build_iter(cluster, active.iter().copied())
+    }
+
+    /// Borrowed-iterator entry point: build without collecting the active
+    /// set into a temporary `Vec` first (the tracker's `full_rebuild` and
+    /// other report paths pass their iterators straight through). The
+    /// iterator must be `Clone` — the build is two-pass (counts, then
+    /// bottlenecks).
+    pub fn build_iter<'p>(
+        cluster: &Cluster,
+        active: impl Iterator<Item = (JobId, &'p JobPlacement)> + Clone,
+    ) -> Self {
+        let mut snap = Self::empty(cluster);
+        snap.rebuild_iter(cluster, active);
+        snap
+    }
+
+    /// Rebuild in place, reusing the `bn` table and per-link count buffer
+    /// — equivalent to [`build_iter`](Self::build_iter) output for output.
+    pub fn rebuild_iter<'p>(
+        &mut self,
+        cluster: &Cluster,
+        active: impl Iterator<Item = (JobId, &'p JobPlacement)> + Clone,
+    ) {
         let topo = cluster.topology();
-        // link_jobs[ℓ] = Σ_{j'} 1{ring j' crosses ℓ}
-        let mut link_jobs = vec![0usize; topo.num_links()];
-        for (_, pl) in active {
+        self.link_jobs.clear();
+        self.link_jobs.resize(topo.num_links(), 0);
+        let link_jobs = &mut self.link_jobs;
+        let mut max_id = 0usize;
+        for (j, pl) in active.clone() {
             topo.for_each_crossed(pl, |l| link_jobs[l.0] += 1);
+            max_id = max_id.max(j.0 + 1);
         }
-        let max_id = active.iter().map(|(j, _)| j.0).max().map_or(0, |m| m + 1);
-        let mut bn = vec![None; max_id];
+        self.bn.clear();
+        self.bn.resize(max_id, None);
         for (j, pl) in active {
-            bn[j.0] = Some(topo.bottleneck(pl, &link_jobs));
+            self.bn[j.0] = Some(topo.bottleneck(pl, &self.link_jobs));
         }
-        let max_p = link_jobs.iter().copied().max().unwrap_or(0);
-        ContentionSnapshot { bn, max_p }
+        self.max_p = self.link_jobs.iter().copied().max().unwrap_or(0);
     }
 
     /// `p_j[t]` for job `j`; 0 for co-located jobs, ≥ 1 for spread jobs
@@ -146,6 +187,34 @@ mod tests {
         for (j, _) in &active {
             assert_eq!(snap.bottleneck(*j).oversub, 1.0);
         }
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_matches_a_fresh_build() {
+        let c = Cluster::uniform(4, 8, 1.0, 25.0);
+        let mk = |pairs: &[(usize, usize)]| {
+            JobPlacement::new(
+                pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect(),
+            )
+        };
+        let set_a = vec![
+            (JobId(0), mk(&[(0, 0), (1, 0)])),
+            (JobId(1), mk(&[(0, 1), (2, 0)])),
+            (JobId(5), mk(&[(2, 1), (3, 1)])),
+        ];
+        let set_b = vec![(JobId(2), mk(&[(1, 1), (3, 0)]))];
+        let mut snap = ContentionSnapshot::empty(&c);
+        for set in [&set_a, &set_b, &set_a] {
+            snap.rebuild_iter(&c, set.iter().map(|(j, p)| (*j, p)));
+            let fresh = ContentionSnapshot::build(&c, set);
+            assert_eq!(snap.max_contention(), fresh.max_contention());
+            for id in 0..8 {
+                assert_eq!(snap.try_bottleneck(JobId(id)), fresh.try_bottleneck(JobId(id)), "job {id}");
+            }
+        }
+        // shrinking rebuilds must not leak stale jobs from the wider set
+        snap.rebuild_iter(&c, set_b.iter().map(|(j, p)| (*j, p)));
+        assert_eq!(snap.try_p_j(JobId(5)), None, "job 5 left with set_a");
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! Every experiment follows the paper's §7 settings by default; a `scale`
 //! knob shrinks the trace for quick runs while preserving the job-type
 //! mix. Acceptance is *shape*, not absolute numbers — see EXPERIMENTS.md.
+//!
+//! §Perf: every sweep fans its independent (policy, κ, λ, servers,
+//! oversubscription, gap, scale) points across cores via
+//! [`util::par::par_try_map`](crate::util::par) — deterministic row
+//! ordering by construction (results land in input order), worker count
+//! from `RARSCHED_THREADS` or the machine's parallelism.
 
 pub mod ablations;
 pub mod online;
@@ -111,7 +117,8 @@ pub fn run_policy(
 }
 
 /// **Fig. 4** — makespan + average JCT across SJF-BCO / FF / LS / RAND
-/// (plus the GADGET comparator). Paper shape: SJF-BCO wins on both.
+/// (plus the GADGET comparator), one core per policy. Paper shape:
+/// SJF-BCO wins on both.
 pub fn fig4(setup: &ExperimentSetup) -> Result<FigureReport> {
     let cluster = setup.cluster();
     let jobs = setup.jobs();
@@ -120,32 +127,37 @@ pub fn fig4(setup: &ExperimentSetup) -> Result<FigureReport> {
         format!("Fig. 4 — makespan by policy (seed {}, {} jobs)", setup.seed, jobs.len()),
         "policy",
     );
-    for policy in Policy::ALL {
-        let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
-        report.push_summary(&s);
+    let summaries = crate::util::par::par_try_map(Policy::ALL.to_vec(), |policy| {
+        run_policy(policy, &cluster, &jobs, &params, setup.horizon)
+    })?;
+    for s in &summaries {
+        report.push_summary(s);
     }
     Ok(report)
 }
 
-/// **Fig. 5** — makespan vs κ for SJF-BCO (T = 1200). Paper shape: drop →
-/// rise → slight drop (two turning points).
+/// **Fig. 5** — makespan vs κ for SJF-BCO (T = 1200), one core per κ.
+/// Paper shape: drop → rise → slight drop (two turning points).
 pub fn fig5(setup: &ExperimentSetup, kappas: &[usize]) -> Result<FigureReport> {
     let cluster = setup.cluster();
     let jobs = setup.jobs();
     let params = setup.params();
     let mut report =
         FigureReport::new(format!("Fig. 5 — impact of kappa (seed {})", setup.seed), "kappa");
-    for &kappa in kappas {
+    let rows = crate::util::par::par_try_map(kappas.to_vec(), |kappa| {
         let cfg = SjfBcoConfig { kappa: Some(kappa), lambda: 1.0 };
         let plan = sched::sjf_bco(&cluster, &jobs, &params, setup.horizon, cfg)?;
-        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        Ok(Simulator::new(&cluster, &jobs, &params).run(&plan))
+    })?;
+    for (kappa, outcome) in kappas.iter().zip(&rows) {
         report.push(kappa.to_string(), outcome.makespan, outcome.avg_jct);
     }
     Ok(report)
 }
 
 /// **Fig. 6** — makespan vs number of servers for FF / LS / SJF-BCO
-/// (T = 1500). Paper shape: all decrease with more servers; FF steepest.
+/// (T = 1500), one core per (policy, size) point. Paper shape: all
+/// decrease with more servers; FF steepest.
 pub fn fig6(setup: &ExperimentSetup, server_counts: &[usize]) -> Result<FigureReport> {
     let jobs = setup.jobs();
     let params = setup.params();
@@ -153,29 +165,36 @@ pub fn fig6(setup: &ExperimentSetup, server_counts: &[usize]) -> Result<FigureRe
         format!("Fig. 6 — makespan vs #servers (seed {})", setup.seed),
         "policy/servers",
     );
-    for policy in [Policy::FirstFit, Policy::ListScheduling, Policy::SjfBco] {
-        for &n in server_counts {
-            let mut cluster = Cluster::random(n, setup.seed);
-            cluster.inter_bw = setup.inter_bw;
-            let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
-            report.push(format!("{}/{}", policy.name(), n), s.makespan, s.avg_jct);
-        }
+    let points: Vec<(Policy, usize)> = [Policy::FirstFit, Policy::ListScheduling, Policy::SjfBco]
+        .into_iter()
+        .flat_map(|policy| server_counts.iter().map(move |&n| (policy, n)))
+        .collect();
+    let rows = crate::util::par::par_try_map(points, |(policy, n)| {
+        let mut cluster = Cluster::random(n, setup.seed);
+        cluster.inter_bw = setup.inter_bw;
+        let s = run_policy(policy, &cluster, &jobs, &params, setup.horizon)?;
+        Ok((format!("{}/{}", policy.name(), n), s))
+    })?;
+    for (label, s) in rows {
+        report.push(label, s.makespan, s.avg_jct);
     }
     Ok(report)
 }
 
-/// **Fig. 7** — makespan vs λ for SJF-BCO with κ = 1. Paper shape:
-/// monotone decrease in λ.
+/// **Fig. 7** — makespan vs λ for SJF-BCO with κ = 1, one core per λ.
+/// Paper shape: monotone decrease in λ.
 pub fn fig7(setup: &ExperimentSetup, lambdas: &[f64]) -> Result<FigureReport> {
     let cluster = setup.cluster();
     let jobs = setup.jobs();
     let params = setup.params();
     let mut report =
         FigureReport::new(format!("Fig. 7 — impact of lambda (seed {})", setup.seed), "lambda");
-    for &lambda in lambdas {
+    let rows = crate::util::par::par_try_map(lambdas.to_vec(), |lambda| {
         let cfg = SjfBcoConfig { kappa: Some(1), lambda };
         let plan = sched::sjf_bco(&cluster, &jobs, &params, setup.horizon, cfg)?;
-        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        Ok(Simulator::new(&cluster, &jobs, &params).run(&plan))
+    })?;
+    for (lambda, outcome) in lambdas.iter().zip(&rows) {
         report.push(format!("{lambda}"), outcome.makespan, outcome.avg_jct);
     }
     Ok(report)

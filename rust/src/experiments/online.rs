@@ -91,16 +91,24 @@ pub fn online_sweep(setup: &ExperimentSetup, gaps: &[f64]) -> Result<FigureRepor
     );
     // truncated runs are labelled, never silently reported as complete
     let tag = |truncated: bool| if truncated { " !trunc" } else { "" };
-    for &gap in gaps {
+    // §Perf: one core per gap point; each worker runs its clairvoyant
+    // reference plus every online policy on the same trace.
+    let rows = crate::util::par::par_try_map(gaps.to_vec(), |gap| {
         let jobs = gen.generate_online(setup.seed, gap);
         let clair = clairvoyant_run(setup, Policy::SjfBco, &jobs)?;
+        let online: Vec<_> = OnlinePolicyKind::ALL
+            .into_iter()
+            .map(|kind| (kind, online_run(setup, kind, &jobs)))
+            .collect();
+        Ok((clair, online))
+    })?;
+    for (&gap, (clair, online)) in gaps.iter().zip(&rows) {
         report.push(
             format!("CLAIR-SJF-BCO/{gap}{}", tag(clair.truncated)),
             clair.makespan,
             clair.avg_jct,
         );
-        for kind in OnlinePolicyKind::ALL {
-            let out = online_run(setup, kind, &jobs);
+        for (kind, out) in online {
             report.push(
                 format!("{}/{gap}{}", kind.name(), tag(out.truncated)),
                 out.makespan,
@@ -244,38 +252,46 @@ pub fn overload_sweep(
             },
         ),
     ];
-    for &scale in scales {
+    // §Perf: one core per (scale, control) point — the trace is
+    // regenerated per point (deterministic from the seed), so the nine
+    // heavyweight overload runs of a typical sweep fan out fully.
+    let points: Vec<(f64, usize)> = scales
+        .iter()
+        .flat_map(|&scale| (0..configs.len()).map(move |c| (scale, c)))
+        .collect();
+    let rows = crate::util::par::par_map(points, |(scale, c)| {
+        let (name, options) = configs[c];
         let mut sweep_setup = setup.clone();
         sweep_setup.scale = scale;
         let jobs = generator(&sweep_setup).generate_online(setup.seed, gap);
         let offered = jobs.len();
-        for &(name, options) in configs.iter() {
-            let out =
-                online_run_full(&sweep_setup, OnlinePolicyKind::SjfBco, &jobs, options);
-            let o = &out.outcome;
-            // horizon-clamped rows are labelled loudly, same rule as
-            // online_comparison — a clamped baseline UNDERSTATES the
-            // unbounded-delay growth this sweep exists to demonstrate
-            let label = if o.truncated {
-                format!("{name}/{scale} (TRUNCATED)")
-            } else {
-                format!("{name}/{scale}")
-            };
-            table.push(
-                label,
-                vec![
-                    offered as f64,
-                    o.makespan as f64,
-                    o.wait_percentile(95.0) as f64,
-                    o.wait_percentile_where(95.0, |r| r.workers == 1) as f64,
-                    o.wait_percentile_where(95.0, |r| r.workers > 1) as f64,
-                    out.max_pending as f64,
-                    out.rejection_rate(offered),
-                    out.migration_count() as f64,
-                    o.service_utilization(num_gpus),
-                ],
-            );
-        }
+        let out = online_run_full(&sweep_setup, OnlinePolicyKind::SjfBco, &jobs, options);
+        let o = &out.outcome;
+        // horizon-clamped rows are labelled loudly, same rule as
+        // online_comparison — a clamped baseline UNDERSTATES the
+        // unbounded-delay growth this sweep exists to demonstrate
+        let label = if o.truncated {
+            format!("{name}/{scale} (TRUNCATED)")
+        } else {
+            format!("{name}/{scale}")
+        };
+        (
+            label,
+            vec![
+                offered as f64,
+                o.makespan as f64,
+                o.wait_percentile(95.0) as f64,
+                o.wait_percentile_where(95.0, |r| r.workers == 1) as f64,
+                o.wait_percentile_where(95.0, |r| r.workers > 1) as f64,
+                out.max_pending as f64,
+                out.rejection_rate(offered),
+                out.migration_count() as f64,
+                o.service_utilization(num_gpus),
+            ],
+        )
+    });
+    for (label, values) in rows {
+        table.push(label, values);
     }
     Ok(table)
 }

@@ -60,7 +60,10 @@ pub fn topology_sweep(
     let flat = Simulator::new(&flat_cluster, &jobs, &params).run(&flat_plan);
     report.push("flat", flat.makespan, flat.avg_jct);
 
-    for &oversub in oversubs {
+    // §Perf: each oversubscription point (replay + replan pair) is
+    // independent given the shared flat plan — fan across cores, rows
+    // land in sweep order.
+    let rows = crate::util::par::par_try_map(oversubs.to_vec(), |oversub| {
         let racked = flat_cluster
             .clone()
             .with_topology(Topology::racks(flat_cluster.num_servers(), servers_per_rack, oversub));
@@ -68,7 +71,6 @@ pub fn topology_sweep(
         // Same placements, oversubscribed fabric: isolates the contention
         // effect of the rack tier.
         let replay = Simulator::new(&racked, &jobs, &params).run(&flat_plan);
-        report.push(format!("replay/{oversub}"), replay.makespan, replay.avg_jct);
 
         // Topology-aware re-plan on the same trace. The feasibility
         // horizon is relaxed in proportion to the oversubscription — a
@@ -77,6 +79,10 @@ pub fn topology_sweep(
         let horizon = setup.horizon.saturating_mul((oversub.ceil() as u64).max(1));
         let plan = sched::schedule(Policy::SjfBco, &racked, &jobs, &params, horizon)?;
         let replan = Simulator::new(&racked, &jobs, &params).run(&plan);
+        Ok((replay, replan))
+    })?;
+    for (&oversub, (replay, replan)) in oversubs.iter().zip(&rows) {
+        report.push(format!("replay/{oversub}"), replay.makespan, replay.avg_jct);
         report.push(format!("replan/{oversub}"), replan.makespan, replan.avg_jct);
     }
     Ok(report)

@@ -45,7 +45,15 @@
 //! * [`online::ContentionTracker`] — Eq. 6 per-link counts maintained
 //!   incrementally in `O(path)` per admit/complete (debug builds
 //!   cross-check against a full [`contention::ContentionSnapshot`]
-//!   rebuild; `benches/online_hot_path.rs` measures the gap);
+//!   rebuild; `benches/online_hot_path.rs` measures the gap). Since the
+//!   incremental-simulation unification the *batch* engine runs on the
+//!   same tracker: [`sim::Simulator`] carries one across event periods
+//!   and re-rates only the jobs a link-keyed
+//!   [`contention::DirtySet`] invalidates, the planners score candidate
+//!   plans through [`sim::PlanScorer`] (scratch reused per candidate),
+//!   and the experiment sweeps fan points across cores
+//!   ([`util::par`]) — `benches/sim_engine.rs` records the engine
+//!   baseline in `BENCH_sim_engine.json`;
 //! * queueing metrics — [`sim::SimOutcome`] reports mean/p95 wait and
 //!   time-averaged service utilization, surfaced by the `online` CLI
 //!   subcommand and `experiments::online`'s clairvoyant-vs-online rows.

@@ -64,6 +64,7 @@ mod tests {
                 migrations: 0,
             }],
             slots_simulated: 100,
+            periods: 1,
             truncated: false,
         };
         let s = PolicySummary::from_outcome("FF", 90.0, &out);

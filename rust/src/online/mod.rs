@@ -51,7 +51,7 @@ pub use tracker::ContentionTracker;
 use crate::cluster::{Cluster, ClusterState, GpuId, JobPlacement};
 use crate::contention::ContentionParams;
 use crate::jobs::{JobId, JobSpec};
-use crate::sched::fa_ffp_select;
+use crate::sched::fa_ffp_select_warm;
 use crate::sim::kernel::{self, RatePoint};
 use crate::sim::{JobRecord, SimOutcome};
 use crate::topology::Bottleneck;
@@ -74,6 +74,13 @@ pub struct OnlineOptions {
     pub admission: AdmissionControl,
     /// Completion-event preemption/migration of running jobs.
     pub migration: MigrationControl,
+    /// Dirty-set rate caching (§Perf, on by default): re-rate only the
+    /// running jobs whose bottleneck-link counts changed since the last
+    /// event, per the link-keyed invalidation rule of
+    /// [`DirtySet`](crate::contention::DirtySet). `false` restores the
+    /// recompute-every-job reference path — bit-identical by property
+    /// test (`tests/sim_engine_equivalence.rs`), kept for cross-checking.
+    pub rate_cache: bool,
 }
 
 impl Default for OnlineOptions {
@@ -83,6 +90,7 @@ impl Default for OnlineOptions {
             fractional_progress: false,
             admission: AdmissionControl::default(),
             migration: MigrationControl::default(),
+            rate_cache: true,
         }
     }
 }
@@ -149,6 +157,10 @@ struct Running<'a> {
     freeze_until: u64,
     /// Times this job was preempted/re-placed.
     migrations: usize,
+    /// Cached operating point — refreshed by the dirty-set drain (cache
+    /// mode) or every period (reference mode). Never read while the job
+    /// is frozen: steps 4/5 branch on `freeze_until` first.
+    rate: RatePoint,
 }
 
 /// Event-driven non-clairvoyant scheduler over one cluster + job stream.
@@ -172,6 +184,17 @@ impl<'a> OnlineScheduler<'a> {
         self
     }
 
+    /// Currently-occupied GPU count per server (`capacity − free`), O(S)
+    /// from the maintained free counts — the warm tally
+    /// [`fa_ffp_select_warm`] takes (the loop-internal twin of
+    /// [`ClusterView::occupied_per_server`]).
+    fn occupied_per_server(&self, state: &ClusterState) -> Vec<usize> {
+        self.cluster
+            .server_ids()
+            .map(|s| self.cluster.capacity(s) - state.free_on(s))
+            .collect()
+    }
+
     /// Speculative θ-admission projection for one arrival: place the gang
     /// with the same FA-FFP selection the dispatch policies use — over
     /// the free GPUs when a gang fits now, else over all GPUs (the
@@ -187,9 +210,9 @@ impl<'a> OnlineScheduler<'a> {
         gpus: usize,
     ) -> Option<Bottleneck> {
         let load = |g: GpuId| busy_history[g.global];
-        let warm = |g: GpuId| !state.is_free(g);
-        let sel = fa_ffp_select(self.cluster, gpus, |g| state.is_free(g), load, warm)
-            .or_else(|| fa_ffp_select(self.cluster, gpus, |_| true, load, warm));
+        let occ = self.occupied_per_server(state);
+        let sel = fa_ffp_select_warm(self.cluster, gpus, |g| state.is_free(g), load, &occ)
+            .or_else(|| fa_ffp_select_warm(self.cluster, gpus, |_| true, load, &occ));
         sel.map(|g| tracker.whatif_bottleneck(&JobPlacement::new(g)))
     }
 
@@ -281,12 +304,13 @@ impl<'a> OnlineScheduler<'a> {
             }
         }
         // (3) cluster-wide fallback
-        fa_ffp_select(
+        let occ = self.occupied_per_server(state);
+        fa_ffp_select_warm(
             self.cluster,
             gpus,
             |g| state.is_free(g),
             |g| busy_history[g.global],
-            |g| !state.is_free(g),
+            &occ,
         )
         .map(JobPlacement::new)
     }
@@ -303,6 +327,13 @@ impl<'a> OnlineScheduler<'a> {
 
         let mut state = ClusterState::new(self.cluster);
         let mut tracker = ContentionTracker::new(self.cluster);
+        let topo = self.cluster.topology();
+        // Link-keyed dirty set (§Perf): admissions/completions/migrations
+        // touch the churned job's crossed links; only jobs sharing a
+        // touched link are re-rated at the next period.
+        let mut dirty = crate::contention::DirtySet::new(topo.num_links());
+        let mut running_idx: Vec<usize> =
+            vec![usize::MAX; self.jobs.iter().map(|j| j.id.0 + 1).max().unwrap_or(0)];
         let mut pending = PendingQueue::new();
         let mut events = EventLog::default();
         let mut busy_history = vec![0.0f64; self.cluster.num_gpus()];
@@ -312,9 +343,11 @@ impl<'a> OnlineScheduler<'a> {
         let mut migrations: Vec<MigrationRecord> = Vec::new();
         let mut max_pending = 0usize;
         let mut busy_gpu_slots: u64 = 0;
+        let mut periods: u64 = 0;
         let mut next_arrival = 0usize;
         let mut t: u64 = 0;
         let admission_active = self.options.admission.is_active();
+        let rate_cache = self.options.rate_cache;
 
         loop {
             // 1) Reveal arrivals due by now. With admission control armed,
@@ -381,6 +414,10 @@ impl<'a> OnlineScheduler<'a> {
                 );
                 state.allocate(job, &placement);
                 tracker.admit(job, &placement);
+                if rate_cache {
+                    dirty.on_admit(topo, job, &placement);
+                    running_idx[job.0] = running.len();
+                }
                 events.push(t, job, EventKind::Start);
                 running.push(Running {
                     job,
@@ -393,6 +430,7 @@ impl<'a> OnlineScheduler<'a> {
                     max_p: 0,
                     freeze_until: 0,
                     migrations: 0,
+                    rate: RatePoint::IDLE,
                 });
             }
 
@@ -414,37 +452,52 @@ impl<'a> OnlineScheduler<'a> {
 
             // 3) Constant-rate period: the bottleneck link from the
             //    incremental tracker, τ/φ from the shared simulation
-            //    kernel. A frozen (restarting) job's rate is never read
-            //    this period — steps 4/5 branch on the freeze first — so
-            //    its O(span) evaluation is skipped entirely.
-            let rates: Vec<RatePoint> = running
-                .iter()
-                .map(|r| {
-                    if t < r.freeze_until {
-                        RatePoint { p: 0, tau: 0.0, inc: 0.0 }
-                    } else {
-                        kernel::rate_point(
+            //    kernel. Cache mode re-rates only the jobs the dirty set
+            //    invalidated; reference mode re-rates everyone. A frozen
+            //    (restarting) job's cached rate is never read this period
+            //    — steps 4/5 branch on the freeze first.
+            if rate_cache {
+                dirty.drain(
+                    |j| running_idx.get(j.0).map_or(false, |&i| i != usize::MAX),
+                    |j| {
+                        let r = &mut running[running_idx[j.0]];
+                        r.rate = kernel::rate_point(
                             self.params,
                             self.cluster,
                             r.spec,
                             &r.placement,
-                            tracker.bottleneck(r.job),
+                            tracker.bottleneck(j),
                             self.options.fractional_progress,
-                        )
+                        );
+                    },
+                );
+            } else {
+                for r in running.iter_mut() {
+                    if t < r.freeze_until {
+                        continue; // never read while frozen; re-rated at thaw
                     }
-                })
-                .collect();
+                    r.rate = kernel::rate_point(
+                        self.params,
+                        self.cluster,
+                        r.spec,
+                        &r.placement,
+                        tracker.bottleneck(r.job),
+                        self.options.fractional_progress,
+                    );
+                }
+            }
+            periods += 1;
 
             // 4) Jump to the next event: completion, thaw of a restarting
             //    (migrated) job, arrival or horizon. A period never spans
             //    a thaw boundary, so "frozen" is constant within it.
             let mut dt = u64::MAX;
-            for (r, rate) in running.iter().zip(&rates) {
+            for r in running.iter() {
                 if t < r.freeze_until {
                     dt = dt.min(r.freeze_until - t); // re-rate at thaw
                 } else {
                     let remaining = r.spec.iterations as f64 - r.progress;
-                    dt = dt.min(kernel::slots_until_done(remaining, rate.inc));
+                    dt = dt.min(kernel::slots_until_done(remaining, r.rate.inc));
                 }
             }
             if let Some(spec) = order.get(next_arrival) {
@@ -457,12 +510,12 @@ impl<'a> OnlineScheduler<'a> {
             //    checkpoint-restart window holds its GPUs (they stay busy
             //    for utilization accounting) but makes no progress and
             //    accrues no τ statistics.
-            for (r, rate) in running.iter_mut().zip(&rates) {
+            for r in running.iter_mut() {
                 if t >= r.freeze_until {
-                    r.progress += rate.inc * dt as f64;
-                    r.tau_sum += rate.tau * dt as f64;
+                    r.progress += r.rate.inc * dt as f64;
+                    r.tau_sum += r.rate.tau * dt as f64;
                     r.tau_slots += dt;
-                    r.max_p = r.max_p.max(rate.p);
+                    r.max_p = r.max_p.max(r.rate.p);
                 }
                 busy_gpu_slots += r.placement.num_workers() as u64 * dt;
                 for g in r.placement.gpus() {
@@ -479,6 +532,13 @@ impl<'a> OnlineScheduler<'a> {
                     let r = running.swap_remove(i);
                     state.release(r.job, &r.placement);
                     let _ = tracker.complete(r.job);
+                    if rate_cache {
+                        dirty.on_complete(topo, &r.placement);
+                        running_idx[r.job.0] = usize::MAX;
+                        if i < running.len() {
+                            running_idx[running[i].job.0] = i;
+                        }
+                    }
                     events.push(t, r.job, EventKind::Completion);
                     completed_any = true;
                     records.push(JobRecord {
@@ -575,10 +635,17 @@ impl<'a> OnlineScheduler<'a> {
                     ) {
                         continue;
                     }
-                    // commit: occupancy, tracker counts, event, freeze
+                    // commit: occupancy, tracker counts, event, freeze.
+                    // For the dirty set a migration is a departure from
+                    // the old links plus an admission on the new ones —
+                    // the migrant re-rates via the admit half, old
+                    // link-sharers via the touched old links.
                     state.release(job, &running[idx].placement);
                     state.allocate(job, &candidate);
                     tracker.migrate(job, &candidate);
+                    if rate_cache {
+                        dirty.on_migrate(topo, job, &running[idx].placement, &candidate);
+                    }
                     events.push(t, job, EventKind::Migrated);
                     migrations.push(MigrationRecord {
                         job,
@@ -633,6 +700,7 @@ impl<'a> OnlineScheduler<'a> {
                 gpu_utilization,
                 records,
                 slots_simulated: t,
+                periods,
                 truncated,
             },
             events,

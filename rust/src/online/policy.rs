@@ -9,7 +9,7 @@
 
 use crate::cluster::{Cluster, ClusterState, GpuId, JobPlacement};
 use crate::jobs::{JobId, JobSpec};
-use crate::sched::{fa_ffp_select, lbsgf_select};
+use crate::sched::{fa_ffp_select_warm, lbsgf_select};
 use crate::Result;
 
 /// One waiting job as a policy sees it.
@@ -55,6 +55,17 @@ impl<'a> ClusterView<'a> {
     /// Cumulative busy slots of one GPU.
     pub fn busy_history(&self, g: GpuId) -> f64 {
         self.busy_history[g.global]
+    }
+
+    /// Currently-occupied GPU count per server (`capacity − free`),
+    /// assembled in O(S) from the maintained free counts — the warm
+    /// tally [`fa_ffp_select_warm`](crate::sched::fa_ffp_select_warm)
+    /// takes, replacing the per-GPU occupancy recount per dispatch.
+    pub fn occupied_per_server(&self) -> Vec<usize> {
+        self.cluster
+            .server_ids()
+            .map(|s| self.cluster.capacity(s) - self.state.free_on(s))
+            .collect()
     }
 }
 
@@ -222,15 +233,17 @@ impl OnlinePolicy for OnlineSjfBco {
         let load = |g: GpuId| view.busy_history(g);
         // "warm" must be *current* occupancy, not cumulative history —
         // history marks every server warm once each GPU has run anything.
-        let warm = |g: GpuId| !view.is_free(g);
+        // The per-server tally comes straight from the maintained free
+        // counts (O(S)), not a per-GPU recount.
+        let occ = view.occupied_per_server();
         let gpus = if q.spec.gpus <= self.kappa {
-            fa_ffp_select(view.cluster, q.spec.gpus, free, load, warm)
+            fa_ffp_select_warm(view.cluster, q.spec.gpus, free, load, &occ)
         } else {
             // LBSGF restricts to the least-loaded servers by *capacity*;
             // under live occupancy those may not hold enough free GPUs,
             // so fall back to cluster-wide FA-FFP rather than stall.
             lbsgf_select(view.cluster, q.spec.gpus, self.lambda, free, load)
-                .or_else(|| fa_ffp_select(view.cluster, q.spec.gpus, free, load, warm))
+                .or_else(|| fa_ffp_select_warm(view.cluster, q.spec.gpus, free, load, &occ))
         }?;
         Some((q.spec.id, JobPlacement::new(gpus)))
     }

@@ -1,15 +1,34 @@
-//! Incremental contention tracking for the online event loop.
+//! Incremental contention tracking — the **single contention engine**
+//! shared by the whole stack.
 //!
-//! The offline simulator rebuilds a [`ContentionSnapshot`] from scratch at
-//! every event — `O(Σ_j span_j)` over *all* active jobs, plus an
-//! allocation for the dense `p_j` table. That is fine for replaying one
-//! plan, but the online scheduler fields a continuous arrival stream
-//! where most events touch a single job. This tracker maintains the
-//! per-link active-ring counts of the generalized Eq. 6 *incrementally*:
-//! admitting or completing a job costs `O(path)` — the job's crossed
-//! links, `O(span_j)` for a fixed number of fabric tiers — and
-//! `p_j` / bottleneck queries read the maintained counts directly with no
-//! rebuild and no allocation.
+//! A from-scratch [`ContentionSnapshot`] rebuild costs `O(Σ_j span_j)`
+//! over *all* active jobs per event, plus an allocation for the dense
+//! `p_j` table. This tracker maintains the per-link active-ring counts of
+//! the generalized Eq. 6 *incrementally* instead: admitting or completing
+//! a job costs `O(path)` — the job's crossed links, `O(span_j)` for a
+//! fixed number of fabric tiers — and `p_j` / bottleneck queries read the
+//! maintained counts directly with no rebuild and no allocation.
+//!
+//! Since the incremental-simulation unification, every consumer runs on
+//! one tracker:
+//!
+//! * the **online event loop** ([`crate::online::OnlineScheduler`]) — its
+//!   original home: one tracker lives for the whole run, admissions and
+//!   completions apply `O(path)` deltas;
+//! * the **batch replay engine** ([`crate::sim::Simulator`], default
+//!   [`ContentionMode::TrackerDirtySet`](crate::sim::ContentionMode)) —
+//!   the same persistent-tracker discipline, paired with a
+//!   [`DirtySet`](crate::contention::DirtySet) that re-rates only the
+//!   jobs whose bottleneck-link counts actually changed (the snapshot
+//!   rebuild survives as the cross-checked reference mode);
+//! * the **planners** — SJF-BCO's κ-bisection and the baseline θ
+//!   bisections score every candidate plan through
+//!   [`PlanScorer`](crate::sim::PlanScorer), which replays candidates on
+//!   the tracker engine with scratch reused across candidates, and the
+//!   θ-admission / migration controls probe placements speculatively via
+//!   [`whatif_bottleneck`](ContentionTracker::whatif_bottleneck) /
+//!   [`whatif_rebottleneck`](ContentionTracker::whatif_rebottleneck)
+//!   (zero mutation, zero allocation).
 //!
 //! In debug builds every mutation cross-checks the incremental counts
 //! against a full from-scratch rebuild (the invariant the
@@ -44,6 +63,15 @@ impl ContentionTracker {
     /// Number of currently active jobs.
     pub fn num_active(&self) -> usize {
         self.num_active
+    }
+
+    /// Clear every count and active placement (start of a fresh run)
+    /// without deallocating — the batch engine reuses one tracker across
+    /// candidate-plan replays.
+    pub fn reset(&mut self) {
+        self.link_jobs.iter_mut().for_each(|c| *c = 0);
+        self.active.clear();
+        self.num_active = 0;
     }
 
     /// Admit one job: `O(path)` count updates along its crossed links.
@@ -186,7 +214,7 @@ impl ContentionTracker {
     }
 
     /// Active (job, placement) pairs in job-id order.
-    pub fn active_jobs(&self) -> impl Iterator<Item = (JobId, &JobPlacement)> {
+    pub fn active_jobs(&self) -> impl Iterator<Item = (JobId, &JobPlacement)> + Clone {
         self.active
             .iter()
             .enumerate()
@@ -195,10 +223,10 @@ impl ContentionTracker {
 
     /// Full from-scratch [`ContentionSnapshot`] over the active set — the
     /// `O(jobs × span)` baseline the tracker replaces (kept for the debug
-    /// cross-check, property tests and the hot-path bench).
+    /// cross-check, property tests and the hot-path bench). Streams the
+    /// active set straight into the build — no intermediate refs `Vec`.
     pub fn full_rebuild(&self, cluster: &Cluster) -> ContentionSnapshot {
-        let refs: Vec<(JobId, &JobPlacement)> = self.active_jobs().collect();
-        ContentionSnapshot::build_ref(cluster, &refs)
+        ContentionSnapshot::build_iter(cluster, self.active_jobs())
     }
 
     /// Debug invariant: incremental counts equal a full recount.
@@ -424,6 +452,23 @@ mod tests {
             assert_eq!(tr.bottleneck(j), snap.bottleneck(j), "{j}");
         }
         assert!(tr.migrate(JobId(9), &new_pl).is_none(), "inactive: no-op");
+    }
+
+    #[test]
+    fn reset_clears_counts_and_allows_reuse() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (2, 0)]));
+        tr.reset();
+        assert_eq!(tr.num_active(), 0);
+        assert_eq!(tr.max_contention(), 0);
+        assert_eq!(tr.try_p_j(JobId(0)), None);
+        // fresh run on the reused tracker behaves like a new one
+        tr.admit(JobId(0), &mk(&c, &[(1, 1), (2, 1)]));
+        assert_eq!(tr.p_j(JobId(0)), 1);
+        let snap = tr.full_rebuild(&c);
+        assert_eq!(snap.p_j(JobId(0)), 1);
     }
 
     #[test]

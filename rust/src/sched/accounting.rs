@@ -18,12 +18,21 @@ use crate::cluster::{Cluster, GpuId};
 pub struct GpuLedger {
     busy: Vec<f64>,
     free_at: Vec<f64>,
+    /// Per-server count of GPUs with `U > 0` — the FA-FFP "warm server"
+    /// tie-break key, maintained incrementally on commit so the
+    /// per-candidate placement path reads it in O(1) per server instead
+    /// of recounting every GPU per job per κ.
+    warm: Vec<usize>,
 }
 
 impl GpuLedger {
     pub fn new(cluster: &Cluster) -> Self {
         let n = cluster.num_gpus();
-        GpuLedger { busy: vec![0.0; n], free_at: vec![0.0; n] }
+        GpuLedger {
+            busy: vec![0.0; n],
+            free_at: vec![0.0; n],
+            warm: vec![0; cluster.num_servers()],
+        }
     }
 
     /// `U_s^g` for a GPU.
@@ -51,9 +60,16 @@ impl GpuLedger {
 
     /// Number of GPUs on a server that have ever been assigned work —
     /// used as the fragmentation-awareness tie-break (prefer already-warm
-    /// servers when packing small jobs).
-    pub fn server_occupancy(&self, cluster: &Cluster, s: crate::cluster::ServerId) -> usize {
-        cluster.gpus_of(s).filter(|g| self.busy[g.global] > 0.0).count()
+    /// servers when packing small jobs). O(1) from the maintained tally.
+    pub fn server_occupancy(&self, _cluster: &Cluster, s: crate::cluster::ServerId) -> usize {
+        self.warm[s.0]
+    }
+
+    /// The full per-server warm-GPU tally (`warm[s] = #{g on s : U > 0}`)
+    /// — handed to [`fa_ffp_select_warm`](super::fa_ffp_select_warm) so
+    /// the planner's per-candidate path skips the per-GPU recount.
+    pub fn warm_per_server(&self) -> &[usize] {
+        &self.warm
     }
 
     /// Commit a gang to a set of GPUs: the job starts at
@@ -63,6 +79,9 @@ impl GpuLedger {
         let start = gpus.iter().map(|g| self.free_at[g.global]).fold(0.0, f64::max);
         let finish = start + rho_over_u;
         for g in gpus {
+            if self.busy[g.global] == 0.0 && rho_over_u > 0.0 {
+                self.warm[g.server.0] += 1; // cold → warm transition
+            }
             self.busy[g.global] += rho_over_u;
             self.free_at[g.global] = finish;
         }
@@ -130,6 +149,26 @@ mod tests {
         assert!((led.server_load(&c, ServerId(0)) - 2.0).abs() < 1e-12);
         assert_eq!(led.server_load(&c, ServerId(1)), 0.0);
         assert_eq!(led.server_occupancy(&c, ServerId(0)), 1);
+    }
+
+    #[test]
+    fn warm_tally_tracks_cold_to_warm_transitions_only() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut led = GpuLedger::new(&c);
+        assert_eq!(led.warm_per_server(), &[0, 0]);
+        let g00 = c.global_gpu(ServerId(0), 0);
+        let g01 = c.global_gpu(ServerId(0), 1);
+        let g10 = c.global_gpu(ServerId(1), 0);
+        led.commit(&[g00, g10], 3.0);
+        assert_eq!(led.warm_per_server(), &[1, 1]);
+        // re-committing an already-warm GPU must not double count
+        led.commit(&[g00, g01], 2.0);
+        assert_eq!(led.warm_per_server(), &[2, 1]);
+        // the tally agrees with the per-GPU recount definition
+        for s in c.server_ids() {
+            let recount = c.gpus_of(s).filter(|g| led.busy(*g) > 0.0).count();
+            assert_eq!(led.server_occupancy(&c, s), recount, "{s:?}");
+        }
     }
 
     #[test]

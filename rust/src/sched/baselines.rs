@@ -64,9 +64,10 @@ fn bisect(
         return Ok(Plan::new(name, Vec::new()));
     }
     let est = Estimator::new(cluster, params);
-    let evaluate = |plan: &Plan| -> f64 {
-        crate::sim::Simulator::new(cluster, jobs, params).run(plan).makespan as f64
-    };
+    // §Perf: one PlanScorer for the whole θ bisection — candidates replay
+    // on the tracker + dirty-set engine with scratch reused per candidate
+    // (same unification as SJF-BCO's κ sweep).
+    let mut scorer = crate::sim::PlanScorer::new(cluster, jobs, params);
     let (mut left, mut right) = (1u64, horizon);
     let mut best: Option<(f64, Plan)> = None;
     while left <= right {
@@ -75,7 +76,7 @@ fn bisect(
             Some((_ledger_makespan, entries)) => {
                 let mut plan = Plan::new(name, entries);
                 plan.theta = Some(theta as f64);
-                let makespan = evaluate(&plan);
+                let makespan = scorer.makespan(&plan) as f64;
                 if makespan < horizon as f64 {
                     // ties update: prefer the tightest feasible θ
                     if best.as_ref().map_or(true, |(m, _)| makespan <= *m) {

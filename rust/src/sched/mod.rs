@@ -12,7 +12,10 @@ pub use accounting::GpuLedger;
 pub use baselines::{first_fit, gadget_locality, list_scheduling, random_policy};
 pub use estimator::{Estimator, RhoEstimate};
 pub use plan::{Plan, PlannedJob};
-pub use sjf_bco::{fa_ffp_select, lbsgf_select, sjf_bco, SjfBcoConfig};
+pub use sjf_bco::{
+    fa_ffp_select, fa_ffp_select_warm, lbsgf_select, lbsgf_select_ctx, sjf_bco, PlacementCtx,
+    SjfBcoConfig,
+};
 
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;

@@ -90,10 +90,14 @@ pub fn sjf_bco(
     // the analytical model (Eq. 6–9) — the paper's Fig. 3 framework:
     // "search a schedule, then τ_j[t] can be efficiently evaluated to
     // estimate the makespan" — rather than by the placement-blind ρ̂
-    // ledger estimate alone.
-    let evaluate = |plan: &Plan| -> f64 {
-        crate::sim::Simulator::new(cluster, jobs, params).run(plan).makespan as f64
-    };
+    // ledger estimate alone. §Perf: one [`PlanScorer`] serves the whole
+    // (θ × κ) search — every candidate replays on the persistent
+    // tracker + dirty-set engine with its scratch buffers reused, instead
+    // of a fresh snapshot-rebuilding simulator per candidate; the
+    // loop-invariant placement context (per-rack capacities) is likewise
+    // hoisted out of the per-job, per-candidate path.
+    let mut scorer = crate::sim::PlanScorer::new(cluster, jobs, params);
+    let ctx = PlacementCtx::new(cluster);
     let (mut left, mut right) = (1u64, horizon);
     let mut best: Option<(f64, Plan)> = None; // (evaluated makespan, plan)
     while left <= right {
@@ -102,12 +106,12 @@ pub fn sjf_bco(
         let mut best_for_theta: Option<(f64, Plan)> = None;
         for &kappa in &kappas {
             if let Some((_ledger_makespan, entries)) =
-                try_schedule(cluster, &sorted, &est, theta as f64, kappa, config.lambda)
+                try_schedule(cluster, &ctx, &sorted, &est, theta as f64, kappa, config.lambda)
             {
                 let mut plan = Plan::new("sjf-bco", entries);
                 plan.theta = Some(theta as f64);
                 plan.kappa = Some(kappa);
-                let makespan = evaluate(&plan);
+                let makespan = scorer.makespan(&plan) as f64;
                 let better = best_for_theta.as_ref().map_or(true, |(m, _)| makespan < *m);
                 if better {
                     best_for_theta = Some((makespan, plan));
@@ -144,6 +148,7 @@ pub fn sjf_bco(
 /// be placed under the θ limit (Alg. 1 Lines 14–15).
 fn try_schedule(
     cluster: &Cluster,
+    ctx: &PlacementCtx,
     sorted: &[JobSpec],
     est: &Estimator<'_>,
     theta: f64,
@@ -158,7 +163,7 @@ fn try_schedule(
         let gpus = if job.gpus <= kappa {
             fa_ffp(cluster, &ledger, job, rho.rho_lower, theta)
         } else {
-            lbsgf(cluster, &ledger, job, rho.rho_lower, theta, lambda)
+            lbsgf(cluster, ctx, &ledger, job, rho.rho_lower, theta, lambda)
         }?;
         let (start, finish) = ledger.commit(&gpus, rho.rho_lower);
         makespan = makespan.max(finish);
@@ -196,15 +201,34 @@ pub fn fa_ffp_select(
     busy: impl Fn(GpuId) -> f64,
     warm: impl Fn(GpuId) -> bool,
 ) -> Option<Vec<GpuId>> {
-    let mut candidates: Vec<GpuId> = cluster.all_gpus().filter(|g| eligible(*g)).collect();
-    if candidates.len() < gpus_needed {
-        return None; // Alg. 2 Lines 8–10: no capacity under θ
-    }
-    // occupancy per server (computed once per call)
+    // occupancy per server from the per-GPU predicate; callers that
+    // already maintain the tally (ledger, online occupancy) use
+    // [`fa_ffp_select_warm`] and skip this O(N) recount
     let occ: Vec<usize> = cluster
         .server_ids()
         .map(|s| cluster.gpus_of(s).filter(|g| warm(*g)).count())
         .collect();
+    fa_ffp_select_warm(cluster, gpus_needed, eligible, busy, &occ)
+}
+
+/// [`fa_ffp_select`] with the per-server warm tally precomputed:
+/// `warm_per_server[s]` = number of warm GPUs on server `s`. The batch
+/// ledger ([`GpuLedger::warm_per_server`]) and the online loop (occupied
+/// = capacity − free, O(S) from maintained counts) both keep this tally
+/// incrementally, hoisting the recount out of the per-candidate path.
+pub fn fa_ffp_select_warm(
+    cluster: &Cluster,
+    gpus_needed: usize,
+    eligible: impl Fn(GpuId) -> bool,
+    busy: impl Fn(GpuId) -> f64,
+    warm_per_server: &[usize],
+) -> Option<Vec<GpuId>> {
+    debug_assert_eq!(warm_per_server.len(), cluster.num_servers());
+    let occ = warm_per_server;
+    let mut candidates: Vec<GpuId> = cluster.all_gpus().filter(|g| eligible(*g)).collect();
+    if candidates.len() < gpus_needed {
+        return None; // Alg. 2 Lines 8–10: no capacity under θ
+    }
     // warm occupancy per rack — only when a rack tier exists (on a flat
     // fabric every server is its own rack and the tie-break is redundant)
     let topo = cluster.topology();
@@ -238,7 +262,8 @@ pub fn fa_ffp_select(
 }
 
 /// Ledger-eligibility wrapper of [`fa_ffp_select`] used by Algorithm 1:
-/// eligible = GPUs with `U + ρ̂/u ≤ θ`, load key = `U_s^g`.
+/// eligible = GPUs with `U + ρ̂/u ≤ θ`, load key = `U_s^g`, warm tally
+/// read straight from the ledger's incremental per-server counts.
 pub(crate) fn fa_ffp(
     cluster: &Cluster,
     ledger: &GpuLedger,
@@ -246,12 +271,12 @@ pub(crate) fn fa_ffp(
     rho_over_u: f64,
     theta: f64,
 ) -> Option<Vec<GpuId>> {
-    fa_ffp_select(
+    fa_ffp_select_warm(
         cluster,
         job.gpus,
         |g| ledger.eligible(g, rho_over_u, theta),
         |g| ledger.busy(g),
-        |g| ledger.busy(g) > 0.0,
+        ledger.warm_per_server(),
     )
 }
 
@@ -276,10 +301,24 @@ pub fn lbsgf_select(
     eligible: impl Fn(GpuId) -> bool,
     busy: impl Fn(GpuId) -> f64,
 ) -> Option<Vec<GpuId>> {
+    lbsgf_select_ctx(cluster, &PlacementCtx::new(cluster), gpus_needed, lambda, eligible, busy)
+}
+
+/// [`lbsgf_select`] with the loop-invariant [`PlacementCtx`] precomputed
+/// — the form the planner's bisection uses so per-rack capacities are
+/// tallied once per `sjf_bco` call, not per job per κ per θ.
+pub fn lbsgf_select_ctx(
+    cluster: &Cluster,
+    ctx: &PlacementCtx,
+    gpus_needed: usize,
+    lambda: f64,
+    eligible: impl Fn(GpuId) -> bool,
+    busy: impl Fn(GpuId) -> f64,
+) -> Option<Vec<GpuId>> {
     let need = (lambda * gpus_needed as f64).ceil() as usize;
     let topo = cluster.topology();
     if topo.has_racks() {
-        if let Some(rack) = least_loaded_covering_rack(cluster, need, &busy) {
+        if let Some(rack) = least_loaded_covering_rack(cluster, ctx, need, &busy) {
             if let Some(sel) =
                 lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, Some(rack))
             {
@@ -290,29 +329,57 @@ pub fn lbsgf_select(
     lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, None)
 }
 
+/// Loop-invariant placement context: cluster-shape tallies (per-rack GPU
+/// capacities) that every candidate placement of a planner run shares.
+/// Computed once per planner invocation and threaded through the
+/// per-candidate path, which previously re-derived them per job per κ.
+#[derive(Debug, Clone)]
+pub struct PlacementCtx {
+    /// `rack_cap[r]` = Σ capacities of rack `r`'s servers; empty on a
+    /// flat fabric (no rack pool restriction applies there).
+    rack_cap: Vec<usize>,
+}
+
+impl PlacementCtx {
+    pub fn new(cluster: &Cluster) -> Self {
+        let topo = cluster.topology();
+        let mut rack_cap = vec![0usize; topo.num_racks()];
+        if topo.has_racks() {
+            for s in cluster.server_ids() {
+                rack_cap[topo.rack_index(s)] += cluster.capacity(s);
+            }
+        }
+        PlacementCtx { rack_cap }
+    }
+
+    /// Total GPU capacity of one rack.
+    pub fn rack_capacity(&self, rack: usize) -> usize {
+        self.rack_cap[rack]
+    }
+}
+
 /// The least-loaded rack whose total GPU capacity covers `need`, if any
 /// (load = mean per-GPU busy time over the rack; ties by rack id).
-/// Single `O(S + R)` pass — this sits on the per-job placement path of
-/// the planner's bisection loop.
+/// Single `O(S + R)` pass over hoisted capacities — this sits on the
+/// per-job placement path of the planner's bisection loop.
 fn least_loaded_covering_rack(
     cluster: &Cluster,
+    ctx: &PlacementCtx,
     need: usize,
     busy: &impl Fn(GpuId) -> f64,
 ) -> Option<usize> {
     let topo = cluster.topology();
-    let mut cap = vec![0usize; topo.num_racks()];
     let mut load = vec![0.0f64; topo.num_racks()];
     for s in cluster.server_ids() {
-        let r = topo.rack_index(s);
-        cap[r] += cluster.capacity(s);
-        load[r] += cluster.gpus_of(s).map(busy).sum::<f64>();
+        load[topo.rack_index(s)] += cluster.gpus_of(s).map(busy).sum::<f64>();
     }
     let mut best: Option<(f64, usize)> = None;
     for rack in 0..topo.num_racks() {
-        if cap[rack] < need {
+        let cap = ctx.rack_cap[rack];
+        if cap < need {
             continue;
         }
-        let avg = load[rack] / cap[rack] as f64;
+        let avg = load[rack] / cap as f64;
         if best.map_or(true, |(b, _)| avg < b) {
             best = Some((avg, rack));
         }
@@ -374,17 +441,19 @@ fn lbsgf_pool(
     Some(candidates[..gpus_needed].to_vec())
 }
 
-/// Ledger-eligibility wrapper of [`lbsgf_select`] used by Algorithm 1.
+/// Ledger-eligibility wrapper of [`lbsgf_select_ctx`] used by Algorithm 1.
 pub(crate) fn lbsgf(
     cluster: &Cluster,
+    ctx: &PlacementCtx,
     ledger: &GpuLedger,
     job: &JobSpec,
     rho_over_u: f64,
     theta: f64,
     lambda: f64,
 ) -> Option<Vec<GpuId>> {
-    lbsgf_select(
+    lbsgf_select_ctx(
         cluster,
+        ctx,
         job.gpus,
         lambda,
         |g| ledger.eligible(g, rho_over_u, theta),
@@ -503,7 +572,8 @@ mod tests {
         let job = JobSpec::synthetic(crate::jobs::JobId(0), 8);
         let rho = est.rho(&job);
         // λ = 1: 8 GPUs fit on one 8-GPU server → span 1
-        let gpus = lbsgf(&c, &ledger, &job, rho.rho_lower, 1e9, 1.0).unwrap();
+        let gpus =
+            lbsgf(&c, &PlacementCtx::new(&c), &ledger, &job, rho.rho_lower, 1e9, 1.0).unwrap();
         let placement = JobPlacement::new(gpus);
         assert_eq!(placement.span(), 1);
     }

@@ -1,12 +1,59 @@
 //! The time-slotted simulation engine.
+//!
+//! # Single-tracker architecture (§Perf)
+//!
+//! Since the incremental-simulation unification the engine runs on the
+//! same [`ContentionTracker`] as the online event loop: **one tracker is
+//! carried across every event period** of a run, admissions and
+//! completions apply `O(path)` per-link count deltas, and no
+//! `ContentionSnapshot` is rebuilt on the hot path. Cached
+//! [`RatePoint`]s are invalidated by a link-keyed
+//! [`DirtySet`](crate::contention::DirtySet):
+//!
+//! * an admit/complete changes the ring count of exactly the links the
+//!   churned job crosses (the *touched* set);
+//! * a job's bottleneck — `max count × oversub` over its crossed links —
+//!   can only change when one of *its* crossed links is touched, so only
+//!   jobs whose crossed-link set intersects the touched set are re-rated;
+//!   every other cached rate is provably still exact.
+//!
+//! All engine buffers (the tracker's counts, the dirty-set's reverse
+//! index, the active table) live in a [`SimScratch`] that
+//! [`run_with`](Simulator::run_with) reuses across runs — the planners'
+//! candidate-scoring loop ([`PlanScorer`](super::PlanScorer)) replays
+//! hundreds of candidate plans without reallocating.
+//!
+//! The pre-unification engine — a full snapshot rebuild (`O(Σ span)` +
+//! allocations) every period — is retained as
+//! [`ContentionMode::SnapshotRebuild`] and the slot-by-slot loop as
+//! `event_driven: false`; `tests/sim_engine_equivalence.rs` proves all
+//! three modes produce bit-identical [`SimOutcome`]s, and
+//! `benches/sim_engine.rs` records the throughput gap in
+//! `BENCH_sim_engine.json`.
 
 use super::kernel::{self, RatePoint};
 use super::{JobRecord, SimOutcome};
 use crate::cluster::{Cluster, ClusterState, JobPlacement};
-use crate::contention::{ContentionParams, ContentionSnapshot};
+use crate::contention::{ContentionParams, ContentionSnapshot, DirtySet};
 use crate::jobs::{JobId, JobSpec};
+use crate::online::ContentionTracker;
 use crate::sched::Plan;
 use std::collections::HashMap;
+
+/// How the engine evaluates per-period contention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContentionMode {
+    /// Reference path: rebuild a [`ContentionSnapshot`] every event
+    /// period — `O(Σ_j span_j)` per period (buffer-reusing since the
+    /// unification, but still a full recount). Kept for cross-checking
+    /// and the engine bench.
+    SnapshotRebuild,
+    /// Persistent [`ContentionTracker`] + link-keyed dirty set: `O(path)`
+    /// deltas per event, rates recomputed only for jobs whose bottleneck
+    /// link counts actually changed. Bit-identical to the reference
+    /// (property-tested); the default.
+    TrackerDirtySet,
+}
 
 /// Engine options.
 #[derive(Debug, Clone, Copy)]
@@ -24,11 +71,53 @@ pub struct SimOptions {
     /// reference (asserted by `fast_path_matches_reference`); disable only
     /// for cross-checking.
     pub event_driven: bool,
+    /// Contention evaluation strategy (see [`ContentionMode`]).
+    pub contention: ContentionMode,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { max_slots: 1_000_000, fractional_progress: false, event_driven: true }
+        SimOptions {
+            max_slots: 1_000_000,
+            fractional_progress: false,
+            event_driven: true,
+            contention: ContentionMode::TrackerDirtySet,
+        }
+    }
+}
+
+/// Reusable engine state: the persistent tracker, the dirty-set reverse
+/// index, the retained snapshot (reference mode) and the job → active-slot
+/// index. Create once per (cluster, workload) and pass to
+/// [`Simulator::run_with`] to score many plans without reallocating —
+/// see [`PlanScorer`](super::PlanScorer).
+#[derive(Debug, Clone)]
+pub struct SimScratch {
+    tracker: ContentionTracker,
+    dirty: DirtySet,
+    snapshot: ContentionSnapshot,
+    /// `active_idx[job.0]` = index into the live `active` table, or
+    /// `usize::MAX` when the job is not running.
+    active_idx: Vec<usize>,
+}
+
+impl SimScratch {
+    pub fn new(cluster: &Cluster) -> Self {
+        SimScratch {
+            tracker: ContentionTracker::new(cluster),
+            dirty: DirtySet::new(cluster.topology().num_links()),
+            snapshot: ContentionSnapshot::empty(cluster),
+            active_idx: Vec::new(),
+        }
+    }
+
+    /// Clear for a fresh run (buffers retained); `max_job_id` bounds the
+    /// dense job-id space of the plan about to be replayed.
+    fn reset(&mut self, max_job_id: usize) {
+        self.tracker.reset();
+        self.dirty.reset();
+        self.active_idx.clear();
+        self.active_idx.resize(max_job_id, usize::MAX);
     }
 }
 
@@ -49,6 +138,10 @@ struct ActiveJob<'a, 'p> {
     tau_sum: f64,
     tau_slots: u64,
     max_p: usize,
+    /// Cached operating point for the current period — recomputed only
+    /// when the dirty-set invalidates it (tracker mode) or every period
+    /// (snapshot mode).
+    rate: RatePoint,
 }
 
 impl<'a> Simulator<'a> {
@@ -69,91 +162,177 @@ impl<'a> Simulator<'a> {
     /// Run the plan to completion (or the safety horizon) and report the
     /// realized makespan / JCTs under live contention.
     pub fn run<'p>(&self, plan: &'p Plan) -> SimOutcome {
-        let mut state = ClusterState::new(self.cluster);
-        let mut pending: std::collections::VecDeque<usize> = (0..plan.entries.len()).collect();
-        let mut active: Vec<ActiveJob<'a, 'p>> = Vec::new();
-        // Borrow placements from the plan; they must outlive active jobs.
+        let mut scratch = SimScratch::new(self.cluster);
+        self.run_with(&mut scratch, plan)
+    }
+
+    /// [`run`](Self::run) with caller-owned [`SimScratch`]: every engine
+    /// buffer is reused across calls, so replaying many candidate plans
+    /// (the planners' bisection loops) allocates only the output records.
+    pub fn run_with<'p>(&self, scratch: &mut SimScratch, plan: &'p Plan) -> SimOutcome {
+        let use_tracker = self.options.contention == ContentionMode::TrackerDirtySet;
         let entries = &plan.entries;
+        let topo = self.cluster.topology();
+        let max_id = entries.iter().map(|e| e.job.0 + 1).max().unwrap_or(0);
+        scratch.reset(max_id);
+        let SimScratch { tracker, dirty, snapshot, active_idx } = scratch;
+
+        let mut state = ClusterState::new(self.cluster);
+        // Two-stage dispatch queue (§Perf — the old single `VecDeque` was
+        // rescanned in full, future arrivals included, with an O(queue)
+        // `remove` per admission):
+        //
+        // * `by_arrival` — all entries in (arrival, dispatch) order with a
+        //   cursor; not-yet-arrived jobs are never scanned, and the
+        //   next-future-arrival query is O(1) amortized;
+        // * `pending`   — arrived-but-waiting entries in dispatch order,
+        //   merged on arrival and compacted in place on admission, so one
+        //   event period admits in O(admitted + blocked).
+        let mut by_arrival: Vec<usize> = (0..entries.len()).collect();
+        by_arrival.sort_by_key(|&i| (self.specs[&entries[i].job].arrival, i));
+        let mut arr_cursor = 0usize;
+        let mut pending: Vec<usize> = Vec::new();
+        let mut newly: Vec<usize> = Vec::new();
+        let mut merge_buf: Vec<usize> = Vec::new();
+        let next_arrival = |cursor: usize| -> Option<u64> {
+            by_arrival.get(cursor).map(|&i| self.specs[&entries[i].job].arrival)
+        };
+
+        let mut active: Vec<ActiveJob<'a, 'p>> = Vec::new();
         let mut records: Vec<JobRecord> = Vec::with_capacity(entries.len());
         let mut busy_gpu_slots: u64 = 0;
+        let mut periods: u64 = 0;
         let mut t: u64 = 0;
 
-        while (!pending.is_empty() || !active.is_empty()) && t < self.options.max_slots {
-            // 1) Admission: walk the queue in dispatch order; start every
-            //    job whose gang of GPUs is entirely free. Earlier entries
-            //    win contested GPUs (we allocate as we scan).
-            let mut admitted_any = true;
-            while admitted_any {
-                admitted_any = false;
-                let mut i = 0;
-                while i < pending.len() {
-                    let idx = pending[i];
-                    let e = &entries[idx];
-                    let placement: &JobPlacement = &e.placement;
-                    // online extension: a job cannot start before arrival
-                    if self.specs[&e.job].arrival > t {
-                        i += 1;
-                        continue;
-                    }
-                    if placement.gpus().iter().all(|g| state.is_free(*g)) {
-                        state.allocate(e.job, placement);
-                        let spec = self.specs[&e.job];
-                        active.push(ActiveJob {
-                            job: e.job,
-                            spec,
-                            placement: &entries[idx].placement,
-                            start: t,
-                            progress: 0.0,
-                            tau_sum: 0.0,
-                            tau_slots: 0,
-                            max_p: 0,
-                        });
-                        pending.remove(i);
-                        admitted_any = true;
-                    } else {
-                        i += 1;
-                    }
+        while (!pending.is_empty() || arr_cursor < by_arrival.len() || !active.is_empty())
+            && t < self.options.max_slots
+        {
+            // 1a) Reveal arrivals due by now into the dispatch queue,
+            //     preserving dispatch (plan) order: a newly arrived entry
+            //     with an earlier plan position outranks already-waiting
+            //     later ones, exactly like the old full rescan.
+            while arr_cursor < by_arrival.len() {
+                let idx = by_arrival[arr_cursor];
+                if self.specs[&entries[idx].job].arrival > t {
+                    break;
                 }
+                newly.push(idx);
+                arr_cursor += 1;
+            }
+            if !newly.is_empty() {
+                newly.sort_unstable(); // (arrival, idx) order → idx order
+                if pending.is_empty() {
+                    std::mem::swap(&mut pending, &mut newly);
+                } else {
+                    // merge two idx-sorted runs
+                    merge_buf.clear();
+                    let (mut a, mut b) = (0usize, 0usize);
+                    while a < pending.len() && b < newly.len() {
+                        if pending[a] < newly[b] {
+                            merge_buf.push(pending[a]);
+                            a += 1;
+                        } else {
+                            merge_buf.push(newly[b]);
+                            b += 1;
+                        }
+                    }
+                    merge_buf.extend_from_slice(&pending[a..]);
+                    merge_buf.extend_from_slice(&newly[b..]);
+                    std::mem::swap(&mut pending, &mut merge_buf);
+                }
+                newly.clear();
             }
 
+            // 1b) Admission: walk the arrived queue in dispatch order;
+            //     start every job whose gang of GPUs is entirely free.
+            //     Earlier entries win contested GPUs (we allocate as we
+            //     scan), and one pass suffices — admissions only *take*
+            //     GPUs, so a rescan could never admit more. Blocked jobs
+            //     are compacted in place.
+            let mut kept = 0usize;
+            for i in 0..pending.len() {
+                let idx = pending[i];
+                let e = &entries[idx];
+                let placement: &'p JobPlacement = &e.placement;
+                // free-gang fast check (per-server free counts, O(span))
+                // before the exact per-GPU scan (O(G_j))
+                let fits = placement
+                    .servers()
+                    .all(|s| state.free_on(s) >= placement.gpus_on(s))
+                    && placement.gpus().iter().all(|g| state.is_free(*g));
+                if !fits {
+                    pending[kept] = idx;
+                    kept += 1;
+                    continue;
+                }
+                state.allocate(e.job, placement);
+                if use_tracker {
+                    tracker.admit(e.job, placement);
+                    dirty.on_admit(topo, e.job, placement);
+                    active_idx[e.job.0] = active.len();
+                }
+                active.push(ActiveJob {
+                    job: e.job,
+                    spec: self.specs[&e.job],
+                    placement,
+                    start: t,
+                    progress: 0.0,
+                    tau_sum: 0.0,
+                    tau_slots: 0,
+                    max_p: 0,
+                    rate: RatePoint::IDLE,
+                });
+            }
+            pending.truncate(kept);
+
             if active.is_empty() {
-                // nothing runnable yet (all pending jobs have future
+                // nothing runnable yet (all remaining jobs have future
                 // arrivals); advance to the next arrival.
                 if self.options.event_driven {
-                    let next_arrival = pending
-                        .iter()
-                        .map(|&idx| self.specs[&entries[idx].job].arrival)
-                        .filter(|&a| a > t)
-                        .min();
-                    t = next_arrival.unwrap_or(t + 1).min(self.options.max_slots);
+                    t = next_arrival(arr_cursor).unwrap_or(t + 1).min(self.options.max_slots);
                 } else {
                     t += 1;
                 }
                 continue;
             }
 
-            // 2) Contention snapshot (generalized Eq. 6 over the active
-            //    set, per fabric link) — constant until the next admission
-            //    or completion event.
-            let refs: Vec<(JobId, &JobPlacement)> =
-                active.iter().map(|a| (a.job, a.placement)).collect();
-            let snap = ContentionSnapshot::build_ref(self.cluster, &refs);
-
-            // Per-job rates for this period (shared kernel arithmetic),
-            // each taken at the job's bottleneck link.
-            let rates: Vec<RatePoint> = active
-                .iter()
-                .map(|a| {
-                    kernel::rate_point(
+            // 2) Per-job rates for this period (shared kernel arithmetic),
+            //    each taken at the job's bottleneck link — constant until
+            //    the next admission or completion event.
+            if use_tracker {
+                // Tracker + dirty set: only jobs whose bottleneck-link
+                // counts changed since the last period are re-rated.
+                dirty.drain(
+                    |j| active_idx.get(j.0).map_or(false, |&i| i != usize::MAX),
+                    |j| {
+                        let a = &mut active[active_idx[j.0]];
+                        a.rate = kernel::rate_point(
+                            self.params,
+                            self.cluster,
+                            a.spec,
+                            a.placement,
+                            tracker.bottleneck(j),
+                            self.options.fractional_progress,
+                        );
+                    },
+                );
+            } else {
+                // Reference: full snapshot rebuild (generalized Eq. 6 over
+                // the whole active set) and a re-rate of every job.
+                snapshot
+                    .rebuild_iter(self.cluster, active.iter().map(|a| (a.job, a.placement)));
+                for a in active.iter_mut() {
+                    a.rate = kernel::rate_point(
                         self.params,
                         self.cluster,
                         a.spec,
                         a.placement,
-                        snap.bottleneck(a.job),
+                        snapshot.bottleneck(a.job),
                         self.options.fractional_progress,
-                    )
-                })
-                .collect();
+                    );
+                }
+            }
+            periods += 1;
 
             // 3) Period length dt: 1 slot (reference mode), or jump to the
             //    next completion/arrival (event-driven fast path).
@@ -161,39 +340,44 @@ impl<'a> Simulator<'a> {
                 1
             } else {
                 let mut dt = u64::MAX;
-                for (a, r) in active.iter().zip(&rates) {
+                for a in active.iter() {
                     let remaining = a.spec.iterations as f64 - a.progress;
                     // stalled jobs yield u64::MAX, bounded below by max_slots
-                    dt = dt.min(kernel::slots_until_done(remaining, r.inc));
+                    dt = dt.min(kernel::slots_until_done(remaining, a.rate.inc));
                 }
                 // the next future arrival can unlock an admission
-                let next_arrival = pending
-                    .iter()
-                    .map(|&idx| self.specs[&entries[idx].job].arrival)
-                    .filter(|&a| a > t)
-                    .min();
-                if let Some(na) = next_arrival {
+                if let Some(na) = next_arrival(arr_cursor) {
+                    debug_assert!(na > t, "due arrivals were revealed in step 1a");
                     dt = dt.min(na - t);
                 }
                 dt.min(self.options.max_slots - t).max(1)
             };
 
             // 4) Progress every active job by dt periods of φ_j.
-            for (a, r) in active.iter_mut().zip(&rates) {
-                a.progress += r.inc * dt as f64;
-                a.tau_sum += r.tau * dt as f64;
+            for a in active.iter_mut() {
+                a.progress += a.rate.inc * dt as f64;
+                a.tau_sum += a.rate.tau * dt as f64;
                 a.tau_slots += dt;
-                a.max_p = a.max_p.max(r.p);
+                a.max_p = a.max_p.max(a.rate.p);
                 busy_gpu_slots += a.placement.num_workers() as u64 * dt;
             }
             t += dt;
 
-            // 5) Completions at the end of the period.
+            // 5) Completions at the end of the period: O(path) count
+            //    deltas, surviving link-sharers re-rated next period.
             let mut i = 0;
             while i < active.len() {
                 if active[i].progress >= active[i].spec.iterations as f64 {
                     let a = active.swap_remove(i);
                     state.release(a.job, a.placement);
+                    if use_tracker {
+                        let _ = tracker.complete(a.job);
+                        dirty.on_complete(topo, a.placement);
+                        active_idx[a.job.0] = usize::MAX;
+                        if i < active.len() {
+                            active_idx[active[i].job.0] = i;
+                        }
+                    }
                     records.push(JobRecord {
                         job: a.job,
                         arrival: a.spec.arrival,
@@ -212,7 +396,8 @@ impl<'a> Simulator<'a> {
             }
         }
 
-        let truncated = !pending.is_empty() || !active.is_empty();
+        let truncated =
+            !pending.is_empty() || arr_cursor < by_arrival.len() || !active.is_empty();
         // Record unfinished jobs (truncation) with what they achieved.
         for a in active {
             records.push(JobRecord {
@@ -247,6 +432,7 @@ impl<'a> Simulator<'a> {
             gpu_utilization,
             records,
             slots_simulated: t,
+            periods,
             truncated,
         }
     }

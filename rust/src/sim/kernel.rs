@@ -29,6 +29,13 @@ pub struct RatePoint {
     pub inc: f64,
 }
 
+impl RatePoint {
+    /// Placeholder for a job with no evaluated rate yet (a freshly
+    /// admitted job before its first dirty-set drain, or a frozen
+    /// migrant): makes no progress and accrues no τ.
+    pub const IDLE: RatePoint = RatePoint { p: 0, tau: 0.0, inc: 0.0 };
+}
+
 /// Evaluate one job's operating point given its bottleneck-link
 /// contention (use [`Bottleneck::flat`] for a scalar Eq. 6 degree).
 pub fn rate_point(

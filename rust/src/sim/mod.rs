@@ -12,9 +12,11 @@
 mod engine;
 pub mod kernel;
 mod outcome;
+mod scorer;
 
-pub use engine::{SimOptions, Simulator};
+pub use engine::{ContentionMode, SimOptions, SimScratch, Simulator};
 pub use outcome::{JobRecord, SimOutcome};
+pub use scorer::PlanScorer;
 
 #[cfg(test)]
 mod tests {
@@ -170,12 +172,26 @@ mod tests {
             )
             .unwrap();
             let fast = Simulator::new(&c, &jobs, &params).run(&plan);
+            let snap = Simulator::new(&c, &jobs, &params)
+                .with_options(SimOptions {
+                    contention: ContentionMode::SnapshotRebuild,
+                    ..SimOptions::default()
+                })
+                .run(&plan);
             let slow = Simulator::new(&c, &jobs, &params)
                 .with_options(SimOptions {
                     event_driven: false,
                     ..SimOptions::default()
                 })
                 .run(&plan);
+            // the two event-driven contention modes are fully bit-identical
+            assert_eq!(fast.makespan, snap.makespan, "case {case}");
+            assert_eq!(fast.avg_jct, snap.avg_jct, "case {case}");
+            assert_eq!(fast.periods, snap.periods, "case {case}: same period structure");
+            for (a, b) in fast.records.iter().zip(&snap.records) {
+                assert_eq!((a.job, a.start, a.finish), (b.job, b.start, b.finish));
+                assert_eq!(a.mean_tau, b.mean_tau, "case {case}: bitwise");
+            }
             assert_eq!(fast.makespan, slow.makespan, "case {case}");
             assert_eq!(fast.avg_jct, slow.avg_jct, "case {case}");
             assert_eq!(fast.records.len(), slow.records.len());

@@ -53,6 +53,10 @@ pub struct SimOutcome {
     pub records: Vec<JobRecord>,
     /// Slots actually simulated (== makespan unless truncated).
     pub slots_simulated: u64,
+    /// Constant-rate event periods evaluated (rate refresh + jump). The
+    /// engine bench derives events/sec and ns/event from this; identical
+    /// across contention modes of the same event-driven run.
+    pub periods: u64,
     /// True if the safety horizon truncated the run before all jobs done.
     pub truncated: bool,
 }
@@ -158,6 +162,7 @@ mod tests {
             gpu_utilization: 0.5,
             records: vec![rec(0, 0, 10), rec(1, 5, 20), rec(2, 10, 40)],
             slots_simulated: 40,
+            periods: 3,
             truncated: false,
         };
         assert_eq!(out.jct_percentile(0.0), 10);
@@ -186,6 +191,7 @@ mod tests {
             gpu_utilization: 0.0,
             records: vec![],
             slots_simulated: 0,
+            periods: 0,
             truncated: false,
         };
         assert_eq!(out.jct_percentile(50.0), 0);

@@ -1,0 +1,82 @@
+//! What-if candidate-plan scoring for the planners' search loops.
+//!
+//! SJF-BCO's Algorithm 1 crosses a θ bisection with a κ sweep and
+//! evaluates *every* candidate schedule through the contention model
+//! (the paper's Fig. 3 "search, then evaluate τ_j[t]" framework); the
+//! baseline policies bisect θ the same way. Pre-unification each
+//! evaluation built a fresh [`Simulator`] run that rebuilt a
+//! `ContentionSnapshot` — `O(Σ span)` plus allocations — on every event
+//! period of every candidate.
+//!
+//! [`PlanScorer`] owns one [`SimScratch`] (persistent tracker, dirty-set
+//! reverse index, active table) and replays each candidate on the
+//! tracker + dirty-set engine, so a full (θ × κ) search reuses the same
+//! buffers throughout: per candidate the only allocation left is the
+//! output record table. The per-period contention queries inside are the
+//! tracker's `O(path)` speculative bottleneck reads — the same machinery
+//! behind the online θ-admission `whatif_bottleneck` path.
+
+use super::{SimOptions, SimOutcome, SimScratch, Simulator};
+use crate::cluster::Cluster;
+use crate::contention::ContentionParams;
+use crate::jobs::JobSpec;
+use crate::sched::Plan;
+
+/// Reusable candidate-plan evaluator over one (cluster, workload, params)
+/// context.
+pub struct PlanScorer<'a> {
+    sim: Simulator<'a>,
+    scratch: SimScratch,
+}
+
+impl<'a> PlanScorer<'a> {
+    pub fn new(cluster: &'a Cluster, jobs: &'a [JobSpec], params: &'a ContentionParams) -> Self {
+        PlanScorer { sim: Simulator::new(cluster, jobs, params), scratch: SimScratch::new(cluster) }
+    }
+
+    /// Override the engine options (defaults: event-driven tracker mode).
+    pub fn with_options(mut self, options: SimOptions) -> Self {
+        self.sim = self.sim.with_options(options);
+        self
+    }
+
+    /// Realized makespan of one candidate plan under live contention.
+    pub fn makespan(&mut self, plan: &Plan) -> u64 {
+        self.sim.run_with(&mut self.scratch, plan).makespan
+    }
+
+    /// Full outcome of one candidate plan (records allocate; the engine
+    /// buffers are still reused).
+    pub fn outcome(&mut self, plan: &Plan) -> SimOutcome {
+        self.sim.run_with(&mut self.scratch, plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{schedule, Policy};
+    use crate::trace::TraceGenerator;
+
+    #[test]
+    fn repeated_scoring_matches_fresh_runs() {
+        let cluster = Cluster::uniform(4, 8, 1.0, 25.0);
+        let params = ContentionParams::paper();
+        let jobs = TraceGenerator::tiny().generate(3);
+        let plan_a = schedule(Policy::FirstFit, &cluster, &jobs, &params, 100_000).unwrap();
+        let plan_b =
+            schedule(Policy::ListScheduling, &cluster, &jobs, &params, 100_000).unwrap();
+        let mut scorer = PlanScorer::new(&cluster, &jobs, &params);
+        // interleave candidates; scratch reuse must never bleed state
+        for _ in 0..3 {
+            for plan in [&plan_a, &plan_b] {
+                let fresh = Simulator::new(&cluster, &jobs, &params).run(plan);
+                assert_eq!(scorer.makespan(plan), fresh.makespan);
+                let scored = scorer.outcome(plan);
+                assert_eq!(scored.makespan, fresh.makespan);
+                assert_eq!(scored.avg_jct, fresh.avg_jct);
+                assert_eq!(scored.records.len(), fresh.records.len());
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod json;
 pub mod logger;
+pub mod par;
 pub mod proptest_lite;
 pub mod rng;
 pub mod toml_lite;

@@ -1,0 +1,127 @@
+//! Scoped-thread parallel map for embarrassingly parallel sweeps.
+//!
+//! The figure experiments (`fig4`–`fig7`, `topology_sweep`,
+//! `overload_sweep`, `online_sweep`) evaluate independent
+//! (seed, κ, λ, oversubscription, policy) points — each point is a pure
+//! function of its inputs, so they fan out across cores with
+//! `std::thread::scope` (no dependencies; the build is offline) while
+//! the output stays **deterministic**: results land in input order by
+//! construction, regardless of worker count or interleaving.
+//!
+//! Worker count: `RARSCHED_THREADS` if set (1 forces the sequential
+//! path), else [`std::thread::available_parallelism`], always capped by
+//! the item count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker-thread count for [`par_map`]: `RARSCHED_THREADS` override, else
+/// the machine's available parallelism (min 1).
+pub fn threads() -> usize {
+    if let Ok(v) = std::env::var("RARSCHED_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item, fanning across up to [`threads`] workers.
+/// Returns results in input order (deterministic). A single worker (or a
+/// single item) degenerates to a plain sequential map with no thread
+/// spawn at all.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = threads().min(items.len());
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Index-tagged work stealing: an atomic cursor hands out items, each
+    // result is parked in its input slot — ordering is positional, never
+    // temporal.
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let done: Vec<Mutex<Option<R>>> = (0..work.len()).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let item = work[i]
+                    .lock()
+                    .expect("work slot poisoned")
+                    .take()
+                    .expect("work item handed out twice");
+                let result = f(item);
+                *done[i].lock().expect("result slot poisoned") = Some(result);
+            });
+        }
+    });
+    done.into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("worker exited without storing its result")
+        })
+        .collect()
+}
+
+/// [`par_map`] over fallible points: runs every item, then returns the
+/// first error in *input* order (deterministic error selection too).
+pub fn par_try_map<T, R, F>(items: Vec<T>, f: F) -> crate::Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> crate::Result<R> + Sync,
+{
+    par_map(items, f).into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let out = par_map((0..100).collect::<Vec<_>>(), |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let calls = AtomicUsize::new(0);
+        let out = par_map((0..57).collect::<Vec<_>>(), |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 57);
+        assert_eq!(calls.load(Ordering::Relaxed), 57);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        assert!(par_map(Vec::<u32>::new(), |i| i).is_empty());
+        assert_eq!(par_map(vec![7u32], |i| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn try_map_surfaces_the_first_error_in_input_order() {
+        let r = par_try_map((0..16).collect::<Vec<_>>(), |i| {
+            if i % 5 == 4 {
+                Err(anyhow::anyhow!("boom {i}"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(r.unwrap_err().to_string(), "boom 4");
+        let ok = par_try_map(vec![1, 2, 3], |i| crate::Result::Ok(i * 10)).unwrap();
+        assert_eq!(ok, vec![10, 20, 30]);
+    }
+}

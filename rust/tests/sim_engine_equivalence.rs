@@ -1,0 +1,196 @@
+//! Equivalence guarantees of the tracker-unified incremental simulation
+//! core: the dirty-set event-driven engine must be **bit-identical** —
+//! outcome, records, event sequences — to both the snapshot-rebuild
+//! engine and the slot-by-slot reference, on flat and rack fabrics, with
+//! and without migration, across randomized traces. The dirty-set is a
+//! pure perf optimization; any observable divergence is a bug.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::JobSpec;
+use rarsched::online::{
+    MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind, OnlineScheduler,
+};
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::{ContentionMode, PlanScorer, SimOptions, SimOutcome, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::proptest_lite::check;
+use rarsched::util::Rng;
+
+/// Bitwise comparison of everything a [`SimOutcome`] reports. `bitwise`
+/// gates the float fields: the slot-by-slot reference accumulates
+/// `τ·1 + τ·1 + …` where the event-driven engines add `τ·dt` once, so
+/// only the two event-driven modes are compared bit for bit on floats.
+fn assert_outcomes_match(a: &SimOutcome, b: &SimOutcome, bitwise: bool, ctx: &str) {
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.slots_simulated, b.slots_simulated, "{ctx}: slots");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncation");
+    assert_eq!(a.avg_jct, b.avg_jct, "{ctx}: avg JCT (exact — integer-derived)");
+    assert_eq!(a.gpu_utilization, b.gpu_utilization, "{ctx}: utilization");
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.job, y.job, "{ctx}");
+        assert_eq!(
+            (x.arrival, x.start, x.finish),
+            (y.arrival, y.start, y.finish),
+            "{ctx}: {} lifecycle",
+            x.job
+        );
+        assert_eq!((x.span, x.workers, x.max_p), (y.span, y.workers, y.max_p), "{ctx}: {}", x.job);
+        assert_eq!(x.iterations_done, y.iterations_done, "{ctx}: {}", x.job);
+        assert_eq!(x.migrations, y.migrations, "{ctx}: {}", x.job);
+        if bitwise {
+            assert_eq!(x.mean_tau, y.mean_tau, "{ctx}: {} mean_tau (bitwise)", x.job);
+        } else {
+            assert!(
+                (x.mean_tau - y.mean_tau).abs() < 1e-9,
+                "{ctx}: {} mean_tau {} vs {}",
+                x.job,
+                x.mean_tau,
+                y.mean_tau
+            );
+        }
+    }
+}
+
+fn random_fabric(rng: &mut Rng) -> Cluster {
+    let n = rng.gen_usize(4, 8);
+    let flat = Cluster::uniform(n, 8, 1.0, 25.0);
+    match rng.gen_usize(0, 2) {
+        0 => flat,
+        1 => {
+            let spr = rng.gen_usize(2, (n / 2).max(2));
+            let oversub = rng.gen_f64_range(1.0, 4.0);
+            flat.clone().with_topology(Topology::racks(n, spr, oversub))
+        }
+        _ => {
+            let spr = n; // single rack: structurally 2-tier, numerically flat
+            flat.clone().with_topology(Topology::racks(n, spr, 1.0))
+        }
+    }
+}
+
+fn random_trace(rng: &mut Rng) -> Vec<JobSpec> {
+    TraceGenerator::paper_scaled(rng.gen_f64_range(0.05, 0.15))
+        .generate_online(rng.next_u64(), rng.gen_f64_range(0.0, 8.0))
+}
+
+#[test]
+fn three_engine_modes_are_bit_identical_on_random_plans() {
+    check("tracker+dirty-set == snapshot == slot-by-slot", 10, |rng| {
+        let cluster = random_fabric(rng);
+        let params = ContentionParams::paper();
+        let jobs = random_trace(rng);
+        for policy in [Policy::SjfBco, Policy::ListScheduling, Policy::Gadget] {
+            let plan = schedule(policy, &cluster, &jobs, &params, 1_000_000).unwrap();
+            let tracker = Simulator::new(&cluster, &jobs, &params).run(&plan);
+            let snapshot = Simulator::new(&cluster, &jobs, &params)
+                .with_options(SimOptions {
+                    contention: ContentionMode::SnapshotRebuild,
+                    ..SimOptions::default()
+                })
+                .run(&plan);
+            let slots = Simulator::new(&cluster, &jobs, &params)
+                .with_options(SimOptions { event_driven: false, ..SimOptions::default() })
+                .run(&plan);
+            // event-driven modes: identical period structure, bitwise floats
+            assert_eq!(tracker.periods, snapshot.periods, "{policy}: periods");
+            assert_outcomes_match(&tracker, &snapshot, true, policy.name());
+            // slot-by-slot reference: same discrete results
+            assert_outcomes_match(&tracker, &slots, false, policy.name());
+        }
+    });
+}
+
+#[test]
+fn scorer_scratch_reuse_is_equivalent_to_fresh_engines() {
+    check("PlanScorer scratch reuse == fresh Simulator", 6, |rng| {
+        let cluster = random_fabric(rng);
+        let params = ContentionParams::paper();
+        let jobs = random_trace(rng);
+        let mut scorer = PlanScorer::new(&cluster, &jobs, &params);
+        // score several *different* plans through one scratch — stale
+        // tracker counts, dirty flags or active indices would surface as
+        // a divergence on a later plan
+        for policy in [Policy::FirstFit, Policy::SjfBco, Policy::Random, Policy::FirstFit] {
+            let plan = schedule(policy, &cluster, &jobs, &params, 1_000_000).unwrap();
+            let fresh = Simulator::new(&cluster, &jobs, &params).run(&plan);
+            let scored = scorer.outcome(&plan);
+            assert_outcomes_match(&scored, &fresh, true, policy.name());
+        }
+    });
+}
+
+/// Online-loop counterpart: the dirty-set rate cache (default) against
+/// the recompute-every-period reference (`rate_cache: false`), compared
+/// on outcome, records AND the realized event sequence, with migration
+/// both off and on.
+fn assert_online_equivalent(a: &OnlineOutcome, b: &OnlineOutcome, ctx: &str) {
+    assert_outcomes_match(&a.outcome, &b.outcome, true, ctx);
+    assert_eq!(a.rejected, b.rejected, "{ctx}: rejections");
+    assert_eq!(a.max_pending, b.max_pending, "{ctx}: queue high-water");
+    assert_eq!(a.migrations.len(), b.migrations.len(), "{ctx}: migration count");
+    for (x, y) in a.migrations.iter().zip(&b.migrations) {
+        assert_eq!(x, y, "{ctx}: migration record");
+    }
+    assert_eq!(a.events.len(), b.events.len(), "{ctx}: event count");
+    assert_eq!(a.events.events(), b.events.events(), "{ctx}: event sequence");
+}
+
+#[test]
+fn online_rate_cache_is_bit_identical_with_and_without_migration() {
+    check("online dirty-set cache == recompute-all reference", 8, |rng| {
+        let cluster = random_fabric(rng);
+        let params = ContentionParams::paper();
+        let jobs = random_trace(rng);
+        for migrate in [false, true] {
+            let migration = MigrationControl {
+                enabled: migrate,
+                max_moves: 2,
+                restart_slots: rng.gen_u64(0, 15),
+            };
+            let cached = OnlineOptions {
+                migration,
+                rate_cache: true,
+                max_slots: 10_000_000,
+                ..OnlineOptions::default()
+            };
+            let reference = OnlineOptions { rate_cache: false, ..cached };
+            for kind in OnlinePolicyKind::ALL {
+                let a = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(cached)
+                    .run(kind.build().as_mut());
+                let b = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(reference)
+                    .run(kind.build().as_mut());
+                let ctx = format!("{kind} (migrate={migrate})");
+                assert_online_equivalent(&a, &b, &ctx);
+            }
+        }
+    });
+}
+
+#[test]
+fn periods_are_reported_and_consistent() {
+    // deterministic spot check: periods > 0 on a real run and equal
+    // across the two event-driven contention modes
+    let cluster = Cluster::uniform(4, 8, 1.0, 25.0);
+    let params = ContentionParams::paper();
+    let jobs = TraceGenerator::tiny().generate(5);
+    let plan = schedule(Policy::FirstFit, &cluster, &jobs, &params, 100_000).unwrap();
+    let a = Simulator::new(&cluster, &jobs, &params).run(&plan);
+    let b = Simulator::new(&cluster, &jobs, &params)
+        .with_options(SimOptions {
+            contention: ContentionMode::SnapshotRebuild,
+            ..SimOptions::default()
+        })
+        .run(&plan);
+    assert!(a.periods > 0);
+    assert_eq!(a.periods, b.periods);
+    // slot-by-slot evaluates one period per occupied slot: at least as many
+    let slots = Simulator::new(&cluster, &jobs, &params)
+        .with_options(SimOptions { event_driven: false, ..SimOptions::default() })
+        .run(&plan);
+    assert!(slots.periods >= a.periods);
+}

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification pipeline: fmt-check -> release build -> tests ->
 # bench smoke. The bench smoke emits BENCH_topology.json (the
-# online_hot_path / per-link tracker numbers) and
-# BENCH_online_overload.json (the speculative what-if tracker path behind
-# θ-admission and migration) so the perf trajectory is recorded across
-# PRs.
+# online_hot_path / per-link tracker numbers), BENCH_online_overload.json
+# (the speculative what-if tracker path behind θ-admission and migration)
+# and BENCH_sim_engine.json (batch-engine events/sec + ns/event,
+# snapshot-rebuild vs tracker+dirty-set) so the perf trajectory is
+# recorded across PRs.
 #
 # Failure policy: when cargo is PRESENT, every stage is a hard gate —
 # fmt drift, a build error, a test failure or a missing bench artifact
@@ -38,7 +39,7 @@ cargo build --release --offline
 echo "== [3/4] cargo test -q =="
 cargo test -q --offline
 
-echo "== [4/4] bench smoke (online_hot_path -> BENCH_topology.json + BENCH_online_overload.json) =="
+echo "== [4/4] bench smoke (online_hot_path + sim_engine -> BENCH_*.json) =="
 # cargo runs bench binaries with cwd at the package root (rust/), so pin
 # the output paths to the repo root explicitly.
 RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
@@ -46,7 +47,14 @@ RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_OVERLOAD_OUT="$PWD/BENCH_online_overload.json" \
     cargo bench --offline --bench online_hot_path
 
-for artifact in BENCH_topology.json BENCH_online_overload.json; do
+# Engine baseline: snapshot-rebuild vs tracker+dirty-set events/sec and
+# ns/event (flat + 2-rack, three cluster sizes) — the perf trajectory of
+# the batch simulator finally has a diffable artifact.
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_SIM_OUT="$PWD/BENCH_sim_engine.json" \
+    cargo bench --offline --bench sim_engine
+
+for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json; do
     if [ -f "$artifact" ]; then
         echo "OK: $artifact written"
     else
