@@ -1,0 +1,174 @@
+//! Bandwidth-allocation hot paths: progressive-filling throughput
+//! (allocations/sec over the whole active set, flat vs rack vs pod
+//! fabrics) and the engine-level cost of the MaxMinFair contention model
+//! vs EffectiveDegree (events/sec on the same plan and fabric).
+//!
+//! Results are written to `BENCH_net_alloc.json` (override with
+//! `RARSCHED_BENCH_NET_OUT`) so `scripts/verify.sh` tracks the allocator
+//! baseline across PRs. Run with `--release`: debug builds run the
+//! tracker's per-mutation full-rebuild cross-check, which dominates the
+//! numbers being measured.
+
+use rarsched::cluster::{Cluster, JobPlacement};
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::JobId;
+use rarsched::net::{progressive_fill, AllocScratch, ContentionModel};
+use rarsched::online::ContentionTracker;
+use rarsched::sched;
+use rarsched::sim::{SimOptions, SimScratch, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::bench::Bench;
+use rarsched::util::{Json, Rng};
+
+struct Case {
+    name: String,
+    mean_ms: f64,
+    /// Work units per run: rings for fill cases, event periods for
+    /// engine cases.
+    units: u64,
+    unit: &'static str,
+}
+
+/// A deterministic standing active set of spread rings over the cluster.
+fn active_set(cluster: &Cluster, rings: usize, seed: u64) -> Vec<(JobId, JobPlacement)> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut set = Vec::with_capacity(rings);
+    for id in 0..rings {
+        let k = rng.gen_usize(2, 6);
+        let mut gpus: Vec<_> = cluster.all_gpus().collect();
+        rng.shuffle(&mut gpus);
+        gpus.truncate(k);
+        set.push((JobId(id), JobPlacement::new(gpus)));
+    }
+    set
+}
+
+fn main() {
+    let params = ContentionParams::paper();
+    let mut b = Bench::new("net_alloc");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // --- progressive filling: allocations over a standing active set ---
+    let servers = 20usize;
+    let fabrics: [(&str, Topology); 3] = [
+        ("flat", Topology::flat(servers)),
+        ("rack", Topology::racks(servers, 4, 2.0)),
+        ("pod", Topology::pods(servers, 2, 5, 2.0, 4.0)),
+    ];
+    for (tag, topo) in fabrics {
+        let cluster = Cluster::uniform(servers, 8, 1.0, 25.0).with_topology(topo);
+        for rings in [16usize, 64] {
+            let set = active_set(&cluster, rings, 0x5eed);
+            let mut scratch = AllocScratch::default();
+            let name = format!("fill/{tag}-{rings}rings");
+            let mean_ms = {
+                let r = b.run(&name, || {
+                    progressive_fill(
+                        cluster.topology(),
+                        set.iter().map(|(j, p)| (*j, p)),
+                        &mut scratch,
+                    )
+                    .rounds
+                });
+                r.mean_ms()
+            };
+            cases.push(Case { name, mean_ms, units: rings as u64, unit: "rings" });
+        }
+    }
+
+    // --- incremental max_contention: histogram O(1) vs O(L) scan ---
+    {
+        let cluster =
+            Cluster::uniform(servers, 8, 1.0, 25.0).with_topology(Topology::pods(
+                servers, 2, 5, 2.0, 4.0,
+            ));
+        let set = active_set(&cluster, 64, 0x5eed);
+        let mut tracker = ContentionTracker::new(&cluster);
+        for (j, p) in &set {
+            tracker.admit(*j, p);
+        }
+        let hist_ms = b.run("maxcontention/hist", || tracker.max_contention()).mean_ms();
+        cases.push(Case {
+            name: "maxcontention/hist".into(),
+            mean_ms: hist_ms,
+            units: 1,
+            unit: "queries",
+        });
+        let scan_ms =
+            b.run("maxcontention/scan", || tracker.max_contention_scan()).mean_ms();
+        cases.push(Case {
+            name: "maxcontention/scan".into(),
+            mean_ms: scan_ms,
+            units: 1,
+            unit: "queries",
+        });
+    }
+
+    // --- engine cost of the model axis: same plan, degree vs maxmin ---
+    // A capacity-skewed fabric (relief ToR) so the two models genuinely
+    // diverge; the replayed plan is the contention-heavy RAND schedule.
+    let flat = Cluster::random(servers, 7);
+    let jobs = TraceGenerator::paper_scaled(0.7).generate_online(42, 1.0);
+    let plan = sched::random_policy(&flat, &jobs, &params, 1_000_000, 0x5eed).unwrap();
+    for (tag, model) in [
+        ("degree", ContentionModel::EffectiveDegree),
+        ("maxmin", ContentionModel::MaxMinFair),
+    ] {
+        let cluster = flat.clone().with_topology(
+            Topology::racks_gbps(servers, 4, 10.0, 40.0).with_model(model),
+        );
+        let sim = Simulator::new(&cluster, &jobs, &params)
+            .with_options(SimOptions::default());
+        let mut scratch = SimScratch::new(&cluster);
+        let reference = sim.run_with(&mut scratch, &plan);
+        assert!(!reference.truncated, "engine/{tag}");
+        let name = format!("engine/{tag}-rackgbps");
+        let mean_ms = {
+            let r = b.run(&name, || sim.run_with(&mut scratch, &plan).makespan);
+            r.mean_ms()
+        };
+        cases.push(Case { name, mean_ms, units: reference.periods, unit: "events" });
+    }
+    b.report();
+
+    for c in &cases {
+        println!(
+            "  -> {}: {:.1} k{}/sec",
+            c.name,
+            c.units as f64 / c.mean_ms,
+            c.unit
+        );
+    }
+
+    let json = Json::obj(vec![
+        ("suite", Json::Str("net_alloc".into())),
+        (
+            "cases",
+            Json::arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        let secs = c.mean_ms / 1e3;
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("mean_ms", Json::Num(c.mean_ms)),
+                            ("units", Json::Num(c.units as f64)),
+                            ("unit", Json::Str(c.unit.into())),
+                            (
+                                "units_per_sec",
+                                Json::Num(c.units as f64 / secs.max(1e-12)),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = std::env::var("RARSCHED_BENCH_NET_OUT")
+        .unwrap_or_else(|_| "BENCH_net_alloc.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+}

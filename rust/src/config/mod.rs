@@ -7,6 +7,7 @@
 
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;
+use crate::net::ContentionModel;
 use crate::online::{AdmissionControl, MigrationControl, OnlineOptions};
 use crate::sched::Policy;
 use crate::topology::TopologySpec;
@@ -154,6 +155,9 @@ pub struct ExperimentConfig {
     /// Network fabric above the servers (`[topology]` section; absent =
     /// the paper's flat 1-tier fabric).
     pub topology: TopologySpec,
+    /// Contention model at the fabric's links (`[topology] model`;
+    /// absent = the paper's effective-degree counting).
+    pub contention: ContentionModel,
     pub workload: WorkloadConfig,
     pub scheduler: SchedulerConfig,
     pub model: ModelParamsConfig,
@@ -193,16 +197,106 @@ impl ExperimentConfig {
             if spr == 0 {
                 bail!("topology.servers_per_rack must be >= 1");
             }
-            let oversub = match doc.get("topology", "oversub") {
-                Some(o) => o.as_f64()?,
-                None => 1.0,
+            let racks_per_pod = match doc.get("topology", "racks_per_pod") {
+                Some(r) => {
+                    let rpp = r.as_usize()?;
+                    if rpp == 0 {
+                        bail!("topology.racks_per_pod must be >= 1");
+                    }
+                    Some(rpp)
+                }
+                None => None,
             };
-            if !(oversub >= 1.0) {
-                bail!("topology.oversub must be >= 1, got {oversub}");
+            let gbps = |key: &str| -> Result<Option<f64>> {
+                match doc.get("topology", key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let g = v.as_f64()?;
+                        if !(g > 0.0) {
+                            bail!("topology.{key} must be positive Gbps, got {g}");
+                        }
+                        Ok(Some(g))
+                    }
+                }
+            };
+            let oversub_key = |key: &str| -> Result<Option<f64>> {
+                match doc.get("topology", key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let o = v.as_f64()?;
+                        if !(o >= 1.0) {
+                            bail!("topology.{key} must be >= 1, got {o}");
+                        }
+                        Ok(Some(o))
+                    }
+                }
+            };
+            let tor_gbps = gbps("tor_gbps")?;
+            let pod_gbps = gbps("pod_gbps")?;
+            let uplink_gbps = gbps("uplink_gbps")?;
+            let oversub = oversub_key("oversub")?;
+            let pod_oversub = oversub_key("pod_oversub")?;
+            let speeds = tor_gbps.is_some() || pod_gbps.is_some() || uplink_gbps.is_some();
+            let factors = oversub.is_some() || pod_oversub.is_some();
+            if speeds && factors {
+                bail!(
+                    "topology: mixing absolute speeds (uplink_gbps/tor_gbps/pod_gbps) \
+                     with oversubscription factors (oversub/pod_oversub) is ambiguous \
+                     — use one form"
+                );
             }
-            cfg.topology = TopologySpec::Rack { servers_per_rack: spr, oversub };
-        } else if doc.get("topology", "oversub").is_some() {
-            bail!("topology.oversub requires topology.servers_per_rack");
+            // pod-tier keys without a pod tier would otherwise be dropped
+            // silently, building a different fabric than configured
+            if racks_per_pod.is_none() {
+                if pod_gbps.is_some() {
+                    bail!("topology.pod_gbps requires topology.racks_per_pod");
+                }
+                if pod_oversub.is_some() {
+                    bail!("topology.pod_oversub requires topology.racks_per_pod");
+                }
+            }
+            cfg.topology = match (racks_per_pod, speeds) {
+                (None, false) => TopologySpec::Rack {
+                    servers_per_rack: spr,
+                    oversub: oversub.unwrap_or(1.0),
+                },
+                (None, true) => TopologySpec::RackGbps {
+                    servers_per_rack: spr,
+                    uplink_gbps: uplink_gbps
+                        .unwrap_or(crate::net::DEFAULT_UPLINK_GBPS),
+                    tor_gbps: tor_gbps
+                        .ok_or_else(|| anyhow::anyhow!("topology.tor_gbps required"))?,
+                },
+                (Some(rpp), false) => TopologySpec::Pod {
+                    racks_per_pod: rpp,
+                    servers_per_rack: spr,
+                    tor_oversub: oversub.unwrap_or(1.0),
+                    pod_oversub: pod_oversub.unwrap_or(1.0),
+                },
+                (Some(rpp), true) => TopologySpec::PodGbps {
+                    racks_per_pod: rpp,
+                    servers_per_rack: spr,
+                    uplink_gbps: uplink_gbps
+                        .unwrap_or(crate::net::DEFAULT_UPLINK_GBPS),
+                    tor_gbps: tor_gbps
+                        .ok_or_else(|| anyhow::anyhow!("topology.tor_gbps required"))?,
+                    pod_gbps: pod_gbps
+                        .ok_or_else(|| anyhow::anyhow!("topology.pod_gbps required"))?,
+                },
+            };
+        } else {
+            // no rack tier: any fabric-shape key is an orphan (a typo'd
+            // or half-written section must not silently build flat)
+            for key in
+                ["oversub", "pod_oversub", "uplink_gbps", "tor_gbps", "pod_gbps", "racks_per_pod"]
+            {
+                if doc.get("topology", key).is_some() {
+                    bail!("topology.{key} requires topology.servers_per_rack");
+                }
+            }
+        }
+        if let Some(v) = doc.get("topology", "model") {
+            cfg.contention = v.as_str()?.parse()?;
         }
         if let Some(v) = doc.get("online", "theta") {
             let theta = v.as_f64()?;
@@ -281,9 +375,55 @@ impl ExperimentConfig {
         }
         doc.set("cluster", "inter_bw", TomlValue::Float(self.cluster.inter_bw));
         doc.set("cluster", "intra_bw", TomlValue::Float(self.cluster.intra_bw));
-        if let TopologySpec::Rack { servers_per_rack, oversub } = self.topology {
-            doc.set("topology", "servers_per_rack", TomlValue::Int(servers_per_rack as i64));
-            doc.set("topology", "oversub", TomlValue::Float(oversub));
+        match self.topology {
+            TopologySpec::Flat => {}
+            TopologySpec::Rack { servers_per_rack, oversub } => {
+                doc.set(
+                    "topology",
+                    "servers_per_rack",
+                    TomlValue::Int(servers_per_rack as i64),
+                );
+                doc.set("topology", "oversub", TomlValue::Float(oversub));
+            }
+            TopologySpec::RackGbps { servers_per_rack, uplink_gbps, tor_gbps } => {
+                doc.set(
+                    "topology",
+                    "servers_per_rack",
+                    TomlValue::Int(servers_per_rack as i64),
+                );
+                doc.set("topology", "uplink_gbps", TomlValue::Float(uplink_gbps));
+                doc.set("topology", "tor_gbps", TomlValue::Float(tor_gbps));
+            }
+            TopologySpec::Pod { racks_per_pod, servers_per_rack, tor_oversub, pod_oversub } => {
+                doc.set(
+                    "topology",
+                    "servers_per_rack",
+                    TomlValue::Int(servers_per_rack as i64),
+                );
+                doc.set("topology", "racks_per_pod", TomlValue::Int(racks_per_pod as i64));
+                doc.set("topology", "oversub", TomlValue::Float(tor_oversub));
+                doc.set("topology", "pod_oversub", TomlValue::Float(pod_oversub));
+            }
+            TopologySpec::PodGbps {
+                racks_per_pod,
+                servers_per_rack,
+                uplink_gbps,
+                tor_gbps,
+                pod_gbps,
+            } => {
+                doc.set(
+                    "topology",
+                    "servers_per_rack",
+                    TomlValue::Int(servers_per_rack as i64),
+                );
+                doc.set("topology", "racks_per_pod", TomlValue::Int(racks_per_pod as i64));
+                doc.set("topology", "uplink_gbps", TomlValue::Float(uplink_gbps));
+                doc.set("topology", "tor_gbps", TomlValue::Float(tor_gbps));
+                doc.set("topology", "pod_gbps", TomlValue::Float(pod_gbps));
+            }
+        }
+        if self.contention != ContentionModel::default() {
+            doc.set("topology", "model", TomlValue::Str(self.contention.name().into()));
         }
         // [online] — only non-default keys are emitted (θ = ∞ has no TOML
         // representation; absence IS the disabled state)
@@ -356,7 +496,7 @@ impl ExperimentConfig {
             c
         };
         let n = c.num_servers();
-        c.with_topology(self.topology.build(n))
+        c.with_topology(self.topology.build(n).with_model(self.contention))
     }
 
     /// Materialise the trace generator.
@@ -515,5 +655,83 @@ mod tests {
         )
         .is_err());
         assert!(ExperimentConfig::from_toml_str("[topology]\noversub = 2.0\n").is_err());
+        // mixing speed and factor forms is ambiguous
+        assert!(ExperimentConfig::from_toml_str(
+            "[topology]\nservers_per_rack = 4\noversub = 2.0\ntor_gbps = 40.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[topology]\nservers_per_rack = 4\ntor_gbps = 0.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[topology]\nservers_per_rack = 4\nracks_per_pod = 0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[topology]\nmodel = \"bogus\"\n").is_err());
+        // orphan keys must be rejected, not silently dropped
+        assert!(
+            ExperimentConfig::from_toml_str(
+                "[topology]\nservers_per_rack = 4\ntor_gbps = 40.0\npod_gbps = 160.0\n"
+            )
+            .is_err(),
+            "pod_gbps without racks_per_pod must not silently build a 2-tier fabric"
+        );
+        assert!(ExperimentConfig::from_toml_str(
+            "[topology]\nservers_per_rack = 4\npod_oversub = 2.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[topology]\nracks_per_pod = 2\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[topology]\ntor_gbps = 40.0\n").is_err());
+    }
+
+    #[test]
+    fn gbps_pod_and_model_sections_roundtrip_and_build() {
+        // absolute-speed rack form + the share model
+        let mut cfg = ExperimentConfig::paper();
+        cfg.topology = TopologySpec::RackGbps {
+            servers_per_rack: 4,
+            uplink_gbps: 25.0,
+            tor_gbps: 100.0,
+        };
+        cfg.contention = ContentionModel::MaxMinFair;
+        let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.contention, ContentionModel::MaxMinFair);
+        let c = back.build_cluster();
+        assert_eq!(c.topology().model(), ContentionModel::MaxMinFair);
+        assert_eq!(c.topology().link_gbps(c.topology().rack_uplink(0)), 100.0);
+
+        // 3-tier oversub form
+        let mut cfg = ExperimentConfig::paper();
+        cfg.topology = TopologySpec::Pod {
+            racks_per_pod: 2,
+            servers_per_rack: 2,
+            tor_oversub: 2.0,
+            pod_oversub: 4.0,
+        };
+        let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.topology, cfg.topology);
+        let c = back.build_cluster();
+        assert!(c.topology().has_pods());
+        assert_eq!(c.topology().num_pods(), 5, "10 racks of 2 in pods of 2");
+
+        // 3-tier speed form
+        let mut cfg = ExperimentConfig::paper();
+        cfg.topology = TopologySpec::PodGbps {
+            racks_per_pod: 2,
+            servers_per_rack: 2,
+            uplink_gbps: 10.0,
+            tor_gbps: 20.0,
+            pod_gbps: 40.0,
+        };
+        let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.topology, cfg.topology);
+
+        // defaults: no [topology] section is emitted at all (flat fabric,
+        // degree model — absence IS the default state)
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.contention, ContentionModel::EffectiveDegree);
+        assert!(!cfg.to_toml_string().contains("[topology]"));
     }
 }

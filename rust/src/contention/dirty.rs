@@ -16,7 +16,18 @@
 //! tracker's `O(path)` delta). A cached rate must be recomputed iff the
 //! job's crossed-link set intersects that *touched* set; every other
 //! job's bottleneck — and therefore its rate — is unchanged by
-//! construction. This structure maintains the reverse index
+//! construction.
+//!
+//! Under the [`MaxMinFair`](crate::net::ContentionModel::MaxMinFair)
+//! bandwidth-share model the same rule reads: **a job re-rates iff the
+//! allocator changed its allocated rate** — conservatively, iff one of
+//! its crossed links' *residual bandwidths* moved. A link's residual is a
+//! function of its ring count and the capacities (both models rate a ring
+//! at its bottleneck link's equal split, `c_ref / (count × ratio)`), so
+//! residuals move exactly when counts do and the link-keyed touched set
+//! is the same sound-and-tight trigger for both models — which is why
+//! this API stayed link-keyed through PR 4. This structure maintains the
+//! reverse index
 //! (link → member jobs) needed to apply that rule in
 //! `O(touched links × members)` per event instead of `O(active jobs)`:
 //!

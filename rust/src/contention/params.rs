@@ -114,7 +114,9 @@ impl ContentionParams {
     }
 
     /// Eq. 8 under a hierarchical fabric: identical arithmetic with `B_j`
-    /// taken at the job's bottleneck link.
+    /// taken at the job's bottleneck link. Delegates to
+    /// [`tau_with_bandwidth`](Self::tau_with_bandwidth) so the
+    /// degree-driven and allocation-driven paths share one Eq. 8 body.
     pub fn tau_at(
         &self,
         cluster: &Cluster,
@@ -122,12 +124,28 @@ impl ContentionParams {
         placement: &JobPlacement,
         bottleneck: Bottleneck,
     ) -> f64 {
+        self.tau_with_bandwidth(
+            cluster,
+            job,
+            placement,
+            self.bandwidth_at(cluster, placement, bottleneck),
+        )
+    }
+
+    /// Eq. 8 over an **allocated bandwidth** `B_j` (model units per
+    /// slot): the form the simulation kernel's
+    /// [`RatePoint`](crate::sim::kernel::RatePoint) uses — the allocation
+    /// (however the active [`ContentionModel`](crate::net::ContentionModel)
+    /// produced it) is the input, τ the output.
+    pub fn tau_with_bandwidth(
+        &self,
+        _cluster: &Cluster,
+        job: &JobSpec,
+        placement: &JobPlacement,
+        bandwidth: f64,
+    ) -> f64 {
         debug_assert_eq!(placement.num_workers(), job.gpus, "gang scheduling: w_j == G_j");
-        let comm = if job.gpus > 1 {
-            job.rar_volume() / self.bandwidth_at(cluster, placement, bottleneck)
-        } else {
-            0.0
-        };
+        let comm = if job.gpus > 1 { job.rar_volume() / bandwidth } else { 0.0 };
         let reduce = job.reduce_volume() / self.compute_speed;
         comm + reduce + self.overhead(placement) + job.fp_bp_time()
     }

@@ -122,6 +122,20 @@ impl ContentionSnapshot {
     pub fn max_contention(&self) -> usize {
         self.max_p
     }
+
+    /// Per-link residual bandwidth (Gbps) under the bottleneck-share
+    /// rates ([`crate::net::residual_ledger`] against this snapshot's
+    /// retained counts). On demand — the rebuild hot path pays nothing
+    /// for the ledger, and the cost of a `MaxMinFair` rebuild stays
+    /// identical to a degree-model one; callers pass the active set the
+    /// snapshot was (re)built from.
+    pub fn residual_gbps<'p>(
+        &self,
+        cluster: &Cluster,
+        active: impl Iterator<Item = (JobId, &'p JobPlacement)>,
+    ) -> Vec<f64> {
+        crate::net::residual_ledger(cluster.topology(), active, &self.link_jobs)
+    }
 }
 
 #[cfg(test)]
@@ -215,6 +229,37 @@ mod tests {
         // shrinking rebuilds must not leak stale jobs from the wider set
         snap.rebuild_iter(&c, set_b.iter().map(|(j, p)| (*j, p)));
         assert_eq!(snap.try_p_j(JobId(5)), None, "job 5 left with set_a");
+    }
+
+    #[test]
+    fn on_demand_residual_ledger_matches_the_tracker_rule() {
+        use crate::net::ContentionModel;
+        use crate::topology::LinkId;
+        let degree = Cluster::uniform(3, 4, 1.0, 25.0);
+        let share = Cluster::uniform(3, 4, 1.0, 25.0)
+            .with_topology(Topology::flat(3).with_model(ContentionModel::MaxMinFair));
+        let mk = |c: &Cluster, pairs: &[(usize, usize)]| {
+            JobPlacement::new(
+                pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect(),
+            )
+        };
+        let active = vec![
+            (JobId(0), mk(&degree, &[(0, 0), (1, 0)])),
+            (JobId(1), mk(&degree, &[(0, 1), (2, 0)])),
+        ];
+        let snap = ContentionSnapshot::build(&share, &active);
+        let full = share.topology().link_gbps(LinkId(0));
+        // both rings bottleneck on the shared server-0 uplink at c/2 each
+        let res = snap.residual_gbps(&share, active.iter().map(|(j, p)| (*j, p)));
+        assert_eq!(res[0], 0.0, "shared uplink saturated");
+        assert_eq!(res[1], full / 2.0);
+        assert_eq!(res[2], full / 2.0);
+        // the contention values agree bit for bit across models on a
+        // uniform flat fabric
+        let snap_degree = ContentionSnapshot::build(&degree, &active);
+        for (j, _) in &active {
+            assert_eq!(snap_degree.bottleneck(*j), snap.bottleneck(*j));
+        }
     }
 
     #[test]

@@ -13,15 +13,18 @@
 //! from `RARSCHED_THREADS` or the machine's parallelism.
 
 pub mod ablations;
+pub mod hetero;
 pub mod online;
 pub mod topology;
 
+pub use self::hetero::hetero_sweep;
 pub use self::topology::topology_sweep;
 
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;
 use crate::jobs::JobSpec;
 use crate::metrics::{FigureReport, PolicySummary};
+use crate::net::ContentionModel;
 use crate::sched::{self, Policy, SjfBcoConfig};
 use crate::sim::Simulator;
 use crate::topology::TopologySpec;
@@ -38,6 +41,11 @@ pub struct ExperimentSetup {
     pub servers: usize,
     /// Network fabric above the servers (flat = the paper's model).
     pub topology: TopologySpec,
+    /// How contention is evaluated at the fabric's links: the paper's
+    /// effective-degree counting (default) or max-min fair bandwidth
+    /// shares over the links' absolute capacities
+    /// ([`crate::net::ContentionModel`]).
+    pub model: ContentionModel,
     /// Inter-server bandwidth `b^e` for the figure experiments.
     ///
     /// The paper runs its §7 simulation in a *comm-light* regime — "the
@@ -66,6 +74,7 @@ impl ExperimentSetup {
             horizon: 4000,
             servers: 20,
             topology: TopologySpec::Flat,
+            model: ContentionModel::EffectiveDegree,
             inter_bw: 10.0,
         }
     }
@@ -78,6 +87,7 @@ impl ExperimentSetup {
             horizon: 1200,
             servers: 8,
             topology: TopologySpec::Flat,
+            model: ContentionModel::EffectiveDegree,
             inter_bw: 10.0,
         }
     }
@@ -86,7 +96,7 @@ impl ExperimentSetup {
         let mut c = Cluster::random(self.servers, self.seed);
         c.inter_bw = self.inter_bw;
         let n = c.num_servers();
-        c.with_topology(self.topology.build(n))
+        c.with_topology(self.topology.build(n).with_model(self.model))
     }
 
     pub fn jobs(&self) -> Vec<JobSpec> {

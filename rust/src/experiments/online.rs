@@ -138,6 +138,62 @@ pub fn online_comparison(
     burst: Option<(u64, u64)>,
     options: OnlineOptions,
 ) -> Result<MetricTable> {
+    online_comparison_full(setup, gap, kinds, include_clairvoyant, burst, options)
+        .map(|(table, _)| table)
+}
+
+/// Per-window steady-state table of one online run (see
+/// [`OnlineOptions::window`]): time-series rows of utilization and
+/// queue-length the run-level aggregates average away. The final window
+/// is clamped at the run's end and normalized by its *actual* length —
+/// otherwise a fully-busy tail would plot as an artifactual utilization
+/// dip.
+pub fn window_table(
+    policy: &str,
+    out: &crate::online::OnlineOutcome,
+    num_gpus: usize,
+    window: u64,
+) -> MetricTable {
+    let run_end = out.outcome.slots_simulated;
+    let mut table = MetricTable::new(
+        format!("{policy} — sliding-window series (window {window} slots)"),
+        "window",
+        &["t_start", "t_end", "util", "mean_queue", "max_queue"],
+    );
+    for (i, s) in out.windows.iter().enumerate() {
+        let end = (s.start + window).min(run_end.max(s.start + 1));
+        let len = end - s.start;
+        let util = if num_gpus == 0 {
+            0.0
+        } else {
+            s.busy_gpu_slots / (num_gpus as u64 * len) as f64
+        };
+        table.push(
+            i.to_string(),
+            vec![
+                s.start as f64,
+                end as f64,
+                util,
+                s.queue_area / len as f64,
+                s.max_queue as f64,
+            ],
+        );
+    }
+    table
+}
+
+/// [`online_comparison`] additionally returning the per-policy
+/// sliding-window tables (one per online policy; empty unless
+/// `options.window` is set — the clairvoyant replay has no window
+/// instrumentation).
+pub fn online_comparison_full(
+    setup: &ExperimentSetup,
+    gap: f64,
+    kinds: &[OnlinePolicyKind],
+    include_clairvoyant: bool,
+    burst: Option<(u64, u64)>,
+    options: OnlineOptions,
+) -> Result<(MetricTable, Vec<(String, MetricTable)>)> {
     let gen = generator(setup);
     let jobs = match burst {
         Some((on, off)) => gen.generate_bursty(setup.seed, gap, on, off),
@@ -187,6 +243,7 @@ pub fn online_comparison(
         let clair = clairvoyant_run(setup, Policy::SjfBco, &jobs)?;
         push("CLAIR-SJF-BCO".to_string(), &clair, 0.0, 0);
     }
+    let mut windows = Vec::new();
     for &kind in kinds {
         let out = online_run_full(setup, kind, &jobs, options);
         push(
@@ -195,8 +252,14 @@ pub fn online_comparison(
             out.rejection_rate(offered),
             out.migration_count(),
         );
+        if let Some(w) = options.window {
+            windows.push((
+                kind.name().to_string(),
+                window_table(kind.name(), &out, num_gpus, w),
+            ));
+        }
     }
-    Ok(table)
+    Ok((table, windows))
 }
 
 /// **Overload sweep** — the open-system regime the control-free loop
@@ -358,6 +421,48 @@ mod tests {
         for kind in ["ON-SJF-BCO", "FIFO"] {
             assert!(table.get(kind, "makespan").unwrap() > 0.0, "{kind}");
         }
+    }
+
+    #[test]
+    fn window_flag_emits_per_policy_series() {
+        let setup = ExperimentSetup::smoke();
+        let opts = OnlineOptions { window: Some(100), ..OnlineOptions::default() };
+        let (table, windows) = online_comparison_full(
+            &setup,
+            2.0,
+            &[OnlinePolicyKind::Fifo, OnlinePolicyKind::SjfBco],
+            false,
+            None,
+            opts,
+        )
+        .unwrap();
+        assert_eq!(table.rows.len(), 2);
+        assert_eq!(windows.len(), 2, "one series per online policy");
+        for (name, series) in &windows {
+            assert!(!series.rows.is_empty(), "{name}: empty series");
+            for (i, (label, values)) in series.rows.iter().enumerate() {
+                let util = values[2];
+                assert!((0.0..=1.0 + 1e-9).contains(&util), "{name}/{label}: util {util}");
+                let len = values[1] - values[0];
+                if i + 1 < series.rows.len() {
+                    assert!(len == 100.0, "{name}/{label}: interior window length {len}");
+                } else {
+                    // the tail window is clamped at the run's end
+                    assert!(len > 0.0 && len <= 100.0, "{name}/{label}: tail length {len}");
+                }
+            }
+        }
+        // without the flag no series is produced
+        let (_, none) = online_comparison_full(
+            &setup,
+            2.0,
+            &[OnlinePolicyKind::Fifo],
+            false,
+            None,
+            OnlineOptions::default(),
+        )
+        .unwrap();
+        assert!(none.is_empty());
     }
 
     #[test]

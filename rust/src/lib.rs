@@ -83,6 +83,23 @@
 //! 1-tier instance reproduces the paper's `p_j`, makespans and JCTs bit
 //! for bit (enforced by `tests/topology_equivalence.rs`), so the paper
 //! reproduction is preserved while the model is strictly more general.
+//!
+//! ## Bandwidth allocation (`net/`)
+//!
+//! The [`net`] subsystem takes the fabric from oversubscription *factors*
+//! to absolute per-link **capacities** ([`net::LinkCapacity`], Gbps) and
+//! adds a second contention axis, [`net::ContentionModel`]: the paper's
+//! effective-degree counting vs **max-min fair bandwidth shares**
+//! (`MaxMinFair`), where each ring is rated at the equal split of its
+//! most-contended crossed link, `count × (c_ref / c_ℓ)`. Topologies now
+//! reach three tiers (`pod:<racks>:<spr>:…` above the racks) and accept
+//! absolute-speed specs (`rack:<spr>:<uplink_gbps>@<tor_gbps>`); the
+//! scalar-oversub forms remain the uniform-capacity special case, and
+//! `tests/net_equivalence.rs` proves the `MaxMinFair` model is
+//! bit-identical to `EffectiveDegree` on every capacity-mirroring fabric
+//! across all engine modes. [`net::progressive_fill`] computes full
+//! water-filled max-min rates and per-link residual bandwidth for
+//! reports, the `figures --fig hetero` sweep and `benches/net_alloc.rs`.
 
 pub mod cli;
 pub mod cluster;
@@ -92,6 +109,7 @@ pub mod experiments;
 pub mod coordinator;
 pub mod jobs;
 pub mod metrics;
+pub mod net;
 pub mod online;
 pub mod rar;
 pub mod runtime;

@@ -35,25 +35,36 @@ USAGE: rarsched <COMMAND> [OPTIONS]
 COMMANDS:
   simulate   --policy <sjf-bco|ff|ls|rand|gadget> [--config f.toml]
              [--seed N] [--servers N] [--horizon T] [--scale F]
-             [--topology flat|rack:<spr>:<oversub>] [--json]
+             [--topology SPEC] [--contention degree|maxmin] [--json]
   online     [--policies sjf-bco,fifo,ff,backfill] [--gap F]
              [--burst ON:OFF] [--seed N] [--servers N] [--scale F]
-             [--topology flat|rack:<spr>:<oversub>] [--no-clairvoyant]
-             [--theta F] [--queue-cap N] [--migrate|--no-migrate]
-             [--max-moves K] [--restart N] [--config f.toml] [--json]
-             [--out dir]
+             [--topology SPEC] [--contention degree|maxmin]
+             [--no-clairvoyant] [--theta F] [--queue-cap N]
+             [--migrate|--no-migrate] [--max-moves K] [--restart N]
+             [--window W] [--config f.toml] [--json] [--out dir]
              overload controls: --theta rejects an arrival whose projected
              bottleneck effective degree (count x oversub, generalized
-             Eq. 6) exceeds F; --queue-cap N hard-caps the pending queue;
-             --migrate re-places up to --max-moves running jobs per
-             completion when their bottleneck strictly improves net of
-             --restart slots of checkpoint-restart. --config seeds these
-             from the file's [online] section (keys: theta, queue_cap,
-             migrate, max_moves, restart_slots); explicit flags override.
-             Defaults: theta inf, cap unbounded, migration off (= the
-             control-free scheduler bit for bit).
-  figures    --fig <4|5|6|7|motivation|ablations|online|topology|
+             Eq. 6; under --contention maxmin, count x capacity-ratio —
+             i.e. a floor on the projected bandwidth share) exceeds F;
+             --queue-cap N hard-caps the pending queue; --migrate
+             re-places up to --max-moves running jobs per completion when
+             their bottleneck strictly improves net of --restart slots of
+             checkpoint-restart. --window W emits sliding-window
+             utilization and queue-length series (steady-state view).
+             --config seeds these from the file's [online] section (keys:
+             theta, queue_cap, migrate, max_moves, restart_slots);
+             explicit flags override. Defaults: theta inf, cap unbounded,
+             migration off (= the control-free scheduler bit for bit).
+  figures    --fig <4|5|6|7|motivation|ablations|online|topology|hetero|
              overload|all> [--seed N] [--scale F] [--out dir] [--full]
+
+  topology SPEC: flat | rack:<spr>[:<oversub>] |
+             rack:<spr>:<uplink_gbps>@<tor_gbps> |
+             pod:<racks_per_pod>:<spr>[:<tor_oversub>[:<pod_oversub>]] |
+             pod:<racks_per_pod>:<spr>:<up>@<tor>@<pod> (Gbps)
+  contention: degree = the paper's effective-degree counting (default);
+             maxmin = max-min fair bandwidth shares over the links'
+             absolute capacities (rust/src/net)
   trace      --out trace.json [--seed N] [--scale F] [--gap F]
              [--burst ON:OFF]
   train      --model <tiny|small|base> [--workers W] [--steps N]
@@ -121,6 +132,9 @@ fn setup_from(args: &Args, base: ExperimentSetup) -> Result<ExperimentSetup> {
     setup.servers = args.get_usize("servers", setup.servers)?;
     if let Some(t) = args.get("topology") {
         setup.topology = t.parse()?;
+    }
+    if let Some(m) = args.get("contention") {
+        setup.model = m.parse()?;
     }
     Ok(setup)
 }
@@ -224,6 +238,13 @@ fn online_options_from(
     if let Some(v) = args.get("restart") {
         opts.migration.restart_slots = v.parse()?;
     }
+    if let Some(v) = args.get("window") {
+        let w: u64 = v.parse()?;
+        if w == 0 {
+            anyhow::bail!("--window must be >= 1 slot (omit the flag to disable)");
+        }
+        opts.window = Some(w);
+    }
     Ok(opts)
 }
 
@@ -280,6 +301,7 @@ fn cmd_online(args: &Args) -> Result<()> {
             s.horizon = cfg.horizon();
             s.servers = cfg.cluster.servers;
             s.topology = cfg.topology;
+            s.model = cfg.contention;
             s.inter_bw = cfg.cluster.inter_bw;
             (s, cfg.online.build_options())
         }
@@ -313,7 +335,7 @@ fn cmd_online(args: &Args) -> Result<()> {
         options.admission.queue_cap,
         if options.migration.enabled { "on" } else { "off" }
     );
-    let table = experiments::online::online_comparison(
+    let (table, windows) = experiments::online::online_comparison_full(
         &setup,
         gap,
         &kinds,
@@ -322,9 +344,18 @@ fn cmd_online(args: &Args) -> Result<()> {
         options,
     )?;
     if json {
+        // one JSON document per line: the comparison table first, then
+        // each policy's window series (only with --window) — so the
+        // steady-state series stays reachable in machine-readable mode
         println!("{}", table.to_json()?);
+        for (_, series) in &windows {
+            println!("{}", series.to_json()?);
+        }
     } else {
         println!("{}", table.to_table());
+        for (_, series) in &windows {
+            println!("{}", series.to_table());
+        }
     }
     if table.rows.iter().any(|(label, _)| label.contains("(TRUNCATED)")) {
         eprintln!(
@@ -337,6 +368,11 @@ fn cmd_online(args: &Args) -> Result<()> {
         table.save_csv(&d.join("online.csv"))?;
         std::fs::write(d.join("online.json"), table.to_json()?)?;
         log::info!("wrote online.csv / online.json to {d:?}");
+        for (name, series) in &windows {
+            let slug = name.to_ascii_lowercase().replace(['-', ' '], "_");
+            series.save_csv(&d.join(format!("windows_{slug}.csv")))?;
+            log::info!("wrote windows_{slug}.csv to {d:?}");
+        }
     }
     Ok(())
 }
@@ -382,6 +418,15 @@ fn cmd_figures(args: &Args) -> Result<()> {
         reports.push((
             "topology",
             experiments::topology_sweep(&setup, 4, &[1.0, 2.0, 4.0, 8.0])?,
+        ));
+    }
+    if which == "hetero" {
+        // ToR capacity skews around the reference uplink: skinny (0.25x,
+        // 0.5x — expressible as oversubscription, model-identical) through
+        // relief links (2x, 4x — only the share model can see them)
+        reports.push((
+            "hetero",
+            experiments::hetero_sweep(&setup, 4, &[0.25, 0.5, 1.0, 2.0, 4.0])?,
         ));
     }
     if which == "overload" {

@@ -1,0 +1,529 @@
+//! `net/` — bandwidth allocation over the fabric: max-min fair link
+//! sharing across heterogeneous capacities.
+//!
+//! The paper's Eq. 6 models contention as a *ring count* on the bottleneck
+//! link, implicitly assuming every inter-server link is identical and
+//! every co-located ring degrades equally. Real fabrics are not uniform:
+//! a ToR uplink may carry 4× (or ¼×) the capacity of a server uplink, and
+//! what a ring actually experiences is a **bandwidth share** of each link
+//! it crosses. This module supplies that model:
+//!
+//! * [`LinkCapacity`] — an absolute per-link capacity (Gbps) plus the
+//!   *exact* ratio `reference / capacity` used in share arithmetic;
+//! * [`ContentionModel`] — the axis every engine dispatches on:
+//!   [`EffectiveDegree`](ContentionModel::EffectiveDegree) (the paper's
+//!   `count × oversub`) vs [`MaxMinFair`](ContentionModel::MaxMinFair)
+//!   (`count × capacity-ratio`, i.e. the reciprocal of the ring's
+//!   bottleneck fair share);
+//! * [`progressive_fill`] — the classic max-min **progressive-filling**
+//!   (water-filling) allocator over the whole active set: per-ring
+//!   max-min rates and per-link residual bandwidth.
+//!
+//! # The share model and the Eq. 6 equivalence argument
+//!
+//! Under max-min fair sharing, link `ℓ` of capacity `c_ℓ` crossed by
+//! `n_ℓ` rings gives each ring an equal share `c_ℓ / n_ℓ` (no ring is
+//! entitled to more until another leaves headroom). A ring's end-to-end
+//! rate is gated by its most-contended crossed link, so its **bottleneck
+//! fair share** is
+//!
+//! ```text
+//! r_j = min_{ℓ crossed} c_ℓ / n_ℓ  =  c_ref / max_{ℓ crossed} n_ℓ · (c_ref / c_ℓ)
+//! ```
+//!
+//! The maximand `n_ℓ · ratio_ℓ` is exactly the paper's effective degree
+//! with the oversubscription factor replaced by the capacity ratio — so
+//! when every capacity mirrors the scalar spec (`c_ℓ = c_ref / oversub_ℓ`,
+//! ratio stored as the *same float* as the factor), the share bottleneck
+//! and the degree bottleneck coincide **bit for bit**, and on a uniform
+//! flat fabric (`ratio ≡ 1`) both collapse to Eq. 6's raw count. That is
+//! the equivalence `tests/net_equivalence.rs` enforces across all three
+//! engine modes and the online loop: every existing figure is the
+//! uniform-capacity special case of this subsystem, not a casualty.
+//!
+//! Where the models genuinely diverge is **heterogeneous absolute
+//! capacity** — above all *relief links*. A ToR provisioned at 4× the
+//! server uplinks has ratio ¼: three rings aggregated on it consume less
+//! headroom than two rings on a server uplink. Degree counting cannot
+//! express a factor below 1 (`oversub ≥ 1` by construction), so it
+//! bottlenecks on the crowded fat link; the share model correctly keeps
+//! the bottleneck at the skinny uplink. The `hetero_sweep` experiment
+//! (`figures --fig hetero`) quantifies the makespan gap.
+//!
+//! # Why the engines rate rings at the bottleneck share
+//!
+//! Full progressive filling can hand a ring **more** than its bottleneck
+//! fair share: a neighbor frozen early at a hotter link stops claiming
+//! its equal split, and the filler redistributes the leftover. (Concrete
+//! instance, all capacities `c`: rings A = {ℓ₀}, B = {ℓ₀, ℓ₁}, C,D = {ℓ₁}.
+//! ℓ₁ saturates first at level c/3 freezing B, C, D; A then water-fills to
+//! 2c/3 — strictly above its c/2 equal split on ℓ₀.) That redistribution
+//! is *non-local*: one admission can ripple rates across links the
+//! newcomer never crosses, which would both break the exact Eq. 6 collapse
+//! above and invalidate the link-local dirty-set rule the incremental
+//! engines rely on. The engines therefore rate every ring at its
+//! bottleneck fair share — the max-min **guarantee** (progressive filling
+//! never allocates less; property-tested below) and the exact Eq. 6
+//! generalization — while [`progressive_fill`] computes the full
+//! water-filled rates and per-link residuals for reports, admission
+//! diagnostics and the `net_alloc` bench. A ring's modeled rate then
+//! depends only on its own crossed links' counts, so the dirty-set
+//! invalidation rule "re-rate iff a crossed link's residual moved" stays
+//! `O(touched × members)` per event.
+
+use crate::cluster::JobPlacement;
+use crate::jobs::JobId;
+use crate::topology::{LinkId, Topology};
+use crate::Result;
+use anyhow::bail;
+
+/// Reference link speed (Gbps) when a spec gives only oversubscription
+/// factors: 10 GbE, the inter-server fabric of the paper's testbed [19].
+pub const DEFAULT_UPLINK_GBPS: f64 = 10.0;
+
+/// How the engines evaluate a ring's contention at a fabric link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ContentionModel {
+    /// The paper's Eq. 6 generalization: effective degree
+    /// `count × oversub` at the worst crossed link, with `oversub ≥ 1` a
+    /// dimensionless factor. The default; ignores absolute capacities.
+    #[default]
+    EffectiveDegree,
+    /// Max-min fair bandwidth shares: each link's absolute capacity is
+    /// split equally among the rings crossing it, a ring is gated by its
+    /// bottleneck share, and the effective degree becomes
+    /// `count × (c_ref / c_ℓ)` — bit-identical to `EffectiveDegree`
+    /// whenever capacities mirror the oversubscription spec, strictly
+    /// more expressive under heterogeneous (esp. relief) capacities.
+    MaxMinFair,
+}
+
+impl ContentionModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            ContentionModel::EffectiveDegree => "degree",
+            ContentionModel::MaxMinFair => "maxmin",
+        }
+    }
+}
+
+impl std::fmt::Display for ContentionModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ContentionModel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "degree" | "effective-degree" | "eq6" => Ok(ContentionModel::EffectiveDegree),
+            "maxmin" | "max-min" | "maxmin-fair" | "max-min-fair" => {
+                Ok(ContentionModel::MaxMinFair)
+            }
+            other => bail!("unknown contention model '{other}' (expected degree|maxmin)"),
+        }
+    }
+}
+
+/// Absolute capacity of one fabric link.
+///
+/// `ratio` is the share multiplier `reference_gbps / gbps` **stored
+/// exactly as specified** rather than recomputed by division: a link
+/// derived from a scalar oversubscription factor `o` carries
+/// `ratio = o` (the very same float), which is what makes the
+/// [`MaxMinFair`](ContentionModel::MaxMinFair) bottleneck bit-identical
+/// to the degree model on oversub-specified fabrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkCapacity {
+    /// Absolute capacity in Gbps (display / allocation units).
+    pub gbps: f64,
+    /// Exact share multiplier `reference_gbps / gbps` (1.0 for a
+    /// reference-speed server uplink; > 1 for a skinny link; < 1 for a
+    /// relief link fatter than the reference).
+    pub ratio: f64,
+}
+
+impl LinkCapacity {
+    /// A reference-speed link (ratio exactly 1.0).
+    pub fn reference(ref_gbps: f64) -> Self {
+        LinkCapacity { gbps: ref_gbps, ratio: 1.0 }
+    }
+
+    /// A link specified by an oversubscription factor `o ≥ 1`: capacity
+    /// `ref / o`, ratio exactly `o`.
+    pub fn from_oversub(ref_gbps: f64, oversub: f64) -> Self {
+        debug_assert!(oversub >= 1.0);
+        LinkCapacity { gbps: ref_gbps / oversub, ratio: oversub }
+    }
+
+    /// A link specified by its absolute speed: ratio `ref / gbps`
+    /// (may be < 1 — a relief link).
+    pub fn from_gbps(ref_gbps: f64, gbps: f64) -> Self {
+        debug_assert!(gbps > 0.0);
+        LinkCapacity { gbps, ratio: ref_gbps / gbps }
+    }
+}
+
+/// Result of one progressive-filling pass over the active set.
+///
+/// Rates and residuals are in the same Gbps units as [`LinkCapacity`];
+/// ring order follows the iteration order handed to [`progressive_fill`].
+#[derive(Debug, Clone, Default)]
+pub struct Allocation {
+    /// Ring ids, in input order.
+    jobs: Vec<JobId>,
+    /// Max-min rate per ring (input order). Co-located rings cross no
+    /// inter-server link and report `f64::INFINITY` (not link-limited).
+    rates: Vec<f64>,
+    /// Bottleneck fair share per ring (input order) — the lower bound the
+    /// engines rate at; `rates[i] >= shares[i]` always.
+    shares: Vec<f64>,
+    /// Residual capacity per link after the fill, clamped at 0.
+    residual: Vec<f64>,
+    /// Filling rounds executed (links saturated).
+    pub rounds: usize,
+}
+
+impl Allocation {
+    /// Max-min rate of one ring, if it was part of the fill.
+    pub fn rate_of(&self, job: JobId) -> Option<f64> {
+        self.jobs.iter().position(|&j| j == job).map(|i| self.rates[i])
+    }
+
+    /// Bottleneck fair share of one ring, if it was part of the fill.
+    pub fn share_of(&self, job: JobId) -> Option<f64> {
+        self.jobs.iter().position(|&j| j == job).map(|i| self.shares[i])
+    }
+
+    /// Residual (unallocated) bandwidth of one link after the fill.
+    pub fn residual_gbps(&self, l: LinkId) -> f64 {
+        self.residual[l.0]
+    }
+
+    /// `(job, max-min rate, bottleneck share)` triples in input order.
+    pub fn rings(&self) -> impl Iterator<Item = (JobId, f64, f64)> + '_ {
+        self.jobs
+            .iter()
+            .zip(&self.rates)
+            .zip(&self.shares)
+            .map(|((&j, &r), &s)| (j, r, s))
+    }
+
+    /// Headroom progressive filling reclaims beyond the engines'
+    /// bottleneck-share rates, summed over all rings (Gbps).
+    pub fn reclaimed_gbps(&self) -> f64 {
+        self.rates
+            .iter()
+            .zip(&self.shares)
+            .filter(|(r, _)| r.is_finite())
+            .map(|(r, s)| r - s)
+            .sum()
+    }
+
+    pub fn num_rings(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+/// Per-link **residual bandwidth** (Gbps) under the engines'
+/// bottleneck-share rates: each spread ring consumes its share
+/// `c_ref / degree` on every link it crosses (`counts` are the live
+/// per-link ring counts the bottlenecks are read against). The single
+/// source of truth for the share-rate ledger — the tracker's and the
+/// snapshot's residual views both delegate here, so a future change to
+/// the rate model (e.g. weighted max-min) lands in one place.
+/// `O(Σ span)` over the rings; clamps FP slack at 0.
+pub fn residual_ledger<'p>(
+    topo: &Topology,
+    rings: impl Iterator<Item = (JobId, &'p JobPlacement)>,
+    counts: &[usize],
+) -> Vec<f64> {
+    let mut residual: Vec<f64> =
+        (0..topo.num_links()).map(|l| topo.link_gbps(LinkId(l))).collect();
+    for (_, pl) in rings {
+        let bn = topo.bottleneck(pl, counts);
+        if bn.link.is_some() {
+            let rate = topo.reference_gbps() / bn.effective();
+            topo.for_each_crossed(pl, |l| residual[l.0] -= rate);
+        }
+    }
+    for r in &mut residual {
+        if *r < 0.0 {
+            *r = 0.0;
+        }
+    }
+    residual
+}
+
+/// Reusable buffers for [`progressive_fill`] — one instance replayed
+/// across events/candidates allocates nothing once warmed up.
+#[derive(Debug, Clone, Default)]
+pub struct AllocScratch {
+    /// Crossed links per ring (flat arena + per-ring ranges).
+    arena: Vec<usize>,
+    spans: Vec<(usize, usize)>,
+    /// Unfrozen-crosser count per link.
+    unfrozen: Vec<usize>,
+    frozen: Vec<bool>,
+}
+
+/// Max-min fair **progressive filling** over the topology: every link's
+/// capacity is split equally among its unfrozen crossing rings; the link
+/// with the lowest fair level saturates first, freezing its rings at that
+/// level; their demand is deducted along every link they cross and the
+/// fill repeats on the residuals until every ring is frozen.
+///
+/// `O(rounds × L + Σ span)` with `rounds ≤` the number of rings; all
+/// buffers come from `scratch` and the returned [`Allocation`]'s vectors
+/// are freshly filled (callers may retain it).
+pub fn progressive_fill<'p>(
+    topo: &Topology,
+    rings: impl Iterator<Item = (JobId, &'p JobPlacement)>,
+    scratch: &mut AllocScratch,
+) -> Allocation {
+    let num_links = topo.num_links();
+    scratch.arena.clear();
+    scratch.spans.clear();
+    scratch.unfrozen.clear();
+    scratch.unfrozen.resize(num_links, 0);
+    let mut out = Allocation {
+        jobs: Vec::new(),
+        rates: Vec::new(),
+        shares: Vec::new(),
+        residual: (0..num_links).map(|l| topo.link_gbps(LinkId(l))).collect(),
+        rounds: 0,
+    };
+    for (job, pl) in rings {
+        let start = scratch.arena.len();
+        {
+            let arena = &mut scratch.arena;
+            let unfrozen = &mut scratch.unfrozen;
+            topo.for_each_crossed(pl, |l| {
+                arena.push(l.0);
+                unfrozen[l.0] += 1;
+            });
+        }
+        scratch.spans.push((start, scratch.arena.len()));
+        out.jobs.push(job);
+    }
+    let n = out.jobs.len();
+    out.rates.resize(n, f64::INFINITY);
+    out.shares.resize(n, f64::INFINITY);
+    scratch.frozen.clear();
+    scratch.frozen.resize(n, false);
+
+    // Bottleneck fair shares against the *original* counts — the engines'
+    // rate model and the filler's per-ring floor.
+    for i in 0..n {
+        let (s, e) = scratch.spans[i];
+        for &l in &scratch.arena[s..e] {
+            let share = topo.link_gbps(LinkId(l)) / scratch.unfrozen[l] as f64;
+            if share < out.shares[i] {
+                out.shares[i] = share;
+            }
+        }
+        if s == e {
+            scratch.frozen[i] = true; // co-located: not link-limited
+        }
+    }
+
+    let mut remaining = scratch.frozen.iter().filter(|f| !**f).count();
+    while remaining > 0 {
+        // the unsaturated link with the lowest fair level; ties by id
+        let mut best: Option<(f64, usize)> = None;
+        for l in 0..num_links {
+            if scratch.unfrozen[l] > 0 {
+                let level = out.residual[l] / scratch.unfrozen[l] as f64;
+                if best.map_or(true, |(b, _)| level < b) {
+                    best = Some((level, l));
+                }
+            }
+        }
+        let Some((level, sat)) = best else { break };
+        out.rounds += 1;
+        // freeze every unfrozen ring crossing the saturated link at the
+        // fair level, deducting its rate along all of its links
+        for i in 0..n {
+            if scratch.frozen[i] {
+                continue;
+            }
+            let (s, e) = scratch.spans[i];
+            if !scratch.arena[s..e].contains(&sat) {
+                continue;
+            }
+            scratch.frozen[i] = true;
+            out.rates[i] = level;
+            remaining -= 1;
+            for &l in &scratch.arena[s..e] {
+                out.residual[l] -= level;
+                scratch.unfrozen[l] -= 1;
+            }
+        }
+    }
+    for r in &mut out.residual {
+        if *r < 0.0 {
+            *r = 0.0; // FP slack from repeated subtraction
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ServerId};
+
+    fn mk(c: &Cluster, pairs: &[(usize, usize)]) -> JobPlacement {
+        JobPlacement::new(pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect())
+    }
+
+    fn fill(c: &Cluster, rings: &[(JobId, JobPlacement)]) -> Allocation {
+        let mut scratch = AllocScratch::default();
+        progressive_fill(c.topology(), rings.iter().map(|(j, p)| (*j, p)), &mut scratch)
+    }
+
+    #[test]
+    fn model_parse_roundtrip() {
+        for m in [ContentionModel::EffectiveDegree, ContentionModel::MaxMinFair] {
+            assert_eq!(m.name().parse::<ContentionModel>().unwrap(), m);
+        }
+        assert_eq!("max-min".parse::<ContentionModel>().unwrap(), ContentionModel::MaxMinFair);
+        assert!("fairshare".parse::<ContentionModel>().is_err());
+        assert_eq!(ContentionModel::default(), ContentionModel::EffectiveDegree);
+    }
+
+    #[test]
+    fn capacity_forms_keep_exact_ratios() {
+        let r = LinkCapacity::reference(10.0);
+        assert_eq!((r.gbps, r.ratio), (10.0, 1.0));
+        let o = LinkCapacity::from_oversub(10.0, 4.0);
+        assert_eq!(o.ratio, 4.0, "ratio is the factor itself, not a re-division");
+        assert_eq!(o.gbps, 2.5);
+        let g = LinkCapacity::from_gbps(10.0, 40.0);
+        assert_eq!(g.ratio, 0.25, "relief link: ratio < 1");
+    }
+
+    #[test]
+    fn lone_spread_ring_gets_the_whole_uplink() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let rings = vec![(JobId(0), mk(&c, &[(0, 0), (1, 0)]))];
+        let a = fill(&c, &rings);
+        let gbps = c.topology().link_gbps(LinkId(0));
+        assert_eq!(a.rate_of(JobId(0)), Some(gbps));
+        assert_eq!(a.share_of(JobId(0)), Some(gbps));
+        assert_eq!(a.residual_gbps(LinkId(0)), 0.0, "saturated by its only ring");
+    }
+
+    #[test]
+    fn colocated_rings_are_not_link_limited() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let rings = vec![(JobId(0), mk(&c, &[(0, 0), (0, 1)]))];
+        let a = fill(&c, &rings);
+        assert_eq!(a.rate_of(JobId(0)), Some(f64::INFINITY));
+        assert_eq!(a.rounds, 0);
+        let gbps = c.topology().link_gbps(LinkId(0));
+        assert_eq!(a.residual_gbps(LinkId(0)), gbps, "nothing consumed");
+    }
+
+    #[test]
+    fn equal_split_on_one_shared_uplink() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        // two rings sharing server 0's uplink
+        let rings = vec![
+            (JobId(0), mk(&c, &[(0, 0), (1, 0)])),
+            (JobId(1), mk(&c, &[(0, 1), (2, 0)])),
+        ];
+        let a = fill(&c, &rings);
+        let gbps = c.topology().link_gbps(LinkId(0));
+        assert_eq!(a.rate_of(JobId(0)), Some(gbps / 2.0));
+        assert_eq!(a.rate_of(JobId(1)), Some(gbps / 2.0));
+        assert_eq!(a.residual_gbps(LinkId(0)), 0.0);
+        // the non-shared uplinks keep the other half
+        assert_eq!(a.residual_gbps(LinkId(1)), gbps / 2.0);
+    }
+
+    #[test]
+    fn water_filling_reclaims_beyond_the_equal_split() {
+        // The module-doc instance: A = {s0 uplink}, B = {s0, s1}, C and D
+        // = {s1}. Link s1 saturates at level c/3 freezing B, C, D; A then
+        // fills to 2c/3 > its c/2 equal split on s0.
+        let c = Cluster::uniform(6, 8, 1.0, 25.0);
+        let rings = vec![
+            (JobId(0), mk(&c, &[(0, 0), (2, 0)])), // A: uplinks s0, s2
+            (JobId(1), mk(&c, &[(0, 1), (1, 0)])), // B: uplinks s0, s1
+            (JobId(2), mk(&c, &[(1, 1), (3, 0)])), // C: uplinks s1, s3
+            (JobId(3), mk(&c, &[(1, 2), (4, 0)])), // D: uplinks s1, s4
+        ];
+        let a = fill(&c, &rings);
+        let cbw = c.topology().link_gbps(LinkId(0));
+        let third = cbw / 3.0;
+        for id in [1, 2, 3] {
+            assert_eq!(a.rate_of(JobId(id)), Some(third), "ring {id} frozen at s1's level");
+        }
+        let rate_a = a.rate_of(JobId(0)).unwrap();
+        assert!((rate_a - (cbw - third)).abs() < 1e-12, "A reclaims to 2c/3, got {rate_a}");
+        assert_eq!(a.share_of(JobId(0)), Some(cbw / 2.0), "A's equal split is c/2");
+        assert!(a.reclaimed_gbps() > 0.0);
+        assert!(a.residual_gbps(LinkId(1)) < 1e-12, "s1 saturated");
+    }
+
+    #[test]
+    fn rates_dominate_bottleneck_shares_and_conserve_capacity() {
+        use crate::util::proptest_lite::check;
+        use crate::util::Rng;
+        check("water-fill >= equal split; links conserve", 60, |rng: &mut Rng| {
+            let c = match rng.gen_usize(0, 2) {
+                0 => Cluster::uniform(rng.gen_usize(3, 8), 4, 1.0, 25.0),
+                1 => Cluster::uniform(8, 4, 1.0, 25.0)
+                    .with_topology(crate::topology::Topology::racks(8, 2, 2.0)),
+                _ => Cluster::uniform(8, 4, 1.0, 25.0).with_topology(
+                    crate::topology::Topology::pods(8, 2, 2, 2.0, 4.0),
+                ),
+            };
+            let mut free: Vec<_> = c.all_gpus().collect();
+            rng.shuffle(&mut free);
+            let mut rings = Vec::new();
+            let mut id = 0;
+            while free.len() >= 2 && id < 10 {
+                let k = rng.gen_usize(2, free.len().min(5));
+                rings.push((JobId(id), JobPlacement::new(free.drain(..k).collect())));
+                id += 1;
+            }
+            let a = fill(&c, &rings);
+            let topo = c.topology();
+            for (j, rate, share) in a.rings() {
+                if rate.is_finite() {
+                    assert!(rate >= share - 1e-9, "{j}: rate {rate} below share {share}");
+                }
+            }
+            // conservation: per link, allocated = capacity − residual ≥ 0
+            for l in 0..topo.num_links() {
+                let res = a.residual_gbps(LinkId(l));
+                assert!(res >= 0.0 && res <= topo.link_gbps(LinkId(l)) + 1e-9);
+            }
+            // every spread ring frozen in ≤ #rings rounds
+            assert!(a.rounds <= rings.len());
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_fill() {
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let set_a = vec![
+            (JobId(0), mk(&c, &[(0, 0), (1, 0)])),
+            (JobId(1), mk(&c, &[(0, 1), (2, 0)])),
+        ];
+        let set_b = vec![(JobId(2), mk(&c, &[(2, 1), (3, 0)]))];
+        let mut scratch = AllocScratch::default();
+        for set in [&set_a, &set_b, &set_a] {
+            let reused =
+                progressive_fill(c.topology(), set.iter().map(|(j, p)| (*j, p)), &mut scratch);
+            let fresh = fill(&c, set);
+            assert_eq!(reused.rates, fresh.rates);
+            assert_eq!(reused.residual, fresh.residual);
+            assert_eq!(reused.rounds, fresh.rounds);
+        }
+    }
+}

@@ -48,7 +48,7 @@ pub use policy::{
 pub use queue::PendingQueue;
 pub use tracker::ContentionTracker;
 
-use crate::cluster::{Cluster, ClusterState, GpuId, JobPlacement};
+use crate::cluster::{Cluster, ClusterState, GpuId, JobPlacement, ServerId};
 use crate::contention::ContentionParams;
 use crate::jobs::{JobId, JobSpec};
 use crate::sched::fa_ffp_select_warm;
@@ -81,6 +81,14 @@ pub struct OnlineOptions {
     /// recompute-every-job reference path — bit-identical by property
     /// test (`tests/sim_engine_equivalence.rs`), kept for cross-checking.
     pub rate_cache: bool,
+    /// Sliding-window steady-state metrics: `Some(w)` slices the run into
+    /// windows of `w` slots and records per-window GPU busy-time and
+    /// time-weighted queue length in [`OnlineOutcome::windows`] (the
+    /// open-system view — utilization and backlog *over time*, which the
+    /// run-level aggregates average away). `None` (default) records
+    /// nothing; the accounting is passive either way — the schedule is
+    /// bit-identical with the flag on or off.
+    pub window: Option<u64>,
 }
 
 impl Default for OnlineOptions {
@@ -91,7 +99,83 @@ impl Default for OnlineOptions {
             admission: AdmissionControl::default(),
             migration: MigrationControl::default(),
             rate_cache: true,
+            window: None,
         }
+    }
+}
+
+/// One window of the sliding-window steady-state series (see
+/// [`OnlineOptions::window`]): the loop distributes every constant-rate
+/// period exactly across the windows it overlaps, so sums over windows
+/// equal the run totals.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WindowSample {
+    /// First slot of the window (`index × w`).
+    pub start: u64,
+    /// GPU busy slots accrued inside the window (running gangs hold their
+    /// GPUs through checkpoint-restart freezes, matching the run-level
+    /// utilization accounting).
+    pub busy_gpu_slots: f64,
+    /// `∫ queue_len dt` over the window — divide by the window length for
+    /// the time-weighted mean backlog.
+    pub queue_area: f64,
+    /// Largest pending-queue length observed during the window.
+    pub max_queue: usize,
+}
+
+impl WindowSample {
+    /// Mean GPU utilization over the window.
+    pub fn utilization(&self, num_gpus: usize, window: u64) -> f64 {
+        if num_gpus == 0 || window == 0 {
+            0.0
+        } else {
+            self.busy_gpu_slots / (num_gpus as u64 * window) as f64
+        }
+    }
+
+    /// Time-weighted mean queue length over the window.
+    pub fn mean_queue(&self, window: u64) -> f64 {
+        if window == 0 { 0.0 } else { self.queue_area / window as f64 }
+    }
+}
+
+/// "Coolest capacity" of a free-GPU pool: the sum over the `gpus`
+/// least-busy entries — the GPUs a selection would actually take — NOT
+/// over every free GPU (which would bias toward servers with fewer free
+/// GPUs regardless of how hot they run). Shared by every
+/// migration-candidate stage.
+fn coolest_sum(busies: &mut Vec<f64>, gpus: usize) -> f64 {
+    busies.sort_by(|a, b| a.partial_cmp(b).expect("busy history is finite"));
+    busies.iter().take(gpus).sum()
+}
+
+/// Distribute one constant-rate period `[t, t+dt)` across the window
+/// buckets it overlaps (buckets are created on demand, so idle gaps
+/// appear as all-zero windows).
+fn account_window(
+    windows: &mut Vec<WindowSample>,
+    w: u64,
+    t: u64,
+    dt: u64,
+    busy_per_slot: f64,
+    queue_len: usize,
+) {
+    debug_assert!(w > 0);
+    let mut cur = t;
+    let end = t + dt;
+    while cur < end {
+        let idx = (cur / w) as usize;
+        while windows.len() <= idx {
+            let i = windows.len() as u64;
+            windows.push(WindowSample { start: i * w, ..WindowSample::default() });
+        }
+        let bucket_end = (cur / w + 1) * w;
+        let overlap = bucket_end.min(end) - cur;
+        let s = &mut windows[idx];
+        s.busy_gpu_slots += busy_per_slot * overlap as f64;
+        s.queue_area += queue_len as f64 * overlap as f64;
+        s.max_queue = s.max_queue.max(queue_len);
+        cur = bucket_end.min(end);
     }
 }
 
@@ -125,6 +209,9 @@ pub struct OnlineOutcome {
     pub migrations: Vec<MigrationRecord>,
     /// High-water mark of the pending-queue length over the run.
     pub max_pending: usize,
+    /// Sliding-window steady-state series (empty unless
+    /// [`OnlineOptions::window`] was set).
+    pub windows: Vec<WindowSample>,
 }
 
 impl OnlineOutcome {
@@ -216,6 +303,51 @@ impl<'a> OnlineScheduler<'a> {
         sel.map(|g| tracker.whatif_bottleneck(&JobPlacement::new(g)))
     }
 
+    /// The best group-local free gang among server groups (racks or
+    /// pods): pick the group whose `gpus` coolest free GPUs are least
+    /// busy, then fill densest free servers first — fewest servers ⇒
+    /// fewest crossed server uplinks inside the group. Shared by the
+    /// rack- and pod-local stages of
+    /// [`migration_candidate`](Self::migration_candidate). `servers_of`
+    /// yields a group's servers lazily, so the scan allocates only for
+    /// the winner (the sort needs a materialized list) and the free-GPU
+    /// `busies` tally — same shape as the pre-pod rack stage.
+    fn group_local_candidate<I: Iterator<Item = ServerId>>(
+        &self,
+        state: &ClusterState,
+        busy_history: &[f64],
+        gpus: usize,
+        servers_of: impl Fn(usize) -> I,
+        num_groups: usize,
+    ) -> Option<JobPlacement> {
+        let mut best: Option<(f64, usize)> = None;
+        for group in 0..num_groups {
+            let free: usize = servers_of(group).map(|s| state.free_on(s)).sum();
+            if free >= gpus {
+                let mut busies: Vec<f64> = servers_of(group)
+                    .flat_map(|s| state.free_gpus_of(self.cluster, s))
+                    .map(|g| busy_history[g.global])
+                    .collect();
+                let load = coolest_sum(&mut busies, gpus);
+                if best.map_or(true, |(b, _)| load < b) {
+                    best = Some((load, group));
+                }
+            }
+        }
+        let (_, group) = best?;
+        let mut servers: Vec<ServerId> = servers_of(group).collect();
+        servers.sort_by_key(|&s| (std::cmp::Reverse(state.free_on(s)), s));
+        let mut gs: Vec<GpuId> = Vec::with_capacity(gpus);
+        for s in servers {
+            gs.extend(state.free_gpus_of(self.cluster, s));
+            if gs.len() >= gpus {
+                break;
+            }
+        }
+        gs.truncate(gpus);
+        Some(JobPlacement::new(gs))
+    }
+
     /// Candidate gang for a migration, locality-first — the freed
     /// capacity the move should exploit, per the contention model's
     /// preference order:
@@ -224,7 +356,9 @@ impl<'a> OnlineScheduler<'a> {
     ///    crosses no link at all),
     /// 2. a single **rack** with a free gang (the ring stays below one
     ///    ToR; densest servers first to minimize uplink crossings),
-    /// 3. cluster-wide FA-FFP over the free GPUs (fallback).
+    /// 3. a single **pod** with a free gang (3-tier fabrics: the ring
+    ///    crosses ToRs but stays below one pod switch),
+    /// 4. cluster-wide FA-FFP over the free GPUs (fallback).
     ///
     /// Ties break by cumulative busy history (coolest capacity first),
     /// then ids — deterministic.
@@ -234,15 +368,6 @@ impl<'a> OnlineScheduler<'a> {
         busy_history: &[f64],
         gpus: usize,
     ) -> Option<JobPlacement> {
-        use crate::cluster::ServerId;
-        // "coolest capacity" = the sum over the `gpus` least-busy free
-        // GPUs of the pool — the GPUs a selection would actually take —
-        // NOT over every free GPU (which would bias toward servers with
-        // fewer free GPUs regardless of how hot they run).
-        let coolest_sum = |busies: &mut Vec<f64>| -> f64 {
-            busies.sort_by(|a, b| a.partial_cmp(b).expect("busy history is finite"));
-            busies.iter().take(gpus).sum()
-        };
         // (1) co-location on one server
         let mut best: Option<(f64, ServerId)> = None;
         for s in self.cluster.server_ids() {
@@ -251,7 +376,7 @@ impl<'a> OnlineScheduler<'a> {
                     .free_gpus_of(self.cluster, s)
                     .map(|g| busy_history[g.global])
                     .collect();
-                let load = coolest_sum(&mut busies);
+                let load = coolest_sum(&mut busies, gpus);
                 if best.map_or(true, |(b, _)| load < b) {
                     best = Some((load, s));
                 }
@@ -272,38 +397,29 @@ impl<'a> OnlineScheduler<'a> {
         // server is its own rack, already covered by (1))
         let topo = self.cluster.topology();
         if topo.has_racks() {
-            let mut best: Option<(f64, usize)> = None;
-            for rack in 0..topo.num_racks() {
-                let free: usize = topo.servers_in_rack(rack).map(|s| state.free_on(s)).sum();
-                if free >= gpus {
-                    let mut busies: Vec<f64> = topo
-                        .servers_in_rack(rack)
-                        .flat_map(|s| state.free_gpus_of(self.cluster, s))
-                        .map(|g| busy_history[g.global])
-                        .collect();
-                    let load = coolest_sum(&mut busies);
-                    if best.map_or(true, |(b, _)| load < b) {
-                        best = Some((load, rack));
-                    }
-                }
-            }
-            if let Some((_, rack)) = best {
-                // densest free servers first: fewest servers → fewest
-                // crossed server uplinks inside the rack
-                let mut servers: Vec<ServerId> = topo.servers_in_rack(rack).collect();
-                servers.sort_by_key(|&s| (std::cmp::Reverse(state.free_on(s)), s));
-                let mut gs: Vec<GpuId> = Vec::with_capacity(gpus);
-                for s in servers {
-                    gs.extend(state.free_gpus_of(self.cluster, s));
-                    if gs.len() >= gpus {
-                        break;
-                    }
-                }
-                gs.truncate(gpus);
-                return Some(JobPlacement::new(gs));
+            if let Some(pl) = self.group_local_candidate(
+                state,
+                busy_history,
+                gpus,
+                |g| topo.servers_in_rack(g),
+                topo.num_racks(),
+            ) {
+                return Some(pl);
             }
         }
-        // (3) cluster-wide fallback
+        // (3) pod-local gang (3-tier fabrics: below one pod switch)
+        if topo.has_pods() {
+            if let Some(pl) = self.group_local_candidate(
+                state,
+                busy_history,
+                gpus,
+                |g| topo.servers_in_pod(g),
+                topo.num_pods(),
+            ) {
+                return Some(pl);
+            }
+        }
+        // (4) cluster-wide fallback
         let occ = self.occupied_per_server(state);
         fa_ffp_select_warm(
             self.cluster,
@@ -348,6 +464,8 @@ impl<'a> OnlineScheduler<'a> {
         let mut t: u64 = 0;
         let admission_active = self.options.admission.is_active();
         let rate_cache = self.options.rate_cache;
+        let window = self.options.window;
+        let mut windows: Vec<WindowSample> = Vec::new();
 
         loop {
             // 1) Reveal arrivals due by now. With admission control armed,
@@ -441,6 +559,20 @@ impl<'a> OnlineScheduler<'a> {
                 match order.get(next_arrival) {
                     // Idle (or stuck) until the next arrival reveals work.
                     Some(spec) if spec.arrival < self.options.max_slots => {
+                        if let Some(w) = window {
+                            // idle gap: zero busy GPUs, but the queue may
+                            // hold a stuck (unplaceable) backlog
+                            if spec.arrival > t {
+                                account_window(
+                                    &mut windows,
+                                    w,
+                                    t,
+                                    spec.arrival - t,
+                                    0.0,
+                                    pending.len(),
+                                );
+                            }
+                        }
                         t = spec.arrival;
                         continue;
                     }
@@ -510,6 +642,13 @@ impl<'a> OnlineScheduler<'a> {
             //    checkpoint-restart window holds its GPUs (they stay busy
             //    for utilization accounting) but makes no progress and
             //    accrues no τ statistics.
+            if let Some(w) = window {
+                // queue length and the busy gang set are constant over a
+                // period; split the period exactly across window buckets
+                let busy_per_slot: f64 =
+                    running.iter().map(|r| r.placement.num_workers() as f64).sum();
+                account_window(&mut windows, w, t, dt, busy_per_slot, pending.len());
+            }
             for r in running.iter_mut() {
                 if t >= r.freeze_until {
                     r.progress += r.rate.inc * dt as f64;
@@ -707,6 +846,7 @@ impl<'a> OnlineScheduler<'a> {
             rejected,
             migrations,
             max_pending,
+            windows,
         }
     }
 }
@@ -907,6 +1047,44 @@ mod tests {
 
     fn out_migrations_total(o: &OnlineOutcome) -> usize {
         o.outcome.records.iter().map(|r| r.migrations).sum()
+    }
+
+    #[test]
+    fn window_series_conserves_busy_time_and_leaves_the_run_untouched() {
+        let (c, p) = setup();
+        let jobs = TraceGenerator::tiny().generate_online(7, 4.0);
+        let plain = OnlineScheduler::new(&c, &jobs, &p).run(&mut Fifo);
+        let w = 50u64;
+        let opts = OnlineOptions { window: Some(w), ..OnlineOptions::default() };
+        let windowed = OnlineScheduler::new(&c, &jobs, &p).with_options(opts).run(&mut Fifo);
+        // the accounting is passive: the schedule is bit-identical
+        assert_eq!(plain.outcome.makespan, windowed.outcome.makespan);
+        assert_eq!(plain.outcome.avg_jct, windowed.outcome.avg_jct);
+        assert_eq!(plain.outcome.records.len(), windowed.outcome.records.len());
+        assert!(plain.windows.is_empty(), "no series without the flag");
+        assert!(!windowed.windows.is_empty());
+        // windows tile the run: start = index x w, coverage up to the end
+        for (i, s) in windowed.windows.iter().enumerate() {
+            assert_eq!(s.start, i as u64 * w);
+            let util = s.utilization(c.num_gpus(), w);
+            assert!((0.0..=1.0 + 1e-9).contains(&util), "window {i}: util {util}");
+            assert!(s.queue_area >= 0.0 && s.max_queue >= (s.queue_area > 0.0) as usize);
+        }
+        // exact conservation: window busy sums to the per-record total
+        let total: f64 = windowed.windows.iter().map(|s| s.busy_gpu_slots).sum();
+        let expect: f64 = windowed
+            .outcome
+            .records
+            .iter()
+            .map(|r| (r.finish - r.start) as f64 * r.workers as f64)
+            .sum();
+        assert!(
+            (total - expect).abs() < 1e-6,
+            "window busy {total} != record busy {expect}"
+        );
+        // the mean-queue accessor is the area over the length
+        let s0 = windowed.windows[0];
+        assert!((s0.mean_queue(w) - s0.queue_area / w as f64).abs() < 1e-12);
     }
 
     #[test]

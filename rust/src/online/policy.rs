@@ -265,7 +265,13 @@ impl OnlinePolicy for OnlineSjfBco {
 ///   strictly past `theta`. The projection places the job with the same
 ///   FA-FFP selection the dispatch policies use — over the free GPUs when
 ///   a gang fits, else over all GPUs (the structural lower bound on the
-///   contention it must cause).
+///   contention it must cause). Under the
+///   [`MaxMinFair`](crate::net::ContentionModel::MaxMinFair) model the
+///   multiplier is the capacity ratio, so the effective degree is the
+///   reciprocal of the job's projected **bandwidth share** — `θ` then
+///   reads as a floor `c_ref / θ` on the share an admitted ring must
+///   receive (see
+///   [`ContentionTracker::whatif_share_gbps`](super::ContentionTracker::whatif_share_gbps)).
 /// * **queue cap** — unconditionally reject once the pending queue holds
 ///   `queue_cap` jobs: under `λ > capacity` no threshold on contention
 ///   bounds the backlog, only a cap does.

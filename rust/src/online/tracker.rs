@@ -37,6 +37,7 @@
 use crate::cluster::{Cluster, JobPlacement};
 use crate::contention::ContentionSnapshot;
 use crate::jobs::JobId;
+use crate::net::{self, Allocation};
 use crate::topology::{Bottleneck, Topology};
 
 /// Live per-link contention state of the running set.
@@ -46,8 +47,15 @@ pub struct ContentionTracker {
     /// a handful of small `Vec`s).
     topology: Topology,
     /// `link_jobs[ℓ] = Σ_{j active} 1{ring j crosses ℓ}` — the generalized
-    /// Eq. 6 count per fabric link (server uplinks first, then ToRs).
+    /// Eq. 6 count per fabric link (server uplinks first, then ToRs,
+    /// then pod uplinks).
     link_jobs: Vec<usize>,
+    /// `count_hist[c] = #links with count c` for `c ≥ 1` — maintained
+    /// alongside the counts so [`max_contention`](Self::max_contention)
+    /// is O(1) instead of an O(L) scan per call (the histogram walk on
+    /// decrement amortizes against the increments that raised the max).
+    count_hist: Vec<usize>,
+    max_count: usize,
     /// Active placements, indexed by dense `JobId`.
     active: Vec<Option<JobPlacement>>,
     num_active: usize,
@@ -57,7 +65,14 @@ impl ContentionTracker {
     pub fn new(cluster: &Cluster) -> Self {
         let topology = cluster.topology().clone();
         let link_jobs = vec![0; topology.num_links()];
-        ContentionTracker { topology, link_jobs, active: Vec::new(), num_active: 0 }
+        ContentionTracker {
+            topology,
+            link_jobs,
+            count_hist: Vec::new(),
+            max_count: 0,
+            active: Vec::new(),
+            num_active: 0,
+        }
     }
 
     /// Number of currently active jobs.
@@ -70,6 +85,8 @@ impl ContentionTracker {
     /// candidate-plan replays.
     pub fn reset(&mut self) {
         self.link_jobs.iter_mut().for_each(|c| *c = 0);
+        self.count_hist.iter_mut().for_each(|h| *h = 0);
+        self.max_count = 0;
         self.active.clear();
         self.num_active = 0;
     }
@@ -83,7 +100,22 @@ impl ContentionTracker {
         }
         assert!(self.active[job.0].is_none(), "{job} already active in tracker");
         let link_jobs = &mut self.link_jobs;
-        self.topology.for_each_crossed(placement, |l| link_jobs[l.0] += 1);
+        let hist = &mut self.count_hist;
+        let max_count = &mut self.max_count;
+        self.topology.for_each_crossed(placement, |l| {
+            let c = link_jobs[l.0];
+            link_jobs[l.0] = c + 1;
+            if hist.len() <= c + 1 {
+                hist.resize(c + 2, 0);
+            }
+            if c > 0 {
+                hist[c] -= 1;
+            }
+            hist[c + 1] += 1;
+            if c + 1 > *max_count {
+                *max_count = c + 1;
+            }
+        });
         self.active[job.0] = Some(placement.clone());
         self.num_active += 1;
         self.debug_check_against_rebuild();
@@ -101,7 +133,24 @@ impl ContentionTracker {
         debug_assert!(slot.is_some(), "{job} not active in tracker");
         let placement = slot?;
         let link_jobs = &mut self.link_jobs;
-        self.topology.for_each_crossed(&placement, |l| link_jobs[l.0] -= 1);
+        let hist = &mut self.count_hist;
+        let max_count = &mut self.max_count;
+        self.topology.for_each_crossed(&placement, |l| {
+            let c = link_jobs[l.0];
+            link_jobs[l.0] = c - 1;
+            hist[c] -= 1;
+            if c > 1 {
+                hist[c - 1] += 1;
+            }
+            // the histogram may have gaps (e.g. counts {5, 3}); walk down
+            // past empty buckets — each step undoes one earlier raise, so
+            // the walk amortizes to O(1) per mutation
+            if c == *max_count && hist[c] == 0 {
+                while *max_count > 0 && hist[*max_count] == 0 {
+                    *max_count -= 1;
+                }
+            }
+        });
         self.num_active -= 1;
         self.debug_check_against_rebuild();
         Some(placement)
@@ -165,7 +214,7 @@ impl ContentionTracker {
         self.topology.for_each_crossed(placement, |l| {
             let cand = Bottleneck {
                 p: self.link_jobs[l.0] + 1,
-                oversub: self.topology.oversub(l),
+                oversub: self.topology.multiplier(l),
                 link: Some(l),
             };
             if best.link.is_none() || cand.dominates(&best) {
@@ -173,6 +222,22 @@ impl ContentionTracker {
             }
         });
         best
+    }
+
+    /// **Speculative** bandwidth share (Gbps) a not-yet-admitted placement
+    /// would be allocated right now: the equal split of its projected
+    /// bottleneck link, `c_ref / (count × multiplier)`. Co-located
+    /// candidates are not link-limited (`f64::INFINITY`). Under
+    /// [`ContentionModel::MaxMinFair`](crate::net::ContentionModel) this
+    /// is the quantity the θ-admission guard effectively bounds from
+    /// below: `degree > θ  ⟺  share < c_ref / θ`.
+    pub fn whatif_share_gbps(&self, placement: &JobPlacement) -> f64 {
+        let bn = self.whatif_bottleneck(placement);
+        if bn.link.is_none() {
+            f64::INFINITY
+        } else {
+            self.topology.reference_gbps() / bn.effective()
+        }
     }
 
     /// **Speculative** bottleneck an *active* job would see after moving to
@@ -196,7 +261,7 @@ impl ContentionTracker {
             let minus = usize::from(own.contains(&l.0));
             let cand = Bottleneck {
                 p: self.link_jobs[l.0] - minus + 1,
-                oversub: self.topology.oversub(l),
+                oversub: self.topology.multiplier(l),
                 link: Some(l),
             };
             if best.link.is_none() || cand.dominates(&best) {
@@ -206,11 +271,45 @@ impl ContentionTracker {
         Some(best)
     }
 
-    /// Largest active-ring count on any single fabric link — `O(L)`. On a
-    /// flat fabric this equals the largest contention degree across all
-    /// active jobs.
+    /// Largest active-ring count on any single fabric link — O(1) from
+    /// the count histogram maintained on every admit/complete/migrate
+    /// (the `O(L)` scan survives as
+    /// [`max_contention_scan`](Self::max_contention_scan), the
+    /// cross-checked reference). On a flat fabric this equals the largest
+    /// contention degree across all active jobs.
     pub fn max_contention(&self) -> usize {
+        debug_assert_eq!(
+            self.max_count,
+            self.max_contention_scan(),
+            "count histogram diverged from the O(L) scan"
+        );
+        self.max_count
+    }
+
+    /// The pre-histogram `O(L)` reference for
+    /// [`max_contention`](Self::max_contention) — kept for the debug
+    /// cross-check, the property test and the `net_alloc` bench.
+    pub fn max_contention_scan(&self) -> usize {
         self.link_jobs.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Per-link **residual bandwidth** (Gbps) under the engines'
+    /// bottleneck-share rates ([`net::residual_ledger`] over the active
+    /// set): what is left per link is the headroom the dirty-set
+    /// invalidation rule reasons about (a link's residual moves iff its
+    /// count — or a crosser's bottleneck — moved, both of which the
+    /// touched-link rule covers). `O(Σ span)` over the active set — a
+    /// report/diagnostic path, not the hot loop.
+    pub fn residual_gbps(&self) -> Vec<f64> {
+        net::residual_ledger(&self.topology, self.active_jobs(), &self.link_jobs)
+    }
+
+    /// Full max-min **progressive fill** over the active set
+    /// ([`net::progressive_fill`]): true water-filled per-ring rates and
+    /// per-link residuals, including the headroom the bottleneck-share
+    /// model leaves unclaimed. Report path; allocates the output.
+    pub fn water_fill(&self, scratch: &mut net::AllocScratch) -> Allocation {
+        net::progressive_fill(&self.topology, self.active_jobs(), scratch)
     }
 
     /// Active (job, placement) pairs in job-id order.
@@ -469,6 +568,78 @@ mod tests {
         assert_eq!(tr.p_j(JobId(0)), 1);
         let snap = tr.full_rebuild(&c);
         assert_eq!(snap.p_j(JobId(0)), 1);
+    }
+
+    #[test]
+    fn incremental_max_contention_tracks_the_scan() {
+        use crate::topology::Topology;
+        use crate::util::proptest_lite::check;
+        check("histogram max == O(L) scan", 40, |rng| {
+            let c = match rng.gen_usize(0, 2) {
+                0 => Cluster::uniform(rng.gen_usize(3, 6), 4, 1.0, 25.0),
+                1 => Cluster::uniform(6, 4, 1.0, 25.0)
+                    .with_topology(Topology::racks(6, 2, 2.0)),
+                _ => Cluster::uniform(8, 4, 1.0, 25.0)
+                    .with_topology(Topology::pods(8, 2, 2, 2.0, 4.0)),
+            };
+            let mut tr = ContentionTracker::new(&c);
+            let mut active: Vec<JobId> = Vec::new();
+            let mut next = 0usize;
+            for _ in 0..60 {
+                let roll = rng.gen_f64();
+                if active.is_empty() || roll < 0.55 {
+                    let k = rng.gen_usize(1, c.num_gpus().min(6));
+                    let mut gpus: Vec<_> = c.all_gpus().collect();
+                    rng.shuffle(&mut gpus);
+                    gpus.truncate(k);
+                    let job = JobId(next);
+                    next += 1;
+                    tr.admit(job, &JobPlacement::new(gpus));
+                    active.push(job);
+                } else if roll < 0.8 {
+                    let victim = active.swap_remove(rng.gen_usize(0, active.len() - 1));
+                    tr.complete(victim);
+                } else {
+                    let job = active[rng.gen_usize(0, active.len() - 1)];
+                    let k = rng.gen_usize(1, c.num_gpus().min(6));
+                    let mut gpus: Vec<_> = c.all_gpus().collect();
+                    rng.shuffle(&mut gpus);
+                    gpus.truncate(k);
+                    tr.migrate(job, &JobPlacement::new(gpus));
+                }
+                assert_eq!(tr.max_contention(), tr.max_contention_scan());
+            }
+            tr.reset();
+            assert_eq!(tr.max_contention(), 0);
+        });
+    }
+
+    #[test]
+    fn residuals_and_water_fill_account_for_the_active_set() {
+        let c = Cluster::uniform(3, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        let full = c.topology().link_gbps(crate::topology::LinkId(0));
+        assert_eq!(tr.residual_gbps(), vec![full; 3], "idle fabric is all headroom");
+        tr.admit(JobId(0), &mk(&c, &[(0, 0), (1, 0)]));
+        tr.admit(JobId(1), &mk(&c, &[(0, 1), (2, 0)]));
+        let res = tr.residual_gbps();
+        // both rings bottleneck on server 0's uplink (count 2): share c/2
+        // each, saturating link 0; links 1 and 2 keep the other half
+        assert!(res[0].abs() < 1e-12, "shared uplink saturated, got {}", res[0]);
+        assert_eq!(res[1], full / 2.0);
+        assert_eq!(res[2], full / 2.0);
+        let mut scratch = crate::net::AllocScratch::default();
+        let alloc = tr.water_fill(&mut scratch);
+        assert_eq!(alloc.num_rings(), 2);
+        assert_eq!(alloc.rate_of(JobId(0)), Some(full / 2.0));
+        // projected share of a third ring across the hot uplink: c/3
+        let share = tr.whatif_share_gbps(&mk(&c, &[(0, 2), (1, 1)]));
+        assert!((share - full / 3.0).abs() < 1e-12, "got {share}");
+        assert_eq!(
+            tr.whatif_share_gbps(&mk(&c, &[(2, 1), (2, 2)])),
+            f64::INFINITY,
+            "co-located candidates are not link-limited"
+        );
     }
 
     #[test]

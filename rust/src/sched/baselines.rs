@@ -225,9 +225,11 @@ pub fn gadget_locality(
         {
             return Some(gs[..job.gpus].to_vec());
         }
-        // Otherwise minimise span: fill from the rack with the most
-        // eligible GPUs (rack tiers only — flat fabrics skip straight to
-        // the seed rule), and within it the fullest servers first.
+        // Otherwise minimise span: fill pod-major (3-tier fabrics), then
+        // from the rack with the most eligible GPUs (rack tiers only —
+        // flat fabrics skip straight to the seed rule), and within it the
+        // fullest servers first — the ring crosses the fewest pod, then
+        // ToR, uplinks.
         let topo = c.topology();
         let rack_eligible: Option<Vec<usize>> = topo.has_racks().then(|| {
             let mut re = vec![0usize; topo.num_racks()];
@@ -236,7 +238,26 @@ pub fn gadget_locality(
             }
             re
         });
+        let pod_eligible: Option<Vec<usize>> =
+            (topo.has_pods() && rack_eligible.is_some()).then(|| {
+                let re = rack_eligible.as_ref().expect("guarded");
+                let mut pe = vec![0usize; topo.num_pods()];
+                for (r, &n) in re.iter().enumerate() {
+                    pe[topo.pod_of_rack(r)] += n;
+                }
+                pe
+            });
         per_server.sort_by(|a, b| {
+            let pod_key = match &pod_eligible {
+                Some(pe) => {
+                    let (pa, pb) = (
+                        topo.pod_index(crate::cluster::ServerId(a.0)),
+                        topo.pod_index(crate::cluster::ServerId(b.0)),
+                    );
+                    pe[pb].cmp(&pe[pa]).then(pa.cmp(&pb))
+                }
+                None => std::cmp::Ordering::Equal,
+            };
             let rack_key = match &rack_eligible {
                 Some(re) => {
                     let (ra, rb) = (
@@ -247,7 +268,7 @@ pub fn gadget_locality(
                 }
                 None => std::cmp::Ordering::Equal,
             };
-            rack_key.then(b.1.len().cmp(&a.1.len())).then(a.0.cmp(&b.0))
+            pod_key.then(rack_key).then(b.1.len().cmp(&a.1.len())).then(a.0.cmp(&b.0))
         });
         let mut picked = Vec::with_capacity(job.gpus);
         for (_, gs) in per_server {
@@ -315,6 +336,36 @@ mod tests {
         let jobs = vec![JobSpec::synthetic(JobId(0), 12)];
         let plan = gadget_locality(&c, &jobs, &p, 100_000).unwrap();
         assert_eq!(plan.entries[0].placement.span(), 2);
+    }
+
+    #[test]
+    fn gadget_fills_pod_major_on_three_tier_fabrics() {
+        use crate::topology::Topology;
+        let p = ContentionParams::paper();
+        // capacities [4,4,2,2,3,3,3,3], racks of 2, pods of 2 racks:
+        // rack capacities [8,4,6,6], pod capacities [12,12]. A 10-GPU
+        // ring filled rack-major would take rack 0 (8 eligible) then
+        // rack 2 (6) — crossing into pod 1. Pod-major fill stays inside
+        // pod 0: rack 0 (8) + rack 1 (2 of 4).
+        let c = Cluster::new(&[4, 4, 2, 2, 3, 3, 3, 3], 1.0, 25.0)
+            .with_topology(Topology::pods(8, 2, 2, 2.0, 2.0));
+        let jobs = vec![JobSpec::synthetic(JobId(0), 10)];
+        let plan = gadget_locality(&c, &jobs, &p, 100_000).unwrap();
+        let placement = &plan.entries[0].placement;
+        assert!(
+            placement.servers().all(|s| s.0 <= 3),
+            "ring must stay below pod 0's switch, got {:?}",
+            placement.servers().collect::<Vec<_>>()
+        );
+        // the rack-only twin reproduces the old rack-major fill, which
+        // crosses pods' worth of servers (rack 0 then rack 2)
+        let racked = Cluster::new(&[4, 4, 2, 2, 3, 3, 3, 3], 1.0, 25.0)
+            .with_topology(Topology::racks(8, 2, 2.0));
+        let plan = gadget_locality(&racked, &jobs, &p, 100_000).unwrap();
+        assert!(
+            plan.entries[0].placement.servers().any(|s| s.0 >= 4),
+            "rack-major fill reaches servers 4+"
+        );
     }
 
     #[test]

@@ -239,6 +239,18 @@ pub fn fa_ffp_select_warm(
         }
         ro
     });
+    // …and per pod, one tier up (3-tier fabrics only): after rack
+    // locality, prefer pods that already host work so small rings stay
+    // below one pod switch instead of opening a fresh pod and crossing
+    // the spine.
+    let pod_occ: Option<Vec<usize>> = (topo.has_pods() && rack_occ.is_some()).then(|| {
+        let ro = rack_occ.as_ref().expect("guarded");
+        let mut po = vec![0usize; topo.num_pods()];
+        for (r, &w) in ro.iter().enumerate() {
+            po[topo.pod_of_rack(r)] += w;
+        }
+        po
+    });
     let cmp = |a: &GpuId, b: &GpuId| {
         busy(*a)
             .partial_cmp(&busy(*b))
@@ -247,6 +259,11 @@ pub fn fa_ffp_select_warm(
             .then(match &rack_occ {
                 // …then warm racks (rack-local before crossing the spine)
                 Some(ro) => ro[topo.rack_index(b.server)].cmp(&ro[topo.rack_index(a.server)]),
+                None => std::cmp::Ordering::Equal,
+            })
+            .then(match &pod_occ {
+                // …then warm pods (pod-local after rack-local)
+                Some(po) => po[topo.pod_index(b.server)].cmp(&po[topo.pod_index(a.server)]),
                 None => std::cmp::Ordering::Equal,
             })
             .then(a.server.cmp(&b.server))
@@ -290,10 +307,12 @@ pub(crate) fn fa_ffp(
 /// Topology generalization: when the fabric has a rack tier and a single
 /// rack's capacity covers the over-provisioned pool `λ · G_j`, the server
 /// pool is restricted to the least-loaded such rack — the ring then never
-/// crosses an (oversubscribed) ToR uplink. If the rack-local pool cannot
-/// yield `G_j` eligible GPUs, selection falls back to the cluster-wide
-/// rule, so feasibility never shrinks. Flat fabrics skip the restriction
-/// and behave exactly as the seed.
+/// crosses an (oversubscribed) ToR uplink. On a 3-tier fabric, if no rack
+/// covers the pool, the least-loaded covering **pod** is tried next (the
+/// ring crosses ToRs but stays below one pod switch). If a restricted
+/// pool cannot yield `G_j` eligible GPUs, selection falls back to the
+/// cluster-wide rule, so feasibility never shrinks. Flat fabrics skip
+/// every restriction and behave exactly as the seed.
 pub fn lbsgf_select(
     cluster: &Cluster,
     gpus_needed: usize,
@@ -305,8 +324,9 @@ pub fn lbsgf_select(
 }
 
 /// [`lbsgf_select`] with the loop-invariant [`PlacementCtx`] precomputed
-/// — the form the planner's bisection uses so per-rack capacities are
-/// tallied once per `sjf_bco` call, not per job per κ per θ.
+/// — the form the planner's bisection uses so per-rack (and per-pod)
+/// capacities are tallied once per `sjf_bco` call, not per job per κ per
+/// θ.
 pub fn lbsgf_select_ctx(
     cluster: &Cluster,
     ctx: &PlacementCtx,
@@ -318,26 +338,54 @@ pub fn lbsgf_select_ctx(
     let need = (lambda * gpus_needed as f64).ceil() as usize;
     let topo = cluster.topology();
     if topo.has_racks() {
-        if let Some(rack) = least_loaded_covering_rack(cluster, ctx, need, &busy) {
+        if let Some(rack) = least_loaded_covering_group(
+            cluster,
+            &ctx.rack_cap,
+            |s| topo.rack_index(s),
+            need,
+            &busy,
+        ) {
             if let Some(sel) =
-                lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, Some(rack))
+                lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, Pool::Rack(rack))
             {
                 return Some(sel);
             }
         }
+        // No rack covers the pool — or the covering rack's GPUs were
+        // θ-ineligible: either way, keep the ring below one pod switch if
+        // a pod can (pod-locality after rack-locality) before spreading
+        // cluster-wide across the spine.
+        if topo.has_pods() {
+            if let Some(pod) = least_loaded_covering_group(
+                cluster,
+                &ctx.pod_cap,
+                |s| topo.pod_index(s),
+                need,
+                &busy,
+            ) {
+                if let Some(sel) =
+                    lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, Pool::Pod(pod))
+                {
+                    return Some(sel);
+                }
+            }
+        }
     }
-    lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, None)
+    lbsgf_pool(cluster, gpus_needed, need, &eligible, &busy, Pool::All)
 }
 
-/// Loop-invariant placement context: cluster-shape tallies (per-rack GPU
-/// capacities) that every candidate placement of a planner run shares.
-/// Computed once per planner invocation and threaded through the
-/// per-candidate path, which previously re-derived them per job per κ.
+/// Loop-invariant placement context: cluster-shape tallies (per-rack and
+/// per-pod GPU capacities) that every candidate placement of a planner
+/// run shares. Computed once per planner invocation and threaded through
+/// the per-candidate path, which previously re-derived them per job per κ.
 #[derive(Debug, Clone)]
 pub struct PlacementCtx {
     /// `rack_cap[r]` = Σ capacities of rack `r`'s servers; empty on a
     /// flat fabric (no rack pool restriction applies there).
     rack_cap: Vec<usize>,
+    /// `pod_cap[p]` = Σ capacities of pod `p`'s racks; empty without a
+    /// pod tier.
+    pod_cap: Vec<usize>,
 }
 
 impl PlacementCtx {
@@ -349,61 +397,91 @@ impl PlacementCtx {
                 rack_cap[topo.rack_index(s)] += cluster.capacity(s);
             }
         }
-        PlacementCtx { rack_cap }
+        let mut pod_cap = vec![0usize; topo.num_pods()];
+        if topo.has_pods() {
+            for (r, &cap) in rack_cap.iter().enumerate() {
+                pod_cap[topo.pod_of_rack(r)] += cap;
+            }
+        }
+        PlacementCtx { rack_cap, pod_cap }
     }
 
     /// Total GPU capacity of one rack.
     pub fn rack_capacity(&self, rack: usize) -> usize {
         self.rack_cap[rack]
     }
+
+    /// Total GPU capacity of one pod.
+    pub fn pod_capacity(&self, pod: usize) -> usize {
+        self.pod_cap[pod]
+    }
 }
 
-/// The least-loaded rack whose total GPU capacity covers `need`, if any
-/// (load = mean per-GPU busy time over the rack; ties by rack id).
-/// Single `O(S + R)` pass over hoisted capacities — this sits on the
-/// per-job placement path of the planner's bisection loop.
-fn least_loaded_covering_rack(
+/// Server-pool restriction for [`lbsgf_pool`]: the whole cluster, one
+/// rack, or one pod.
+#[derive(Debug, Clone, Copy)]
+enum Pool {
+    All,
+    Rack(usize),
+    Pod(usize),
+}
+
+impl Pool {
+    fn admits(self, topo: &crate::topology::Topology, s: crate::cluster::ServerId) -> bool {
+        match self {
+            Pool::All => true,
+            Pool::Rack(r) => topo.rack_index(s) == r,
+            Pool::Pod(p) => topo.pod_index(s) == p,
+        }
+    }
+}
+
+/// The least-loaded server group (rack or pod) whose total GPU capacity
+/// covers `need`, if any: load = mean per-GPU busy time over the group,
+/// ties by group id. `group_cap` is the hoisted per-group capacity tally
+/// ([`PlacementCtx`]) and `group_of` the server → group projection —
+/// single `O(S + groups)` pass, on the per-job placement path of the
+/// planner's bisection loop.
+fn least_loaded_covering_group(
     cluster: &Cluster,
-    ctx: &PlacementCtx,
+    group_cap: &[usize],
+    group_of: impl Fn(crate::cluster::ServerId) -> usize,
     need: usize,
     busy: &impl Fn(GpuId) -> f64,
 ) -> Option<usize> {
-    let topo = cluster.topology();
-    let mut load = vec![0.0f64; topo.num_racks()];
+    let mut load = vec![0.0f64; group_cap.len()];
     for s in cluster.server_ids() {
-        load[topo.rack_index(s)] += cluster.gpus_of(s).map(busy).sum::<f64>();
+        load[group_of(s)] += cluster.gpus_of(s).map(busy).sum::<f64>();
     }
     let mut best: Option<(f64, usize)> = None;
-    for rack in 0..topo.num_racks() {
-        let cap = ctx.rack_cap[rack];
+    for (group, &cap) in group_cap.iter().enumerate() {
         if cap < need {
             continue;
         }
-        let avg = load[rack] / cap as f64;
+        let avg = load[group] / cap as f64;
         if best.map_or(true, |(b, _)| avg < b) {
-            best = Some((avg, rack));
+            best = Some((avg, group));
         }
     }
-    best.map(|(_, r)| r)
+    best.map(|(_, g)| g)
 }
 
-/// The core of Alg. 3 over an optional rack-restricted server pool.
+/// The core of Alg. 3 over an optionally rack- or pod-restricted server
+/// pool.
 fn lbsgf_pool(
     cluster: &Cluster,
     gpus_needed: usize,
     need: usize,
     eligible: &impl Fn(GpuId) -> bool,
     busy: &impl Fn(GpuId) -> f64,
-    rack: Option<usize>,
+    pool: Pool,
 ) -> Option<Vec<GpuId>> {
     let topo = cluster.topology();
     let server_load = |s: crate::cluster::ServerId| -> f64 {
         cluster.gpus_of(s).map(busy).sum::<f64>() / cluster.capacity(s) as f64
     };
-    let mut servers: Vec<_> = cluster
-        .server_ids()
-        .filter(|s| rack.map_or(true, |r| topo.rack_index(*s) == r))
-        .collect();
+    let mut servers: Vec<_> =
+        cluster.server_ids().filter(|s| pool.admits(topo, *s)).collect();
     servers.sort_by(|a, b| {
         server_load(*a).partial_cmp(&server_load(*b)).unwrap().then(a.cmp(b))
     });
@@ -604,6 +682,54 @@ mod tests {
         let flat = Cluster::uniform(4, 2, 1.0, 25.0);
         let gpus = fa_ffp_select(&flat, 2, |g| !occupied(g), |_| 0.0, occupied).unwrap();
         assert!(gpus.iter().all(|g| g.server == ServerId(0)), "picked {gpus:?}");
+    }
+
+    #[test]
+    fn fa_ffp_prefers_warm_pods_when_servers_and_racks_tie() {
+        use crate::cluster::ServerId;
+        use crate::topology::Topology;
+        // 8 servers x 2 GPUs, racks of 2, pods of 2 racks (pod 0 =
+        // servers 0-3, pod 1 = servers 4-7). Rack 3 (servers 6, 7) is
+        // fully occupied: every candidate server AND every candidate rack
+        // has zero warm occupancy, so only the pod tie-break can pull the
+        // job into pod 1 (servers 4/5) instead of server 0.
+        let c = Cluster::uniform(8, 2, 1.0, 25.0)
+            .with_topology(Topology::pods(8, 2, 2, 2.0, 2.0));
+        let occupied = |g: crate::cluster::GpuId| g.server == ServerId(6) || g.server == ServerId(7);
+        let gpus = fa_ffp_select(&c, 2, |g| !occupied(g), |_| 0.0, occupied).unwrap();
+        assert!(
+            gpus.iter().all(|g| g.server == ServerId(4)),
+            "pod tie-break must pick pod 1's coolest server, picked {gpus:?}"
+        );
+        // sanity: without a pod tier the same tie falls through to the
+        // lowest server id (the rack-fabric rule).
+        let racked = Cluster::uniform(8, 2, 1.0, 25.0)
+            .with_topology(Topology::racks(8, 2, 2.0));
+        let gpus = fa_ffp_select(&racked, 2, |g| !occupied(g), |_| 0.0, occupied).unwrap();
+        assert!(gpus.iter().all(|g| g.server == ServerId(0)), "picked {gpus:?}");
+    }
+
+    #[test]
+    fn lbsgf_restricts_to_a_covering_pod_when_no_rack_covers() {
+        use crate::cluster::ServerId;
+        use crate::topology::Topology;
+        // 8 servers x 2 GPUs: racks of 2 hold 4 GPUs, pods of 2 racks
+        // hold 8. A 6-GPU ring (λ = 1) exceeds every rack but fits a pod;
+        // pod 0 (servers 0-3) is busy, so the pool must restrict to pod 1.
+        let c = Cluster::uniform(8, 2, 1.0, 25.0)
+            .with_topology(Topology::pods(8, 2, 2, 2.0, 2.0));
+        let busy = |g: crate::cluster::GpuId| if g.server.0 <= 3 { 10.0 } else { 0.0 };
+        let gpus = lbsgf_select(&c, 6, 1.0, |_| true, busy).unwrap();
+        let pl = JobPlacement::new(gpus);
+        assert!(
+            pl.servers().all(|s| s.0 >= 4),
+            "ring must stay in pod 1, got {:?}",
+            pl.servers().collect::<Vec<_>>()
+        );
+        // pod capacity tallies feed the restriction
+        let ctx = PlacementCtx::new(&c);
+        assert_eq!(ctx.pod_capacity(0), 8);
+        assert_eq!(ctx.rack_capacity(0), 4);
     }
 
     #[test]

@@ -22,6 +22,13 @@ pub struct RatePoint {
     /// Ring count at the job's bottleneck link — Eq. 6's `p_j[t]` on a
     /// flat fabric.
     pub p: usize,
+    /// The **allocated bandwidth** `B_j` the point was evaluated at
+    /// (model units per slot): `b^i` co-located, else the job's
+    /// contention-degraded share of the fabric — `b^e / f(α, k_j)` with
+    /// `k_j` taken from the bottleneck's effective degree (degree
+    /// counting or max-min share, per the fabric's
+    /// [`ContentionModel`](crate::net::ContentionModel)).
+    pub bandwidth: f64,
     /// Per-iteration time `τ_j[t]` in slots (Eq. 8).
     pub tau: f64,
     /// Iterations completed per slot: `φ_j = ⌊1/τ⌋`, or the fractional
@@ -32,12 +39,15 @@ pub struct RatePoint {
 impl RatePoint {
     /// Placeholder for a job with no evaluated rate yet (a freshly
     /// admitted job before its first dirty-set drain, or a frozen
-    /// migrant): makes no progress and accrues no τ.
-    pub const IDLE: RatePoint = RatePoint { p: 0, tau: 0.0, inc: 0.0 };
+    /// migrant): makes no progress, holds no bandwidth, accrues no τ.
+    pub const IDLE: RatePoint = RatePoint { p: 0, bandwidth: 0.0, tau: 0.0, inc: 0.0 };
 }
 
 /// Evaluate one job's operating point given its bottleneck-link
-/// contention (use [`Bottleneck::flat`] for a scalar Eq. 6 degree).
+/// contention (use [`Bottleneck::flat`] for a scalar Eq. 6 degree): the
+/// allocated bandwidth is resolved first, then τ/φ follow from it — the
+/// rate point is a function of the *allocation*, with the bottleneck
+/// degree as the allocator's input.
 pub fn rate_point(
     params: &ContentionParams,
     cluster: &Cluster,
@@ -46,10 +56,11 @@ pub fn rate_point(
     bottleneck: Bottleneck,
     fractional_progress: bool,
 ) -> RatePoint {
-    let tau = params.tau_at(cluster, spec, placement, bottleneck);
+    let bandwidth = params.bandwidth_at(cluster, placement, bottleneck);
+    let tau = params.tau_with_bandwidth(cluster, spec, placement, bandwidth);
     let phi = params.phi(tau);
     let inc = if phi == 0 && fractional_progress { 1.0 / tau } else { phi as f64 };
-    RatePoint { p: bottleneck.p, tau, inc }
+    RatePoint { p: bottleneck.p, bandwidth, tau, inc }
 }
 
 /// Slots until `remaining` iterations finish at `inc` iterations/slot
@@ -111,6 +122,14 @@ mod tests {
         assert_eq!(r.p, 0);
         assert!((r.tau - params.tau(&c, &job, &pl, 0)).abs() < 1e-15);
         assert_eq!(r.inc, params.phi(r.tau) as f64);
+        assert_eq!(r.bandwidth, c.intra_bw, "co-located rings run on the intra link");
+        // spread ring: the rate point carries the contention-degraded
+        // allocation the τ was computed from
+        let spread =
+            JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(1), 0)]);
+        let r = rate_point(&params, &c, &job, &spread, Bottleneck::flat(3), false);
+        assert_eq!(r.bandwidth, params.bandwidth(&c, &spread, 3));
+        assert_eq!(RatePoint::IDLE.bandwidth, 0.0);
     }
 
     #[test]

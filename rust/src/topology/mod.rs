@@ -2,47 +2,59 @@
 //!
 //! The paper's contention model (Eq. 6) counts the active rings crossing a
 //! *server uplink*, which implicitly assumes every uplink attaches to one
-//! flat, non-blocking switch. Real multi-tenant clusters are rack-structured
-//! and oversubscribed: servers attach to a top-of-rack (ToR) switch, and
-//! ToR uplinks into the spine typically carry less capacity than the sum of
-//! the server links below them (an *oversubscription factor* `o_ℓ ≥ 1`).
+//! flat, non-blocking switch. Real multi-tenant clusters are rack- and
+//! pod-structured and oversubscribed: servers attach to a top-of-rack
+//! (ToR) switch, ToRs uplink into a pod (aggregation) switch, pods into
+//! the spine — and each tier typically carries less capacity than the sum
+//! of the links below it.
 //!
 //! This module models that fabric as a tree of links (identified by
 //! [`LinkId`], tiered per [`LinkTier`]):
 //!
 //! * **tier 0** — one uplink per server (the links of Eq. 6),
-//! * **tier 1** — one uplink per rack (ToR → spine), present only when the
-//!   topology actually has a rack tier,
+//! * **tier 1** — one uplink per rack (ToR → pod/spine), present only
+//!   when the topology has a rack tier,
+//! * **tier 2** — one uplink per pod (pod → spine), present only when the
+//!   topology has a pod tier,
 //! * the spine itself is the root and owns no uplink: a ring confined to
 //!   the cluster never crosses it.
 //!
 //! A job's ring **crosses** link `ℓ` iff the servers in `ℓ`'s subtree hold
 //! some but not all of the job's workers — `0 < Σ_{s ∈ sub(ℓ)} y_js < G_j`.
 //! For a server uplink the subtree is the server itself and this is exactly
-//! the Eq. 6 indicator `1{0 < y_js < G_j}`; for a rack uplink it is the
-//! natural generalization one tier up. The per-link contention count is the
-//! number of active rings crossing the link, and a job's effective
+//! the Eq. 6 indicator `1{0 < y_js < G_j}`; for rack and pod uplinks it is
+//! the natural generalization up the tree. The per-link contention count
+//! is the number of active rings crossing the link, and a job's effective
 //! contention is taken at its [`Bottleneck`] — the crossed link maximizing
-//! `count × oversub` (an `o`-times oversubscribed link serving `n` rings
-//! behaves like a full-rate link serving `n·o`).
+//! `count × multiplier`, where the multiplier depends on the fabric's
+//! [`ContentionModel`]:
 //!
-//! Every inter-server link is modeled at the reference capacity `b^e`
-//! scaled down by its factor, so a ToR uplink — even at `o = 1` —
-//! *aggregates* all cross-rack rings of its rack onto one shared link.
-//! The truly non-blocking fabric is therefore the flat topology (no ToR
-//! tier); per-link absolute capacities are a tracked follow-on.
+//! * [`EffectiveDegree`](ContentionModel::EffectiveDegree) — the per-link
+//!   oversubscription *factor* `o_ℓ ≥ 1` (an `o`-times oversubscribed
+//!   link serving `n` rings behaves like a full-rate link serving `n·o`);
+//! * [`MaxMinFair`](ContentionModel::MaxMinFair) — the per-link capacity
+//!   *ratio* `c_ref / c_ℓ` from the fabric's absolute [`LinkCapacity`]s
+//!   (`n` rings splitting `c_ℓ` max-min get `c_ℓ / n` each, so the
+//!   implied contention against the reference link is `n · c_ref / c_ℓ`
+//!   — see [`crate::net`] for the allocator and the equivalence
+//!   argument).
+//!
+//! Capacities derived from a scalar oversubscription spec store
+//! `ratio = o_ℓ` exactly, so on such fabrics the two models are
+//! bit-identical; they diverge only under absolute-speed specs — above
+//! all *relief links* (`c_ℓ > c_ref`, ratio < 1), which degree counting
+//! cannot express.
 //!
 //! **Eq. 6 is the exact 1-tier special case**: with [`Topology::flat`]
-//! (no rack tier, all oversubscription 1.0) the only links are the server
+//! (no rack tier, every multiplier 1.0) the only links are the server
 //! uplinks, `count × 1.0` reduces to the Eq. 6 count, and the bottleneck
-//! degree equals the paper's `p_j[t]` bit for bit — the flat-equivalence
-//! property test in `tests/topology_equivalence.rs` enforces this.
-//!
-//! Follow-ons tracked in ROADMAP: heterogeneous per-link speeds (absolute
-//! capacities instead of a scalar factor) and job-level bandwidth shares.
+//! degree equals the paper's `p_j[t]` bit for bit under *both* models —
+//! the property tests in `tests/topology_equivalence.rs` and
+//! `tests/net_equivalence.rs` enforce this.
 
-use crate::cluster::ServerId;
 use crate::cluster::JobPlacement;
+use crate::cluster::ServerId;
+use crate::net::{ContentionModel, LinkCapacity, DEFAULT_UPLINK_GBPS};
 use crate::Result;
 use anyhow::bail;
 
@@ -61,23 +73,29 @@ impl std::fmt::Display for LinkId {
 pub enum LinkTier {
     /// Server → ToR (the links of Eq. 6).
     ServerUplink,
-    /// ToR → spine.
+    /// ToR → pod switch (or straight to the spine without a pod tier).
     RackUplink,
+    /// Pod switch → spine.
+    PodUplink,
 }
 
 /// The bottleneck link of one job's ring in the current slot: Eq. 6's
 /// `p_j[t]` generalized to a multi-tier fabric.
 ///
 /// `p` is the number of active rings crossing the bottleneck link
-/// (including the job itself) and `oversub` that link's oversubscription
-/// factor; the *effective* contention degree driving Eq. 7 is
-/// `p × oversub`. On a flat topology `oversub == 1.0` and `p` is exactly
-/// the paper's `p_j[t]`.
+/// (including the job itself) and `oversub` that link's share multiplier
+/// under the fabric's [`ContentionModel`] — the oversubscription factor
+/// for `EffectiveDegree`, the capacity ratio `c_ref / c_ℓ` for
+/// `MaxMinFair` (the same float whenever the capacity mirrors the
+/// factor). The *effective* contention degree driving Eq. 7 is
+/// `p × oversub`; equivalently, the ring's allocated bandwidth share is
+/// `c_ref / (p × oversub)`. On a flat topology `oversub == 1.0` and `p`
+/// is exactly the paper's `p_j[t]`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Bottleneck {
     /// Active-ring count on the bottleneck link (`p_j[t]` when flat).
     pub p: usize,
-    /// Oversubscription factor of that link (1.0 when flat).
+    /// Share multiplier of that link (1.0 when flat).
     pub oversub: f64,
     /// The bottleneck link itself; `None` for co-located jobs (no link
     /// crossed).
@@ -115,13 +133,14 @@ impl Bottleneck {
 /// The shared-link tree above the servers.
 ///
 /// Link layout: ids `[0, num_servers)` are the server uplinks (tier 0,
-/// link `s` belongs to server `s`); ids `[num_servers, num_links)` are the
-/// rack uplinks (tier 1, one per rack) when a rack tier exists.
+/// link `s` belongs to server `s`); ids `[num_servers, num_servers +
+/// num_racks)` are the rack uplinks (tier 1) when a rack tier exists;
+/// ids above those are the pod uplinks (tier 2) when a pod tier exists.
 ///
-/// Rack assignment must be nondecreasing in server id (rack 0 holds the
-/// lowest-numbered servers, and so on) — this lets every crossing query
-/// run in `O(span)` with no allocation by grouping a placement's sorted
-/// server list into rack runs.
+/// Rack assignment must be nondecreasing in server id, and pod assignment
+/// nondecreasing in rack id — this lets every crossing query run in
+/// `O(span)` with no allocation by grouping a placement's sorted server
+/// list into rack and pod runs.
 #[derive(Debug, Clone)]
 pub struct Topology {
     num_servers: usize,
@@ -129,8 +148,20 @@ pub struct Topology {
     /// tier, Eq. 6 exactly).
     rack_of: Vec<usize>,
     num_racks: usize,
-    /// Oversubscription factor per link, indexed by [`LinkId`].
+    /// Pod id per *rack* (nondecreasing); empty ⇒ no pod tier.
+    pod_of: Vec<usize>,
+    num_pods: usize,
+    /// Oversubscription factor per link, indexed by [`LinkId`] — the
+    /// `EffectiveDegree` multiplier. For absolute-speed fabrics this is
+    /// the capacity ratio clamped to ≥ 1 (degree counting cannot express
+    /// relief links).
     oversub: Vec<f64>,
+    /// Absolute capacity per link — the `MaxMinFair` multiplier source.
+    capacity: Vec<LinkCapacity>,
+    /// Reference (server-uplink) speed the ratios are taken against.
+    ref_gbps: f64,
+    /// How consumers evaluate contention at a link.
+    model: ContentionModel,
 }
 
 impl Topology {
@@ -142,7 +173,12 @@ impl Topology {
             num_servers,
             rack_of: Vec::new(),
             num_racks: 0,
+            pod_of: Vec::new(),
+            num_pods: 0,
             oversub: vec![1.0; num_servers],
+            capacity: vec![LinkCapacity::reference(DEFAULT_UPLINK_GBPS); num_servers],
+            ref_gbps: DEFAULT_UPLINK_GBPS,
+            model: ContentionModel::EffectiveDegree,
         }
     }
 
@@ -157,7 +193,23 @@ impl Topology {
         let rack_of = (0..num_servers).map(|s| s / servers_per_rack).collect();
         let mut ov = vec![1.0; num_servers];
         ov.extend(std::iter::repeat(oversub).take(num_racks));
-        Topology { num_servers, rack_of, num_racks, oversub: ov }
+        let mut capacity =
+            vec![LinkCapacity::reference(DEFAULT_UPLINK_GBPS); num_servers];
+        capacity.extend(
+            std::iter::repeat(LinkCapacity::from_oversub(DEFAULT_UPLINK_GBPS, oversub))
+                .take(num_racks),
+        );
+        Topology {
+            num_servers,
+            rack_of,
+            num_racks,
+            pod_of: Vec::new(),
+            num_pods: 0,
+            oversub: ov,
+            capacity,
+            ref_gbps: DEFAULT_UPLINK_GBPS,
+            model: ContentionModel::EffectiveDegree,
+        }
     }
 
     /// Heterogeneous racks: `rack_sizes[r]` consecutive servers in rack
@@ -174,7 +226,114 @@ impl Topology {
         }
         let mut oversub = vec![1.0; num_servers];
         oversub.extend_from_slice(rack_oversub);
-        Topology { num_servers, rack_of, num_racks: rack_sizes.len(), oversub }
+        let mut capacity =
+            vec![LinkCapacity::reference(DEFAULT_UPLINK_GBPS); num_servers];
+        capacity.extend(
+            rack_oversub.iter().map(|&o| LinkCapacity::from_oversub(DEFAULT_UPLINK_GBPS, o)),
+        );
+        Topology {
+            num_servers,
+            rack_of,
+            num_racks: rack_sizes.len(),
+            pod_of: Vec::new(),
+            num_pods: 0,
+            oversub,
+            capacity,
+            ref_gbps: DEFAULT_UPLINK_GBPS,
+            model: ContentionModel::EffectiveDegree,
+        }
+    }
+
+    /// A homogeneous rack tier with **absolute link speeds**: server
+    /// uplinks at `uplink_gbps` (the reference), ToR uplinks at
+    /// `tor_gbps`. `tor_gbps > uplink_gbps` models a relief link the
+    /// scalar-oversub form cannot express; the `EffectiveDegree`
+    /// multiplier clamps its ratio at 1.
+    pub fn racks_gbps(
+        num_servers: usize,
+        servers_per_rack: usize,
+        uplink_gbps: f64,
+        tor_gbps: f64,
+    ) -> Self {
+        assert!(uplink_gbps > 0.0 && tor_gbps > 0.0, "link speeds must be positive");
+        let mut t = Topology::racks(num_servers, servers_per_rack, 1.0);
+        t.ref_gbps = uplink_gbps;
+        for l in 0..t.num_servers {
+            t.capacity[l] = LinkCapacity::reference(uplink_gbps);
+        }
+        for r in 0..t.num_racks {
+            let cap = LinkCapacity::from_gbps(uplink_gbps, tor_gbps);
+            t.oversub[t.num_servers + r] = cap.ratio.max(1.0);
+            t.capacity[t.num_servers + r] = cap;
+        }
+        t
+    }
+
+    /// A 3-tier fabric: racks of `servers_per_rack` servers, pods of
+    /// `racks_per_pod` racks, with per-tier oversubscription factors.
+    /// The last rack and last pod may be smaller.
+    pub fn pods(
+        num_servers: usize,
+        servers_per_rack: usize,
+        racks_per_pod: usize,
+        tor_oversub: f64,
+        pod_oversub: f64,
+    ) -> Self {
+        assert!(racks_per_pod >= 1, "pods must hold at least one rack");
+        assert!(pod_oversub >= 1.0, "oversubscription factor must be >= 1");
+        let mut t = Topology::racks(num_servers, servers_per_rack, tor_oversub);
+        let num_pods = (t.num_racks + racks_per_pod - 1) / racks_per_pod;
+        t.pod_of = (0..t.num_racks).map(|r| r / racks_per_pod).collect();
+        t.num_pods = num_pods;
+        t.oversub.extend(std::iter::repeat(pod_oversub).take(num_pods));
+        t.capacity.extend(
+            std::iter::repeat(LinkCapacity::from_oversub(DEFAULT_UPLINK_GBPS, pod_oversub))
+                .take(num_pods),
+        );
+        t
+    }
+
+    /// A 3-tier fabric with absolute link speeds per tier.
+    pub fn pods_gbps(
+        num_servers: usize,
+        servers_per_rack: usize,
+        racks_per_pod: usize,
+        uplink_gbps: f64,
+        tor_gbps: f64,
+        pod_gbps: f64,
+    ) -> Self {
+        assert!(
+            uplink_gbps > 0.0 && tor_gbps > 0.0 && pod_gbps > 0.0,
+            "link speeds must be positive"
+        );
+        let mut t = Topology::pods(num_servers, servers_per_rack, racks_per_pod, 1.0, 1.0);
+        t.ref_gbps = uplink_gbps;
+        for l in 0..t.num_servers {
+            t.capacity[l] = LinkCapacity::reference(uplink_gbps);
+        }
+        for r in 0..t.num_racks {
+            let cap = LinkCapacity::from_gbps(uplink_gbps, tor_gbps);
+            t.oversub[t.num_servers + r] = cap.ratio.max(1.0);
+            t.capacity[t.num_servers + r] = cap;
+        }
+        for p in 0..t.num_pods {
+            let cap = LinkCapacity::from_gbps(uplink_gbps, pod_gbps);
+            t.oversub[t.num_servers + t.num_racks + p] = cap.ratio.max(1.0);
+            t.capacity[t.num_servers + t.num_racks + p] = cap;
+        }
+        t
+    }
+
+    /// Select the contention model consumers of this fabric evaluate
+    /// under (builder style; default [`ContentionModel::EffectiveDegree`]).
+    pub fn with_model(mut self, model: ContentionModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// The active contention model.
+    pub fn model(&self) -> ContentionModel {
+        self.model
     }
 
     /// Number of servers (tier-0 leaves).
@@ -185,6 +344,11 @@ impl Topology {
     /// Number of racks; 0 for a flat fabric.
     pub fn num_racks(&self) -> usize {
         self.num_racks
+    }
+
+    /// Number of pods; 0 without a pod tier.
+    pub fn num_pods(&self) -> usize {
+        self.num_pods
     }
 
     /// Total number of links in the tree.
@@ -198,14 +362,54 @@ impl Topology {
         self.num_racks > 0
     }
 
-    /// Oversubscription factor of one link.
+    /// Whether a pod tier exists above the racks.
+    pub fn has_pods(&self) -> bool {
+        self.num_pods > 0
+    }
+
+    /// Oversubscription factor of one link (the `EffectiveDegree`
+    /// multiplier; ≥ 1 always).
     pub fn oversub(&self, l: LinkId) -> f64 {
         self.oversub[l.0]
     }
 
+    /// Absolute capacity of one link in Gbps.
+    pub fn link_gbps(&self, l: LinkId) -> f64 {
+        self.capacity[l.0].gbps
+    }
+
+    /// Capacity ratio `c_ref / c_ℓ` of one link (the `MaxMinFair`
+    /// multiplier; may be < 1 for relief links).
+    pub fn capacity_ratio(&self, l: LinkId) -> f64 {
+        self.capacity[l.0].ratio
+    }
+
+    /// The reference (server-uplink) speed ratios are taken against.
+    pub fn reference_gbps(&self) -> f64 {
+        self.ref_gbps
+    }
+
+    /// The share multiplier a crossed link contributes under the active
+    /// [`ContentionModel`]: the oversubscription factor for
+    /// `EffectiveDegree`, the capacity ratio for `MaxMinFair`. Identical
+    /// floats on every oversub-derived fabric — the bit-for-bit
+    /// equivalence the `net` module documents.
+    pub fn multiplier(&self, l: LinkId) -> f64 {
+        match self.model {
+            ContentionModel::EffectiveDegree => self.oversub[l.0],
+            ContentionModel::MaxMinFair => self.capacity[l.0].ratio,
+        }
+    }
+
     /// Which tier a link belongs to.
     pub fn tier(&self, l: LinkId) -> LinkTier {
-        if l.0 < self.num_servers { LinkTier::ServerUplink } else { LinkTier::RackUplink }
+        if l.0 < self.num_servers {
+            LinkTier::ServerUplink
+        } else if l.0 < self.num_servers + self.num_racks {
+            LinkTier::RackUplink
+        } else {
+            LinkTier::PodUplink
+        }
     }
 
     /// The uplink of server `s` (tier 0 — the Eq. 6 link).
@@ -214,10 +418,16 @@ impl Topology {
         LinkId(s.0)
     }
 
-    /// The spine uplink of rack `r` (tier 1). Panics on a flat fabric.
+    /// The uplink of rack `r` (tier 1). Panics on a flat fabric.
     pub fn rack_uplink(&self, r: usize) -> LinkId {
         assert!(r < self.num_racks, "rack {r} out of range (flat fabric?)");
         LinkId(self.num_servers + r)
+    }
+
+    /// The spine uplink of pod `p` (tier 2). Panics without a pod tier.
+    pub fn pod_uplink(&self, p: usize) -> LinkId {
+        assert!(p < self.num_pods, "pod {p} out of range (no pod tier?)");
+        LinkId(self.num_servers + self.num_racks + p)
     }
 
     /// Rack index of a server. On a flat fabric every server is its own
@@ -226,10 +436,28 @@ impl Topology {
         if self.rack_of.is_empty() { s.0 } else { self.rack_of[s.0] }
     }
 
+    /// Pod index of a rack. Without a pod tier every rack is its own
+    /// "pod" (same degenerate rule as [`rack_index`](Self::rack_index)).
+    pub fn pod_of_rack(&self, rack: usize) -> usize {
+        if self.pod_of.is_empty() { rack } else { self.pod_of[rack] }
+    }
+
+    /// Pod index of a server.
+    pub fn pod_index(&self, s: ServerId) -> usize {
+        self.pod_of_rack(self.rack_index(s))
+    }
+
     /// Servers of one rack, in id order.
     pub fn servers_in_rack(&self, rack: usize) -> impl Iterator<Item = ServerId> + '_ {
         (0..self.num_servers)
             .filter(move |&s| self.rack_index(ServerId(s)) == rack)
+            .map(ServerId)
+    }
+
+    /// Servers of one pod, in id order.
+    pub fn servers_in_pod(&self, pod: usize) -> impl Iterator<Item = ServerId> + '_ {
+        (0..self.num_servers)
+            .filter(move |&s| self.pod_index(ServerId(s)) == pod)
             .map(ServerId)
     }
 
@@ -248,12 +476,16 @@ impl Topology {
             }
             return;
         }
-        // Servers iterate in ascending id order and rack assignment is
-        // nondecreasing, so used racks form contiguous runs: accumulate
-        // each run's worker count and emit its uplink when the rack holds
-        // a strict subset of the ring.
+        // Servers iterate in ascending id order, rack assignment is
+        // nondecreasing in server id and pod assignment nondecreasing in
+        // rack id, so used racks (and pods) form contiguous runs:
+        // accumulate each run's worker count and emit its uplink when the
+        // subtree holds a strict subset of the ring.
+        let has_pods = !self.pod_of.is_empty();
         let mut cur_rack = usize::MAX;
         let mut in_rack = 0usize;
+        let mut cur_pod = usize::MAX;
+        let mut in_pod = 0usize;
         for s in placement.servers() {
             // a spread ring crosses every used server's uplink (y < G_j)
             f(self.server_uplink(s));
@@ -262,13 +494,29 @@ impl Topology {
                 if cur_rack != usize::MAX && in_rack < total {
                     f(self.rack_uplink(cur_rack));
                 }
+                if has_pods {
+                    let p = self.pod_of[r];
+                    if p != cur_pod {
+                        if cur_pod != usize::MAX && in_pod < total {
+                            f(self.pod_uplink(cur_pod));
+                        }
+                        cur_pod = p;
+                        in_pod = 0;
+                    }
+                }
                 cur_rack = r;
                 in_rack = 0;
             }
             in_rack += placement.gpus_on(s);
+            if has_pods {
+                in_pod += placement.gpus_on(s);
+            }
         }
         if cur_rack != usize::MAX && in_rack < total {
             f(self.rack_uplink(cur_rack));
+        }
+        if has_pods && cur_pod != usize::MAX && in_pod < total {
+            f(self.pod_uplink(cur_pod));
         }
     }
 
@@ -282,13 +530,14 @@ impl Topology {
 
     /// The bottleneck of a placement given per-link active-ring counts
     /// (`counts[l.0]`): the crossed link with the largest effective degree
-    /// `count × oversub`. [`Bottleneck::NONE`] for co-located jobs.
+    /// `count × multiplier` under the active [`ContentionModel`].
+    /// [`Bottleneck::NONE`] for co-located jobs.
     pub fn bottleneck(&self, placement: &JobPlacement, counts: &[usize]) -> Bottleneck {
         debug_assert_eq!(counts.len(), self.num_links());
         let mut best = Bottleneck::NONE;
         self.for_each_crossed(placement, |l| {
             let cand =
-                Bottleneck { p: counts[l.0], oversub: self.oversub(l), link: Some(l) };
+                Bottleneck { p: counts[l.0], oversub: self.multiplier(l), link: Some(l) };
             if best.link.is_none() || cand.dominates(&best) {
                 best = cand;
             }
@@ -301,18 +550,44 @@ impl Topology {
         match self.tier(l) {
             LinkTier::ServerUplink => format!("uplink(s{})", l.0),
             LinkTier::RackUplink => format!("tor(r{})", l.0 - self.num_servers),
+            LinkTier::PodUplink => {
+                format!("pod(p{})", l.0 - self.num_servers - self.num_racks)
+            }
         }
     }
 }
 
 /// CLI / config form of a topology, resolved against a cluster's server
-/// count at build time: `flat` or `rack:<servers_per_rack>:<oversub>`.
+/// count at build time:
+///
+/// * `flat`
+/// * `rack:<servers_per_rack>[:<oversub>]` — scalar oversubscription
+/// * `rack:<servers_per_rack>:<uplink_gbps>@<tor_gbps>` — absolute speeds
+/// * `pod:<racks_per_pod>:<servers_per_rack>[:<tor_oversub>[:<pod_oversub>]]`
+/// * `pod:<racks_per_pod>:<servers_per_rack>:<uplink>@<tor>@<pod>` (Gbps)
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TopologySpec {
     /// 1-tier fabric (the paper's model).
     Flat,
     /// Homogeneous racks with an oversubscribed ToR uplink.
     Rack { servers_per_rack: usize, oversub: f64 },
+    /// Homogeneous racks with absolute per-tier link speeds.
+    RackGbps { servers_per_rack: usize, uplink_gbps: f64, tor_gbps: f64 },
+    /// 3-tier fabric with per-tier oversubscription factors.
+    Pod {
+        racks_per_pod: usize,
+        servers_per_rack: usize,
+        tor_oversub: f64,
+        pod_oversub: f64,
+    },
+    /// 3-tier fabric with absolute per-tier link speeds.
+    PodGbps {
+        racks_per_pod: usize,
+        servers_per_rack: usize,
+        uplink_gbps: f64,
+        tor_gbps: f64,
+        pod_gbps: f64,
+    },
 }
 
 impl Default for TopologySpec {
@@ -329,6 +604,32 @@ impl TopologySpec {
             TopologySpec::Rack { servers_per_rack, oversub } => {
                 Topology::racks(num_servers, servers_per_rack, oversub)
             }
+            TopologySpec::RackGbps { servers_per_rack, uplink_gbps, tor_gbps } => {
+                Topology::racks_gbps(num_servers, servers_per_rack, uplink_gbps, tor_gbps)
+            }
+            TopologySpec::Pod { racks_per_pod, servers_per_rack, tor_oversub, pod_oversub } => {
+                Topology::pods(
+                    num_servers,
+                    servers_per_rack,
+                    racks_per_pod,
+                    tor_oversub,
+                    pod_oversub,
+                )
+            }
+            TopologySpec::PodGbps {
+                racks_per_pod,
+                servers_per_rack,
+                uplink_gbps,
+                tor_gbps,
+                pod_gbps,
+            } => Topology::pods_gbps(
+                num_servers,
+                servers_per_rack,
+                racks_per_pod,
+                uplink_gbps,
+                tor_gbps,
+                pod_gbps,
+            ),
         }
     }
 }
@@ -340,8 +641,40 @@ impl std::fmt::Display for TopologySpec {
             TopologySpec::Rack { servers_per_rack, oversub } => {
                 write!(f, "rack:{servers_per_rack}:{oversub}")
             }
+            TopologySpec::RackGbps { servers_per_rack, uplink_gbps, tor_gbps } => {
+                write!(f, "rack:{servers_per_rack}:{uplink_gbps}@{tor_gbps}")
+            }
+            TopologySpec::Pod { racks_per_pod, servers_per_rack, tor_oversub, pod_oversub } => {
+                write!(f, "pod:{racks_per_pod}:{servers_per_rack}:{tor_oversub}:{pod_oversub}")
+            }
+            TopologySpec::PodGbps {
+                racks_per_pod,
+                servers_per_rack,
+                uplink_gbps,
+                tor_gbps,
+                pod_gbps,
+            } => write!(
+                f,
+                "pod:{racks_per_pod}:{servers_per_rack}:{uplink_gbps}@{tor_gbps}@{pod_gbps}"
+            ),
         }
     }
+}
+
+fn parse_oversub(s: &str) -> Result<f64> {
+    let o: f64 = s.parse().map_err(|_| anyhow::anyhow!("bad oversub '{s}'"))?;
+    if !(o >= 1.0) {
+        bail!("oversubscription factor must be >= 1, got {o}");
+    }
+    Ok(o)
+}
+
+fn parse_gbps(s: &str) -> Result<f64> {
+    let g: f64 = s.parse().map_err(|_| anyhow::anyhow!("bad link speed '{s}'"))?;
+    if !(g > 0.0) {
+        bail!("link speed must be positive Gbps, got {g}");
+    }
+    Ok(g)
 }
 
 impl std::str::FromStr for TopologySpec {
@@ -351,25 +684,84 @@ impl std::str::FromStr for TopologySpec {
         if s.eq_ignore_ascii_case("flat") {
             return Ok(TopologySpec::Flat);
         }
-        let mut parts = s.split(':');
-        match (parts.next(), parts.next(), parts.next(), parts.next()) {
-            (Some("rack"), Some(spr), oversub, None) => {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["rack", spr, rest @ ..] if rest.len() <= 1 => {
                 let servers_per_rack: usize =
                     spr.parse().map_err(|_| anyhow::anyhow!("bad rack size '{spr}'"))?;
                 if servers_per_rack == 0 {
                     bail!("rack size must be >= 1");
                 }
-                let oversub: f64 = match oversub {
-                    None => 1.0,
-                    Some(o) => o.parse().map_err(|_| anyhow::anyhow!("bad oversub '{o}'"))?,
-                };
-                if !(oversub >= 1.0) {
-                    bail!("oversubscription factor must be >= 1, got {oversub}");
+                match rest.first() {
+                    None => Ok(TopologySpec::Rack { servers_per_rack, oversub: 1.0 }),
+                    Some(tail) => match tail.split_once('@') {
+                        // absolute-speed form: <uplink_gbps>@<tor_gbps>
+                        Some((up, tor)) => Ok(TopologySpec::RackGbps {
+                            servers_per_rack,
+                            uplink_gbps: parse_gbps(up)?,
+                            tor_gbps: parse_gbps(tor)?,
+                        }),
+                        None => Ok(TopologySpec::Rack {
+                            servers_per_rack,
+                            oversub: parse_oversub(tail)?,
+                        }),
+                    },
                 }
-                Ok(TopologySpec::Rack { servers_per_rack, oversub })
+            }
+            ["pod", rpp, spr, rest @ ..] if rest.len() <= 2 => {
+                let racks_per_pod: usize =
+                    rpp.parse().map_err(|_| anyhow::anyhow!("bad pod size '{rpp}'"))?;
+                let servers_per_rack: usize =
+                    spr.parse().map_err(|_| anyhow::anyhow!("bad rack size '{spr}'"))?;
+                if racks_per_pod == 0 {
+                    bail!("pod size must be >= 1 rack");
+                }
+                if servers_per_rack == 0 {
+                    bail!("rack size must be >= 1");
+                }
+                match rest {
+                    [] => Ok(TopologySpec::Pod {
+                        racks_per_pod,
+                        servers_per_rack,
+                        tor_oversub: 1.0,
+                        pod_oversub: 1.0,
+                    }),
+                    [one] => match one.split_once('@') {
+                        // absolute-speed form: <uplink>@<tor>@<pod>
+                        Some((up, tail)) => {
+                            let (tor, pod) = tail.split_once('@').ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "pod speeds need <uplink>@<tor>@<pod> Gbps, got '{one}'"
+                                )
+                            })?;
+                            Ok(TopologySpec::PodGbps {
+                                racks_per_pod,
+                                servers_per_rack,
+                                uplink_gbps: parse_gbps(up)?,
+                                tor_gbps: parse_gbps(tor)?,
+                                pod_gbps: parse_gbps(pod)?,
+                            })
+                        }
+                        None => Ok(TopologySpec::Pod {
+                            racks_per_pod,
+                            servers_per_rack,
+                            tor_oversub: parse_oversub(one)?,
+                            pod_oversub: 1.0,
+                        }),
+                    },
+                    [tor_o, pod_o] => Ok(TopologySpec::Pod {
+                        racks_per_pod,
+                        servers_per_rack,
+                        tor_oversub: parse_oversub(tor_o)?,
+                        pod_oversub: parse_oversub(pod_o)?,
+                    }),
+                    _ => unreachable!("guarded by rest.len() <= 2"),
+                }
             }
             _ => bail!(
-                "unknown topology '{s}' (expected flat | rack:<servers_per_rack>:<oversub>)"
+                "unknown topology '{s}' (expected flat | rack:<spr>[:<oversub>] | \
+                 rack:<spr>:<up_gbps>@<tor_gbps> | pod:<rpp>:<spr>[:<tor_o>[:<pod_o>]] | \
+                 pod:<rpp>:<spr>:<up>@<tor>@<pod>)"
             ),
         }
     }
@@ -471,10 +863,200 @@ mod tests {
     }
 
     #[test]
+    fn gbps_spec_forms_parse_and_roundtrip() {
+        let r: TopologySpec = "rack:4:25@100".parse().unwrap();
+        assert_eq!(
+            r,
+            TopologySpec::RackGbps { servers_per_rack: 4, uplink_gbps: 25.0, tor_gbps: 100.0 }
+        );
+        assert_eq!(r.to_string().parse::<TopologySpec>().unwrap(), r);
+        let p: TopologySpec = "pod:2:4:25@50@100".parse().unwrap();
+        assert_eq!(
+            p,
+            TopologySpec::PodGbps {
+                racks_per_pod: 2,
+                servers_per_rack: 4,
+                uplink_gbps: 25.0,
+                tor_gbps: 50.0,
+                pod_gbps: 100.0
+            }
+        );
+        assert_eq!(p.to_string().parse::<TopologySpec>().unwrap(), p);
+        assert!("rack:4:0@10".parse::<TopologySpec>().is_err());
+        assert!("pod:2:4:25@50".parse::<TopologySpec>().is_err(), "pods need 3 speeds");
+    }
+
+    #[test]
+    fn pod_spec_forms_parse_and_roundtrip() {
+        let p: TopologySpec = "pod:2:4".parse().unwrap();
+        assert_eq!(
+            p,
+            TopologySpec::Pod {
+                racks_per_pod: 2,
+                servers_per_rack: 4,
+                tor_oversub: 1.0,
+                pod_oversub: 1.0
+            }
+        );
+        let p: TopologySpec = "pod:2:4:2.0:3.0".parse().unwrap();
+        assert_eq!(
+            p,
+            TopologySpec::Pod {
+                racks_per_pod: 2,
+                servers_per_rack: 4,
+                tor_oversub: 2.0,
+                pod_oversub: 3.0
+            }
+        );
+        assert_eq!(p.to_string().parse::<TopologySpec>().unwrap(), p);
+        assert!("pod:0:4".parse::<TopologySpec>().is_err());
+        assert!("pod:2:0".parse::<TopologySpec>().is_err());
+        assert!("pod:2:4:0.5".parse::<TopologySpec>().is_err());
+        assert!("pod:2:4:2:3:4".parse::<TopologySpec>().is_err());
+    }
+
+    #[test]
     fn spec_builds_matching_topology() {
         let t = TopologySpec::Rack { servers_per_rack: 3, oversub: 2.0 }.build(7);
         assert_eq!(t.num_racks(), 3);
         assert_eq!(t.num_servers(), 7);
         assert_eq!(TopologySpec::Flat.build(5).num_links(), 5);
+        // a 3-tier build: 8 servers, racks of 2, pods of 2 racks
+        let t = TopologySpec::Pod {
+            racks_per_pod: 2,
+            servers_per_rack: 2,
+            tor_oversub: 2.0,
+            pod_oversub: 4.0,
+        }
+        .build(8);
+        assert_eq!((t.num_racks(), t.num_pods()), (4, 2));
+        assert_eq!(t.num_links(), 8 + 4 + 2);
+        assert_eq!(t.oversub(t.pod_uplink(1)), 4.0);
+        assert_eq!(t.tier(t.pod_uplink(0)), LinkTier::PodUplink);
+    }
+
+    #[test]
+    fn pod_tier_membership_and_uplinks() {
+        // 12 servers, racks of 2 (6 racks), pods of 3 racks (2 pods)
+        let t = Topology::pods(12, 2, 3, 2.0, 4.0);
+        assert!(t.has_pods());
+        assert_eq!(t.num_pods(), 2);
+        assert_eq!(t.pod_index(ServerId(0)), 0);
+        assert_eq!(t.pod_index(ServerId(5)), 0, "rack 2 is still pod 0");
+        assert_eq!(t.pod_index(ServerId(6)), 1, "rack 3 starts pod 1");
+        assert_eq!(t.servers_in_pod(0).count(), 6);
+        assert_eq!(t.pod_of_rack(4), 1);
+        assert_eq!(t.describe(t.pod_uplink(1)), "pod(p1)");
+        // flat fabrics degrade to every-rack-its-own-pod
+        let flat = Topology::flat(3);
+        assert!(!flat.has_pods());
+        assert_eq!(flat.pod_index(ServerId(2)), 2);
+    }
+
+    #[test]
+    fn pod_crossing_adds_pod_uplinks_only_across_pods() {
+        // 8 servers, racks of 2, pods of 2 racks: pod 0 = servers 0-3,
+        // pod 1 = servers 4-7.
+        let c = Cluster::uniform(8, 4, 1.0, 25.0);
+        let t = Topology::pods(8, 2, 2, 2.0, 4.0);
+        // cross-rack but intra-pod (servers 1, 2): rack uplinks crossed,
+        // no pod uplink — the ring stays below pod 0's switch.
+        let intra_pod = place(&c, &[(1, 0), (2, 0)]);
+        let mut links = t.crossed_links(&intra_pod);
+        links.sort();
+        assert_eq!(
+            links,
+            vec![LinkId(1), LinkId(2), t.rack_uplink(0), t.rack_uplink(1)]
+        );
+        // cross-pod (servers 3, 4): server + rack + BOTH pod uplinks.
+        let cross_pod = place(&c, &[(3, 0), (4, 0)]);
+        let mut links = t.crossed_links(&cross_pod);
+        links.sort();
+        assert_eq!(
+            links,
+            vec![
+                LinkId(3),
+                LinkId(4),
+                t.rack_uplink(1),
+                t.rack_uplink(2),
+                t.pod_uplink(0),
+                t.pod_uplink(1)
+            ]
+        );
+    }
+
+    #[test]
+    fn oversubscribed_pod_uplink_becomes_the_bottleneck() {
+        let c = Cluster::uniform(8, 4, 1.0, 25.0);
+        let t = Topology::pods(8, 2, 2, 1.0, 8.0);
+        let pl = place(&c, &[(0, 0), (7, 0)]); // crosses both pod uplinks
+        let mut counts = vec![0usize; t.num_links()];
+        t.for_each_crossed(&pl, |l| counts[l.0] += 1);
+        let bn = t.bottleneck(&pl, &counts);
+        assert_eq!(bn.oversub, 8.0);
+        assert!(
+            bn.link == Some(t.pod_uplink(0)) || bn.link == Some(t.pod_uplink(1)),
+            "bottleneck {:?}",
+            bn.link
+        );
+    }
+
+    #[test]
+    fn capacities_mirror_oversub_specs_exactly() {
+        let t = Topology::racks(4, 2, 2.5);
+        for l in 0..t.num_links() {
+            let l = LinkId(l);
+            assert_eq!(t.capacity_ratio(l), t.oversub(l), "{l}: ratio is the factor itself");
+            // the two model multipliers agree on oversub-derived fabrics
+            assert_eq!(
+                t.clone().with_model(ContentionModel::MaxMinFair).multiplier(l),
+                t.multiplier(l),
+                "{l}"
+            );
+        }
+        assert_eq!(t.link_gbps(t.rack_uplink(0)), DEFAULT_UPLINK_GBPS / 2.5);
+        assert_eq!(t.reference_gbps(), DEFAULT_UPLINK_GBPS);
+    }
+
+    #[test]
+    fn relief_links_diverge_between_models() {
+        // ToR at 4x the uplink speed: ratio 0.25, but the degree model
+        // clamps its factor at 1 (it cannot express relief capacity).
+        let t = Topology::racks_gbps(4, 2, 25.0, 100.0);
+        let tor = t.rack_uplink(0);
+        assert_eq!(t.capacity_ratio(tor), 0.25);
+        assert_eq!(t.oversub(tor), 1.0, "clamped for degree counting");
+        assert_eq!(t.link_gbps(tor), 100.0);
+        assert_eq!(t.reference_gbps(), 25.0);
+        let mm = t.clone().with_model(ContentionModel::MaxMinFair);
+        assert_eq!(mm.multiplier(tor), 0.25);
+        assert_eq!(t.multiplier(tor), 1.0);
+        // a skinny ToR (half the uplink speed) is expressible both ways
+        // and the multipliers agree
+        let skinny = Topology::racks_gbps(4, 2, 25.0, 12.5);
+        assert_eq!(skinny.oversub(skinny.rack_uplink(0)), 2.0);
+        assert_eq!(skinny.capacity_ratio(skinny.rack_uplink(0)), 2.0);
+    }
+
+    #[test]
+    fn maxmin_bottleneck_shifts_where_degree_counting_cannot() {
+        // Relief ToR (4x uplink capacity): 3 rings on the ToR vs 2 on a
+        // server uplink. Degree counting bottlenecks on the raw count 3;
+        // the share model discounts the fat link (3 x 0.25 = 0.75) and
+        // keeps the bottleneck at the skinny uplink (2 x 1.0 = 2).
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        let t = Topology::racks_gbps(4, 2, 25.0, 100.0);
+        let pl = place(&c, &[(0, 0), (2, 0)]); // crosses s0 uplink + both ToRs
+        let mut counts = vec![0usize; t.num_links()];
+        counts[0] = 2; // server 0 uplink: 2 rings
+        counts[t.rack_uplink(0).0] = 3; // ToR 0: 3 rings
+        counts[2] = 1;
+        counts[t.rack_uplink(1).0] = 3;
+        let degree_bn = t.bottleneck(&pl, &counts);
+        assert_eq!(degree_bn.p, 3, "degree counting picks the crowded ToR");
+        let mm = t.clone().with_model(ContentionModel::MaxMinFair);
+        let share_bn = mm.bottleneck(&pl, &counts);
+        assert_eq!(share_bn.link, Some(t.server_uplink(ServerId(0))));
+        assert_eq!((share_bn.p, share_bn.oversub), (2, 1.0));
     }
 }

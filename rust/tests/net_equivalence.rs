@@ -1,0 +1,319 @@
+//! Equivalence guarantee of the `net/` bandwidth-allocation subsystem:
+//! on every fabric whose capacities mirror its oversubscription spec —
+//! in particular the paper's uniform flat fabric — the
+//! [`MaxMinFair`](rarsched::net::ContentionModel::MaxMinFair) share model
+//! must reproduce the
+//! [`EffectiveDegree`](rarsched::net::ContentionModel::EffectiveDegree)
+//! results **bit for bit** (outcomes, records, event sequences) across
+//! all three batch-engine modes and the online loop, migration on and
+//! off. Heterogeneous-capacity units then show where the share model
+//! diverges by design: relief links shift the bottleneck where degree
+//! counting cannot.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::net::ContentionModel;
+use rarsched::online::{
+    ContentionTracker, MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind,
+    OnlineScheduler,
+};
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::{ContentionMode, SimOptions, SimOutcome, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::proptest_lite::check;
+use rarsched::util::Rng;
+
+/// The same cluster under each contention model. Capacities mirror the
+/// oversub spec by construction (scalar-oversub topologies), so the two
+/// must be numerically indistinguishable everywhere.
+fn model_twins(rng: &mut Rng) -> (Cluster, Cluster) {
+    let n = rng.gen_usize(5, 9);
+    let flat = Cluster::uniform(n, 8, 1.0, 25.0);
+    let topo = match rng.gen_usize(0, 2) {
+        0 => Topology::flat(n),
+        1 => Topology::racks(n, 2, rng.gen_f64_range(1.0, 4.0)),
+        _ => Topology::pods(n, 2, 2, rng.gen_f64_range(1.0, 3.0), rng.gen_f64_range(1.0, 4.0)),
+    };
+    let degree = flat
+        .clone()
+        .with_topology(topo.clone().with_model(ContentionModel::EffectiveDegree));
+    let maxmin = flat.with_topology(topo.with_model(ContentionModel::MaxMinFair));
+    (degree, maxmin)
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.avg_jct, b.avg_jct, "{ctx}: avg JCT (bitwise)");
+    assert_eq!(a.gpu_utilization, b.gpu_utilization, "{ctx}: utilization");
+    assert_eq!(a.slots_simulated, b.slots_simulated, "{ctx}: slots");
+    assert_eq!(a.periods, b.periods, "{ctx}: period structure");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncation");
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.job, y.job, "{ctx}");
+        assert_eq!(
+            (x.arrival, x.start, x.finish),
+            (y.arrival, y.start, y.finish),
+            "{ctx}: {}",
+            x.job
+        );
+        assert_eq!((x.span, x.workers, x.max_p), (y.span, y.workers, y.max_p), "{ctx}: {}", x.job);
+        assert_eq!(x.mean_tau, y.mean_tau, "{ctx}: {} mean_tau (bitwise)", x.job);
+        assert_eq!(x.iterations_done, y.iterations_done, "{ctx}: {}", x.job);
+        assert_eq!(x.migrations, y.migrations, "{ctx}: {}", x.job);
+    }
+}
+
+fn assert_online_identical(a: &OnlineOutcome, b: &OnlineOutcome, ctx: &str) {
+    assert_outcomes_identical(&a.outcome, &b.outcome, ctx);
+    assert_eq!(a.events.events(), b.events.events(), "{ctx}: event sequences");
+    assert_eq!(a.rejected, b.rejected, "{ctx}: rejections");
+    assert_eq!(a.migrations.len(), b.migrations.len(), "{ctx}: migration count");
+    for (x, y) in a.migrations.iter().zip(&b.migrations) {
+        assert_eq!(x, y, "{ctx}: migration records (bitwise effective degrees)");
+    }
+    assert_eq!(a.max_pending, b.max_pending, "{ctx}: max pending");
+}
+
+#[test]
+fn uniform_flat_fabric_is_bit_identical_by_construction() {
+    // the acceptance case spelled out: the paper's uniform flat fabric,
+    // pinned deterministically (the randomized twins sample it too)
+    let flat = Cluster::uniform(6, 8, 1.0, 25.0);
+    let maxmin = flat.clone().with_topology(
+        Topology::flat(6).with_model(ContentionModel::MaxMinFair),
+    );
+    let params = ContentionParams::paper();
+    let jobs = TraceGenerator::paper_scaled(0.1).generate_online(42, 2.0);
+    let plan = schedule(Policy::SjfBco, &flat, &jobs, &params, 1_000_000).unwrap();
+    for options in [
+        SimOptions::default(),
+        SimOptions { contention: ContentionMode::SnapshotRebuild, ..SimOptions::default() },
+        SimOptions { event_driven: false, ..SimOptions::default() },
+    ] {
+        let a = Simulator::new(&flat, &jobs, &params).with_options(options).run(&plan);
+        let b = Simulator::new(&maxmin, &jobs, &params).with_options(options).run(&plan);
+        assert_outcomes_identical(&a, &b, "uniform flat");
+    }
+    for kind in OnlinePolicyKind::ALL {
+        for migration in [
+            MigrationControl::default(),
+            MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        ] {
+            let options = OnlineOptions { migration, ..OnlineOptions::default() };
+            let a = OnlineScheduler::new(&flat, &jobs, &params)
+                .with_options(options)
+                .run(kind.build().as_mut());
+            let b = OnlineScheduler::new(&maxmin, &jobs, &params)
+                .with_options(options)
+                .run(kind.build().as_mut());
+            assert_online_identical(&a, &b, &format!("uniform flat/{kind}"));
+        }
+    }
+}
+
+#[test]
+fn maxmin_is_bit_identical_across_all_three_engine_modes() {
+    check("MaxMinFair == EffectiveDegree on capacity-mirroring fabrics", 8, |rng| {
+        let (degree, maxmin) = model_twins(rng);
+        let params = ContentionParams::paper();
+        let gap = rng.gen_f64_range(0.0, 8.0);
+        let jobs = TraceGenerator::paper_scaled(0.08).generate_online(rng.next_u64(), gap);
+        for policy in [Policy::SjfBco, Policy::ListScheduling, Policy::Gadget] {
+            // the planners score candidates per-link through the model:
+            // plans themselves must agree before the replays can
+            let plan_a = schedule(policy, &degree, &jobs, &params, 1_000_000).unwrap();
+            let plan_b = schedule(policy, &maxmin, &jobs, &params, 1_000_000).unwrap();
+            for (ea, eb) in plan_a.entries.iter().zip(&plan_b.entries) {
+                assert_eq!(ea.job, eb.job, "{policy}");
+                assert_eq!(ea.placement, eb.placement, "{policy}: {} placement", ea.job);
+            }
+            let modes: [(&str, SimOptions); 3] = [
+                ("tracker", SimOptions::default()),
+                (
+                    "snapshot",
+                    SimOptions {
+                        contention: ContentionMode::SnapshotRebuild,
+                        ..SimOptions::default()
+                    },
+                ),
+                ("slot-by-slot", SimOptions { event_driven: false, ..SimOptions::default() }),
+            ];
+            for (mode, options) in modes {
+                let out_a = Simulator::new(&degree, &jobs, &params)
+                    .with_options(options)
+                    .run(&plan_a);
+                let out_b = Simulator::new(&maxmin, &jobs, &params)
+                    .with_options(options)
+                    .run(&plan_b);
+                assert_outcomes_identical(&out_a, &out_b, &format!("{policy}/{mode}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn maxmin_online_loop_is_bit_identical_migration_on_and_off() {
+    check("MaxMinFair online == EffectiveDegree online", 6, |rng| {
+        let (degree, maxmin) = model_twins(rng);
+        let params = ContentionParams::paper();
+        let jobs = TraceGenerator::paper_scaled(0.08)
+            .generate_online(rng.next_u64(), rng.gen_f64_range(0.5, 6.0));
+        let migration_variants = [
+            MigrationControl::default(), // off
+            MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        ];
+        for migration in migration_variants {
+            for kind in OnlinePolicyKind::ALL {
+                let options = OnlineOptions { migration, ..OnlineOptions::default() };
+                let mut pa = kind.build();
+                let mut pb = kind.build();
+                let out_a = OnlineScheduler::new(&degree, &jobs, &params)
+                    .with_options(options)
+                    .run(pa.as_mut());
+                let out_b = OnlineScheduler::new(&maxmin, &jobs, &params)
+                    .with_options(options)
+                    .run(pb.as_mut());
+                assert_online_identical(
+                    &out_a,
+                    &out_b,
+                    &format!("{kind}/migration={}", migration.enabled),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn theta_admission_is_bit_identical_on_mirroring_fabrics() {
+    // the θ guard tests the projected effective degree, which under
+    // MaxMinFair is the reciprocal projected bandwidth share — on
+    // capacity-mirroring fabrics the decisions must coincide exactly
+    check("θ-admission agrees across models", 6, |rng| {
+        let (degree, maxmin) = model_twins(rng);
+        let params = ContentionParams::paper();
+        let jobs = TraceGenerator::paper_scaled(0.12)
+            .generate_online(rng.next_u64(), rng.gen_f64_range(0.1, 1.0));
+        let options = OnlineOptions {
+            admission: rarsched::online::AdmissionControl { theta: 4.0, queue_cap: 8 },
+            ..OnlineOptions::default()
+        };
+        let out_a = OnlineScheduler::new(&degree, &jobs, &params)
+            .with_options(options)
+            .run(&mut rarsched::online::Fifo);
+        let out_b = OnlineScheduler::new(&maxmin, &jobs, &params)
+            .with_options(options)
+            .run(&mut rarsched::online::Fifo);
+        assert_online_identical(&out_a, &out_b, "theta");
+    });
+}
+
+// --- heterogeneous capacities: where the models diverge by design ---
+
+/// A relief fabric: ToR uplinks 4x the server-uplink speed. Degree
+/// counting clamps the ToR factor at 1; the share model discounts ToR
+/// counts by 4.
+fn relief_cluster(model: ContentionModel) -> Cluster {
+    Cluster::uniform(4, 4, 1.0, 25.0)
+        .with_topology(Topology::racks_gbps(4, 2, 10.0, 40.0).with_model(model))
+}
+
+#[test]
+fn relief_tor_shifts_the_tracker_bottleneck() {
+    use rarsched::cluster::{JobPlacement, ServerId};
+    use rarsched::jobs::JobId;
+    let degree = relief_cluster(ContentionModel::EffectiveDegree);
+    let maxmin = relief_cluster(ContentionModel::MaxMinFair);
+    let mk = |c: &Cluster, pairs: &[(usize, usize)]| {
+        JobPlacement::new(pairs.iter().map(|&(s, i)| c.global_gpu(ServerId(s), i)).collect())
+    };
+    // three cross-rack rings pile onto both ToR uplinks (count 3); two of
+    // them share server 0's uplink (count 2)
+    let placements = [
+        (JobId(0), [(0usize, 0usize), (2, 0)]),
+        (JobId(1), [(0, 1), (3, 0)]),
+        (JobId(2), [(1, 0), (2, 1)]),
+    ];
+    let mut tr_a = ContentionTracker::new(&degree);
+    let mut tr_b = ContentionTracker::new(&maxmin);
+    for (j, pairs) in &placements {
+        tr_a.admit(*j, &mk(&degree, pairs));
+        tr_b.admit(*j, &mk(&maxmin, pairs));
+    }
+    // degree counting: the ToR count 3 (x 1.0 clamped) dominates server
+    // 0's count 2
+    let bn_a = tr_a.bottleneck(JobId(0));
+    assert_eq!((bn_a.p, bn_a.oversub), (3, 1.0), "degree model sits on the ToR");
+    // share model: 3 rings on a 4x link consume 3 x 0.25 = 0.75 — the
+    // skinny server-0 uplink (2 x 1.0) is the real bottleneck
+    let bn_b = tr_b.bottleneck(JobId(0));
+    assert_eq!((bn_b.p, bn_b.oversub), (2, 1.0), "share model shifts to the uplink");
+    assert_eq!(bn_b.link, Some(degree.topology().server_uplink(ServerId(0))));
+    // and the shifted bottleneck is strictly cheaper: the ring's modeled
+    // degree drops, so its τ improves under the share model
+    assert!(bn_b.effective() < bn_a.effective());
+}
+
+#[test]
+fn relief_tor_speeds_up_the_simulated_schedule() {
+    // fixed plan, fixed trace: the share model's pointwise-lower degrees
+    // on a relief fabric can only speed rings up
+    let params = ContentionParams::paper();
+    let jobs = TraceGenerator::paper_scaled(0.1).generate(7);
+    let flat = Cluster::uniform(6, 8, 1.0, 25.0);
+    let plan = schedule(Policy::ListScheduling, &flat, &jobs, &params, 1_000_000).unwrap();
+    let degree = flat.clone().with_topology(
+        Topology::racks_gbps(6, 2, 10.0, 80.0).with_model(ContentionModel::EffectiveDegree),
+    );
+    let maxmin = flat.clone().with_topology(
+        Topology::racks_gbps(6, 2, 10.0, 80.0).with_model(ContentionModel::MaxMinFair),
+    );
+    let out_degree = Simulator::new(&degree, &jobs, &params).run(&plan);
+    let out_maxmin = Simulator::new(&maxmin, &jobs, &params).run(&plan);
+    assert!(!out_degree.truncated && !out_maxmin.truncated);
+    assert!(
+        out_maxmin.makespan <= out_degree.makespan,
+        "relief capacity must not slow the share model: {} vs {}",
+        out_maxmin.makespan,
+        out_degree.makespan
+    );
+    // the degree model is blind to the relief link: it matches the plain
+    // oversub-1 rack fabric bit for bit
+    let oversub1 = flat.with_topology(Topology::racks(6, 2, 1.0));
+    let out_blind = Simulator::new(&oversub1, &jobs, &params).run(&plan);
+    assert_outcomes_identical(&out_degree, &out_blind, "degree model ignores capacities");
+}
+
+#[test]
+fn skinny_pod_uplink_bottlenecks_a_three_tier_fabric() {
+    use rarsched::cluster::{JobPlacement, ServerId};
+    use rarsched::jobs::JobId;
+    // pods of 2 racks of 2 servers; the pod uplink runs at half the
+    // server-uplink speed (ratio 2) — a cross-pod ring must bottleneck
+    // there under both models (this skew IS oversub-expressible, so the
+    // models agree — the pod tier itself is what is being exercised)
+    let c = Cluster::uniform(8, 4, 1.0, 25.0).with_topology(
+        Topology::pods_gbps(8, 2, 2, 10.0, 10.0, 5.0).with_model(ContentionModel::MaxMinFair),
+    );
+    let mut tr = ContentionTracker::new(&c);
+    let pl = JobPlacement::new(vec![
+        c.global_gpu(ServerId(0), 0),
+        c.global_gpu(ServerId(7), 0),
+    ]);
+    tr.admit(JobId(0), &pl);
+    let bn = tr.bottleneck(JobId(0));
+    assert_eq!(bn.oversub, 2.0, "pod uplink ratio");
+    let topo = c.topology();
+    assert!(
+        bn.link == Some(topo.pod_uplink(0)) || bn.link == Some(topo.pod_uplink(1)),
+        "bottleneck {:?}",
+        bn.link
+    );
+    // residual ledger: the ring's share (10/2 = 5 Gbps) saturates the
+    // 5-Gbps pod uplinks exactly
+    let residual = tr.residual_gbps();
+    assert_eq!(residual[topo.pod_uplink(0).0], 0.0);
+    assert_eq!(residual[topo.pod_uplink(1).0], 0.0);
+    assert_eq!(residual[topo.server_uplink(ServerId(1)).0], 10.0, "uncrossed link");
+}

@@ -2,10 +2,11 @@
 # Tier-1 verification pipeline: fmt-check -> release build -> tests ->
 # bench smoke. The bench smoke emits BENCH_topology.json (the
 # online_hot_path / per-link tracker numbers), BENCH_online_overload.json
-# (the speculative what-if tracker path behind θ-admission and migration)
-# and BENCH_sim_engine.json (batch-engine events/sec + ns/event,
-# snapshot-rebuild vs tracker+dirty-set) so the perf trajectory is
-# recorded across PRs.
+# (the speculative what-if tracker path behind θ-admission and migration),
+# BENCH_sim_engine.json (batch-engine events/sec + ns/event,
+# snapshot-rebuild vs tracker+dirty-set) and BENCH_net_alloc.json
+# (progressive-filling allocations/sec + MaxMinFair-vs-EffectiveDegree
+# engine events/sec) so the perf trajectory is recorded across PRs.
 #
 # Failure policy: when cargo is PRESENT, every stage is a hard gate —
 # fmt drift, a build error, a test failure or a missing bench artifact
@@ -54,7 +55,15 @@ RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_SIM_OUT="$PWD/BENCH_sim_engine.json" \
     cargo bench --offline --bench sim_engine
 
-for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json; do
+# Bandwidth-allocation baseline: progressive-filling allocations/sec
+# (flat vs rack vs pod), the O(1)-histogram vs O(L)-scan max_contention
+# query, and the engine cost of MaxMinFair vs EffectiveDegree.
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_NET_OUT="$PWD/BENCH_net_alloc.json" \
+    cargo bench --offline --bench net_alloc
+
+for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json \
+                BENCH_net_alloc.json; do
     if [ -f "$artifact" ]; then
         echo "OK: $artifact written"
     else
