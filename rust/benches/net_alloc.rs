@@ -14,6 +14,7 @@ use rarsched::contention::ContentionParams;
 use rarsched::jobs::JobId;
 use rarsched::net::{progressive_fill, AllocScratch, ContentionModel};
 use rarsched::online::ContentionTracker;
+use rarsched::runtime::RunManifest;
 use rarsched::sched;
 use rarsched::sim::{SimOptions, SimScratch, Simulator};
 use rarsched::topology::Topology;
@@ -163,6 +164,15 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "manifest",
+            RunManifest::new(
+                0x5eed,
+                "bench:net_alloc",
+                &std::env::args().skip(1).collect::<Vec<_>>(),
+            )
+            .to_json(),
         ),
     ]);
     let out = std::env::var("RARSCHED_BENCH_NET_OUT")

@@ -1,0 +1,171 @@
+//! Observability overhead: disarmed vs Null-sink vs Mem-sink tracing on
+//! the 2-rack engine cases from `benches/sim_engine.rs`.
+//!
+//! The passivity invariant (see `rarsched::obs`) promises the disarmed
+//! hooks cost one relaxed atomic load each; this bench puts a number on
+//! that promise. Three arming modes per case, all replaying the same
+//! fixed plan through the tracker-mode engine:
+//!
+//! * `off`  — nothing armed: the production default and the baseline;
+//! * `null` — `NullSink` armed: hooks pay event construction (clock
+//!   read, arg vec) but the sink discards everything. This is the
+//!   "armed-vs-null" overhead the acceptance criterion caps at ~5%;
+//! * `mem`  — `MemSink` armed: what `--trace-out` actually costs,
+//!   including the per-event lock + push (drained every iteration so
+//!   memory stays bounded).
+//!
+//! The per-link timeline recorder stays disarmed throughout — its cost
+//! is proportional to fabric size, not event rate, and it is not part
+//! of the armed-vs-null criterion.
+//!
+//! Results (with `null_overhead_pct` / `mem_overhead_pct` per case and a
+//! run manifest stamp) go to `BENCH_obs.json` (override with
+//! `RARSCHED_BENCH_OBS_OUT`); `scripts/verify.sh` requires the artifact.
+//! Run with `--release`: debug builds run the tracker's full-rebuild
+//! cross-checks, which drown out the hook cost being measured.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::obs::trace::{MemSink, NullSink, TraceSink};
+use rarsched::obs::{metrics, trace};
+use rarsched::runtime::RunManifest;
+use rarsched::sched;
+use rarsched::sim::{SimOptions, SimScratch, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::bench::Bench;
+use rarsched::util::Json;
+use std::sync::Arc;
+
+struct Case {
+    name: String,
+    mode: &'static str,
+    mean_ms: f64,
+    periods: u64,
+    trace_events: u64,
+}
+
+fn main() {
+    let params = ContentionParams::paper();
+    let mut b = Bench::new("obs_overhead");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // The 2-rack engine cases of the sim_engine bench: two racks of
+    // servers/2, ToR uplinks 2x oversubscribed, trace scaled with the
+    // cluster so the standing active set stays substantial.
+    for &(size_tag, servers, scale) in &[("8srv", 8usize, 0.4f64), ("14srv", 14, 0.7)] {
+        let cluster = Cluster::random(servers, 7)
+            .with_topology(Topology::racks(servers, servers / 2, 2.0));
+        let jobs = TraceGenerator::paper_scaled(scale).generate_online(42, 1.0);
+        let plan =
+            sched::random_policy(&cluster, &jobs, &params, 1_000_000, 0x5eed).unwrap();
+        let sim = Simulator::new(&cluster, &jobs, &params)
+            .with_options(SimOptions::default());
+        let mut scratch = SimScratch::new(&cluster);
+        let reference = sim.run_with(&mut scratch, &plan);
+        assert!(!reference.truncated, "rack2x2.0-{size_tag}");
+
+        let mem = MemSink::new();
+        // (mode tag, sink to arm; None = fully disarmed baseline)
+        let modes: [(&str, Option<Arc<dyn TraceSink>>); 3] = [
+            ("off", None),
+            ("null", Some(Arc::new(NullSink))),
+            ("mem", Some(mem.clone() as Arc<dyn TraceSink>)),
+        ];
+        for (mode, sink) in modes {
+            match sink {
+                Some(s) => trace::arm(s),
+                None => trace::disarm(),
+            }
+            let name = format!("{mode}/rack2x2.0-{size_tag}");
+            let mut trace_events = 0u64;
+            let mean_ms = {
+                let r = b.run(&name, || {
+                    let out = sim.run_with(&mut scratch, &plan);
+                    // drain the mem sink every iteration: bounds memory,
+                    // and the drain cost is honestly part of what an
+                    // armed --trace-out run pays
+                    trace_events = mem.take().len() as u64;
+                    out.makespan
+                });
+                r.mean_ms()
+            };
+            // passivity spot check (still armed): arming must not change
+            // the outcome
+            let armed_run = sim.run_with(&mut scratch, &plan);
+            assert_eq!(armed_run.makespan, reference.makespan, "{name}: outcome drifted");
+            assert_eq!(armed_run.periods, reference.periods, "{name}: periods drifted");
+            trace::disarm();
+            let _ = mem.take();
+            cases.push(Case { name, mode, mean_ms, periods: reference.periods, trace_events });
+        }
+    }
+    b.report();
+
+    // per-fabric overhead summary: null (the criterion) and mem vs off
+    let mut overheads: Vec<(String, f64, f64)> = Vec::new();
+    for chunk in cases.chunks(3) {
+        if let [off, null, mem] = chunk {
+            let base = off.mean_ms.max(1e-12);
+            let null_pct = (null.mean_ms - off.mean_ms) / base * 100.0;
+            let mem_pct = (mem.mean_ms - off.mean_ms) / base * 100.0;
+            let tag = off.name["off/".len()..].to_string();
+            println!(
+                "  -> {tag}: off {:.3} ms | null {:.3} ms ({:+.2}%) | mem {:.3} ms ({:+.2}%), {} events/run",
+                off.mean_ms, null.mean_ms, null_pct, mem.mean_ms, mem_pct, mem.trace_events
+            );
+            overheads.push((tag, null_pct, mem_pct));
+        }
+    }
+
+    let manifest = RunManifest::new(
+        0x5eed,
+        "bench:obs_overhead",
+        &std::env::args().skip(1).collect::<Vec<_>>(),
+    );
+    let json = Json::obj(vec![
+        ("suite", Json::Str("obs_overhead".into())),
+        (
+            "cases",
+            Json::arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        let secs = c.mean_ms / 1e3;
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("mode", Json::Str(c.mode.into())),
+                            ("mean_ms", Json::Num(c.mean_ms)),
+                            ("periods", Json::Num(c.periods as f64)),
+                            ("events_per_sec", Json::Num(c.periods as f64 / secs.max(1e-12))),
+                            ("trace_events_per_run", Json::Num(c.trace_events as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "overhead",
+            Json::arr(
+                overheads
+                    .iter()
+                    .map(|(tag, null_pct, mem_pct)| {
+                        Json::obj(vec![
+                            ("case", Json::Str(tag.clone())),
+                            ("null_overhead_pct", Json::Num(*null_pct)),
+                            ("mem_overhead_pct", Json::Num(*mem_pct)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("counters", metrics::to_json()),
+        ("manifest", manifest.to_json()),
+    ]);
+    let out = std::env::var("RARSCHED_BENCH_OBS_OUT")
+        .unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+}

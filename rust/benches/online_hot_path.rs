@@ -17,6 +17,7 @@ use rarsched::cluster::{Cluster, GpuId, JobPlacement};
 use rarsched::contention::ContentionSnapshot;
 use rarsched::jobs::JobId;
 use rarsched::online::ContentionTracker;
+use rarsched::runtime::RunManifest;
 use rarsched::topology::Topology;
 use rarsched::util::bench::{Bench, CaseResult};
 use rarsched::util::{Json, Rng};
@@ -129,6 +130,15 @@ fn results_json(suite: &str, results: &[CaseResult], keep: impl Fn(&str) -> bool
                     })
                     .collect(),
             ),
+        ),
+        (
+            "manifest",
+            RunManifest::new(
+                42,
+                &format!("bench:{suite}"),
+                &std::env::args().skip(1).collect::<Vec<_>>(),
+            )
+            .to_json(),
         ),
     ])
 }

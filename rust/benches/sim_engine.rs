@@ -16,6 +16,7 @@
 
 use rarsched::cluster::Cluster;
 use rarsched::contention::ContentionParams;
+use rarsched::runtime::RunManifest;
 use rarsched::sched;
 use rarsched::sim::{ContentionMode, SimOptions, SimScratch, Simulator};
 use rarsched::topology::Topology;
@@ -135,6 +136,15 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "manifest",
+            RunManifest::new(
+                0x5eed,
+                "bench:sim_engine",
+                &std::env::args().skip(1).collect::<Vec<_>>(),
+            )
+            .to_json(),
         ),
     ]);
     let out = std::env::var("RARSCHED_BENCH_SIM_OUT")

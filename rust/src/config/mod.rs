@@ -124,6 +124,34 @@ impl OnlineConfig {
     }
 }
 
+/// Observability section (`[obs]`): output paths for the passive
+/// recorders of [`crate::obs`]. Every key names a file to write at the
+/// end of the run; an absent key leaves that recorder disarmed (absence
+/// IS the disabled state — the default config runs the uninstrumented
+/// loop bit for bit, see the passivity invariant in [`crate::obs`]).
+///
+/// Keys: `trace_out` (Chrome-trace JSON), `obs_json` (counter/histogram
+/// registry dump), `explain` (decision-audit JSON; `-` renders the
+/// human-readable report to stdout), `timeline` (per-link utilization
+/// CSV).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    pub trace_out: Option<String>,
+    pub obs_json: Option<String>,
+    pub explain: Option<String>,
+    pub timeline: Option<String>,
+}
+
+impl ObsConfig {
+    /// Whether any recorder output was requested.
+    pub fn any_enabled(&self) -> bool {
+        self.trace_out.is_some()
+            || self.obs_json.is_some()
+            || self.explain.is_some()
+            || self.timeline.is_some()
+    }
+}
+
 /// Contention-model constants section (§4.1 / §7).
 #[derive(Debug, Clone)]
 pub struct ModelParamsConfig {
@@ -163,6 +191,8 @@ pub struct ExperimentConfig {
     pub model: ModelParamsConfig,
     /// Online overload controls (`[online]` section; absent = all off).
     pub online: OnlineConfig,
+    /// Observability outputs (`[obs]` section; absent = all disarmed).
+    pub obs: ObsConfig,
 }
 
 impl ExperimentConfig {
@@ -325,6 +355,20 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("online", "restart_slots") {
             cfg.online.restart_slots = v.as_u64()?;
         }
+        for (key, slot) in [
+            ("trace_out", &mut cfg.obs.trace_out),
+            ("obs_json", &mut cfg.obs.obs_json),
+            ("explain", &mut cfg.obs.explain),
+            ("timeline", &mut cfg.obs.timeline),
+        ] {
+            if let Some(v) = doc.get("obs", key) {
+                let path = v.as_str()?;
+                if path.is_empty() {
+                    bail!("obs.{key} must be a non-empty path (omit the key to disable)");
+                }
+                *slot = Some(path.to_string());
+            }
+        }
         if let Some(v) = doc.get("workload", "scale") {
             cfg.workload.scale = v.as_f64()?;
         }
@@ -446,6 +490,18 @@ impl ExperimentConfig {
                 "restart_slots",
                 TomlValue::Int(self.online.restart_slots as i64),
             );
+        }
+        // [obs] — only requested outputs are emitted (absence IS the
+        // disarmed state, like [online])
+        for (key, slot) in [
+            ("trace_out", &self.obs.trace_out),
+            ("obs_json", &self.obs.obs_json),
+            ("explain", &self.obs.explain),
+            ("timeline", &self.obs.timeline),
+        ] {
+            if let Some(path) = slot {
+                doc.set("obs", key, TomlValue::Str(path.clone()));
+            }
         }
         doc.set("workload", "scale", TomlValue::Float(self.workload.scale));
         doc.set("workload", "iters_min", TomlValue::Int(self.workload.iters_min as i64));
@@ -645,6 +701,37 @@ mod tests {
         // integers are accepted where floats are expected (toml_lite rule)
         let cfg = ExperimentConfig::from_toml_str("[online]\ntheta = 4\n").unwrap();
         assert_eq!(cfg.online.theta, 4.0);
+    }
+
+    #[test]
+    fn obs_section_defaults_roundtrip_and_reject_empty_paths() {
+        // absent section = nothing armed, no keys emitted
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.obs, ObsConfig::default());
+        assert!(!cfg.obs.any_enabled());
+        assert!(!cfg.to_toml_string().contains("[obs]"));
+
+        // a fully-specified section roundtrips
+        let mut cfg = ExperimentConfig::paper();
+        cfg.obs = ObsConfig {
+            trace_out: Some("trace.json".into()),
+            obs_json: Some("obs.json".into()),
+            explain: Some("-".into()),
+            timeline: Some("links.csv".into()),
+        };
+        assert!(cfg.obs.any_enabled());
+        let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.obs, cfg.obs);
+
+        // a partial section leaves the rest disarmed
+        let cfg =
+            ExperimentConfig::from_toml_str("[obs]\ntrace_out = \"t.json\"\n").unwrap();
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(cfg.obs.obs_json, None);
+
+        // empty paths are typos, not "disabled"
+        assert!(ExperimentConfig::from_toml_str("[obs]\ntrace_out = \"\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[obs]\nexplain = \"\"\n").is_err());
     }
 
     #[test]

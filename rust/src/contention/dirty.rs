@@ -176,12 +176,14 @@ impl DirtySet {
 
     /// Fold touched links into dirty jobs, then call `recompute` once per
     /// dirty job that `is_active` — clearing both sets for the next event
-    /// period. `O(touched links × members + dirty)`.
+    /// period. `O(touched links × members + dirty)`. Returns the number
+    /// of jobs handed to `recompute` (the engines feed it into the
+    /// obs dirty-hit/miss counters).
     pub fn drain(
         &mut self,
         mut is_active: impl FnMut(JobId) -> bool,
         mut recompute: impl FnMut(JobId),
-    ) {
+    ) -> usize {
         for i in 0..self.touched_list.len() {
             let l = self.touched_list[i];
             // purge departed members exactly when their links are touched
@@ -194,14 +196,17 @@ impl DirtySet {
         }
         self.touched_list.clear();
         let mut dirty_list = std::mem::take(&mut self.dirty_list);
+        let mut rerated = 0usize;
         for &j in &dirty_list {
             self.dirty[j.0] = false;
             if is_active(j) {
                 recompute(j);
+                rerated += 1;
             }
         }
         dirty_list.clear();
         self.dirty_list = dirty_list; // keep the capacity
+        rerated
     }
 
     /// Number of links with a pending (undrained) count change.
@@ -233,17 +238,17 @@ mod tests {
         let pl1 = mk(&c, &[(0, 1), (2, 0)]); // shares server 0's uplink
         ds.on_admit(topo, JobId(0), &pl0);
         let mut seen = Vec::new();
-        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(ds.drain(|_| true, |j| seen.push(j)), 1, "drain reports the re-rate count");
         assert_eq!(seen, vec![JobId(0)]);
         // second admit shares link 0 with job 0: both become dirty
         ds.on_admit(topo, JobId(1), &pl1);
         let mut seen = Vec::new();
-        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(ds.drain(|_| true, |j| seen.push(j)), 2);
         seen.sort();
         assert_eq!(seen, vec![JobId(0), JobId(1)]);
         // nothing touched → nothing dirty
         let mut seen = Vec::new();
-        ds.drain(|_| true, |j| seen.push(j));
+        assert_eq!(ds.drain(|_| true, |j| seen.push(j)), 0);
         assert!(seen.is_empty());
     }
 

@@ -100,6 +100,35 @@
 //! across all engine modes. [`net::progressive_fill`] computes full
 //! water-filled max-min rates and per-link residual bandwidth for
 //! reports, the `figures --fig hetero` sweep and `benches/net_alloc.rs`.
+//!
+//! ## Observability (`obs/`)
+//!
+//! The [`obs`] subsystem instruments the contention choke points:
+//! Chrome-trace spans and instant events ([`obs::trace`],
+//! `--trace-out`), always-on fixed-slot counters and histograms
+//! ([`obs::metrics`], `--obs-json`), decision-audit records
+//! ([`obs::explain`], `--explain`) and per-link utilization timelines
+//! ([`obs::timeline`], `figures --fig links`). Its **passivity
+//! invariant** — the default Null sink is free, and arming any recorder
+//! is bit-identical on every scheduling outcome — is an architecture
+//! invariant enforced by `tests/obs_passivity.rs` across flat/rack/pod
+//! fabrics, all three engine modes and the online loop.
+//!
+//! ## Environment variables
+//!
+//! All `RARSCHED_*` knobs in one place:
+//!
+//! | variable | effect |
+//! |---|---|
+//! | `RARSCHED_LOG` | stderr log level: `error`, `warn`, `info` (default), `debug`, `trace`, `off` ([`util::logger`]) |
+//! | `RARSCHED_THREADS` | worker count for [`util::par::par_map`] (1 forces the sequential path) |
+//! | `RARSCHED_BENCH_MS` | per-case time budget for every `benches/` harness (default 1500) |
+//! | `RARSCHED_BENCH_OUT` | artifact path for `benches/online_hot_path.rs` (`BENCH_topology.json`) |
+//! | `RARSCHED_BENCH_OVERLOAD_OUT` | artifact path for the overload cases of `online_hot_path` (`BENCH_online_overload.json`) |
+//! | `RARSCHED_BENCH_SIM_OUT` | artifact path for `benches/sim_engine.rs` (`BENCH_sim_engine.json`) |
+//! | `RARSCHED_BENCH_NET_OUT` | artifact path for `benches/net_alloc.rs` (`BENCH_net_alloc.json`) |
+//! | `RARSCHED_BENCH_OBS_OUT` | artifact path for `benches/obs_overhead.rs` (`BENCH_obs.json`) |
+//! | `RARSCHED_GIT_REV` | overrides the git revision stamped into run manifests ([`runtime::manifest::RunManifest`]) |
 
 pub mod cli;
 pub mod cluster;
@@ -110,6 +139,7 @@ pub mod coordinator;
 pub mod jobs;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod online;
 pub mod rar;
 pub mod runtime;

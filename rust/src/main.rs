@@ -17,15 +17,17 @@
 //!   python-recorded losses in the artifact manifest.
 
 use rarsched::cli::Args;
-use rarsched::config::ExperimentConfig;
+use rarsched::config::{ExperimentConfig, ObsConfig};
 use rarsched::coordinator::{train_job, TrainJobSpec};
 use rarsched::experiments::{self, ExperimentSetup};
 use rarsched::metrics::PolicySummary;
-use rarsched::runtime::{default_artifacts_dir, PjRt};
+use rarsched::obs;
+use rarsched::runtime::{default_artifacts_dir, PjRt, RunManifest};
 use rarsched::sched::{self, Policy};
 use rarsched::sim::Simulator;
-use rarsched::util::logger;
+use rarsched::util::{logger, Json};
 use rarsched::Result;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 rarsched — contention-aware RAR job scheduling (MobiHoc'22 SJF-BCO)
@@ -36,12 +38,16 @@ COMMANDS:
   simulate   --policy <sjf-bco|ff|ls|rand|gadget> [--config f.toml]
              [--seed N] [--servers N] [--horizon T] [--scale F]
              [--topology SPEC] [--contention degree|maxmin] [--json]
+             [--trace-out t.json] [--obs-json o.json] [--explain f|-]
+             [--timeline links.csv]
   online     [--policies sjf-bco,fifo,ff,backfill] [--gap F]
              [--burst ON:OFF] [--seed N] [--servers N] [--scale F]
              [--topology SPEC] [--contention degree|maxmin]
              [--no-clairvoyant] [--theta F] [--queue-cap N]
              [--migrate|--no-migrate] [--max-moves K] [--restart N]
              [--window W] [--config f.toml] [--json] [--out dir]
+             [--trace-out t.json] [--obs-json o.json] [--explain f|-]
+             [--timeline links.csv]
              overload controls: --theta rejects an arrival whose projected
              bottleneck effective degree (count x oversub, generalized
              Eq. 6; under --contention maxmin, count x capacity-ratio —
@@ -56,7 +62,21 @@ COMMANDS:
              explicit flags override. Defaults: theta inf, cap unbounded,
              migration off (= the control-free scheduler bit for bit).
   figures    --fig <4|5|6|7|motivation|ablations|online|topology|hetero|
-             overload|all> [--seed N] [--scale F] [--out dir] [--full]
+             overload|links|all> [--seed N] [--scale F] [--out dir]
+             [--full]
+
+  observability (simulate/online): --trace-out writes a Chrome-trace
+             JSON (chrome://tracing / Perfetto) of sim periods, planner
+             bisection rounds, whatif queries and scheduling events;
+             --obs-json dumps the always-on counter/histogram registry
+             (dirty-set hits, whatif calls, bisection rounds, scratch
+             reuse, par_map tasks); --explain writes the decision audit
+             (admission rejections vs θ, placements, migration guards)
+             as JSON, or a human report for `-`; --timeline writes the
+             per-link utilization time series as CSV (also: figures
+             --fig links). All four are passive: armed or not, the
+             schedule is bit-identical (see rust/src/obs). A --config
+             file's [obs] section seeds these; explicit flags override.
 
   topology SPEC: flat | rack:<spr>[:<oversub>] |
              rack:<spr>:<uplink_gbps>@<tor_gbps> |
@@ -70,6 +90,9 @@ COMMANDS:
   train      --model <tiny|small|base> [--workers W] [--steps N]
              [--spread] [--artifacts dir]
   verify     [--model tiny] [--artifacts dir]
+  obs-check  <trace.json>  validate a --trace-out artifact: well-formed
+             chrome-trace JSON, known phases, non-negative and per-thread
+             monotone timestamps (exit 1 otherwise)
   help       print this message
 ";
 
@@ -107,6 +130,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
         "verify" => cmd_verify(&args),
+        "obs-check" => cmd_obs_check(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -139,8 +163,107 @@ fn setup_from(args: &Args, base: ExperimentSetup) -> Result<ExperimentSetup> {
     Ok(setup)
 }
 
+/// The `[obs]` outputs for one run: a `--config` file's section as the
+/// base, overridden by any explicit `--trace-out` / `--obs-json` /
+/// `--explain` / `--timeline` flags.
+fn obs_config_from(args: &Args, base: ObsConfig) -> ObsConfig {
+    let mut obs = base;
+    if let Some(p) = args.get("trace-out") {
+        obs.trace_out = Some(p.to_string());
+    }
+    if let Some(p) = args.get("obs-json") {
+        obs.obs_json = Some(p.to_string());
+    }
+    if let Some(p) = args.get("explain") {
+        obs.explain = Some(p.to_string());
+    }
+    if let Some(p) = args.get("timeline") {
+        obs.timeline = Some(p.to_string());
+    }
+    obs
+}
+
+/// Arm the requested recorders. Returns the in-memory trace sink when
+/// `--trace-out` was requested (the events are drained into the file by
+/// [`write_obs`]). The timeline recorder is NOT armed here — callers arm
+/// it right before the run they want sampled, so planner what-if replays
+/// don't pollute the per-link series.
+fn arm_obs(obs: &ObsConfig) -> Option<Arc<obs::MemSink>> {
+    if obs.explain.is_some() {
+        obs::explain::arm();
+    }
+    obs.trace_out.as_ref().map(|_| {
+        let sink = obs::MemSink::new();
+        obs::trace::arm(sink.clone());
+        sink
+    })
+}
+
+/// Add the provenance stamp to a JSON object (no-op on non-objects).
+fn with_manifest(json: Json, manifest: &RunManifest) -> Json {
+    match json {
+        Json::Obj(mut map) => {
+            map.insert("manifest".to_string(), manifest.to_json());
+            Json::Obj(map)
+        }
+        other => other,
+    }
+}
+
+/// Disarm every recorder [`arm_obs`] armed (plus the timeline, if the
+/// caller armed it) and write the requested artifacts, each stamped with
+/// the run manifest.
+fn write_obs(
+    obs_cfg: &ObsConfig,
+    sink: Option<Arc<obs::MemSink>>,
+    manifest: &RunManifest,
+) -> Result<()> {
+    use std::path::Path;
+    if let (Some(path), Some(sink)) = (&obs_cfg.trace_out, sink) {
+        obs::trace::disarm();
+        let events = sink.take();
+        obs::trace::write_chrome_trace(Path::new(path), &events)?;
+        manifest.save_sibling(Path::new(path))?;
+        log::info!("wrote {} trace events to {path}", events.len());
+    }
+    if let Some(path) = &obs_cfg.explain {
+        let records = obs::explain::disarm();
+        if path == "-" {
+            print!("{}", obs::explain::render_report(&records));
+        } else {
+            let json = with_manifest(obs::explain::to_json(&records), manifest);
+            std::fs::write(path, json.to_pretty())?;
+            log::info!("wrote {} audited decisions to {path}", records.len());
+        }
+    }
+    if let Some(path) = &obs_cfg.timeline {
+        let samples = obs::timeline::disarm();
+        obs::timeline::save_csv(Path::new(path), &samples)?;
+        manifest.save_sibling(Path::new(path))?;
+        log::info!("wrote {} link samples to {path}", samples.len());
+    }
+    if let Some(path) = &obs_cfg.obs_json {
+        let json = with_manifest(obs::metrics::to_json(), manifest);
+        std::fs::write(path, json.to_pretty())?;
+        log::info!("wrote metrics registry to {path}");
+    }
+    Ok(())
+}
+
+/// Provenance stamp for this invocation: the seed, a digest of the
+/// effective config (the `--config` file's text, else the paper-default
+/// TOML), and the raw CLI flags.
+fn run_manifest(args_config: Option<&str>, seed: u64) -> RunManifest {
+    let config_text = match args_config {
+        Some(path) => std::fs::read_to_string(path).unwrap_or_default(),
+        None => ExperimentConfig::paper().to_toml_string(),
+    };
+    let flags: Vec<String> = std::env::args().skip(1).collect();
+    RunManifest::new(seed, &config_text, &flags)
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let (cluster, jobs, params, horizon, policy);
+    let (cluster, jobs, params, horizon, policy, seed, obs_base);
     if let Some(path) = args.get("config") {
         let cfg = ExperimentConfig::load(std::path::Path::new(path))?;
         cluster = cfg.build_cluster();
@@ -148,6 +271,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         params = cfg.build_params();
         horizon = cfg.horizon();
         policy = cfg.scheduler.policy;
+        seed = cfg.seed;
+        obs_base = cfg.obs.clone();
     } else {
         let setup = setup_from(args, ExperimentSetup::paper())?;
         cluster = setup.cluster();
@@ -155,9 +280,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         params = setup.params();
         horizon = setup.horizon;
         policy = args.get_or("policy", "sjf-bco").parse::<Policy>()?;
+        seed = setup.seed;
+        obs_base = ObsConfig::default();
     }
+    let obs_cfg = obs_config_from(args, obs_base);
     let json = args.get_bool("json");
     args.reject_unknown()?;
+    let manifest = run_manifest(args.get("config"), seed);
+    let sink = arm_obs(&obs_cfg);
 
     log::info!(
         "scheduling {} jobs on {} servers / {} GPUs with {policy}",
@@ -166,6 +296,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cluster.num_gpus()
     );
     let plan = sched::schedule(policy, &cluster, &jobs, &params, horizon)?;
+    if obs_cfg.timeline.is_some() {
+        // armed after planning: the bisection's what-if replays must not
+        // pollute the realized per-link series
+        obs::timeline::arm();
+    }
     let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
     let summary = PolicySummary::from_outcome(policy.name(), plan.est_makespan(), &outcome);
     if json {
@@ -194,6 +329,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             println!("WARNING: simulation truncated at the safety horizon");
         }
     }
+    write_obs(&obs_cfg, sink, &manifest)?;
     Ok(())
 }
 
@@ -255,7 +391,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     // scale, horizon, inter_bw) and the [online] overload controls;
     // explicit CLI flags always override it. Sections an online setup
     // cannot represent are called out instead of silently dropped.
-    let (base_setup, base_options) = match args.get("config") {
+    let (base_setup, base_options, base_obs) = match args.get("config") {
         Some(path) => {
             let cfg = ExperimentConfig::load(std::path::Path::new(path))?;
             if !cfg.cluster.capacities.is_empty() {
@@ -303,9 +439,9 @@ fn cmd_online(args: &Args) -> Result<()> {
             s.topology = cfg.topology;
             s.model = cfg.contention;
             s.inter_bw = cfg.cluster.inter_bw;
-            (s, cfg.online.build_options())
+            (s, cfg.online.build_options(), cfg.obs.clone())
         }
-        None => (ExperimentSetup::paper(), OnlineOptions::default()),
+        None => (ExperimentSetup::paper(), OnlineOptions::default(), ObsConfig::default()),
     };
     let setup = setup_from(args, base_setup)?;
     let gap = args.get_f64("gap", 5.0)?;
@@ -317,9 +453,17 @@ fn cmd_online(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let clairvoyant = !args.get_bool("no-clairvoyant");
     let options = online_options_from(args, base_options)?;
+    let obs_cfg = obs_config_from(args, base_obs);
     let json = args.get_bool("json");
     let out_dir = args.get("out").map(std::path::PathBuf::from);
     args.reject_unknown()?;
+    let manifest = run_manifest(args.get("config"), setup.seed);
+    let sink = arm_obs(&obs_cfg);
+    if obs_cfg.timeline.is_some() {
+        // NOTE: the series spans every run of the comparison (each
+        // policy, plus the clairvoyant reference's replay)
+        obs::timeline::arm();
+    }
 
     log::info!(
         "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}, \
@@ -373,7 +517,10 @@ fn cmd_online(args: &Args) -> Result<()> {
             series.save_csv(&d.join(format!("windows_{slug}.csv")))?;
             log::info!("wrote windows_{slug}.csv to {d:?}");
         }
+        // provenance stamp alongside every artifact in the directory
+        std::fs::write(d.join("run_manifest.json"), manifest.to_json().to_pretty())?;
     }
+    write_obs(&obs_cfg, sink, &manifest)?;
     Ok(())
 }
 
@@ -449,6 +596,34 @@ fn cmd_figures(args: &Args) -> Result<()> {
             log::info!("wrote overload.csv / overload.json to {d:?}");
         }
     }
+    if which == "links" {
+        // per-link utilization timeline: plan once with SJF-BCO, then
+        // replay with the timeline recorder armed — armed *after*
+        // planning so the bisection's what-if replays don't pollute the
+        // realized series
+        let cluster = setup.cluster();
+        let jobs = setup.jobs();
+        let params = setup.params();
+        let plan = sched::schedule(Policy::SjfBco, &cluster, &jobs, &params, setup.horizon)?;
+        obs::timeline::arm();
+        let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
+        let samples = obs::timeline::disarm();
+        println!("== per-link utilization timeline ==");
+        println!(
+            "{} samples over {} links, makespan {} slots",
+            samples.len(),
+            cluster.topology().num_links(),
+            outcome.makespan
+        );
+        if let Some(d) = &out_dir {
+            obs::timeline::save_csv(&d.join("links.csv"), &samples)?;
+            std::fs::write(
+                d.join("links.json"),
+                obs::timeline::to_json(&samples).to_pretty(),
+            )?;
+            log::info!("wrote links.csv / links.json to {d:?}");
+        }
+    }
     if which == "ablations" {
         use rarsched::experiments::ablations as ab;
         reports.push(("ablation_alpha", ab::ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0])?));
@@ -473,6 +648,11 @@ fn cmd_figures(args: &Args) -> Result<()> {
             std::fs::write(d.join(format!("{name}.json")), report.to_json()?)?;
             log::info!("wrote {name}.csv / {name}.json to {d:?}");
         }
+    }
+    if let Some(d) = &out_dir {
+        // provenance stamp alongside every artifact in the directory
+        let manifest = run_manifest(None, setup.seed);
+        std::fs::write(d.join("run_manifest.json"), manifest.to_json().to_pretty())?;
     }
     Ok(())
 }
@@ -562,6 +742,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.mean_step_time(),
         report.total
     );
+    Ok(())
+}
+
+/// Validate a `--trace-out` artifact: parse as JSON via the in-tree
+/// parser and check chrome-trace well-formedness (the verify.sh gate).
+fn cmd_obs_check(args: &Args) -> Result<()> {
+    let file = match (args.positional().first(), args.get("file")) {
+        (_, Some(f)) => f.to_string(),
+        (Some(f), None) => f.clone(),
+        (None, None) => anyhow::bail!("usage: rarsched obs-check <trace.json>"),
+    };
+    args.reject_unknown()?;
+    let text = std::fs::read_to_string(&file)
+        .map_err(|e| anyhow::anyhow!("reading {file}: {e}"))?;
+    let json = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{file} is not well-formed JSON: {e}"))?;
+    let events = obs::trace::validate_chrome_trace(&json)
+        .map_err(|e| anyhow::anyhow!("{file} is not a valid chrome trace: {e}"))?;
+    println!("{file}: OK ({events} trace events)");
     Ok(())
 }
 

@@ -283,6 +283,12 @@ pub fn progressive_fill<'p>(
     rings: impl Iterator<Item = (JobId, &'p JobPlacement)>,
     scratch: &mut AllocScratch,
 ) -> Allocation {
+    use crate::obs::metrics;
+    let _span = crate::obs::trace::span("net.progressive_fill", "net");
+    let cap_before = scratch.arena.capacity()
+        + scratch.spans.capacity()
+        + scratch.unfrozen.capacity()
+        + scratch.frozen.capacity();
     let num_links = topo.num_links();
     scratch.arena.clear();
     scratch.spans.clear();
@@ -367,6 +373,15 @@ pub fn progressive_fill<'p>(
             *r = 0.0; // FP slack from repeated subtraction
         }
     }
+    let cap_after = scratch.arena.capacity()
+        + scratch.spans.capacity()
+        + scratch.unfrozen.capacity()
+        + scratch.frozen.capacity();
+    metrics::incr(if cap_after > cap_before {
+        metrics::Counter::ScratchRealloc
+    } else {
+        metrics::Counter::ScratchReuse
+    });
     out
 }
 

@@ -1,0 +1,349 @@
+//! Fixed-slot counter/histogram registry for the contention hot paths.
+//!
+//! Counters are process-global relaxed atomics, **always on**: they are
+//! passive by construction (nothing ever reads them back into a
+//! scheduling decision — the passivity property test pins this), and a
+//! relaxed `fetch_add` is cheap enough to leave enabled in release
+//! builds. Parallel stages accumulate **per thread** (plain locals in
+//! the `par_map` worker loop) and merge here once at worker exit, so
+//! the hot loop pays one atomic per worker rather than one per task.
+//!
+//! `--obs-json` dumps the registry ([`to_json`]) after a run; the debug
+//! cross-check counters ([`Counter::TrackerCrossChecks`],
+//! [`Counter::HistCrossChecks`]) let a debug-build verify run confirm
+//! the tracker-vs-rebuild assertions actually executed instead of
+//! silently compiling away.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed counter slots. Adding a slot means adding it here, to
+/// [`Counter::ALL`] and to [`Counter::name`] — the registry never
+/// allocates or hashes on the increment path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Dirty-set drains where a cached rate survived (active job *not*
+    /// re-rated this period).
+    DirtyHits,
+    /// Jobs re-rated by a dirty-set drain (cache misses).
+    DirtyMisses,
+    /// Rate-refresh periods executed by the batch engine.
+    EnginePeriods,
+    /// Rate-refresh periods executed by the online loop.
+    OnlinePeriods,
+    /// Speculative tracker probes (`whatif_bottleneck` /
+    /// `whatif_rebottleneck` / `whatif_share_gbps`).
+    WhatifCalls,
+    /// SJF-BCO θ-bisection rounds.
+    BisectionRounds,
+    /// `progressive_fill` calls that reused the scratch arena capacity.
+    ScratchReuse,
+    /// `progressive_fill` calls that had to grow the scratch arena.
+    ScratchRealloc,
+    /// Tracker-vs-full-rebuild debug cross-checks executed.
+    TrackerCrossChecks,
+    /// Histogram-vs-O(L)-scan `max_contention` cross-checks executed.
+    HistCrossChecks,
+    /// Items processed by `par_map` workers (merged per thread at exit).
+    ParMapTasks,
+    /// Worker threads spawned by `par_map`.
+    ParMapWorkers,
+    /// Online admissions rejected (any reason).
+    AdmissionRejects,
+    /// Online migrations committed.
+    MigrationCommits,
+    /// Online migration candidates abandoned by a guard.
+    MigrationAborts,
+    /// Per-link timeline samples recorded.
+    TimelineSamples,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 16] = [
+        Counter::DirtyHits,
+        Counter::DirtyMisses,
+        Counter::EnginePeriods,
+        Counter::OnlinePeriods,
+        Counter::WhatifCalls,
+        Counter::BisectionRounds,
+        Counter::ScratchReuse,
+        Counter::ScratchRealloc,
+        Counter::TrackerCrossChecks,
+        Counter::HistCrossChecks,
+        Counter::ParMapTasks,
+        Counter::ParMapWorkers,
+        Counter::AdmissionRejects,
+        Counter::MigrationCommits,
+        Counter::MigrationAborts,
+        Counter::TimelineSamples,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::DirtyHits => "dirty_hits",
+            Counter::DirtyMisses => "dirty_misses",
+            Counter::EnginePeriods => "engine_periods",
+            Counter::OnlinePeriods => "online_periods",
+            Counter::WhatifCalls => "whatif_calls",
+            Counter::BisectionRounds => "bisection_rounds",
+            Counter::ScratchReuse => "scratch_reuse",
+            Counter::ScratchRealloc => "scratch_realloc",
+            Counter::TrackerCrossChecks => "tracker_cross_checks",
+            Counter::HistCrossChecks => "hist_cross_checks",
+            Counter::ParMapTasks => "par_map_tasks",
+            Counter::ParMapWorkers => "par_map_workers",
+            Counter::AdmissionRejects => "admission_rejects",
+            Counter::MigrationCommits => "migration_commits",
+            Counter::MigrationAborts => "migration_aborts",
+            Counter::TimelineSamples => "timeline_samples",
+        }
+    }
+}
+
+const NUM_COUNTERS: usize = Counter::ALL.len();
+
+// const-item repeat (not inline-const) keeps the MSRV conservative
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+static COUNTERS: [AtomicU64; NUM_COUNTERS] = [ZERO; NUM_COUNTERS];
+
+/// Power-of-two-bucket histograms over per-event magnitudes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Jobs re-rated per dirty-set drain.
+    ReratedPerDrain,
+    /// What-if probes issued per online arrival.
+    WhatifPerArrival,
+    /// θ-bisection rounds per SJF-BCO schedule.
+    RoundsPerBisection,
+}
+
+impl Hist {
+    pub const ALL: [Hist; 3] =
+        [Hist::ReratedPerDrain, Hist::WhatifPerArrival, Hist::RoundsPerBisection];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::ReratedPerDrain => "rerated_per_drain",
+            Hist::WhatifPerArrival => "whatif_per_arrival",
+            Hist::RoundsPerBisection => "rounds_per_bisection",
+        }
+    }
+}
+
+/// Buckets: `[0]`, `[1]`, then `[2^(i-1), 2^i)` up to an overflow bucket.
+pub const HIST_BUCKETS: usize = 17;
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_ROW: [AtomicU64; HIST_BUCKETS] = [ZERO; HIST_BUCKETS];
+
+static HISTS: [[AtomicU64; HIST_BUCKETS]; Hist::ALL.len()] = [ZERO_ROW; 3];
+
+fn bucket_of(v: u64) -> usize {
+    match v {
+        0 => 0,
+        _ => ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1),
+    }
+}
+
+/// Human label for histogram bucket `i` (`"0"`, `"1"`, `"2-3"`, …).
+pub fn bucket_label(i: usize) -> String {
+    match i {
+        0 => "0".to_string(),
+        1 => "1".to_string(),
+        _ if i == HIST_BUCKETS - 1 => format!("{}+", 1u64 << (HIST_BUCKETS - 2)),
+        _ => format!("{}-{}", 1u64 << (i - 1), (1u64 << i) - 1),
+    }
+}
+
+/// Per-thread `par_map` task totals, keyed by worker label (merged once
+/// per worker at exit — see [`note_worker_tasks`]).
+static THREAD_TASKS: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
+
+/// Add `n` to a counter slot (relaxed; safe from any thread).
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+/// Increment a counter slot by one.
+#[inline]
+pub fn incr(c: Counter) {
+    add(c, 1);
+}
+
+/// Current value of a counter slot.
+pub fn get(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Record one observation into a histogram.
+pub fn record(h: Hist, v: u64) {
+    HISTS[h as usize][bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Merge one worker's locally-accumulated task count: bumps
+/// [`Counter::ParMapTasks`] and the per-thread table under `label`.
+pub fn note_worker_tasks(label: &str, tasks: u64) {
+    add(Counter::ParMapTasks, tasks);
+    *THREAD_TASKS
+        .lock()
+        .expect("thread-task table poisoned")
+        .entry(label.to_string())
+        .or_insert(0) += tasks;
+}
+
+/// Point-in-time copy of every counter (for delta assertions and the
+/// armed-vs-null bench).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Snapshot {
+    counters: [u64; NUM_COUNTERS],
+}
+
+impl Snapshot {
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// `current - self` per slot (saturating: reset between snapshots
+    /// reads as zero, not a wrap).
+    pub fn delta(&self, current: &Snapshot) -> BTreeMap<&'static str, u64> {
+        Counter::ALL
+            .iter()
+            .map(|&c| (c.name(), current.get(c).saturating_sub(self.get(c))))
+            .collect()
+    }
+}
+
+/// Snapshot every counter now.
+pub fn snapshot() -> Snapshot {
+    let mut counters = [0u64; NUM_COUNTERS];
+    for (slot, atomic) in counters.iter_mut().zip(COUNTERS.iter()) {
+        *slot = atomic.load(Ordering::Relaxed);
+    }
+    Snapshot { counters }
+}
+
+/// Zero every counter, histogram and per-thread total. Bench/test
+/// setup only — concurrent increments during the reset land on either
+/// side nondeterministically.
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for h in &HISTS {
+        for b in h {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+    THREAD_TASKS.lock().expect("thread-task table poisoned").clear();
+}
+
+/// Dump the whole registry (the `--obs-json` payload): counters,
+/// histograms (zero buckets elided) and per-thread `par_map` totals.
+pub fn to_json() -> Json {
+    let counters = Json::Obj(
+        Counter::ALL
+            .iter()
+            .map(|&c| (c.name().to_string(), Json::Num(get(c) as f64)))
+            .collect(),
+    );
+    let hists = Json::Obj(
+        Hist::ALL
+            .iter()
+            .map(|&h| {
+                let buckets = Json::Obj(
+                    (0..HIST_BUCKETS)
+                        .filter_map(|i| {
+                            let n = HISTS[h as usize][i].load(Ordering::Relaxed);
+                            (n > 0).then(|| (bucket_label(i), Json::Num(n as f64)))
+                        })
+                        .collect(),
+                );
+                (h.name().to_string(), buckets)
+            })
+            .collect(),
+    );
+    let threads = Json::Obj(
+        THREAD_TASKS
+            .lock()
+            .expect("thread-task table poisoned")
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("counters", counters),
+        ("histograms", hists),
+        ("par_map_threads", threads),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Counters are process-global and unit tests run in parallel, so
+    // every assertion here is a *delta* from a local snapshot, never an
+    // absolute value.
+
+    #[test]
+    fn add_and_snapshot_deltas() {
+        let before = snapshot();
+        add(Counter::WhatifCalls, 3);
+        incr(Counter::WhatifCalls);
+        let after = snapshot();
+        assert!(after.get(Counter::WhatifCalls) >= before.get(Counter::WhatifCalls) + 4);
+        let delta = before.delta(&after);
+        assert!(delta["whatif_calls"] >= 4);
+    }
+
+    #[test]
+    fn histogram_bucketing() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1 << 40), HIST_BUCKETS - 1);
+        assert_eq!(bucket_label(0), "0");
+        assert_eq!(bucket_label(1), "1");
+        assert_eq!(bucket_label(2), "2-3");
+        assert_eq!(bucket_label(3), "4-7");
+        assert_eq!(bucket_label(HIST_BUCKETS - 1), "32768+");
+    }
+
+    #[test]
+    fn worker_task_merge_lands_in_counter_and_table() {
+        let before = get(Counter::ParMapTasks);
+        note_worker_tasks("metrics-test-worker", 5);
+        note_worker_tasks("metrics-test-worker", 2);
+        assert!(get(Counter::ParMapTasks) >= before + 7);
+        let json = to_json();
+        let threads = json.req("par_map_threads").unwrap();
+        assert!(threads.req("metrics-test-worker").unwrap().as_f64().unwrap() >= 7.0);
+    }
+
+    #[test]
+    fn json_dump_names_every_counter_and_histogram() {
+        record(Hist::ReratedPerDrain, 3);
+        let json = to_json();
+        let counters = json.req("counters").unwrap();
+        for c in Counter::ALL {
+            assert!(counters.get(c.name()).is_some(), "missing counter {}", c.name());
+        }
+        let hists = json.req("histograms").unwrap();
+        for h in Hist::ALL {
+            assert!(hists.get(h.name()).is_some(), "missing histogram {}", h.name());
+        }
+        // the recorded observation shows up in a "2-3" bucket
+        assert!(
+            hists.req("rerated_per_drain").unwrap().req("2-3").unwrap().as_f64().unwrap() >= 1.0
+        );
+        // and the dump is valid JSON end to end
+        assert_eq!(Json::parse(&json.to_string()).unwrap(), json);
+    }
+}

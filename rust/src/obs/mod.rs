@@ -1,0 +1,56 @@
+//! Observability: tracing, metrics and decision audit for the
+//! contention stack.
+//!
+//! The paper's whole argument is that contention — count × multiplier on
+//! a crossed link (Eq. 6) — drives makespan, so this layer instruments
+//! exactly the choke points the contention model flows through:
+//!
+//! * [`trace`] — a [`TraceSink`](trace::TraceSink) facade emitting
+//!   Chrome-trace/Perfetto JSON: duration spans for sim rate periods,
+//!   SJF-BCO bisection rounds, what-if probes, `progressive_fill` calls
+//!   and `par_map` worker tasks; instant events for
+//!   Arrive/Admit/Reject/Complete/Migrate carrying the bottleneck link
+//!   id (`--trace-out trace.json`).
+//! * [`metrics`] — a fixed-slot counter/histogram registry (dirty-set
+//!   hits vs misses, jobs re-rated per drain, what-if calls per arrival,
+//!   bisection iterations, scratch-buffer reuse vs realloc, per-thread
+//!   `par_map` task counts, debug cross-check executions) merged from
+//!   per-thread accumulators at run end and dumped via `--obs-json`.
+//! * [`explain`] — decision-audit records for every admission rejection
+//!   (projected bottleneck vs θ), placement choice (winning candidate's
+//!   link score vs runner-up) and migration commit/abort (which guard
+//!   fired), surfaced via `--explain` on `online`.
+//! * [`timeline`] — per-link utilization time series (ring count,
+//!   effective degree and residual Gbps under the active
+//!   [`ContentionModel`](crate::net::ContentionModel)), sampled at
+//!   scheduling events and exported CSV/JSON (`figures --fig links`).
+//!
+//! # The passivity invariant
+//!
+//! Observability is **zero-cost-when-off and bit-identical-when-on**:
+//! the default state (no sink armed — the Null sink) costs one relaxed
+//! atomic load per hook, and arming any sink, counter dump, explain log
+//! or timeline recorder **never changes a scheduling outcome** — not a
+//! makespan, not a `JobRecord`, not an event sequence, not a migration
+//! decision. Instrumentation only ever *reads* scheduler state; nothing
+//! it computes flows back into a decision. This is an architecture
+//! invariant in the same ladder as tracker-vs-snapshot equivalence, and
+//! it is enforced by the `obs_passivity` property test (flat/rack/pod
+//! fabrics × all three engine modes × the online loop with migration and
+//! θ-admission on and off).
+//!
+//! The counters in [`metrics`] are always-on relaxed atomics (they are
+//! passive by construction — nothing reads them back into a decision);
+//! the trace/explain/timeline recorders are armed explicitly and read
+//! wall-clock time only while armed, so the disarmed stack never calls
+//! [`std::time::Instant::now`] on a hot path.
+
+pub mod explain;
+pub mod metrics;
+pub mod timeline;
+pub mod trace;
+
+pub use explain::Decision;
+pub use metrics::{Counter, Hist};
+pub use timeline::LinkSample;
+pub use trace::{MemSink, NullSink, TraceEvent, TraceSink};

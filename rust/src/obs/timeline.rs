@@ -1,0 +1,198 @@
+//! Per-link utilization time series, sampled at scheduling events.
+//!
+//! Each sample row records — for one fabric link at one event time —
+//! the active-ring count, the link multiplier, the **effective degree**
+//! `count × multiplier` (the generalized Eq. 6 quantity the scheduler
+//! minimizes) and the **residual Gbps** left on the link under the
+//! engines' bottleneck-share rates. Under
+//! [`ContentionModel::MaxMinFair`](crate::net::ContentionModel) the
+//! multiplier already carries the capacity ratio, so the series shows
+//! exactly what the active model charges each link.
+//!
+//! Process-global recorder, disarmed by default, passive when armed
+//! (samples are read-only probes of the tracker). Exported CSV/JSON and
+//! wired as `figures --fig links`.
+
+use crate::online::ContentionTracker;
+use crate::util::Json;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// One (event time, link) utilization sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSample {
+    /// Event time (slots) the sample was taken at.
+    pub t: u64,
+    /// Link index within the fabric.
+    pub link: usize,
+    /// Human label ([`Topology::describe`](crate::topology::Topology::describe)).
+    pub label: String,
+    /// Active rings crossing the link.
+    pub count: usize,
+    /// Contention multiplier of the link under the active model.
+    pub multiplier: f64,
+    /// Effective degree `count × multiplier`.
+    pub effective: f64,
+    /// Residual bandwidth (Gbps) after the bottleneck-share charges.
+    pub residual_gbps: f64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static SAMPLES: Mutex<Vec<LinkSample>> = Mutex::new(Vec::new());
+
+/// Arm the recorder (clears any previous samples).
+pub fn arm() {
+    SAMPLES.lock().expect("timeline poisoned").clear();
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm and drain: returns everything sampled since [`arm`].
+pub fn disarm() -> Vec<LinkSample> {
+    ARMED.store(false, Ordering::Release);
+    std::mem::take(&mut *SAMPLES.lock().expect("timeline poisoned"))
+}
+
+/// Whether the recorder is armed — the hooks' fast path.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Sample every fabric link from the tracker's maintained counts at
+/// event time `t`. No-op when disarmed; `O(L + Σ span)` when armed (the
+/// residual ledger walks the active set) — event-rate, not slot-rate.
+pub fn sample(t: u64, tracker: &ContentionTracker) {
+    if !armed() {
+        return;
+    }
+    let topo = tracker.topology();
+    let residual = tracker.residual_gbps();
+    let mut rows = SAMPLES.lock().expect("timeline poisoned");
+    for l in 0..topo.num_links() {
+        let link = crate::topology::LinkId(l);
+        let count = tracker.link_count(link);
+        let multiplier = topo.multiplier(link);
+        rows.push(LinkSample {
+            t,
+            link: l,
+            label: topo.describe(link),
+            count,
+            multiplier,
+            effective: count as f64 * multiplier,
+            residual_gbps: residual[l],
+        });
+    }
+    drop(rows);
+    super::metrics::add(super::metrics::Counter::TimelineSamples, topo.num_links() as u64);
+}
+
+/// CSV export: one row per (event time, link).
+pub fn to_csv(samples: &[LinkSample]) -> String {
+    let mut out = String::from("t,link,label,count,multiplier,effective,residual_gbps\n");
+    for s in samples {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{}",
+            s.t, s.link, s.label, s.count, s.multiplier, s.effective, s.residual_gbps
+        );
+    }
+    out
+}
+
+/// JSON export mirroring [`to_csv`].
+pub fn to_json(samples: &[LinkSample]) -> Json {
+    Json::obj(vec![(
+        "samples",
+        Json::arr(
+            samples
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("t", Json::Num(s.t as f64)),
+                        ("link", Json::Num(s.link as f64)),
+                        ("label", Json::Str(s.label.clone())),
+                        ("count", Json::Num(s.count as f64)),
+                        ("multiplier", Json::Num(s.multiplier)),
+                        ("effective", Json::Num(s.effective)),
+                        ("residual_gbps", Json::Num(s.residual_gbps)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+/// Write the CSV export to `path`.
+pub fn save_csv(path: &std::path::Path, samples: &[LinkSample]) -> crate::Result<()> {
+    std::fs::write(path, to_csv(samples))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, JobPlacement, ServerId};
+    use crate::jobs::JobId;
+
+    // sample() is exercised end-to-end (armed, through the online loop)
+    // in tests/obs_passivity.rs; here we drive the tracker directly with
+    // the recorder disarmed plus test the exporters on literal rows.
+
+    #[test]
+    fn disarmed_sample_records_nothing() {
+        let c = Cluster::uniform(2, 4, 1.0, 25.0);
+        let mut tr = ContentionTracker::new(&c);
+        tr.admit(
+            JobId(0),
+            &JobPlacement::new(vec![c.global_gpu(ServerId(0), 0), c.global_gpu(ServerId(1), 0)]),
+        );
+        assert!(!armed());
+        sample(5, &tr);
+        // arm() clears, so an immediate drain after arming sees nothing
+        arm();
+        assert!(disarm().is_empty());
+    }
+
+    fn rows() -> Vec<LinkSample> {
+        vec![
+            LinkSample {
+                t: 0,
+                link: 0,
+                label: "server 0 uplink".into(),
+                count: 2,
+                multiplier: 1.0,
+                effective: 2.0,
+                residual_gbps: 0.0,
+            },
+            LinkSample {
+                t: 0,
+                link: 1,
+                label: "server 1 uplink".into(),
+                count: 1,
+                multiplier: 2.0,
+                effective: 2.0,
+                residual_gbps: 12.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let csv = to_csv(&rows());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "t,link,label,count,multiplier,effective,residual_gbps");
+        assert_eq!(lines[1], "0,0,server 0 uplink,2,1,2,0");
+        assert_eq!(lines[2], "0,1,server 1 uplink,1,2,2,12.5");
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let json = to_json(&rows());
+        let rows_json = json.req("samples").unwrap().as_arr().unwrap();
+        assert_eq!(rows_json.len(), 2);
+        assert_eq!(rows_json[1].req("residual_gbps").unwrap().as_f64().unwrap(), 12.5);
+        assert_eq!(Json::parse(&json.to_string()).unwrap(), json);
+    }
+}

@@ -1,0 +1,430 @@
+//! Chrome-trace/Perfetto event emission behind a [`TraceSink`] facade.
+//!
+//! The facade follows the `log`-crate idiom already used by
+//! [`crate::util::logger`]: a process-global sink, disarmed by default.
+//! Disarmed (the **Null sink**) every hook is a single relaxed atomic
+//! load and an early return — no clock read, no allocation, no lock —
+//! which is what makes the passivity invariant cheap enough to leave the
+//! hooks compiled into release builds. Arming a sink (in-memory
+//! [`MemSink`] for `--trace-out`, or a custom [`TraceSink`]) turns the
+//! same hooks into real emissions; by the passivity invariant (see
+//! [`crate::obs`]) that still never changes a scheduling outcome.
+//!
+//! Event vocabulary (all timestamps in microseconds since first arm):
+//!
+//! * duration spans (`ph: "X"`): `sim.period`, `scorer.makespan`,
+//!   `bco.bisect_round`, `net.progressive_fill`, `par.worker`,
+//!   `online.period`;
+//! * instant events (`ph: "i"`): `job.arrive`, `job.admit`,
+//!   `job.reject`, `job.complete`, `job.migrate` — each carrying the job
+//!   id and, where one exists, the bottleneck link id.
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Chrome-trace event phase: complete (duration) or instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `"X"` — a complete (duration) event with `ts` + `dur`.
+    Complete,
+    /// `"i"` — an instant event.
+    Instant,
+}
+
+/// One trace event. Args are numeric key/value pairs — enough for job
+/// ids, link ids, θ values and counts, without per-event string churn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Chrome-trace category (groups rows in the viewer).
+    pub cat: &'static str,
+    pub ph: Phase,
+    /// Microseconds since the global trace epoch (first arm).
+    pub ts_us: u64,
+    /// Duration in microseconds ([`Phase::Complete`] only, else 0).
+    pub dur_us: u64,
+    /// Emitting thread, as a stable small integer.
+    pub tid: u64,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// Receiver of trace events. Implementations must tolerate concurrent
+/// emission from `par_map` workers.
+pub trait TraceSink: Send + Sync {
+    fn emit(&self, ev: TraceEvent);
+}
+
+/// The provably-passive default: discards every event. Arming it is
+/// equivalent to not arming anything except that hooks pay the
+/// event-construction cost — exactly what `benches/obs_overhead.rs`
+/// measures against.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn emit(&self, _ev: TraceEvent) {}
+}
+
+/// In-memory sink backing `--trace-out`: collects events for a
+/// [`chrome_trace_json`] dump at process end.
+#[derive(Debug, Default)]
+pub struct MemSink {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl MemSink {
+    pub fn new() -> Arc<MemSink> {
+        Arc::new(MemSink::default())
+    }
+
+    /// Snapshot of everything emitted so far, in emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().expect("trace sink poisoned").clone()
+    }
+
+    /// Drain the collected events (used between bench iterations).
+    pub fn take(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.events.lock().expect("trace sink poisoned"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("trace sink poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl TraceSink for MemSink {
+    fn emit(&self, ev: TraceEvent) {
+        self.events.lock().expect("trace sink poisoned").push(ev);
+    }
+}
+
+// ---- the global facade ---------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Arc<dyn TraceSink>>> = Mutex::new(None);
+
+/// The global trace epoch: fixed at first use so every `ts_us` is
+/// non-negative and all events share one timeline.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Stable small integer for the current thread (Chrome-trace `tid`).
+fn tid() -> u64 {
+    // ThreadId has no stable numeric accessor; its Debug form is
+    // "ThreadId(n)" — extract the digits (stable enough for a viewer row).
+    let s = format!("{:?}", std::thread::current().id());
+    s.bytes().filter(u8::is_ascii_digit).fold(0u64, |acc, b| {
+        acc.wrapping_mul(10).wrapping_add(u64::from(b - b'0'))
+    })
+}
+
+/// Install `sink` as the global trace receiver and arm emission.
+pub fn arm(sink: Arc<dyn TraceSink>) {
+    epoch(); // pin the epoch before the first event
+    *SINK.lock().expect("trace sink registry poisoned") = Some(sink);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm emission and drop the installed sink.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *SINK.lock().expect("trace sink registry poisoned") = None;
+}
+
+/// Whether a sink is armed. The disarmed fast path of every hook.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Emit one event if armed (drops silently otherwise).
+pub fn emit(ev: TraceEvent) {
+    if !armed() {
+        return;
+    }
+    let sink = SINK.lock().expect("trace sink registry poisoned").clone();
+    if let Some(sink) = sink {
+        sink.emit(ev);
+    }
+}
+
+/// Emit an instant event (`ph: "i"`) if armed.
+pub fn instant(name: &'static str, cat: &'static str, args: &[(&'static str, f64)]) {
+    if !armed() {
+        return;
+    }
+    emit(TraceEvent {
+        name,
+        cat,
+        ph: Phase::Instant,
+        ts_us: now_us(),
+        dur_us: 0,
+        tid: tid(),
+        args: args.to_vec(),
+    });
+}
+
+/// RAII duration span: emits one [`Phase::Complete`] event on drop.
+/// Disarmed construction is free (no clock read) and the drop is a
+/// no-op; a span never straddles arm/disarm boundaries usefully, so a
+/// span created disarmed stays silent even if arming races its drop.
+#[must_use = "a span measures the scope it is bound to"]
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    args: Vec<(&'static str, f64)>,
+    live: bool,
+}
+
+/// Open a duration span (see [`Span`]).
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !armed() {
+        return Span { name, cat, start_us: 0, args: Vec::new(), live: false };
+    }
+    Span { name, cat, start_us: now_us(), args: Vec::new(), live: true }
+}
+
+impl Span {
+    /// Attach a numeric argument (no-op when the span is dead).
+    pub fn arg(mut self, key: &'static str, value: f64) -> Span {
+        if self.live {
+            self.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end = now_us();
+        emit(TraceEvent {
+            name: self.name,
+            cat: self.cat,
+            ph: Phase::Complete,
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            tid: tid(),
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+// ---- Chrome-trace JSON ---------------------------------------------------
+
+/// Render events as a Chrome-trace document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+///
+/// Emission order is close-time for spans (a [`Span`] reports its
+/// *open* timestamp only when dropped), so the document is sorted by
+/// timestamp here — longer spans first at ties, the nesting order
+/// viewers expect — which is also what makes the emitted file satisfy
+/// [`validate_chrome_trace`]'s monotonicity requirement.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut ordered: Vec<&TraceEvent> = events.iter().collect();
+    ordered.sort_by_key(|e| (e.ts_us, std::cmp::Reverse(e.dur_us)));
+    let rows = ordered
+        .iter()
+        .map(|ev| {
+            let mut pairs = vec![
+                ("name", Json::Str(ev.name.to_string())),
+                ("cat", Json::Str(ev.cat.to_string())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(ev.tid as f64)),
+                ("ts", Json::Num(ev.ts_us as f64)),
+            ];
+            match ev.ph {
+                Phase::Complete => {
+                    pairs.push(("ph", Json::Str("X".to_string())));
+                    pairs.push(("dur", Json::Num(ev.dur_us as f64)));
+                }
+                Phase::Instant => {
+                    pairs.push(("ph", Json::Str("i".to_string())));
+                    pairs.push(("s", Json::Str("p".to_string())));
+                }
+            }
+            if !ev.args.is_empty() {
+                pairs.push((
+                    "args",
+                    Json::obj(ev.args.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
+                ));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::arr(rows)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Write a Chrome-trace file for `events` (the `--trace-out` sink dump).
+pub fn write_chrome_trace(path: &std::path::Path, events: &[TraceEvent]) -> crate::Result<()> {
+    std::fs::write(path, chrome_trace_json(events).to_string())?;
+    Ok(())
+}
+
+/// Validate a parsed Chrome-trace document: `traceEvents` must be an
+/// array of objects each carrying a string `name`, a known `ph`, a
+/// non-negative numeric `ts` (and non-negative `dur` for `"X"` spans),
+/// with per-`tid` timestamps non-decreasing in file order (our sinks
+/// record chronologically per thread). Returns the event count — the
+/// `verify.sh` well-formedness gate for emitted `--trace-out` files.
+pub fn validate_chrome_trace(doc: &Json) -> crate::Result<usize> {
+    use anyhow::{bail, Context};
+    let events = doc.req("traceEvents")?.as_arr().context("traceEvents must be an array")?;
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev.req("name").and_then(Json::as_str).with_context(|| format!("event {i}"))?;
+        let ph = ev.req("ph").and_then(Json::as_str).with_context(|| format!("event {i}"))?;
+        let ts = ev.req("ts").and_then(Json::as_f64).with_context(|| format!("event {i}"))?;
+        if ts < 0.0 {
+            bail!("event {i} ('{name}') has negative ts {ts}");
+        }
+        match ph {
+            "X" => {
+                let dur = ev.req("dur").and_then(Json::as_f64).with_context(|| format!("event {i}"))?;
+                if dur < 0.0 {
+                    bail!("span {i} ('{name}') has negative dur {dur}");
+                }
+            }
+            "i" | "B" | "E" | "M" => {}
+            other => bail!("event {i} ('{name}') has unknown phase '{other}'"),
+        }
+        let tid = ev.req("tid").and_then(Json::as_u64).with_context(|| format!("event {i}"))?;
+        if let Some(&prev) = last_ts.get(&tid) {
+            if ts < prev {
+                bail!("event {i} ('{name}') regresses tid {tid} timestamp: {ts} < {prev}");
+            }
+        }
+        last_ts.insert(tid, ts);
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, ph: Phase, ts: u64, dur: u64, tid: u64) -> TraceEvent {
+        TraceEvent { name, cat: "test", ph, ts_us: ts, dur_us: dur, tid, args: Vec::new() }
+    }
+
+    #[test]
+    fn disarmed_span_and_instant_are_silent() {
+        // default state: nothing armed, nothing recorded anywhere
+        assert!(!armed());
+        let s = span("sim.period", "sim").arg("t", 1.0);
+        drop(s);
+        instant("job.arrive", "online", &[("job", 0.0)]);
+        // still disarmed, still no sink
+        assert!(!armed());
+    }
+
+    #[test]
+    fn mem_sink_collects_direct_emissions() {
+        let sink = MemSink::new();
+        sink.emit(ev("sim.period", Phase::Complete, 10, 5, 1));
+        sink.emit(ev("job.arrive", Phase::Instant, 20, 0, 1));
+        let evs = sink.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "sim.period");
+        assert_eq!(evs[1].ph, Phase::Instant);
+        assert_eq!(sink.take().len(), 2);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_and_validates() {
+        let mut e0 = ev("sim.period", Phase::Complete, 10, 5, 1);
+        e0.args = vec![("t", 3.0), ("active", 2.0)];
+        let events = vec![e0, ev("job.complete", Phase::Instant, 30, 0, 1)];
+        let doc = chrome_trace_json(&events);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(validate_chrome_trace(&parsed).unwrap(), 2);
+        let rows = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].req("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(rows[0].req("args").unwrap().req("t").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(rows[1].req("ph").unwrap().as_str().unwrap(), "i");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        // not a trace document at all
+        assert!(validate_chrome_trace(&Json::parse(r#"{"x": 1}"#).unwrap()).is_err());
+        // negative timestamp
+        let neg = chrome_trace_json(&[ev("a", Phase::Instant, 0, 0, 1)]);
+        let mut bad = neg.to_string().replace("\"ts\":0", "\"ts\":-5");
+        assert!(validate_chrome_trace(&Json::parse(&bad).unwrap()).is_err());
+        // unknown phase
+        bad = neg.to_string().replace("\"ph\":\"i\"", "\"ph\":\"Z\"");
+        assert!(validate_chrome_trace(&Json::parse(&bad).unwrap()).is_err());
+        // per-tid timestamp regression (hand-built: chrome_trace_json
+        // sorts, so an emitted document can no longer regress)
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"name": "a", "ph": "i", "ts": 10, "tid": 1},
+                {"name": "b", "ph": "i", "ts": 5, "tid": 1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&doc).is_err());
+        // same regression on different tids is fine (parallel threads)
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"name": "a", "ph": "i", "ts": 10, "tid": 1},
+                {"name": "b", "ph": "i", "ts": 5, "tid": 2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(validate_chrome_trace(&doc).unwrap(), 2);
+    }
+
+    #[test]
+    fn chrome_json_sorts_close_time_emissions() {
+        // a span closing after an instant is emitted later but must be
+        // rendered earlier (its ts is the open time)
+        let events = vec![
+            ev("job.arrive", Phase::Instant, 20, 0, 1),
+            ev("online.run", Phase::Complete, 0, 50, 1),
+        ];
+        let doc = chrome_trace_json(&events);
+        assert_eq!(validate_chrome_trace(&doc).unwrap(), 2);
+        let rows = doc.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].req("name").unwrap().as_str().unwrap(), "online.run");
+        // at equal ts the longer span comes first (viewer nesting order)
+        let tied = vec![
+            ev("bco.bisect_round", Phase::Complete, 0, 5, 1),
+            ev("sim.run", Phase::Complete, 0, 50, 1),
+        ];
+        let rows = chrome_trace_json(&tied);
+        let rows = rows.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].req("name").unwrap().as_str().unwrap(), "sim.run");
+    }
+
+    #[test]
+    fn write_chrome_trace_emits_a_parseable_file() {
+        let dir = crate::util::temp_dir("rarsched-obs-trace").unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &[ev("net.progressive_fill", Phase::Complete, 0, 2, 7)])
+            .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(validate_chrome_trace(&doc).unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

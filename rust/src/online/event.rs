@@ -155,6 +155,87 @@ mod tests {
     }
 
     #[test]
+    fn empty_log_is_causally_ordered() {
+        let log = EventLog::default();
+        assert!(log.is_causally_ordered());
+        assert!(log.is_empty());
+        assert_eq!(log.len(), 0);
+        assert_eq!(log.count(EventKind::Arrival), 0);
+        assert_eq!(log.for_job(JobId(0)).count(), 0);
+    }
+
+    #[test]
+    fn rejected_is_terminal_against_every_kind() {
+        // Rejected-then-anything is flagged: rejection ends the lifecycle
+        for kind in [
+            EventKind::Arrival,
+            EventKind::Start,
+            EventKind::Completion,
+            EventKind::Rejected,
+            EventKind::Migrated,
+        ] {
+            let mut log = EventLog::default();
+            log.push(0, JobId(0), EventKind::Arrival);
+            log.push(0, JobId(0), EventKind::Rejected);
+            assert!(log.is_causally_ordered());
+            log.push(1, JobId(0), kind);
+            assert!(!log.is_causally_ordered(), "Rejected then {kind:?} must be flagged");
+        }
+    }
+
+    #[test]
+    fn migrated_before_placement_is_flagged() {
+        // queued (arrived) but never placed: Migrated is invalid
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(2, JobId(0), EventKind::Migrated);
+        assert!(!log.is_causally_ordered());
+        // an unseen job can't migrate either
+        let mut log = EventLog::default();
+        log.push(0, JobId(3), EventKind::Migrated);
+        assert!(!log.is_causally_ordered());
+    }
+
+    #[test]
+    fn count_and_for_job_on_multi_job_interleavings() {
+        // three jobs interleaved: 0 runs-migrates-completes, 1 is
+        // rejected, 2 arrives late and completes after 0
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(1, JobId(1), EventKind::Arrival);
+        log.push(1, JobId(1), EventKind::Rejected);
+        log.push(2, JobId(2), EventKind::Arrival);
+        log.push(2, JobId(2), EventKind::Start);
+        log.push(4, JobId(0), EventKind::Migrated);
+        log.push(7, JobId(0), EventKind::Completion);
+        log.push(9, JobId(2), EventKind::Completion);
+        assert!(log.is_causally_ordered());
+        assert_eq!(log.len(), 9);
+        assert_eq!(log.count(EventKind::Arrival), 3);
+        assert_eq!(log.count(EventKind::Start), 2);
+        assert_eq!(log.count(EventKind::Completion), 2);
+        assert_eq!(log.count(EventKind::Rejected), 1);
+        assert_eq!(log.count(EventKind::Migrated), 1);
+        // for_job slices one lifecycle out of the interleaving, in order
+        let job0: Vec<EventKind> = log.for_job(JobId(0)).map(|e| e.kind).collect();
+        assert_eq!(
+            job0,
+            [EventKind::Arrival, EventKind::Start, EventKind::Migrated, EventKind::Completion]
+        );
+        let job1: Vec<EventKind> = log.for_job(JobId(1)).map(|e| e.kind).collect();
+        assert_eq!(job1, [EventKind::Arrival, EventKind::Rejected]);
+        let job2: Vec<(u64, EventKind)> =
+            log.for_job(JobId(2)).map(|e| (e.at, e.kind)).collect();
+        assert_eq!(
+            job2,
+            [(2, EventKind::Arrival), (2, EventKind::Start), (9, EventKind::Completion)]
+        );
+        // unknown job: empty slice, not a panic
+        assert_eq!(log.for_job(JobId(42)).count(), 0);
+    }
+
+    #[test]
     fn migrations_repeat_between_start_and_completion() {
         let mut log = EventLog::default();
         log.push(0, JobId(0), EventKind::Arrival);

@@ -435,6 +435,9 @@ impl<'a> OnlineScheduler<'a> {
     /// policy and report realized makespan / JCTs / waits under live
     /// contention.
     pub fn run(&self, policy: &mut dyn OnlinePolicy) -> OnlineOutcome {
+        use crate::obs::{explain, metrics, timeline, trace};
+        let _run_span = trace::span("online.run", "online")
+            .arg("jobs", self.jobs.len() as f64);
         // Arrival stream in (arrival, id) order — the only place the full
         // trace exists; the policy never sees past `next_arrival`.
         let mut order: Vec<&JobSpec> = self.jobs.iter().collect();
@@ -477,28 +480,70 @@ impl<'a> OnlineScheduler<'a> {
                 let spec = order[next_arrival];
                 next_arrival += 1;
                 events.push(spec.arrival, spec.id, EventKind::Arrival);
+                if trace::armed() {
+                    trace::instant(
+                        "job.arrive",
+                        "online",
+                        &[
+                            ("job", spec.id.0 as f64),
+                            ("t", spec.arrival as f64),
+                            ("gpus", spec.gpus as f64),
+                        ],
+                    );
+                }
                 if admission_active {
+                    // `(reason, projected, θ)` — the audit payload; -1
+                    // marks "not a θ decision" (keeps the JSON finite).
                     let reject = if spec.gpus > self.cluster.num_gpus() {
                         // never placeable: every armed admission guard
                         // turns it away instead of letting it wedge the
                         // queue into truncation (queue-cap-only included)
-                        true
+                        Some((explain::RejectReason::TooLarge, -1.0, -1.0))
                     } else if self.options.admission.queue_full(pending.len()) {
-                        true
+                        Some((explain::RejectReason::QueueFull, -1.0, -1.0))
                     } else if self.options.admission.theta.is_finite() {
+                        let whatif_before = metrics::get(metrics::Counter::WhatifCalls);
                         let projected = self.projected_bottleneck(
                             &state,
                             &busy_history,
                             &tracker,
                             spec.gpus,
                         );
-                        self.options.admission.theta_exceeded(projected)
+                        metrics::record(
+                            metrics::Hist::WhatifPerArrival,
+                            metrics::get(metrics::Counter::WhatifCalls) - whatif_before,
+                        );
+                        if self.options.admission.theta_exceeded(projected) {
+                            let eff = projected.map_or(-1.0, |b| b.effective());
+                            Some((
+                                explain::RejectReason::Theta,
+                                eff,
+                                self.options.admission.theta,
+                            ))
+                        } else {
+                            None
+                        }
                     } else {
-                        false
+                        None
                     };
-                    if reject {
+                    if let Some((reason, projected, theta)) = reject {
                         events.push(spec.arrival, spec.id, EventKind::Rejected);
                         rejected.push(spec.id);
+                        metrics::incr(metrics::Counter::AdmissionRejects);
+                        if trace::armed() {
+                            trace::instant(
+                                "job.reject",
+                                "online",
+                                &[("job", spec.id.0 as f64), ("t", spec.arrival as f64)],
+                            );
+                        }
+                        explain::record(explain::Decision::Reject {
+                            job: spec.id,
+                            at: spec.arrival,
+                            reason,
+                            projected,
+                            theta,
+                        });
                         continue;
                     }
                 }
@@ -516,6 +561,7 @@ impl<'a> OnlineScheduler<'a> {
             //    dispatch is validated: the job must be queued and the
             //    placement must be a free gang of exactly G_j GPUs
             //    (ClusterState::allocate asserts freeness).
+            let mut started_any = false;
             while !pending.is_empty() {
                 let queued: Vec<QueuedJob<'_>> = pending
                     .iter()
@@ -537,6 +583,47 @@ impl<'a> OnlineScheduler<'a> {
                     running_idx[job.0] = running.len();
                 }
                 events.push(t, job, EventKind::Start);
+                started_any = true;
+                if trace::armed() || explain::armed() {
+                    // audit the dispatch: the realized bottleneck of the
+                    // chosen gang, and (explain only) the next-best gang
+                    // FA-FFP would pick from what is still free — the
+                    // runner-up a different policy call could have taken.
+                    let bn = tracker.bottleneck(job);
+                    if trace::armed() {
+                        trace::instant(
+                            "job.admit",
+                            "online",
+                            &[
+                                ("job", job.0 as f64),
+                                ("t", t as f64),
+                                ("link", bn.link.map_or(-1.0, |l| l.0 as f64)),
+                            ],
+                        );
+                    }
+                    if explain::armed() {
+                        let free_now: usize =
+                            self.cluster.server_ids().map(|s| state.free_on(s)).sum();
+                        let occ = self.occupied_per_server(&state);
+                        let runner_up = fa_ffp_select_warm(
+                            self.cluster,
+                            spec.gpus,
+                            |g| state.is_free(g),
+                            |g| busy_history[g.global],
+                            &occ,
+                        )
+                        .map(|g| {
+                            tracker.whatif_bottleneck(&JobPlacement::new(g)).effective()
+                        });
+                        explain::record(explain::Decision::Placement {
+                            job,
+                            at: t,
+                            chosen_score: bn.effective(),
+                            runner_up,
+                            candidates: free_now + spec.gpus,
+                        });
+                    }
+                }
                 running.push(Running {
                     job,
                     spec,
@@ -550,6 +637,9 @@ impl<'a> OnlineScheduler<'a> {
                     migrations: 0,
                     rate: RatePoint::IDLE,
                 });
+            }
+            if started_any {
+                timeline::sample(t, &tracker);
             }
 
             if running.is_empty() {
@@ -588,8 +678,12 @@ impl<'a> OnlineScheduler<'a> {
             //    invalidated; reference mode re-rates everyone. A frozen
             //    (restarting) job's cached rate is never read this period
             //    — steps 4/5 branch on the freeze first.
+            let _period_span = trace::span("online.period", "online")
+                .arg("t", t as f64)
+                .arg("running", running.len() as f64);
             if rate_cache {
-                dirty.drain(
+                let active = running.len();
+                let rerated = dirty.drain(
                     |j| running_idx.get(j.0).map_or(false, |&i| i != usize::MAX),
                     |j| {
                         let r = &mut running[running_idx[j.0]];
@@ -603,6 +697,9 @@ impl<'a> OnlineScheduler<'a> {
                         );
                     },
                 );
+                metrics::add(metrics::Counter::DirtyMisses, rerated as u64);
+                metrics::add(metrics::Counter::DirtyHits, (active - rerated) as u64);
+                metrics::record(metrics::Hist::ReratedPerDrain, rerated as u64);
             } else {
                 for r in running.iter_mut() {
                     if t < r.freeze_until {
@@ -619,6 +716,7 @@ impl<'a> OnlineScheduler<'a> {
                 }
             }
             periods += 1;
+            metrics::incr(metrics::Counter::OnlinePeriods);
 
             // 4) Jump to the next event: completion, thaw of a restarting
             //    (migrated) job, arrival or horizon. A period never spans
@@ -670,6 +768,20 @@ impl<'a> OnlineScheduler<'a> {
                 if running[i].progress >= running[i].spec.iterations as f64 {
                     let r = running.swap_remove(i);
                     state.release(r.job, &r.placement);
+                    if trace::armed() {
+                        // bottleneck read precedes `complete` — the
+                        // tracker forgets the job's links on removal
+                        let bn = tracker.bottleneck(r.job);
+                        trace::instant(
+                            "job.complete",
+                            "online",
+                            &[
+                                ("job", r.job.0 as f64),
+                                ("t", t as f64),
+                                ("link", bn.link.map_or(-1.0, |l| l.0 as f64)),
+                            ],
+                        );
+                    }
                     let _ = tracker.complete(r.job);
                     if rate_cache {
                         dirty.on_complete(topo, &r.placement);
@@ -695,6 +807,9 @@ impl<'a> OnlineScheduler<'a> {
                 } else {
                     i += 1;
                 }
+            }
+            if completed_any {
+                timeline::sample(t, &tracker);
             }
 
             // 7) Migration hook: completions freed capacity — re-place up
@@ -739,13 +854,37 @@ impl<'a> OnlineScheduler<'a> {
                     let Some(candidate) =
                         self.migration_candidate(&state, &busy_history, spec.gpus)
                     else {
+                        metrics::incr(metrics::Counter::MigrationAborts);
+                        explain::record(explain::Decision::MigrationAbort {
+                            job,
+                            at: t,
+                            guard: explain::MigrationGuard::NoCandidate,
+                            current_effective: cur_bn.effective(),
+                            candidate_effective: -1.0,
+                        });
                         continue;
                     };
                     let Some(new_bn) = tracker.whatif_rebottleneck(job, &candidate) else {
+                        metrics::incr(metrics::Counter::MigrationAborts);
+                        explain::record(explain::Decision::MigrationAbort {
+                            job,
+                            at: t,
+                            guard: explain::MigrationGuard::NoCandidate,
+                            current_effective: cur_bn.effective(),
+                            candidate_effective: -1.0,
+                        });
                         continue;
                     };
                     // guard 1: strictly lower bottleneck effective degree
                     if new_bn.effective() >= cur_bn.effective() {
+                        metrics::incr(metrics::Counter::MigrationAborts);
+                        explain::record(explain::Decision::MigrationAbort {
+                            job,
+                            at: t,
+                            guard: explain::MigrationGuard::StrictImprovement,
+                            current_effective: cur_bn.effective(),
+                            candidate_effective: new_bn.effective(),
+                        });
                         continue;
                     }
                     // guard 2: completion-time gain net of restart cost
@@ -772,6 +911,14 @@ impl<'a> OnlineScheduler<'a> {
                         new_rate.inc,
                         mig.restart_slots,
                     ) {
+                        metrics::incr(metrics::Counter::MigrationAborts);
+                        explain::record(explain::Decision::MigrationAbort {
+                            job,
+                            at: t,
+                            guard: explain::MigrationGuard::PaysForItself,
+                            current_effective: cur_bn.effective(),
+                            candidate_effective: new_bn.effective(),
+                        });
                         continue;
                     }
                     // commit: occupancy, tracker counts, event, freeze.
@@ -786,6 +933,25 @@ impl<'a> OnlineScheduler<'a> {
                         dirty.on_migrate(topo, job, &running[idx].placement, &candidate);
                     }
                     events.push(t, job, EventKind::Migrated);
+                    metrics::incr(metrics::Counter::MigrationCommits);
+                    if trace::armed() {
+                        trace::instant(
+                            "job.migrate",
+                            "online",
+                            &[
+                                ("job", job.0 as f64),
+                                ("t", t as f64),
+                                ("link", new_bn.link.map_or(-1.0, |l| l.0 as f64)),
+                            ],
+                        );
+                    }
+                    explain::record(explain::Decision::MigrationCommit {
+                        job,
+                        at: t,
+                        from_effective: cur_bn.effective(),
+                        to_effective: new_bn.effective(),
+                        restart_slots: mig.restart_slots,
+                    });
                     migrations.push(MigrationRecord {
                         job,
                         at: t,
@@ -798,6 +964,9 @@ impl<'a> OnlineScheduler<'a> {
                     r.freeze_until = t.saturating_add(mig.restart_slots);
                     r.migrations += 1;
                     moved += 1;
+                }
+                if moved > 0 {
+                    timeline::sample(t, &tracker);
                 }
             }
         }

@@ -80,6 +80,17 @@ impl ContentionTracker {
         self.num_active
     }
 
+    /// The fabric the counts are indexed by.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Active-ring count on one fabric link (the raw Eq. 6 count the
+    /// obs timeline samples).
+    pub fn link_count(&self, l: crate::topology::LinkId) -> usize {
+        self.link_jobs[l.0]
+    }
+
     /// Clear every count and active placement (start of a fresh run)
     /// without deallocating — the batch engine reuses one tracker across
     /// candidate-plan replays.
@@ -210,6 +221,8 @@ impl ContentionTracker {
     /// (the candidate ring counts itself, Eq. 6). `O(path)`, zero
     /// mutation, zero allocation — the θ-admission hot path.
     pub fn whatif_bottleneck(&self, placement: &JobPlacement) -> Bottleneck {
+        crate::obs::metrics::incr(crate::obs::metrics::Counter::WhatifCalls);
+        let _span = crate::obs::trace::span("tracker.whatif", "tracker");
         let mut best = Bottleneck::NONE;
         self.topology.for_each_crossed(placement, |l| {
             let cand = Bottleneck {
@@ -252,6 +265,8 @@ impl ContentionTracker {
         job: JobId,
         candidate: &JobPlacement,
     ) -> Option<Bottleneck> {
+        crate::obs::metrics::incr(crate::obs::metrics::Counter::WhatifCalls);
+        let _span = crate::obs::trace::span("tracker.whatif_re", "tracker");
         let current = self.active.get(job.0).and_then(|o| o.as_ref())?;
         let mut own: Vec<usize> = Vec::new();
         self.topology.for_each_crossed(current, |l| own.push(l.0));
@@ -278,11 +293,17 @@ impl ContentionTracker {
     /// cross-checked reference). On a flat fabric this equals the largest
     /// contention degree across all active jobs.
     pub fn max_contention(&self) -> usize {
-        debug_assert_eq!(
-            self.max_count,
-            self.max_contention_scan(),
-            "count histogram diverged from the O(L) scan"
-        );
+        #[cfg(debug_assertions)]
+        {
+            // counted so a debug-build verify run can report that the
+            // cross-check actually executed (see obs::metrics)
+            crate::obs::metrics::incr(crate::obs::metrics::Counter::HistCrossChecks);
+            debug_assert_eq!(
+                self.max_count,
+                self.max_contention_scan(),
+                "count histogram diverged from the O(L) scan"
+            );
+        }
         self.max_count
     }
 
@@ -332,6 +353,9 @@ impl ContentionTracker {
     fn debug_check_against_rebuild(&self) {
         #[cfg(debug_assertions)]
         {
+            // counted so a debug-build verify run can report that the
+            // cross-check actually executed (see obs::metrics)
+            crate::obs::metrics::incr(crate::obs::metrics::Counter::TrackerCrossChecks);
             let mut expect = vec![0usize; self.link_jobs.len()];
             for pl in self.active.iter().flatten() {
                 self.topology.for_each_crossed(pl, |l| expect[l.0] += 1);

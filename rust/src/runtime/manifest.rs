@@ -1,10 +1,119 @@
-//! Artifact manifest: the contract between `aot.py` and the Rust runtime.
+//! Artifact manifest: the contract between `aot.py` and the Rust runtime
+//! — plus the [`RunManifest`] provenance stamp the experiment/bench
+//! writers attach to every CSV/JSON artifact they emit.
 
 use crate::util::Json;
 use crate::Result;
 use anyhow::Context;
 use std::collections::BTreeMap;
 use std::path::Path;
+
+/// Provenance stamp for an emitted artifact: everything needed to
+/// re-produce the file from a clean checkout. `figures`, `online --out`
+/// and the bench writers attach it to their JSON output (under a
+/// `"manifest"` key) and write it as a `<file>.manifest.json` sibling
+/// next to CSV artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunManifest {
+    /// RNG seed the run used.
+    pub seed: u64,
+    /// FNV-1a digest of the effective config (TOML text), so two
+    /// artifacts are comparable iff their digests match.
+    pub config_digest: u64,
+    /// CLI flags / free-form invocation notes, in order.
+    pub flags: Vec<String>,
+    /// Git revision of the working tree (`RARSCHED_GIT_REV` override,
+    /// else `.git/HEAD`; `"unknown"` outside a checkout).
+    pub git_rev: String,
+}
+
+impl RunManifest {
+    pub fn new(seed: u64, config_text: &str, flags: &[String]) -> Self {
+        RunManifest {
+            seed,
+            config_digest: config_digest(config_text),
+            flags: flags.to_vec(),
+            git_rev: git_rev(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("config_digest", Json::Str(format!("{:016x}", self.config_digest))),
+            (
+                "flags",
+                Json::arr(self.flags.iter().map(|f| Json::Str(f.clone())).collect()),
+            ),
+            ("git_rev", Json::Str(self.git_rev.clone())),
+        ])
+    }
+
+    /// Write the stamp as a standalone `<path>.manifest.json` sibling —
+    /// the CSV form of attachment (JSON artifacts embed it instead).
+    pub fn save_sibling(&self, artifact: &Path) -> Result<()> {
+        let mut name = artifact
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "artifact".to_string());
+        name.push_str(".manifest.json");
+        let path = artifact.with_file_name(name);
+        std::fs::write(&path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+}
+
+/// FNV-1a over the config text: stable, dependency-free, good enough to
+/// tell two configs apart in an artifact header.
+pub fn config_digest(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Current git revision: `RARSCHED_GIT_REV` wins (CI stamps it without a
+/// checkout), else walk up from the CWD to `.git/HEAD` and resolve one
+/// level of `ref:` indirection (loose ref, then `packed-refs`). Returns
+/// `"unknown"` when nothing resolves — artifacts still get a stamp.
+pub fn git_rev() -> String {
+    if let Ok(rev) = std::env::var("RARSCHED_GIT_REV") {
+        if !rev.is_empty() {
+            return rev;
+        }
+    }
+    let mut dir = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(_) => return "unknown".to_string(),
+    };
+    loop {
+        let head = dir.join(".git").join("HEAD");
+        if let Ok(text) = std::fs::read_to_string(&head) {
+            let text = text.trim();
+            if let Some(refname) = text.strip_prefix("ref: ") {
+                let loose = dir.join(".git").join(refname);
+                if let Ok(sha) = std::fs::read_to_string(&loose) {
+                    return sha.trim().to_string();
+                }
+                if let Ok(packed) = std::fs::read_to_string(dir.join(".git/packed-refs")) {
+                    for line in packed.lines() {
+                        if let Some(sha) = line.strip_suffix(refname) {
+                            return sha.trim().to_string();
+                        }
+                    }
+                }
+                return "unknown".to_string();
+            }
+            return text.to_string(); // detached HEAD: the sha itself
+        }
+        if !dir.pop() {
+            return "unknown".to_string();
+        }
+    }
+}
 
 /// One parameter tensor in canonical flat order.
 #[derive(Debug, Clone, PartialEq)]
@@ -184,6 +293,45 @@ mod tests {
         assert_eq!(tiny.check_x, vec![1, 2]);
         assert!(tiny.check_loss_before > tiny.check_loss_after);
         assert_eq!(m.kernels["matmul_128"].n, 128);
+    }
+
+    #[test]
+    fn run_manifest_stamps_and_roundtrips() {
+        let flags = vec!["--policy".to_string(), "sjf-bco".to_string()];
+        let m = RunManifest::new(42, "seed = 42\n", &flags);
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.config_digest, config_digest("seed = 42\n"));
+        // digest distinguishes configs and is stable for equal text
+        assert_ne!(config_digest("a"), config_digest("b"));
+        assert_eq!(config_digest("x"), config_digest("x"));
+        let json = m.to_json();
+        assert_eq!(json.req("seed").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(
+            json.req("config_digest").unwrap().as_str().unwrap(),
+            format!("{:016x}", m.config_digest)
+        );
+        assert_eq!(json.req("git_rev").unwrap().as_str().unwrap(), m.git_rev);
+        assert_eq!(Json::parse(&json.to_string()).unwrap(), json);
+        // CSV sibling form
+        let dir = crate::util::temp_dir("rarsched-manifest").unwrap();
+        let csv = dir.join("series.csv");
+        m.save_sibling(&csv).unwrap();
+        let text = std::fs::read_to_string(dir.join("series.csv.manifest.json")).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req("seed").unwrap().as_u64().unwrap(), 42);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn git_rev_env_override_wins() {
+        // process-wide env var: set, read, restore — the var name is
+        // test-owned so collisions only race this assertion
+        std::env::set_var("RARSCHED_GIT_REV", "deadbeef");
+        assert_eq!(git_rev(), "deadbeef");
+        std::env::remove_var("RARSCHED_GIT_REV");
+        // without the override the walker returns *something* (a sha in
+        // a checkout, "unknown" outside one) — never panics
+        assert!(!git_rev().is_empty());
     }
 
     #[test]

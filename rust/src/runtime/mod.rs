@@ -9,7 +9,10 @@ mod executor;
 mod manifest;
 
 pub use executor::{ModelRuntime, StepOutput};
-pub use manifest::{KernelEntry, Manifest, ModelConfigEntry, ModelEntry, ParamSpec};
+pub use manifest::{
+    config_digest, git_rev, KernelEntry, Manifest, ModelConfigEntry, ModelEntry, ParamSpec,
+    RunManifest,
+};
 
 use crate::Result;
 use anyhow::Context;

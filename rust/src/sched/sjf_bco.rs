@@ -100,8 +100,14 @@ pub fn sjf_bco(
     let ctx = PlacementCtx::new(cluster);
     let (mut left, mut right) = (1u64, horizon);
     let mut best: Option<(f64, Plan)> = None; // (evaluated makespan, plan)
+    let mut rounds = 0u64;
     while left <= right {
         let theta = (left + right) / 2;
+        rounds += 1;
+        crate::obs::metrics::incr(crate::obs::metrics::Counter::BisectionRounds);
+        let _round_span = crate::obs::trace::span("bco.bisect_round", "planner")
+            .arg("theta", theta as f64)
+            .arg("kappas", kappas.len() as f64);
         // inner κ sweep (Lines 7–18)
         let mut best_for_theta: Option<(f64, Plan)> = None;
         for &kappa in &kappas {
@@ -133,6 +139,7 @@ pub fn sjf_bco(
             _ => left = theta + 1,
         }
     }
+    crate::obs::metrics::record(crate::obs::metrics::Hist::RoundsPerBisection, rounds);
 
     match best {
         Some((_, plan)) => Ok(plan),

@@ -170,8 +170,10 @@ impl<'a> Simulator<'a> {
     /// buffer is reused across calls, so replaying many candidate plans
     /// (the planners' bisection loops) allocates only the output records.
     pub fn run_with<'p>(&self, scratch: &mut SimScratch, plan: &'p Plan) -> SimOutcome {
+        use crate::obs::{metrics, timeline, trace};
         let use_tracker = self.options.contention == ContentionMode::TrackerDirtySet;
         let entries = &plan.entries;
+        let _run_span = trace::span("sim.run", "sim").arg("jobs", entries.len() as f64);
         let topo = self.cluster.topology();
         let max_id = entries.iter().map(|e| e.job.0 + 1).max().unwrap_or(0);
         scratch.reset(max_id);
@@ -250,6 +252,7 @@ impl<'a> Simulator<'a> {
             //     GPUs, so a rescan could never admit more. Blocked jobs
             //     are compacted in place.
             let mut kept = 0usize;
+            let mut admitted_any = false;
             for i in 0..pending.len() {
                 let idx = pending[i];
                 let e = &entries[idx];
@@ -282,8 +285,28 @@ impl<'a> Simulator<'a> {
                     max_p: 0,
                     rate: RatePoint::IDLE,
                 });
+                admitted_any = true;
+                if trace::armed() {
+                    let link = if use_tracker {
+                        tracker.try_bottleneck(e.job).and_then(|b| b.link)
+                    } else {
+                        None
+                    };
+                    trace::instant(
+                        "job.admit",
+                        "sim",
+                        &[
+                            ("job", e.job.0 as f64),
+                            ("t", t as f64),
+                            ("link", link.map_or(-1.0, |l| l.0 as f64)),
+                        ],
+                    );
+                }
             }
             pending.truncate(kept);
+            if use_tracker && admitted_any {
+                timeline::sample(t, tracker);
+            }
 
             if active.is_empty() {
                 // nothing runnable yet (all remaining jobs have future
@@ -299,10 +322,14 @@ impl<'a> Simulator<'a> {
             // 2) Per-job rates for this period (shared kernel arithmetic),
             //    each taken at the job's bottleneck link — constant until
             //    the next admission or completion event.
+            let _period_span = trace::span("sim.period", "sim")
+                .arg("t", t as f64)
+                .arg("active", active.len() as f64);
             if use_tracker {
                 // Tracker + dirty set: only jobs whose bottleneck-link
                 // counts changed since the last period are re-rated.
-                dirty.drain(
+                let active_count = active.len();
+                let rerated = dirty.drain(
                     |j| active_idx.get(j.0).map_or(false, |&i| i != usize::MAX),
                     |j| {
                         let a = &mut active[active_idx[j.0]];
@@ -316,6 +343,9 @@ impl<'a> Simulator<'a> {
                         );
                     },
                 );
+                metrics::add(metrics::Counter::DirtyMisses, rerated as u64);
+                metrics::add(metrics::Counter::DirtyHits, (active_count - rerated) as u64);
+                metrics::record(metrics::Hist::ReratedPerDrain, rerated as u64);
             } else {
                 // Reference: full snapshot rebuild (generalized Eq. 6 over
                 // the whole active set) and a re-rate of every job.
@@ -333,6 +363,7 @@ impl<'a> Simulator<'a> {
                 }
             }
             periods += 1;
+            metrics::incr(metrics::Counter::EnginePeriods);
 
             // 3) Period length dt: 1 slot (reference mode), or jump to the
             //    next completion/arrival (event-driven fast path).
@@ -366,10 +397,28 @@ impl<'a> Simulator<'a> {
             // 5) Completions at the end of the period: O(path) count
             //    deltas, surviving link-sharers re-rated next period.
             let mut i = 0;
+            let mut completed_any = false;
             while i < active.len() {
                 if active[i].progress >= active[i].spec.iterations as f64 {
                     let a = active.swap_remove(i);
                     state.release(a.job, a.placement);
+                    completed_any = true;
+                    if trace::armed() {
+                        let link = if use_tracker {
+                            tracker.try_bottleneck(a.job).and_then(|b| b.link)
+                        } else {
+                            None
+                        };
+                        trace::instant(
+                            "job.complete",
+                            "sim",
+                            &[
+                                ("job", a.job.0 as f64),
+                                ("t", t as f64),
+                                ("link", link.map_or(-1.0, |l| l.0 as f64)),
+                            ],
+                        );
+                    }
                     if use_tracker {
                         let _ = tracker.complete(a.job);
                         dirty.on_complete(topo, a.placement);
@@ -393,6 +442,9 @@ impl<'a> Simulator<'a> {
                 } else {
                     i += 1;
                 }
+            }
+            if use_tracker && completed_any {
+                timeline::sample(t, tracker);
             }
         }
 

@@ -42,12 +42,16 @@ impl<'a> PlanScorer<'a> {
 
     /// Realized makespan of one candidate plan under live contention.
     pub fn makespan(&mut self, plan: &Plan) -> u64 {
+        let _span = crate::obs::trace::span("scorer.makespan", "planner")
+            .arg("entries", plan.entries.len() as f64);
         self.sim.run_with(&mut self.scratch, plan).makespan
     }
 
     /// Full outcome of one candidate plan (records allocate; the engine
     /// buffers are still reused).
     pub fn outcome(&mut self, plan: &Plan) -> SimOutcome {
+        let _span = crate::obs::trace::span("scorer.outcome", "planner")
+            .arg("entries", plan.entries.len() as f64);
         self.sim.run_with(&mut self.scratch, plan)
     }
 }

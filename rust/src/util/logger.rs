@@ -1,6 +1,8 @@
 //! Minimal `log` facade backend (no env_logger offline): level from
 //! `RARSCHED_LOG` (error|warn|info|debug|trace, default info), messages to
-//! stderr with a monotonic timestamp.
+//! stderr with a monotonic timestamp and the emitting thread's name (or
+//! numeric id for unnamed threads — `par_map` workers would otherwise be
+//! indistinguishable).
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::time::Instant;
@@ -26,10 +28,17 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
+        let thread = std::thread::current();
+        let who = match thread.name() {
+            Some(name) => name.to_string(),
+            // unnamed (e.g. par_map workers): fall back to the numeric id
+            None => format!("{:?}", thread.id()).replace("ThreadId", "tid"),
+        };
         eprintln!(
-            "[{:>8.3}s {} {}] {}",
+            "[{:>8.3}s {} {} {}] {}",
             t.as_secs_f64(),
             lvl,
+            who,
             record.target(),
             record.args()
         );

@@ -36,8 +36,12 @@ where
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    use crate::obs::{metrics, trace};
     let workers = threads().min(items.len());
     if workers <= 1 {
+        if !items.is_empty() {
+            metrics::note_worker_tasks("par-seq", items.len() as u64);
+        }
         return items.into_iter().map(f).collect();
     }
     // Index-tagged work stealing: an atomic cursor hands out items, each
@@ -46,21 +50,36 @@ where
     let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let done: Vec<Mutex<Option<R>>> = (0..work.len()).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    metrics::add(metrics::Counter::ParMapWorkers, workers as u64);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= work.len() {
-                    break;
-                }
-                let item = work[i]
-                    .lock()
-                    .expect("work slot poisoned")
-                    .take()
-                    .expect("work item handed out twice");
-                let result = f(item);
-                *done[i].lock().expect("result slot poisoned") = Some(result);
-            });
+        let (work, done, next, f) = (&work, &done, &next, &f);
+        for w in 0..workers {
+            let label = format!("par-worker-{w}");
+            // named workers: log lines and trace rows stay attributable
+            std::thread::Builder::new()
+                .name(label.clone())
+                .spawn_scoped(scope, move || {
+                    let mut tasks = 0u64;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= work.len() {
+                            break;
+                        }
+                        let item = work[i]
+                            .lock()
+                            .expect("work slot poisoned")
+                            .take()
+                            .expect("work item handed out twice");
+                        let span = trace::span("par.task", "par").arg("item", i as f64);
+                        let result = f(item);
+                        drop(span);
+                        *done[i].lock().expect("result slot poisoned") = Some(result);
+                        tasks += 1;
+                    }
+                    // per-thread accumulator, merged once at worker exit
+                    metrics::note_worker_tasks(&label, tasks);
+                })
+                .expect("failed to spawn par_map worker");
         }
     });
     done.into_iter()

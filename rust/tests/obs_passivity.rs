@@ -1,0 +1,275 @@
+//! The observability passivity invariant (see `rarsched::obs`): arming
+//! the trace sink, the explain log and the timeline recorder must be
+//! **bit-identical** to the disarmed stack — same outcome, same records,
+//! same event sequences, same rejections and migrations — on flat, rack
+//! and pod fabrics, across all three engine modes and the online loop
+//! with θ-admission and migration on and off. Instrumentation only reads
+//! scheduler state; any observable divergence is a bug.
+//!
+//! The obs recorders are process-global, so every test in this file —
+//! including the disarmed baselines — holds one shared lock: a parallel
+//! test arming the stack mid-baseline would invalidate the comparison.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::JobSpec;
+use rarsched::obs::trace::MemSink;
+use rarsched::obs::{explain, metrics, timeline, trace, Decision, LinkSample, TraceEvent};
+use rarsched::online::{
+    AdmissionControl, MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind,
+    OnlineScheduler,
+};
+use rarsched::sched::{schedule, Policy};
+use rarsched::sim::{ContentionMode, SimOptions, SimOutcome, Simulator};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize obs-global access; a panicked holder must not wedge the
+/// remaining tests, so poisoning is ignored.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn arm_all() -> Arc<MemSink> {
+    let sink = MemSink::new();
+    trace::arm(sink.clone());
+    explain::arm();
+    timeline::arm();
+    sink
+}
+
+fn disarm_all(sink: &MemSink) -> (Vec<TraceEvent>, Vec<Decision>, Vec<LinkSample>) {
+    trace::disarm();
+    let events = sink.take();
+    let decisions = explain::disarm();
+    let samples = timeline::disarm();
+    (events, decisions, samples)
+}
+
+/// The three fabrics of the acceptance criterion, over one 8-server
+/// cluster so every case shares the same GPU inventory.
+fn fabrics() -> Vec<(&'static str, Cluster)> {
+    let flat = Cluster::uniform(8, 8, 1.0, 25.0);
+    vec![
+        ("flat", flat.clone()),
+        ("rack", flat.clone().with_topology(Topology::racks(8, 4, 2.0))),
+        ("pod", flat.clone().with_topology(Topology::pods(8, 2, 2, 2.0, 4.0))),
+    ]
+}
+
+/// ~16-job smoke trace with Poisson arrivals of mean gap `mean_gap`
+/// slots (small gap = heavy load — what drives the θ/queue-cap paths).
+fn jobs_for(seed: u64, mean_gap: f64) -> Vec<JobSpec> {
+    TraceGenerator::paper_scaled(0.1).generate_online(seed, mean_gap)
+}
+
+/// Bitwise outcome comparison: both runs use the *same* engine mode, so
+/// every field — floats included — must match exactly.
+fn assert_bitwise(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.slots_simulated, b.slots_simulated, "{ctx}: slots");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncation");
+    assert_eq!(a.periods, b.periods, "{ctx}: periods");
+    assert_eq!(a.avg_jct, b.avg_jct, "{ctx}: avg JCT");
+    assert_eq!(a.gpu_utilization, b.gpu_utilization, "{ctx}: utilization");
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.job, y.job, "{ctx}");
+        assert_eq!(
+            (x.arrival, x.start, x.finish),
+            (y.arrival, y.start, y.finish),
+            "{ctx}: {} lifecycle",
+            x.job
+        );
+        assert_eq!(x.iterations_done, y.iterations_done, "{ctx}: {}", x.job);
+        assert_eq!(x.migrations, y.migrations, "{ctx}: {}", x.job);
+        assert_eq!(x.mean_tau, y.mean_tau, "{ctx}: {} mean_tau (bitwise)", x.job);
+    }
+}
+
+fn assert_online_bitwise(a: &OnlineOutcome, b: &OnlineOutcome, ctx: &str) {
+    assert_bitwise(&a.outcome, &b.outcome, ctx);
+    assert_eq!(a.rejected, b.rejected, "{ctx}: rejections");
+    assert_eq!(a.max_pending, b.max_pending, "{ctx}: queue high-water");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migration records");
+    assert_eq!(a.events.events(), b.events.events(), "{ctx}: event sequence");
+}
+
+#[test]
+fn engine_outcomes_are_identical_armed_and_disarmed() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0xabcd, 2.0);
+    for (fabric, cluster) in fabrics() {
+        let plan = schedule(Policy::SjfBco, &cluster, &jobs, &params, 1_000_000).unwrap();
+        for (mode, options) in [
+            ("tracker", SimOptions::default()),
+            (
+                "snapshot",
+                SimOptions {
+                    contention: ContentionMode::SnapshotRebuild,
+                    ..SimOptions::default()
+                },
+            ),
+            ("slots", SimOptions { event_driven: false, ..SimOptions::default() }),
+        ] {
+            let ctx = format!("{fabric}/{mode}");
+            let sim = Simulator::new(&cluster, &jobs, &params).with_options(options);
+            assert!(!trace::armed() && !explain::armed() && !timeline::armed());
+            let baseline = sim.run(&plan);
+
+            let sink = arm_all();
+            let armed = sim.run(&plan);
+            let (events, decisions, samples) = disarm_all(&sink);
+
+            assert_bitwise(&baseline, &armed, &ctx);
+            // the armed run actually traced: a run span at minimum, and
+            // the dump round-trips through the verify.sh validator
+            assert!(!events.is_empty(), "{ctx}: no trace events");
+            assert!(
+                events.iter().any(|e| e.name == "sim.run"),
+                "{ctx}: missing sim.run span"
+            );
+            let doc = trace::chrome_trace_json(&events);
+            let n = trace::validate_chrome_trace(&doc).unwrap();
+            assert_eq!(n, events.len(), "{ctx}: validator event count");
+            // the batch engine makes no admission/migration decisions
+            assert!(decisions.is_empty(), "{ctx}: spurious explain records");
+            // per-link samples cover whole fabrics at a time
+            let links = cluster.topology().num_links();
+            assert!(!samples.is_empty(), "{ctx}: no timeline samples");
+            assert_eq!(samples.len() % links, 0, "{ctx}: partial fabric sample");
+            assert!(
+                samples.windows(2).all(|w| w[0].t <= w[1].t),
+                "{ctx}: timeline out of order"
+            );
+        }
+    }
+}
+
+#[test]
+fn online_loop_is_identical_armed_and_disarmed() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x5eed, 0.5);
+    for (fabric, cluster) in fabrics() {
+        for (theta_on, migrate) in [(false, false), (true, false), (false, true), (true, true)] {
+            let admission = if theta_on {
+                AdmissionControl { theta: 6.0, queue_cap: 4 }
+            } else {
+                AdmissionControl::default()
+            };
+            let options = OnlineOptions {
+                admission,
+                migration: MigrationControl {
+                    enabled: migrate,
+                    max_moves: 2,
+                    restart_slots: 5,
+                },
+                max_slots: 10_000_000,
+                ..OnlineOptions::default()
+            };
+            for kind in OnlinePolicyKind::ALL {
+                let ctx = format!("{fabric}/{kind} (theta={theta_on}, migrate={migrate})");
+                assert!(!trace::armed() && !explain::armed() && !timeline::armed());
+                let baseline = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(options)
+                    .run(kind.build().as_mut());
+
+                let before = metrics::snapshot();
+                let sink = arm_all();
+                let armed = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(options)
+                    .run(kind.build().as_mut());
+                let (events, decisions, samples) = disarm_all(&sink);
+                let delta = before.delta(&metrics::snapshot());
+
+                assert_online_bitwise(&baseline, &armed, &ctx);
+
+                // trace sanity: the run span exists, every started job
+                // admitted, and the dump passes the verify.sh validator
+                assert!(events.iter().any(|e| e.name == "online.run"), "{ctx}");
+                let arrivals = events.iter().filter(|e| e.name == "job.arrive").count();
+                assert_eq!(arrivals, jobs.len(), "{ctx}: arrival instants");
+                let admits = events.iter().filter(|e| e.name == "job.admit").count();
+                assert_eq!(admits, armed.outcome.records.len(), "{ctx}: admit instants");
+                let rejects = events.iter().filter(|e| e.name == "job.reject").count();
+                assert_eq!(rejects, armed.rejected.len(), "{ctx}: reject instants");
+                trace::validate_chrome_trace(&trace::chrome_trace_json(&events)).unwrap();
+
+                // explain audit: one Reject per rejection, one
+                // MigrationCommit per committed move, one Placement per
+                // started job — and the counters agree
+                let explained_rejects = decisions
+                    .iter()
+                    .filter(|d| matches!(d, Decision::Reject { .. }))
+                    .count();
+                assert_eq!(explained_rejects, armed.rejected.len(), "{ctx}: reject audit");
+                let explained_commits = decisions
+                    .iter()
+                    .filter(|d| matches!(d, Decision::MigrationCommit { .. }))
+                    .count();
+                assert_eq!(explained_commits, armed.migrations.len(), "{ctx}: commit audit");
+                let explained_placements = decisions
+                    .iter()
+                    .filter(|d| matches!(d, Decision::Placement { .. }))
+                    .count();
+                assert_eq!(
+                    explained_placements,
+                    armed.outcome.records.len(),
+                    "{ctx}: placement audit"
+                );
+                assert_eq!(
+                    delta["admission_rejects"],
+                    armed.rejected.len() as u64,
+                    "{ctx}: reject counter"
+                );
+                assert_eq!(
+                    delta["migration_commits"],
+                    armed.migrations.len() as u64,
+                    "{ctx}: commit counter"
+                );
+                assert!(delta["online_periods"] > 0, "{ctx}: no periods counted");
+
+                // timeline sanity: whole-fabric samples in event order
+                let links = cluster.topology().num_links();
+                if !armed.outcome.records.is_empty() {
+                    assert!(!samples.is_empty(), "{ctx}: no timeline samples");
+                }
+                assert_eq!(samples.len() % links, 0, "{ctx}: partial fabric sample");
+                assert!(
+                    samples.windows(2).all(|w| w[0].t <= w[1].t),
+                    "{ctx}: timeline out of order"
+                );
+            }
+        }
+    }
+}
+
+/// The θ-on online configuration must actually exercise the rejection
+/// and migration paths at this load, otherwise the audit assertions
+/// above are vacuous.
+#[test]
+fn theta_and_migration_paths_are_exercised() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x5eed, 0.5);
+    let cluster = Cluster::uniform(8, 8, 1.0, 25.0).with_topology(Topology::racks(8, 4, 2.0));
+    let options = OnlineOptions {
+        admission: AdmissionControl { theta: 6.0, queue_cap: 4 },
+        migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        max_slots: 10_000_000,
+        ..OnlineOptions::default()
+    };
+    let out = OnlineScheduler::new(&cluster, &jobs, &params)
+        .with_options(options)
+        .run(OnlinePolicyKind::SjfBco.build().as_mut());
+    assert!(
+        !out.rejected.is_empty(),
+        "θ=6/cap=4 at mean gap 0.5 should reject something; retune the test load"
+    );
+    assert!(!out.outcome.records.is_empty(), "some jobs must still run");
+}

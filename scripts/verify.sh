@@ -1,18 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verification pipeline: fmt-check -> release build -> tests ->
-# bench smoke. The bench smoke emits BENCH_topology.json (the
-# online_hot_path / per-link tracker numbers), BENCH_online_overload.json
-# (the speculative what-if tracker path behind θ-admission and migration),
-# BENCH_sim_engine.json (batch-engine events/sec + ns/event,
-# snapshot-rebuild vs tracker+dirty-set) and BENCH_net_alloc.json
-# (progressive-filling allocations/sec + MaxMinFair-vs-EffectiveDegree
-# engine events/sec) so the perf trajectory is recorded across PRs.
+# bench smoke -> trace well-formedness. The bench smoke emits
+# BENCH_topology.json (the online_hot_path / per-link tracker numbers),
+# BENCH_online_overload.json (the speculative what-if tracker path behind
+# θ-admission and migration), BENCH_sim_engine.json (batch-engine
+# events/sec + ns/event, snapshot-rebuild vs tracker+dirty-set),
+# BENCH_net_alloc.json (progressive-filling allocations/sec +
+# MaxMinFair-vs-EffectiveDegree engine events/sec) and BENCH_obs.json
+# (observability hook overhead: disarmed vs Null-sink vs Mem-sink
+# tracing) so the perf trajectory is recorded across PRs. The final
+# stage emits a real `--trace-out` Chrome-trace file and gates on
+# `rarsched obs-check` validating it (well-formed JSON, known phases,
+# monotone non-negative timestamps).
 #
 # Failure policy: when cargo is PRESENT, every stage is a hard gate —
-# fmt drift, a build error, a test failure or a missing bench artifact
-# all fail the script. The only soft-skip is rustfmt being absent from
-# the toolchain (reported loudly; the fmt *check* itself is never
-# soft-failed).
+# fmt drift, a build error, a test failure, a missing bench artifact or
+# a malformed trace all fail the script. The only soft-skip is rustfmt
+# being absent from the toolchain (reported loudly; the fmt *check*
+# itself is never soft-failed).
 #
 # Usage: scripts/verify.sh           # from anywhere inside the repo
 #   RARSCHED_BENCH_MS=200            # (default here) bench budget per case
@@ -26,7 +31,7 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
-echo "== [1/4] cargo fmt --check =="
+echo "== [1/5] cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     # fmt drift is a hard failure (gated step)
     cargo fmt --all -- --check
@@ -34,13 +39,13 @@ else
     echo "WARN: rustfmt unavailable in this toolchain; fmt gate skipped"
 fi
 
-echo "== [2/4] cargo build --release =="
+echo "== [2/5] cargo build --release =="
 cargo build --release --offline
 
-echo "== [3/4] cargo test -q =="
+echo "== [3/5] cargo test -q =="
 cargo test -q --offline
 
-echo "== [4/4] bench smoke (online_hot_path + sim_engine -> BENCH_*.json) =="
+echo "== [4/5] bench smoke (online_hot_path + sim_engine + net_alloc + obs -> BENCH_*.json) =="
 # cargo runs bench binaries with cwd at the package root (rust/), so pin
 # the output paths to the repo root explicitly.
 RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
@@ -62,8 +67,15 @@ RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_NET_OUT="$PWD/BENCH_net_alloc.json" \
     cargo bench --offline --bench net_alloc
 
+# Observability overhead: the passivity invariant's perf half — the
+# armed-vs-null hook cost on the 2-rack engine cases (target: null ≤ ~5%
+# over fully disarmed; the JSON records the measured percentages).
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_OBS_OUT="$PWD/BENCH_obs.json" \
+    cargo bench --offline --bench obs_overhead
+
 for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json \
-                BENCH_net_alloc.json; do
+                BENCH_net_alloc.json BENCH_obs.json; do
     if [ -f "$artifact" ]; then
         echo "OK: $artifact written"
     else
@@ -71,5 +83,20 @@ for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.
         exit 1
     fi
 done
+
+echo "== [5/5] trace export well-formedness (simulate --trace-out -> obs-check) =="
+# Emit a real Chrome trace through the full CLI path, then gate on the
+# validator: well-formed JSON, known phases, non-negative and per-thread
+# monotone timestamps. The sample trace is a throwaway smoke artifact.
+TRACE_SAMPLE="$PWD/trace_sample.json"
+rm -f "$TRACE_SAMPLE" "$TRACE_SAMPLE.manifest.json"
+./target/release/rarsched simulate --policy sjf-bco --scale 0.1 \
+    --trace-out "$TRACE_SAMPLE" >/dev/null
+if [ ! -f "$TRACE_SAMPLE" ]; then
+    echo "ERROR: simulate --trace-out did not emit $TRACE_SAMPLE" >&2
+    exit 1
+fi
+./target/release/rarsched obs-check "$TRACE_SAMPLE"
+rm -f "$TRACE_SAMPLE" "$TRACE_SAMPLE.manifest.json"
 
 echo "verify: all stages passed"
