@@ -1,0 +1,217 @@
+//! Streaming-engine throughput: O(active)-memory `run_streaming` vs the
+//! classic materialize-then-`run` path on the same arrival stream.
+//!
+//! The default case drives 10⁵ lazy arrivals through a 32-server fabric
+//! both ways and reports events/sec (an "event" is one constant-rate
+//! period) plus the concurrency high-water mark `peak_live` — the
+//! quantity that bounds the streaming engine's memory no matter how long
+//! the trace runs. The two paths are cross-checked here (exact aggregate
+//! equality, sketch percentiles within the documented 1/32 bound) on top
+//! of the property tests in `tests/stream_equivalence.rs`.
+//!
+//! `RARSCHED_BENCH_STREAM_FULL=1` additionally runs the acceptance-scale
+//! case — 10⁶ jobs across 10⁴ servers, streaming only (materializing a
+//! million-job trace is exactly what the engine exists to avoid) — as a
+//! single timed pass.
+//!
+//! Results are written to `BENCH_stream.json` (override with
+//! `RARSCHED_BENCH_STREAM_OUT`) so `scripts/verify.sh` can gate on the
+//! manifest stamp and the sketch-vs-exact agreement across PRs.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::JobSpec;
+use rarsched::online::{Fifo, OnlineOptions, OnlineScheduler};
+use rarsched::runtime::RunManifest;
+use rarsched::trace::{ArrivalProcess, TraceGenerator};
+use rarsched::util::bench::Bench;
+use rarsched::util::Json;
+use std::time::Instant;
+
+struct Case {
+    name: String,
+    mode: &'static str,
+    jobs: usize,
+    servers: usize,
+    mean_ms: f64,
+    periods: u64,
+    peak_live: usize,
+    max_pending: usize,
+    truncated: bool,
+}
+
+impl Case {
+    fn to_json(&self) -> Json {
+        let secs = self.mean_ms / 1e3;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mode", Json::Str(self.mode.into())),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("servers", Json::Num(self.servers as f64)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("periods", Json::Num(self.periods as f64)),
+            ("events_per_sec", Json::Num(self.periods as f64 / secs.max(1e-12))),
+            ("peak_live", Json::Num(self.peak_live as f64)),
+            ("max_pending", Json::Num(self.max_pending as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+        ])
+    }
+}
+
+fn main() {
+    let params = ContentionParams::paper();
+    let gen = TraceGenerator::tiny();
+    let mut b = Bench::new("stream");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // ---- default case: 10^5 lazy arrivals, both engines -----------------
+    // mean gap 1 slot against 256 GPUs keeps the system stable (the tiny
+    // mix averages ~2.3 GPUs x a few tens of slots per job) while holding
+    // a standing active set — the regime the dirty-set rate cache targets.
+    let n_jobs = 100_000;
+    let servers = 32;
+    let cluster = Cluster::uniform(servers, 8, 1.0, 25.0);
+    let opts = OnlineOptions { max_slots: 100_000_000, ..OnlineOptions::default() };
+    let seed = 0x5eed;
+    let gap = 1.0;
+
+    let sched = OnlineScheduler::open(&cluster, &params).with_options(opts);
+    let stream = sched.run_streaming(
+        gen.open_arrivals(seed, n_jobs, ArrivalProcess::poisson(gap)),
+        &mut Fifo,
+    );
+    assert!(!stream.truncated, "default case must drain the stream");
+    assert_eq!(stream.finished as usize, n_jobs);
+    {
+        let name = format!("stream/{}k-{}srv", n_jobs / 1000, servers);
+        let r = b.run(&name, || {
+            sched
+                .run_streaming(
+                    gen.open_arrivals(seed, n_jobs, ArrivalProcess::poisson(gap)),
+                    &mut Fifo,
+                )
+                .makespan
+        });
+        cases.push(Case {
+            name,
+            mode: "stream",
+            jobs: n_jobs,
+            servers,
+            mean_ms: r.mean_ms(),
+            periods: stream.periods,
+            peak_live: stream.peak_live,
+            max_pending: stream.max_pending,
+            truncated: stream.truncated,
+        });
+    }
+
+    // the same arrivals materialized up front, through the collect-all path
+    let jobs: Vec<JobSpec> =
+        gen.open_arrivals(seed, n_jobs, ArrivalProcess::poisson(gap)).collect();
+    let mat_sched = OnlineScheduler::new(&cluster, &jobs, &params).with_options(opts);
+    let mat = mat_sched.run(&mut Fifo);
+    {
+        let name = format!("materialized/{}k-{}srv", n_jobs / 1000, servers);
+        let r = b.run(&name, || mat_sched.run(&mut Fifo).outcome.makespan);
+        cases.push(Case {
+            name,
+            mode: "materialized",
+            jobs: n_jobs,
+            servers,
+            mean_ms: r.mean_ms(),
+            periods: mat.outcome.periods,
+            peak_live: stream.peak_live, // same loop, same concurrency
+            max_pending: mat.max_pending,
+            truncated: mat.outcome.truncated,
+        });
+    }
+
+    // cross-check: exact aggregates bit-identical, sketch p95 within 1/32
+    assert_eq!(stream.makespan, mat.outcome.makespan);
+    assert_eq!(stream.avg_jct, mat.outcome.avg_jct);
+    assert_eq!(stream.periods, mat.outcome.periods);
+    assert_eq!(stream.max_pending, mat.max_pending);
+    let p95_exact = mat.outcome.jct_percentile(95.0);
+    let p95_sketch = stream.jct.percentile(95.0);
+    let sketch_ok = p95_exact <= p95_sketch && p95_sketch - p95_exact <= p95_exact / 32;
+    assert!(sketch_ok, "p95 sketch {p95_sketch} vs exact {p95_exact}");
+    println!(
+        "  -> equivalence OK: makespan {}, avg_jct {:.2}, p95 sketch {} vs exact {} \
+         (peak_live {} of {} jobs)",
+        stream.makespan, stream.avg_jct, p95_sketch, p95_exact, stream.peak_live, n_jobs
+    );
+
+    // ---- acceptance-scale case: 10^6 jobs x 10^4 servers (opt-in) -------
+    if std::env::var("RARSCHED_BENCH_STREAM_FULL").as_deref() == Ok("1") {
+        let n_full = 1_000_000;
+        let servers_full = 10_000;
+        let big = Cluster::uniform(servers_full, 8, 1.0, 25.0);
+        let big_opts =
+            OnlineOptions { max_slots: 1_000_000_000, ..OnlineOptions::default() };
+        // gap 0.05: 20 arrivals/slot holds a deep standing active set
+        // while staying far below the 80k-GPU service capacity
+        let t0 = Instant::now();
+        let full = OnlineScheduler::open(&big, &params)
+            .with_options(big_opts)
+            .run_streaming(
+                gen.open_arrivals(seed, n_full, ArrivalProcess::poisson(0.05)),
+                &mut Fifo,
+            );
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(!full.truncated, "full case must drain the stream");
+        assert_eq!(full.finished as usize, n_full);
+        println!(
+            "stream/full-1m-{servers_full}srv: {:.0} ms, {} periods \
+             ({:.1} kevents/sec), peak_live {}",
+            ms,
+            full.periods,
+            full.periods as f64 / ms,
+            full.peak_live
+        );
+        cases.push(Case {
+            name: format!("stream/full-1m-{servers_full}srv"),
+            mode: "stream",
+            jobs: n_full,
+            servers: servers_full,
+            mean_ms: ms,
+            periods: full.periods,
+            peak_live: full.peak_live,
+            max_pending: full.max_pending,
+            truncated: full.truncated,
+        });
+    } else {
+        println!("  (set RARSCHED_BENCH_STREAM_FULL=1 for the 10^6-job / 10^4-server case)");
+    }
+    b.report();
+
+    let json = Json::obj(vec![
+        ("suite", Json::Str("stream".into())),
+        ("cases", Json::arr(cases.iter().map(Case::to_json).collect())),
+        (
+            "equivalence",
+            Json::obj(vec![
+                ("makespan", Json::Num(stream.makespan as f64)),
+                ("avg_jct", Json::Num(stream.avg_jct)),
+                ("p95_jct_sketch", Json::Num(p95_sketch as f64)),
+                ("p95_jct_exact", Json::Num(p95_exact as f64)),
+                ("sketch_within_bound", Json::Bool(sketch_ok)),
+                ("exact_match", Json::Bool(true)), // asserted above
+            ]),
+        ),
+        (
+            "manifest",
+            RunManifest::new(
+                seed,
+                "bench:stream",
+                &std::env::args().skip(1).collect::<Vec<_>>(),
+            )
+            .to_json(),
+        ),
+    ]);
+    let out = std::env::var("RARSCHED_BENCH_STREAM_OUT")
+        .unwrap_or_else(|_| "BENCH_stream.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+}

@@ -76,7 +76,10 @@ impl Default for SchedulerConfig {
 /// Keys: `theta` (float > 0; absent = ∞ / disabled), `queue_cap`
 /// (int ≥ 1; absent = unbounded), `migrate` (bool, default false),
 /// `max_moves` (int ≥ 1, default 2), `restart_slots` (int ≥ 0,
-/// default 10).
+/// default 10), `stream` (bool, default false — run the O(active)-memory
+/// streaming engine with sketch-backed percentiles instead of
+/// materializing the trace), `stream_jobs` (int ≥ 1, default 10000 —
+/// arrivals drawn from the lazy generator in streaming mode).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OnlineConfig {
     /// θ-threshold on the projected bottleneck effective degree
@@ -90,6 +93,13 @@ pub struct OnlineConfig {
     pub max_moves: usize,
     /// Checkpoint-restart penalty charged per move, in slots.
     pub restart_slots: u64,
+    /// Drive the online comparison through the streaming engine
+    /// ([`OnlineScheduler::run_streaming`](crate::online::OnlineScheduler::run_streaming)):
+    /// arrivals come from a lazy generator, memory stays O(active jobs)
+    /// and percentiles are sketch-backed. The CLI's `--stream` flag.
+    pub stream: bool,
+    /// Number of arrivals to draw in streaming mode (`--stream-jobs`).
+    pub stream_jobs: usize,
 }
 
 impl Default for OnlineConfig {
@@ -101,6 +111,8 @@ impl Default for OnlineConfig {
             migrate: false,
             max_moves: m.max_moves,
             restart_slots: m.restart_slots,
+            stream: false,
+            stream_jobs: 10_000,
         }
     }
 }
@@ -355,6 +367,16 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("online", "restart_slots") {
             cfg.online.restart_slots = v.as_u64()?;
         }
+        if let Some(v) = doc.get("online", "stream") {
+            cfg.online.stream = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("online", "stream_jobs") {
+            let n = v.as_usize()?;
+            if n == 0 {
+                bail!("online.stream_jobs must be >= 1");
+            }
+            cfg.online.stream_jobs = n;
+        }
         for (key, slot) in [
             ("trace_out", &mut cfg.obs.trace_out),
             ("obs_json", &mut cfg.obs.obs_json),
@@ -489,6 +511,16 @@ impl ExperimentConfig {
                 "online",
                 "restart_slots",
                 TomlValue::Int(self.online.restart_slots as i64),
+            );
+        }
+        if self.online.stream {
+            doc.set("online", "stream", TomlValue::Bool(true));
+        }
+        if self.online.stream_jobs != mig_defaults.stream_jobs {
+            doc.set(
+                "online",
+                "stream_jobs",
+                TomlValue::Int(self.online.stream_jobs as i64),
             );
         }
         // [obs] — only requested outputs are emitted (absence IS the
@@ -680,6 +712,8 @@ mod tests {
             migrate: true,
             max_moves: 3,
             restart_slots: 25,
+            stream: true,
+            stream_jobs: 250_000,
         };
         let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
         assert_eq!(back.online, cfg.online);
@@ -698,6 +732,7 @@ mod tests {
         assert!(ExperimentConfig::from_toml_str("[online]\ntheta = -3.0\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[online]\nqueue_cap = 0\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[online]\nmax_moves = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[online]\nstream_jobs = 0\n").is_err());
         // integers are accepted where floats are expected (toml_lite rule)
         let cfg = ExperimentConfig::from_toml_str("[online]\ntheta = 4\n").unwrap();
         assert_eq!(cfg.online.theta, 4.0);

@@ -16,16 +16,27 @@
 //! queueing-delay / utilization table the `online` CLI subcommand prints.
 //! JCT is measured from each job's *arrival* in both regimes, and no
 //! policy may start a job before it arrives (asserted in tests).
+//!
+//! **Streaming mode** ([`streaming_run`] / [`streaming_comparison`],
+//! `rarsched online --stream`): the trace is never materialized — a lazy
+//! [`OpenArrivals`](crate::trace::OpenArrivals) stream feeds
+//! [`OnlineScheduler::run_streaming`], distributions fold into
+//! [`StreamSketch`](crate::metrics::StreamSketch)es, and memory stays
+//! O(peak active + pending) however long the trace runs. Aggregates are
+//! exact (integer sums, shared core); percentiles carry the sketch's
+//! 1/32 relative bound. The clairvoyant reference is necessarily skipped
+//! — it needs the whole trace up front, which is exactly what streaming
+//! mode refuses to hold.
 
 use super::ExperimentSetup;
 use crate::metrics::{FigureReport, MetricTable};
 use crate::online::{
     AdmissionControl, MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind,
-    OnlineScheduler,
+    OnlineScheduler, StreamOutcome, WindowSample,
 };
 use crate::sched::{self, Policy};
 use crate::sim::{SimOutcome, Simulator};
-use crate::trace::TraceGenerator;
+use crate::trace::{ArrivalProcess, TraceGenerator};
 use crate::Result;
 
 fn generator(setup: &ExperimentSetup) -> TraceGenerator {
@@ -145,22 +156,24 @@ pub fn online_comparison(
 /// Per-window steady-state table of one online run (see
 /// [`OnlineOptions::window`]): time-series rows of utilization and
 /// queue-length the run-level aggregates average away. The final window
-/// is clamped at the run's end and normalized by its *actual* length —
-/// otherwise a fully-busy tail would plot as an artifactual utilization
-/// dip.
+/// is clamped at the run's end (`run_end` = slots simulated) and
+/// normalized by its *actual* length — otherwise a fully-busy tail would
+/// plot as an artifactual utilization dip. Takes the bare window series
+/// so collect-all ([`OnlineOutcome::windows`]) and streaming
+/// ([`StreamOutcome::windows`]) runs share it.
 pub fn window_table(
     policy: &str,
-    out: &crate::online::OnlineOutcome,
+    windows: &[WindowSample],
     num_gpus: usize,
     window: u64,
+    run_end: u64,
 ) -> MetricTable {
-    let run_end = out.outcome.slots_simulated;
     let mut table = MetricTable::new(
         format!("{policy} — sliding-window series (window {window} slots)"),
         "window",
         &["t_start", "t_end", "util", "mean_queue", "max_queue"],
     );
-    for (i, s) in out.windows.iter().enumerate() {
+    for (i, s) in windows.iter().enumerate() {
         let end = (s.start + window).min(run_end.max(s.start + 1));
         let len = end - s.start;
         let util = if num_gpus == 0 {
@@ -225,14 +238,18 @@ pub fn online_comparison_full(
         // loudly rather than report them as valid (cmd_online warns on it)
         let label =
             if out.truncated { format!("{label} (TRUNCATED)") } else { label };
+        // sort-once views: one sort per metric regardless of how many
+        // percentile columns the table grows
+        let jcts = out.jct_percentiles();
+        let waits = out.wait_percentiles();
         table.push(
             label,
             vec![
                 out.makespan as f64,
                 out.avg_jct,
-                out.jct_percentile(95.0) as f64,
+                jcts.percentile(95.0) as f64,
                 out.avg_wait(),
-                out.wait_percentile(95.0) as f64,
+                waits.percentile(95.0) as f64,
                 out.service_utilization(num_gpus),
                 rej_rate,
                 migrations as f64,
@@ -255,7 +272,115 @@ pub fn online_comparison_full(
         if let Some(w) = options.window {
             windows.push((
                 kind.name().to_string(),
-                window_table(kind.name(), &out, num_gpus, w),
+                window_table(
+                    kind.name(),
+                    &out.windows,
+                    num_gpus,
+                    w,
+                    out.outcome.slots_simulated,
+                ),
+            ));
+        }
+    }
+    Ok((table, windows))
+}
+
+/// One O(active)-memory streaming run: `n_jobs` arrivals drawn lazily
+/// from the setup's generator (Poisson at `gap`, or on/off-gated when
+/// `burst` is set) are fed straight into
+/// [`OnlineScheduler::run_streaming`] — the trace never exists as a
+/// `Vec`, per-job state lives only between arrival and completion, and
+/// the JCT/wait distributions come back as sketches.
+pub fn streaming_run(
+    setup: &ExperimentSetup,
+    kind: OnlinePolicyKind,
+    n_jobs: usize,
+    gap: f64,
+    burst: Option<(u64, u64)>,
+    options: OnlineOptions,
+) -> StreamOutcome {
+    let cluster = setup.cluster();
+    let params = setup.params();
+    let gen = generator(setup);
+    let process = match burst {
+        Some((on, off)) => ArrivalProcess::bursty(gap, on, off),
+        None => ArrivalProcess::poisson(gap),
+    };
+    let mut policy = kind.build();
+    OnlineScheduler::open(&cluster, &params)
+        .with_options(options)
+        .run_streaming(gen.open_arrivals(setup.seed, n_jobs, process), policy.as_mut())
+}
+
+/// Streaming twin of [`online_comparison_full`]: the same per-policy
+/// table over a lazy `n_jobs`-arrival stream. Exact columns (makespan,
+/// means, utilization, rejection rate, migrations) match a materialized
+/// run of the same trace bit for bit; the p95 columns are sketch-backed
+/// (within 1/32 above the exact value); `peak_live` reports the
+/// concurrency high-water mark that bounds the run's memory. A requested
+/// clairvoyant reference is skipped with a log line — it requires the
+/// full trace in memory, which is the one thing this mode refuses to do.
+pub fn streaming_comparison(
+    setup: &ExperimentSetup,
+    gap: f64,
+    n_jobs: usize,
+    kinds: &[OnlinePolicyKind],
+    include_clairvoyant: bool,
+    burst: Option<(u64, u64)>,
+    options: OnlineOptions,
+) -> Result<(MetricTable, Vec<(String, MetricTable)>)> {
+    let cluster = setup.cluster();
+    let num_gpus = cluster.num_gpus();
+    if include_clairvoyant {
+        log::info!(
+            "streaming mode: skipping the clairvoyant reference (it must \
+             materialize the whole trace)"
+        );
+    }
+    let arrivals = match burst {
+        Some((on, off)) => format!("bursty on {on}/off {off}, mean gap {gap}"),
+        None => format!("poisson mean gap {gap}"),
+    };
+    let mut table = MetricTable::new(
+        format!(
+            "online streaming — {n_jobs} jobs, {arrivals} slots, seed {} \
+             ({} servers / {} GPUs)",
+            setup.seed,
+            cluster.num_servers(),
+            num_gpus
+        ),
+        "policy",
+        &[
+            "makespan", "avg_jct", "p95_jct", "avg_wait", "p95_wait", "util", "rej_rate",
+            "migrations", "peak_live",
+        ],
+    );
+    let mut windows = Vec::new();
+    for &kind in kinds {
+        let out = streaming_run(setup, kind, n_jobs, gap, burst, options);
+        let label = if out.truncated {
+            format!("{} (TRUNCATED)", kind.name())
+        } else {
+            kind.name().to_string()
+        };
+        table.push(
+            label,
+            vec![
+                out.makespan as f64,
+                out.avg_jct,
+                out.jct.percentile(95.0) as f64,
+                out.avg_wait,
+                out.wait.percentile(95.0) as f64,
+                out.gpu_utilization,
+                out.rejection_rate(n_jobs as u64),
+                out.migrations as f64,
+                out.peak_live as f64,
+            ],
+        );
+        if let Some(w) = options.window {
+            windows.push((
+                kind.name().to_string(),
+                window_table(kind.name(), &out.windows, num_gpus, w, out.slots_simulated),
             ));
         }
     }
@@ -338,14 +463,18 @@ pub fn overload_sweep(
         } else {
             format!("{name}/{scale}")
         };
+        // one sorted view for the all-jobs column, one record pass for
+        // the per-class split — not a collect + sort per percentile cell
+        let waits = o.wait_percentiles();
+        let (one_gpu, multi) = o.wait_percentiles_partition(|r| r.workers == 1);
         (
             label,
             vec![
                 offered as f64,
                 o.makespan as f64,
-                o.wait_percentile(95.0) as f64,
-                o.wait_percentile_where(95.0, |r| r.workers == 1) as f64,
-                o.wait_percentile_where(95.0, |r| r.workers > 1) as f64,
+                waits.percentile(95.0) as f64,
+                one_gpu.percentile(95.0) as f64,
+                multi.percentile(95.0) as f64,
                 out.max_pending as f64,
                 out.rejection_rate(offered),
                 out.migration_count() as f64,
@@ -538,6 +667,52 @@ mod tests {
             get("theta/0.4", "p95_wait") <= get("none/0.4", "p95_wait"),
             "admission must not queue longer than no admission"
         );
+    }
+
+    #[test]
+    fn streaming_comparison_matches_a_materialized_run_and_skips_clairvoyant() {
+        let setup = ExperimentSetup::smoke();
+        let n_jobs = 40;
+        let opts = OnlineOptions { window: Some(100), ..OnlineOptions::default() };
+        let (table, windows) = streaming_comparison(
+            &setup,
+            2.0,
+            n_jobs,
+            &[OnlinePolicyKind::Fifo, OnlinePolicyKind::SjfBco],
+            true, // requested, but streaming mode must skip it
+            None,
+            opts,
+        )
+        .unwrap();
+        assert_eq!(table.rows.len(), 2, "clairvoyant is skipped in streaming mode");
+        assert_eq!(windows.len(), 2, "window series survive streaming mode");
+        for (name, series) in &windows {
+            assert!(!series.rows.is_empty(), "{name}: empty series");
+        }
+        // exact columns equal a materialized run of the very same stream
+        let jobs: Vec<crate::jobs::JobSpec> = generator(&setup)
+            .open_arrivals(setup.seed, n_jobs, ArrivalProcess::poisson(2.0))
+            .collect();
+        let cluster = setup.cluster();
+        let params = setup.params();
+        let mut policy = OnlinePolicyKind::Fifo.build();
+        let mat = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(opts)
+            .run(policy.as_mut());
+        assert!(!mat.outcome.truncated);
+        assert_eq!(table.get("FIFO", "makespan"), Some(mat.outcome.makespan as f64));
+        assert_eq!(table.get("FIFO", "avg_jct"), Some(mat.outcome.avg_jct));
+        assert_eq!(table.get("FIFO", "util"), Some(mat.outcome.gpu_utilization));
+        assert_eq!(table.get("FIFO", "rej_rate"), Some(0.0));
+        // the sketch-backed p95 sits within the documented 1/32 bound
+        let exact = mat.outcome.jct_percentile(95.0);
+        let sketch = table.get("FIFO", "p95_jct").unwrap() as u64;
+        assert!(
+            exact <= sketch && sketch - exact <= exact / 32,
+            "p95 sketch {sketch} vs exact {exact}"
+        );
+        let peak = table.get("FIFO", "peak_live").unwrap();
+        assert!(peak >= 1.0 && peak <= n_jobs as f64);
     }
 
     #[test]

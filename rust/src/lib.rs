@@ -114,6 +114,31 @@
 //! invariant enforced by `tests/obs_passivity.rs` across flat/rack/pod
 //! fabrics, all three engine modes and the online loop.
 //!
+//! ## Streaming engine (O(active) memory)
+//!
+//! The online loop also runs as a **streaming system**: arrivals come
+//! from a lazy iterator ([`trace::TraceGenerator::open_arrivals`] — the
+//! trace is never materialized), per-job outcomes flow through a
+//! pluggable [`online::RunSink`] the moment each job finishes, and
+//! memory is bounded by the *concurrently live* job set (`peak_live`),
+//! not the trace length. [`online::OnlineScheduler::run_streaming`]
+//! folds records into integer-exact aggregates ([`online::RunStats`])
+//! plus mergeable percentile sketches ([`metrics::StreamSketch`], ≤ 1/32
+//! relative error) and returns an [`online::StreamOutcome`]; the classic
+//! collect-all path is the same loop with an [`online::CollectSink`].
+//! Report tables and figures stream row-by-row through the push-style
+//! [`util::json::JsonEmitter`] instead of buffering every row. The
+//! equivalence ladder — `run` == `run_with_sink(CollectSink)`, streaming
+//! aggregates bit-identical to materialized runs, artifact bytes
+//! identical across both paths — is enforced by
+//! `tests/stream_equivalence.rs` over {flat, rack, pod} × {θ-admission,
+//! migration} on/off, and `tests/alloc_steady_state.rs` pins the
+//! zero-allocation steady state under a counting global allocator.
+//! `rarsched online --stream --stream-jobs N` drives it from the CLI;
+//! `benches/stream.rs` prices both engines on the same 10⁵-job stream
+//! (`BENCH_stream.json`), with a 10⁶-job × 10⁴-server case behind
+//! `RARSCHED_BENCH_STREAM_FULL=1`.
+//!
 //! ## Environment variables
 //!
 //! All `RARSCHED_*` knobs in one place:
@@ -128,6 +153,8 @@
 //! | `RARSCHED_BENCH_SIM_OUT` | artifact path for `benches/sim_engine.rs` (`BENCH_sim_engine.json`) |
 //! | `RARSCHED_BENCH_NET_OUT` | artifact path for `benches/net_alloc.rs` (`BENCH_net_alloc.json`) |
 //! | `RARSCHED_BENCH_OBS_OUT` | artifact path for `benches/obs_overhead.rs` (`BENCH_obs.json`) |
+//! | `RARSCHED_BENCH_STREAM_OUT` | artifact path for `benches/stream.rs` (`BENCH_stream.json`) |
+//! | `RARSCHED_BENCH_STREAM_FULL` | `1` adds the 10⁶-job × 10⁴-server acceptance case to `benches/stream.rs` |
 //! | `RARSCHED_GIT_REV` | overrides the git revision stamped into run manifests ([`runtime::manifest::RunManifest`]) |
 
 pub mod cli;

@@ -17,7 +17,7 @@
 //!   python-recorded losses in the artifact manifest.
 
 use rarsched::cli::Args;
-use rarsched::config::{ExperimentConfig, ObsConfig};
+use rarsched::config::{ExperimentConfig, ObsConfig, OnlineConfig};
 use rarsched::coordinator::{train_job, TrainJobSpec};
 use rarsched::experiments::{self, ExperimentSetup};
 use rarsched::metrics::PolicySummary;
@@ -45,7 +45,8 @@ COMMANDS:
              [--topology SPEC] [--contention degree|maxmin]
              [--no-clairvoyant] [--theta F] [--queue-cap N]
              [--migrate|--no-migrate] [--max-moves K] [--restart N]
-             [--window W] [--config f.toml] [--json] [--out dir]
+             [--window W] [--stream] [--stream-jobs N]
+             [--config f.toml] [--json] [--out dir]
              [--trace-out t.json] [--obs-json o.json] [--explain f|-]
              [--timeline links.csv]
              overload controls: --theta rejects an arrival whose projected
@@ -57,9 +58,15 @@ COMMANDS:
              their bottleneck strictly improves net of --restart slots of
              checkpoint-restart. --window W emits sliding-window
              utilization and queue-length series (steady-state view).
-             --config seeds these from the file's [online] section (keys:
-             theta, queue_cap, migrate, max_moves, restart_slots);
-             explicit flags override. Defaults: theta inf, cap unbounded,
+             --stream runs the O(active)-memory streaming engine over a
+             lazy --stream-jobs N arrival stream (default 10000): the
+             trace is never materialized, exact columns match a
+             materialized run bit for bit, percentiles are sketch-backed
+             (within 1/32 above exact) and the clairvoyant reference is
+             skipped (it needs the full trace). --config seeds these from
+             the file's [online] section (keys: theta, queue_cap, migrate,
+             max_moves, restart_slots, stream, stream_jobs); explicit
+             flags override. Defaults: theta inf, cap unbounded,
              migration off (= the control-free scheduler bit for bit).
   figures    --fig <4|5|6|7|motivation|ablations|online|topology|hetero|
              overload|links|all> [--seed N] [--scale F] [--out dir]
@@ -391,7 +398,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     // scale, horizon, inter_bw) and the [online] overload controls;
     // explicit CLI flags always override it. Sections an online setup
     // cannot represent are called out instead of silently dropped.
-    let (base_setup, base_options, base_obs) = match args.get("config") {
+    let (base_setup, base_options, base_obs, base_online) = match args.get("config") {
         Some(path) => {
             let cfg = ExperimentConfig::load(std::path::Path::new(path))?;
             if !cfg.cluster.capacities.is_empty() {
@@ -439,9 +446,14 @@ fn cmd_online(args: &Args) -> Result<()> {
             s.topology = cfg.topology;
             s.model = cfg.contention;
             s.inter_bw = cfg.cluster.inter_bw;
-            (s, cfg.online.build_options(), cfg.obs.clone())
+            (s, cfg.online.build_options(), cfg.obs.clone(), cfg.online)
         }
-        None => (ExperimentSetup::paper(), OnlineOptions::default(), ObsConfig::default()),
+        None => (
+            ExperimentSetup::paper(),
+            OnlineOptions::default(),
+            ObsConfig::default(),
+            OnlineConfig::default(),
+        ),
     };
     let setup = setup_from(args, base_setup)?;
     let gap = args.get_f64("gap", 5.0)?;
@@ -452,6 +464,11 @@ fn cmd_online(args: &Args) -> Result<()> {
         .map(|s| s.parse())
         .collect::<Result<_>>()?;
     let clairvoyant = !args.get_bool("no-clairvoyant");
+    let stream = args.get_bool("stream") || base_online.stream;
+    let stream_jobs = args.get_usize("stream-jobs", base_online.stream_jobs)?;
+    if stream_jobs == 0 {
+        anyhow::bail!("--stream-jobs must be >= 1");
+    }
     let options = online_options_from(args, base_options)?;
     let obs_cfg = obs_config_from(args, base_obs);
     let json = args.get_bool("json");
@@ -467,7 +484,7 @@ fn cmd_online(args: &Args) -> Result<()> {
 
     log::info!(
         "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}, \
-         theta {}, queue cap {}, migration {}",
+         theta {}, queue cap {}, migration {}{}",
         match burst {
             Some((on, off)) => format!(" (bursty on {on}/off {off})"),
             None => String::new(),
@@ -477,16 +494,33 @@ fn cmd_online(args: &Args) -> Result<()> {
         if clairvoyant { "on" } else { "off" },
         options.admission.theta,
         options.admission.queue_cap,
-        if options.migration.enabled { "on" } else { "off" }
+        if options.migration.enabled { "on" } else { "off" },
+        if stream {
+            format!(", streaming over {stream_jobs} lazy arrivals")
+        } else {
+            String::new()
+        }
     );
-    let (table, windows) = experiments::online::online_comparison_full(
-        &setup,
-        gap,
-        &kinds,
-        clairvoyant,
-        burst,
-        options,
-    )?;
+    let (table, windows) = if stream {
+        experiments::online::streaming_comparison(
+            &setup,
+            gap,
+            stream_jobs,
+            &kinds,
+            clairvoyant,
+            burst,
+            options,
+        )?
+    } else {
+        experiments::online::online_comparison_full(
+            &setup,
+            gap,
+            &kinds,
+            clairvoyant,
+            burst,
+            options,
+        )?
+    };
     if json {
         // one JSON document per line: the comparison table first, then
         // each policy's window series (only with --window) — so the

@@ -1,8 +1,10 @@
 //! Result aggregation and reporting: figure-style tables, CSV/JSON export.
 
 mod report;
+mod sketch;
 
 pub use report::{ComparisonRow, FigureReport, MetricTable};
+pub use sketch::StreamSketch;
 
 use crate::sim::SimOutcome;
 

@@ -1,7 +1,20 @@
 //! Figure-style reports: aligned console tables, CSV and JSON emitters,
 //! matching the rows/series the paper's Figs. 4–7 plot.
+//!
+//! Emission is **push-style**: [`FigureReport::write_csv`] /
+//! [`FigureReport::write_json`] (and the [`MetricTable`] twins) stream
+//! row by row into any [`io::Write`] through
+//! [`JsonEmitter`](crate::util::json::JsonEmitter), so a report written
+//! to disk never buffers more than one row. The `to_*` string forms are
+//! thin wrappers over the same writers — byte-identical by construction
+//! (the JSON writers emit object keys in the sorted order the historical
+//! [`Json`](crate::util::Json) tree emitter produced, so existing
+//! artifacts do not change by a single byte; pinned by tests below).
 
 use super::PolicySummary;
+use crate::util::json::JsonEmitter;
+use crate::util::Json;
+use std::io;
 
 /// One (x, y…) row of a figure sweep — e.g. (κ, makespan) for Fig. 5.
 #[derive(Debug, Clone)]
@@ -68,34 +81,56 @@ impl FigureReport {
         out
     }
 
-    /// Render CSV (header + rows).
-    pub fn to_csv(&self) -> String {
-        let mut out = format!("{},makespan,avg_jct\n", self.x_label);
+    /// Stream CSV (header + rows) into `out`, one row at a time.
+    pub fn write_csv<W: io::Write>(&self, mut out: W) -> io::Result<()> {
+        writeln!(out, "{},makespan,avg_jct", self.x_label)?;
         for r in &self.rows {
-            out.push_str(&format!("{},{},{:.3}\n", r.x, r.makespan, r.avg_jct));
+            writeln!(out, "{},{},{:.3}", r.x, r.makespan, r.avg_jct)?;
         }
-        out
+        Ok(())
     }
 
+    /// Render CSV as a string (buffers [`write_csv`](Self::write_csv)).
+    pub fn to_csv(&self) -> String {
+        let mut buf = Vec::new();
+        self.write_csv(&mut buf).expect("writing to a Vec cannot fail");
+        String::from_utf8(buf).expect("CSV emission is UTF-8")
+    }
+
+    /// Stream the JSON report into `out`: the envelope opens, each row is
+    /// pushed as it is visited, the envelope closes. Keys are emitted in
+    /// sorted order — exactly the bytes the historical tree emitter
+    /// (`BTreeMap`-backed [`Json`]) produced.
+    pub fn write_json<W: io::Write>(&self, out: W) -> io::Result<()> {
+        let mut e = JsonEmitter::pretty(out);
+        e.begin_obj()?;
+        e.key("figure")?;
+        e.str(&self.figure)?;
+        e.key("rows")?;
+        e.begin_arr()?;
+        for r in &self.rows {
+            e.begin_obj()?;
+            e.key("avg_jct")?;
+            e.num(r.avg_jct)?;
+            e.key("makespan")?;
+            e.num(r.makespan as f64)?;
+            e.key("x")?;
+            e.str(&r.x)?;
+            e.end_obj()?;
+        }
+        e.end_arr()?;
+        e.key("x_label")?;
+        e.str(&self.x_label)?;
+        e.end_obj()?;
+        e.finish()?;
+        Ok(())
+    }
+
+    /// Render JSON as a string (buffers [`write_json`](Self::write_json)).
     pub fn to_json(&self) -> crate::Result<String> {
-        use crate::util::Json;
-        let rows = self
-            .rows
-            .iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("x", Json::Str(r.x.clone())),
-                    ("makespan", Json::Num(r.makespan as f64)),
-                    ("avg_jct", Json::Num(r.avg_jct)),
-                ])
-            })
-            .collect();
-        Ok(Json::obj(vec![
-            ("figure", Json::Str(self.figure.clone())),
-            ("x_label", Json::Str(self.x_label.clone())),
-            ("rows", Json::arr(rows)),
-        ])
-        .to_pretty())
+        let mut buf = Vec::new();
+        self.write_json(&mut buf)?;
+        Ok(String::from_utf8(buf).expect("JSON emission is UTF-8"))
     }
 
     /// Parse a report back from [`to_json`](Self::to_json) output.
@@ -121,8 +156,12 @@ impl FigureReport {
         })
     }
 
+    /// Stream the CSV straight to disk through a buffered writer — no
+    /// whole-report string is ever built.
     pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
-        std::fs::write(path, self.to_csv())?;
+        let mut out = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_csv(&mut out)?;
+        io::Write::flush(&mut out)?;
         Ok(())
     }
 
@@ -203,46 +242,67 @@ impl MetricTable {
         out
     }
 
-    /// Render CSV (header + rows).
-    pub fn to_csv(&self) -> String {
-        let mut out = self.label.clone();
+    /// Stream CSV (header + rows) into `out`, one row at a time.
+    pub fn write_csv<W: io::Write>(&self, mut out: W) -> io::Result<()> {
+        write!(out, "{}", self.label)?;
         for c in &self.columns {
-            out.push(',');
-            out.push_str(c);
+            write!(out, ",{c}")?;
         }
-        out.push('\n');
+        writeln!(out)?;
         for (label, values) in &self.rows {
-            out.push_str(label);
+            write!(out, "{label}")?;
             for v in values {
-                out.push_str(&format!(",{v:.4}"));
+                write!(out, ",{v:.4}")?;
             }
-            out.push('\n');
+            writeln!(out)?;
         }
-        out
+        Ok(())
     }
 
+    /// Render CSV as a string (buffers [`write_csv`](Self::write_csv)).
+    pub fn to_csv(&self) -> String {
+        let mut buf = Vec::new();
+        self.write_csv(&mut buf).expect("writing to a Vec cannot fail");
+        String::from_utf8(buf).expect("CSV emission is UTF-8")
+    }
+
+    /// Stream the JSON table into `out`, row by row. Each row still
+    /// passes through one single-row [`Json`] object so the historical
+    /// `BTreeMap` key order (and its duplicate-key last-wins semantics,
+    /// should a column ever collide with the row label) is preserved
+    /// byte for byte — only the row under emission is ever materialized.
+    pub fn write_json<W: io::Write>(&self, out: W) -> io::Result<()> {
+        let mut e = JsonEmitter::pretty(out);
+        e.begin_obj()?;
+        e.key("rows")?;
+        e.begin_arr()?;
+        for (label, values) in &self.rows {
+            let mut fields = vec![(self.label.as_str(), Json::Str(label.clone()))];
+            fields.extend(
+                self.columns.iter().zip(values).map(|(c, v)| (c.as_str(), Json::Num(*v))),
+            );
+            e.value(&Json::obj(fields))?;
+        }
+        e.end_arr()?;
+        e.key("title")?;
+        e.str(&self.title)?;
+        e.end_obj()?;
+        e.finish()?;
+        Ok(())
+    }
+
+    /// Render JSON as a string (buffers [`write_json`](Self::write_json)).
     pub fn to_json(&self) -> crate::Result<String> {
-        use crate::util::Json;
-        let rows = self
-            .rows
-            .iter()
-            .map(|(label, values)| {
-                let mut fields = vec![(self.label.as_str(), Json::Str(label.clone()))];
-                fields.extend(
-                    self.columns.iter().zip(values).map(|(c, v)| (c.as_str(), Json::Num(*v))),
-                );
-                Json::obj(fields)
-            })
-            .collect();
-        Ok(Json::obj(vec![
-            ("title", Json::Str(self.title.clone())),
-            ("rows", Json::arr(rows)),
-        ])
-        .to_pretty())
+        let mut buf = Vec::new();
+        self.write_json(&mut buf)?;
+        Ok(String::from_utf8(buf).expect("JSON emission is UTF-8"))
     }
 
+    /// Stream the CSV straight to disk through a buffered writer.
     pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
-        std::fs::write(path, self.to_csv())?;
+        let mut out = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_csv(&mut out)?;
+        io::Write::flush(&mut out)?;
         Ok(())
     }
 }
@@ -325,5 +385,88 @@ mod tests {
     fn metric_table_rejects_ragged_rows() {
         let mut t = MetricTable::new("x", "policy", &["a", "b"]);
         t.push("row", vec![1.0]);
+    }
+
+    #[test]
+    fn streaming_writers_match_historical_tree_bytes() {
+        // The row-streaming writers must reproduce the buffer-everything
+        // tree emission byte for byte — artifacts on disk do not change.
+        let f = report();
+        let tree = Json::obj(vec![
+            ("figure", Json::Str(f.figure.clone())),
+            ("x_label", Json::Str(f.x_label.clone())),
+            (
+                "rows",
+                Json::arr(
+                    f.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("x", Json::Str(r.x.clone())),
+                                ("makespan", Json::Num(r.makespan as f64)),
+                                ("avg_jct", Json::Num(r.avg_jct)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_pretty();
+        assert_eq!(f.to_json().unwrap(), tree);
+
+        let t = metric_table();
+        let tree = Json::obj(vec![
+            ("title", Json::Str(t.title.clone())),
+            (
+                "rows",
+                Json::arr(
+                    t.rows
+                        .iter()
+                        .map(|(label, values)| {
+                            let mut fields =
+                                vec![(t.label.as_str(), Json::Str(label.clone()))];
+                            fields.extend(
+                                t.columns
+                                    .iter()
+                                    .zip(values)
+                                    .map(|(c, v)| (c.as_str(), Json::Num(*v))),
+                            );
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_pretty();
+        assert_eq!(t.to_json().unwrap(), tree);
+    }
+
+    #[test]
+    fn write_and_to_forms_agree_and_save_csv_streams() {
+        let f = report();
+        let mut csv = Vec::new();
+        f.write_csv(&mut csv).unwrap();
+        assert_eq!(String::from_utf8(csv).unwrap(), f.to_csv());
+        let mut json = Vec::new();
+        f.write_json(&mut json).unwrap();
+        assert_eq!(String::from_utf8(json).unwrap(), f.to_json().unwrap());
+
+        let t = metric_table();
+        let mut csv = Vec::new();
+        t.write_csv(&mut csv).unwrap();
+        assert_eq!(String::from_utf8(csv).unwrap(), t.to_csv());
+        let mut json = Vec::new();
+        t.write_json(&mut json).unwrap();
+        assert_eq!(String::from_utf8(json).unwrap(), t.to_json().unwrap());
+
+        // save_csv's buffered streaming path produces the same file bytes
+        let dir = crate::util::temp_dir("report-stream").unwrap();
+        let fp = dir.join("fig.csv");
+        f.save_csv(&fp).unwrap();
+        assert_eq!(std::fs::read_to_string(&fp).unwrap(), f.to_csv());
+        let tp = dir.join("table.csv");
+        t.save_csv(&tp).unwrap();
+        assert_eq!(std::fs::read_to_string(&tp).unwrap(), t.to_csv());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

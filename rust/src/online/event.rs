@@ -27,6 +27,23 @@ pub enum EventKind {
     Migrated,
 }
 
+impl EventKind {
+    /// Number of variants (dense-array sizing for per-kind counters).
+    pub const COUNT: usize = 5;
+
+    /// Dense index of the variant (`0..COUNT`), for allocation-free
+    /// per-kind counting in streaming sinks.
+    pub fn index(self) -> usize {
+        match self {
+            EventKind::Arrival => 0,
+            EventKind::Start => 1,
+            EventKind::Completion => 2,
+            EventKind::Rejected => 3,
+            EventKind::Migrated => 4,
+        }
+    }
+}
+
 /// One timestamped event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OnlineEvent {

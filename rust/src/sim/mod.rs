@@ -15,7 +15,7 @@ mod outcome;
 mod scorer;
 
 pub use engine::{ContentionMode, SimOptions, SimScratch, Simulator};
-pub use outcome::{JobRecord, SimOutcome};
+pub use outcome::{JobRecord, Percentiles, SimOutcome};
 pub use scorer::PlanScorer;
 
 #[cfg(test)]

@@ -3,7 +3,7 @@
 use crate::jobs::JobId;
 
 /// Per-job outcome of a simulated schedule.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
     pub job: JobId,
     /// Arrival slot (0 in the paper's batch setting).
@@ -61,16 +61,46 @@ pub struct SimOutcome {
     pub truncated: bool,
 }
 
-/// Nearest-rank percentile (p in [0, 100]) over unsorted values; 0 when
-/// empty. Shared by every per-job percentile metric so the rank rule
-/// cannot drift between them.
-fn percentile_of(mut values: Vec<u64>, p: f64) -> u64 {
-    if values.is_empty() {
+/// Nearest-rank percentile over a **sorted** slice (p in [0, 100]); 0
+/// when empty. The single rank rule (`idx = round(p/100 · (n−1))`) shared
+/// by every per-job percentile metric — including the streaming
+/// [`crate::metrics::StreamSketch`] — so it cannot drift between them.
+pub(crate) fn percentile_of_sorted(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
         return 0;
     }
-    values.sort_unstable();
-    let idx = ((p / 100.0) * (values.len() - 1) as f64).round() as usize;
-    values[idx.min(values.len() - 1)]
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// A sorted view over one metric's values: sort **once**, answer any
+/// number of percentile queries in O(1) each. Callers that read several
+/// percentiles per outcome (the `experiments/` sweep rows) build one of
+/// these instead of paying a fresh collect + O(n log n) sort per query.
+#[derive(Debug, Clone)]
+pub struct Percentiles {
+    sorted: Vec<u64>,
+}
+
+impl Percentiles {
+    /// Take ownership of the values and sort them once.
+    pub fn from_values(mut values: Vec<u64>) -> Self {
+        values.sort_unstable();
+        Percentiles { sorted: values }
+    }
+
+    /// Nearest-rank percentile, `p ∈ [0, 100]`; 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        percentile_of_sorted(&self.sorted, p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
 }
 
 impl SimOutcome {
@@ -78,9 +108,38 @@ impl SimOutcome {
         self.records.iter().find(|r| r.job == job)
     }
 
+    /// Sorted view over all JCTs — sort once, query many percentiles.
+    pub fn jct_percentiles(&self) -> Percentiles {
+        Percentiles::from_values(self.records.iter().map(|r| r.jct()).collect())
+    }
+
+    /// Sorted view over all queueing delays.
+    pub fn wait_percentiles(&self) -> Percentiles {
+        Percentiles::from_values(self.records.iter().map(|r| r.wait()).collect())
+    }
+
+    /// One pass over the records, split by `pred` into two sorted wait
+    /// views `(matching, rest)` — the overload sweep reads per-class
+    /// percentiles without re-collecting per query.
+    pub fn wait_percentiles_partition(
+        &self,
+        pred: impl Fn(&JobRecord) -> bool,
+    ) -> (Percentiles, Percentiles) {
+        let mut hit = Vec::new();
+        let mut miss = Vec::new();
+        for r in &self.records {
+            if pred(r) {
+                hit.push(r.wait());
+            } else {
+                miss.push(r.wait());
+            }
+        }
+        (Percentiles::from_values(hit), Percentiles::from_values(miss))
+    }
+
     /// p-th percentile of JCT (p in [0, 100]).
     pub fn jct_percentile(&self, p: f64) -> u64 {
-        percentile_of(self.records.iter().map(|r| r.jct()).collect(), p)
+        self.jct_percentiles().percentile(p)
     }
 
     /// Mean queueing delay.
@@ -93,7 +152,7 @@ impl SimOutcome {
 
     /// p-th percentile of queueing delay (arrival → start), p in [0, 100].
     pub fn wait_percentile(&self, p: f64) -> u64 {
-        percentile_of(self.records.iter().map(|r| r.wait()).collect(), p)
+        self.wait_percentiles().percentile(p)
     }
 
     /// p-th percentile of queueing delay over the records matching `pred`
@@ -104,10 +163,10 @@ impl SimOutcome {
         p: f64,
         pred: impl Fn(&JobRecord) -> bool,
     ) -> u64 {
-        percentile_of(
+        Percentiles::from_values(
             self.records.iter().filter(|r| pred(r)).map(|r| r.wait()).collect(),
-            p,
         )
+        .percentile(p)
     }
 
     /// Total migrations over all records (0 for offline replays).
@@ -181,6 +240,36 @@ mod tests {
         // busy = 10 + 15 + 30 = 55 GPU-slots over 40 slots x 1 GPU... the
         // fixture pretends a 2-GPU cluster for a fractional check:
         assert!((out.service_utilization(2) - 55.0 / 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_views_match_per_query_percentiles() {
+        let out = SimOutcome {
+            makespan: 40,
+            avg_jct: 25.0,
+            gpu_utilization: 0.5,
+            records: vec![rec(0, 0, 10), rec(1, 5, 20), rec(2, 10, 40)],
+            slots_simulated: 40,
+            periods: 3,
+            truncated: false,
+        };
+        let jcts = out.jct_percentiles();
+        let waits = out.wait_percentiles();
+        for p in [0.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+            assert_eq!(jcts.percentile(p), out.jct_percentile(p), "jct p={p}");
+            assert_eq!(waits.percentile(p), out.wait_percentile(p), "wait p={p}");
+        }
+        // the one-pass partition agrees with the filtered queries
+        let (hit, miss) = out.wait_percentiles_partition(|r| r.job.0 >= 1);
+        assert_eq!(hit.len(), 2);
+        assert_eq!(miss.len(), 1);
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(hit.percentile(p), out.wait_percentile_where(p, |r| r.job.0 >= 1));
+            assert_eq!(miss.percentile(p), out.wait_percentile_where(p, |r| r.job.0 < 1));
+        }
+        // empty view is safe
+        assert_eq!(Percentiles::from_values(vec![]).percentile(50.0), 0);
+        assert!(Percentiles::from_values(vec![]).is_empty());
     }
 
     #[test]

@@ -1,4 +1,28 @@
 //! Philly-derived synthetic trace generator.
+//!
+//! Two ways to consume a trace:
+//!
+//! * **Collecting** (`generate`, `generate_online`, `generate_bursty`):
+//!   the historical API — returns a full [`JobSet`]. These are now thin
+//!   `.collect()` wrappers over the arrival stream below and are
+//!   property-tested **bit-identical** to the original materialized
+//!   implementation (kept verbatim in the test module as the reference).
+//! * **Streaming** ([`TraceGenerator::arrivals`]): a lazy iterator of
+//!   [`JobSpec`]s in arrival order. Job parameters are pre-drawn into
+//!   compact ~32-byte rows (the seeded shuffle that randomizes arrival
+//!   order across mix classes needs the whole population, so per-job
+//!   *parameters* are O(total-compact)); the heap-heavy `JobSpec` —
+//!   its `name` string above all — is materialized one job at a time as
+//!   the consumer pulls. The online loop holds only pending + running
+//!   specs.
+//!
+//! For runs where even compact rows are too much (the 10⁶-job regime),
+//! [`TraceGenerator::open_arrivals`] samples an **open system**: job
+//! classes drawn i.i.d. from the mix histogram, ids dense in arrival
+//! order, O(1) generator state. It is a different stochastic process
+//! from `arrivals` (no fixed per-class quota), so it is *not*
+//! bit-comparable to the collecting API — it exists for scale, and the
+//! streaming-vs-materialized equivalence ladder runs on `arrivals`.
 
 use super::Trace;
 use crate::jobs::{JobId, JobSet, JobSpec, ModelKind, WorkloadProfile};
@@ -7,6 +31,177 @@ use crate::util::Rng;
 /// The paper's job-type histogram: (GPU count, number of jobs).
 pub const PAPER_MIX: [(usize, usize); 6] =
     [(1, 80), (2, 14), (4, 26), (8, 30), (16, 8), (32, 2)];
+
+/// XOR applied to the seed for the arrival-assignment RNG stream, so
+/// arrival times are independent of the per-job parameter draws.
+const ARRIVAL_SEED_XOR: u64 = 0xA551_17ED;
+
+/// How arrival slots are assigned to the generated jobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Everything arrives at slot 0 in mix order (the paper's §4.1 batch
+    /// setting; no shuffle, no arrival RNG stream consumed).
+    Batch,
+    /// Poisson arrivals with mean inter-arrival `mean_gap` slots, order
+    /// randomized across the mix classes.
+    Poisson { mean_gap: f64 },
+    /// Interrupted-Poisson (on/off-gated) arrivals: Poisson of mean gap
+    /// `mean_gap`, live only during the ON phase of a repeating
+    /// `on_slots`/`off_slots` cycle; OFF-phase arrivals defer to the next
+    /// burst. `off_slots = 0` is exactly `Poisson` (same RNG stream).
+    Bursty { mean_gap: f64, on_slots: u64, off_slots: u64 },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(mean_gap: f64) -> Self {
+        assert!(mean_gap >= 0.0);
+        ArrivalProcess::Poisson { mean_gap }
+    }
+
+    pub fn bursty(mean_gap: f64, on_slots: u64, off_slots: u64) -> Self {
+        assert!(mean_gap >= 0.0);
+        assert!(on_slots >= 1, "burst ON window must be at least one slot");
+        ArrivalProcess::Bursty { mean_gap, on_slots, off_slots }
+    }
+
+    fn mean_gap(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Batch => 0.0,
+            ArrivalProcess::Poisson { mean_gap } => mean_gap,
+            ArrivalProcess::Bursty { mean_gap, .. } => mean_gap,
+        }
+    }
+
+    fn window(&self) -> Option<(u64, u64)> {
+        match *self {
+            ArrivalProcess::Bursty { on_slots, off_slots, .. } => {
+                Some((on_slots, off_slots))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Pre-drawn per-job parameters: everything a [`JobSpec`] needs except
+/// the parts derivable from `kind` (the workload profile) and the heap
+/// `name`. ~32 bytes vs a materialized spec's struct + string.
+#[derive(Debug, Clone, Copy)]
+struct Row {
+    id: u32,
+    gpus: u32,
+    kind: ModelKind,
+    iterations: u64,
+    arrival: u64,
+}
+
+impl Row {
+    fn materialize(self) -> JobSpec {
+        let prof = WorkloadProfile::for_kind(self.kind);
+        let id = self.id as usize;
+        JobSpec {
+            id: JobId(id),
+            name: format!("{}-{}g-{}", self.kind.name(), self.gpus, id),
+            gpus: self.gpus as usize,
+            iterations: self.iterations,
+            grad_size: prof.grad_size,
+            batch_size: prof.batch_size,
+            fwd_per_sample: prof.fwd_per_sample,
+            bwd: prof.bwd,
+            arrival: self.arrival,
+        }
+    }
+}
+
+/// Lazy arrival stream over a fixed mix: rows pre-drawn and ordered at
+/// construction, specs materialized one at a time. See the module docs
+/// for the O(total-compact) caveat and the bit-identity contract.
+#[derive(Debug)]
+pub struct Arrivals {
+    rows: std::vec::IntoIter<Row>,
+}
+
+impl Iterator for Arrivals {
+    type Item = JobSpec;
+
+    fn next(&mut self) -> Option<JobSpec> {
+        self.rows.next().map(Row::materialize)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.rows.size_hint()
+    }
+}
+
+impl ExactSizeIterator for Arrivals {}
+
+/// Open-system arrival stream: classes sampled i.i.d. from the mix
+/// histogram, ids dense in arrival order, O(1) state. See
+/// [`TraceGenerator::open_arrivals`].
+#[derive(Debug)]
+pub struct OpenArrivals {
+    /// (gpus, cumulative weight) — class sampler.
+    cum: Vec<(usize, u64)>,
+    total_weight: u64,
+    iters_min: u64,
+    iters_max: u64,
+    random_kinds: bool,
+    process: ArrivalProcess,
+    rng: Rng,
+    remaining: usize,
+    next_id: usize,
+    t: f64,
+}
+
+impl Iterator for OpenArrivals {
+    type Item = JobSpec;
+
+    fn next(&mut self) -> Option<JobSpec> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        // class ~ mix histogram
+        let w = self.rng.gen_range(self.total_weight);
+        let gpus = self
+            .cum
+            .iter()
+            .find(|&&(_, c)| w < c)
+            .map(|&(g, _)| g)
+            .unwrap_or_else(|| self.cum.last().unwrap().0);
+        let kind = if self.random_kinds {
+            *self.rng.choose(&ModelKind::ALL)
+        } else {
+            ModelKind::ALL[id % ModelKind::ALL.len()]
+        };
+        let iterations = self.rng.gen_u64(self.iters_min, self.iters_max);
+        // same gate-assign-advance order as the fixed-mix stream
+        if let Some((on, off)) = self.process.window() {
+            if off > 0 {
+                let cycle = on + off;
+                let slot = self.t as u64;
+                let phase = slot % cycle;
+                if phase >= on {
+                    self.t = (slot - phase + cycle) as f64;
+                }
+            }
+        }
+        let arrival = self.t as u64;
+        let u: f64 = self.rng.gen_f64().max(1e-12);
+        self.t += -self.process.mean_gap() * u.ln();
+        Some(
+            Row { id: id as u32, gpus: gpus as u32, kind, iterations, arrival }
+                .materialize(),
+        )
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for OpenArrivals {}
 
 /// Configurable trace generator. `TraceGenerator::paper()` reproduces the
 /// §7 settings exactly; other constructors scale the mix for smaller or
@@ -60,10 +255,13 @@ impl TraceGenerator {
         self.mix.iter().map(|&(_, n)| n).sum()
     }
 
-    /// Generate the job set with a seeded RNG (fully reproducible).
-    pub fn generate(&self, seed: u64) -> JobSet {
+    /// Pre-draw the compact parameter rows in mix order with the seeded
+    /// parameter RNG stream. This consumes the RNG exactly like the
+    /// original materialized `generate` did (kind draw then iteration
+    /// draw, per job, in mix order) — the bit-identity anchor.
+    fn draw_rows(&self, seed: u64) -> Vec<Row> {
         let mut rng = Rng::seed_from_u64(seed);
-        let mut jobs = Vec::with_capacity(self.num_jobs());
+        let mut rows = Vec::with_capacity(self.num_jobs());
         let mut id = 0usize;
         for &(gpus, count) in &self.mix {
             for _ in 0..count {
@@ -72,30 +270,103 @@ impl TraceGenerator {
                 } else {
                     ModelKind::ALL[id % ModelKind::ALL.len()]
                 };
-                let prof = WorkloadProfile::for_kind(kind);
                 let iterations = rng.gen_u64(self.iters_min, self.iters_max);
-                jobs.push(JobSpec {
-                    id: JobId(id),
-                    name: format!("{}-{}g-{}", kind.name(), gpus, id),
-                    gpus,
+                rows.push(Row {
+                    id: id as u32,
+                    gpus: gpus as u32,
+                    kind,
                     iterations,
-                    grad_size: prof.grad_size,
-                    batch_size: prof.batch_size,
-                    fwd_per_sample: prof.fwd_per_sample,
-                    bwd: prof.bwd,
                     arrival: 0,
                 });
                 id += 1;
             }
         }
-        jobs
+        rows
+    }
+
+    /// Lazy arrival stream: the jobs of this mix, in arrival order, one
+    /// [`JobSpec`] materialized per `next()`. `Batch` keeps mix order at
+    /// slot 0; `Poisson`/`Bursty` shuffle the population with the
+    /// arrival RNG stream and assign exponential (optionally on/off
+    /// gated) gaps, exactly as the collecting wrappers always have —
+    /// `arrivals(seed, p).collect()` is bit-identical to them.
+    pub fn arrivals(&self, seed: u64, process: ArrivalProcess) -> Arrivals {
+        let mut rows = self.draw_rows(seed);
+        if !matches!(process, ArrivalProcess::Batch) {
+            let mean_gap = process.mean_gap();
+            assert!(mean_gap >= 0.0);
+            let mut rng = Rng::seed_from_u64(seed ^ ARRIVAL_SEED_XOR);
+            rng.shuffle(&mut rows);
+            let mut t = 0.0f64;
+            for row in rows.iter_mut() {
+                if let Some((on, off)) = process.window() {
+                    if off > 0 {
+                        // Defer an OFF-phase arrival to the next burst
+                        // start. Integer phase arithmetic on the floored
+                        // slot keeps the gate exact (arrivals are
+                        // slot-quantised anyway).
+                        let cycle = on + off;
+                        let slot = t as u64;
+                        let phase = slot % cycle;
+                        if phase >= on {
+                            t = (slot - phase + cycle) as f64;
+                        }
+                    }
+                }
+                row.arrival = t as u64;
+                // exponential inter-arrival via inverse CDF
+                let u: f64 = rng.gen_f64().max(1e-12);
+                t += -mean_gap * u.ln();
+            }
+            rows.sort_by_key(|r| (r.arrival, r.id));
+        }
+        Arrivals { rows: rows.into_iter() }
+    }
+
+    /// Open-system arrival stream of `n_jobs` jobs: class sampled i.i.d.
+    /// from the mix histogram (counts as weights), parameters and gaps
+    /// from one seeded stream, ids dense in arrival order — so the
+    /// stream is sorted by `(arrival, id)` by construction and the
+    /// generator state is O(1) regardless of `n_jobs`. This is the
+    /// million-job mode; it is a *different process* from
+    /// [`arrivals`](Self::arrivals) (see module docs).
+    pub fn open_arrivals(
+        &self,
+        seed: u64,
+        n_jobs: usize,
+        process: ArrivalProcess,
+    ) -> OpenArrivals {
+        let mut cum = Vec::with_capacity(self.mix.len());
+        let mut total = 0u64;
+        for &(gpus, count) in &self.mix {
+            total += count as u64;
+            cum.push((gpus, total));
+        }
+        assert!(total > 0, "empty mix");
+        OpenArrivals {
+            cum,
+            total_weight: total,
+            iters_min: self.iters_min,
+            iters_max: self.iters_max,
+            random_kinds: self.random_kinds,
+            process,
+            rng: Rng::seed_from_u64(seed),
+            remaining: n_jobs,
+            next_id: 0,
+            t: 0.0,
+        }
+    }
+
+    /// Generate the job set with a seeded RNG (fully reproducible).
+    pub fn generate(&self, seed: u64) -> JobSet {
+        self.arrivals(seed, ArrivalProcess::Batch).collect()
     }
 
     /// Generate jobs with Poisson arrivals of mean inter-arrival
     /// `mean_gap` slots (online extension; paper §4.1 is batch-at-0).
     /// Arrival order is randomized across the mix classes.
     pub fn generate_online(&self, seed: u64, mean_gap: f64) -> JobSet {
-        self.assign_arrivals(seed, mean_gap, None)
+        self.arrivals(seed, ArrivalProcess::poisson(mean_gap)).collect()
     }
 
     /// Generate jobs with **bursty (on/off) arrivals**: a Poisson process
@@ -112,45 +383,8 @@ impl TraceGenerator {
         on_slots: u64,
         off_slots: u64,
     ) -> JobSet {
-        assert!(on_slots >= 1, "burst ON window must be at least one slot");
-        self.assign_arrivals(seed, mean_gap, Some((on_slots, off_slots)))
-    }
-
-    /// Shared arrival-assignment core: exponential gaps, optionally gated
-    /// by an on/off window. One code path keeps Poisson the exact
-    /// `off = 0` special case of bursty.
-    fn assign_arrivals(
-        &self,
-        seed: u64,
-        mean_gap: f64,
-        window: Option<(u64, u64)>,
-    ) -> JobSet {
-        assert!(mean_gap >= 0.0);
-        let mut jobs = self.generate(seed);
-        let mut rng = Rng::seed_from_u64(seed ^ 0xA551_17ED);
-        rng.shuffle(&mut jobs);
-        let mut t = 0.0f64;
-        for job in jobs.iter_mut() {
-            if let Some((on, off)) = window {
-                if off > 0 {
-                    // Defer an OFF-phase arrival to the next burst start.
-                    // Integer phase arithmetic on the floored slot keeps
-                    // the gate exact (arrivals are slot-quantised anyway).
-                    let cycle = on + off;
-                    let slot = t as u64;
-                    let phase = slot % cycle;
-                    if phase >= on {
-                        t = (slot - phase + cycle) as f64;
-                    }
-                }
-            }
-            job.arrival = t as u64;
-            // exponential inter-arrival via inverse CDF
-            let u: f64 = rng.gen_f64().max(1e-12);
-            t += -mean_gap * u.ln();
-        }
-        jobs.sort_by_key(|j| (j.arrival, j.id));
-        jobs
+        self.arrivals(seed, ArrivalProcess::bursty(mean_gap, on_slots, off_slots))
+            .collect()
     }
 
     /// Generate a [`Trace`] wrapper (jobs + provenance).
@@ -205,6 +439,72 @@ impl TraceGenerator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest_lite::check;
+
+    /// The original materialized implementation, kept **verbatim** as the
+    /// bit-identity reference for the streaming rewrite (reference paths
+    /// are kept and property-tested — architecture invariant).
+    fn reference_generate(g: &TraceGenerator, seed: u64) -> JobSet {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut jobs = Vec::with_capacity(g.num_jobs());
+        let mut id = 0usize;
+        for &(gpus, count) in &g.mix {
+            for _ in 0..count {
+                let kind = if g.random_kinds {
+                    *rng.choose(&ModelKind::ALL)
+                } else {
+                    ModelKind::ALL[id % ModelKind::ALL.len()]
+                };
+                let prof = WorkloadProfile::for_kind(kind);
+                let iterations = rng.gen_u64(g.iters_min, g.iters_max);
+                jobs.push(JobSpec {
+                    id: JobId(id),
+                    name: format!("{}-{}g-{}", kind.name(), gpus, id),
+                    gpus,
+                    iterations,
+                    grad_size: prof.grad_size,
+                    batch_size: prof.batch_size,
+                    fwd_per_sample: prof.fwd_per_sample,
+                    bwd: prof.bwd,
+                    arrival: 0,
+                });
+                id += 1;
+            }
+        }
+        jobs
+    }
+
+    /// Verbatim original `assign_arrivals` (shuffle + gated exponential
+    /// gaps + sort), the reference for the Poisson/bursty stream.
+    fn reference_assign_arrivals(
+        g: &TraceGenerator,
+        seed: u64,
+        mean_gap: f64,
+        window: Option<(u64, u64)>,
+    ) -> JobSet {
+        assert!(mean_gap >= 0.0);
+        let mut jobs = reference_generate(g, seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA551_17ED);
+        rng.shuffle(&mut jobs);
+        let mut t = 0.0f64;
+        for job in jobs.iter_mut() {
+            if let Some((on, off)) = window {
+                if off > 0 {
+                    let cycle = on + off;
+                    let slot = t as u64;
+                    let phase = slot % cycle;
+                    if phase >= on {
+                        t = (slot - phase + cycle) as f64;
+                    }
+                }
+            }
+            job.arrival = t as u64;
+            let u: f64 = rng.gen_f64().max(1e-12);
+            t += -mean_gap * u.ln();
+        }
+        jobs.sort_by_key(|j| (j.arrival, j.id));
+        jobs
+    }
 
     #[test]
     fn paper_mix_matches_section7() {
@@ -243,6 +543,105 @@ mod tests {
             assert_eq!(j.id.0, i);
             assert!(j.validate().is_ok());
         }
+    }
+
+    #[test]
+    fn collecting_wrappers_match_reference_bit_for_bit() {
+        // The headline bit-identity contract of the streaming rewrite:
+        // every collecting wrapper equals the original materialized code
+        // path exactly — same RNG streams, same floats, same sort.
+        for seed in [0u64, 1, 7, 99, 0xDEAD_BEEF] {
+            for g in [TraceGenerator::paper(), TraceGenerator::tiny()] {
+                assert_eq!(g.generate(seed), reference_generate(&g, seed));
+                assert_eq!(
+                    g.generate_online(seed, 5.0),
+                    reference_assign_arrivals(&g, seed, 5.0, None)
+                );
+                assert_eq!(
+                    g.generate_bursty(seed, 2.0, 20, 80),
+                    reference_assign_arrivals(&g, seed, 2.0, Some((20, 80)))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_arrival_stream_matches_reference() {
+        // Random mixes, seeds, gaps and burst windows: the lazy stream
+        // collects to exactly the reference job set.
+        check("arrivals_vs_reference", 48, |rng| {
+            let classes = rng.gen_usize(1, 4);
+            let mix: Vec<(usize, usize)> = (0..classes)
+                .map(|_| (1 << rng.gen_usize(0, 4), rng.gen_usize(1, 12)))
+                .collect();
+            let g = TraceGenerator {
+                mix,
+                iters_min: rng.gen_u64(50, 100),
+                iters_max: rng.gen_u64(100, 500),
+                random_kinds: rng.gen_range(2) == 0,
+            };
+            let seed = rng.next_u64();
+            let gap = rng.gen_f64_range(0.0, 10.0);
+            let process = match rng.gen_range(3) {
+                0 => ArrivalProcess::Batch,
+                1 => ArrivalProcess::poisson(gap),
+                _ => ArrivalProcess::bursty(
+                    gap,
+                    rng.gen_u64(1, 30),
+                    rng.gen_u64(0, 60),
+                ),
+            };
+            let streamed: JobSet = g.arrivals(seed, process).collect();
+            let reference = match process {
+                ArrivalProcess::Batch => reference_generate(&g, seed),
+                ArrivalProcess::Poisson { mean_gap } => {
+                    reference_assign_arrivals(&g, seed, mean_gap, None)
+                }
+                ArrivalProcess::Bursty { mean_gap, on_slots, off_slots } => {
+                    reference_assign_arrivals(&g, seed, mean_gap, Some((on_slots, off_slots)))
+                }
+            };
+            assert_eq!(streamed, reference);
+            // and the stream is lazy-friendly: an exact size hint
+            assert_eq!(g.arrivals(seed, process).len(), g.num_jobs());
+        });
+    }
+
+    #[test]
+    fn open_arrivals_are_sorted_dense_and_deterministic() {
+        let g = TraceGenerator::paper();
+        let jobs: JobSet =
+            g.open_arrivals(11, 500, ArrivalProcess::poisson(3.0)).collect();
+        assert_eq!(jobs.len(), 500);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id.0, i, "ids dense in arrival order");
+            assert!(j.validate().is_ok());
+            assert!((1000..=6000).contains(&j.iterations));
+        }
+        assert!(jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let again: JobSet =
+            g.open_arrivals(11, 500, ArrivalProcess::poisson(3.0)).collect();
+        assert_eq!(jobs, again);
+        // every mix class shows up over 500 draws
+        for &(gpus, _) in &PAPER_MIX {
+            assert!(jobs.iter().any(|j| j.gpus == gpus), "class {gpus} never sampled");
+        }
+        // class frequencies roughly follow the histogram (80/160 are 1-GPU)
+        let ones = jobs.iter().filter(|j| j.gpus == 1).count();
+        assert!((150..=350).contains(&ones), "1-GPU count {ones} of 500");
+    }
+
+    #[test]
+    fn open_arrivals_respect_burst_gate() {
+        let (on, off) = (10u64, 40u64);
+        let jobs: JobSet = TraceGenerator::paper()
+            .open_arrivals(5, 300, ArrivalProcess::bursty(1.0, on, off))
+            .collect();
+        let cycle = on + off;
+        for j in &jobs {
+            assert!(j.arrival % cycle < on, "{} at {} in OFF window", j.id, j.arrival);
+        }
+        assert!(jobs.last().unwrap().arrival >= cycle, "too short to gate");
     }
 
     #[test]

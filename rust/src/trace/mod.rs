@@ -8,7 +8,7 @@
 
 mod generator;
 
-pub use generator::TraceGenerator;
+pub use generator::{ArrivalProcess, Arrivals, OpenArrivals, TraceGenerator};
 
 use crate::jobs::{JobSet, JobSpec};
 use crate::util::Json;

@@ -1,0 +1,91 @@
+//! Heap-allocation counting for steady-state memory tests.
+//!
+//! [`CountingAlloc`] wraps the system allocator and tallies every
+//! `alloc`/`realloc` call (lock-free relaxed atomics — the counter is a
+//! tally, not a synchronization point). It is **not** installed by this
+//! crate: a test binary that wants allocation accounting opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: rarsched::util::alloc::CountingAlloc = rarsched::util::alloc::CountingAlloc::new();
+//! ```
+//!
+//! and reads [`CountingAlloc::allocations`] around the region under test
+//! (see `tests/alloc_steady_state.rs`, which pins the streaming engine's
+//! zero-allocation completion steady state). Library and production
+//! binaries keep the plain system allocator — zero overhead unless a
+//! test asks for the tally.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A [`GlobalAlloc`] that defers to [`System`] and counts the calls that
+/// can mint new heap memory (`alloc`, `alloc_zeroed`, `realloc`). Frees
+/// are not counted: the steady-state invariant under test is "no *new*
+/// allocations", and a drop of pre-existing memory does not violate it.
+pub struct CountingAlloc {
+    allocations: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc { allocations: AtomicU64::new(0) }
+    }
+
+    /// Total allocation calls since process start (monotone; never
+    /// reset). Callers diff two readings to charge a region.
+    pub fn allocations(&self) -> u64 {
+        self.allocations.load(Ordering::Relaxed)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.allocations.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.allocations.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.allocations.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Not installed as the global allocator here (the library test binary
+    // keeps System); exercised directly through the GlobalAlloc vtable.
+    #[test]
+    fn counts_allocs_and_reallocs_but_not_frees() {
+        let a = CountingAlloc::new();
+        assert_eq!(a.allocations(), 0);
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            assert_eq!(a.allocations(), 1);
+            let p = a.realloc(p, layout, 128);
+            assert!(!p.is_null());
+            assert_eq!(a.allocations(), 2);
+            let grown = Layout::from_size_align(128, 8).unwrap();
+            a.dealloc(p, grown);
+            assert_eq!(a.allocations(), 2, "dealloc is not an allocation");
+            let z = a.alloc_zeroed(layout);
+            assert!(!z.is_null());
+            assert_eq!(a.allocations(), 3);
+            assert!(std::slice::from_raw_parts(z, 64).iter().all(|&b| b == 0));
+            a.dealloc(z, layout);
+        }
+    }
+}

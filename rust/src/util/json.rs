@@ -1,14 +1,34 @@
-//! Minimal JSON value model, emitter and recursive-descent parser.
+//! Minimal JSON value model, push-style emitter and recursive-descent
+//! parser.
 //!
 //! The crate serialises traces, plans and reports to JSON for
 //! reproducibility; with the build fully offline we implement the small
 //! JSON subset we need in-tree (objects, arrays, strings, numbers, bools,
 //! null; UTF-8 input; `\uXXXX` escapes on parse).
+//!
+//! Emission is **push-style** (SAX spirit): [`JsonEmitter`] streams
+//! begin/end container markers, keys and scalars straight into any
+//! [`io::Write`], so row-producing paths (`figures`, `--json`,
+//! windows CSV/JSON) can emit as they go instead of accumulating a
+//! `Vec<Row>` or a buffer-everything string. The tree API is a thin
+//! layer on top: [`Json::to_string`]/[`Json::to_pretty`] walk the value
+//! through the same emitter, so tree-built and push-built output are
+//! byte-identical **by construction** (property-tested below).
+//!
+//! Formatting contract (unchanged from the historical buffer-everything
+//! writer, so existing artifacts stay byte-identical): pretty mode uses
+//! 2-space indent, a newline+indent before every element and before a
+//! closer only when the container is non-empty, `": "` after keys
+//! (compact: `":"`); numbers with zero fraction and magnitude < 9·10¹⁵
+//! print as integers; non-finite numbers print as `null` (JSON has no
+//! NaN/Infinity — the old writer emitted invalid JSON here; no artifact
+//! ever contained one, the explain path uses −1.0 sentinels precisely to
+//! keep its JSON finite).
 
 use crate::Result;
 use anyhow::bail;
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
+use std::io::{self, Write as _};
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -89,66 +109,23 @@ impl Json {
     }
 
     // ---- emit --------------------------------------------------------------
-    /// Compact serialisation.
+    /// Compact serialisation (streams through [`JsonEmitter`]).
     pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
+        self.render(None)
     }
 
-    /// Pretty serialisation (2-space indent).
+    /// Pretty serialisation (2-space indent, via [`JsonEmitter`]).
     pub fn to_pretty(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, Some(2), 0);
-        s
+        self.render(Some(2))
     }
 
-    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
-        match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
-            Json::Str(s) => write_escaped(out, s),
-            Json::Arr(items) => {
-                out.push('[');
-                for (i, v) in items.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    newline_indent(out, indent, depth + 1);
-                    v.write(out, indent, depth + 1);
-                }
-                if !items.is_empty() {
-                    newline_indent(out, indent, depth);
-                }
-                out.push(']');
-            }
-            Json::Obj(map) => {
-                out.push('{');
-                for (i, (k, v)) in map.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    newline_indent(out, indent, depth + 1);
-                    write_escaped(out, k);
-                    out.push(':');
-                    if indent.is_some() {
-                        out.push(' ');
-                    }
-                    v.write(out, indent, depth + 1);
-                }
-                if !map.is_empty() {
-                    newline_indent(out, indent, depth);
-                }
-                out.push('}');
-            }
-        }
+    fn render(&self, indent: Option<usize>) -> String {
+        let mut buf = Vec::new();
+        let mut e = JsonEmitter::with_indent(&mut buf, indent);
+        e.value(self).expect("writing to a Vec cannot fail");
+        e.finish().expect("value emission balances its containers");
+        // the emitter only ever writes UTF-8 (escapes + str slices)
+        String::from_utf8(buf).expect("emitter output is UTF-8")
     }
 
     // ---- parse -------------------------------------------------------------
@@ -164,31 +141,245 @@ impl Json {
     }
 }
 
-fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
-    if let Some(w) = indent {
-        out.push('\n');
-        for _ in 0..w * depth {
-            out.push(' ');
+// ---- push-style emitter -------------------------------------------------
+
+/// One open container on the emitter stack.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    is_obj: bool,
+    /// Elements written so far (object: keys; array: values) — drives
+    /// comma placement and the non-empty-closer newline.
+    count: usize,
+}
+
+/// Push-style JSON emitter over any [`io::Write`] sink.
+///
+/// ```text
+/// begin_obj → key → (scalar | begin_* … end_*) → … → end_obj
+/// ```
+///
+/// State is one small `Vec<Frame>` (container kind + element count per
+/// open level), so arbitrarily deep output never recurses and rows can
+/// stream to a file as they are produced. Misuse (a value where a key is
+/// required, `end_obj` closing an array, a dangling key) panics — these
+/// are programmer errors, not data errors, and every call site is
+/// deterministic.
+#[derive(Debug)]
+pub struct JsonEmitter<W: io::Write> {
+    out: W,
+    indent: Option<usize>,
+    stack: Vec<Frame>,
+    /// Inside an object, a key has been written and its value is pending.
+    has_key: bool,
+}
+
+impl<W: io::Write> JsonEmitter<W> {
+    /// Compact emitter (no whitespace).
+    pub fn compact(out: W) -> Self {
+        Self::with_indent(out, None)
+    }
+
+    /// Pretty emitter (2-space indent — the crate's artifact format).
+    pub fn pretty(out: W) -> Self {
+        Self::with_indent(out, Some(2))
+    }
+
+    pub fn with_indent(out: W, indent: Option<usize>) -> Self {
+        JsonEmitter { out, indent, stack: Vec::new(), has_key: false }
+    }
+
+    /// Current container depth (0 at top level).
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// Check balance and hand the sink back (does **not** flush a
+    /// `BufWriter` — callers owning one flush it themselves).
+    pub fn finish(self) -> io::Result<W> {
+        if !self.stack.is_empty() || self.has_key {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "JsonEmitter finished with open containers or a dangling key",
+            ));
+        }
+        Ok(self.out)
+    }
+
+    fn newline_indent(&mut self, depth: usize) -> io::Result<()> {
+        if let Some(w) = self.indent {
+            self.out.write_all(b"\n")?;
+            for _ in 0..w * depth {
+                self.out.write_all(b" ")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Comma/indent bookkeeping before a value in the current context.
+    fn prepare_value(&mut self) -> io::Result<()> {
+        match self.stack.last_mut() {
+            None => {}
+            Some(f) if f.is_obj => {
+                assert!(self.has_key, "object value requires a preceding key()");
+                self.has_key = false;
+            }
+            Some(f) => {
+                if f.count > 0 {
+                    self.out.write_all(b",")?;
+                }
+                f.count += 1;
+                let depth = self.stack.len();
+                self.newline_indent(depth)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write an object key (must be directly inside an object).
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        assert!(!self.has_key, "two keys in a row");
+        let f = self.stack.last_mut().expect("key() outside any container");
+        assert!(f.is_obj, "key() inside an array");
+        if f.count > 0 {
+            self.out.write_all(b",")?;
+        }
+        f.count += 1;
+        let depth = self.stack.len();
+        self.newline_indent(depth)?;
+        write_escaped(&mut self.out, k)?;
+        self.out.write_all(if self.indent.is_some() { b": " } else { b":" })?;
+        self.has_key = true;
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.prepare_value()?;
+        self.out.write_all(b"{")?;
+        self.stack.push(Frame { is_obj: true, count: 0 });
+        Ok(())
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        assert!(!self.has_key, "end_obj() with a dangling key");
+        let f = self.stack.pop().expect("end_obj() at top level");
+        assert!(f.is_obj, "end_obj() closing an array");
+        if f.count > 0 {
+            let depth = self.stack.len();
+            self.newline_indent(depth)?;
+        }
+        self.out.write_all(b"}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.prepare_value()?;
+        self.out.write_all(b"[")?;
+        self.stack.push(Frame { is_obj: false, count: 0 });
+        Ok(())
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        let f = self.stack.pop().expect("end_arr() at top level");
+        assert!(!f.is_obj, "end_arr() closing an object");
+        if f.count > 0 {
+            let depth = self.stack.len();
+            self.newline_indent(depth)?;
+        }
+        self.out.write_all(b"]")
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.prepare_value()?;
+        self.out.write_all(b"null")
+    }
+
+    pub fn bool(&mut self, b: bool) -> io::Result<()> {
+        self.prepare_value()?;
+        self.out.write_all(if b { b"true" } else { b"false" })
+    }
+
+    /// Number with the crate's formatting contract (integral `f64` below
+    /// 9·10¹⁵ prints as an integer; non-finite prints as `null`).
+    pub fn num(&mut self, n: f64) -> io::Result<()> {
+        self.prepare_value()?;
+        write_num(&mut self.out, n)
+    }
+
+    /// Unsigned integer, printed exactly (use for counters that may
+    /// exceed the f64-exact range; identical bytes to `num` below 2⁵³).
+    pub fn uint(&mut self, n: u64) -> io::Result<()> {
+        self.prepare_value()?;
+        write!(self.out, "{n}")
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.prepare_value()?;
+        write_escaped(&mut self.out, s)
+    }
+
+    /// Splice pre-serialised JSON verbatim as one value (caller
+    /// guarantees well-formedness; indentation inside is the caller's).
+    pub fn raw(&mut self, json: &str) -> io::Result<()> {
+        self.prepare_value()?;
+        self.out.write_all(json.as_bytes())
+    }
+
+    /// Emit a whole [`Json`] tree through the push interface — the
+    /// bridge that keeps tree-built and push-built output byte-identical.
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        match v {
+            Json::Null => self.null(),
+            Json::Bool(b) => self.bool(*b),
+            Json::Num(n) => self.num(*n),
+            Json::Str(s) => self.str(s),
+            Json::Arr(items) => {
+                self.begin_arr()?;
+                for item in items {
+                    self.value(item)?;
+                }
+                self.end_arr()
+            }
+            Json::Obj(map) => {
+                self.begin_obj()?;
+                for (k, val) in map {
+                    self.key(k)?;
+                    self.value(val)?;
+                }
+                self.end_obj()
+            }
         }
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
-    out.push('"');
+fn write_num<W: io::Write>(out: &mut W, n: f64) -> io::Result<()> {
+    if !n.is_finite() {
+        // JSON has no NaN/Infinity; null is the documented policy
+        out.write_all(b"null")
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        write!(out, "{}", n as i64)
+    } else {
+        write!(out, "{n}")
+    }
+}
+
+fn write_escaped<W: io::Write>(out: &mut W, s: &str) -> io::Result<()> {
+    out.write_all(b"\"")?;
     for ch in s.chars() {
         match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
+            '"' => out.write_all(b"\\\"")?,
+            '\\' => out.write_all(b"\\\\")?,
+            '\n' => out.write_all(b"\\n")?,
+            '\r' => out.write_all(b"\\r")?,
+            '\t' => out.write_all(b"\\t")?,
             c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
+                write!(out, "\\u{:04x}", c as u32)?;
             }
-            c => out.push(c),
+            c => {
+                let mut buf = [0u8; 4];
+                out.write_all(c.encode_utf8(&mut buf).as_bytes())?;
+            }
         }
     }
-    out.push('"');
+    out.write_all(b"\"")
 }
 
 struct Parser<'a> {
@@ -425,5 +616,231 @@ mod tests {
             8
         );
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    // ---- push-emitter edge cases ---------------------------------------
+
+    /// Walk a tree through the *public* push API only — the independent
+    /// reimplementation the byte-identity property compares against.
+    fn push_walk<W: std::io::Write>(e: &mut JsonEmitter<W>, v: &Json) {
+        match v {
+            Json::Null => e.null().unwrap(),
+            Json::Bool(b) => e.bool(*b).unwrap(),
+            Json::Num(n) => e.num(*n).unwrap(),
+            Json::Str(s) => e.str(s).unwrap(),
+            Json::Arr(items) => {
+                e.begin_arr().unwrap();
+                for item in items {
+                    push_walk(e, item);
+                }
+                e.end_arr().unwrap();
+            }
+            Json::Obj(map) => {
+                e.begin_obj().unwrap();
+                for (k, val) in map {
+                    e.key(k).unwrap();
+                    push_walk(e, val);
+                }
+                e.end_obj().unwrap();
+            }
+        }
+    }
+
+    fn random_json(rng: &mut crate::util::Rng, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_range(2) == 0),
+            2 => {
+                // integral and fractional, positive and negative
+                let n = match rng.gen_range(3) {
+                    0 => rng.gen_u64(0, 1 << 50) as f64,
+                    1 => -(rng.gen_u64(0, 9000) as f64),
+                    _ => rng.gen_f64_range(-1e6, 1e6),
+                };
+                Json::Num(n)
+            }
+            3 => {
+                let tricky = ["", "a\"b", "back\\slash", "line\nfeed", "tab\there",
+                    "ctrl\u{0001}\u{001f}", "unicode é 😀 ¥", "\r"];
+                Json::Str(tricky[rng.gen_range(tricky.len() as u64) as usize].into())
+            }
+            4 => {
+                let n = rng.gen_range(4) as usize;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(random_json(rng, depth - 1));
+                }
+                Json::Arr(items)
+            }
+            _ => {
+                let keys = ["k", "key two", "κλειδί", "with\"quote", "e"];
+                let n = rng.gen_usize(1, keys.len());
+                let mut pairs = Vec::with_capacity(n);
+                for k in &keys[..n] {
+                    pairs.push((*k, random_json(rng, depth - 1)));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_push_emitter_matches_tree_emitter_bytes() {
+        crate::util::proptest_lite::check("push_vs_tree_bytes", 64, |rng| {
+            let v = random_json(rng, 3);
+            for indent in [None, Some(2)] {
+                let mut pushed = Vec::new();
+                let mut e = JsonEmitter::with_indent(&mut pushed, indent);
+                push_walk(&mut e, &v);
+                e.finish().unwrap();
+                let tree =
+                    if indent.is_some() { v.to_pretty() } else { v.to_string() };
+                assert_eq!(String::from_utf8(pushed).unwrap(), tree);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_emit_parse_roundtrip() {
+        // finite trees survive emit → parse with the existing reader
+        crate::util::proptest_lite::check("emit_parse_roundtrip", 64, |rng| {
+            let v = random_json(rng, 3);
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+            assert_eq!(Json::parse(&v.to_pretty()).unwrap(), v);
+        });
+    }
+
+    #[test]
+    fn escaping_edge_cases() {
+        let cases = [
+            ("quote\"inside", r#""quote\"inside""#),
+            ("back\\slash", r#""back\\slash""#),
+            ("nl\n cr\r tab\t", "\"nl\\n cr\\r tab\\t\""),
+            ("\u{0001}\u{001f}", "\"\\u0001\\u001f\""),
+            ("é😀", "\"é😀\""),
+            ("", "\"\""),
+        ];
+        for (raw, expect) in cases {
+            let v = Json::Str(raw.into());
+            assert_eq!(v.to_string(), expect);
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "roundtrip {raw:?}");
+        }
+        // DEL (0x7f) is not a JSON control char: passes through raw
+        assert_eq!(Json::Str("\u{7f}".into()).to_string(), "\"\u{7f}\"");
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null() {
+        // documented policy: JSON has no NaN/Infinity
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let mut buf = Vec::new();
+        let mut e = JsonEmitter::compact(&mut buf);
+        e.begin_arr().unwrap();
+        e.num(f64::NAN).unwrap();
+        e.num(1.5).unwrap();
+        e.end_arr().unwrap();
+        e.finish().unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), "[null,1.5]");
+    }
+
+    #[test]
+    fn deep_nesting_is_iterative() {
+        // 10k-deep array: the push emitter keeps one Frame per level and
+        // never recurses, so this must not blow the stack
+        let mut buf = Vec::new();
+        let mut e = JsonEmitter::compact(&mut buf);
+        const DEPTH: usize = 10_000;
+        for _ in 0..DEPTH {
+            e.begin_arr().unwrap();
+        }
+        e.num(1.0).unwrap();
+        for _ in 0..DEPTH {
+            e.end_arr().unwrap();
+        }
+        e.finish().unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s.len(), 2 * DEPTH + 1);
+        assert!(s.starts_with("[[[") && s.ends_with("]]]"));
+        // a modest depth still round-trips through the recursive parser
+        let mut modest = String::new();
+        for _ in 0..128 {
+            modest.push('[');
+        }
+        modest.push('7');
+        for _ in 0..128 {
+            modest.push(']');
+        }
+        assert!(Json::parse(&modest).is_ok());
+    }
+
+    #[test]
+    fn emitter_streams_rows_and_raw_splices() {
+        // the shape the streaming report paths use: an object with an
+        // array of row objects, plus a pre-rendered manifest spliced raw
+        let mut buf = Vec::new();
+        let mut e = JsonEmitter::pretty(&mut buf);
+        e.begin_obj().unwrap();
+        e.key("rows").unwrap();
+        e.begin_arr().unwrap();
+        for i in 0..3u64 {
+            e.begin_obj().unwrap();
+            e.key("id").unwrap();
+            e.uint(i).unwrap();
+            e.key("score").unwrap();
+            e.num(i as f64 + 0.5).unwrap();
+            e.end_obj().unwrap();
+        }
+        e.end_arr().unwrap();
+        e.key("manifest").unwrap();
+        e.raw(&Json::obj(vec![("seed", Json::Num(7.0))]).to_string()).unwrap();
+        e.end_obj().unwrap();
+        e.finish().unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.req("rows").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            back.req("manifest").unwrap().req("seed").unwrap().as_u64().unwrap(),
+            7
+        );
+        // matches the tree emitter byte for byte
+        let tree = Json::obj(vec![
+            (
+                "rows",
+                Json::arr(
+                    (0..3)
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("id", Json::Num(i as f64)),
+                                ("score", Json::Num(i as f64 + 0.5)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("manifest", Json::obj(vec![("seed", Json::Num(7.0))])),
+        ]);
+        assert_eq!(s, tree.to_pretty());
+    }
+
+    #[test]
+    fn empty_containers_have_no_inner_newline() {
+        // formatting contract: closer newline only when non-empty
+        assert_eq!(Json::arr(vec![]).to_pretty(), "[]");
+        assert_eq!(Json::obj(vec![]).to_pretty(), "{}");
+        assert_eq!(
+            Json::obj(vec![("a", Json::arr(vec![]))]).to_pretty(),
+            "{\n  \"a\": []\n}"
+        );
+    }
+
+    #[test]
+    fn unbalanced_finish_is_an_error() {
+        let mut buf = Vec::new();
+        let mut e = JsonEmitter::compact(&mut buf);
+        e.begin_obj().unwrap();
+        assert!(e.finish().is_err());
     }
 }

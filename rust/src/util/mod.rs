@@ -2,6 +2,7 @@
 //! logging, micro-bench statistics and a tiny property-testing harness.
 //! (The build is fully offline; see Cargo.toml.)
 
+pub mod alloc;
 pub mod bench;
 pub mod json;
 pub mod logger;

@@ -1,0 +1,74 @@
+//! Pins the streaming engine's **zero-allocation completion steady
+//! state**: once the arrival/dispatch churn is over, the online loop —
+//! rate refresh via the dirty set, period jumps, completions, slot
+//! recycling, record emission — runs without touching the heap.
+//!
+//! The [`CountingAlloc`] is installed as the global allocator **for this
+//! test binary only** (the library never installs it); a probe sink
+//! snapshots the global allocation counter at every emitted record, and
+//! the gaps between consecutive completions must be allocation-free.
+//!
+//! This file holds exactly one test so no sibling test thread can
+//! allocate concurrently and pollute the global counter.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::{JobId, JobSpec};
+use rarsched::online::{Fifo, OnlineScheduler, RunSink};
+use rarsched::sim::JobRecord;
+use rarsched::util::alloc::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Snapshots the global allocation tally at each completion. The marks
+/// buffer is preallocated so the probe itself never allocates inside the
+/// region under test.
+struct AllocProbe {
+    marks: Vec<u64>,
+}
+
+impl RunSink for AllocProbe {
+    fn record(&mut self, _record: JobRecord) {
+        debug_assert!(self.marks.len() < self.marks.capacity(), "marks must be preallocated");
+        self.marks.push(ALLOC.allocations());
+    }
+}
+
+#[test]
+fn completion_steady_state_allocates_nothing() {
+    // 4 co-locatable jobs, all arriving at t = 0, with distinct lengths so
+    // the four completions are four separate loop events. Everything that
+    // legitimately allocates — pending-queue inserts, dispatch candidate
+    // lists, dirty-set warm-up, the first slot-free-list growth — happens
+    // at t = 0 or at the first completion; from then on the loop may only
+    // recycle what it already owns. (Exactly 4 jobs: the slot free-list's
+    // first push reserves capacity 4, so later pushes stay in place.)
+    let cluster = Cluster::uniform(4, 8, 1.0, 25.0);
+    let params = ContentionParams::paper();
+    let jobs: Vec<JobSpec> = (0..4)
+        .map(|i| {
+            let mut j = JobSpec::synthetic(JobId(i), 2);
+            j.iterations = 100 + 150 * i as u64;
+            j
+        })
+        .collect();
+    let mut order: Vec<&JobSpec> = jobs.iter().collect();
+    order.sort_by_key(|j| (j.arrival, j.id));
+    let sched = OnlineScheduler::new(&cluster, &jobs, &params);
+    let mut probe = AllocProbe { marks: Vec::with_capacity(8) };
+    let stats = sched.run_with_sink(order.into_iter(), &mut Fifo, &mut probe);
+    assert!(!stats.truncated);
+    assert_eq!(probe.marks.len(), 4, "one mark per completion");
+    // every record after the first must arrive with zero new allocations
+    for i in 1..probe.marks.len() {
+        assert_eq!(
+            probe.marks[i] - probe.marks[i - 1],
+            0,
+            "completions {} -> {} allocated (marks: {:?})",
+            i,
+            i + 1,
+            probe.marks
+        );
+    }
+}

@@ -1,0 +1,243 @@
+//! The streaming equivalence ladder of `online/mod.rs`, property-tested
+//! across fabrics and overload controls:
+//!
+//! 1. `run` == `run_with_sink(CollectSink)` — events, records, ledgers
+//!    and aggregates;
+//! 2. `run_streaming` matches a materialized `run` of the same trace on
+//!    every exact aggregate (integer sums ⇒ bit-identical), with sketch
+//!    percentiles inside the documented 1/32 relative bound;
+//! 3. artifacts rendered from the streaming aggregates are
+//!    **byte-identical** to those rendered from the collect-all path
+//!    (JSON and CSV alike).
+//!
+//! The grid: {flat, rack, pod} fabrics × θ-admission {off, on} ×
+//! migration {off, on}, with sliding windows armed throughout so the
+//! window series is covered by the same sweep.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::jobs::JobSpec;
+use rarsched::metrics::MetricTable;
+use rarsched::online::{
+    AdmissionControl, CollectSink, EventKind, Fifo, MigrationControl, OnlineOptions,
+    OnlineOutcome, OnlineScheduler, StreamOutcome,
+};
+use rarsched::topology::Topology;
+use rarsched::trace::{ArrivalProcess, TraceGenerator};
+
+/// The three fabrics of the acceptance criterion, over one 8-server
+/// cluster so every case shares the same GPU inventory.
+fn fabrics() -> Vec<(&'static str, Cluster)> {
+    let flat = Cluster::uniform(8, 8, 1.0, 25.0);
+    vec![
+        ("flat", flat.clone()),
+        ("rack", flat.clone().with_topology(Topology::racks(8, 4, 2.0))),
+        ("pod", flat.clone().with_topology(Topology::pods(8, 2, 2, 2.0, 4.0))),
+    ]
+}
+
+/// θ-admission {off, on} × migration {off, on}, windows always armed so
+/// the sweep also pins the window-series equality.
+fn control_grid() -> Vec<(&'static str, OnlineOptions)> {
+    let base = OnlineOptions {
+        max_slots: 10_000_000,
+        window: Some(64),
+        ..OnlineOptions::default()
+    };
+    let theta = AdmissionControl { theta: 6.0, queue_cap: 24 };
+    let mig = MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 };
+    vec![
+        ("plain", base),
+        ("theta", OnlineOptions { admission: theta, ..base }),
+        ("mig", OnlineOptions { migration: mig, ..base }),
+        ("theta+mig", OnlineOptions { admission: theta, migration: mig, ..base }),
+    ]
+}
+
+/// Heavy-load smoke trace: small mean gap drives the θ/queue-cap and
+/// migration paths on every fabric.
+fn jobs_for(seed: u64) -> Vec<JobSpec> {
+    TraceGenerator::paper_scaled(0.1).generate_online(seed, 0.5)
+}
+
+const ALL_KINDS: [EventKind; EventKind::COUNT] = [
+    EventKind::Arrival,
+    EventKind::Start,
+    EventKind::Completion,
+    EventKind::Rejected,
+    EventKind::Migrated,
+];
+
+/// Every exact-aggregate comparison between a streaming and a collect-all
+/// run of the same trace — shared by the grid sweep below.
+fn assert_stream_matches(tag: &str, stream: &StreamOutcome, out: &OnlineOutcome, n_jobs: usize) {
+    assert_eq!(stream.policy, out.policy, "{tag}");
+    assert_eq!(stream.makespan, out.outcome.makespan, "{tag}");
+    assert_eq!(stream.avg_jct, out.outcome.avg_jct, "{tag}: integer sums, exact");
+    assert_eq!(stream.gpu_utilization, out.outcome.gpu_utilization, "{tag}");
+    assert_eq!(stream.finished as usize, out.outcome.records.len(), "{tag}");
+    assert_eq!(stream.slots_simulated, out.outcome.slots_simulated, "{tag}");
+    assert_eq!(stream.periods, out.outcome.periods, "{tag}");
+    assert_eq!(stream.truncated, out.outcome.truncated, "{tag}");
+    assert_eq!(stream.rejected as usize, out.rejected.len(), "{tag}");
+    assert_eq!(stream.migrations, out.migrations.len() as u64, "{tag}");
+    assert_eq!(stream.max_pending, out.max_pending, "{tag}");
+    assert_eq!(stream.windows, out.windows, "{tag}: window series");
+    assert!(
+        (stream.avg_wait - out.outcome.avg_wait()).abs() < 1e-9,
+        "{tag}: avg_wait {} vs {}",
+        stream.avg_wait,
+        out.outcome.avg_wait()
+    );
+    for kind in ALL_KINDS {
+        assert_eq!(
+            stream.event_count(kind) as usize,
+            out.events.count(kind),
+            "{tag}: {kind:?} count"
+        );
+    }
+    // the sketches hold the same population as the record vectors...
+    assert_eq!(stream.jct.count(), out.outcome.records.len() as u64, "{tag}");
+    assert_eq!(stream.wait.count(), out.outcome.records.len() as u64, "{tag}");
+    // ...and their percentiles sit within the 1/32 relative bound
+    let jct = out.outcome.jct_percentiles();
+    let wait = out.outcome.wait_percentiles();
+    for p in [50.0, 90.0, 95.0, 99.0, 100.0] {
+        let (e, s) = (jct.percentile(p), stream.jct.percentile(p));
+        assert!(e <= s && s - e <= e / 32, "{tag}: jct p{p} sketch {s} vs exact {e}");
+        let (e, s) = (wait.percentile(p), stream.wait.percentile(p));
+        assert!(e <= s && s - e <= e / 32, "{tag}: wait p{p} sketch {s} vs exact {e}");
+    }
+    // memory bound: peak_live caps the queue and never exceeds the trace
+    assert!(stream.peak_live >= stream.max_pending, "{tag}");
+    assert!(stream.peak_live <= n_jobs, "{tag}");
+}
+
+#[test]
+fn streaming_matches_materialized_across_fabrics_and_controls() {
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x5eed);
+    for (fabric, cluster) in fabrics() {
+        for (controls, options) in control_grid() {
+            let tag = format!("{fabric}/{controls}");
+            let sched = OnlineScheduler::new(&cluster, &jobs, &params).with_options(options);
+            let out = sched.run(&mut Fifo);
+            let mut order: Vec<&JobSpec> = jobs.iter().collect();
+            order.sort_by_key(|j| (j.arrival, j.id));
+            let stream = sched.run_streaming(order.into_iter(), &mut Fifo);
+            assert_stream_matches(&tag, &stream, &out, jobs.len());
+        }
+    }
+}
+
+#[test]
+fn run_is_run_with_collect_sink_on_every_fabric() {
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0xcafe);
+    for (fabric, cluster) in fabrics() {
+        for (controls, options) in control_grid() {
+            let tag = format!("{fabric}/{controls}");
+            let sched = OnlineScheduler::new(&cluster, &jobs, &params).with_options(options);
+            let out = sched.run(&mut Fifo);
+            let mut order: Vec<&JobSpec> = jobs.iter().collect();
+            order.sort_by_key(|j| (j.arrival, j.id));
+            let mut sink = CollectSink::default();
+            let stats = sched.run_with_sink(order.into_iter(), &mut Fifo, &mut sink);
+            // the realized event sequence is identical element for element
+            assert_eq!(sink.events.events(), out.events.events(), "{tag}");
+            assert_eq!(sink.rejected, out.rejected, "{tag}");
+            assert_eq!(sink.migrations, out.migrations, "{tag}");
+            assert_eq!(stats.max_finish, out.outcome.makespan, "{tag}");
+            assert_eq!(stats.avg_jct(), out.outcome.avg_jct, "{tag}");
+            assert_eq!(stats.slots_simulated, out.outcome.slots_simulated, "{tag}");
+            assert_eq!(stats.periods, out.outcome.periods, "{tag}");
+            assert_eq!(stats.max_pending, out.max_pending, "{tag}");
+            assert_eq!(stats.windows, out.windows, "{tag}");
+            let mut recs = sink.records;
+            recs.sort_by_key(|r| r.job);
+            assert_eq!(recs, out.outcome.records, "{tag}: records (sorted by id)");
+        }
+    }
+}
+
+/// Render the exact streaming aggregates into a [`MetricTable`] — the
+/// shape `streaming_comparison` emits. Built identically from either
+/// source so any drift in the aggregates shows up as a byte diff.
+fn table_from(
+    makespan: u64,
+    avg_jct: f64,
+    util: f64,
+    rejected: u64,
+    migrations: u64,
+) -> MetricTable {
+    let mut t = MetricTable::new(
+        "stream equivalence",
+        "policy",
+        &["makespan", "avg_jct", "util", "rejected", "migrations"],
+    );
+    t.push(
+        "FIFO",
+        vec![makespan as f64, avg_jct, util, rejected as f64, migrations as f64],
+    );
+    t
+}
+
+#[test]
+fn emitted_artifacts_are_byte_identical_across_paths() {
+    // Rung 3 of the ladder, end to end: a lazy stream (never
+    // materialized by the scheduler) vs the classic slice path, rendered
+    // to JSON and CSV. The artifact bytes must agree exactly.
+    let params = ContentionParams::paper();
+    let gen = TraceGenerator::paper_scaled(0.1);
+    let n_jobs = 40;
+    let options = OnlineOptions {
+        max_slots: 10_000_000,
+        admission: AdmissionControl { theta: 6.0, queue_cap: 24 },
+        migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        ..OnlineOptions::default()
+    };
+    for (fabric, cluster) in fabrics() {
+        let stream = OnlineScheduler::open(&cluster, &params)
+            .with_options(options)
+            .run_streaming(
+                gen.open_arrivals(0xbeef, n_jobs, ArrivalProcess::poisson(1.0)),
+                &mut Fifo,
+            );
+        let jobs: Vec<JobSpec> =
+            gen.open_arrivals(0xbeef, n_jobs, ArrivalProcess::poisson(1.0)).collect();
+        let out = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(options)
+            .run(&mut Fifo);
+        let from_stream = table_from(
+            stream.makespan,
+            stream.avg_jct,
+            stream.gpu_utilization,
+            stream.rejected,
+            stream.migrations,
+        );
+        let from_collect = table_from(
+            out.outcome.makespan,
+            out.outcome.avg_jct,
+            out.outcome.gpu_utilization,
+            out.rejected.len() as u64,
+            out.migrations.len() as u64,
+        );
+        assert_eq!(
+            from_stream.to_json().unwrap(),
+            from_collect.to_json().unwrap(),
+            "{fabric}: JSON bytes"
+        );
+        assert_eq!(from_stream.to_csv(), from_collect.to_csv(), "{fabric}: CSV bytes");
+        // push-style writers agree with the buffered forms byte for byte
+        let mut csv = Vec::new();
+        from_stream.write_csv(&mut csv).unwrap();
+        assert_eq!(String::from_utf8(csv).unwrap(), from_collect.to_csv(), "{fabric}");
+        let mut json = Vec::new();
+        from_stream.write_json(&mut json).unwrap();
+        assert_eq!(
+            String::from_utf8(json).unwrap(),
+            from_collect.to_json().unwrap(),
+            "{fabric}"
+        );
+    }
+}

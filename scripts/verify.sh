@@ -8,10 +8,13 @@
 # BENCH_net_alloc.json (progressive-filling allocations/sec +
 # MaxMinFair-vs-EffectiveDegree engine events/sec) and BENCH_obs.json
 # (observability hook overhead: disarmed vs Null-sink vs Mem-sink
-# tracing) so the perf trajectory is recorded across PRs. The final
-# stage emits a real `--trace-out` Chrome-trace file and gates on
-# `rarsched obs-check` validating it (well-formed JSON, known phases,
-# monotone non-negative timestamps).
+# tracing) and BENCH_stream.json (streaming vs materialized engine on the
+# same 10^5-job arrival stream, with the sketch-vs-exact equivalence
+# block gated below) so the perf trajectory is recorded across PRs. The
+# last two stages emit a real `--trace-out` Chrome-trace file gated by
+# `rarsched obs-check` (well-formed JSON, known phases, monotone
+# non-negative timestamps) and run an `online --stream` smoke through the
+# full CLI path, gating on its artifacts and manifest stamp.
 #
 # Failure policy: when cargo is PRESENT, every stage is a hard gate —
 # fmt drift, a build error, a test failure, a missing bench artifact or
@@ -31,7 +34,7 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
-echo "== [1/5] cargo fmt --check =="
+echo "== [1/6] cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     # fmt drift is a hard failure (gated step)
     cargo fmt --all -- --check
@@ -39,13 +42,13 @@ else
     echo "WARN: rustfmt unavailable in this toolchain; fmt gate skipped"
 fi
 
-echo "== [2/5] cargo build --release =="
+echo "== [2/6] cargo build --release =="
 cargo build --release --offline
 
-echo "== [3/5] cargo test -q =="
+echo "== [3/6] cargo test -q =="
 cargo test -q --offline
 
-echo "== [4/5] bench smoke (online_hot_path + sim_engine + net_alloc + obs -> BENCH_*.json) =="
+echo "== [4/6] bench smoke (online_hot_path + sim_engine + net_alloc + obs + stream -> BENCH_*.json) =="
 # cargo runs bench binaries with cwd at the package root (rust/), so pin
 # the output paths to the repo root explicitly.
 RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
@@ -74,8 +77,17 @@ RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_OBS_OUT="$PWD/BENCH_obs.json" \
     cargo bench --offline --bench obs_overhead
 
+# Streaming engine: run_streaming vs materialize-then-run on the same
+# 10^5-job Poisson stream. The bench asserts exact aggregate equality and
+# the 1/32 sketch bound internally; the JSON records them as gateable
+# booleans. (RARSCHED_BENCH_STREAM_FULL=1 adds the 10^6-job x 10^4-server
+# acceptance case — too slow for the per-PR smoke.)
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_STREAM_OUT="$PWD/BENCH_stream.json" \
+    cargo bench --offline --bench stream
+
 for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json \
-                BENCH_net_alloc.json BENCH_obs.json; do
+                BENCH_net_alloc.json BENCH_obs.json BENCH_stream.json; do
     if [ -f "$artifact" ]; then
         echo "OK: $artifact written"
     else
@@ -84,7 +96,20 @@ for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.
     fi
 done
 
-echo "== [5/5] trace export well-formedness (simulate --trace-out -> obs-check) =="
+# The stream bench's equivalence block is the cross-engine contract:
+# exact aggregates bit-identical, sketch p95 within the 1/32 bound. The
+# bench asserts these before writing the file; gate on the recorded
+# booleans (and the provenance stamp) anyway so a hand-edited or stale
+# artifact cannot pass.
+for field in '"sketch_within_bound": *true' '"exact_match": *true' '"manifest"'; do
+    if ! grep -Eq "$field" BENCH_stream.json; then
+        echo "ERROR: BENCH_stream.json missing $field" >&2
+        exit 1
+    fi
+done
+echo "OK: BENCH_stream.json equivalence block gated"
+
+echo "== [5/6] trace export well-formedness (simulate --trace-out -> obs-check) =="
 # Emit a real Chrome trace through the full CLI path, then gate on the
 # validator: well-formed JSON, known phases, non-negative and per-thread
 # monotone timestamps. The sample trace is a throwaway smoke artifact.
@@ -98,5 +123,27 @@ if [ ! -f "$TRACE_SAMPLE" ]; then
 fi
 ./target/release/rarsched obs-check "$TRACE_SAMPLE"
 rm -f "$TRACE_SAMPLE" "$TRACE_SAMPLE.manifest.json"
+
+echo "== [6/6] streaming online smoke (online --stream -> artifacts + manifest) =="
+# The O(active)-memory engine through the full CLI path: a lazy 2000-job
+# stream on the 0.1-scale fabric, artifacts written by the same streaming
+# writers the tests pin byte-identical. Gate on the table artifacts and
+# the provenance stamp landing next to them.
+STREAM_DIR="$PWD/stream_smoke"
+rm -rf "$STREAM_DIR"
+./target/release/rarsched online --stream --stream-jobs 2000 --scale 0.1 \
+    --gap 1.0 --policies fifo,sjf-bco --out "$STREAM_DIR" >/dev/null
+for artifact in online.csv online.json run_manifest.json; do
+    if [ ! -f "$STREAM_DIR/$artifact" ]; then
+        echo "ERROR: online --stream did not emit $artifact" >&2
+        exit 1
+    fi
+done
+if ! grep -q '"seed"' "$STREAM_DIR/run_manifest.json"; then
+    echo "ERROR: streaming run_manifest.json missing its seed stamp" >&2
+    exit 1
+fi
+echo "OK: streaming smoke artifacts + manifest stamp"
+rm -rf "$STREAM_DIR"
 
 echo "verify: all stages passed"
