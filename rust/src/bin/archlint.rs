@@ -1,0 +1,20 @@
+//! Standalone `archlint` binary — the same driver as `rarsched
+//! archlint`, shipped separately so the static-analysis gate can run
+//! (and be cached) without building the full scheduler CLI.
+//!
+//! ```text
+//! archlint [paths…] [--json] [--out LINT.json] [--list-rules]
+//! ```
+//!
+//! Exits non-zero when any finding survives its annotations.
+
+use rarsched::{cli, lint};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let result = cli::Args::parse(&argv).and_then(|args| lint::cli_main(&args));
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

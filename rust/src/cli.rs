@@ -60,6 +60,7 @@ impl Args {
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        // archlint: allow(nondeterminism) both casts are integer→integer; `default` is usize here
         Ok(self.get_u64(key, default as u64)? as usize)
     }
 

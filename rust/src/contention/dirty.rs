@@ -179,6 +179,7 @@ impl DirtySet {
     /// period. `O(touched links × members + dirty)`. Returns the number
     /// of jobs handed to `recompute` (the engines feed it into the
     /// obs dirty-hit/miss counters).
+    // archlint: allow(release-panic) touched_list and per-link member lists are walked by index within their own len
     pub fn drain(
         &mut self,
         mut is_active: impl FnMut(JobId) -> bool,

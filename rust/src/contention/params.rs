@@ -161,9 +161,21 @@ impl ContentionParams {
     }
 
     /// Iterations per slot `φ_j[t] = ⌊ 1 / τ_j[t] ⌋` (paper §4.1).
+    ///
+    /// τ ≤ 0 or NaN is a modelling bug (debug-asserted); release treats
+    /// the job as stalled (`φ = 0`) instead of trusting the float→int
+    /// cast, and a subnormal τ saturates rather than wrapping.
     pub fn phi(&self, tau: f64) -> u64 {
         debug_assert!(tau > 0.0);
-        (1.0 / tau).floor() as u64
+        let rate = 1.0 / tau;
+        if rate.is_nan() || rate <= 0.0 {
+            return 0; // stalled sentinel for invalid τ
+        }
+        if rate >= u64::MAX as f64 {
+            u64::MAX // τ subnormal ⇒ rate overflows: saturate
+        } else {
+            rate.floor() as u64
+        }
     }
 
     /// Paper §5.1 bounds on τ for a given job on a given cluster:

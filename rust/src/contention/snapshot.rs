@@ -97,6 +97,7 @@ impl ContentionSnapshot {
     /// active in this snapshot — use [`try_p_j`](Self::try_p_j) on paths
     /// where a missing job is not a logic error.
     pub fn p_j(&self, j: JobId) -> usize {
+        // archlint: allow(release-panic) documented panicking accessor; try_p_j is the fallible twin
         self.try_p_j(j).expect("job not active in this snapshot")
     }
 
@@ -108,6 +109,7 @@ impl ContentionSnapshot {
 
     /// The job's bottleneck link; panics when the job is not active.
     pub fn bottleneck(&self, j: JobId) -> Bottleneck {
+        // archlint: allow(release-panic) documented panicking accessor; try_bottleneck is the fallible twin
         self.try_bottleneck(j).expect("job not active in this snapshot")
     }
 

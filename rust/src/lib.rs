@@ -139,6 +139,29 @@
 //! (`BENCH_stream.json`), with a 10⁶-job × 10⁴-server case behind
 //! `RARSCHED_BENCH_STREAM_FULL=1`.
 //!
+//! ## Self-hosted static analysis (`lint/`)
+//!
+//! The [`lint`] subsystem (`rarsched archlint`, also built as the
+//! standalone `archlint` binary) mechanizes the ROADMAP architecture
+//! invariants as a dependency-free static-analysis pass over the
+//! repo's own sources: a minimal lexer ([`lint::lexer`] — strips
+//! comments/strings, tracks brace depth, attributes lines to
+//! `fn`/`impl` scopes, detects `#[cfg(test)]` /
+//! `#[cfg(debug_assertions)]` / `debug_assert!` / `if …armed()`
+//! regions) feeding a rule engine ([`lint::rules`]) with one rule per
+//! invariant: `choke-point` (capacity arithmetic stays in
+//! `topology/`+`net/`), `obs-passivity` (hook results never feed a
+//! decision; `trace::instant` sits behind `armed()`), `release-panic`
+//! (hot paths use `Option`/sentinels, the dense-id indexing idiom
+//! `v[id.0]`, or an audited annotation), `nondeterminism` (no
+//! hash-order iteration or unguarded float→int casts), `active-memory`
+//! (online-loop growth only via `Running`/pending/`RunSink`;
+//! side-effect-free `debug_assert!`), and `allow-audit` (annotation
+//! hygiene). Intentional exceptions carry
+//! `// archlint: allow(<rule>) <reason>`; `scripts/verify.sh` gates on
+//! a clean run and its `LINT.json` artifact, and `scripts/lint.sh`
+//! mirrors the top rules in grep/awk for toolchain-less containers.
+//!
 //! ## Environment variables
 //!
 //! All `RARSCHED_*` knobs in one place:
@@ -164,6 +187,7 @@ pub mod contention;
 pub mod experiments;
 pub mod coordinator;
 pub mod jobs;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod obs;

@@ -1,0 +1,897 @@
+//! Minimal Rust lexer for `archlint` — just enough structure to run the
+//! architecture-invariant rules without a real parser (house zero-dep
+//! style, like `util::toml_lite`).
+//!
+//! The lexer makes one character pass and one line pass over a source
+//! file and produces a [`LexedFile`]:
+//!
+//! * per-line **cleaned code** — comments removed, string/char literal
+//!   *contents* stripped (so a rule pattern inside a string constant can
+//!   never fire), raw strings (`r#"…"#`) and nested block comments
+//!   handled — plus the comment text (where `// archlint: allow(…)`
+//!   annotations live);
+//! * **brace depth** at each line start, exact because braces inside
+//!   literals and comments are already gone;
+//! * **regions**: `#[cfg(test)]` items, `#[cfg(debug_assertions)]`
+//!   items, `debug_assert!`-macro bodies (paren-matched, multi-line),
+//!   and `if …armed() { … }` guard bodies;
+//! * **scopes**: every `fn` and `impl` item with its body line range, so
+//!   rules and allow-annotations can attach to a whole function;
+//! * per-file **identifier censuses**: names declared `f64`/`f32`
+//!   (feeds the float→int cast rule) and names declared
+//!   `HashMap`/`HashSet` (feeds the iteration-order rule).
+//!
+//! Everything is heuristic but deterministic; the rules it feeds are
+//! documented as lexical checks, not type-checked analyses.
+
+/// One source line after cleaning.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code with comments removed and literal contents stripped.
+    pub code: String,
+    /// Concatenated `//` comment text on this line (block-comment text
+    /// is dropped; annotations must use plain `//` line comments — doc
+    /// comments are prose and never parsed as annotations).
+    pub comment: String,
+    /// Brace depth at the start of the line.
+    pub depth: usize,
+    /// Inside a `#[cfg(test)]` item (including the attribute line).
+    pub in_test: bool,
+    /// Inside a `#[cfg(debug_assertions)]` item (including the
+    /// attribute line) — compiled out of release builds.
+    pub in_cfg_debug: bool,
+    /// Inside the parenthesized body of a `debug_assert*!` macro.
+    pub in_debug_assert: bool,
+    /// Inside the braces of an `if …armed() { … }` guard (or on the
+    /// line that opens one).
+    pub in_armed_guard: bool,
+    /// Innermost enclosing `fn` scope, as an index into
+    /// [`LexedFile::scopes`].
+    pub fn_scope: Option<usize>,
+}
+
+/// What kind of item a [`Scope`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScopeKind {
+    Fn,
+    Impl,
+}
+
+/// A `fn` or `impl` item with a resolved body range.
+#[derive(Debug, Clone)]
+pub struct Scope {
+    pub kind: ScopeKind,
+    /// `fn` name, or the `impl` header text (e.g. `impl RunSink for X`).
+    pub name: String,
+    /// 1-based line of the `fn`/`impl` keyword.
+    pub header: usize,
+    /// 1-based line of the opening brace.
+    pub body_start: usize,
+    /// 1-based line of the closing brace (inclusive).
+    pub body_end: usize,
+    /// Rules allowed for the whole scope by a fn-level annotation.
+    pub allowed: Vec<String>,
+}
+
+/// Where an allow-annotation applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllowTarget {
+    /// A single line (trailing annotation, or standalone above a plain
+    /// statement).
+    Line(usize),
+    /// A whole `fn` body (standalone annotation directly above the
+    /// header), as an index into [`LexedFile::scopes`].
+    Scope(usize),
+    /// The annotation could not be attached (e.g. at end of file).
+    Dangling,
+}
+
+/// One parsed `// archlint: allow(<rules>) <reason>` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// 1-based line the annotation text sits on.
+    pub line: usize,
+    /// Rule names inside `allow(…)`, comma-separated in the source.
+    pub rules: Vec<String>,
+    /// Free-text justification after the closing paren.
+    pub reason: String,
+    pub target: AllowTarget,
+}
+
+/// A lexed source file: lines, scopes, annotations and name censuses.
+#[derive(Debug, Clone, Default)]
+pub struct LexedFile {
+    /// Path as given to [`lex`] (used verbatim in diagnostics).
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub scopes: Vec<Scope>,
+    pub allows: Vec<Allow>,
+    /// Identifiers declared `f64`/`f32` anywhere in non-test code
+    /// (fields, params, lets) — sorted, deduplicated.
+    pub float_names: Vec<String>,
+    /// Identifiers declared `HashMap`/`HashSet` in non-test code.
+    pub hash_names: Vec<String>,
+}
+
+impl LexedFile {
+    /// The top-level module this file belongs to: the first path segment
+    /// under `src/` (`sim`, `online`, …), or the file stem for files
+    /// directly in `src/` (`main`, `cli`, …).
+    pub fn module(&self) -> &str {
+        let norm = self.path.replace('\\', "/");
+        let tail = match norm.rfind("/src/") {
+            Some(i) => &norm[i + 5..],
+            None => norm.as_str(),
+        };
+        // Borrow from self.path via offsets so the return ties to &self.
+        let start = self.path.len() - tail.len();
+        let tail = &self.path[start..];
+        match tail.find('/') {
+            Some(i) => &tail[..i],
+            None => tail.strip_suffix(".rs").unwrap_or(tail),
+        }
+    }
+
+    /// Does an annotation (line-level or fn-level) allow `rule` on
+    /// 1-based `line`? Returns the allow's index so callers can track
+    /// which annotations were actually used.
+    pub fn allow_covering(&self, rule: &str, line: usize) -> Option<usize> {
+        for (i, a) in self.allows.iter().enumerate() {
+            let rule_match = a.rules.iter().any(|r| r == rule);
+            if !rule_match {
+                continue;
+            }
+            match a.target {
+                AllowTarget::Line(l) if l == line => return Some(i),
+                AllowTarget::Scope(s) => {
+                    if let Some(sc) = self.scopes.get(s) {
+                        if line >= sc.header && line <= sc.body_end {
+                            return Some(i);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// The innermost `fn` scope covering 1-based `line`, if any.
+    pub fn fn_at(&self, line: usize) -> Option<&Scope> {
+        let idx = self.lines.get(line.wrapping_sub(1))?.fn_scope?;
+        self.scopes.get(idx)
+    }
+
+    /// The innermost `impl` scope covering 1-based `line`, if any.
+    pub fn impl_at(&self, line: usize) -> Option<&Scope> {
+        let mut best: Option<&Scope> = None;
+        for sc in &self.scopes {
+            if sc.kind == ScopeKind::Impl && line >= sc.header && line <= sc.body_end {
+                let better = match best {
+                    Some(b) => sc.header > b.header,
+                    None => true,
+                };
+                if better {
+                    best = Some(sc);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Is `c` part of an identifier?
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Find `word` in `s` at an identifier boundary; returns the byte
+/// offset of the first such occurrence.
+pub fn find_word(s: &str, word: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = s.get(from..).and_then(|t| t.find(word)) {
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident(s[..at].chars().next_back().unwrap_or(' '));
+        let after = at + word.len();
+        let after_ok = !s.get(after..).and_then(|t| t.chars().next()).is_some_and(is_ident);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + word.len().max(1);
+    }
+    None
+}
+
+/// Does `s` contain `word` at an identifier boundary?
+pub fn has_word(s: &str, word: &str) -> bool {
+    find_word(s, word).is_some()
+}
+
+// ---------------------------------------------------------------------
+// pass 1: character machine — strip literals and comments
+// ---------------------------------------------------------------------
+
+/// Raw per-line output of the character pass.
+struct RawLine {
+    code: String,
+    comment: String,
+}
+
+fn strip_pass(text: &str) -> Vec<RawLine> {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str,
+        RawStr(usize),
+    }
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(RawLine { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied().unwrap_or(' ');
+                if c == '/' && next == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r' && (next == '"' || next == '#') && !ends_with_ident(&code) {
+                    // raw string r"…" / r#"…"# (possibly after a `b`)
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    let n1 = chars.get(i + 1).copied();
+                    let n2 = chars.get(i + 2).copied();
+                    if n1 == Some('\\') {
+                        // escaped char literal: consume to the closing quote
+                        code.push_str("' '");
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        i = j + 1;
+                    } else if n2 == Some('\'') && n1.is_some() {
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // lifetime — keep the tick, it is inert for rules
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied().unwrap_or(' ');
+                if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // never swallow a newline: an escaped line break must
+                    // still finalize the source line (line numbers!)
+                    if chars.get(i + 1) == Some(&'\n') { i += 1 } else { i += 2 }
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(RawLine { code, comment });
+    lines
+}
+
+/// Does the cleaned buffer end mid-identifier? (distinguishes the `r`
+/// of `r"…"` from the `r` at the end of `for r` or `var`).
+fn ends_with_ident(code: &str) -> bool {
+    // The raw-string test looks at the char *before* the candidate `r`.
+    code.chars().next_back().is_some_and(is_ident)
+}
+
+// ---------------------------------------------------------------------
+// pass 2: regions, scopes, annotations
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RegionKind {
+    Test,
+    CfgDebug,
+    ArmedGuard,
+    FnScope(usize),
+    ImplScope(usize),
+    Other,
+}
+
+/// Lex `text` (the contents of `path`) into a [`LexedFile`].
+pub fn lex(path: &str, text: &str) -> LexedFile {
+    let raw = strip_pass(text);
+    let mut out = LexedFile { path: path.to_string(), ..LexedFile::default() };
+    let mut scopes: Vec<Scope> = Vec::new();
+
+    // region stack entries: (kind, depth before the opening brace)
+    let mut stack: Vec<(RegionKind, usize)> = Vec::new();
+    let mut depth = 0usize;
+    let mut pending_test = false;
+    let mut pending_debug = false;
+    let mut pending_guard = false;
+    // pending fn/impl header: (kind, name, header line)
+    let mut pending_item: Option<(ScopeKind, String, usize)> = None;
+    let mut dbg_assert_parens = 0usize;
+
+    for (idx, rl) in raw.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = rl.code.as_str();
+        let mut line = Line {
+            depth,
+            in_test: pending_test || stack.iter().any(|(k, _)| *k == RegionKind::Test),
+            in_cfg_debug: pending_debug
+                || stack.iter().any(|(k, _)| *k == RegionKind::CfgDebug),
+            in_armed_guard: stack.iter().any(|(k, _)| *k == RegionKind::ArmedGuard),
+            in_debug_assert: dbg_assert_parens > 0,
+            fn_scope: innermost_fn(&stack),
+            ..Line::default()
+        };
+
+        // attribute detection (before walking braces: attrs precede items)
+        if code.contains("#[cfg(") || code.contains("#[cfg_attr(") {
+            if has_word(code, "test") {
+                pending_test = true;
+                line.in_test = true;
+            }
+            if has_word(code, "debug_assertions") && !code.contains("not(debug_assertions)") {
+                pending_debug = true;
+                line.in_cfg_debug = true;
+            }
+        }
+        // armed-guard detection: `if … armed() … {`
+        if has_word(code, "if") && code.contains("armed()") {
+            pending_guard = true;
+        }
+        // item headers
+        if pending_item.is_none() {
+            if let Some(at) = find_word(code, "fn") {
+                let rest = &code[at + 2..];
+                if let Some(name) = leading_ident(rest) {
+                    pending_item = Some((ScopeKind::Fn, name, lineno));
+                }
+            } else if code.trim_start().starts_with("impl")
+                && !is_ident(code.trim_start().chars().nth(4).unwrap_or(' '))
+            {
+                let header = code.trim().trim_end_matches('{').trim().to_string();
+                pending_item = Some((ScopeKind::Impl, header, lineno));
+            }
+        }
+        // debug_assert body start (single region at a time is enough —
+        // debug_asserts do not nest in practice)
+        if dbg_assert_parens == 0 {
+            if let Some(at) = code.find("debug_assert") {
+                let tail = &code[at..];
+                let mut bal = 0isize;
+                let mut opened = false;
+                for c in tail.chars() {
+                    if c == '(' {
+                        bal += 1;
+                        opened = true;
+                    } else if c == ')' {
+                        bal -= 1;
+                    }
+                }
+                line.in_debug_assert = true;
+                if opened && bal > 0 {
+                    dbg_assert_parens = bal as usize;
+                }
+            }
+        } else {
+            let mut bal = dbg_assert_parens as isize;
+            for c in code.chars() {
+                if c == '(' {
+                    bal += 1;
+                } else if c == ')' {
+                    bal -= 1;
+                    if bal == 0 {
+                        break;
+                    }
+                }
+            }
+            dbg_assert_parens = bal.max(0) as usize;
+        }
+
+        // walk braces to maintain depth, open/close regions
+        for c in code.chars() {
+            if c == '{' {
+                let kind = if pending_test {
+                    pending_test = false;
+                    RegionKind::Test
+                } else if pending_debug {
+                    pending_debug = false;
+                    RegionKind::CfgDebug
+                } else if let Some((kind, name, header)) = pending_item.take() {
+                    // the item body also consumes any pending guard flag
+                    pending_guard = false;
+                    let si = scopes.len();
+                    scopes.push(Scope {
+                        kind,
+                        name,
+                        header,
+                        body_start: lineno,
+                        body_end: lineno,
+                        allowed: Vec::new(),
+                    });
+                    match kind {
+                        ScopeKind::Fn => RegionKind::FnScope(si),
+                        ScopeKind::Impl => RegionKind::ImplScope(si),
+                    }
+                } else if pending_guard {
+                    pending_guard = false;
+                    line.in_armed_guard = true;
+                    RegionKind::ArmedGuard
+                } else {
+                    RegionKind::Other
+                };
+                stack.push((kind, depth));
+                depth += 1;
+            } else if c == '}' {
+                depth = depth.saturating_sub(1);
+                while let Some((kind, d)) = stack.last().copied() {
+                    if d >= depth {
+                        stack.pop();
+                        if let RegionKind::FnScope(si) | RegionKind::ImplScope(si) = kind {
+                            if let Some(sc) = scopes.get_mut(si) {
+                                sc.body_end = lineno;
+                            }
+                        }
+                    } else {
+                        break;
+                    }
+                }
+            } else if c == ';' {
+                // a `;` before any `{` ends a brace-less attributed item
+                // or a trait-method signature
+                if stack.last().map_or(true, |(_, d)| *d < depth) {
+                    pending_test = false;
+                    pending_debug = false;
+                    pending_item = None;
+                }
+            }
+        }
+
+        line.code = rl.code.clone();
+        line.comment = rl.comment.clone();
+        out.lines.push(line);
+    }
+    // close any scope left open by unbalanced input
+    for sc in &mut scopes {
+        if sc.body_end < sc.body_start {
+            sc.body_end = out.lines.len();
+        }
+    }
+    out.scopes = scopes;
+    resolve_allows(&mut out);
+    collect_names(&mut out);
+    out
+}
+
+fn innermost_fn(stack: &[(RegionKind, usize)]) -> Option<usize> {
+    stack.iter().rev().find_map(|(k, _)| match k {
+        RegionKind::FnScope(i) => Some(*i),
+        _ => None,
+    })
+}
+
+/// First identifier at the start of `s` (after whitespace).
+fn leading_ident(s: &str) -> Option<String> {
+    let t = s.trim_start();
+    let end = t.find(|c: char| !is_ident(c)).unwrap_or(t.len());
+    let name = &t[..end];
+    let starts_ok = name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_');
+    if starts_ok {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// Parse `archlint: allow(<rules>) <reason>` annotations out of the
+/// comment text and attach each one to a line or fn scope.
+fn resolve_allows(f: &mut LexedFile) {
+    let marker = "archlint: allow(";
+    let n = f.lines.len();
+    let mut allows = Vec::new();
+    for i in 0..n {
+        let comment = f.lines[i].comment.clone();
+        // Doc comments (`///` → leading `/`, `//!` → leading `!`) are
+        // prose — only plain `//` comments carry annotations, so docs
+        // can *describe* the grammar without triggering it.
+        let t = comment.trim_start();
+        if t.starts_with('/') || t.starts_with('!') {
+            continue;
+        }
+        let at = match comment.find(marker) {
+            Some(a) => a,
+            None => continue,
+        };
+        let rest = &comment[at + marker.len()..];
+        let (rules_txt, reason) = match rest.find(')') {
+            Some(close) => (&rest[..close], rest[close + 1..].trim().to_string()),
+            None => (rest, String::new()),
+        };
+        let rules: Vec<String> = rules_txt
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let trailing = !f.lines[i].code.trim().is_empty();
+        let target = if trailing {
+            AllowTarget::Line(i + 1)
+        } else {
+            // standalone: attach to the next code line, skipping empty,
+            // comment-only and attribute lines; fn headers take the
+            // whole scope
+            let mut t = None;
+            for (j, line) in f.lines.iter().enumerate().skip(i + 1) {
+                let code = line.code.trim();
+                if code.is_empty() || code.starts_with("#[") {
+                    continue;
+                }
+                t = Some(j + 1);
+                break;
+            }
+            match t {
+                None => AllowTarget::Dangling,
+                Some(target_line) => {
+                    let scope = f
+                        .scopes
+                        .iter()
+                        .position(|s| s.kind == ScopeKind::Fn && s.header == target_line);
+                    match scope {
+                        Some(si) => AllowTarget::Scope(si),
+                        None => AllowTarget::Line(target_line),
+                    }
+                }
+            }
+        };
+        if let AllowTarget::Scope(si) = target {
+            if let Some(sc) = f.scopes.get_mut(si) {
+                for r in &rules {
+                    if !sc.allowed.contains(r) {
+                        sc.allowed.push(r.clone());
+                    }
+                }
+            }
+        }
+        allows.push(Allow { line: i + 1, rules, reason, target });
+    }
+    f.allows = allows;
+}
+
+/// Collect identifiers declared as floats and as hash collections from
+/// non-test code (declaration heuristics: `name: f64`, `name: &f64`,
+/// `let name = HashMap::new()`, `name: HashMap<…>`).
+fn collect_names(f: &mut LexedFile) {
+    let mut floats = Vec::new();
+    let mut hashes = Vec::new();
+    for line in &f.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        for ty in ["f64", "f32"] {
+            let mut from = 0;
+            while let Some(rel) = code.get(from..).and_then(|t| t.find(ty)) {
+                let at = from + rel;
+                from = at + ty.len();
+                // word boundary on both sides
+                let after_ok =
+                    !code.get(at + ty.len()..).and_then(|t| t.chars().next()).is_some_and(is_ident);
+                if !after_ok {
+                    continue;
+                }
+                if let Some(name) = decl_name_before(code, at) {
+                    push_unique(&mut floats, name);
+                }
+            }
+        }
+        for ty in ["HashMap", "HashSet"] {
+            if let Some(at) = find_word(code, ty) {
+                if let Some(name) = decl_name_before(code, at) {
+                    push_unique(&mut hashes, name);
+                } else if let Some(name) = let_binding_name(code) {
+                    // `let [mut] name = HashMap::new()` / `… = HashSet…`
+                    let eq = code.find('=');
+                    if eq.is_some_and(|e| e < at) {
+                        push_unique(&mut hashes, name);
+                    }
+                }
+            }
+        }
+    }
+    floats.sort();
+    hashes.sort();
+    f.float_names = floats;
+    f.hash_names = hashes;
+}
+
+fn push_unique(v: &mut Vec<String>, s: String) {
+    if !v.contains(&s) {
+        v.push(s);
+    }
+}
+
+/// For a type mention at byte `at`, recover the declared name from the
+/// preceding `name: [&][mut] Type` shape, if present.
+fn decl_name_before(code: &str, at: usize) -> Option<String> {
+    let mut before = code[..at].trim_end();
+    for sigil in ["&mut", "&", "mut"] {
+        if let Some(stripped) = before.strip_suffix(sigil) {
+            before = stripped.trim_end();
+        }
+    }
+    let before = before.strip_suffix(':')?.trim_end();
+    if before.ends_with(':') {
+        return None; // `…::Type` path position, not a declaration
+    }
+    let start = before
+        .rfind(|c: char| !is_ident(c))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let name = &before[start..];
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// The variable a line assigns into: the `let [mut] name` binding, or
+/// for a plain reassignment the last path segment before the `=`
+/// (`self.field = …` → `field`).
+pub fn binding_name(code: &str) -> Option<String> {
+    if let Some(n) = let_binding_name(code) {
+        return Some(n);
+    }
+    let eq = code.find('=')?;
+    let before = code[..eq].trim_end();
+    let start = before
+        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '.'))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let path = &before[start..];
+    let last = path.rsplit('.').next().unwrap_or(path);
+    if last.is_empty() {
+        None
+    } else {
+        Some(last.to_string())
+    }
+}
+
+/// The name bound by a `let [mut] name = …` statement on this line.
+fn let_binding_name(code: &str) -> Option<String> {
+    let at = find_word(code, "let")?;
+    let mut rest = code[at + 3..].trim_start();
+    if let Some(stripped) = rest.strip_prefix("mut ") {
+        rest = stripped.trim_start();
+    }
+    leading_ident(rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let f = lex(
+            "x.rs",
+            "let a = \"has // no comment and a brace {\"; // real comment\nlet b = 1;\n",
+        );
+        assert!(f.lines[0].code.contains("let a"));
+        assert!(!f.lines[0].code.contains("brace"));
+        assert!(!f.lines[0].code.contains('{'));
+        assert!(f.lines[0].comment.contains("real comment"));
+        assert_eq!(f.lines[1].depth, 0, "brace inside string must not change depth");
+    }
+
+    #[test]
+    fn raw_strings_with_quotes_and_braces() {
+        let src = "let re = r#\"quote \" and {{ braces \"#;\nfn after() {\n    1;\n}\n";
+        let f = lex("x.rs", src);
+        assert!(!f.lines[0].code.contains("quote"));
+        assert_eq!(f.lines[1].depth, 0);
+        assert_eq!(f.scopes.len(), 1);
+        assert_eq!(f.scopes[0].name, "after");
+        assert_eq!((f.scopes[0].body_start, f.scopes[0].body_end), (2, 4));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment { */\nlet x = 1;\n";
+        let f = lex("x.rs", src);
+        assert!(f.lines[0].code.trim().is_empty());
+        assert_eq!(f.lines[1].depth, 0);
+        assert!(f.lines[1].code.contains("let x"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "let c = '{';\nlet e = '\\u{41}';\nfn f<'a>(x: &'a str) {\n    1;\n}\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.lines[2].depth, 0, "brace chars must not affect depth");
+        assert_eq!(f.scopes.len(), 1, "lifetimes must not be parsed as char literals");
+        assert_eq!(f.scopes[0].name, "f");
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_mod_and_ends() {
+        let src = "fn live() {\n    1;\n}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        x.unwrap();\n    }\n}\nfn after() {\n    2;\n}\n";
+        let f = lex("x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test, "attribute line is part of the region");
+        assert!(f.lines[6].in_test, "nested fn body is in the region");
+        assert!(!f.lines[9].in_test, "region must end with the mod brace");
+    }
+
+    #[test]
+    fn cfg_debug_assertions_region_and_braceless_item() {
+        let src = "#[cfg(debug_assertions)]\nfn check() {\n    deep();\n}\n#[cfg(debug_assertions)]\nuse std::fmt;\nfn rel() {\n    1;\n}\n";
+        let f = lex("x.rs", src);
+        assert!(f.lines[1].in_cfg_debug);
+        assert!(f.lines[2].in_cfg_debug);
+        assert!(f.lines[5].in_cfg_debug, "attributed brace-less item line is covered");
+        assert!(!f.lines[6].in_cfg_debug, "the `;` must clear the pending attribute");
+        assert!(!f.lines[7].in_cfg_debug);
+    }
+
+    #[test]
+    fn not_debug_assertions_is_release_code() {
+        let src = "#[cfg(not(debug_assertions))]\nfn rel() {\n    1;\n}\n";
+        let f = lex("x.rs", src);
+        assert!(!f.lines[1].in_cfg_debug);
+    }
+
+    #[test]
+    fn debug_assert_bodies_span_lines() {
+        let src = "fn f() {\n    debug_assert!(\n        a == b,\n        \"msg\"\n    );\n    real();\n}\n";
+        let f = lex("x.rs", src);
+        assert!(f.lines[1].in_debug_assert);
+        assert!(f.lines[2].in_debug_assert);
+        assert!(f.lines[4].in_debug_assert);
+        assert!(!f.lines[5].in_debug_assert);
+    }
+
+    #[test]
+    fn armed_guard_region() {
+        let src = "fn f() {\n    if trace::armed() {\n        trace::instant(\"x\", \"y\", &[]);\n    }\n    trace::instant(\"naked\", \"y\", &[]);\n}\n";
+        let f = lex("x.rs", src);
+        assert!(f.lines[1].in_armed_guard, "opening line counts as guarded");
+        assert!(f.lines[2].in_armed_guard);
+        assert!(!f.lines[4].in_armed_guard);
+    }
+
+    #[test]
+    fn fn_scopes_nest_and_attribute_lines() {
+        let src = "impl Foo {\n    pub fn outer(&self) -> usize {\n        let inner = 1;\n        inner\n    }\n}\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.scopes.len(), 2);
+        assert_eq!(f.scopes[0].kind, ScopeKind::Impl);
+        assert_eq!(f.scopes[1].name, "outer");
+        assert_eq!(f.lines[2].fn_scope, Some(1));
+        assert!(f.lines[0].fn_scope.is_none());
+        assert!(f.impl_at(3).is_some());
+    }
+
+    #[test]
+    fn trailing_and_standalone_allows() {
+        let src = "fn f() {\n    x.unwrap(); // archlint: allow(release-panic) guarded above\n    // archlint: allow(release-panic) next line only\n    y.unwrap();\n    z.unwrap();\n}\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].target, AllowTarget::Line(2));
+        assert!(f.allows[0].reason.contains("guarded"));
+        assert_eq!(f.allows[1].target, AllowTarget::Line(4));
+        assert!(f.allow_covering("release-panic", 2).is_some());
+        assert!(f.allow_covering("release-panic", 4).is_some());
+        assert!(f.allow_covering("release-panic", 5).is_none());
+        assert!(f.allow_covering("nondeterminism", 2).is_none());
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_annotations() {
+        let src = "/// grammar: `// archlint: allow(<rule>) <reason>`\n//! also in module docs: archlint: allow(x) y\nfn f() {\n    1;\n}\n";
+        let f = lex("x.rs", src);
+        assert!(f.allows.is_empty(), "doc comments are prose, not annotations");
+    }
+
+    #[test]
+    fn fn_level_allow_covers_the_whole_body() {
+        let src = "// archlint: allow(release-panic) dense arrays sized at build\nfn f(v: &[u64], i: usize) -> u64 {\n    v[i]\n}\nfn g(v: &[u64]) -> u64 {\n    v[0]\n}\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.allows.len(), 1);
+        assert_eq!(f.allows[0].target, AllowTarget::Scope(0));
+        assert!(f.allow_covering("release-panic", 3).is_some());
+        assert!(f.allow_covering("release-panic", 6).is_none(), "g is not covered");
+    }
+
+    #[test]
+    fn float_and_hash_name_censuses() {
+        let src = "struct S {\n    progress: f64,\n    done: u64,\n}\nfn f(tau: f64, n: usize) {\n    let mut seen = HashMap::new();\n    let ordered: BTreeMap<u32, u32> = BTreeMap::new();\n    let _ = (tau, n, seen.len(), ordered.len());\n}\n#[cfg(test)]\nmod tests {\n    fn t(secret: f64) {\n        let _ = secret;\n    }\n}\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.float_names, vec!["progress".to_string(), "tau".to_string()]);
+        assert_eq!(f.hash_names, vec!["seen".to_string()]);
+    }
+
+    #[test]
+    fn module_classification() {
+        assert_eq!(lex("rust/src/sim/engine.rs", "").module(), "sim");
+        assert_eq!(lex("rust/src/online/mod.rs", "").module(), "online");
+        assert_eq!(lex("rust/src/main.rs", "").module(), "main");
+        assert_eq!(lex("/abs/repo/rust/src/net/mod.rs", "").module(), "net");
+    }
+}

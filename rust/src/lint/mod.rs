@@ -1,0 +1,288 @@
+//! `archlint` — the repo's self-hosted static-analysis pass.
+//!
+//! Seven PRs of this codebase were landed under a review-only discipline
+//! (no toolchain in the build container), with every load-bearing
+//! guarantee — the `Topology::multiplier` choke point, passive obs
+//! hooks, sentinel-not-panic hot paths, deterministic emission,
+//! O(active) streaming memory — enforced by convention. `archlint`
+//! mechanizes that review: a dependency-free lexer ([`lexer`]) and rule
+//! engine ([`rules`]) that scan `rust/src` and emit `file:line`
+//! diagnostics, as human text or JSON.
+//!
+//! * `rarsched archlint` (and the standalone `archlint` binary) exit
+//!   non-zero on any unannotated finding; `scripts/verify.sh` runs it as
+//!   a required stage and gates on the `LINT.json` artifact.
+//! * Intentional exceptions carry `// archlint: allow(<rule>) <reason>`
+//!   annotations — trailing (that line), standalone (next line), or
+//!   directly above a `fn` header (the whole body). The `allow-audit`
+//!   rule checks the annotations themselves; `LINT.json` censuses
+//!   used vs stale ones.
+//! * `scripts/lint.sh` mirrors the top rules in grep/awk so the gate
+//!   runs even where cargo does not exist.
+
+pub mod lexer;
+pub mod rules;
+
+pub use lexer::{lex, LexedFile};
+pub use rules::{Finding, RuleInfo, RULES};
+
+use crate::runtime::manifest::RunManifest;
+use crate::util::Json;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// Aggregated result of scanning a file set.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Surviving (unannotated) findings across all files, in scan order.
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub lines_scanned: usize,
+    /// Finding count per rule, in [`RULES`] order (zeros included).
+    pub rule_counts: Vec<(&'static str, usize)>,
+    /// Allow-annotation census: total annotations seen.
+    pub allows_total: usize,
+    /// Annotations that suppressed at least one raw finding.
+    pub allows_used: usize,
+    /// Annotations per rule name (an annotation naming two rules counts
+    /// toward both).
+    pub allow_rule_counts: Vec<(String, usize)>,
+}
+
+impl LintReport {
+    /// Scan one lexed file into the report.
+    pub fn absorb(&mut self, file: &LexedFile) {
+        let (findings, used) = rules::check_file(file);
+        self.files_scanned += 1;
+        self.lines_scanned += file.lines.len();
+        self.allows_total += file.allows.len();
+        self.allows_used += used.iter().filter(|u| **u).count();
+        for a in &file.allows {
+            for r in &a.rules {
+                match self.allow_rule_counts.iter_mut().find(|(n, _)| n == r) {
+                    Some((_, c)) => *c += 1,
+                    None => self.allow_rule_counts.push((r.clone(), 1)),
+                }
+            }
+        }
+        self.findings.extend(findings);
+    }
+
+    /// Finalize per-rule totals (call once after the last `absorb`).
+    pub fn finalize(&mut self) {
+        self.rule_counts = RULES
+            .iter()
+            .map(|r| (r.name, self.findings.iter().filter(|f| f.rule == r.name).count()))
+            .collect();
+        self.allow_rule_counts.sort();
+    }
+
+    /// Human diagnostics: one `file:line: [rule] message` per finding,
+    /// plus a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        out.push_str(&format!(
+            "archlint: {} finding(s) across {} file(s) ({} lines); {} allow annotation(s), {} used\n",
+            self.findings.len(),
+            self.files_scanned,
+            self.lines_scanned,
+            self.allows_total,
+            self.allows_used,
+        ));
+        out
+    }
+
+    /// JSON form of the report, stamped with a [`RunManifest`] so the
+    /// `LINT.json` artifact carries provenance like every `BENCH_*.json`.
+    pub fn to_json(&self, manifest: &RunManifest) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        let rules = self
+            .rule_counts
+            .iter()
+            .map(|(name, count)| (*name, Json::Num(*count as f64)))
+            .collect();
+        let allow_by_rule = self
+            .allow_rule_counts
+            .iter()
+            .map(|(name, count)| (name.as_str(), Json::Num(*count as f64)))
+            .collect();
+        Json::obj(vec![
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("lines_scanned", Json::Num(self.lines_scanned as f64)),
+            ("findings_total", Json::Num(self.findings.len() as f64)),
+            ("rules", Json::obj(rules)),
+            (
+                "allows",
+                Json::obj(vec![
+                    ("total", Json::Num(self.allows_total as f64)),
+                    ("used", Json::Num(self.allows_used as f64)),
+                    (
+                        "unused",
+                        Json::Num((self.allows_total - self.allows_used) as f64),
+                    ),
+                    ("by_rule", Json::obj(allow_by_rule)),
+                ]),
+            ),
+            ("findings", Json::arr(findings)),
+            ("manifest", manifest.to_json()),
+        ])
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for stable
+/// reporting order.
+fn rs_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)
+        .with_context(|| format!("reading {root:?}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under the given roots (files are accepted too)
+/// and return the finalized report.
+pub fn scan_paths(roots: &[PathBuf]) -> Result<LintReport> {
+    let mut files = Vec::new();
+    for r in roots {
+        rs_files(r, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = LintReport::default();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let lexed = lex(&path.to_string_lossy(), &text);
+        report.absorb(&lexed);
+    }
+    report.finalize();
+    Ok(report)
+}
+
+/// Default scan root: `rust/src` from the repo root, or `src` when the
+/// working directory is already the crate (`cargo run` sets cwd to the
+/// package root).
+pub fn default_root() -> PathBuf {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("rust/src")
+}
+
+/// Shared CLI driver for `rarsched archlint` and the `archlint` binary.
+///
+/// Flags: positional scan roots (default `rust/src`), `--json` (machine
+/// report on stdout), `--out <path>` (write the `LINT.json` artifact),
+/// `--list-rules`. Returns an error — and the process a non-zero exit —
+/// when any finding survives its annotations.
+pub fn cli_main(args: &crate::cli::Args) -> Result<()> {
+    if args.get_bool("list-rules") {
+        for r in RULES {
+            println!("{:<14} {}", r.name, r.invariant);
+        }
+        args.reject_unknown()?;
+        return Ok(());
+    }
+    let json_out = args.get_bool("json");
+    let artifact = args.get("out").map(PathBuf::from);
+    let roots: Vec<PathBuf> = if args.positional().is_empty() {
+        vec![default_root()]
+    } else {
+        args.positional().iter().map(PathBuf::from).collect()
+    };
+    args.reject_unknown()?;
+
+    let report = scan_paths(&roots)?;
+    let flags: Vec<String> = std::iter::once("archlint".to_string())
+        .chain(roots.iter().map(|r| r.to_string_lossy().into_owned()))
+        .collect();
+    let manifest = RunManifest::new(0, "", &flags);
+    if let Some(path) = &artifact {
+        std::fs::write(path, report.to_json(&manifest).to_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+    }
+    if json_out {
+        println!("{}", report.to_json(&manifest).to_pretty());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if !report.findings.is_empty() {
+        bail!("archlint: {} finding(s) — fix or annotate (see ROADMAP.md)", report.findings.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates_and_censuses() {
+        let mut report = LintReport::default();
+        let clean = lex(
+            "rust/src/online/a.rs",
+            "fn f(v: &[u64], i: usize) -> u64 {\n    v.get(i).copied().unwrap_or(0)\n}\n",
+        );
+        let dirty = lex(
+            "rust/src/online/b.rs",
+            "fn f(v: &[u64]) -> u64 {\n    v.first().copied().unwrap()\n}\nfn g(v: &[u64], i: usize) -> u64 {\n    v[i] // archlint: allow(release-panic) caller bounds i\n}\n",
+        );
+        report.absorb(&clean);
+        report.absorb(&dirty);
+        report.finalize();
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "release-panic");
+        assert_eq!(report.allows_total, 1);
+        assert_eq!(report.allows_used, 1);
+        let rp = report.rule_counts.iter().find(|(n, _)| *n == "release-panic");
+        assert_eq!(rp.map(|(_, c)| *c), Some(1));
+        let human = report.render_human();
+        assert!(human.contains("rust/src/online/b.rs:2: [release-panic]"));
+        assert!(human.contains("1 finding(s)"));
+    }
+
+    #[test]
+    fn json_report_carries_manifest_and_counts() {
+        let mut report = LintReport::default();
+        report.absorb(&lex("rust/src/sim/a.rs", "fn f() -> u64 {\n    0\n}\n"));
+        report.finalize();
+        let manifest = RunManifest::new(0, "", &["archlint".to_string()]);
+        let json = report.to_json(&manifest);
+        let parsed = Json::parse(&json.to_pretty()).unwrap();
+        assert_eq!(parsed.req("findings_total").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(parsed.req("files_scanned").unwrap().as_u64().unwrap(), 1);
+        assert!(parsed.req("manifest").unwrap().get("git_rev").is_some());
+        assert!(parsed.req("rules").unwrap().get("release-panic").is_some());
+    }
+}

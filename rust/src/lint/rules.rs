@@ -1,0 +1,768 @@
+//! The `archlint` rule set — one rule per architecture invariant (see
+//! ROADMAP.md "Architecture invariants"). Each rule is a lexical check
+//! over a [`LexedFile`]; all diagnostics are `file:line` findings that
+//! can be suppressed by a `// archlint: allow(<rule>) <reason>`
+//! annotation on the line (trailing or directly above) or above the
+//! enclosing `fn`.
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `choke-point` | fabric/rate semantics join at `Topology::multiplier` |
+//! | `obs-passivity` | obs hooks never feed a decision; arming is free |
+//! | `release-panic` | hot paths return `Option`/sentinels, not panics |
+//! | `nondeterminism` | no hash-order iteration or unguarded float→int |
+//! | `active-memory` | online-loop memory stays O(active), not O(trace) |
+//! | `allow-audit` | annotations name real rules and carry a reason |
+
+use super::lexer::{find_word, has_word, LexedFile};
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as scanned (diagnostics print it verbatim).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name from [`RULES`].
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Static rule metadata, used by `--list-rules` and the JSON report.
+pub struct RuleInfo {
+    pub name: &'static str,
+    /// The architecture invariant the rule mechanizes, one line.
+    pub invariant: &'static str,
+}
+
+/// Every rule, in reporting order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "choke-point",
+        invariant: "oversubscription/capacity-ratio arithmetic lives in topology/ and net/; \
+                    everything else consumes Topology::multiplier / Bottleneck::effective()",
+    },
+    RuleInfo {
+        name: "obs-passivity",
+        invariant: "obs hook results never bind into scheduler code, and trace::instant \
+                    sites sit behind the armed() fast path",
+    },
+    RuleInfo {
+        name: "release-panic",
+        invariant: "release-reachable hot paths (sim/, online/, contention/, net/, \
+                    topology/) use Option/sentinel returns, not unwrap/expect/panic or \
+                    unaudited slice indexing",
+    },
+    RuleInfo {
+        name: "nondeterminism",
+        invariant: "no HashMap/HashSet iteration order and no unguarded saturating \
+                    float→int casts on outcome or emission paths",
+    },
+    RuleInfo {
+        name: "active-memory",
+        invariant: "online-loop collections grow only through the Running set, the \
+                    pending queue or the RunSink seam; debug_assert! bodies are \
+                    side-effect-free",
+    },
+    RuleInfo {
+        name: "allow-audit",
+        invariant: "every archlint annotation names known rules and records a reason",
+    },
+];
+
+/// Modules where a release-reachable panic is a finding (the PR 3 bug
+/// class): the simulator, the online loop, and the contention fabric.
+const HOT_MODULES: &[&str] = &["sim", "online", "contention", "net", "topology"];
+
+/// Modules the obs-passivity rule patrols (where scheduler decisions
+/// are made).
+const OBS_MODULES: &[&str] = &["sim", "online", "sched", "contention", "net"];
+
+/// Modules exempt from the choke-point rule: the two that *implement*
+/// capacity semantics, plus passive/reporting and self-referential code.
+const CHOKE_EXEMPT: &[&str] = &["topology", "net", "obs", "util", "lint"];
+
+/// Integer cast targets for the float→int check.
+const INT_TYPES: &[&str] =
+    &["usize", "u8", "u16", "u32", "u64", "u128", "isize", "i8", "i16", "i32", "i64", "i128"];
+
+/// Run every rule over `f`, then filter findings through the allow
+/// annotations. Returns the surviving findings (sorted by line) and a
+/// used-flag per entry of `f.allows`, so the caller can census used vs
+/// stale annotations.
+pub fn check_file(f: &LexedFile) -> (Vec<Finding>, Vec<bool>) {
+    let mut raw = Vec::new();
+    rule_choke_point(f, &mut raw);
+    rule_obs_passivity(f, &mut raw);
+    rule_release_panic(f, &mut raw);
+    rule_nondeterminism(f, &mut raw);
+    rule_active_memory(f, &mut raw);
+
+    let mut used = vec![false; f.allows.len()];
+    let mut kept: Vec<Finding> = Vec::new();
+    for finding in raw {
+        match f.allow_covering(finding.rule, finding.line) {
+            Some(i) => {
+                if let Some(slot) = used.get_mut(i) {
+                    *slot = true;
+                }
+            }
+            None => kept.push(finding),
+        }
+    }
+    // allow-audit runs last and is not itself suppressible
+    rule_allow_audit(f, &mut kept);
+    kept.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.rule.cmp(b.rule)));
+    (kept, used)
+}
+
+fn emit(out: &mut Vec<Finding>, f: &LexedFile, line: usize, rule: &'static str, msg: String) {
+    out.push(Finding { file: f.path.clone(), line, rule, message: msg });
+}
+
+// ---------------------------------------------------------------------
+// rule 1: choke-point
+// ---------------------------------------------------------------------
+
+fn rule_choke_point(f: &LexedFile, out: &mut Vec<Finding>) {
+    if CHOKE_EXEMPT.contains(&f.module()) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        let arithmetic = code.contains('*') || code.contains('/');
+        if !arithmetic {
+            continue;
+        }
+        if code.contains(".oversub") {
+            emit(
+                out,
+                f,
+                i + 1,
+                "choke-point",
+                "oversubscription arithmetic outside topology//net/ — consume \
+                 Topology::multiplier or Bottleneck::effective() instead"
+                    .to_string(),
+            );
+        } else if code.contains("_gbps(") {
+            emit(
+                out,
+                f,
+                i + 1,
+                "choke-point",
+                "capacity-ratio arithmetic outside topology//net/ — route Gbps math \
+                 through net:: or Topology accessors at the choke point"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 2: obs-passivity
+// ---------------------------------------------------------------------
+
+/// Obs namespaces whose *results* must not bind into scheduler code.
+const OBS_PREFIXES: &[&str] =
+    &["obs::", "trace::", "metrics::", "explain::", "timeline::", "crate::obs"];
+
+fn rule_obs_passivity(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !OBS_MODULES.contains(&f.module()) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        // (a) obs result bound to a live (non-`_`) variable
+        if let Some(eq) = assignment_pos(code) {
+            let rhs = code[eq + 1..].trim_start();
+            if OBS_PREFIXES.iter().any(|p| rhs.starts_with(p)) {
+                let name = super::lexer::binding_name(code);
+                let live = name.as_deref().map_or(true, |n| !n.starts_with('_'));
+                if live && rhs.starts_with("trace::span(") {
+                    emit(
+                        out,
+                        f,
+                        i + 1,
+                        "obs-passivity",
+                        "span guard must bind to a `_`-prefixed variable (RAII close, \
+                         never read back)"
+                            .to_string(),
+                    );
+                } else if live {
+                    emit(
+                        out,
+                        f,
+                        i + 1,
+                        "obs-passivity",
+                        "obs hook result bound to a live variable in scheduler code — \
+                         instrumentation must only read state, never feed a decision"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        // (b) instant events outside the armed() fast path
+        if code.contains("trace::instant(") && !line.in_armed_guard {
+            emit(
+                out,
+                f,
+                i + 1,
+                "obs-passivity",
+                "trace::instant call site must sit inside an `if …armed()` guard (the \
+                 disarmed fast path is one relaxed load)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Byte position of a plain `=` assignment (not `==`, `!=`, `<=`, `>=`,
+/// `=>`, or compound `+=`-style operators); `None` if the line has none.
+fn assignment_pos(code: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'=' {
+            continue;
+        }
+        let prev = if i == 0 { b' ' } else { bytes[i - 1] };
+        let next = bytes.get(i + 1).copied().unwrap_or(b' ');
+        if matches!(prev, b'=' | b'!' | b'<' | b'>' | b'+' | b'-' | b'*' | b'/' | b'%' | b'&' | b'|' | b'^') {
+            continue;
+        }
+        if next == b'=' || next == b'>' {
+            continue;
+        }
+        return Some(i);
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// rule 3: release-panic
+// ---------------------------------------------------------------------
+
+/// Panic tokens searched verbatim in cleaned code.
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+fn rule_release_panic(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !HOT_MODULES.contains(&f.module()) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test || line.in_cfg_debug || line.in_debug_assert {
+            continue;
+        }
+        let code = line.code.as_str();
+        for tok in PANIC_TOKENS {
+            if code.contains(tok) {
+                emit(
+                    out,
+                    f,
+                    i + 1,
+                    "release-panic",
+                    format!(
+                        "`{tok}` is release-reachable in a hot-path module — return \
+                         Option/a sentinel (PR 3 tracker precedent) or annotate why it \
+                         cannot fire"
+                    ),
+                );
+            }
+        }
+        for content in index_sites(code) {
+            if blessed_index(&content) {
+                continue;
+            }
+            emit(
+                out,
+                f,
+                i + 1,
+                "release-panic",
+                format!(
+                    "slice indexing `[{content}]` can panic in release — use get()/the \
+                     dense-id idiom (`v[id.0]`, sized at construction) or annotate the \
+                     bound argument"
+                ),
+            );
+        }
+    }
+}
+
+/// Bracket contents of every index expression on the line: a `[` that
+/// directly follows an identifier char, `)` or `]`. Unterminated
+/// brackets (expression continues on the next line) yield `…`.
+fn index_sites(code: &str) -> Vec<String> {
+    let bytes = code.as_bytes();
+    let mut sites = Vec::new();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'[' || i == 0 {
+            continue;
+        }
+        let prev = bytes[i - 1] as char;
+        if !(prev.is_ascii_alphanumeric() || prev == '_' || prev == ')' || prev == ']') {
+            continue;
+        }
+        // find the matching close on this line
+        let mut depth = 1usize;
+        let mut end = None;
+        for (j, &c) in bytes.iter().enumerate().skip(i + 1) {
+            if c == b'[' {
+                depth += 1;
+            } else if c == b']' {
+                depth -= 1;
+                if depth == 0 {
+                    end = Some(j);
+                    break;
+                }
+            }
+        }
+        match end {
+            Some(j) => sites.push(code[i + 1..j].trim().to_string()),
+            None => sites.push("…".to_string()),
+        }
+    }
+    sites
+}
+
+/// The house dense-id idiom: indexing by a newtype id (`v[l.0]`,
+/// `v[job.0]`) or a global GPU ordinal (`busy[g.global]`) into a vector
+/// sized at construction. Documented in ROADMAP.md; everything else
+/// must justify its bound.
+fn blessed_index(content: &str) -> bool {
+    let ok_chars = content.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.');
+    ok_chars && (content.ends_with(".0") || content.ends_with(".global")) && content.len() > 2
+}
+
+// ---------------------------------------------------------------------
+// rule 4: nondeterminism
+// ---------------------------------------------------------------------
+
+/// Iteration forms whose order is hash-seeded.
+const HASH_ITER: &[&str] =
+    &[".iter()", ".iter_mut()", ".into_iter()", ".keys()", ".values()", ".values_mut()", ".drain("];
+
+/// Float-producing method tails that make a cast source fractional.
+const FLOAT_METHODS: &[&str] = &[".floor()", ".ceil()", ".round()", ".sqrt()", ".ln()", ".exp()"];
+
+fn rule_nondeterminism(f: &LexedFile, out: &mut Vec<Finding>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        // (a) hash-order iteration over a declared HashMap/HashSet
+        for name in &f.hash_names {
+            let Some(at) = find_word(code, name) else { continue };
+            let after = &code[at + name.len()..];
+            if HASH_ITER.iter().any(|p| after.starts_with(p)) {
+                emit(
+                    out,
+                    f,
+                    i + 1,
+                    "nondeterminism",
+                    format!(
+                        "iteration over hash-ordered `{name}` — outcomes and emissions \
+                         must not depend on hash order (use BTreeMap/Vec or sort first)"
+                    ),
+                );
+            } else if let Some(inpos) = find_word(code, "in") {
+                let tail = code[inpos + 2..].trim_start();
+                let tail = tail.strip_prefix("&mut ").unwrap_or(tail);
+                let tail = tail.strip_prefix('&').unwrap_or(tail);
+                let matches_name = tail.starts_with(name.as_str())
+                    && !tail[name.len()..]
+                        .chars()
+                        .next()
+                        .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+                if matches_name && has_word(code, "for") {
+                    emit(
+                        out,
+                        f,
+                        i + 1,
+                        "nondeterminism",
+                        format!("`for … in {name}` iterates in hash order"),
+                    );
+                }
+            }
+        }
+        // (b) unguarded saturating float→int `as` casts
+        for (pos, _ty) in int_cast_sites(code) {
+            let src = code[..pos].trim_end();
+            if !float_source(src, &f.float_names) {
+                continue;
+            }
+            let guarded = match f.fn_at(i + 1) {
+                Some(scope) => f
+                    .lines
+                    .iter()
+                    .take(scope.body_end)
+                    .skip(scope.header.saturating_sub(1))
+                    .any(|l| l.code.contains("is_finite") || l.code.contains("is_nan")),
+                None => false,
+            };
+            if !guarded {
+                emit(
+                    out,
+                    f,
+                    i + 1,
+                    "nondeterminism",
+                    "float→int `as` cast saturates silently on NaN/∞ — guard the \
+                     source with is_finite() and an explicit sentinel (see \
+                     sim/kernel.rs::slots_until_done) or annotate the bound"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Byte positions of ` as <int>` casts on the line, with the target type.
+fn int_cast_sites(code: &str) -> Vec<(usize, &'static str)> {
+    let mut sites = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code.get(from..).and_then(|t| t.find(" as ")) {
+        let at = from + rel;
+        from = at + 4;
+        let target = code[at + 4..].trim_start();
+        for ty in INT_TYPES {
+            let hit = target.starts_with(ty)
+                && !target[ty.len()..]
+                    .chars()
+                    .next()
+                    .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+            if hit {
+                sites.push((at, *ty));
+                break;
+            }
+        }
+    }
+    sites
+}
+
+/// Is the expression text ending at a cast fractional? Lexical: a float
+/// method tail, a float literal, or a trailing identifier path whose
+/// last segment was declared `f64`/`f32` in this file.
+fn float_source(src: &str, float_names: &[String]) -> bool {
+    let tail_start = src
+        .rfind(|c: char| matches!(c, '=' | '(' | ',' | '{' | ';'))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let segment = &src[tail_start..];
+    if FLOAT_METHODS.iter().any(|m| segment.contains(m)) {
+        return true;
+    }
+    if has_float_literal(segment) {
+        return true;
+    }
+    // trailing identifier path: `r.progress`, `tau`
+    let path_start = src
+        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '.'))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let path = &src[path_start..];
+    let last = path.rsplit('.').next().unwrap_or(path);
+    !last.is_empty() && float_names.iter().any(|n| n == last)
+}
+
+/// Does `s` contain a `1.5`-style float literal (digit, dot, digit)?
+fn has_float_literal(s: &str) -> bool {
+    let bytes = s.as_bytes();
+    bytes.windows(3).any(|w| {
+        w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit()
+    })
+}
+
+// ---------------------------------------------------------------------
+// rule 5: active-memory
+// ---------------------------------------------------------------------
+
+/// Collection-growth calls patrolled in the online loop.
+const GROWTH: &[&str] = &[".push(", ".push_back(", ".insert(", ".extend(", ".append(", ".resize("];
+
+/// Receivers allowed to grow in `online/mod.rs`: the Running set, the
+/// pending queue and its spec side-table, slot-recycling state, armed
+/// window series, and per-period scratch bounded by the active set.
+const ACTIVE_BLESSED: &[&str] = &[
+    "running",
+    "running_idx",
+    "pending",
+    "pending_specs",
+    "free_slots",
+    "windows",
+    "gs",
+    "busies",
+    "servers",
+    "by_pressure",
+    "queued",
+    "sink",
+];
+
+/// Mutation shapes that make a `debug_assert!` body unsafe to compile
+/// out.
+const MUTATIONS: &[&str] = &[
+    ".push(",
+    ".push_back(",
+    ".insert(",
+    ".remove(",
+    ".pop(",
+    ".clear(",
+    ".drain(",
+    ".extend(",
+    ".swap_remove(",
+    "+=",
+    "-=",
+    "*=",
+    "/=",
+];
+
+fn rule_active_memory(f: &LexedFile, out: &mut Vec<Finding>) {
+    let online_loop = f.path.replace('\\', "/").ends_with("online/mod.rs");
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        // debug_assert! bodies must be side-effect-free (everywhere)
+        if line.in_debug_assert {
+            let body = match code.find("debug_assert") {
+                Some(at) => &code[at..],
+                None => code,
+            };
+            if MUTATIONS.iter().any(|m| body.contains(m)) {
+                emit(
+                    out,
+                    f,
+                    i + 1,
+                    "active-memory",
+                    "debug_assert! body mutates state — the check vanishes in release \
+                     builds, taking the side effect with it"
+                        .to_string(),
+                );
+            }
+        }
+        if !online_loop {
+            continue;
+        }
+        // per-job collection growth outside the blessed receivers
+        for g in GROWTH {
+            let Some(at) = code.find(g) else { continue };
+            let receiver = receiver_name(&code[..at]);
+            if ACTIVE_BLESSED.iter().any(|b| *b == receiver) {
+                continue;
+            }
+            // the RunSink seam: sinks choose fold-or-collect themselves
+            let in_sink_impl =
+                f.impl_at(i + 1).is_some_and(|imp| imp.name.contains("RunSink"));
+            if in_sink_impl {
+                continue;
+            }
+            emit(
+                out,
+                f,
+                i + 1,
+                "active-memory",
+                format!(
+                    "`{receiver}{g}…)` grows a collection in the online loop — per-job \
+                     state must live in Running/pending (freed on completion) or flow \
+                     through the RunSink seam (O(active) memory invariant)"
+                ),
+            );
+        }
+    }
+}
+
+/// Last path segment of the receiver before a method call:
+/// `stats.windows` → `windows`, `self.events` → `events`.
+fn receiver_name(before: &str) -> String {
+    let start = before
+        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '.'))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let path = &before[start..];
+    path.rsplit('.').next().unwrap_or(path).to_string()
+}
+
+// ---------------------------------------------------------------------
+// rule 6: allow-audit
+// ---------------------------------------------------------------------
+
+fn rule_allow_audit(f: &LexedFile, out: &mut Vec<Finding>) {
+    for a in &f.allows {
+        if a.rules.is_empty() {
+            emit(
+                out,
+                f,
+                a.line,
+                "allow-audit",
+                "malformed annotation: `archlint: allow(<rule>[, <rule>…]) <reason>`"
+                    .to_string(),
+            );
+            continue;
+        }
+        for r in &a.rules {
+            if !RULES.iter().any(|info| info.name == r) {
+                emit(
+                    out,
+                    f,
+                    a.line,
+                    "allow-audit",
+                    format!("unknown rule `{r}` in allow annotation"),
+                );
+            }
+        }
+        if a.reason.len() < 3 {
+            emit(
+                out,
+                f,
+                a.line,
+                "allow-audit",
+                "allow annotation needs a reason after the closing paren".to_string(),
+            );
+        }
+        if a.target == super::lexer::AllowTarget::Dangling {
+            emit(
+                out,
+                f,
+                a.line,
+                "allow-audit",
+                "allow annotation attaches to no code line".to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        check_file(&lex(path, src)).0
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn index_site_extraction() {
+        assert_eq!(index_sites("v[l.0] = x[i + 1];"), vec!["l.0".to_string(), "i + 1".to_string()]);
+        assert_eq!(index_sites("#[cfg(test)]"), Vec::<String>::new());
+        assert_eq!(index_sites("let t: [u64; 4] = a;"), Vec::<String>::new());
+        assert!(blessed_index("l.0"));
+        assert!(blessed_index("g.global"));
+        assert!(!blessed_index("a.1"));
+        assert!(!blessed_index("idx"));
+        assert!(!blessed_index("s..e"));
+    }
+
+    #[test]
+    fn assignment_pos_skips_comparisons() {
+        assert!(assignment_pos("if a == b {").is_none());
+        assert!(assignment_pos("a <= b; c >= d; e != f").is_none());
+        assert!(assignment_pos("x += 1;").is_none());
+        assert!(assignment_pos("Some(x) => y,").is_none());
+        assert!(assignment_pos("let x = 1;").is_some());
+    }
+
+    #[test]
+    fn float_source_heuristics() {
+        let floats = vec!["progress".to_string()];
+        assert!(float_source("let idx = (p / 100.0).round()", &floats));
+        assert!(float_source("r.progress", &floats));
+        assert!(float_source("x * 1.5", &floats));
+        assert!(!float_source("windows.len()", &floats));
+        assert!(!float_source("slot", &floats));
+    }
+
+    #[test]
+    fn choke_point_flags_and_passes() {
+        let bad = "fn f(b: &Bottleneck) -> f64 {\n    2.0 * b.oversub\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/sim/x.rs", bad)), vec!["choke-point"]);
+        // the blessed accessor and exempt modules pass
+        let good = "fn f(b: &Bottleneck) -> f64 {\n    2.0 * b.effective()\n}\n";
+        assert!(findings("rust/src/sim/x.rs", good).is_empty());
+        assert!(findings("rust/src/topology/x.rs", bad).is_empty(), "topology/ is exempt");
+    }
+
+    #[test]
+    fn obs_passivity_flags_and_passes() {
+        let bad = "fn f() {\n    let n = metrics::get(metrics::Counter::X);\n    let _ = n;\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/online/x.rs", bad)), vec!["obs-passivity"]);
+        let naked = "fn f() {\n    trace::instant(\"e\", \"c\", &[]);\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/online/x.rs", naked)), vec!["obs-passivity"]);
+        let good = "fn f() {\n    let _span = trace::span(\"e\", \"c\");\n    if trace::armed() {\n        trace::instant(\"e\", \"c\", &[]);\n    }\n}\n";
+        assert!(findings("rust/src/online/x.rs", good).is_empty());
+        assert!(findings("rust/src/metrics/x.rs", bad).is_empty(), "only decision modules");
+    }
+
+    #[test]
+    fn release_panic_flags_and_passes() {
+        let bad = "fn f(v: &[u64]) -> u64 {\n    v.first().copied().unwrap()\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/online/x.rs", bad)), vec!["release-panic"]);
+        let idx = "fn f(v: &[u64], i: usize) -> u64 {\n    v[i + 1]\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/net/x.rs", idx)), vec!["release-panic"]);
+        let good = "fn f(v: &[u64], l: LinkId) -> u64 {\n    debug_assert!(l.0 < v.len());\n    v[l.0]\n}\n";
+        assert!(findings("rust/src/net/x.rs", good).is_empty(), "dense-id idiom is blessed");
+        let test_only = "#[cfg(test)]\nmod tests {\n    fn t(v: &[u64]) -> u64 {\n        v[9].max(v.first().copied().unwrap())\n    }\n}\n";
+        assert!(findings("rust/src/net/x.rs", test_only).is_empty());
+        let annotated = "fn f(v: &[u64], i: usize) -> u64 {\n    v[i % v.len()] // archlint: allow(release-panic) modulo keeps i in range\n}\n";
+        assert!(findings("rust/src/net/x.rs", annotated).is_empty());
+        assert!(findings("rust/src/sched/x.rs", bad).is_empty(), "only hot-path modules");
+    }
+
+    #[test]
+    fn nondeterminism_flags_and_passes() {
+        let bad = "fn f() {\n    let mut seen = HashMap::new();\n    seen.insert(1, 2);\n    for (k, v) in seen.iter() {\n        emit(k, v);\n    }\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/metrics/x.rs", bad)), vec!["nondeterminism"]);
+        let cast = "struct S {\n    progress: f64,\n}\nfn f(s: &S) -> u64 {\n    s.progress as u64\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/metrics/x.rs", cast)), vec!["nondeterminism"]);
+        let guarded = "struct S {\n    progress: f64,\n}\nfn f(s: &S) -> u64 {\n    if !s.progress.is_finite() {\n        return 0;\n    }\n    s.progress as u64\n}\n";
+        assert!(findings("rust/src/metrics/x.rs", guarded).is_empty());
+        let btree = "fn f() {\n    let mut seen = BTreeMap::new();\n    seen.insert(1, 2);\n    for (k, v) in seen.iter() {\n        emit(k, v);\n    }\n}\n";
+        assert!(findings("rust/src/metrics/x.rs", btree).is_empty());
+    }
+
+    #[test]
+    fn active_memory_flags_and_passes() {
+        let bad = "fn run_core() {\n    let mut all_records = Vec::new();\n    all_records.push(1);\n}\n";
+        assert_eq!(
+            rules_of(&findings("rust/src/online/mod.rs", bad)),
+            vec!["active-memory"]
+        );
+        let blessed = "fn run_core() {\n    let mut pending = Vec::new();\n    pending.push(1);\n    let mut free_slots = Vec::new();\n    free_slots.push(2);\n}\n";
+        assert!(findings("rust/src/online/mod.rs", blessed).is_empty());
+        let sink_impl = "impl RunSink for CollectSink {\n    fn record(&mut self, r: u64) {\n        self.records.push(r);\n    }\n}\n";
+        assert!(findings("rust/src/online/mod.rs", sink_impl).is_empty(), "RunSink seam is the sink's choice");
+        let elsewhere = "fn f() {\n    let mut anything = Vec::new();\n    anything.push(1);\n}\n";
+        assert!(findings("rust/src/online/tracker.rs", elsewhere).is_empty(), "only the loop file");
+        let dbg = "fn f(v: &mut Vec<u64>) {\n    debug_assert!(v.pop().is_some());\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/sim/x.rs", dbg)), vec!["active-memory"]);
+        let dbg_ok = "fn f(v: &[u64]) {\n    debug_assert!(v.len() > 1);\n}\n";
+        assert!(findings("rust/src/sim/x.rs", dbg_ok).is_empty());
+    }
+
+    #[test]
+    fn allow_audit_flags_unknown_rules_and_missing_reasons() {
+        let unknown = "fn f(v: &[u64]) -> u64 {\n    v.first().copied().unwrap_or(0) // archlint: allow(no-such-rule) whatever\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/util/x.rs", unknown)), vec!["allow-audit"]);
+        let bare = "fn f() {\n    g(); // archlint: allow(release-panic)\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/util/x.rs", bare)), vec!["allow-audit"]);
+        let fine = "fn f(v: &[u64], i: usize) -> u64 {\n    v[i] // archlint: allow(release-panic) i is bounds-checked by the caller\n}\n";
+        assert!(findings("rust/src/online/x.rs", fine).is_empty());
+    }
+
+    #[test]
+    fn used_allow_census() {
+        let src = "fn f(v: &[u64], i: usize) -> u64 {\n    v[i] // archlint: allow(release-panic) bounded by caller\n}\n// archlint: allow(release-panic) stale — nothing fires here\nfn g() -> u64 {\n    0\n}\n";
+        let (kept, used) = check_file(&lex("rust/src/online/x.rs", src));
+        assert!(kept.is_empty());
+        assert_eq!(used, vec![true, false]);
+    }
+}

@@ -100,6 +100,14 @@ COMMANDS:
   obs-check  <trace.json>  validate a --trace-out artifact: well-formed
              chrome-trace JSON, known phases, non-negative and per-thread
              monotone timestamps (exit 1 otherwise)
+  archlint   [paths…] [--json] [--out LINT.json] [--list-rules]
+             self-hosted static analysis of the repo's own sources
+             (default root rust/src): mechanizes the ROADMAP architecture
+             invariants — choke-point capacity arithmetic, obs passivity,
+             release-reachable panics, hash-order/float-cast
+             nondeterminism, O(active) online-loop memory. Exit 1 on any
+             finding not covered by an `// archlint: allow(<rule>)
+             <reason>` annotation. Also built standalone as `archlint`.
   help       print this message
 ";
 
@@ -138,6 +146,7 @@ fn main() {
         "train" => cmd_train(&args),
         "verify" => cmd_verify(&args),
         "obs-check" => cmd_obs_check(&args),
+        "archlint" => rarsched::lint::cli_main(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())

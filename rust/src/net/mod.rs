@@ -188,11 +188,13 @@ pub struct Allocation {
 
 impl Allocation {
     /// Max-min rate of one ring, if it was part of the fill.
+    // archlint: allow(release-panic) position() over jobs yields an index valid for the parallel rates vec
     pub fn rate_of(&self, job: JobId) -> Option<f64> {
         self.jobs.iter().position(|&j| j == job).map(|i| self.rates[i])
     }
 
     /// Bottleneck fair share of one ring, if it was part of the fill.
+    // archlint: allow(release-panic) position() over jobs yields an index valid for the parallel shares vec
     pub fn share_of(&self, job: JobId) -> Option<f64> {
         self.jobs.iter().position(|&j| j == job).map(|i| self.shares[i])
     }
@@ -278,6 +280,7 @@ pub struct AllocScratch {
 /// `O(rounds × L + Σ span)` with `rounds ≤` the number of rings; all
 /// buffers come from `scratch` and the returned [`Allocation`]'s vectors
 /// are freshly filled (callers may retain it).
+// archlint: allow(release-panic) arena spans and per-link vecs are built in this fn; every index derives from them
 pub fn progressive_fill<'p>(
     topo: &Topology,
     rings: impl Iterator<Item = (JobId, &'p JobPlacement)>,

@@ -95,6 +95,7 @@ impl EventLog {
     ///    └──────▶ Rejected                      (both terminal)
     /// ```
     pub fn is_causally_ordered(&self) -> bool {
+        // archlint: allow(release-panic) windows(2) yields exactly-2 slices
         if self.events.windows(2).any(|w| w[0].at > w[1].at) {
             return false;
         }

@@ -189,13 +189,14 @@ impl WindowSample {
 /// GPUs regardless of how hot they run). Shared by every
 /// migration-candidate stage.
 fn coolest_sum(busies: &mut Vec<f64>, gpus: usize) -> f64 {
-    busies.sort_by(|a, b| a.partial_cmp(b).expect("busy history is finite"));
+    busies.sort_by(|a, b| a.total_cmp(b));
     busies.iter().take(gpus).sum()
 }
 
 /// Distribute one constant-rate period `[t, t+dt)` across the window
 /// buckets it overlaps (buckets are created on demand, so idle gaps
 /// appear as all-zero windows).
+// archlint: allow(release-panic) the while loop grows windows to cover idx before indexing it
 fn account_window(
     windows: &mut Vec<WindowSample>,
     w: u64,
@@ -323,6 +324,7 @@ pub struct StreamSink {
 
 impl RunSink for StreamSink {
     fn event(&mut self, _at: u64, _job: JobId, kind: EventKind) {
+        // archlint: allow(release-panic) kind.index() < EventKind::COUNT, the array's length
         self.event_counts[kind.index()] += 1;
     }
 
@@ -432,6 +434,7 @@ pub struct StreamOutcome {
 impl StreamOutcome {
     /// Number of events of one kind.
     pub fn event_count(&self, kind: EventKind) -> u64 {
+        // archlint: allow(release-panic) kind.index() < EventKind::COUNT, the array's length
         self.event_counts[kind.index()]
     }
 
@@ -663,8 +666,7 @@ impl<'a> OnlineScheduler<'a> {
             let mut gs: Vec<GpuId> = state.free_gpus_of(self.cluster, s).collect();
             gs.sort_by(|a, b| {
                 busy_history[a.global]
-                    .partial_cmp(&busy_history[b.global])
-                    .expect("busy history is finite")
+                    .total_cmp(&busy_history[b.global])
                     .then(a.index.cmp(&b.index))
             });
             gs.truncate(gpus);
@@ -860,7 +862,13 @@ impl<'a> OnlineScheduler<'a> {
             //    Arrival → Rejected and is gone (an open system's caller
             //    retries elsewhere — there is no hidden backlog).
             while arrivals.peek().map_or(false, |s| s.borrow().arrival <= t) {
-                let spec = arrivals.next().expect("peeked arrival exists");
+                // peek() just returned Some, so next() cannot be None —
+                // but the hot loop degrades to "stop revealing" rather
+                // than panicking if an iterator ever misbehaves.
+                let Some(spec) = arrivals.next() else {
+                    debug_assert!(false, "peeked arrival vanished");
+                    break;
+                };
                 let (id, at, gpus) = {
                     let s = spec.borrow();
                     (s.id, s.arrival, s.gpus)
@@ -888,6 +896,7 @@ impl<'a> OnlineScheduler<'a> {
                     } else if self.options.admission.queue_full(pending.len()) {
                         Some((explain::RejectReason::QueueFull, -1.0, -1.0))
                     } else if self.options.admission.theta.is_finite() {
+                        // archlint: allow(obs-passivity) counter delta feeds only the WhatifPerArrival histogram, never a decision
                         let whatif_before = metrics::get(metrics::Counter::WhatifCalls);
                         let projected = self.projected_bottleneck(
                             &state,
@@ -953,21 +962,25 @@ impl<'a> OnlineScheduler<'a> {
             //    (ClusterState::allocate asserts freeness).
             let mut started_any = false;
             while !pending.is_empty() {
+                // `pending` and `pending_specs` move in lockstep; a
+                // missing spec is a corrupted queue (debug-asserted),
+                // degraded in release to "that job is not offered".
                 let queued: Vec<QueuedJob<'_>> = pending
                     .iter()
-                    .map(|(job, arrival)| QueuedJob {
-                        spec: pending_specs
-                            .get(&job)
-                            .expect("queued job has a pending spec")
-                            .borrow(),
-                        waited: t - arrival,
+                    .filter_map(|(job, arrival)| {
+                        let spec = pending_specs.get(&job);
+                        debug_assert!(spec.is_some(), "queued job has a pending spec");
+                        Some(QueuedJob { spec: spec?.borrow(), waited: t - arrival })
                     })
                     .collect();
                 let view = ClusterView::new(self.cluster, &state, &busy_history, t);
                 let Some((job, placement)) = policy.dispatch(&queued, &view) else { break };
                 drop(queued);
                 assert!(pending.remove(job), "policy dispatched {job} which is not queued");
-                let spec = pending_specs.remove(&job).expect("dispatched job has a spec");
+                let Some(spec) = pending_specs.remove(&job) else {
+                    debug_assert!(false, "dispatched job has a pending spec");
+                    continue;
+                };
                 assert_eq!(
                     placement.num_workers(),
                     spec.borrow().gpus,
@@ -988,6 +1001,7 @@ impl<'a> OnlineScheduler<'a> {
                 if rate_cache {
                     dirty.on_admit(topo, sjob, &placement);
                 }
+                // archlint: allow(release-panic) slot came from free_slots or just grew running_idx
                 running_idx[slot as usize] = running.len();
                 sink.event(t, job, EventKind::Start);
                 started_any = true;
@@ -1095,6 +1109,7 @@ impl<'a> OnlineScheduler<'a> {
                 let rerated = dirty.drain(
                     |j| running_idx.get(j.0).map_or(false, |&i| i != usize::MAX),
                     |j| {
+                        // archlint: allow(release-panic) is_active filter above admits only live slots
                         let r = &mut running[running_idx[j.0]];
                         r.rate = kernel::rate_point(
                             self.params,
@@ -1175,6 +1190,7 @@ impl<'a> OnlineScheduler<'a> {
             let mut completed_any = false;
             let mut i = 0;
             while i < running.len() {
+                // archlint: allow(release-panic) loop condition bounds i; swap_remove re-checks it
                 if running[i].progress >= running[i].spec.borrow().iterations as f64 {
                     let r = running.swap_remove(i);
                     let sjob = JobId(r.slot as usize);
@@ -1197,8 +1213,10 @@ impl<'a> OnlineScheduler<'a> {
                     if rate_cache {
                         dirty.on_complete(topo, &r.placement);
                     }
+                    // archlint: allow(release-panic) slots index running_idx by construction (allocated above)
                     running_idx[r.slot as usize] = usize::MAX;
                     if i < running.len() {
+                        // archlint: allow(release-panic) slots index running_idx by construction (allocated above)
                         running_idx[running[i].slot as usize] = i;
                     }
                     free_slots.push(r.slot);
@@ -1243,9 +1261,8 @@ impl<'a> OnlineScheduler<'a> {
                     })
                     .collect();
                 by_pressure.sort_by(|a, b| {
-                    b.0.partial_cmp(&a.0)
-                        .expect("effective degrees are finite")
-                        .then(running[a.1].job.cmp(&running[b.1].job))
+                    // archlint: allow(release-panic) by_pressure holds enumerate() indices of running
+                    b.0.total_cmp(&a.0).then(running[a.1].job.cmp(&running[b.1].job))
                 });
                 let mut moved = 0usize;
                 for (_, idx) in by_pressure {
@@ -1253,6 +1270,7 @@ impl<'a> OnlineScheduler<'a> {
                         break;
                     }
                     let (job, sjob, gpus, cur_bn, remaining) = {
+                        // archlint: allow(release-panic) idx is an enumerate() index; no removal since
                         let r = &running[idx];
                         if t < r.freeze_until {
                             continue; // still restarting from an earlier move
@@ -1309,18 +1327,20 @@ impl<'a> OnlineScheduler<'a> {
                     }
                     // guard 2: completion-time gain net of restart cost
                     // (shared kernel arithmetic, same rates the loop uses)
+                    // archlint: allow(release-panic) idx is an enumerate() index; no removal since
+                    let mover = &running[idx];
                     let old_rate = kernel::rate_point(
                         self.params,
                         self.cluster,
-                        running[idx].spec.borrow(),
-                        &running[idx].placement,
+                        mover.spec.borrow(),
+                        &mover.placement,
                         cur_bn,
                         self.options.fractional_progress,
                     );
                     let new_rate = kernel::rate_point(
                         self.params,
                         self.cluster,
-                        running[idx].spec.borrow(),
+                        mover.spec.borrow(),
                         &candidate,
                         new_bn,
                         self.options.fractional_progress,
@@ -1346,11 +1366,11 @@ impl<'a> OnlineScheduler<'a> {
                     // the old links plus an admission on the new ones —
                     // the migrant re-rates via the admit half, old
                     // link-sharers via the touched old links.
-                    state.release(job, &running[idx].placement);
+                    state.release(job, &mover.placement);
                     state.allocate(job, &candidate);
                     tracker.migrate(sjob, &candidate);
                     if rate_cache {
-                        dirty.on_migrate(topo, sjob, &running[idx].placement, &candidate);
+                        dirty.on_migrate(topo, sjob, &mover.placement, &candidate);
                     }
                     sink.event(t, job, EventKind::Migrated);
                     metrics::incr(metrics::Counter::MigrationCommits);
@@ -1379,6 +1399,7 @@ impl<'a> OnlineScheduler<'a> {
                         to_effective: new_bn.effective(),
                         restart_slots: mig.restart_slots,
                     });
+                    // archlint: allow(release-panic) idx is an enumerate() index; no removal since
                     let r = &mut running[idx];
                     r.placement = candidate;
                     r.freeze_until = t.saturating_add(mig.restart_slots);
@@ -1406,7 +1427,7 @@ impl<'a> OnlineScheduler<'a> {
                     workers: r.placement.num_workers(),
                     max_p: r.max_p,
                     mean_tau: r.tau_sum / r.tau_slots.max(1) as f64,
-                    iterations_done: r.progress as u64,
+                    iterations_done: kernel::completed_iterations(r.progress),
                     migrations: r.migrations,
                 },
             );

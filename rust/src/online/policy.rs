@@ -183,7 +183,7 @@ impl OnlinePolicy for FifoBackfill {
         if let Some(gpus) = first_fit_free(view, head.spec.gpus) {
             return Some((head.spec.id, JobPlacement::new(gpus)));
         }
-        for q in &queue[1..] {
+        for q in queue.iter().skip(1) {
             if q.spec.gpus < head.spec.gpus {
                 if let Some(gpus) = first_fit_free(view, q.spec.gpus) {
                     return Some((q.spec.id, JobPlacement::new(gpus)));

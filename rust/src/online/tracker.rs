@@ -105,6 +105,7 @@ impl ContentionTracker {
     /// Admit one job: `O(path)` count updates along its crossed links.
     ///
     /// Panics if the job is already active.
+    // archlint: allow(release-panic) count histogram is sized num_gpus+2 and counts are bounded by active rings
     pub fn admit(&mut self, job: JobId, placement: &JobPlacement) {
         if self.active.len() <= job.0 {
             self.active.resize(job.0 + 1, None);
@@ -139,6 +140,7 @@ impl ContentionTracker {
     /// builds deliberately degrade to a reported no-op instead of tearing
     /// down a long-lived scheduler process — callers observe the `None`
     /// and the debug cross-check catches any count desync in CI.
+    // archlint: allow(release-panic) count histogram is sized num_gpus+2 and counts are bounded by active rings
     pub fn complete(&mut self, job: JobId) -> Option<JobPlacement> {
         let slot = self.active.get_mut(job.0).and_then(Option::take);
         debug_assert!(slot.is_some(), "{job} not active in tracker");
@@ -249,6 +251,7 @@ impl ContentionTracker {
         if bn.link.is_none() {
             f64::INFINITY
         } else {
+            // archlint: allow(choke-point) report-only conversion of a Topology-computed degree to Gbps
             self.topology.reference_gbps() / bn.effective()
         }
     }

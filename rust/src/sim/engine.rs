@@ -169,6 +169,7 @@ impl<'a> Simulator<'a> {
     /// [`run`](Self::run) with caller-owned [`SimScratch`]: every engine
     /// buffer is reused across calls, so replaying many candidate plans
     /// (the planners' bisection loops) allocates only the output records.
+    // archlint: allow(release-panic) event loop walks dense scratch vecs and a specs map keyed by the plan's own entries
     pub fn run_with<'p>(&self, scratch: &mut SimScratch, plan: &'p Plan) -> SimOutcome {
         use crate::obs::{metrics, timeline, trace};
         let use_tracker = self.options.contention == ContentionMode::TrackerDirtySet;
@@ -461,7 +462,7 @@ impl<'a> Simulator<'a> {
                 workers: a.placement.num_workers(),
                 max_p: a.max_p,
                 mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
-                iterations_done: a.progress as u64,
+                iterations_done: kernel::completed_iterations(a.progress),
                 migrations: 0,
             });
         }

@@ -88,6 +88,22 @@ pub fn slots_until_done(remaining: f64, inc: f64) -> u64 {
     }
 }
 
+/// Iterations completed so far, as reported in a truncated-job record:
+/// a guarded `progress → u64` cast. Progress is accumulated as f64 (it
+/// can be fractional under `fractional_progress`), so the horizon-flush
+/// paths must not trust a raw `as` cast — NaN and negative values clamp
+/// to 0, and anything at or above `u64::MAX` saturates.
+pub fn completed_iterations(progress: f64) -> u64 {
+    if progress.is_nan() || progress <= 0.0 {
+        return 0;
+    }
+    if progress >= u64::MAX as f64 {
+        u64::MAX // +∞ included: saturate rather than trust the cast
+    } else {
+        progress as u64
+    }
+}
+
 /// Completion-time estimate for a job that must pay a checkpoint-restart
 /// penalty of `restart_slots` before resuming at rate `inc`: the shared
 /// arithmetic behind the migration decision (saturating — a stalled rate
@@ -188,6 +204,17 @@ mod tests {
         assert_eq!(slots_until_done(1.0e30, 1.0e-9), u64::MAX);
         // a large-but-representable count still passes through
         assert_eq!(slots_until_done(1.0e12, 1.0), 1_000_000_000_000);
+    }
+
+    #[test]
+    fn completed_iterations_guards_the_cast() {
+        assert_eq!(completed_iterations(0.0), 0);
+        assert_eq!(completed_iterations(41.9), 41, "truncates, never rounds up");
+        assert_eq!(completed_iterations(-3.0), 0, "negative progress clamps");
+        assert_eq!(completed_iterations(f64::NAN), 0, "NaN clamps, not UB-ish 0-cast");
+        assert_eq!(completed_iterations(f64::INFINITY), u64::MAX, "∞ saturates");
+        assert_eq!(completed_iterations(1.0e30), u64::MAX, "past u64::MAX saturates");
+        assert_eq!(completed_iterations(1.0e12), 1_000_000_000_000);
     }
 
     #[test]

@@ -69,8 +69,11 @@ pub(crate) fn percentile_of_sorted(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    // NaN / negative p clamps to rank 0; the cast is then in-range and
+    // the final `.min` + direct last() keeps the lookup panic-free.
+    let idx = if rank.is_nan() || rank <= 0.0 { 0 } else { rank.round() as usize };
+    sorted.get(idx.min(sorted.len() - 1)).copied().unwrap_or(0)
 }
 
 /// A sorted view over one metric's values: sort **once**, answer any

@@ -249,6 +249,7 @@ impl Topology {
     /// `tor_gbps`. `tor_gbps > uplink_gbps` models a relief link the
     /// scalar-oversub form cannot express; the `EffectiveDegree`
     /// multiplier clamps its ratio at 1.
+    // archlint: allow(release-panic) constructor fills link vectors it just sized (l < num_links by construction)
     pub fn racks_gbps(
         num_servers: usize,
         servers_per_rack: usize,
@@ -294,6 +295,7 @@ impl Topology {
     }
 
     /// A 3-tier fabric with absolute link speeds per tier.
+    // archlint: allow(release-panic) constructor fills link vectors it just sized (l < num_links by construction)
     pub fn pods_gbps(
         num_servers: usize,
         servers_per_rack: usize,
@@ -439,6 +441,7 @@ impl Topology {
     /// Pod index of a rack. Without a pod tier every rack is its own
     /// "pod" (same degenerate rule as [`rack_index`](Self::rack_index)).
     pub fn pod_of_rack(&self, rack: usize) -> usize {
+        // archlint: allow(release-panic) pod_of is sized num_racks at construction; rack ids are dense
         if self.pod_of.is_empty() { rack } else { self.pod_of[rack] }
     }
 
@@ -464,6 +467,7 @@ impl Topology {
     /// Visit every link crossed by `placement`'s ring — the generalized
     /// Eq. 6 indicator `0 < Σ_{s ∈ sub(ℓ)} y_js < G_j` — in `O(span)` with
     /// no allocation. Co-located jobs cross nothing.
+    // archlint: allow(release-panic) rack_of/pod_of are dense id maps sized at construction
     pub fn for_each_crossed(&self, placement: &JobPlacement, mut f: impl FnMut(LinkId)) {
         if !placement.is_spread() {
             return; // span 1: every subtree holds all or none of the workers
@@ -755,6 +759,7 @@ impl std::str::FromStr for TopologySpec {
                         tor_oversub: parse_oversub(tor_o)?,
                         pod_oversub: parse_oversub(pod_o)?,
                     }),
+                    // archlint: allow(release-panic) match arm guarded by rest.len() <= 2 above
                     _ => unreachable!("guarded by rest.len() <= 2"),
                 }
             }

@@ -180,6 +180,7 @@ impl Iterator for OpenArrivals {
         if let Some((on, off)) = self.process.window() {
             if off > 0 {
                 let cycle = on + off;
+                // archlint: allow(nondeterminism) t is a finite monotone clock (mean_gap finite, u >= 1e-12)
                 let slot = self.t as u64;
                 let phase = slot % cycle;
                 if phase >= on {
@@ -187,6 +188,7 @@ impl Iterator for OpenArrivals {
                 }
             }
         }
+        // archlint: allow(nondeterminism) t is a finite monotone clock (mean_gap finite, u >= 1e-12)
         let arrival = self.t as u64;
         let u: f64 = self.rng.gen_f64().max(1e-12);
         self.t += -self.process.mean_gap() * u.ln();
@@ -306,6 +308,7 @@ impl TraceGenerator {
                         // slot keeps the gate exact (arrivals are
                         // slot-quantised anyway).
                         let cycle = on + off;
+                        // archlint: allow(nondeterminism) t is a finite monotone clock (mean_gap finite, u >= 1e-12)
                         let slot = t as u64;
                         let phase = slot % cycle;
                         if phase >= on {
@@ -313,6 +316,7 @@ impl TraceGenerator {
                         }
                     }
                 }
+                // archlint: allow(nondeterminism) t is a finite monotone clock (mean_gap finite, u >= 1e-12)
                 row.arrival = t as u64;
                 // exponential inter-arrival via inverse CDF
                 let u: f64 = rng.gen_f64().max(1e-12);

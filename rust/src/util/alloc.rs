@@ -16,6 +16,12 @@
 //! binaries keep the plain system allocator — zero overhead unless a
 //! test asks for the tally.
 
+// The one sanctioned `unsafe` island in the workspace: implementing
+// `GlobalAlloc` is inherently unsafe, and the impl only forwards to
+// `System` plus relaxed atomic tallies. The workspace-level
+// `unsafe_code = "deny"` ([workspace.lints.rust]) is overridden here.
+#![allow(unsafe_code)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,0 +1,162 @@
+//! `archlint` acceptance suite: a must-flag / must-pass fixture pair for
+//! every rule, exercised through the public [`rarsched::lint`] API
+//! exactly the way the CLI drives it — plus the **self-clean gate**: the
+//! crate's own sources under `src/` scan to zero findings, so the
+//! architecture invariants the rules mechanize are not aspirational.
+//!
+//! The fixture sources live inline (lexer input is plain text); each
+//! pair pins both directions of a rule so a future lexer or rule edit
+//! cannot silently widen (false positives on idiomatic code) or narrow
+//! (real violations slipping through) the gate.
+
+use rarsched::lint::{self, lexer, rules};
+use std::path::PathBuf;
+
+/// Rule names of the surviving findings for `src` lexed as `path`.
+fn flagged(path: &str, src: &str) -> Vec<&'static str> {
+    let (findings, _used) = rules::check_file(&lexer::lex(path, src));
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn choke_point_pair() {
+    // must flag: oversub arithmetic in a scheduler module
+    let bad = "fn f(b: &Bottleneck) -> f64 {\n    b.p as f64 * b.oversub\n}\n";
+    assert_eq!(flagged("rust/src/sched/x.rs", bad), vec!["choke-point"]);
+    // must pass: same arithmetic through the blessed accessor, and the
+    // implementing modules themselves
+    let good = "fn f(b: &Bottleneck) -> f64 {\n    1.0 / b.effective()\n}\n";
+    assert!(flagged("rust/src/sched/x.rs", good).is_empty());
+    assert!(flagged("rust/src/topology/x.rs", bad).is_empty());
+    assert!(flagged("rust/src/net/x.rs", bad).is_empty());
+}
+
+#[test]
+fn obs_passivity_pair() {
+    // must flag: hook result feeding scheduler state, naked instant
+    let bound = "fn f() -> u64 {\n    let calls = metrics::get(metrics::Counter::X);\n    calls\n}\n";
+    assert_eq!(flagged("rust/src/sim/x.rs", bound), vec!["obs-passivity"]);
+    let naked = "fn f() {\n    trace::instant(\"e\", \"cat\", &[]);\n}\n";
+    assert_eq!(flagged("rust/src/online/x.rs", naked), vec!["obs-passivity"]);
+    // must pass: RAII `_span` guard, armed() gate, non-decision module
+    let good = "fn f() {\n    let _span = trace::span(\"e\", \"cat\");\n    if trace::armed() {\n        trace::instant(\"e\", \"cat\", &[]);\n    }\n}\n";
+    assert!(flagged("rust/src/online/x.rs", good).is_empty());
+    assert!(flagged("rust/src/obs/x.rs", bound).is_empty(), "obs/ is not a decision module");
+}
+
+#[test]
+fn release_panic_pair() {
+    // must flag: unwrap and raw indexing on a hot path
+    let bad = "fn f(v: &[u64], i: usize) -> u64 {\n    v[i + 1] + v.first().copied().unwrap()\n}\n";
+    let rules_hit = flagged("rust/src/contention/x.rs", bad);
+    assert_eq!(rules_hit, vec!["release-panic", "release-panic"]);
+    // must pass: dense-id idiom, debug regions, annotations, cold module
+    let good = "fn f(v: &[u64], l: LinkId, g: GpuId) -> u64 {\n    debug_assert!(l.0 < v.len());\n    v[l.0] + v[g.global]\n}\n";
+    assert!(flagged("rust/src/contention/x.rs", good).is_empty());
+    let annotated = "fn f(v: &[u64], i: usize) -> u64 {\n    v[i % v.len()] // archlint: allow(release-panic) modulo bounds the index\n}\n";
+    assert!(flagged("rust/src/contention/x.rs", annotated).is_empty());
+    assert!(flagged("rust/src/experiments/x.rs", bad).is_empty(), "not a hot-path module");
+    let debug_only = "#[cfg(debug_assertions)]\nfn check(v: &[u64]) {\n    assert_eq!(v.first().copied().unwrap(), 0);\n}\n";
+    assert!(flagged("rust/src/sim/x.rs", debug_only).is_empty(), "compiled out of release");
+}
+
+#[test]
+fn nondeterminism_pair() {
+    // must flag: hash-order iteration and an unguarded float→int cast
+    let hash = "fn f() {\n    let mut seen = HashMap::new();\n    seen.insert(1u32, 2u32);\n    for (k, v) in seen.iter() {\n        emit(k, v);\n    }\n}\n";
+    assert_eq!(flagged("rust/src/metrics/x.rs", hash), vec!["nondeterminism"]);
+    let cast = "struct S {\n    tau: f64,\n}\nfn f(s: &S) -> u64 {\n    s.tau as u64\n}\n";
+    assert_eq!(flagged("rust/src/metrics/x.rs", cast), vec!["nondeterminism"]);
+    // must pass: ordered container, guarded cast
+    let btree = "fn f() {\n    let mut seen = BTreeMap::new();\n    seen.insert(1u32, 2u32);\n    for (k, v) in seen.iter() {\n        emit(k, v);\n    }\n}\n";
+    assert!(flagged("rust/src/metrics/x.rs", btree).is_empty());
+    let guarded = "struct S {\n    tau: f64,\n}\nfn f(s: &S) -> u64 {\n    if !s.tau.is_finite() {\n        return 0;\n    }\n    s.tau as u64\n}\n";
+    assert!(flagged("rust/src/metrics/x.rs", guarded).is_empty());
+}
+
+#[test]
+fn active_memory_pair() {
+    // must flag: unbounded growth in the online loop, mutating debug_assert
+    let grow = "fn run_core() {\n    let mut all = Vec::new();\n    all.push(1u64);\n}\n";
+    assert_eq!(flagged("rust/src/online/mod.rs", grow), vec!["active-memory"]);
+    let dbg = "fn f(v: &mut Vec<u64>) {\n    debug_assert!(v.pop().is_some());\n}\n";
+    assert_eq!(flagged("rust/src/sim/x.rs", dbg), vec!["active-memory"]);
+    // must pass: the blessed receivers, the RunSink seam, other files
+    let blessed = "fn run_core() {\n    let mut pending = Vec::new();\n    pending.push(1u64);\n    let mut free_slots = Vec::new();\n    free_slots.push(2u64);\n}\n";
+    assert!(flagged("rust/src/online/mod.rs", blessed).is_empty());
+    let sink = "impl RunSink for CollectSink {\n    fn record(&mut self, r: u64) {\n        self.records.push(r);\n    }\n}\n";
+    assert!(flagged("rust/src/online/mod.rs", sink).is_empty());
+    assert!(flagged("rust/src/online/policy.rs", grow).is_empty(), "rule scopes to the loop file");
+}
+
+#[test]
+fn allow_audit_pair() {
+    // must flag: unknown rule name, missing reason (and the audit itself
+    // cannot be suppressed by an annotation)
+    let unknown = "fn f() {\n    g(); // archlint: allow(not-a-rule) some reason\n}\n";
+    assert_eq!(flagged("rust/src/util/x.rs", unknown), vec!["allow-audit"]);
+    let bare = "fn f() {\n    g(); // archlint: allow(release-panic)\n}\n";
+    assert_eq!(flagged("rust/src/util/x.rs", bare), vec!["allow-audit"]);
+    // must pass: well-formed annotation (even if currently unused — the
+    // used/stale census is reporting, not a finding)
+    let fine = "fn f() {\n    g(); // archlint: allow(release-panic) g is infallible here\n}\n";
+    assert!(flagged("rust/src/util/x.rs", fine).is_empty());
+}
+
+#[test]
+fn multi_rule_annotations_and_fn_scope() {
+    // one annotation naming two rules suppresses both on the target line
+    let src = "struct S {\n    tau: f64,\n}\nfn f(s: &S, v: &[u64], i: usize) -> u64 {\n    // archlint: allow(release-panic, nondeterminism) i and tau are validated by the caller\n    v[i] + s.tau as u64\n}\n";
+    assert!(flagged("rust/src/sim/x.rs", src).is_empty());
+    // a fn-header annotation covers every line of the body, nothing after
+    let scoped = "// archlint: allow(release-panic) dense arrays sized at construction\nfn f(v: &[u64], i: usize, j: usize) -> u64 {\n    v[i] + v[j]\n}\nfn g(v: &[u64], i: usize) -> u64 {\n    v[i]\n}\n";
+    assert_eq!(flagged("rust/src/sim/x.rs", scoped), vec!["release-panic"]);
+}
+
+#[test]
+fn self_clean_gate() {
+    // The crate's own sources must scan clean: zero unannotated findings
+    // over everything under src/. This is the acceptance criterion that
+    // turns the rules from documentation into an enforced invariant.
+    let root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let report = lint::scan_paths(&[root]).expect("scan src/");
+    assert!(
+        report.files_scanned > 50,
+        "expected the whole crate, scanned {} files",
+        report.files_scanned
+    );
+    let rendered = report.render_human();
+    assert!(
+        report.findings.is_empty(),
+        "archlint findings in the crate's own sources:\n{rendered}"
+    );
+    // every annotation in the tree must actually suppress something —
+    // stale allows rot into misdocumentation
+    assert_eq!(
+        report.allows_total, report.allows_used,
+        "stale allow annotation(s): {} total, {} used\n{rendered}",
+        report.allows_total, report.allows_used
+    );
+}
+
+#[test]
+fn report_json_shape_for_the_artifact_gate() {
+    // verify.sh greps LINT.json for these fields; pin the shape here so
+    // the artifact and the gate cannot drift apart.
+    let root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src/lint"));
+    let report = lint::scan_paths(&[root]).expect("scan src/lint");
+    let manifest = rarsched::runtime::manifest::RunManifest::new(0, "", &["archlint".to_string()]);
+    let json = report.to_json(&manifest).to_pretty();
+    let parsed = rarsched::util::Json::parse(&json).expect("LINT.json parses");
+    assert_eq!(parsed.req("findings_total").unwrap().as_u64().unwrap(), 0);
+    assert!(parsed.req("files_scanned").unwrap().as_u64().unwrap() >= 3);
+    for rule in rules::RULES {
+        assert!(
+            parsed.req("rules").unwrap().get(rule.name).is_some(),
+            "rules.{} missing from LINT.json",
+            rule.name
+        );
+    }
+    assert!(parsed.req("allows").unwrap().get("unused").is_some());
+    assert!(parsed.req("manifest").unwrap().get("git_rev").is_some());
+}

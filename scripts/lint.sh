@@ -1,0 +1,173 @@
+#!/usr/bin/env bash
+# scripts/lint.sh — toolchain-free fallback for the top archlint rules.
+#
+# The real analyzer is `rarsched archlint` (rust/src/lint/): a lexing
+# rule engine with comment/string stripping, region tracking and an
+# allow-audit. This script mirrors its three highest-signal rules in
+# portable awk so a container WITHOUT cargo still has an executable
+# lint gate:
+#
+#   release-panic   — .unwrap()/.expect(/panic!/unreachable!/todo!/
+#                     unimplemented! in hot-path modules
+#                     (sim/ online/ contention/ net/ topology/)
+#   obs-binding     — `let name = metrics::get(...)` / `let name = obs::…`
+#                     in decision modules (sim/ online/ sched/
+#                     contention/ net/): observability results must not
+#                     feed scheduling state (underscore bindings pass)
+#   hash-iteration  — iterating a locally-declared HashMap/HashSet
+#                     (.iter()/.keys()/.values()/.drain()/`for … in &m`):
+#                     hash order is nondeterministic; use BTreeMap or
+#                     sort first
+#
+# Shared exclusions, mirroring the analyzer:
+#   * test regions: from a `#[cfg(test)]` line to end-of-file
+#   * `debug_assert`/`#[cfg(debug_assertions)]` lines (compiled out of
+#     release builds)
+#   * lines covered by an `// archlint: allow(<rule>…) reason`
+#     annotation — trailing on the same line, standalone on the
+#     previous line, or a standalone annotation on a `fn` header which
+#     covers the whole body (tracked by brace depth)
+#
+# The fallback is deliberately cruder than the analyzer (no string
+# stripping, no float census); it must stay a SUBSET: anything it flags,
+# archlint flags too. Exit 0 = clean, 1 = findings, 2 = usage error.
+#
+# Usage: scripts/lint.sh [root-dir]    # default rust/src, then src
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ROOT="${1:-}"
+if [ -z "$ROOT" ]; then
+    if [ -d rust/src ]; then ROOT=rust/src; else ROOT=src; fi
+fi
+if [ ! -d "$ROOT" ]; then
+    echo "lint.sh: no such directory: $ROOT" >&2
+    exit 2
+fi
+
+AWK_PROG='
+# Two passes over the same file: pass 1 builds the HashMap/HashSet name
+# census, pass 2 lints. mawk-compatible (no \< word boundaries).
+
+NR == FNR {
+    line = $0
+    # the census must not see test-only declarations
+    if (line ~ /#\[cfg\(test\)\]/) { census_test = 1 }
+    if (census_test) { next }
+    # census: `name: HashMap<` / `name: HashSet<` declarations and
+    # `let [mut] name = HashMap::…` bindings; `use …::HashMap` has no
+    # ":" or "=" before the type name so it never matches.
+    if (match(line, /[a-z_][a-z0-9_]*[ \t]*:[ \t]*Hash(Map|Set)[ \t]*</)) {
+        name = substr(line, RSTART, RLENGTH)
+        sub(/[ \t]*:.*/, "", name)
+        hash[name] = 1
+    }
+    if (match(line, /let[ \t]+(mut[ \t]+)?[a-z_][a-z0-9_]*[ \t]*=[ \t]*Hash(Map|Set)/)) {
+        name = substr(line, RSTART, RLENGTH)
+        sub(/^let[ \t]+/, "", name)
+        sub(/^mut[ \t]+/, "", name)
+        sub(/[ \t]*=.*/, "", name)
+        hash[name] = 1
+    }
+    next
+}
+
+# ---- pass 2: lint ----
+{
+    raw = $0
+
+    # test region: house style keeps `#[cfg(test)] mod tests` last.
+    if (raw ~ /#\[cfg\(test\)\]/) { in_test = 1 }
+    if (in_test) { next }
+
+    # allow annotations: trailing covers its own line; standalone covers
+    # the next code line (and the whole body when that line is a fn
+    # header). Doc comments (///, //!) are prose, not annotations.
+    allowed = 0
+    if (raw ~ /\/\/[ \t]*archlint:[ \t]*allow\(/ && raw !~ /\/\/[\/!]/) {
+        allowed = 1
+        if (raw ~ /^[ \t]*\/\//) { pending = 1; next }
+    }
+    if (pending) { allowed = 1 }
+
+    # strip line comments (crude: breaks on "//" inside strings — fine
+    # for a fallback; the analyzer strips properly)
+    code = raw
+    sub(/\/\/.*/, "", code)
+    if (code ~ /^[ \t]*$/) { next }
+    # attribute lines between a standalone allow and its target do not
+    # consume the pending coverage
+    if (code !~ /^[ \t]*#\[/) { pending = 0 }
+
+    # brace-depth bookkeeping for fn-scope coverage
+    depth_before = depth
+    tmp = code; depth += gsub(/\{/, "", tmp)
+    tmp = code; depth -= gsub(/\}/, "", tmp)
+    if (fn_cover && depth_before <= fn_cover_depth) { fn_cover = 0 }
+    if (allowed && code ~ /(^|[ \t])fn[ \t]/) {
+        fn_cover = 1
+        fn_cover_depth = depth_before
+    }
+    if (fn_cover) { allowed = 1 }
+    if (allowed) { next }
+
+    # debug-only lines are compiled out of release builds
+    if (code ~ /debug_assert|cfg\(debug_assertions\)/) { next }
+
+    # release-panic: hot-path modules only
+    if (hot && code ~ /\.unwrap\(\)|\.expect\(|(^|[^a-z_])panic!|unreachable!|(^|[^a-z_])todo!|unimplemented!/) {
+        printf "%s:%d: [release-panic] panicking construct on a hot path: %s\n", path, FNR, trim(code)
+        findings++
+    }
+
+    # obs-binding: decision modules; `let _x =` (inspection) passes
+    if (dec && code ~ /let[ \t]+(mut[ \t]+)?[a-zA-Z][a-zA-Z0-9_]*[ \t]*=[ \t]*(metrics::get|obs::)/) {
+        printf "%s:%d: [obs-binding] observability result bound in a decision module: %s\n", path, FNR, trim(code)
+        findings++
+    }
+
+    # hash-iteration: any censused HashMap/HashSet name iterated
+    for (name in hash) {
+        if (code ~ ("(^|[^A-Za-z0-9_])" name "\\.(iter|iter_mut|keys|values|values_mut|drain|into_iter)\\(") ||
+            code ~ ("(^|[ \t])in[ \t]+&(mut[ \t]+)?" name "([^A-Za-z0-9_]|$)")) {
+            printf "%s:%d: [hash-iteration] hash-order iteration over `%s`: %s\n", path, FNR, name, trim(code)
+            findings++
+        }
+    }
+}
+
+function trim(s) { sub(/^[ \t]+/, "", s); sub(/[ \t]+$/, "", s); return s }
+
+END { exit (findings > 0 ? 1 : 0) }
+'
+
+files=0
+findings_files=0
+status=0
+out=""
+# find -print | sort keeps the report order stable across filesystems
+for f in $(find "$ROOT" -name '*.rs' | sort); do
+    files=$((files + 1))
+    case "$f" in
+        */sim/*|*/online/*|*/contention/*|*/net/*|*/topology/*) hot=1 ;;
+        *) hot=0 ;;
+    esac
+    case "$f" in
+        */sim/*|*/online/*|*/sched/*|*/contention/*|*/net/*) dec=1 ;;
+        *) dec=0 ;;
+    esac
+    if ! file_out=$(awk -v path="$f" -v hot="$hot" -v dec="$dec" "$AWK_PROG" "$f" "$f"); then
+        status=1
+        findings_files=$((findings_files + 1))
+    fi
+    [ -n "$file_out" ] && out="${out}${file_out}
+"
+done
+
+if [ "$status" -ne 0 ]; then
+    printf '%s' "$out"
+    echo "lint.sh: findings in $findings_files of $files files — fix or annotate (// archlint: allow(<rule>) reason)" >&2
+    exit 1
+fi
+echo "lint.sh: $files files clean (fallback rules: release-panic, obs-binding, hash-iteration)"
