@@ -1,0 +1,169 @@
+//! Fault-injection overhead and recovery throughput: the online loop
+//! with no fault trace, with the **empty** trace attached (the
+//! equivalence-by-construction case — must cost nothing and change
+//! nothing), and under a full storm (server crash/recover + link
+//! degrade/restore) with recovery in both modes (wait-for-home vs
+//! migration-armed re-placement).
+//!
+//! The empty-trace case is cross-checked bit-identical against the
+//! fault-free baseline here (on top of `tests/fault_equivalence.rs`),
+//! and the storm cases report the fault ledger (kills, recoveries, mean
+//! recovery wait) alongside wall time.
+//!
+//! Results are written to `BENCH_faults.json` (override with
+//! `RARSCHED_BENCH_FAULTS_OUT`) so `scripts/verify.sh` can gate on the
+//! manifest stamp and the equivalence flag across PRs.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::faults::{FaultSpec, FaultTrace};
+use rarsched::jobs::JobSpec;
+use rarsched::online::{
+    Fifo, MigrationControl, OnlineOptions, OnlineOutcome, OnlineScheduler,
+};
+use rarsched::runtime::RunManifest;
+use rarsched::topology::Topology;
+use rarsched::trace::{ArrivalProcess, TraceGenerator};
+use rarsched::util::bench::Bench;
+use rarsched::util::Json;
+
+struct Case {
+    name: String,
+    mean_ms: f64,
+    fault_events: usize,
+    failed: u64,
+    recovered: u64,
+    avg_recovery_wait: f64,
+    makespan: u64,
+    truncated: bool,
+}
+
+impl Case {
+    fn new(name: &str, mean_ms: f64, trace_len: usize, out: &OnlineOutcome) -> Self {
+        Case {
+            name: name.to_string(),
+            mean_ms,
+            fault_events: trace_len,
+            failed: out.failed,
+            recovered: out.recovered,
+            avg_recovery_wait: if out.recovered == 0 {
+                0.0
+            } else {
+                out.recovery_wait_slots as f64 / out.recovered as f64
+            },
+            makespan: out.outcome.makespan,
+            truncated: out.outcome.truncated,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("fault_events", Json::Num(self.fault_events as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("recovered", Json::Num(self.recovered as f64)),
+            ("avg_recovery_wait", Json::Num(self.avg_recovery_wait)),
+            ("makespan", Json::Num(self.makespan as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+        ])
+    }
+}
+
+fn main() {
+    let params = ContentionParams::paper();
+    let gen = TraceGenerator::tiny();
+    let mut b = Bench::new("faults");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // 16 rack-attached servers under a steady tiny-mix arrival stream:
+    // enough concurrency that most crashes land on a resident gang.
+    let servers = 16;
+    let n_jobs = 10_000;
+    let seed = 0x5eed;
+    let cluster = Cluster::uniform(servers, 8, 1.0, 25.0)
+        .with_topology(Topology::racks(servers, 4, 2.0));
+    let jobs: Vec<JobSpec> =
+        gen.open_arrivals(seed, n_jobs, ArrivalProcess::poisson(1.0)).collect();
+    let opts = OnlineOptions { max_slots: 100_000_000, ..OnlineOptions::default() };
+    let migrate = OnlineOptions {
+        migration: MigrationControl { enabled: true, ..MigrationControl::default() },
+        ..opts
+    };
+
+    // faults across the whole expected run (~n_jobs slots of arrivals)
+    let spec: FaultSpec = "server:5000:500,link:4000:800:0.3".parse().unwrap();
+    let storm = spec.generate(&cluster, 20_000, seed);
+    let empty = FaultTrace::empty();
+
+    let sched = OnlineScheduler::new(&cluster, &jobs, &params).with_options(opts);
+    let baseline = sched.run(&mut Fifo);
+    let r = b.run("baseline/no-faults", || sched.run(&mut Fifo).outcome.makespan);
+    cases.push(Case::new("baseline/no-faults", r.mean_ms(), 0, &baseline));
+
+    let armed_empty = OnlineScheduler::new(&cluster, &jobs, &params)
+        .with_options(opts)
+        .with_faults(&empty);
+    let empty_out = armed_empty.run(&mut Fifo);
+    let r = b.run("empty-trace", || armed_empty.run(&mut Fifo).outcome.makespan);
+    cases.push(Case::new("empty-trace", r.mean_ms(), 0, &empty_out));
+
+    // equivalence by construction: the empty trace is bit-identical
+    let exact = baseline.outcome.makespan == empty_out.outcome.makespan
+        && baseline.outcome.avg_jct == empty_out.outcome.avg_jct
+        && baseline.outcome.periods == empty_out.outcome.periods
+        && baseline.events.events() == empty_out.events.events();
+    assert!(exact, "empty fault trace diverged from the fault-free baseline");
+    println!(
+        "  -> equivalence OK: makespan {}, avg_jct {:.2}, {} events",
+        baseline.outcome.makespan,
+        baseline.outcome.avg_jct,
+        baseline.events.len()
+    );
+
+    for (name, options) in [("storm/rigid", opts), ("storm/migrate", migrate)] {
+        let stormy = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(options)
+            .with_faults(&storm);
+        let out = stormy.run(&mut Fifo);
+        assert!(out.failed > 0, "{name}: storm never killed a gang; retune the spec");
+        let r = b.run(name, || stormy.run(&mut Fifo).outcome.makespan);
+        cases.push(Case::new(name, r.mean_ms(), storm.len(), &out));
+        println!(
+            "  -> {name}: {} kills, {} recoveries, makespan {}{}",
+            out.failed,
+            out.recovered,
+            out.outcome.makespan,
+            if out.outcome.truncated { " (TRUNCATED)" } else { "" }
+        );
+    }
+    b.report();
+
+    let json = Json::obj(vec![
+        ("suite", Json::Str("faults".into())),
+        ("cases", Json::arr(cases.iter().map(Case::to_json).collect())),
+        (
+            "equivalence",
+            Json::obj(vec![
+                ("empty_trace_exact_match", Json::Bool(exact)), // asserted above
+                ("makespan", Json::Num(baseline.outcome.makespan as f64)),
+                ("avg_jct", Json::Num(baseline.outcome.avg_jct)),
+            ]),
+        ),
+        (
+            "manifest",
+            RunManifest::new(
+                seed,
+                "bench:faults",
+                &std::env::args().skip(1).collect::<Vec<_>>(),
+            )
+            .to_json(),
+        ),
+    ]);
+    let out = std::env::var("RARSCHED_BENCH_FAULTS_OUT")
+        .unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+}

@@ -5,36 +5,130 @@ use crate::jobs::JobId;
 
 /// Tracks which job (if any) occupies each GPU — enforcing the packing
 /// constraint Eq. 2 ("each GPU can only be occupied by one worker of some
-/// job at any given time").
+/// job at any given time") — plus the component **health** layer the
+/// fault model needs: a crashed server or a permanently failed GPU drops
+/// out of the schedulable pool ([`is_free`](Self::is_free) is
+/// free-AND-healthy), and the per-server free counts track only healthy
+/// GPUs. With no faults injected every mask stays false and the
+/// occupancy behaviour is exactly the pre-fault one.
 #[derive(Debug, Clone)]
 pub struct ClusterState {
     /// `owner[global_gpu_id] = Some(job)` while occupied.
     owner: Vec<Option<JobId>>,
-    /// Free-GPU count per server (derived, kept in sync for O(1) queries).
+    /// Free *healthy* GPU count per server (derived, O(1) queries).
     free_per_server: Vec<usize>,
+    /// Permanently failed GPUs (no per-GPU recovery).
+    down_gpu: Vec<bool>,
+    /// Servers currently in a crash outage.
+    server_down: Vec<bool>,
+    /// Individually failed GPUs per server (restores server recovery
+    /// without rescanning the mask).
+    down_per_server: Vec<usize>,
+    /// Total healthy GPUs right now (outages and permanent failures).
+    healthy: usize,
+    /// Total GPUs that can ever be healthy again (nominal minus permanent
+    /// failures; ignores in-flight outages).
+    potential: usize,
 }
 
 impl ClusterState {
     pub fn new(cluster: &Cluster) -> Self {
+        let total = cluster.num_gpus();
         ClusterState {
-            owner: vec![None; cluster.num_gpus()],
+            owner: vec![None; total],
             free_per_server: cluster.servers().map(|s| s.capacity()).collect(),
+            down_gpu: vec![false; total],
+            server_down: vec![false; cluster.num_servers()],
+            down_per_server: vec![0; cluster.num_servers()],
+            healthy: total,
+            potential: total,
         }
     }
 
-    /// Number of free GPUs on server `s`.
+    /// Number of free healthy GPUs on server `s`.
     pub fn free_on(&self, s: ServerId) -> usize {
         self.free_per_server[s.0]
     }
 
-    /// Total free GPUs in the cluster.
+    /// Total free healthy GPUs in the cluster.
     pub fn total_free(&self) -> usize {
         self.free_per_server.iter().sum()
     }
 
-    /// Is this specific GPU free?
+    /// Is this specific GPU free (unoccupied AND healthy)?
     pub fn is_free(&self, gpu: GpuId) -> bool {
-        self.owner[gpu.global].is_none()
+        self.owner[gpu.global].is_none() && self.is_healthy(gpu)
+    }
+
+    /// Is this GPU schedulable at all (server up, not permanently failed)?
+    pub fn is_healthy(&self, gpu: GpuId) -> bool {
+        !self.down_gpu[gpu.global] && !self.server_down[gpu.server.0]
+    }
+
+    /// Is server `s` in a crash outage?
+    pub fn server_is_down(&self, s: ServerId) -> bool {
+        self.server_down[s.0]
+    }
+
+    /// GPUs currently schedulable (nominal minus outages and permanent
+    /// failures) — the surviving capacity window accounting normalizes by.
+    pub fn healthy_gpus(&self) -> usize {
+        self.healthy
+    }
+
+    /// GPUs that can ever be schedulable again (nominal minus permanent
+    /// failures only): the bound admission re-projection rejects against —
+    /// a crashed server may recover, a failed GPU never does.
+    pub fn potential_gpus(&self) -> usize {
+        self.potential
+    }
+
+    /// Server `s` crashes: its GPUs leave the pool. Resident gangs must
+    /// already have been killed (released) — occupancy on a crashing
+    /// server is a caller bug.
+    pub fn set_server_down(&mut self, cluster: &Cluster, s: ServerId) {
+        if self.server_down[s.0] {
+            return;
+        }
+        debug_assert!(
+            cluster.gpus_of(s).all(|g| self.owner[g.global].is_none()),
+            "server {s:?} crashed with resident workers not yet killed"
+        );
+        self.server_down[s.0] = true;
+        self.healthy -= cluster.capacity(s) - self.down_per_server[s.0];
+        self.free_per_server[s.0] = 0;
+    }
+
+    /// Server `s` recovers: its GPUs (minus permanent failures) rejoin the
+    /// pool, all free.
+    pub fn set_server_up(&mut self, cluster: &Cluster, s: ServerId) {
+        if !self.server_down[s.0] {
+            return;
+        }
+        self.server_down[s.0] = false;
+        let back = cluster.capacity(s) - self.down_per_server[s.0];
+        self.healthy += back;
+        debug_assert!(cluster.gpus_of(s).all(|g| self.owner[g.global].is_none()));
+        self.free_per_server[s.0] = back;
+    }
+
+    /// GPU `gpu` fails permanently. The resident gang, if any, must
+    /// already have been killed (released).
+    pub fn fail_gpu(&mut self, gpu: GpuId) {
+        if self.down_gpu[gpu.global] {
+            return;
+        }
+        debug_assert!(
+            self.owner[gpu.global].is_none(),
+            "GPU {gpu} failed with its resident worker not yet killed"
+        );
+        self.down_gpu[gpu.global] = true;
+        self.down_per_server[gpu.server.0] += 1;
+        self.potential -= 1;
+        if !self.server_down[gpu.server.0] {
+            self.healthy -= 1;
+            self.free_per_server[gpu.server.0] -= 1;
+        }
     }
 
     /// Owner of a GPU, if any.
@@ -64,6 +158,7 @@ impl ClusterState {
                 self.owner[g.global],
                 job
             );
+            debug_assert!(self.is_healthy(g), "GPU {g} allocated to {job:?} while down");
             self.owner[g.global] = Some(job);
             self.free_per_server[g.server.0] -= 1;
         }
@@ -81,7 +176,13 @@ impl ClusterState {
                 job
             );
             self.owner[g.global] = None;
-            self.free_per_server[g.server.0] += 1;
+            // kills always release BEFORE the component is marked down, so
+            // a healthy release is the invariant; the guard keeps the free
+            // counts consistent even if a caller breaks it
+            debug_assert!(self.is_healthy(g), "GPU {g} released while down");
+            if self.is_healthy(g) {
+                self.free_per_server[g.server.0] += 1;
+            }
         }
     }
 }
@@ -139,5 +240,85 @@ mod tests {
         st.allocate(JobId(3), &p);
         let free: Vec<_> = st.free_gpus_of(&c, ServerId(0)).map(|g| g.index).collect();
         assert_eq!(free, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn pristine_state_is_fully_healthy() {
+        let (c, st) = setup();
+        assert_eq!(st.healthy_gpus(), 8);
+        assert_eq!(st.potential_gpus(), 8);
+        assert!(!st.server_is_down(ServerId(0)));
+        assert!(c.all_gpus().all(|g| st.is_healthy(g)));
+    }
+
+    #[test]
+    fn server_outage_roundtrip() {
+        let (c, mut st) = setup();
+        st.set_server_down(&c, ServerId(0));
+        assert!(st.server_is_down(ServerId(0)));
+        assert_eq!(st.healthy_gpus(), 4);
+        assert_eq!(st.potential_gpus(), 8, "outages are recoverable");
+        assert_eq!(st.free_on(ServerId(0)), 0);
+        assert_eq!(st.total_free(), 4);
+        assert!(!st.is_free(c.global_gpu(ServerId(0), 0)));
+        assert_eq!(st.free_gpus_of(&c, ServerId(0)).count(), 0);
+        // idempotent
+        st.set_server_down(&c, ServerId(0));
+        assert_eq!(st.healthy_gpus(), 4);
+        st.set_server_up(&c, ServerId(0));
+        assert_eq!(st.healthy_gpus(), 8);
+        assert_eq!(st.free_on(ServerId(0)), 4);
+        st.set_server_up(&c, ServerId(0));
+        assert_eq!(st.healthy_gpus(), 8);
+    }
+
+    #[test]
+    fn gpu_failure_is_permanent_across_server_recovery() {
+        let (c, mut st) = setup();
+        let g = c.global_gpu(ServerId(0), 2);
+        st.fail_gpu(g);
+        assert_eq!(st.healthy_gpus(), 7);
+        assert_eq!(st.potential_gpus(), 7);
+        assert_eq!(st.free_on(ServerId(0)), 3);
+        assert!(!st.is_free(g));
+        // double-failure is a no-op
+        st.fail_gpu(g);
+        assert_eq!(st.potential_gpus(), 7);
+        // outage + recovery brings back everything except the failed GPU
+        st.set_server_down(&c, ServerId(0));
+        assert_eq!(st.healthy_gpus(), 4);
+        st.set_server_up(&c, ServerId(0));
+        assert_eq!(st.healthy_gpus(), 7);
+        assert_eq!(st.free_on(ServerId(0)), 3);
+        assert!(!st.is_healthy(g));
+        let free: Vec<_> = st.free_gpus_of(&c, ServerId(0)).map(|g| g.index).collect();
+        assert_eq!(free, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn fail_gpu_during_outage_defers_the_free_count_hit() {
+        let (c, mut st) = setup();
+        st.set_server_down(&c, ServerId(1));
+        st.fail_gpu(c.global_gpu(ServerId(1), 0));
+        assert_eq!(st.healthy_gpus(), 4);
+        assert_eq!(st.potential_gpus(), 7);
+        st.set_server_up(&c, ServerId(1));
+        assert_eq!(st.healthy_gpus(), 7);
+        assert_eq!(st.free_on(ServerId(1)), 3);
+    }
+
+    #[test]
+    fn occupancy_and_health_compose() {
+        let (c, mut st) = setup();
+        let p = JobPlacement::new(vec![c.global_gpu(ServerId(1), 0)]);
+        st.allocate(JobId(0), &p);
+        // kill-then-crash: release first (healthy), then mark down
+        st.release(JobId(0), &p);
+        st.set_server_down(&c, ServerId(1));
+        assert_eq!(st.total_free(), 4);
+        // allocation on the surviving server still works
+        let p2 = JobPlacement::new(vec![c.global_gpu(ServerId(0), 0)]);
+        st.allocate(JobId(1), &p2);
+        assert_eq!(st.total_free(), 3);
     }
 }

@@ -7,6 +7,7 @@
 
 use crate::cluster::Cluster;
 use crate::contention::ContentionParams;
+use crate::faults::{FaultSpec, FaultTrace};
 use crate::net::ContentionModel;
 use crate::online::{AdmissionControl, MigrationControl, OnlineOptions};
 use crate::sched::Policy;
@@ -136,6 +137,48 @@ impl OnlineConfig {
     }
 }
 
+/// Fault-injection section (`[faults]`): a deterministic fault trace
+/// for the online scheduler (see [`crate::faults`]). Exactly one of
+/// `spec` (a fault-spec string, e.g.
+/// `"server:2000:200,link:1500:300:0.25"` — validated at parse time) or
+/// `trace` (path to a saved [`FaultTrace`] JSON) may be set; an absent
+/// section injects nothing — the fault-free loop bit for bit.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultsConfig {
+    /// Fault-spec string ([`FaultSpec`] `FromStr` syntax).
+    pub spec: Option<String>,
+    /// Path to a saved fault-trace JSON ([`FaultTrace::save`]).
+    pub trace: Option<String>,
+}
+
+impl FaultsConfig {
+    /// Whether any fault input was requested.
+    pub fn any_enabled(&self) -> bool {
+        self.spec.is_some() || self.trace.is_some()
+    }
+
+    /// Resolve to a concrete trace: load the saved file, or generate
+    /// from the spec against this cluster / horizon / run seed. `None`
+    /// when the section is absent (or the spec is inert).
+    pub fn build_trace(
+        &self,
+        cluster: &Cluster,
+        horizon: u64,
+        run_seed: u64,
+    ) -> Result<Option<FaultTrace>> {
+        if let Some(path) = &self.trace {
+            return Ok(Some(FaultTrace::load(Path::new(path))?));
+        }
+        if let Some(s) = &self.spec {
+            let spec: FaultSpec = s.parse()?;
+            if spec.is_active() {
+                return Ok(Some(spec.generate(cluster, horizon, run_seed)));
+            }
+        }
+        Ok(None)
+    }
+}
+
 /// Observability section (`[obs]`): output paths for the passive
 /// recorders of [`crate::obs`]. Every key names a file to write at the
 /// end of the run; an absent key leaves that recorder disarmed (absence
@@ -203,6 +246,8 @@ pub struct ExperimentConfig {
     pub model: ModelParamsConfig,
     /// Online overload controls (`[online]` section; absent = all off).
     pub online: OnlineConfig,
+    /// Fault injection (`[faults]` section; absent = fault-free).
+    pub faults: FaultsConfig,
     /// Observability outputs (`[obs]` section; absent = all disarmed).
     pub obs: ObsConfig,
 }
@@ -377,6 +422,28 @@ impl ExperimentConfig {
             }
             cfg.online.stream_jobs = n;
         }
+        if let Some(v) = doc.get("faults", "spec") {
+            let s = v.as_str()?;
+            // validate eagerly so a typo'd spec fails at load, not mid-run
+            let spec: FaultSpec = s.parse()?;
+            if !spec.is_active() {
+                bail!(
+                    "faults.spec must enable at least one fault class \
+                     (omit the key to disable injection)"
+                );
+            }
+            cfg.faults.spec = Some(s.to_string());
+        }
+        if let Some(v) = doc.get("faults", "trace") {
+            let path = v.as_str()?;
+            if path.is_empty() {
+                bail!("faults.trace must be a non-empty path (omit the key to disable)");
+            }
+            cfg.faults.trace = Some(path.to_string());
+        }
+        if cfg.faults.spec.is_some() && cfg.faults.trace.is_some() {
+            bail!("faults: spec and trace are mutually exclusive — use one");
+        }
         for (key, slot) in [
             ("trace_out", &mut cfg.obs.trace_out),
             ("obs_json", &mut cfg.obs.obs_json),
@@ -522,6 +589,14 @@ impl ExperimentConfig {
                 "stream_jobs",
                 TomlValue::Int(self.online.stream_jobs as i64),
             );
+        }
+        // [faults] — only a requested input is emitted (absence IS the
+        // fault-free state, like [online])
+        if let Some(s) = &self.faults.spec {
+            doc.set("faults", "spec", TomlValue::Str(s.clone()));
+        }
+        if let Some(p) = &self.faults.trace {
+            doc.set("faults", "trace", TomlValue::Str(p.clone()));
         }
         // [obs] — only requested outputs are emitted (absence IS the
         // disarmed state, like [online])
@@ -767,6 +842,42 @@ mod tests {
         // empty paths are typos, not "disabled"
         assert!(ExperimentConfig::from_toml_str("[obs]\ntrace_out = \"\"\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[obs]\nexplain = \"\"\n").is_err());
+    }
+
+    #[test]
+    fn faults_section_defaults_roundtrip_and_build() {
+        // absent section = fault-free, no keys emitted
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.faults, FaultsConfig::default());
+        assert!(!cfg.faults.any_enabled());
+        assert!(!cfg.to_toml_string().contains("[faults]"));
+        let c = cfg.build_cluster();
+        assert!(cfg.faults.build_trace(&c, 10_000, cfg.seed).unwrap().is_none());
+
+        // a spec roundtrips and resolves to a deterministic trace
+        let mut cfg = ExperimentConfig::paper();
+        cfg.faults.spec = Some("server:2000:200,seed:7".into());
+        let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.faults, cfg.faults);
+        let c = back.build_cluster();
+        let t1 = back.faults.build_trace(&c, 10_000, back.seed).unwrap().unwrap();
+        let t2 = back.faults.build_trace(&c, 10_000, back.seed).unwrap().unwrap();
+        assert_eq!(t1.events, t2.events);
+        assert!(!t1.is_empty());
+    }
+
+    #[test]
+    fn bad_faults_section_rejected() {
+        // a typo'd spec fails at load, not mid-run
+        assert!(ExperimentConfig::from_toml_str("[faults]\nspec = \"quux:1\"\n").is_err());
+        // an inert spec is a typo, not "disabled"
+        assert!(ExperimentConfig::from_toml_str("[faults]\nspec = \"none\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[faults]\ntrace = \"\"\n").is_err());
+        // spec and trace are mutually exclusive
+        assert!(ExperimentConfig::from_toml_str(
+            "[faults]\nspec = \"server:2000:200\"\ntrace = \"t.json\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -145,6 +145,16 @@ impl DirtySet {
         });
     }
 
+    /// A link's capacity changed (fault-injected degradation or
+    /// restoration): every member crossing it re-rates at the next drain.
+    /// This is the same link-keyed invalidation rule a count change
+    /// triggers — a capacity change is just a multiplier change at the
+    /// [`Topology::multiplier`] choke point, so fault handling needs no
+    /// new contention seam.
+    pub fn on_capacity_change(&mut self, l: LinkId) {
+        self.touch(l);
+    }
+
     /// An *active* job atomically re-placed from `old` to `new`
     /// (preemption/migration). Unlike a completion, the job stays active,
     /// so the lazy activity-filtered purge would never drop its stale
@@ -251,6 +261,31 @@ mod tests {
         let mut seen = Vec::new();
         assert_eq!(ds.drain(|_| true, |j| seen.push(j)), 0);
         assert!(seen.is_empty());
+    }
+
+    #[test]
+    fn capacity_change_rerates_exactly_the_crossing_members() {
+        let c = Cluster::uniform(5, 4, 1.0, 25.0);
+        let topo = c.topology();
+        let mut ds = DirtySet::new(topo.num_links());
+        ds.on_admit(topo, JobId(0), &mk(&c, &[(0, 0), (1, 0)])); // crosses l0, l1
+        ds.on_admit(topo, JobId(1), &mk(&c, &[(2, 0), (3, 0)])); // crosses l2, l3
+        ds.drain(|_| true, |_| {});
+        // degrade server 2's uplink: only job 1 crosses it
+        ds.on_capacity_change(LinkId(2));
+        let mut seen = Vec::new();
+        assert_eq!(ds.drain(|_| true, |j| seen.push(j)), 1);
+        assert_eq!(seen, vec![JobId(1)]);
+        // restoration is the same invalidation rule, idempotent within a
+        // drain
+        ds.on_capacity_change(LinkId(2));
+        ds.on_capacity_change(LinkId(2));
+        let mut seen = Vec::new();
+        assert_eq!(ds.drain(|_| true, |j| seen.push(j)), 1);
+        assert_eq!(seen, vec![JobId(1)]);
+        // a capacity change on a link nobody crosses re-rates nobody
+        ds.on_capacity_change(LinkId(4));
+        assert_eq!(ds.drain(|_| true, |_| {}), 0);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! mode refuses to hold.
 
 use super::ExperimentSetup;
+use crate::faults::{FaultSpec, FaultTrace};
 use crate::metrics::{FigureReport, MetricTable};
 use crate::online::{
     AdmissionControl, MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind,
@@ -79,12 +80,27 @@ pub fn online_run_full(
     jobs: &[crate::jobs::JobSpec],
     options: OnlineOptions,
 ) -> OnlineOutcome {
+    online_run_faults(setup, kind, jobs, options, None)
+}
+
+/// [`online_run_full`] with an optional fault trace merged into the run
+/// (`None` never arms the fault branches — bit-identical to the plain
+/// call).
+pub fn online_run_faults(
+    setup: &ExperimentSetup,
+    kind: OnlinePolicyKind,
+    jobs: &[crate::jobs::JobSpec],
+    options: OnlineOptions,
+    faults: Option<&FaultTrace>,
+) -> OnlineOutcome {
     let cluster = setup.cluster();
     let params = setup.params();
     let mut policy = kind.build();
-    OnlineScheduler::new(&cluster, jobs, &params)
-        .with_options(options)
-        .run(policy.as_mut())
+    let mut sched = OnlineScheduler::new(&cluster, jobs, &params).with_options(options);
+    if let Some(tr) = faults {
+        sched = sched.with_faults(tr);
+    }
+    sched.run(policy.as_mut())
 }
 
 /// Sweep mean inter-arrival gaps (slots/job; `0.0` reproduces the batch
@@ -176,7 +192,13 @@ pub fn window_table(
     for (i, s) in windows.iter().enumerate() {
         let end = (s.start + window).min(run_end.max(s.start + 1));
         let len = end - s.start;
-        let util = if num_gpus == 0 {
+        // normalize by the surviving capacity the window actually offered
+        // (shrinks under fault outages); the nominal num_gpus × len
+        // denominator is the fallback for zero-capacity (fully dark)
+        // windows and hand-built samples
+        let util = if s.capacity_gpu_slots > 0.0 {
+            s.busy_gpu_slots / s.capacity_gpu_slots
+        } else if num_gpus == 0 {
             0.0
         } else {
             s.busy_gpu_slots / (num_gpus as u64 * len) as f64
@@ -207,6 +229,23 @@ pub fn online_comparison_full(
     burst: Option<(u64, u64)>,
     options: OnlineOptions,
 ) -> Result<(MetricTable, Vec<(String, MetricTable)>)> {
+    online_comparison_faults(setup, gap, kinds, include_clairvoyant, burst, options, None)
+}
+
+/// [`online_comparison_full`] with an optional fault trace injected into
+/// every online run (the clairvoyant reference, when requested, stays
+/// fault-free — it is the no-failure upper bound). `None` is bit-identical
+/// to the plain call.
+#[allow(clippy::too_many_arguments)]
+pub fn online_comparison_faults(
+    setup: &ExperimentSetup,
+    gap: f64,
+    kinds: &[OnlinePolicyKind],
+    include_clairvoyant: bool,
+    burst: Option<(u64, u64)>,
+    options: OnlineOptions,
+    faults: Option<&FaultTrace>,
+) -> Result<(MetricTable, Vec<(String, MetricTable)>)> {
     let gen = generator(setup);
     let jobs = match burst {
         Some((on, off)) => gen.generate_bursty(setup.seed, gap, on, off),
@@ -217,6 +256,10 @@ pub fn online_comparison_full(
     let arrivals = match burst {
         Some((on, off)) => format!("bursty on {on}/off {off}, mean gap {gap}"),
         None => format!("poisson mean gap {gap}"),
+    };
+    let arrivals = match faults {
+        Some(tr) if !tr.is_empty() => format!("{arrivals}, {} fault events", tr.len()),
+        _ => arrivals,
     };
     let mut table = MetricTable::new(
         format!(
@@ -262,7 +305,7 @@ pub fn online_comparison_full(
     }
     let mut windows = Vec::new();
     for &kind in kinds {
-        let out = online_run_full(setup, kind, &jobs, options);
+        let out = online_run_faults(setup, kind, &jobs, options, faults);
         push(
             kind.name().to_string(),
             &out.outcome,
@@ -299,6 +342,23 @@ pub fn streaming_run(
     burst: Option<(u64, u64)>,
     options: OnlineOptions,
 ) -> StreamOutcome {
+    streaming_run_faults(setup, kind, n_jobs, gap, burst, options, None)
+}
+
+/// [`streaming_run`] with an optional fault trace — the O(active)-memory
+/// path handles faults identically to the collect-all path (one shared
+/// core), so a streamed faulty run's aggregates match a materialized one
+/// bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn streaming_run_faults(
+    setup: &ExperimentSetup,
+    kind: OnlinePolicyKind,
+    n_jobs: usize,
+    gap: f64,
+    burst: Option<(u64, u64)>,
+    options: OnlineOptions,
+    faults: Option<&FaultTrace>,
+) -> StreamOutcome {
     let cluster = setup.cluster();
     let params = setup.params();
     let gen = generator(setup);
@@ -307,9 +367,11 @@ pub fn streaming_run(
         None => ArrivalProcess::poisson(gap),
     };
     let mut policy = kind.build();
-    OnlineScheduler::open(&cluster, &params)
-        .with_options(options)
-        .run_streaming(gen.open_arrivals(setup.seed, n_jobs, process), policy.as_mut())
+    let mut sched = OnlineScheduler::open(&cluster, &params).with_options(options);
+    if let Some(tr) = faults {
+        sched = sched.with_faults(tr);
+    }
+    sched.run_streaming(gen.open_arrivals(setup.seed, n_jobs, process), policy.as_mut())
 }
 
 /// Streaming twin of [`online_comparison_full`]: the same per-policy
@@ -329,6 +391,31 @@ pub fn streaming_comparison(
     burst: Option<(u64, u64)>,
     options: OnlineOptions,
 ) -> Result<(MetricTable, Vec<(String, MetricTable)>)> {
+    streaming_comparison_faults(
+        setup,
+        gap,
+        n_jobs,
+        kinds,
+        include_clairvoyant,
+        burst,
+        options,
+        None,
+    )
+}
+
+/// [`streaming_comparison`] with an optional fault trace injected into
+/// every streamed run.
+#[allow(clippy::too_many_arguments)]
+pub fn streaming_comparison_faults(
+    setup: &ExperimentSetup,
+    gap: f64,
+    n_jobs: usize,
+    kinds: &[OnlinePolicyKind],
+    include_clairvoyant: bool,
+    burst: Option<(u64, u64)>,
+    options: OnlineOptions,
+    faults: Option<&FaultTrace>,
+) -> Result<(MetricTable, Vec<(String, MetricTable)>)> {
     let cluster = setup.cluster();
     let num_gpus = cluster.num_gpus();
     if include_clairvoyant {
@@ -340,6 +427,10 @@ pub fn streaming_comparison(
     let arrivals = match burst {
         Some((on, off)) => format!("bursty on {on}/off {off}, mean gap {gap}"),
         None => format!("poisson mean gap {gap}"),
+    };
+    let arrivals = match faults {
+        Some(tr) if !tr.is_empty() => format!("{arrivals}, {} fault events", tr.len()),
+        _ => arrivals,
     };
     let mut table = MetricTable::new(
         format!(
@@ -357,7 +448,7 @@ pub fn streaming_comparison(
     );
     let mut windows = Vec::new();
     for &kind in kinds {
-        let out = streaming_run(setup, kind, n_jobs, gap, burst, options);
+        let out = streaming_run_faults(setup, kind, n_jobs, gap, burst, options, faults);
         let label = if out.truncated {
             format!("{} (TRUNCATED)", kind.name())
         } else {
@@ -488,6 +579,99 @@ pub fn overload_sweep(
     Ok(table)
 }
 
+/// **Fault sweep** — rigid (wait-for-home) vs migration-armed recovery
+/// under increasing failure pressure. For each server-MTBF point a
+/// deterministic fault trace (crash/recover renewals, seeded from the
+/// setup) is injected into the same ON-SJF-BCO run twice: once with
+/// migration off — killed gangs wait for their original servers to heal —
+/// and once with migration armed, so the recovery queue re-places them
+/// onto surviving capacity via the locality-first candidate machinery.
+/// The fault-free baseline row (`none/-`) anchors the degradation; the
+/// columns surface the recovery ledger (kills, re-placements, mean
+/// recovery wait) next to the realized makespan/JCT.
+pub fn fault_sweep(
+    setup: &ExperimentSetup,
+    gap: f64,
+    mtbfs: &[f64],
+    mttr: f64,
+) -> Result<MetricTable> {
+    let cluster = setup.cluster();
+    let num_gpus = cluster.num_gpus();
+    let options = OnlineOptions::default();
+    let jobs = generator(setup).generate_online(setup.seed, gap);
+    let mut table = MetricTable::new(
+        format!(
+            "faults — server mttr {mttr} slots, mean gap {gap}, seed {} \
+             ({} servers / {} GPUs, {})",
+            setup.seed,
+            cluster.num_servers(),
+            num_gpus,
+            setup.topology,
+        ),
+        "recovery/mtbf",
+        &[
+            "fault_events", "failed", "recovered", "avg_rec_wait", "rejected", "makespan",
+            "avg_jct", "util",
+        ],
+    );
+    let row = |out: &OnlineOutcome, fault_events: usize| {
+        let avg_rec_wait = if out.recovered == 0 {
+            0.0
+        } else {
+            out.recovery_wait_slots as f64 / out.recovered as f64
+        };
+        vec![
+            fault_events as f64,
+            out.failed as f64,
+            out.recovered as f64,
+            avg_rec_wait,
+            out.rejected.len() as f64,
+            out.outcome.makespan as f64,
+            out.outcome.avg_jct,
+            out.outcome.service_utilization(num_gpus),
+        ]
+    };
+    let base = online_run_full(setup, OnlinePolicyKind::SjfBco, &jobs, options);
+    let base_label =
+        if base.outcome.truncated { "none/- (TRUNCATED)" } else { "none/-" };
+    table.push(base_label.to_string(), row(&base, 0));
+    // §Perf: one core per (mtbf, strategy) point; the trace is
+    // regenerated per point (deterministic from the setup seed).
+    let points: Vec<(f64, bool)> = mtbfs
+        .iter()
+        .flat_map(|&mtbf| [(mtbf, false), (mtbf, true)])
+        .collect();
+    let rows = crate::util::par::par_map(points, |(mtbf, migrate)| {
+        let spec = FaultSpec {
+            server_mtbf: mtbf,
+            server_mttr: mttr,
+            ..FaultSpec::default()
+        };
+        let tr = spec.generate(&cluster, options.max_slots, setup.seed);
+        let opts = if migrate {
+            OnlineOptions {
+                migration: MigrationControl { enabled: true, ..MigrationControl::default() },
+                ..options
+            }
+        } else {
+            options
+        };
+        let out =
+            online_run_faults(setup, OnlinePolicyKind::SjfBco, &jobs, opts, Some(&tr));
+        let name = if migrate { "migrate" } else { "rigid" };
+        let label = if out.outcome.truncated {
+            format!("{name}/{mtbf} (TRUNCATED)")
+        } else {
+            format!("{name}/{mtbf}")
+        };
+        (label, row(&out, tr.len()))
+    });
+    for (label, values) in rows {
+        table.push(label, values);
+    }
+    Ok(table)
+}
+
 #[cfg(test)]
 fn assert_no_truncated_rows(table: &MetricTable) {
     assert!(
@@ -511,6 +695,79 @@ mod tests {
         assert!(report.rows.iter().any(|r| r.x.starts_with("CLAIR-SJF-BCO/")));
         assert!(report.rows.iter().any(|r| r.x.starts_with("ON-SJF-BCO/")));
         assert!(report.rows.iter().any(|r| r.x.starts_with("FIFO/")));
+    }
+
+    #[test]
+    fn fault_sweep_reports_rigid_and_migrating_rows() {
+        let setup = ExperimentSetup::smoke();
+        let table = fault_sweep(&setup, 2.0, &[5_000.0], 500.0).unwrap();
+        assert_eq!(table.rows.len(), 1 + 2, "baseline + rigid + migrate");
+        assert!(table.rows.iter().any(|(l, _)| l.starts_with("none/")));
+        assert!(table.rows.iter().any(|(l, _)| l.starts_with("rigid/5000")));
+        assert!(table.rows.iter().any(|(l, _)| l.starts_with("migrate/5000")));
+    }
+
+    #[test]
+    fn migration_armed_recovery_strictly_beats_wait_only_on_a_rack_crash() {
+        // Deterministic oversubscribed-rack crash scenario: one 2-GPU job
+        // co-located on server 0 of a 2-rack fabric; server 0 crashes at
+        // t = 50 and stays down for ~100k slots while three idle servers
+        // sit next to it. Wait-only recovery is hostage to the outage
+        // (it may only re-place onto the healed home gang); the
+        // migration-armed recovery queue re-places onto a survivor
+        // immediately — strictly better makespan and recovery wait.
+        use crate::cluster::Cluster;
+        use crate::contention::ContentionParams;
+        use crate::faults::{FaultAction, FaultEvent};
+        use crate::jobs::{JobId, JobSpec};
+        use crate::topology::Topology;
+
+        let c = Cluster::uniform(4, 2, 1.0, 25.0)
+            .with_topology(Topology::racks(4, 2, 4.0));
+        let p = ContentionParams::paper();
+        let mut j = JobSpec::synthetic(JobId(0), 2);
+        j.iterations = 2000;
+        let jobs = vec![j];
+        let mut tr = FaultTrace {
+            seed: 0,
+            description: "rack crash".into(),
+            events: vec![
+                FaultEvent { at: 50, action: FaultAction::ServerCrash { server: 0 } },
+                FaultEvent {
+                    at: 100_000,
+                    action: FaultAction::ServerRecover { server: 0 },
+                },
+            ],
+        };
+        tr.normalize();
+        let base = OnlineOptions { max_slots: 10_000_000, ..OnlineOptions::default() };
+        let run = |opts: OnlineOptions| {
+            let mut policy = OnlinePolicyKind::Fifo.build();
+            OnlineScheduler::new(&c, &jobs, &p)
+                .with_options(opts)
+                .with_faults(&tr)
+                .run(policy.as_mut())
+        };
+        let rigid = run(base);
+        let armed = run(OnlineOptions {
+            migration: MigrationControl { enabled: true, ..MigrationControl::default() },
+            ..base
+        });
+        assert!(!rigid.outcome.truncated && !armed.outcome.truncated);
+        assert_eq!((rigid.failed, rigid.recovered), (1, 1));
+        assert_eq!((armed.failed, armed.recovered), (1, 1));
+        assert!(
+            rigid.outcome.makespan > 100_000,
+            "wait-only is hostage to the outage (makespan {})",
+            rigid.outcome.makespan
+        );
+        assert!(
+            armed.outcome.makespan < 10_000,
+            "armed recovery re-places onto survivors (makespan {})",
+            armed.outcome.makespan
+        );
+        assert!(armed.outcome.makespan < rigid.outcome.makespan);
+        assert!(armed.recovery_wait_slots < rigid.recovery_wait_slots);
     }
 
     #[test]

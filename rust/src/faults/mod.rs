@@ -1,0 +1,588 @@
+//! Deterministic **fault injection**: component failures as first-class
+//! timestamped events.
+//!
+//! The paper's model (and the rest of this stack) assumes servers, GPUs
+//! and links never fail; a production-scale cluster sees component
+//! failure as the steady state. This module supplies the fault side of
+//! that gap:
+//!
+//! * [`FaultEvent`] — one timestamped fault ([`FaultAction`]: a server
+//!   crash or recovery, a permanent single-GPU failure, a link degraded
+//!   to a fraction of its capacity or restored). The online event loop
+//!   merges these into its schedule alongside arrivals and completions —
+//!   **failures are first-class events**, never a side channel (the
+//!   ROADMAP invariant).
+//! * [`FaultTrace`] — a sorted, serialisable stream of fault events
+//!   (JSON round-trip mirrors [`Trace`](crate::trace::Trace)), dumped by
+//!   the `fault-trace` CLI subcommand and consumed via
+//!   `online --faults`.
+//! * [`FaultSpec`] — the seeded generator: per-server crash/recover
+//!   alternating renewals (exponential up/down times around
+//!   MTBF / MTTR), per-GPU one-shot permanent failures, per-link
+//!   degrade/restore renewals. Components are visited in id order on one
+//!   seeded [`Rng`](crate::util::rng::Rng), so a spec + cluster + horizon
+//!   reproduces the exact same trace everywhere.
+//!
+//! The recovery half lives in the [`online`](crate::online) loop: a
+//! crash kills the resident gangs (the jobs keep their checkpointed
+//! progress per the existing `restart_slots` model and enter a recovery
+//! queue), and link degradation flows through the tracker's
+//! [`Topology::multiplier`](crate::topology::Topology::multiplier) choke
+//! point plus the link-keyed
+//! [`DirtySet`](crate::contention::DirtySet) invalidation rule — no new
+//! contention seam. An **empty** trace is the inert state: the loop
+//! skips every fault branch and reproduces the fault-free schedule bit
+//! for bit (`tests/fault_equivalence.rs`).
+
+use crate::cluster::Cluster;
+use crate::util::rng::Rng;
+use crate::util::Json;
+use crate::Result;
+use anyhow::bail;
+
+/// What failed (or healed). Components are identified by their dense
+/// ids against the cluster the trace was generated for — a server index,
+/// a (server, local-gpu) pair, or a [`LinkId`](crate::topology::LinkId)
+/// index — kept as plain integers so traces serialise without a cluster
+/// in hand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// The whole server goes down: every resident worker is killed and
+    /// its GPUs leave the schedulable pool until recovery.
+    ServerCrash { server: usize },
+    /// The server returns; its GPUs (minus any individually failed ones)
+    /// rejoin the pool.
+    ServerRecover { server: usize },
+    /// One GPU fails **permanently** (no per-GPU recovery): the resident
+    /// gang, if any, is killed.
+    GpuFail { server: usize, gpu: usize },
+    /// The link's capacity drops to `factor` (0 < factor < 1) of its
+    /// pristine value — a capacity change flowing through the
+    /// `Topology::multiplier` choke point.
+    LinkDegrade { link: usize, factor: f64 },
+    /// The link returns to its pristine capacity (bit-identical
+    /// multipliers to the never-degraded fabric).
+    LinkRestore { link: usize },
+}
+
+impl FaultAction {
+    /// Stable kind string for serialisation and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultAction::ServerCrash { .. } => "server-crash",
+            FaultAction::ServerRecover { .. } => "server-recover",
+            FaultAction::GpuFail { .. } => "gpu-fail",
+            FaultAction::LinkDegrade { .. } => "link-degrade",
+            FaultAction::LinkRestore { .. } => "link-restore",
+        }
+    }
+}
+
+/// One timestamped fault, merged into the online event loop alongside
+/// arrivals and completions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Slot at which the fault takes effect.
+    pub at: u64,
+    pub action: FaultAction,
+}
+
+/// A sorted, serialisable stream of fault events (the fault-side twin of
+/// a workload [`Trace`](crate::trace::Trace)).
+#[derive(Debug, Clone, Default)]
+pub struct FaultTrace {
+    pub seed: u64,
+    /// The generator spec (or a free-form note for hand-built traces).
+    pub description: String,
+    /// Events in non-decreasing `at` order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTrace {
+    /// The inert trace: no events, and the online loop skips every fault
+    /// branch (bit-identical to a fault-free run).
+    pub fn empty() -> Self {
+        FaultTrace::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Sort events by time (stable — generation order breaks ties), the
+    /// invariant the event loop's merge relies on.
+    pub fn normalize(&mut self) {
+        self.events.sort_by_key(|e| e.at);
+    }
+
+    pub fn to_json(&self) -> Result<String> {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("at", Json::Num(e.at as f64)),
+                    ("kind", Json::Str(e.action.kind().to_string())),
+                ];
+                match e.action {
+                    FaultAction::ServerCrash { server }
+                    | FaultAction::ServerRecover { server } => {
+                        fields.push(("server", Json::Num(server as f64)));
+                    }
+                    FaultAction::GpuFail { server, gpu } => {
+                        fields.push(("server", Json::Num(server as f64)));
+                        fields.push(("gpu", Json::Num(gpu as f64)));
+                    }
+                    FaultAction::LinkDegrade { link, factor } => {
+                        fields.push(("link", Json::Num(link as f64)));
+                        fields.push(("factor", Json::Num(factor)));
+                    }
+                    FaultAction::LinkRestore { link } => {
+                        fields.push(("link", Json::Num(link as f64)));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let v = Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("description", Json::Str(self.description.clone())),
+            ("events", Json::arr(events)),
+        ]);
+        Ok(v.to_pretty())
+    }
+
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = Json::parse(s)?;
+        let mut events = Vec::new();
+        for e in v.req("events")?.as_arr()? {
+            let at = e.req("at")?.as_u64()?;
+            let kind = e.req("kind")?.as_str()?.to_string();
+            let action = match kind.as_str() {
+                "server-crash" => FaultAction::ServerCrash {
+                    server: e.req("server")?.as_u64()? as usize,
+                },
+                "server-recover" => FaultAction::ServerRecover {
+                    server: e.req("server")?.as_u64()? as usize,
+                },
+                "gpu-fail" => FaultAction::GpuFail {
+                    server: e.req("server")?.as_u64()? as usize,
+                    gpu: e.req("gpu")?.as_u64()? as usize,
+                },
+                "link-degrade" => FaultAction::LinkDegrade {
+                    link: e.req("link")?.as_u64()? as usize,
+                    factor: e.req("factor")?.as_f64()?,
+                },
+                "link-restore" => FaultAction::LinkRestore {
+                    link: e.req("link")?.as_u64()? as usize,
+                },
+                other => bail!("unknown fault kind '{other}'"),
+            };
+            events.push(FaultEvent { at, action });
+        }
+        let mut t = FaultTrace {
+            seed: v.req("seed")?.as_u64()?,
+            description: v.req("description")?.as_str()?.to_string(),
+            events,
+        };
+        t.normalize();
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json()?)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Seeded fault-trace generator. Every class defaults to **disabled**
+/// (`mtbf = 0`), so the default spec generates the inert empty trace —
+/// the same absence-is-disabled rule the config layer uses everywhere.
+///
+/// CLI / config string form (comma-separated clauses, each enabling one
+/// class):
+///
+/// ```text
+/// server:<mtbf>:<mttr>          per-server crash/recover renewal
+/// gpu:<mtbf>                    per-GPU one-shot permanent failure
+/// link:<mtbf>:<mttr>[:<frac>]   per-link degrade/restore renewal
+///                               (degraded to <frac> of capacity, 0.5)
+/// seed:<u64>                    generator seed (default: the run seed)
+/// ```
+///
+/// e.g. `server:2000:200,link:1500:300:0.25,seed:7`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Generator seed; `None` inherits the run seed at resolution time.
+    pub seed: Option<u64>,
+    /// Mean up-time (slots) between crashes per server; 0 disables.
+    pub server_mtbf: f64,
+    /// Mean down-time (slots) per server outage.
+    pub server_mttr: f64,
+    /// Mean time (slots) to one permanent failure per GPU; 0 disables.
+    pub gpu_mtbf: f64,
+    /// Mean healthy time (slots) between degradations per link; 0 disables.
+    pub link_mtbf: f64,
+    /// Mean degraded time (slots) per link incident.
+    pub link_mttr: f64,
+    /// Fraction of pristine capacity a degraded link retains (0, 1).
+    pub degrade_to: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: None,
+            server_mtbf: 0.0,
+            server_mttr: 0.0,
+            gpu_mtbf: 0.0,
+            link_mtbf: 0.0,
+            link_mttr: 0.0,
+            degrade_to: 0.5,
+        }
+    }
+}
+
+/// One exponential inter-event draw in whole slots (≥ 1; saturates the
+/// way [`slots_until_done`](crate::sim::kernel::slots_until_done) does
+/// so a huge mean cannot wrap the u64 cast).
+fn exp_slots(rng: &mut Rng, mean: f64) -> u64 {
+    let u = rng.gen_f64();
+    let draw = -(1.0 - u).ln() * mean;
+    if !draw.is_finite() || draw >= u64::MAX as f64 {
+        return u64::MAX;
+    }
+    let slots = draw.ceil();
+    if slots < 1.0 {
+        1
+    } else {
+        slots as u64
+    }
+}
+
+impl FaultSpec {
+    /// Is any fault class enabled?
+    pub fn is_active(&self) -> bool {
+        self.server_mtbf > 0.0 || self.gpu_mtbf > 0.0 || self.link_mtbf > 0.0
+    }
+
+    /// Resolve the generator seed against the run seed.
+    pub fn resolved_seed(&self, run_seed: u64) -> u64 {
+        // decorrelate the fault stream from the workload stream drawn off
+        // the same run seed (an xor'd constant, not a second RNG)
+        self.seed.unwrap_or(run_seed ^ 0xFA17_57A2)
+    }
+
+    /// Generate the deterministic fault trace for one cluster over
+    /// `[0, horizon)`: components in id order, one seeded RNG, stable
+    /// final sort — same spec + cluster + horizon ⇒ same trace, byte for
+    /// byte.
+    pub fn generate(&self, cluster: &Cluster, horizon: u64, run_seed: u64) -> FaultTrace {
+        let seed = self.resolved_seed(run_seed);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut events: Vec<FaultEvent> = Vec::new();
+        if self.server_mtbf > 0.0 && self.server_mttr > 0.0 {
+            for server in 0..cluster.num_servers() {
+                let mut t: u64 = 0;
+                loop {
+                    t = t.saturating_add(exp_slots(&mut rng, self.server_mtbf));
+                    if t >= horizon {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        at: t,
+                        action: FaultAction::ServerCrash { server },
+                    });
+                    t = t.saturating_add(exp_slots(&mut rng, self.server_mttr));
+                    if t >= horizon {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        at: t,
+                        action: FaultAction::ServerRecover { server },
+                    });
+                }
+            }
+        }
+        if self.gpu_mtbf > 0.0 {
+            for s in cluster.server_ids() {
+                for gpu in 0..cluster.capacity(s) {
+                    let at = exp_slots(&mut rng, self.gpu_mtbf);
+                    if at < horizon {
+                        events.push(FaultEvent {
+                            at,
+                            action: FaultAction::GpuFail { server: s.0, gpu },
+                        });
+                    }
+                }
+            }
+        }
+        if self.link_mtbf > 0.0 && self.link_mttr > 0.0 {
+            for link in 0..cluster.topology().num_links() {
+                let mut t: u64 = 0;
+                loop {
+                    t = t.saturating_add(exp_slots(&mut rng, self.link_mtbf));
+                    if t >= horizon {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        at: t,
+                        action: FaultAction::LinkDegrade { link, factor: self.degrade_to },
+                    });
+                    t = t.saturating_add(exp_slots(&mut rng, self.link_mttr));
+                    if t >= horizon {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        at: t,
+                        action: FaultAction::LinkRestore { link },
+                    });
+                }
+            }
+        }
+        let mut trace =
+            FaultTrace { seed, description: self.to_string(), events };
+        trace.normalize();
+        trace
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if self.server_mtbf > 0.0 {
+            parts.push(format!("server:{}:{}", self.server_mtbf, self.server_mttr));
+        }
+        if self.gpu_mtbf > 0.0 {
+            parts.push(format!("gpu:{}", self.gpu_mtbf));
+        }
+        if self.link_mtbf > 0.0 {
+            parts.push(format!(
+                "link:{}:{}:{}",
+                self.link_mtbf, self.link_mttr, self.degrade_to
+            ));
+        }
+        if let Some(seed) = self.seed {
+            parts.push(format!("seed:{seed}"));
+        }
+        if parts.is_empty() {
+            f.write_str("none")
+        } else {
+            f.write_str(&parts.join(","))
+        }
+    }
+}
+
+fn parse_mean(s: &str, what: &str) -> Result<f64> {
+    let v: f64 = s.parse().map_err(|_| anyhow::anyhow!("bad {what} '{s}'"))?;
+    if !(v > 0.0) || !v.is_finite() {
+        bail!("{what} must be a positive number of slots, got {s}");
+    }
+    Ok(v)
+}
+
+impl std::str::FromStr for FaultSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut spec = FaultSpec::default();
+        if s.trim().is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(spec);
+        }
+        for clause in s.split(',') {
+            let parts: Vec<&str> = clause.trim().split(':').collect();
+            match parts.as_slice() {
+                ["server", mtbf, mttr] => {
+                    spec.server_mtbf = parse_mean(mtbf, "server MTBF")?;
+                    spec.server_mttr = parse_mean(mttr, "server MTTR")?;
+                }
+                ["gpu", mtbf] => {
+                    spec.gpu_mtbf = parse_mean(mtbf, "gpu MTBF")?;
+                }
+                ["link", mtbf, mttr] | ["link", mtbf, mttr, _] => {
+                    spec.link_mtbf = parse_mean(mtbf, "link MTBF")?;
+                    spec.link_mttr = parse_mean(mttr, "link MTTR")?;
+                    if let ["link", _, _, frac] = parts.as_slice() {
+                        let v: f64 = frac
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad degrade fraction '{frac}'"))?;
+                        if !(v > 0.0 && v < 1.0) {
+                            bail!("degrade fraction must be in (0, 1), got {frac}");
+                        }
+                        spec.degrade_to = v;
+                    }
+                }
+                ["seed", seed] => {
+                    spec.seed = Some(
+                        seed.parse()
+                            .map_err(|_| anyhow::anyhow!("bad fault seed '{seed}'"))?,
+                    );
+                }
+                _ => bail!(
+                    "bad fault clause '{clause}' (expected server:<mtbf>:<mttr>, \
+                     gpu:<mtbf>, link:<mtbf>:<mttr>[:<frac>] or seed:<u64>)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::uniform(4, 4, 1.0, 25.0)
+    }
+
+    #[test]
+    fn default_spec_is_inert() {
+        let spec = FaultSpec::default();
+        assert!(!spec.is_active());
+        let trace = spec.generate(&cluster(), 10_000, 42);
+        assert!(trace.is_empty());
+        assert_eq!(spec.to_string(), "none");
+        assert_eq!("none".parse::<FaultSpec>().unwrap(), spec);
+    }
+
+    #[test]
+    fn spec_string_roundtrip() {
+        let spec: FaultSpec = "server:2000:200,gpu:90000,link:1500:300:0.25,seed:7"
+            .parse()
+            .unwrap();
+        assert_eq!(spec.server_mtbf, 2000.0);
+        assert_eq!(spec.server_mttr, 200.0);
+        assert_eq!(spec.gpu_mtbf, 90000.0);
+        assert_eq!(spec.link_mtbf, 1500.0);
+        assert_eq!(spec.link_mttr, 300.0);
+        assert_eq!(spec.degrade_to, 0.25);
+        assert_eq!(spec.seed, Some(7));
+        let back: FaultSpec = spec.to_string().parse().unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!("server:0:10".parse::<FaultSpec>().is_err(), "zero MTBF");
+        assert!("server:100".parse::<FaultSpec>().is_err(), "missing MTTR");
+        assert!("link:100:10:1.5".parse::<FaultSpec>().is_err(), "fraction > 1");
+        assert!("link:100:10:0".parse::<FaultSpec>().is_err(), "fraction 0");
+        assert!("quux:1".parse::<FaultSpec>().is_err(), "unknown clause");
+        assert!("seed:x".parse::<FaultSpec>().is_err(), "bad seed");
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let spec: FaultSpec = "server:500:50,link:400:80:0.5,seed:3".parse().unwrap();
+        let c = cluster();
+        let a = spec.generate(&c, 5_000, 42);
+        let b = spec.generate(&c, 5_000, 42);
+        assert_eq!(a.events, b.events, "same spec+cluster+horizon ⇒ same trace");
+        assert!(!a.is_empty(), "active spec over a long horizon produces events");
+        assert!(
+            a.events.windows(2).all(|w| w[0].at <= w[1].at),
+            "events are time-sorted"
+        );
+        assert!(a.events.iter().all(|e| e.at < 5_000), "horizon bounds every event");
+        // crash/recover alternate per server
+        for s in 0..c.num_servers() {
+            let mut down = false;
+            for e in &a.events {
+                match e.action {
+                    FaultAction::ServerCrash { server } if server == s => {
+                        assert!(!down, "double crash on server {s}");
+                        down = true;
+                    }
+                    FaultAction::ServerRecover { server } if server == s => {
+                        assert!(down, "recover before crash on server {s}");
+                        down = false;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_seed_overrides_the_run_seed() {
+        let spec: FaultSpec = "server:500:50,seed:9".parse().unwrap();
+        let c = cluster();
+        assert_eq!(spec.generate(&c, 5_000, 1).events, spec.generate(&c, 5_000, 2).events);
+        let inherit: FaultSpec = "server:500:50".parse().unwrap();
+        assert_ne!(
+            inherit.generate(&c, 5_000, 1).events,
+            inherit.generate(&c, 5_000, 2).events,
+            "without seed: the run seed drives the stream"
+        );
+        assert_ne!(
+            inherit.resolved_seed(1),
+            1,
+            "fault stream decorrelates from the workload stream"
+        );
+    }
+
+    #[test]
+    fn gpu_failures_are_one_shot_per_gpu() {
+        let spec: FaultSpec = "gpu:1000,seed:5".parse().unwrap();
+        let c = cluster();
+        let trace = spec.generate(&c, 1_000_000_000, 0);
+        // horizon far beyond the mean: every GPU fails exactly once
+        assert_eq!(trace.len(), c.num_gpus());
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &trace.events {
+            match e.action {
+                FaultAction::GpuFail { server, gpu } => {
+                    assert!(seen.insert((server, gpu)), "duplicate GPU failure");
+                }
+                _ => panic!("unexpected action"),
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_action() {
+        let mut trace = FaultTrace {
+            seed: 11,
+            description: "hand-built".to_string(),
+            events: vec![
+                FaultEvent { at: 5, action: FaultAction::ServerCrash { server: 1 } },
+                FaultEvent { at: 9, action: FaultAction::GpuFail { server: 0, gpu: 3 } },
+                FaultEvent {
+                    at: 12,
+                    action: FaultAction::LinkDegrade { link: 2, factor: 0.25 },
+                },
+                FaultEvent { at: 20, action: FaultAction::LinkRestore { link: 2 } },
+                FaultEvent { at: 30, action: FaultAction::ServerRecover { server: 1 } },
+            ],
+        };
+        trace.normalize();
+        let s = trace.to_json().unwrap();
+        let back = FaultTrace::from_json(&s).unwrap();
+        assert_eq!(back.seed, 11);
+        assert_eq!(back.description, "hand-built");
+        assert_eq!(back.events, trace.events);
+        assert!(FaultTrace::from_json("{\"seed\":0}").is_err(), "missing fields error");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let spec: FaultSpec = "server:300:30,seed:2".parse().unwrap();
+        let trace = spec.generate(&cluster(), 2_000, 0);
+        let dir = crate::util::temp_dir("rarsched-faults").unwrap();
+        let p = dir.join("faults.json");
+        trace.save(&p).unwrap();
+        let back = FaultTrace::load(&p).unwrap();
+        assert_eq!(back.events, trace.events);
+        assert_eq!(back.description, spec.to_string());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

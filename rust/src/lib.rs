@@ -139,6 +139,33 @@
 //! (`BENCH_stream.json`), with a 10⁶-job × 10⁴-server case behind
 //! `RARSCHED_BENCH_STREAM_FULL=1`.
 //!
+//! ## Fault injection & recovery (`faults/`)
+//!
+//! The [`faults`] subsystem makes failures **first-class timestamped
+//! events** of the online loop, not an out-of-band mutation: a
+//! deterministic seeded generator ([`faults::FaultSpec`], `--faults
+//! "server:<mtbf>:<mttr>,gpu:<mtbf>,link:<mtbf>:<mttr>:<frac>"`)
+//! produces a sorted, serialisable [`faults::FaultTrace`] (`rarsched
+//! fault-trace` dumps one) of server crashes/recoveries, **permanent**
+//! GPU failures and link degrade/restore instants, merged into
+//! [`online::OnlineScheduler`] via `with_faults` ahead of same-slot
+//! arrivals. A crash kills its resident gangs (checkpointed progress
+//! survives per the `restart_slots` model); killed jobs re-enter through
+//! a FIFO recovery queue — re-placed by the locality-first migration
+//! candidate machinery over the surviving GPUs when migration is armed,
+//! else waiting for their original gang to heal — with starvation
+//! accounting (`recovery_wait_slots`). Link degradation flows through
+//! the [`topology::Topology::multiplier`] choke point (pristine
+//! snapshot, bit-exact restore) with link-keyed
+//! [`contention::DirtySet`] invalidation — no new contention seam. The
+//! empty trace skips every fault branch: `tests/fault_equivalence.rs`
+//! holds armed-but-empty runs bit-identical to unarmed ones across
+//! {flat, rack, pod} × all four policies × θ/migration on/off, and
+//! `tests/fault_chaos.rs` drives randomized fault storms asserting
+//! conservation (every admitted job ends exactly once), event-log
+//! causality with `Failed`/`Recovered`/`Degraded` kinds, O(peak live)
+//! memory and obs passivity under faults.
+//!
 //! ## Self-hosted static analysis (`lint/`)
 //!
 //! The [`lint`] subsystem (`rarsched archlint`, also built as the
@@ -178,6 +205,7 @@
 //! | `RARSCHED_BENCH_OBS_OUT` | artifact path for `benches/obs_overhead.rs` (`BENCH_obs.json`) |
 //! | `RARSCHED_BENCH_STREAM_OUT` | artifact path for `benches/stream.rs` (`BENCH_stream.json`) |
 //! | `RARSCHED_BENCH_STREAM_FULL` | `1` adds the 10⁶-job × 10⁴-server acceptance case to `benches/stream.rs` |
+//! | `RARSCHED_BENCH_FAULTS_OUT` | artifact path for `benches/faults.rs` (`BENCH_faults.json`) |
 //! | `RARSCHED_GIT_REV` | overrides the git revision stamped into run manifests ([`runtime::manifest::RunManifest`]) |
 
 pub mod cli;
@@ -186,6 +214,7 @@ pub mod config;
 pub mod contention;
 pub mod experiments;
 pub mod coordinator;
+pub mod faults;
 pub mod jobs;
 pub mod lint;
 pub mod metrics;

@@ -50,8 +50,8 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         name: "release-panic",
         invariant: "release-reachable hot paths (sim/, online/, contention/, net/, \
-                    topology/) use Option/sentinel returns, not unwrap/expect/panic or \
-                    unaudited slice indexing",
+                    topology/, faults/) use Option/sentinel returns, not \
+                    unwrap/expect/panic or unaudited slice indexing",
     },
     RuleInfo {
         name: "nondeterminism",
@@ -71,12 +71,13 @@ pub const RULES: &[RuleInfo] = &[
 ];
 
 /// Modules where a release-reachable panic is a finding (the PR 3 bug
-/// class): the simulator, the online loop, and the contention fabric.
-const HOT_MODULES: &[&str] = &["sim", "online", "contention", "net", "topology"];
+/// class): the simulator, the online loop, the contention fabric, and
+/// the fault-injection stream (merged into the online hot loop).
+const HOT_MODULES: &[&str] = &["sim", "online", "contention", "net", "topology", "faults"];
 
 /// Modules the obs-passivity rule patrols (where scheduler decisions
-/// are made).
-const OBS_MODULES: &[&str] = &["sim", "online", "sched", "contention", "net"];
+/// are made — fault recovery placement included).
+const OBS_MODULES: &[&str] = &["sim", "online", "sched", "contention", "net", "faults"];
 
 /// Modules exempt from the choke-point rule: the two that *implement*
 /// capacity semantics, plus passive/reporting and self-referential code.

@@ -17,7 +17,8 @@
 //!   python-recorded losses in the artifact manifest.
 
 use rarsched::cli::Args;
-use rarsched::config::{ExperimentConfig, ObsConfig, OnlineConfig};
+use rarsched::config::{ExperimentConfig, FaultsConfig, ObsConfig, OnlineConfig};
+use rarsched::faults::{FaultSpec, FaultTrace};
 use rarsched::coordinator::{train_job, TrainJobSpec};
 use rarsched::experiments::{self, ExperimentSetup};
 use rarsched::metrics::PolicySummary;
@@ -46,6 +47,7 @@ COMMANDS:
              [--no-clairvoyant] [--theta F] [--queue-cap N]
              [--migrate|--no-migrate] [--max-moves K] [--restart N]
              [--window W] [--stream] [--stream-jobs N]
+             [--faults SPEC|@trace.json]
              [--config f.toml] [--json] [--out dir]
              [--trace-out t.json] [--obs-json o.json] [--explain f|-]
              [--timeline links.csv]
@@ -68,9 +70,24 @@ COMMANDS:
              max_moves, restart_slots, stream, stream_jobs); explicit
              flags override. Defaults: theta inf, cap unbounded,
              migration off (= the control-free scheduler bit for bit).
+             --faults injects a deterministic fault trace (server
+             crash/recover, permanent GPU failure, link degradation)
+             into the event loop: either a generator spec
+             (server:<mtbf>:<mttr>, gpu:<mtbf>,
+             link:<mtbf>:<mttr>[:<frac>], seed:<u64>, comma-joined —
+             resolved against the run's cluster, safety horizon and
+             seed) or @file to replay a saved fault-trace JSON (see
+             fault-trace below). Crashed gangs re-queue for recovery:
+             with --migrate they re-place onto surviving servers,
+             otherwise they wait for their home gang to heal; both
+             charge --restart slots of checkpoint-restart. A --config
+             file's [faults] section (keys: spec, trace — mutually
+             exclusive) seeds this; the --faults flag overrides.
+             Omitted = the fault-free loop bit for bit.
   figures    --fig <4|5|6|7|motivation|ablations|online|topology|hetero|
-             overload|links|all> [--seed N] [--scale F] [--out dir]
-             [--full]
+             overload|faults|links|all> [--seed N] [--scale F] [--out dir]
+             [--full] (faults: rigid vs migration-armed recovery across
+             server-MTBF failure pressure, recovery ledger per row)
 
   observability (simulate/online): --trace-out writes a Chrome-trace
              JSON (chrome://tracing / Perfetto) of sim periods, planner
@@ -94,6 +111,12 @@ COMMANDS:
              absolute capacities (rust/src/net)
   trace      --out trace.json [--seed N] [--scale F] [--gap F]
              [--burst ON:OFF]
+  fault-trace <spec> [--seed N] [--servers N] [--topology SPEC]
+             [--horizon T] [--out faults.json]  resolve a fault spec
+             against a cluster shape and dump the deterministic fault
+             trace as JSON (stdout, or --out) — inspect what online
+             --faults would inject, or edit and replay via --faults
+             @faults.json / a config [faults] trace key
   train      --model <tiny|small|base> [--workers W] [--steps N]
              [--spread] [--artifacts dir]
   verify     [--model tiny] [--artifacts dir]
@@ -143,6 +166,7 @@ fn main() {
         "online" => cmd_online(&args),
         "figures" => cmd_figures(&args),
         "trace" => cmd_trace(&args),
+        "fault-trace" => cmd_fault_trace(&args),
         "train" => cmd_train(&args),
         "verify" => cmd_verify(&args),
         "obs-check" => cmd_obs_check(&args),
@@ -407,7 +431,8 @@ fn cmd_online(args: &Args) -> Result<()> {
     // scale, horizon, inter_bw) and the [online] overload controls;
     // explicit CLI flags always override it. Sections an online setup
     // cannot represent are called out instead of silently dropped.
-    let (base_setup, base_options, base_obs, base_online) = match args.get("config") {
+    let (base_setup, base_options, base_obs, base_online, base_faults) = match args.get("config")
+    {
         Some(path) => {
             let cfg = ExperimentConfig::load(std::path::Path::new(path))?;
             if !cfg.cluster.capacities.is_empty() {
@@ -455,13 +480,14 @@ fn cmd_online(args: &Args) -> Result<()> {
             s.topology = cfg.topology;
             s.model = cfg.contention;
             s.inter_bw = cfg.cluster.inter_bw;
-            (s, cfg.online.build_options(), cfg.obs.clone(), cfg.online)
+            (s, cfg.online.build_options(), cfg.obs.clone(), cfg.online, cfg.faults.clone())
         }
         None => (
             ExperimentSetup::paper(),
             OnlineOptions::default(),
             ObsConfig::default(),
             OnlineConfig::default(),
+            FaultsConfig::default(),
         ),
     };
     let setup = setup_from(args, base_setup)?;
@@ -479,6 +505,25 @@ fn cmd_online(args: &Args) -> Result<()> {
         anyhow::bail!("--stream-jobs must be >= 1");
     }
     let options = online_options_from(args, base_options)?;
+    // --faults overrides the config's [faults] section. A spec resolves
+    // against the run's own cluster, safety horizon and seed, so the
+    // injected trace is reproducible from the flags alone; @file replays
+    // a saved trace verbatim.
+    let fault_trace: Option<FaultTrace> = {
+        let cluster = setup.cluster();
+        match args.get("faults") {
+            Some(v) => {
+                if let Some(path) = v.strip_prefix('@') {
+                    Some(FaultTrace::load(std::path::Path::new(path))?)
+                } else {
+                    let spec: FaultSpec = v.parse()?;
+                    spec.is_active()
+                        .then(|| spec.generate(&cluster, options.max_slots, setup.seed))
+                }
+            }
+            None => base_faults.build_trace(&cluster, options.max_slots, setup.seed)?,
+        }
+    };
     let obs_cfg = obs_config_from(args, base_obs);
     let json = args.get_bool("json");
     let out_dir = args.get("out").map(std::path::PathBuf::from);
@@ -493,7 +538,7 @@ fn cmd_online(args: &Args) -> Result<()> {
 
     log::info!(
         "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}, \
-         theta {}, queue cap {}, migration {}{}",
+         theta {}, queue cap {}, migration {}{}{}",
         match burst {
             Some((on, off)) => format!(" (bursty on {on}/off {off})"),
             None => String::new(),
@@ -508,10 +553,14 @@ fn cmd_online(args: &Args) -> Result<()> {
             format!(", streaming over {stream_jobs} lazy arrivals")
         } else {
             String::new()
+        },
+        match &fault_trace {
+            Some(t) if !t.is_empty() => format!(", injecting {} fault events", t.len()),
+            _ => String::new(),
         }
     );
     let (table, windows) = if stream {
-        experiments::online::streaming_comparison(
+        experiments::online::streaming_comparison_faults(
             &setup,
             gap,
             stream_jobs,
@@ -519,15 +568,17 @@ fn cmd_online(args: &Args) -> Result<()> {
             clairvoyant,
             burst,
             options,
+            fault_trace.as_ref(),
         )?
     } else {
-        experiments::online::online_comparison_full(
+        experiments::online::online_comparison_faults(
             &setup,
             gap,
             &kinds,
             clairvoyant,
             burst,
             options,
+            fault_trace.as_ref(),
         )?
     };
     if json {
@@ -639,6 +690,25 @@ fn cmd_figures(args: &Args) -> Result<()> {
             log::info!("wrote overload.csv / overload.json to {d:?}");
         }
     }
+    if which == "faults" {
+        // failure-pressure sweep: rigid (wait-for-home) vs migration-armed
+        // recovery at decreasing server MTBF, on a deliberately small
+        // cluster so crashes land on resident gangs rather than idle spares
+        let mut fault_setup = setup.clone();
+        fault_setup.servers = fault_setup.servers.min(8);
+        let table = rarsched::experiments::online::fault_sweep(
+            &fault_setup,
+            2.0,
+            &[20_000.0, 5_000.0, 2_000.0],
+            500.0,
+        )?;
+        println!("{}", table.to_table());
+        if let Some(d) = &out_dir {
+            table.save_csv(&d.join("faults.csv"))?;
+            std::fs::write(d.join("faults.json"), table.to_json()?)?;
+            log::info!("wrote faults.csv / faults.json to {d:?}");
+        }
+    }
     if which == "links" {
         // per-link utilization timeline: plan once with SJF-BCO, then
         // replay with the timeline recorder armed — armed *after*
@@ -735,6 +805,42 @@ fn cmd_trace(args: &Args) -> Result<()> {
             _ => String::new(),
         }
     );
+    Ok(())
+}
+
+/// Resolve a fault spec against a cluster shape and dump the
+/// deterministic trace `online --faults` would inject — for inspection,
+/// or for editing and replaying via `--faults @file`.
+fn cmd_fault_trace(args: &Args) -> Result<()> {
+    let spec_str = match (args.positional().first(), args.get("spec")) {
+        (_, Some(s)) => s.to_string(),
+        (Some(s), None) => s.clone(),
+        (None, None) => anyhow::bail!(
+            "usage: rarsched fault-trace <spec> [--seed N] [--servers N] \
+             [--topology SPEC] [--horizon T] [--out faults.json]"
+        ),
+    };
+    let setup = setup_from(args, ExperimentSetup::paper())?;
+    let out = args.get("out").map(|s| s.to_string());
+    args.reject_unknown()?;
+    let spec: FaultSpec = spec_str.parse()?;
+    let cluster = setup.cluster();
+    let trace = spec.generate(&cluster, setup.horizon, setup.seed);
+    match &out {
+        Some(path) => {
+            trace.save(std::path::Path::new(path))?;
+            println!(
+                "wrote {} fault events to {path} (spec '{spec}', seed {}, horizon {} \
+                 slots, {} servers / {} GPUs)",
+                trace.len(),
+                trace.seed,
+                setup.horizon,
+                cluster.num_servers(),
+                cluster.num_gpus()
+            );
+        }
+        None => println!("{}", trace.to_json()?),
+    }
     Ok(())
 }
 

@@ -61,6 +61,26 @@ impl MigrationGuard {
     }
 }
 
+/// Which guard deferred a failed job's re-placement this attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryGuard {
+    /// Migration-armed recovery: no feasible placement existed on the
+    /// surviving GPUs.
+    NoCapacity,
+    /// Wait-only (rigid) recovery: the job's original gang is not yet
+    /// fully healthy and free.
+    HomeDown,
+}
+
+impl RecoveryGuard {
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryGuard::NoCapacity => "no_capacity",
+            RecoveryGuard::HomeDown => "home_down",
+        }
+    }
+}
+
 /// One audited decision.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Decision {
@@ -93,6 +113,22 @@ pub enum Decision {
         current_effective: f64,
         candidate_effective: f64,
     },
+    /// A fault killed this job's gang (`server` is the crashed/degraded
+    /// component's server; `workers` the gang size that lost its GPUs).
+    /// Paired one-to-one with `Failed` events.
+    FaultKill { job: JobId, at: u64, server: usize, workers: usize },
+    /// A failed job was re-placed on surviving GPUs after waiting
+    /// `wait_slots` in the recovery queue; `effective` is the bottleneck
+    /// degree of the new placement. Paired one-to-one with `Recovered`
+    /// events.
+    RecoveryPlace { job: JobId, at: u64, wait_slots: u64, effective: f64 },
+    /// A recovery attempt for this job was deferred by `guard`;
+    /// `wait_slots` is the starvation so far.
+    RecoveryDefer { job: JobId, at: u64, guard: RecoveryGuard, wait_slots: u64 },
+    /// A fabric link's capacity changed: degraded to `factor` of pristine
+    /// (1.0 = restored). Fabric-level — carries no real job id. Paired
+    /// one-to-one with `Degraded` events.
+    LinkChange { link: usize, at: u64, factor: f64 },
 }
 
 impl Decision {
@@ -101,7 +137,12 @@ impl Decision {
             Decision::Reject { job, .. }
             | Decision::Placement { job, .. }
             | Decision::MigrationCommit { job, .. }
-            | Decision::MigrationAbort { job, .. } => job,
+            | Decision::MigrationAbort { job, .. }
+            | Decision::FaultKill { job, .. }
+            | Decision::RecoveryPlace { job, .. }
+            | Decision::RecoveryDefer { job, .. } => job,
+            // fabric-level: the sentinel the event log uses for link events
+            Decision::LinkChange { .. } => JobId(usize::MAX),
         }
     }
 
@@ -110,7 +151,11 @@ impl Decision {
             Decision::Reject { at, .. }
             | Decision::Placement { at, .. }
             | Decision::MigrationCommit { at, .. }
-            | Decision::MigrationAbort { at, .. } => at,
+            | Decision::MigrationAbort { at, .. }
+            | Decision::FaultKill { at, .. }
+            | Decision::RecoveryPlace { at, .. }
+            | Decision::RecoveryDefer { at, .. }
+            | Decision::LinkChange { at, .. } => at,
         }
     }
 
@@ -120,15 +165,21 @@ impl Decision {
             Decision::Placement { .. } => "placement",
             Decision::MigrationCommit { .. } => "migration_commit",
             Decision::MigrationAbort { .. } => "migration_abort",
+            Decision::FaultKill { .. } => "fault_kill",
+            Decision::RecoveryPlace { .. } => "recovery_place",
+            Decision::RecoveryDefer { .. } => "recovery_defer",
+            Decision::LinkChange { .. } => "link_change",
         }
     }
 
     pub fn to_json(&self) -> Json {
-        let mut pairs = vec![
-            ("kind", Json::Str(self.kind().to_string())),
-            ("job", Json::Num(self.job().0 as f64)),
-            ("at", Json::Num(self.at() as f64)),
-        ];
+        let mut pairs = vec![("kind", Json::Str(self.kind().to_string()))];
+        // fabric-level records carry no job id (the sentinel is an
+        // in-memory convention, not a serialisable value)
+        if !matches!(self, Decision::LinkChange { .. }) {
+            pairs.push(("job", Json::Num(self.job().0 as f64)));
+        }
+        pairs.push(("at", Json::Num(self.at() as f64)));
         match *self {
             Decision::Reject { reason, projected, theta, .. } => {
                 pairs.push(("reason", Json::Str(reason.name().to_string())));
@@ -152,6 +203,22 @@ impl Decision {
                 pairs.push(("guard", Json::Str(guard.name().to_string())));
                 pairs.push(("current_effective", Json::Num(current_effective)));
                 pairs.push(("candidate_effective", Json::Num(candidate_effective)));
+            }
+            Decision::FaultKill { server, workers, .. } => {
+                pairs.push(("server", Json::Num(server as f64)));
+                pairs.push(("workers", Json::Num(workers as f64)));
+            }
+            Decision::RecoveryPlace { wait_slots, effective, .. } => {
+                pairs.push(("wait_slots", Json::Num(wait_slots as f64)));
+                pairs.push(("effective", Json::Num(effective)));
+            }
+            Decision::RecoveryDefer { guard, wait_slots, .. } => {
+                pairs.push(("guard", Json::Str(guard.name().to_string())));
+                pairs.push(("wait_slots", Json::Num(wait_slots as f64)));
+            }
+            Decision::LinkChange { link, factor, .. } => {
+                pairs.push(("link", Json::Num(link as f64)));
+                pairs.push(("factor", Json::Num(factor)));
             }
         }
         Json::obj(pairs)
@@ -187,6 +254,23 @@ impl Decision {
                      {candidate_effective:.2}",
                     guard.name()
                 )
+            }
+            Decision::FaultKill { job, at, server, workers } => format!(
+                "t={at} {job}: KILLED by fault on server {server} ({workers} workers lost)"
+            ),
+            Decision::RecoveryPlace { job, at, wait_slots, effective } => format!(
+                "t={at} {job}: RECOVER after {wait_slots} slots, effective degree {effective:.2}"
+            ),
+            Decision::RecoveryDefer { job, at, guard, wait_slots } => format!(
+                "t={at} {job}: WAIT ({} guard) {wait_slots} slots in recovery queue",
+                guard.name()
+            ),
+            Decision::LinkChange { link, at, factor } => {
+                if factor >= 1.0 {
+                    format!("t={at} l{link}: RESTORED to pristine capacity")
+                } else {
+                    format!("t={at} l{link}: DEGRADED to {factor:.2} of capacity")
+                }
             }
         }
     }
@@ -286,6 +370,15 @@ mod tests {
                 current_effective: 2.0,
                 candidate_effective: 1.0,
             },
+            Decision::FaultKill { job: JobId(4), at: 25, server: 1, workers: 8 },
+            Decision::RecoveryDefer {
+                job: JobId(4),
+                at: 25,
+                guard: RecoveryGuard::NoCapacity,
+                wait_slots: 0,
+            },
+            Decision::RecoveryPlace { job: JobId(4), at: 31, wait_slots: 6, effective: 2.0 },
+            Decision::LinkChange { link: 3, at: 40, factor: 0.25 },
         ]
     }
 
@@ -302,7 +395,7 @@ mod tests {
     fn json_report_carries_the_driving_numbers() {
         let records = samples();
         let json = to_json(&records);
-        assert_eq!(json.req("count").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(json.req("count").unwrap().as_u64().unwrap(), 8);
         let rows = json.req("decisions").unwrap().as_arr().unwrap();
         assert_eq!(rows[0].req("kind").unwrap().as_str().unwrap(), "reject");
         assert_eq!(rows[0].req("reason").unwrap().as_str().unwrap(), "theta");
@@ -310,6 +403,17 @@ mod tests {
         assert_eq!(rows[1].req("runner_up").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(rows[2].req("restart_slots").unwrap().as_u64().unwrap(), 2);
         assert_eq!(rows[3].req("guard").unwrap().as_str().unwrap(), "pays_for_itself");
+        assert_eq!(rows[4].req("kind").unwrap().as_str().unwrap(), "fault_kill");
+        assert_eq!(rows[4].req("server").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(rows[4].req("workers").unwrap().as_u64().unwrap(), 8);
+        assert_eq!(rows[5].req("guard").unwrap().as_str().unwrap(), "no_capacity");
+        assert_eq!(rows[6].req("wait_slots").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(rows[6].req("effective").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(rows[7].req("kind").unwrap().as_str().unwrap(), "link_change");
+        assert_eq!(rows[7].req("link").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(rows[7].req("factor").unwrap().as_f64().unwrap(), 0.25);
+        // fabric-level records carry no job id
+        assert!(rows[7].get("job").is_none());
         // dump parses back
         assert_eq!(Json::parse(&json.to_string()).unwrap(), json);
     }
@@ -320,7 +424,15 @@ mod tests {
         assert!(report.contains("REJECT (theta)"));
         assert!(report.contains("MIGRATE effective 3.00 -> 1.00"));
         assert!(report.contains("KEEP (pays_for_itself guard)"));
-        assert!(report.contains("4 decisions audited"));
+        assert!(report.contains("KILLED by fault on server 1"));
+        assert!(report.contains("WAIT (no_capacity guard)"));
+        assert!(report.contains("RECOVER after 6 slots"));
+        assert!(report.contains("DEGRADED to 0.25 of capacity"));
+        assert!(report.contains("8 decisions audited"));
         assert!(report.contains("reject: 1"));
+        assert!(report.contains("fault_kill: 1"));
+        // restore line
+        let restore = Decision::LinkChange { link: 0, at: 9, factor: 1.0 };
+        assert!(restore.render().contains("RESTORED to pristine capacity"));
     }
 }

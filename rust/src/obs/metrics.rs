@@ -58,10 +58,20 @@ pub enum Counter {
     MigrationAborts,
     /// Per-link timeline samples recorded.
     TimelineSamples,
+    /// Fault events applied by the online loop (all kinds).
+    FaultEvents,
+    /// Running gangs killed by a fault (server crash or GPU failure).
+    FaultKills,
+    /// Failed jobs re-placed on surviving GPUs.
+    RecoveryCommits,
+    /// Recovery attempts deferred by a guard (per attempt, not per job).
+    RecoveryDeferrals,
+    /// Link capacity changes applied (degrade + restore instants).
+    LinkChanges,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 21] = [
         Counter::DirtyHits,
         Counter::DirtyMisses,
         Counter::EnginePeriods,
@@ -78,6 +88,11 @@ impl Counter {
         Counter::MigrationCommits,
         Counter::MigrationAborts,
         Counter::TimelineSamples,
+        Counter::FaultEvents,
+        Counter::FaultKills,
+        Counter::RecoveryCommits,
+        Counter::RecoveryDeferrals,
+        Counter::LinkChanges,
     ];
 
     pub fn name(self) -> &'static str {
@@ -98,6 +113,11 @@ impl Counter {
             Counter::MigrationCommits => "migration_commits",
             Counter::MigrationAborts => "migration_aborts",
             Counter::TimelineSamples => "timeline_samples",
+            Counter::FaultEvents => "fault_events",
+            Counter::FaultKills => "fault_kills",
+            Counter::RecoveryCommits => "recovery_commits",
+            Counter::RecoveryDeferrals => "recovery_deferrals",
+            Counter::LinkChanges => "link_changes",
         }
     }
 }

@@ -8,6 +8,11 @@
 
 use crate::jobs::JobId;
 
+/// Sentinel "job" id carried by fabric-level events ([`EventKind::Degraded`])
+/// that have no job lifecycle: the causality audit skips it, per-job
+/// queries never match it (real slot-recycled ids are dense and small).
+pub const LINK_EVENT_JOB: JobId = JobId(usize::MAX);
+
 /// What happened.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EventKind {
@@ -19,17 +24,28 @@ pub enum EventKind {
     Completion,
     /// Admission control turned the arrival away (θ-threshold exceeded or
     /// the pending-queue cap was hit): the job never queues, never runs.
+    /// Also terminal for a queued or recovering job that a permanent
+    /// capacity loss made unplaceable (retroactive re-projection).
     Rejected,
     /// A completion freed capacity that strictly lowers this running
     /// job's bottleneck: it was preempted and re-placed (checkpoint
     /// restart charged in slots). May repeat; always between Start and
     /// Completion.
     Migrated,
+    /// A fault killed the job's gang (server crash or GPU failure): the
+    /// job keeps its checkpointed progress and enters the recovery queue.
+    Failed,
+    /// A failed job was re-placed on surviving GPUs (restart charged in
+    /// slots, like a migration); it is running again.
+    Recovered,
+    /// A fabric link's capacity changed (degrade or restore). Carries the
+    /// [`LINK_EVENT_JOB`] sentinel — no job lifecycle is involved.
+    Degraded,
 }
 
 impl EventKind {
     /// Number of variants (dense-array sizing for per-kind counters).
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 8;
 
     /// Dense index of the variant (`0..COUNT`), for allocation-free
     /// per-kind counting in streaming sinks.
@@ -40,6 +56,9 @@ impl EventKind {
             EventKind::Completion => 2,
             EventKind::Rejected => 3,
             EventKind::Migrated => 4,
+            EventKind::Failed => 5,
+            EventKind::Recovered => 6,
+            EventKind::Degraded => 7,
         }
     }
 }
@@ -91,19 +110,45 @@ impl EventLog {
     /// timestamps (a prefix is fine — truncated runs):
     ///
     /// ```text
-    /// Arrival ──▶ Start ──▶ (Migrated)* ──▶ Completion
-    ///    └──────▶ Rejected                      (both terminal)
+    /// Arrival ──▶ Start ──▶ (Migrated)* ──▶ Completion   (terminal)
+    ///    │           ▲  │
+    ///    │           │  └──▶ Failed ──▶ Recovered ──▶ (running again)
+    ///    │           └─────────┘           │
+    ///    │                                 └──▶ Rejected (terminal:
+    ///    └──────▶ Rejected (terminal)           unplaceable survivor)
     /// ```
+    ///
+    /// [`Degraded`](EventKind::Degraded) events are fabric-level: they
+    /// must carry the [`LINK_EVENT_JOB`] sentinel (and only they may) and
+    /// are excluded from the per-job lifecycle.
     pub fn is_causally_ordered(&self) -> bool {
         // archlint: allow(release-panic) windows(2) yields exactly-2 slices
         if self.events.windows(2).any(|w| w[0].at > w[1].at) {
             return false;
         }
-        let max_id = self.events.iter().map(|e| e.job.0).max().map_or(0, |m| m + 1);
+        let max_id = self
+            .events
+            .iter()
+            .filter(|e| e.job != LINK_EVENT_JOB)
+            .map(|e| e.job.0)
+            .max()
+            .map_or(0, |m| m + 1);
         // per-job (lifecycle stage, last event slot); stages:
-        // 0 = unseen, 1 = arrived, 2 = running, 3 = terminal
+        // 0 = unseen, 1 = arrived, 2 = running, 3 = terminal,
+        // 4 = failed/awaiting recovery
         let mut stage: Vec<(u8, u64)> = vec![(0, 0); max_id];
         for e in &self.events {
+            if e.job == LINK_EVENT_JOB {
+                // fabric event: valid only for the Degraded kind
+                if e.kind != EventKind::Degraded {
+                    return false;
+                }
+                continue;
+            }
+            if e.kind == EventKind::Degraded {
+                // a link event must never carry a real job id
+                return false;
+            }
             let (at_stage, last_at) = stage[e.job.0];
             if e.at < last_at {
                 return false;
@@ -114,6 +159,9 @@ impl EventLog {
                 (1, EventKind::Rejected) => 3,
                 (2, EventKind::Migrated) => 2,
                 (2, EventKind::Completion) => 3,
+                (2, EventKind::Failed) => 4,
+                (4, EventKind::Recovered) => 2,
+                (4, EventKind::Rejected) => 3,
                 _ => return false,
             };
             stage[e.job.0] = (next, e.at);
@@ -182,16 +230,33 @@ mod tests {
         assert_eq!(log.for_job(JobId(0)).count(), 0);
     }
 
+    const ALL_KINDS: [EventKind; EventKind::COUNT] = [
+        EventKind::Arrival,
+        EventKind::Start,
+        EventKind::Completion,
+        EventKind::Rejected,
+        EventKind::Migrated,
+        EventKind::Failed,
+        EventKind::Recovered,
+        EventKind::Degraded,
+    ];
+
+    #[test]
+    fn kind_indices_are_dense() {
+        let mut seen = [false; EventKind::COUNT];
+        for kind in ALL_KINDS {
+            let i = kind.index();
+            assert!(i < EventKind::COUNT);
+            assert!(!seen[i], "duplicate index for {kind:?}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every index 0..COUNT is hit");
+    }
+
     #[test]
     fn rejected_is_terminal_against_every_kind() {
         // Rejected-then-anything is flagged: rejection ends the lifecycle
-        for kind in [
-            EventKind::Arrival,
-            EventKind::Start,
-            EventKind::Completion,
-            EventKind::Rejected,
-            EventKind::Migrated,
-        ] {
+        for kind in ALL_KINDS {
             let mut log = EventLog::default();
             log.push(0, JobId(0), EventKind::Arrival);
             log.push(0, JobId(0), EventKind::Rejected);
@@ -199,6 +264,157 @@ mod tests {
             log.push(1, JobId(0), kind);
             assert!(!log.is_causally_ordered(), "Rejected then {kind:?} must be flagged");
         }
+    }
+
+    #[test]
+    fn terminal_state_matrix_for_completion_and_rejection() {
+        // nothing may follow either terminal stage, whatever the kind —
+        // including the new fault-lifecycle kinds
+        for terminal in [EventKind::Completion, EventKind::Rejected] {
+            for kind in ALL_KINDS {
+                let mut log = EventLog::default();
+                log.push(0, JobId(0), EventKind::Arrival);
+                if terminal == EventKind::Completion {
+                    log.push(0, JobId(0), EventKind::Start);
+                }
+                log.push(2, JobId(0), terminal);
+                assert!(log.is_causally_ordered());
+                log.push(3, JobId(0), kind);
+                assert!(
+                    !log.is_causally_ordered(),
+                    "{terminal:?} then {kind:?} must be flagged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn failed_recovered_lifecycle_is_accepted() {
+        // crash mid-run, wait, recover, run to completion — twice
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(5, JobId(0), EventKind::Failed);
+        log.push(9, JobId(0), EventKind::Recovered);
+        log.push(12, JobId(0), EventKind::Failed);
+        log.push(13, JobId(0), EventKind::Recovered);
+        log.push(30, JobId(0), EventKind::Completion);
+        assert!(log.is_causally_ordered());
+        assert_eq!(log.count(EventKind::Failed), 2);
+        assert_eq!(log.count(EventKind::Recovered), 2);
+        // a recovery abandoned as unplaceable ends in Rejected
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(5, JobId(0), EventKind::Failed);
+        log.push(5, JobId(0), EventKind::Rejected);
+        assert!(log.is_causally_ordered());
+    }
+
+    #[test]
+    fn recovered_before_failed_is_flagged() {
+        // Recovered without a preceding Failed is invalid from every
+        // non-failed stage
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(1, JobId(0), EventKind::Recovered);
+        assert!(!log.is_causally_ordered(), "queued job cannot recover");
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(3, JobId(0), EventKind::Recovered);
+        assert!(!log.is_causally_ordered(), "running job cannot recover");
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Recovered);
+        assert!(!log.is_causally_ordered(), "unseen job cannot recover");
+        // a queued (never started) job cannot fail either: it holds no gang
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(2, JobId(0), EventKind::Failed);
+        assert!(!log.is_causally_ordered(), "queued job cannot fail");
+        // and a failed job must recover before completing or migrating
+        for kind in [EventKind::Completion, EventKind::Migrated, EventKind::Failed] {
+            let mut log = EventLog::default();
+            log.push(0, JobId(0), EventKind::Arrival);
+            log.push(0, JobId(0), EventKind::Start);
+            log.push(4, JobId(0), EventKind::Failed);
+            log.push(6, JobId(0), kind);
+            assert!(!log.is_causally_ordered(), "Failed then {kind:?} must be flagged");
+        }
+    }
+
+    #[test]
+    fn crash_during_migration_interleaving() {
+        // job 0 migrates (frozen restart window), the target's server
+        // crashes mid-restart, the job recovers elsewhere and completes;
+        // job 1 rides through untouched — the audit accepts the
+        // interleaving and each per-job slice stays lifecycle-clean
+        let mut log = EventLog::default();
+        log.push(0, JobId(0), EventKind::Arrival);
+        log.push(0, JobId(0), EventKind::Start);
+        log.push(1, JobId(1), EventKind::Arrival);
+        log.push(1, JobId(1), EventKind::Start);
+        log.push(4, JobId(0), EventKind::Migrated);
+        log.push(6, JobId(0), EventKind::Failed); // crash lands mid-restart
+        log.push(6, LINK_EVENT_JOB, EventKind::Degraded);
+        log.push(8, JobId(0), EventKind::Recovered);
+        log.push(11, JobId(1), EventKind::Completion);
+        log.push(15, JobId(0), EventKind::Migrated); // free to migrate again
+        log.push(25, JobId(0), EventKind::Completion);
+        assert!(log.is_causally_ordered());
+        let job0: Vec<EventKind> = log.for_job(JobId(0)).map(|e| e.kind).collect();
+        assert_eq!(
+            job0,
+            [
+                EventKind::Arrival,
+                EventKind::Start,
+                EventKind::Migrated,
+                EventKind::Failed,
+                EventKind::Recovered,
+                EventKind::Migrated,
+                EventKind::Completion
+            ]
+        );
+        // Recovered must not precede the Failed in the interleaving: swap
+        // the two and the audit flags it
+        let mut bad = EventLog::default();
+        bad.push(0, JobId(0), EventKind::Arrival);
+        bad.push(0, JobId(0), EventKind::Start);
+        bad.push(4, JobId(0), EventKind::Recovered);
+        bad.push(6, JobId(0), EventKind::Failed);
+        assert!(!bad.is_causally_ordered());
+    }
+
+    #[test]
+    fn degraded_events_are_fabric_level_only() {
+        // sentinel-carried Degraded events thread through any lifecycle
+        let mut log = EventLog::default();
+        log.push(0, LINK_EVENT_JOB, EventKind::Degraded);
+        log.push(1, JobId(0), EventKind::Arrival);
+        log.push(1, JobId(0), EventKind::Start);
+        log.push(3, LINK_EVENT_JOB, EventKind::Degraded); // restore instant
+        log.push(7, JobId(0), EventKind::Completion);
+        assert!(log.is_causally_ordered());
+        assert_eq!(log.count(EventKind::Degraded), 2);
+        // the sentinel never collides with a real job's slice
+        assert_eq!(log.for_job(JobId(0)).count(), 3);
+        // a Degraded event with a real job id is malformed
+        let mut bad = EventLog::default();
+        bad.push(0, JobId(0), EventKind::Arrival);
+        bad.push(1, JobId(0), EventKind::Degraded);
+        assert!(!bad.is_causally_ordered());
+        // and the sentinel may not carry lifecycle kinds
+        let mut bad = EventLog::default();
+        bad.push(0, LINK_EVENT_JOB, EventKind::Arrival);
+        assert!(!bad.is_causally_ordered());
+        // a giant sentinel id must not blow up the stage vector (O(jobs),
+        // not O(usize::MAX))
+        let lone = {
+            let mut log = EventLog::default();
+            log.push(0, LINK_EVENT_JOB, EventKind::Degraded);
+            log
+        };
+        assert!(lone.is_causally_ordered());
     }
 
     #[test]

@@ -333,7 +333,9 @@ pub struct MigrationControl {
     /// At most this many re-placements per completion event (K).
     pub max_moves: usize,
     /// Checkpoint-restart penalty in slots: the migrated job makes no
-    /// progress for this long after the move.
+    /// progress for this long after the move. Fault recovery charges the
+    /// same penalty when it re-places a killed gang (same checkpoint
+    /// model), whether or not migration is enabled.
     pub restart_slots: u64,
 }
 

@@ -85,6 +85,22 @@ impl ContentionTracker {
         &self.topology
     }
 
+    /// Fault injection: degrade one fabric link to `factor` (0, 1] of its
+    /// pristine capacity. The tracker owns the run's working copy of the
+    /// topology, so the change lands exactly where every bottleneck and
+    /// what-if query reads its multipliers — callers pair this with
+    /// [`DirtySet::on_capacity_change`](crate::contention::DirtySet::on_capacity_change)
+    /// so crossing members re-rate at the next drain.
+    pub fn degrade_link(&mut self, l: crate::topology::LinkId, factor: f64) {
+        self.topology.degrade_link(l, factor);
+    }
+
+    /// Fault injection: restore one degraded link to its pristine
+    /// capacity (bit-identical multipliers to a never-degraded fabric).
+    pub fn restore_link(&mut self, l: crate::topology::LinkId) {
+        self.topology.restore_link(l);
+    }
+
     /// Active-ring count on one fabric link (the raw Eq. 6 count the
     /// obs timeline samples).
     pub fn link_count(&self, l: crate::topology::LinkId) -> usize {

@@ -162,6 +162,10 @@ pub struct Topology {
     ref_gbps: f64,
     /// How consumers evaluate contention at a link.
     model: ContentionModel,
+    /// Pristine `(oversub, capacity)` per link, snapshotted lazily on the
+    /// first fault-injected degradation so restoration is bit-exact.
+    /// Empty on a never-degraded fabric (and in every clone of one).
+    pristine: Vec<(f64, LinkCapacity)>,
 }
 
 impl Topology {
@@ -179,6 +183,7 @@ impl Topology {
             capacity: vec![LinkCapacity::reference(DEFAULT_UPLINK_GBPS); num_servers],
             ref_gbps: DEFAULT_UPLINK_GBPS,
             model: ContentionModel::EffectiveDegree,
+            pristine: Vec::new(),
         }
     }
 
@@ -209,6 +214,7 @@ impl Topology {
             capacity,
             ref_gbps: DEFAULT_UPLINK_GBPS,
             model: ContentionModel::EffectiveDegree,
+            pristine: Vec::new(),
         }
     }
 
@@ -241,6 +247,7 @@ impl Topology {
             capacity,
             ref_gbps: DEFAULT_UPLINK_GBPS,
             model: ContentionModel::EffectiveDegree,
+            pristine: Vec::new(),
         }
     }
 
@@ -400,6 +407,48 @@ impl Topology {
         match self.model {
             ContentionModel::EffectiveDegree => self.oversub[l.0],
             ContentionModel::MaxMinFair => self.capacity[l.0].ratio,
+        }
+    }
+
+    /// Fault injection: link `l` drops to `factor` (0, 1] of its pristine
+    /// capacity. Both per-link multiplier sources move together —
+    /// capacity scales by `factor`, ratio and oversubscription by
+    /// `1/factor` — so the change flows to every consumer through
+    /// [`multiplier`](Self::multiplier) with no new seam, under either
+    /// [`ContentionModel`]. Degradations don't compound: the factor is
+    /// always against the pristine value (snapshotted on first use), and
+    /// `factor == 1.0` restores it bit for bit. Out-of-range links are
+    /// ignored (fault traces are validated against a cluster, but a
+    /// capacity change must never panic mid-run).
+    pub fn degrade_link(&mut self, l: LinkId, factor: f64) {
+        debug_assert!(factor > 0.0 && factor <= 1.0, "degrade factor {factor} out of (0, 1]");
+        if l.0 >= self.oversub.len() || !(factor > 0.0 && factor <= 1.0) {
+            return;
+        }
+        if self.pristine.is_empty() {
+            self.pristine = self
+                .oversub
+                .iter()
+                .zip(self.capacity.iter())
+                .map(|(&o, &c)| (o, c))
+                .collect();
+        }
+        let Some(&(base_oversub, base_cap)) = self.pristine.get(l.0) else { return };
+        if factor >= 1.0 {
+            self.oversub[l.0] = base_oversub;
+            self.capacity[l.0] = base_cap;
+        } else {
+            self.oversub[l.0] = base_oversub / factor;
+            self.capacity[l.0] =
+                LinkCapacity { gbps: base_cap.gbps * factor, ratio: base_cap.ratio / factor };
+        }
+    }
+
+    /// Fault injection: link `l` returns to its pristine capacity
+    /// (bit-identical multipliers to a never-degraded fabric).
+    pub fn restore_link(&mut self, l: LinkId) {
+        if !self.pristine.is_empty() {
+            self.degrade_link(l, 1.0);
         }
     }
 
@@ -1063,5 +1112,66 @@ mod tests {
         let share_bn = mm.bottleneck(&pl, &counts);
         assert_eq!(share_bn.link, Some(t.server_uplink(ServerId(0))));
         assert_eq!((share_bn.p, share_bn.oversub), (2, 1.0));
+    }
+
+    #[test]
+    fn degrade_and_restore_are_bit_exact() {
+        let pristine = Topology::racks(8, 4, 3.0);
+        let mut t = pristine.clone();
+        let l = t.rack_uplink(0);
+        let (o0, g0, r0) = (t.oversub(l), t.link_gbps(l), t.capacity_ratio(l));
+        t.degrade_link(l, 0.25);
+        assert_eq!(t.oversub(l), o0 / 0.25);
+        assert_eq!(t.link_gbps(l), g0 * 0.25);
+        assert_eq!(t.capacity_ratio(l), r0 / 0.25);
+        assert_eq!(t.multiplier(l), o0 / 0.25, "EffectiveDegree sees the degradation");
+        // degradations replace, never compound: a second factor is still
+        // taken against the pristine value
+        t.degrade_link(l, 0.5);
+        assert_eq!(t.oversub(l), o0 / 0.5);
+        // restore is bit-identical to never having degraded
+        t.restore_link(l);
+        assert_eq!((t.oversub(l), t.link_gbps(l), t.capacity_ratio(l)), (o0, g0, r0));
+        assert_eq!(t.multiplier(l), pristine.multiplier(l));
+        // other links are untouched throughout
+        let other = t.server_uplink(ServerId(2));
+        assert_eq!(t.multiplier(other), pristine.multiplier(other));
+        // restore on a never-degraded fabric is a no-op
+        let mut fresh = pristine.clone();
+        fresh.restore_link(l);
+        assert_eq!(fresh.multiplier(l), pristine.multiplier(l));
+    }
+
+    #[test]
+    fn degraded_link_moves_the_bottleneck_under_both_models() {
+        // 2 racks of 2 servers, no oversubscription: a ring across the
+        // racks sees multiplier 1.0 everywhere. Degrade rack 0's uplink
+        // to half capacity and it becomes the bottleneck at equal counts.
+        let c = Cluster::uniform(4, 4, 1.0, 25.0);
+        for model in [ContentionModel::EffectiveDegree, ContentionModel::MaxMinFair] {
+            let mut t = Topology::racks(4, 2, 1.0).with_model(model);
+            let pl = place(&c, &[(0, 0), (2, 0)]);
+            let counts = vec![2usize; t.num_links()];
+            let before = t.bottleneck(&pl, &counts);
+            assert_eq!(before.oversub, 1.0);
+            t.degrade_link(t.rack_uplink(0), 0.5);
+            let after = t.bottleneck(&pl, &counts);
+            assert_eq!(after.link, Some(t.rack_uplink(0)), "{model:?}");
+            assert_eq!(after.oversub, 2.0, "{model:?}");
+            t.restore_link(t.rack_uplink(0));
+            assert_eq!(t.bottleneck(&pl, &counts), before, "{model:?}");
+        }
+    }
+
+    #[test]
+    fn degrade_out_of_range_or_bad_factor_is_ignored_in_release() {
+        let mut t = Topology::flat(2);
+        let snapshot = (t.oversub(LinkId(0)), t.link_gbps(LinkId(0)));
+        t.degrade_link(LinkId(99), 0.5);
+        if !cfg!(debug_assertions) {
+            t.degrade_link(LinkId(0), 0.0);
+            t.degrade_link(LinkId(0), -1.0);
+        }
+        assert_eq!((t.oversub(LinkId(0)), t.link_gbps(LinkId(0))), snapshot);
     }
 }

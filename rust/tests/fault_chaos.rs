@@ -1,0 +1,311 @@
+//! Chaos ladder: randomized fault storms (server crash/recover,
+//! permanent GPU failure, link degrade/restore) generated from seeded
+//! `FaultSpec`s and driven through the online loop over flat, rack and
+//! pod fabrics, every policy, and the θ/migration control corners.
+//! Whatever the storm does, the structural invariants must hold:
+//!
+//! * **conservation** — every arrival ends up with exactly one
+//!   `JobRecord` or exactly one rejected-ledger entry, never both,
+//!   never neither (on truncated runs, jobs still pending at the
+//!   horizon are the only permitted gap);
+//! * **causality** — the event log stays well-formed under the extended
+//!   Failed → (Recovered | Rejected) lifecycle;
+//! * **ledger arithmetic** — the run aggregates equal their event
+//!   counts (`failed` = Failed events, `recovered` = Recovered events);
+//! * **memory** — the streaming engine stays O(peak live) under storms
+//!   and matches the materialized run bit for bit;
+//! * **obs passivity** — arming trace/explain/timeline around a stormy
+//!   run changes nothing, and the audit is count-exact (one FaultKill
+//!   per kill, one RecoveryPlace per recovery, one LinkChange per
+//!   Degraded event).
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::faults::{FaultSpec, FaultTrace};
+use rarsched::jobs::{JobId, JobSpec};
+use rarsched::obs::trace::MemSink;
+use rarsched::obs::{explain, metrics, timeline, trace, Decision};
+use rarsched::online::{
+    AdmissionControl, EventKind, MigrationControl, OnlineOptions, OnlineOutcome,
+    OnlinePolicyKind, OnlineScheduler,
+};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// The obs recorders and counters are process-global; every test in
+/// this binary serializes on one lock so the passivity test's metric
+/// deltas aren't polluted by a concurrent storm.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fabrics() -> Vec<(&'static str, Cluster)> {
+    let flat = Cluster::uniform(8, 8, 1.0, 25.0);
+    vec![
+        ("flat", flat.clone()),
+        ("rack", flat.clone().with_topology(Topology::racks(8, 4, 2.0))),
+        ("pod", flat.clone().with_topology(Topology::pods(8, 2, 2, 2.0, 4.0))),
+    ]
+}
+
+fn jobs_for(seed: u64, mean_gap: f64) -> Vec<JobSpec> {
+    TraceGenerator::paper_scaled(0.1).generate_online(seed, mean_gap)
+}
+
+/// A storm with every fault class enabled, decorrelated per `seed`.
+fn storm(cluster: &Cluster, seed: u64) -> FaultTrace {
+    let spec: FaultSpec = "server:700:150,gpu:40000,link:500:100:0.3"
+        .parse()
+        .expect("storm spec");
+    let trace = spec.generate(cluster, 30_000, seed);
+    assert!(!trace.is_empty(), "storm generated no events; retune the spec");
+    trace
+}
+
+/// Conservation + causality + ledger arithmetic for one stormy outcome.
+fn assert_invariants(out: &OnlineOutcome, jobs: &[JobSpec], ctx: &str) {
+    assert!(out.events.is_causally_ordered(), "{ctx}: event log causality");
+    assert_eq!(
+        out.events.count(EventKind::Arrival),
+        jobs.len(),
+        "{ctx}: every job arrives exactly once"
+    );
+    assert_eq!(
+        out.events.count(EventKind::Failed) as u64,
+        out.failed,
+        "{ctx}: failed ledger vs Failed events"
+    );
+    assert_eq!(
+        out.events.count(EventKind::Recovered) as u64,
+        out.recovered,
+        "{ctx}: recovered ledger vs Recovered events"
+    );
+    // recovery-terminal rejections emit a Rejected event *with* a partial
+    // record and stay off the never-started ledger, so the event count
+    // dominates the ledger
+    assert!(
+        out.events.count(EventKind::Rejected) >= out.rejected.len(),
+        "{ctx}: Rejected events vs ledger"
+    );
+    if out.recovered == 0 {
+        assert_eq!(out.recovery_wait_slots, 0, "{ctx}: wait without recoveries");
+    }
+
+    // conservation: records and the rejected ledger partition the trace
+    let recorded: BTreeSet<JobId> = out.outcome.records.iter().map(|r| r.job).collect();
+    assert_eq!(recorded.len(), out.outcome.records.len(), "{ctx}: duplicate records");
+    let rejected: BTreeSet<JobId> = out.rejected.iter().copied().collect();
+    assert_eq!(rejected.len(), out.rejected.len(), "{ctx}: duplicate rejections");
+    assert!(recorded.is_disjoint(&rejected), "{ctx}: job both recorded and rejected");
+    let all: BTreeSet<JobId> = jobs.iter().map(|j| j.id).collect();
+    let accounted: BTreeSet<JobId> = recorded.union(&rejected).copied().collect();
+    assert!(accounted.is_subset(&all), "{ctx}: phantom job ids");
+    if out.outcome.truncated {
+        // jobs still pending at the horizon are the only permitted gap
+        assert!(
+            accounted.len() <= all.len(),
+            "{ctx}: over-accounted on a truncated run"
+        );
+    } else {
+        assert_eq!(accounted, all, "{ctx}: job lost (no record, no rejection)");
+    }
+}
+
+fn control_grid() -> Vec<(&'static str, OnlineOptions)> {
+    vec![
+        ("inert", OnlineOptions { max_slots: 10_000_000, ..OnlineOptions::default() }),
+        (
+            "migrate",
+            OnlineOptions {
+                migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+                max_slots: 10_000_000,
+                ..OnlineOptions::default()
+            },
+        ),
+        (
+            "theta+migrate",
+            OnlineOptions {
+                admission: AdmissionControl { theta: 6.0, queue_cap: 8 },
+                migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+                max_slots: 10_000_000,
+                ..OnlineOptions::default()
+            },
+        ),
+    ]
+}
+
+#[test]
+fn storms_conserve_jobs_and_keep_events_causal() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    for storm_seed in [0xc4a05_u64, 0xbeef] {
+        let jobs = jobs_for(0x10ad ^ storm_seed, 1.0);
+        for (fabric, cluster) in fabrics() {
+            let tr = storm(&cluster, storm_seed);
+            for (controls, options) in control_grid() {
+                for kind in OnlinePolicyKind::ALL {
+                    let ctx = format!("{fabric}/{kind}/{controls}/storm#{storm_seed:x}");
+                    let out = OnlineScheduler::new(&cluster, &jobs, &params)
+                        .with_options(options)
+                        .with_faults(&tr)
+                        .run(kind.build().as_mut());
+                    assert_invariants(&out, &jobs, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_storm_stays_o_active_and_matches_materialized() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x57e4, 1.0);
+    let (_, cluster) = fabrics().remove(1); // rack fabric: link faults bite
+    let tr = storm(&cluster, 0xc4a05);
+    let options = OnlineOptions {
+        migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        max_slots: 10_000_000,
+        ..OnlineOptions::default()
+    };
+    let sched = OnlineScheduler::new(&cluster, &jobs, &params)
+        .with_options(options)
+        .with_faults(&tr);
+    let out = sched.run(OnlinePolicyKind::SjfBco.build().as_mut());
+    let stream = sched.run_streaming(jobs.iter(), OnlinePolicyKind::SjfBco.build().as_mut());
+
+    // O(active) memory: peak live jobs bound by the trace, never below
+    // the queue high-water mark, and the ledgers agree bit for bit
+    assert!(stream.peak_live >= stream.max_pending, "peak_live vs max_pending");
+    assert!(stream.peak_live <= jobs.len(), "peak_live exceeds the trace");
+    assert_eq!(stream.makespan, out.outcome.makespan);
+    assert_eq!(stream.avg_jct, out.outcome.avg_jct, "float sums: exact equality");
+    assert_eq!(stream.truncated, out.outcome.truncated);
+    assert_eq!(stream.failed, out.failed);
+    assert_eq!(stream.recovered, out.recovered);
+    assert_eq!(stream.recovery_wait_slots, out.recovery_wait_slots);
+    assert_eq!(stream.event_count(EventKind::Failed), out.failed);
+    assert_eq!(stream.event_count(EventKind::Recovered), out.recovered);
+    if !stream.truncated {
+        assert_eq!(
+            stream.finished + stream.rejected,
+            jobs.len() as u64,
+            "streaming conservation"
+        );
+    }
+}
+
+#[test]
+fn stormy_runs_are_obs_passive_and_audits_are_count_exact() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x0b5, 1.0);
+    let (_, cluster) = fabrics().remove(1);
+    let tr = storm(&cluster, 0xbeef);
+    let (controls, options) = control_grid().remove(2); // θ + migration
+    for kind in OnlinePolicyKind::ALL {
+        let ctx = format!("rack/{kind}/{controls}");
+        assert!(!trace::armed() && !explain::armed() && !timeline::armed());
+        let baseline = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(options)
+            .with_faults(&tr)
+            .run(kind.build().as_mut());
+
+        let before = metrics::snapshot();
+        let sink: Arc<MemSink> = MemSink::new();
+        trace::arm(sink.clone());
+        explain::arm();
+        timeline::arm();
+        let armed = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(options)
+            .with_faults(&tr)
+            .run(kind.build().as_mut());
+        trace::disarm();
+        let _events = sink.take();
+        let decisions = explain::disarm();
+        let _samples = timeline::disarm();
+        let delta = before.delta(&metrics::snapshot());
+
+        // passivity: the storm outcome is bit-identical armed or not
+        assert_eq!(baseline.outcome.makespan, armed.outcome.makespan, "{ctx}");
+        assert_eq!(baseline.outcome.avg_jct, armed.outcome.avg_jct, "{ctx}");
+        assert_eq!(baseline.events.events(), armed.events.events(), "{ctx}");
+        assert_eq!(baseline.rejected, armed.rejected, "{ctx}");
+        assert_eq!(baseline.migrations, armed.migrations, "{ctx}");
+        assert_eq!(
+            (baseline.failed, baseline.recovered, baseline.recovery_wait_slots),
+            (armed.failed, armed.recovered, armed.recovery_wait_slots),
+            "{ctx}"
+        );
+
+        // count-exact audit: one record per fault decision of each kind
+        let kills = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::FaultKill { .. }))
+            .count();
+        assert_eq!(kills as u64, armed.failed, "{ctx}: FaultKill audit");
+        let places = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::RecoveryPlace { .. }))
+            .count();
+        assert_eq!(places as u64, armed.recovered, "{ctx}: RecoveryPlace audit");
+        let link_changes = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::LinkChange { .. }))
+            .count();
+        assert_eq!(
+            link_changes,
+            armed.events.count(EventKind::Degraded),
+            "{ctx}: LinkChange audit vs Degraded events"
+        );
+        let deferrals = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::RecoveryDefer { .. }))
+            .count();
+
+        // and the counter registry agrees with the audit exactly
+        assert_eq!(delta["fault_kills"], armed.failed, "{ctx}: kill counter");
+        assert_eq!(delta["recovery_commits"], armed.recovered, "{ctx}: commit counter");
+        assert_eq!(
+            delta["recovery_deferrals"],
+            deferrals as u64,
+            "{ctx}: deferral counter"
+        );
+        assert_eq!(
+            delta["link_changes"],
+            link_changes as u64,
+            "{ctx}: link-change counter"
+        );
+        // trailing storm events past the end of the run are never consumed
+        assert!(
+            delta["fault_events"] <= tr.len() as u64,
+            "{ctx}: consumed more fault events than the trace holds"
+        );
+    }
+}
+
+/// The storm must actually exercise the fault paths at this load,
+/// otherwise the ledger and audit assertions above are vacuous.
+#[test]
+fn storms_actually_bite() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x10ad ^ 0xc4a05, 1.0);
+    let (_, cluster) = fabrics().remove(1);
+    let tr = storm(&cluster, 0xc4a05);
+    let (_, options) = control_grid().remove(1); // migration armed
+    let out = OnlineScheduler::new(&cluster, &jobs, &params)
+        .with_options(options)
+        .with_faults(&tr)
+        .run(OnlinePolicyKind::SjfBco.build().as_mut());
+    assert!(out.failed > 0, "no gang was ever killed; retune the storm");
+    assert!(out.recovered > 0, "no recovery ever committed; retune the storm");
+    assert!(
+        out.events.count(EventKind::Degraded) > 0,
+        "no link ever degraded; retune the storm"
+    );
+}

@@ -1,0 +1,155 @@
+//! Fault-injection equivalence by construction (see `rarsched::faults`):
+//! the online loop gates every fault branch on `fault_armed =
+//! !faults.is_empty()`, so attaching the **empty** fault trace must be
+//! **bit-identical** to never calling `with_faults` at all — same
+//! records, same event sequence, same rejections, migrations, window
+//! series and float aggregates — on flat, rack and pod fabrics, across
+//! every online policy with θ-admission and migration on and off.
+//!
+//! A second property covers the armed-but-quiet case: a trace whose
+//! events all land after the last job completes is also bit-identical,
+//! because the loop exits when no work remains and trailing faults are
+//! never applied (there is nothing left to observe them).
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::faults::{FaultAction, FaultEvent, FaultTrace};
+use rarsched::jobs::JobSpec;
+use rarsched::online::{
+    AdmissionControl, MigrationControl, OnlineOptions, OnlineOutcome, OnlinePolicyKind,
+    OnlineScheduler,
+};
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+
+/// The three fabrics of the acceptance criterion, over one 8-server
+/// cluster so every case shares the same GPU inventory.
+fn fabrics() -> Vec<(&'static str, Cluster)> {
+    let flat = Cluster::uniform(8, 8, 1.0, 25.0);
+    vec![
+        ("flat", flat.clone()),
+        ("rack", flat.clone().with_topology(Topology::racks(8, 4, 2.0))),
+        ("pod", flat.clone().with_topology(Topology::pods(8, 2, 2, 2.0, 4.0))),
+    ]
+}
+
+/// ~16-job smoke trace with Poisson arrivals (small gap = heavy load —
+/// what drives the θ/queue-cap and migration paths).
+fn jobs_for(seed: u64, mean_gap: f64) -> Vec<JobSpec> {
+    TraceGenerator::paper_scaled(0.1).generate_online(seed, mean_gap)
+}
+
+/// Bitwise comparison of two online outcomes: both runs use the same
+/// engine, so every field — floats included — must match exactly.
+fn assert_online_bitwise(a: &OnlineOutcome, b: &OnlineOutcome, ctx: &str) {
+    assert_eq!(a.outcome.makespan, b.outcome.makespan, "{ctx}: makespan");
+    assert_eq!(a.outcome.slots_simulated, b.outcome.slots_simulated, "{ctx}: slots");
+    assert_eq!(a.outcome.truncated, b.outcome.truncated, "{ctx}: truncation");
+    assert_eq!(a.outcome.periods, b.outcome.periods, "{ctx}: periods");
+    assert_eq!(a.outcome.avg_jct, b.outcome.avg_jct, "{ctx}: avg JCT");
+    assert_eq!(
+        a.outcome.gpu_utilization, b.outcome.gpu_utilization,
+        "{ctx}: utilization"
+    );
+    assert_eq!(a.outcome.records.len(), b.outcome.records.len(), "{ctx}: record count");
+    for (x, y) in a.outcome.records.iter().zip(&b.outcome.records) {
+        assert_eq!(x.job, y.job, "{ctx}");
+        assert_eq!(
+            (x.arrival, x.start, x.finish),
+            (y.arrival, y.start, y.finish),
+            "{ctx}: {} lifecycle",
+            x.job
+        );
+        assert_eq!(x.iterations_done, y.iterations_done, "{ctx}: {}", x.job);
+        assert_eq!(x.migrations, y.migrations, "{ctx}: {}", x.job);
+        assert_eq!(x.mean_tau, y.mean_tau, "{ctx}: {} mean_tau (bitwise)", x.job);
+    }
+    assert_eq!(a.rejected, b.rejected, "{ctx}: rejections");
+    assert_eq!(a.max_pending, b.max_pending, "{ctx}: queue high-water");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migration records");
+    assert_eq!(a.events.events(), b.events.events(), "{ctx}: event sequence");
+    assert_eq!(
+        (a.failed, a.recovered, a.recovery_wait_slots),
+        (b.failed, b.recovered, b.recovery_wait_slots),
+        "{ctx}: fault ledger"
+    );
+    assert_eq!(a.windows, b.windows, "{ctx}: window series (bitwise)");
+}
+
+/// Every θ/migration corner the online loop branches on.
+fn control_grid() -> Vec<OnlineOptions> {
+    let mut grid = Vec::new();
+    for (theta_on, migrate) in [(false, false), (true, false), (false, true), (true, true)] {
+        let admission = if theta_on {
+            AdmissionControl { theta: 6.0, queue_cap: 4 }
+        } else {
+            AdmissionControl::default()
+        };
+        grid.push(OnlineOptions {
+            admission,
+            migration: MigrationControl { enabled: migrate, max_moves: 2, restart_slots: 5 },
+            max_slots: 10_000_000,
+            window: Some(64),
+            ..OnlineOptions::default()
+        });
+    }
+    grid
+}
+
+#[test]
+fn empty_fault_trace_is_bit_identical() {
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0xfa17, 0.5);
+    let empty = FaultTrace::empty();
+    for (fabric, cluster) in fabrics() {
+        for (i, options) in control_grid().into_iter().enumerate() {
+            for kind in OnlinePolicyKind::ALL {
+                let ctx = format!("{fabric}/{kind}/controls#{i}");
+                let plain = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(options)
+                    .run(kind.build().as_mut());
+                let armed = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(options)
+                    .with_faults(&empty)
+                    .run(kind.build().as_mut());
+                assert_online_bitwise(&plain, &armed, &ctx);
+                assert_eq!(armed.failed, 0, "{ctx}: phantom kills");
+                assert_eq!(armed.recovered, 0, "{ctx}: phantom recoveries");
+            }
+        }
+    }
+}
+
+#[test]
+fn trailing_faults_after_completion_are_never_applied() {
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0xfa17, 0.5);
+    // far past any non-truncated makespan at this load, well inside the
+    // safety horizon — armed, but with nothing left to observe the fault
+    let mut late = FaultTrace {
+        seed: 0,
+        description: "post-completion storm".into(),
+        events: vec![
+            FaultEvent { at: 9_000_000, action: FaultAction::ServerCrash { server: 0 } },
+            FaultEvent { at: 9_000_500, action: FaultAction::ServerRecover { server: 0 } },
+        ],
+    };
+    late.normalize();
+    for (fabric, cluster) in fabrics() {
+        for (i, options) in control_grid().into_iter().enumerate() {
+            for kind in OnlinePolicyKind::ALL {
+                let ctx = format!("{fabric}/{kind}/controls#{i} (trailing)");
+                let plain = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(options)
+                    .run(kind.build().as_mut());
+                assert!(!plain.outcome.truncated, "{ctx}: load too heavy for the premise");
+                let armed = OnlineScheduler::new(&cluster, &jobs, &params)
+                    .with_options(options)
+                    .with_faults(&late)
+                    .run(kind.build().as_mut());
+                assert_online_bitwise(&plain, &armed, &ctx);
+                assert_eq!(armed.failed, 0, "{ctx}: trailing fault was applied");
+            }
+        }
+    }
+}

@@ -12,6 +12,7 @@
 
 use rarsched::cluster::Cluster;
 use rarsched::contention::ContentionParams;
+use rarsched::faults::FaultSpec;
 use rarsched::jobs::JobSpec;
 use rarsched::obs::trace::MemSink;
 use rarsched::obs::{explain, metrics, timeline, trace, Decision, LinkSample, TraceEvent};
@@ -246,6 +247,78 @@ fn online_loop_is_identical_armed_and_disarmed() {
                 );
             }
         }
+    }
+}
+
+/// Passivity holds under fault injection too: a deterministic fault
+/// trace (server crashes + link degradation) driven through the online
+/// loop is bit-identical armed and disarmed, and the fault-side audit is
+/// count-exact — one `FaultKill` per killed gang, one `RecoveryPlace`
+/// per committed recovery, one `LinkChange` per Degraded event, with
+/// the counter registry agreeing with all three.
+#[test]
+fn fault_injected_runs_are_identical_armed_and_disarmed() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x5eed, 0.5);
+    let cluster = Cluster::uniform(8, 8, 1.0, 25.0).with_topology(Topology::racks(8, 4, 2.0));
+    let faults = "server:900:200,link:800:150:0.4,seed:3"
+        .parse::<FaultSpec>()
+        .unwrap()
+        .generate(&cluster, 20_000, 0x5eed);
+    assert!(!faults.is_empty(), "fault case is vacuous without events");
+    for migrate in [false, true] {
+        let options = OnlineOptions {
+            migration: MigrationControl { enabled: migrate, max_moves: 2, restart_slots: 5 },
+            max_slots: 10_000_000,
+            ..OnlineOptions::default()
+        };
+        let ctx = format!("rack/sjf-bco faults (migrate={migrate})");
+        assert!(!trace::armed() && !explain::armed() && !timeline::armed());
+        let baseline = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(options)
+            .with_faults(&faults)
+            .run(OnlinePolicyKind::SjfBco.build().as_mut());
+
+        let before = metrics::snapshot();
+        let sink = arm_all();
+        let armed = OnlineScheduler::new(&cluster, &jobs, &params)
+            .with_options(options)
+            .with_faults(&faults)
+            .run(OnlinePolicyKind::SjfBco.build().as_mut());
+        let (_events, decisions, _samples) = disarm_all(&sink);
+        let delta = before.delta(&metrics::snapshot());
+
+        assert_online_bitwise(&baseline, &armed, &ctx);
+        assert_eq!(
+            (baseline.failed, baseline.recovered, baseline.recovery_wait_slots),
+            (armed.failed, armed.recovered, armed.recovery_wait_slots),
+            "{ctx}: fault ledger"
+        );
+
+        let kills = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::FaultKill { .. }))
+            .count();
+        assert_eq!(kills as u64, armed.failed, "{ctx}: FaultKill audit");
+        let places = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::RecoveryPlace { .. }))
+            .count();
+        assert_eq!(places as u64, armed.recovered, "{ctx}: RecoveryPlace audit");
+        let link_changes = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::LinkChange { .. }))
+            .count();
+        assert_eq!(delta["fault_kills"], armed.failed, "{ctx}: kill counter");
+        assert_eq!(delta["recovery_commits"], armed.recovered, "{ctx}: commit counter");
+        assert_eq!(delta["link_changes"], link_changes as u64, "{ctx}: link counter");
+        assert!(
+            delta["fault_events"] <= faults.len() as u64,
+            "{ctx}: consumed more fault events than the trace holds"
+        );
+        // the deterministic case must actually exercise the kill path
+        assert!(armed.failed > 0, "{ctx}: no gang killed; retune the fault trace");
     }
 }
 

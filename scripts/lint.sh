@@ -9,10 +9,10 @@
 #
 #   release-panic   — .unwrap()/.expect(/panic!/unreachable!/todo!/
 #                     unimplemented! in hot-path modules
-#                     (sim/ online/ contention/ net/ topology/)
+#                     (sim/ online/ contention/ net/ topology/ faults/)
 #   obs-binding     — `let name = metrics::get(...)` / `let name = obs::…`
 #                     in decision modules (sim/ online/ sched/
-#                     contention/ net/): observability results must not
+#                     contention/ net/ faults/): observability results must not
 #                     feed scheduling state (underscore bindings pass)
 #   hash-iteration  — iterating a locally-declared HashMap/HashSet
 #                     (.iter()/.keys()/.values()/.drain()/`for … in &m`):
@@ -150,11 +150,11 @@ out=""
 for f in $(find "$ROOT" -name '*.rs' | sort); do
     files=$((files + 1))
     case "$f" in
-        */sim/*|*/online/*|*/contention/*|*/net/*|*/topology/*) hot=1 ;;
+        */sim/*|*/online/*|*/contention/*|*/net/*|*/topology/*|*/faults/*) hot=1 ;;
         *) hot=0 ;;
     esac
     case "$f" in
-        */sim/*|*/online/*|*/sched/*|*/contention/*|*/net/*) dec=1 ;;
+        */sim/*|*/online/*|*/sched/*|*/contention/*|*/net/*|*/faults/*) dec=1 ;;
         *) dec=0 ;;
     esac
     if ! file_out=$(awk -v path="$f" -v hot="$hot" -v dec="$dec" "$AWK_PROG" "$f" "$f"); then

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification pipeline: fallback lint -> fmt-check -> release
 # build -> tests -> archlint -> clippy -> bench smoke -> trace
-# well-formedness -> streaming smoke.
+# well-formedness -> streaming smoke -> fault-injection smoke.
 #
 # Stage 1 is scripts/lint.sh — the toolchain-free awk mirror of the top
 # archlint rules. It runs BEFORE the cargo-presence check on purpose: a
@@ -20,13 +20,18 @@
 # BENCH_net_alloc.json (progressive-filling allocations/sec +
 # MaxMinFair-vs-EffectiveDegree engine events/sec) and BENCH_obs.json
 # (observability hook overhead: disarmed vs Null-sink vs Mem-sink
-# tracing) and BENCH_stream.json (streaming vs materialized engine on the
+# tracing), BENCH_stream.json (streaming vs materialized engine on the
 # same 10^5-job arrival stream, with the sketch-vs-exact equivalence
-# block gated below) so the perf trajectory is recorded across PRs. The
-# last two stages emit a real `--trace-out` Chrome-trace file gated by
-# `rarsched obs-check` (well-formed JSON, known phases, monotone
-# non-negative timestamps) and run an `online --stream` smoke through the
-# full CLI path, gating on its artifacts and manifest stamp.
+# block gated below) and BENCH_faults.json (fault-injection overhead:
+# no-trace vs empty-trace — asserted bit-identical in-bench and gated on
+# the recorded boolean here — plus storm cases with the recovery ledger)
+# so the perf trajectory is recorded across PRs. The last three stages
+# emit a real `--trace-out` Chrome-trace file gated by `rarsched
+# obs-check` (well-formed JSON, known phases, monotone non-negative
+# timestamps), run an `online --stream` smoke through the full CLI path,
+# gating on its artifacts and manifest stamp, and run the fault path
+# end-to-end: `fault-trace` dumps a seeded trace which `online --faults
+# @trace.json` replays, gated on the injection actually being routed.
 #
 # Failure policy: when cargo is PRESENT, every stage is a hard gate —
 # fmt drift, a build error, a test failure, a missing bench artifact or
@@ -40,7 +45,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== [1/9] scripts/lint.sh (toolchain-free fallback rules) =="
+echo "== [1/10] scripts/lint.sh (toolchain-free fallback rules) =="
 # Hard gate, and the only one that runs without cargo.
 scripts/lint.sh
 
@@ -50,7 +55,7 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
-echo "== [2/9] cargo fmt --check =="
+echo "== [2/10] cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     # fmt drift is a hard failure (gated step)
     cargo fmt --all -- --check
@@ -58,13 +63,13 @@ else
     echo "WARN: rustfmt unavailable in this toolchain; fmt gate skipped"
 fi
 
-echo "== [3/9] cargo build --release =="
+echo "== [3/10] cargo build --release =="
 cargo build --release --offline
 
-echo "== [4/9] cargo test -q =="
+echo "== [4/10] cargo test -q =="
 cargo test -q --offline
 
-echo "== [5/9] archlint (self-hosted static analysis -> LINT.json) =="
+echo "== [5/10] archlint (self-hosted static analysis -> LINT.json) =="
 # The analyzer exits non-zero on any unannotated finding; --out writes
 # the artifact even on failure so the diagnostics land in both places.
 LINT_OUT="$PWD/LINT.json"
@@ -84,7 +89,7 @@ for field in '"findings_total": *0' '"rules"' '"allows"' '"manifest"'; do
 done
 echo "OK: LINT.json written and gated"
 
-echo "== [6/9] cargo clippy ([workspace.lints] profile) =="
+echo "== [6/10] cargo clippy ([workspace.lints] profile) =="
 # Curated warn-level surface (unwrap_used, indexing_slicing, float_cmp,
 # iter_over_hash_type, …) — soft-gated on toolchain availability because
 # clippy is not baked into every container; archlint above is the hard
@@ -95,7 +100,7 @@ else
     echo "WARN: cargo-clippy unavailable in this toolchain; clippy stage skipped"
 fi
 
-echo "== [7/9] bench smoke (online_hot_path + sim_engine + net_alloc + obs + stream -> BENCH_*.json) =="
+echo "== [7/10] bench smoke (online_hot_path + sim_engine + net_alloc + obs + stream + faults -> BENCH_*.json) =="
 # cargo runs bench binaries with cwd at the package root (rust/), so pin
 # the output paths to the repo root explicitly.
 RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
@@ -133,8 +138,17 @@ RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_STREAM_OUT="$PWD/BENCH_stream.json" \
     cargo bench --offline --bench stream
 
+# Fault injection: the empty-trace case is asserted bit-identical to the
+# fault-free baseline inside the bench (equivalence by construction),
+# and the storm cases record the recovery ledger (kills, recoveries,
+# mean recovery wait) for wait-for-home vs migration-armed recovery.
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_FAULTS_OUT="$PWD/BENCH_faults.json" \
+    cargo bench --offline --bench faults
+
 for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json \
-                BENCH_net_alloc.json BENCH_obs.json BENCH_stream.json; do
+                BENCH_net_alloc.json BENCH_obs.json BENCH_stream.json \
+                BENCH_faults.json; do
     if [ -f "$artifact" ]; then
         echo "OK: $artifact written"
     else
@@ -156,7 +170,18 @@ for field in '"sketch_within_bound": *true' '"exact_match": *true' '"manifest"';
 done
 echo "OK: BENCH_stream.json equivalence block gated"
 
-echo "== [8/9] trace export well-formedness (simulate --trace-out -> obs-check) =="
+# Same belt-and-braces on the fault bench: the empty fault trace must
+# have matched the fault-free baseline bit for bit (asserted in-bench
+# before the file is written; gated here against stale artifacts).
+for field in '"empty_trace_exact_match": *true' '"manifest"'; do
+    if ! grep -Eq "$field" BENCH_faults.json; then
+        echo "ERROR: BENCH_faults.json missing $field" >&2
+        exit 1
+    fi
+done
+echo "OK: BENCH_faults.json equivalence block gated"
+
+echo "== [8/10] trace export well-formedness (simulate --trace-out -> obs-check) =="
 # Emit a real Chrome trace through the full CLI path, then gate on the
 # validator: well-formed JSON, known phases, non-negative and per-thread
 # monotone timestamps. The sample trace is a throwaway smoke artifact.
@@ -171,7 +196,7 @@ fi
 ./target/release/rarsched obs-check "$TRACE_SAMPLE"
 rm -f "$TRACE_SAMPLE" "$TRACE_SAMPLE.manifest.json"
 
-echo "== [9/9] streaming online smoke (online --stream -> artifacts + manifest) =="
+echo "== [9/10] streaming online smoke (online --stream -> artifacts + manifest) =="
 # The O(active)-memory engine through the full CLI path: a lazy 2000-job
 # stream on the 0.1-scale fabric, artifacts written by the same streaming
 # writers the tests pin byte-identical. Gate on the table artifacts and
@@ -192,5 +217,44 @@ if ! grep -q '"seed"' "$STREAM_DIR/run_manifest.json"; then
 fi
 echo "OK: streaming smoke artifacts + manifest stamp"
 rm -rf "$STREAM_DIR"
+
+echo "== [10/10] fault-injection smoke (fault-trace dump -> online --faults replay) =="
+# The fault path end-to-end through the CLI: dump a seeded trace with the
+# standalone subcommand, replay it through `online --faults @file`, and
+# gate on (a) the dump being a well-formed non-empty trace and (b) the
+# comparison table recording that fault events were actually injected
+# (its title carries the "N fault events" suffix only when the merged
+# trace is non-empty — a silently inert flag fails here).
+FAULT_DIR="$PWD/fault_smoke"
+FAULT_TRACE="$PWD/fault_trace_smoke.json"
+rm -rf "$FAULT_DIR"
+rm -f "$FAULT_TRACE"
+./target/release/rarsched fault-trace "server:800:150,seed:3" \
+    --servers 8 --horizon 20000 --out "$FAULT_TRACE" >/dev/null
+if [ ! -f "$FAULT_TRACE" ]; then
+    echo "ERROR: fault-trace did not emit $FAULT_TRACE" >&2
+    exit 1
+fi
+for field in '"events"' '"seed"' 'server-crash'; do
+    if ! grep -q "$field" "$FAULT_TRACE"; then
+        echo "ERROR: fault_trace_smoke.json missing $field" >&2
+        exit 1
+    fi
+done
+./target/release/rarsched online --scale 0.1 --gap 1.0 --policies fifo,sjf-bco \
+    --migrate --faults "@$FAULT_TRACE" --out "$FAULT_DIR" >/dev/null
+for artifact in online.csv online.json run_manifest.json; do
+    if [ ! -f "$FAULT_DIR/$artifact" ]; then
+        echo "ERROR: online --faults did not emit $artifact" >&2
+        exit 1
+    fi
+done
+if ! grep -q 'fault events' "$FAULT_DIR/online.json"; then
+    echo "ERROR: online --faults ran but the table does not record injected fault events" >&2
+    exit 1
+fi
+echo "OK: fault-injection smoke (trace dump + replay + injection recorded)"
+rm -rf "$FAULT_DIR"
+rm -f "$FAULT_TRACE"
 
 echo "verify: all stages passed"
