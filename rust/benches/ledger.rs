@@ -1,0 +1,189 @@
+//! Flight-recorder overhead: disarmed vs armed ledger digesting on the
+//! online loop, across checkpoint cadences.
+//!
+//! The ledger taps every `RunSink` stream (events, records, rejections,
+//! migrations) plus the fault feed and takes a state checkpoint every
+//! `cadence` slots; its passivity promise (see `rarsched::obs::ledger`)
+//! is one relaxed atomic load per hook when disarmed. This bench puts a
+//! number on both sides:
+//!
+//! * `off`       — recorder disarmed: the production default/baseline;
+//! * `cad<N>`    — armed at an N-slot checkpoint cadence (hash folding
+//!   on every stream item + census/link-count probes every N slots);
+//! * `cad1000+ev` — `--ledger-events` mode: the per-interval
+//!   fingerprint ring is recorded too (what divergence forensics pays).
+//!
+//! Every armed iteration re-arms and disarms so each run digests from a
+//! clean state — exactly the CLI lifecycle. A passivity assert compares
+//! armed outcomes against the disarmed reference; any drift aborts the
+//! bench.
+//!
+//! Results (per-case items/sec and armed-vs-off overhead) go to
+//! `BENCH_ledger.json` (override with `RARSCHED_BENCH_LEDGER_OUT`);
+//! `scripts/verify.sh` requires the artifact. Run with `--release`.
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::obs::ledger;
+use rarsched::runtime::RunManifest;
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use rarsched::util::bench::Bench;
+use rarsched::util::Json;
+
+use rarsched::online::{MigrationControl, OnlineOptions, OnlinePolicyKind, OnlineScheduler};
+
+struct Case {
+    name: String,
+    mode: String,
+    cadence: u64,
+    events: bool,
+    mean_ms: f64,
+    stream_items: u64,
+    checkpoints: u64,
+}
+
+fn main() {
+    let params = ContentionParams::paper();
+    let mut b = Bench::new("ledger");
+    let mut cases: Vec<Case> = Vec::new();
+
+    let cluster =
+        Cluster::uniform(8, 8, 1.0, 25.0).with_topology(Topology::racks(8, 4, 2.0));
+    let jobs = TraceGenerator::paper_scaled(0.4).generate_online(42, 1.0);
+    let options = OnlineOptions {
+        migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        max_slots: 10_000_000,
+        ..OnlineOptions::default()
+    };
+    let sched = OnlineScheduler::new(&cluster, &jobs, &params).with_options(options);
+    assert!(!ledger::armed(), "ledger armed before the bench started");
+    let reference = sched.run(OnlinePolicyKind::SjfBco.build().as_mut());
+    assert!(!reference.outcome.truncated, "reference run truncated");
+    // every item the recorder would digest on one run (fault stream: 0)
+    let stream_items = (reference.events.events().len()
+        + reference.outcome.records.len()
+        + reference.rejected.len()
+        + reference.migrations.len()) as u64;
+
+    // (mode tag, arming: None = disarmed, Some((cadence, events)))
+    let modes: [(&str, Option<(u64, bool)>); 5] = [
+        ("off", None),
+        ("cad100", Some((100, false))),
+        ("cad1000", Some((1000, false))),
+        ("cad10000", Some((10_000, false))),
+        ("cad1000+ev", Some((1000, true))),
+    ];
+    for (mode, arming) in modes {
+        let name = format!("{mode}/rack2x2.0-8srv");
+        let mut checkpoints = 0u64;
+        let mean_ms = {
+            let r = b.run(&name, || {
+                if let Some((cadence, events)) = arming {
+                    ledger::arm(cadence, events, None);
+                }
+                let out = sched.run(OnlinePolicyKind::SjfBco.build().as_mut());
+                if arming.is_some() {
+                    // disarm every iteration: each run digests from a
+                    // clean state, and the close-out cost is honestly
+                    // part of what an armed --ledger run pays
+                    let led = ledger::disarm().expect("armed ledger must disarm");
+                    checkpoints = led.checkpoints.len() as u64;
+                    assert_eq!(
+                        led.streams[ledger::Stream::Events.index()].count,
+                        reference.events.events().len() as u64,
+                        "event stream count drifted"
+                    );
+                }
+                out.outcome.makespan
+            });
+            r.mean_ms()
+        };
+        // passivity spot check: arming must not change the outcome
+        if let Some((cadence, events)) = arming {
+            ledger::arm(cadence, events, None);
+        }
+        let armed_run = sched.run(OnlinePolicyKind::SjfBco.build().as_mut());
+        let _ = ledger::disarm();
+        assert_eq!(armed_run.outcome.makespan, reference.outcome.makespan, "{name}");
+        assert_eq!(armed_run.outcome.avg_jct, reference.outcome.avg_jct, "{name}");
+        assert_eq!(armed_run.rejected, reference.rejected, "{name}");
+        let (cadence, events) = arming.unwrap_or((0, false));
+        cases.push(Case {
+            name,
+            mode: mode.to_string(),
+            cadence,
+            events,
+            mean_ms,
+            stream_items,
+            checkpoints,
+        });
+    }
+    b.report();
+
+    let base = cases[0].mean_ms.max(1e-12);
+    let mut overheads: Vec<(String, f64)> = Vec::new();
+    for c in &cases[1..] {
+        let pct = (c.mean_ms - base) / base * 100.0;
+        println!(
+            "  -> {}: off {:.3} ms | armed {:.3} ms ({:+.2}%), {} checkpoints/run",
+            c.mode, base, c.mean_ms, pct, c.checkpoints
+        );
+        overheads.push((c.mode.clone(), pct));
+    }
+
+    let manifest = RunManifest::new(
+        42,
+        "bench:ledger",
+        &std::env::args().skip(1).collect::<Vec<_>>(),
+    );
+    let json = Json::obj(vec![
+        ("suite", Json::Str("ledger".into())),
+        (
+            "cases",
+            Json::arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        let secs = c.mean_ms / 1e3;
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("mode", Json::Str(c.mode.clone())),
+                            ("cadence", Json::Num(c.cadence as f64)),
+                            ("events_ring", Json::Bool(c.events)),
+                            ("mean_ms", Json::Num(c.mean_ms)),
+                            ("stream_items_per_run", Json::Num(c.stream_items as f64)),
+                            (
+                                "items_per_sec",
+                                Json::Num(c.stream_items as f64 / secs.max(1e-12)),
+                            ),
+                            ("checkpoints_per_run", Json::Num(c.checkpoints as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "overhead",
+            Json::arr(
+                overheads
+                    .iter()
+                    .map(|(mode, pct)| {
+                        Json::obj(vec![
+                            ("mode", Json::Str(mode.clone())),
+                            ("armed_overhead_pct", Json::Num(*pct)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("passivity_ok", Json::Bool(true)),
+        ("manifest", manifest.to_json()),
+    ]);
+    let out = std::env::var("RARSCHED_BENCH_LEDGER_OUT")
+        .unwrap_or_else(|_| "BENCH_ledger.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warning: could not write {out}: {e}"),
+    }
+}

@@ -188,13 +188,28 @@ impl FaultsConfig {
 /// Keys: `trace_out` (Chrome-trace JSON), `obs_json` (counter/histogram
 /// registry dump), `explain` (decision-audit JSON; `-` renders the
 /// human-readable report to stdout), `timeline` (per-link utilization
-/// CSV).
+/// CSV), `ledger` (run-digest flight-recorder JSON — see
+/// [`crate::obs::ledger`]), `ledger_events` (bool: keep a bounded ring
+/// of per-interval event fingerprints so `rarsched diff` can pin the
+/// first divergent event), `ledger_cadence` (int ≥ 1: checkpoint slot
+/// cadence; default 1000, or the `--window` width when one is armed),
+/// `profile` (bool: fold the trace spans into an in-terminal total/self
+/// time profile at run end).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ObsConfig {
     pub trace_out: Option<String>,
     pub obs_json: Option<String>,
     pub explain: Option<String>,
     pub timeline: Option<String>,
+    /// Run-digest ledger output path (`--ledger`).
+    pub ledger: Option<String>,
+    /// Record per-interval event-fingerprint rings (`--ledger-events`).
+    pub ledger_events: bool,
+    /// Checkpoint cadence in slots (`--ledger-cadence`); `None` picks the
+    /// default (the window width under `--window`, else 1000 slots).
+    pub ledger_cadence: Option<u64>,
+    /// Print the in-terminal span profile at run end (`--profile`).
+    pub profile: bool,
 }
 
 impl ObsConfig {
@@ -204,6 +219,8 @@ impl ObsConfig {
             || self.obs_json.is_some()
             || self.explain.is_some()
             || self.timeline.is_some()
+            || self.ledger.is_some()
+            || self.profile
     }
 }
 
@@ -449,6 +466,7 @@ impl ExperimentConfig {
             ("obs_json", &mut cfg.obs.obs_json),
             ("explain", &mut cfg.obs.explain),
             ("timeline", &mut cfg.obs.timeline),
+            ("ledger", &mut cfg.obs.ledger),
         ] {
             if let Some(v) = doc.get("obs", key) {
                 let path = v.as_str()?;
@@ -457,6 +475,19 @@ impl ExperimentConfig {
                 }
                 *slot = Some(path.to_string());
             }
+        }
+        if let Some(v) = doc.get("obs", "ledger_events") {
+            cfg.obs.ledger_events = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("obs", "ledger_cadence") {
+            let n = v.as_u64()?;
+            if n == 0 {
+                bail!("obs.ledger_cadence must be >= 1 slot (omit the key for the default)");
+            }
+            cfg.obs.ledger_cadence = Some(n);
+        }
+        if let Some(v) = doc.get("obs", "profile") {
+            cfg.obs.profile = v.as_bool()?;
         }
         if let Some(v) = doc.get("workload", "scale") {
             cfg.workload.scale = v.as_f64()?;
@@ -605,10 +636,20 @@ impl ExperimentConfig {
             ("obs_json", &self.obs.obs_json),
             ("explain", &self.obs.explain),
             ("timeline", &self.obs.timeline),
+            ("ledger", &self.obs.ledger),
         ] {
             if let Some(path) = slot {
                 doc.set("obs", key, TomlValue::Str(path.clone()));
             }
+        }
+        if self.obs.ledger_events {
+            doc.set("obs", "ledger_events", TomlValue::Bool(true));
+        }
+        if let Some(n) = self.obs.ledger_cadence {
+            doc.set("obs", "ledger_cadence", TomlValue::Int(n as i64));
+        }
+        if self.obs.profile {
+            doc.set("obs", "profile", TomlValue::Bool(true));
         }
         doc.set("workload", "scale", TomlValue::Float(self.workload.scale));
         doc.set("workload", "iters_min", TomlValue::Int(self.workload.iters_min as i64));
@@ -828,6 +869,10 @@ mod tests {
             obs_json: Some("obs.json".into()),
             explain: Some("-".into()),
             timeline: Some("links.csv".into()),
+            ledger: Some("ledger.json".into()),
+            ledger_events: true,
+            ledger_cadence: Some(500),
+            profile: true,
         };
         assert!(cfg.obs.any_enabled());
         let back = ExperimentConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
@@ -838,10 +883,24 @@ mod tests {
             ExperimentConfig::from_toml_str("[obs]\ntrace_out = \"t.json\"\n").unwrap();
         assert_eq!(cfg.obs.trace_out.as_deref(), Some("t.json"));
         assert_eq!(cfg.obs.obs_json, None);
+        assert_eq!(cfg.obs.ledger, None);
+        assert!(!cfg.obs.ledger_events && !cfg.obs.profile);
+        assert_eq!(cfg.obs.ledger_cadence, None);
 
         // empty paths are typos, not "disabled"
         assert!(ExperimentConfig::from_toml_str("[obs]\ntrace_out = \"\"\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[obs]\nexplain = \"\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[obs]\nledger = \"\"\n").is_err());
+        // a zero cadence is a typo, not "disabled"
+        assert!(ExperimentConfig::from_toml_str("[obs]\nledger_cadence = 0\n").is_err());
+        // the ledger flags roundtrip standalone too
+        let cfg = ExperimentConfig::from_toml_str(
+            "[obs]\nledger = \"l.json\"\nledger_events = true\nledger_cadence = 64\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs.ledger.as_deref(), Some("l.json"));
+        assert!(cfg.obs.ledger_events);
+        assert_eq!(cfg.obs.ledger_cadence, Some(64));
     }
 
     #[test]

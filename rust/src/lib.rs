@@ -107,12 +107,27 @@
 //! Chrome-trace spans and instant events ([`obs::trace`],
 //! `--trace-out`), always-on fixed-slot counters and histograms
 //! ([`obs::metrics`], `--obs-json`), decision-audit records
-//! ([`obs::explain`], `--explain`) and per-link utilization timelines
-//! ([`obs::timeline`], `figures --fig links`). Its **passivity
-//! invariant** — the default Null sink is free, and arming any recorder
-//! is bit-identical on every scheduling outcome — is an architecture
-//! invariant enforced by `tests/obs_passivity.rs` across flat/rack/pod
-//! fabrics, all three engine modes and the online loop.
+//! ([`obs::explain`], `--explain`), per-link utilization timelines
+//! ([`obs::timeline`], `figures --fig links`), a run-digest **flight
+//! recorder** ([`obs::ledger`], `--ledger` — FNV-1a rolling hashes over
+//! every event/record/rejection/migration/fault stream plus periodic
+//! queue/link-state checkpoints, O(1) memory per stream) and an
+//! in-terminal span profiler ([`obs::prof`], `--profile`). Its
+//! **passivity invariant** — the default Null sink is free, and arming
+//! any recorder is bit-identical on every scheduling outcome — is an
+//! architecture invariant enforced by `tests/obs_passivity.rs` across
+//! flat/rack/pod fabrics, all three engine modes and the online loop.
+//!
+//! The ledger closes the forensics loop on the equivalence ladders:
+//! when a ladder (or any two runs that should agree) **fails**, re-run
+//! both sides with `--ledger a.json` / `--ledger b.json` (add
+//! `--ledger-events` for per-event fingerprint rings) and run
+//! `rarsched diff a.json b.json` ([`obs::diff`]) — it aligns the two
+//! digests and pins the *first* divergent checkpoint, stream and event
+//! instead of leaving a bare "outcomes differ". `tests/ledger_diff.rs`
+//! fixtures the whole loop: identical runs diff clean,
+//! seed-/fault-perturbed runs pin their first divergence, truncated or
+//! corrupt digests fail to load with clean errors.
 //!
 //! ## Streaming engine (O(active) memory)
 //!
@@ -206,6 +221,7 @@
 //! | `RARSCHED_BENCH_STREAM_OUT` | artifact path for `benches/stream.rs` (`BENCH_stream.json`) |
 //! | `RARSCHED_BENCH_STREAM_FULL` | `1` adds the 10⁶-job × 10⁴-server acceptance case to `benches/stream.rs` |
 //! | `RARSCHED_BENCH_FAULTS_OUT` | artifact path for `benches/faults.rs` (`BENCH_faults.json`) |
+//! | `RARSCHED_BENCH_LEDGER_OUT` | artifact path for `benches/ledger.rs` (`BENCH_ledger.json`) |
 //! | `RARSCHED_GIT_REV` | overrides the git revision stamped into run manifests ([`runtime::manifest::RunManifest`]) |
 
 pub mod cli;

@@ -167,8 +167,16 @@ fn rule_choke_point(f: &LexedFile, out: &mut Vec<Finding>) {
 // ---------------------------------------------------------------------
 
 /// Obs namespaces whose *results* must not bind into scheduler code.
-const OBS_PREFIXES: &[&str] =
-    &["obs::", "trace::", "metrics::", "explain::", "timeline::", "crate::obs"];
+const OBS_PREFIXES: &[&str] = &[
+    "obs::",
+    "trace::",
+    "metrics::",
+    "explain::",
+    "timeline::",
+    "ledger::",
+    "prof::",
+    "crate::obs",
+];
 
 fn rule_obs_passivity(f: &LexedFile, out: &mut Vec<Finding>) {
     if !OBS_MODULES.contains(&f.module()) {
@@ -701,6 +709,12 @@ mod tests {
         let good = "fn f() {\n    let _span = trace::span(\"e\", \"c\");\n    if trace::armed() {\n        trace::instant(\"e\", \"c\", &[]);\n    }\n}\n";
         assert!(findings("rust/src/online/x.rs", good).is_empty());
         assert!(findings("rust/src/metrics/x.rs", bad).is_empty(), "only decision modules");
+        // the flight-recorder namespace is patrolled like the others...
+        let led = "fn f() {\n    let c = ledger::QueueCensus { pending: 0 };\n    use_it(c);\n}\n";
+        assert_eq!(rules_of(&findings("rust/src/online/x.rs", led)), vec!["obs-passivity"]);
+        // ...while unbound hook calls stay clean (the run_core idiom)
+        let hook = "fn f(t: u64) {\n    if ledger::checkpoint_due(t) {\n        ledger::checkpoint(t, ledger::QueueCensus::default(), false, Vec::new);\n    }\n    prof::noop();\n}\n";
+        assert!(findings("rust/src/online/x.rs", hook).is_empty());
     }
 
     #[test]

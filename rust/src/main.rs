@@ -21,7 +21,7 @@ use rarsched::config::{ExperimentConfig, FaultsConfig, ObsConfig, OnlineConfig};
 use rarsched::faults::{FaultSpec, FaultTrace};
 use rarsched::coordinator::{train_job, TrainJobSpec};
 use rarsched::experiments::{self, ExperimentSetup};
-use rarsched::metrics::PolicySummary;
+use rarsched::metrics::{FigureReport, PolicySummary};
 use rarsched::obs;
 use rarsched::runtime::{default_artifacts_dir, PjRt, RunManifest};
 use rarsched::sched::{self, Policy};
@@ -40,7 +40,7 @@ COMMANDS:
              [--seed N] [--servers N] [--horizon T] [--scale F]
              [--topology SPEC] [--contention degree|maxmin] [--json]
              [--trace-out t.json] [--obs-json o.json] [--explain f|-]
-             [--timeline links.csv]
+             [--timeline links.csv] [--ledger l.json] [--profile]
   online     [--policies sjf-bco,fifo,ff,backfill] [--gap F]
              [--burst ON:OFF] [--seed N] [--servers N] [--scale F]
              [--topology SPEC] [--contention degree|maxmin]
@@ -50,7 +50,8 @@ COMMANDS:
              [--faults SPEC|@trace.json]
              [--config f.toml] [--json] [--out dir]
              [--trace-out t.json] [--obs-json o.json] [--explain f|-]
-             [--timeline links.csv]
+             [--timeline links.csv] [--ledger l.json] [--ledger-events]
+             [--ledger-cadence N] [--profile]
              overload controls: --theta rejects an arrival whose projected
              bottleneck effective degree (count x oversub, generalized
              Eq. 6; under --contention maxmin, count x capacity-ratio —
@@ -98,9 +99,19 @@ COMMANDS:
              (admission rejections vs θ, placements, migration guards)
              as JSON, or a human report for `-`; --timeline writes the
              per-link utilization time series as CSV (also: figures
-             --fig links). All four are passive: armed or not, the
-             schedule is bit-identical (see rust/src/obs). A --config
-             file's [obs] section seeds these; explicit flags override.
+             --fig links); --ledger records the run-digest flight
+             recorder (FNV-1a rolling hash per event/record/rejection/
+             migration/fault stream plus periodic state checkpoints) as
+             JSON for `rarsched diff` — --ledger-events adds a bounded
+             ring of per-interval event fingerprints so a divergence
+             pins to a single event, --ledger-cadence N sets the
+             checkpoint period in slots (default: the --window width
+             when armed, else 1000); --profile folds the trace spans
+             into an in-terminal per-thread call-tree profile (total/
+             self time, call counts, top-10 by self time). All are
+             passive: armed or not, the schedule is bit-identical (see
+             rust/src/obs). A --config file's [obs] section seeds
+             these; explicit flags override.
 
   topology SPEC: flat | rack:<spr>[:<oversub>] |
              rack:<spr>:<uplink_gbps>@<tor_gbps> |
@@ -123,6 +134,13 @@ COMMANDS:
   obs-check  <trace.json>  validate a --trace-out artifact: well-formed
              chrome-trace JSON, known phases, non-negative and per-thread
              monotone timestamps (exit 1 otherwise)
+  diff       <a.json> <b.json> [--json out.json]  align two --ledger
+             flight-recorder digests: reports the first divergent
+             checkpoint and stream hash (and, when both runs recorded
+             with --ledger-events, the first divergent event), exit 1
+             on divergence, 0 when every stream digest matches — the
+             forensics tool when an equivalence ladder breaks (re-run
+             both sides with --ledger, then diff)
   archlint   [paths…] [--json] [--out LINT.json] [--list-rules]
              self-hosted static analysis of the repo's own sources
              (default root rust/src): mechanizes the ROADMAP architecture
@@ -170,6 +188,7 @@ fn main() {
         "train" => cmd_train(&args),
         "verify" => cmd_verify(&args),
         "obs-check" => cmd_obs_check(&args),
+        "diff" => cmd_diff(&args),
         "archlint" => rarsched::lint::cli_main(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -205,8 +224,8 @@ fn setup_from(args: &Args, base: ExperimentSetup) -> Result<ExperimentSetup> {
 
 /// The `[obs]` outputs for one run: a `--config` file's section as the
 /// base, overridden by any explicit `--trace-out` / `--obs-json` /
-/// `--explain` / `--timeline` flags.
-fn obs_config_from(args: &Args, base: ObsConfig) -> ObsConfig {
+/// `--explain` / `--timeline` / `--ledger` / `--profile` flags.
+fn obs_config_from(args: &Args, base: ObsConfig) -> Result<ObsConfig> {
     let mut obs = base;
     if let Some(p) = args.get("trace-out") {
         obs.trace_out = Some(p.to_string());
@@ -220,23 +239,53 @@ fn obs_config_from(args: &Args, base: ObsConfig) -> ObsConfig {
     if let Some(p) = args.get("timeline") {
         obs.timeline = Some(p.to_string());
     }
-    obs
+    if let Some(p) = args.get("ledger") {
+        obs.ledger = Some(p.to_string());
+    }
+    if args.get_bool("ledger-events") {
+        obs.ledger_events = true;
+    }
+    if let Some(v) = args.get("ledger-cadence") {
+        let n: u64 = v.parse()?;
+        if n == 0 {
+            anyhow::bail!("--ledger-cadence must be >= 1 slot (omit the flag for the default)");
+        }
+        obs.ledger_cadence = Some(n);
+    }
+    if args.get_bool("profile") {
+        obs.profile = true;
+    }
+    Ok(obs)
 }
 
 /// Arm the requested recorders. Returns the in-memory trace sink when
-/// `--trace-out` was requested (the events are drained into the file by
-/// [`write_obs`]). The timeline recorder is NOT armed here — callers arm
-/// it right before the run they want sampled, so planner what-if replays
-/// don't pollute the per-link series.
+/// `--trace-out` or `--profile` was requested (the events are drained
+/// into the file and/or the terminal profile by [`write_obs`]). The
+/// timeline and ledger recorders are NOT armed here — callers arm them
+/// right before the run they want sampled, so planner what-if replays
+/// don't pollute the per-link series or the run digest.
 fn arm_obs(obs: &ObsConfig) -> Option<Arc<obs::MemSink>> {
     if obs.explain.is_some() {
         obs::explain::arm();
     }
-    obs.trace_out.as_ref().map(|_| {
+    (obs.trace_out.is_some() || obs.profile).then(|| {
         let sink = obs::MemSink::new();
         obs::trace::arm(sink.clone());
         sink
     })
+}
+
+/// Arm the flight recorder when `--ledger` was requested. Callers
+/// invoke this right before the run they want digested (after planning
+/// for `simulate`, before the comparison for `online` — the digest
+/// spans every policy's run there, like the timeline). The checkpoint
+/// cadence defaults to the sliding-window width when one is armed, so
+/// checkpoints align with window boundaries; else 1000 slots.
+fn arm_ledger(obs: &ObsConfig, window: Option<u64>) {
+    if obs.ledger.is_some() {
+        let cadence = obs.ledger_cadence.or(window).unwrap_or(1000);
+        obs::ledger::arm(cadence, obs.ledger_events, obs.explain.clone());
+    }
 }
 
 /// Add the provenance stamp to a JSON object (no-op on non-objects).
@@ -259,12 +308,29 @@ fn write_obs(
     manifest: &RunManifest,
 ) -> Result<()> {
     use std::path::Path;
-    if let (Some(path), Some(sink)) = (&obs_cfg.trace_out, sink) {
+    if let Some(sink) = sink {
         obs::trace::disarm();
         let events = sink.take();
-        obs::trace::write_chrome_trace(Path::new(path), &events)?;
-        manifest.save_sibling(Path::new(path))?;
-        log::info!("wrote {} trace events to {path}", events.len());
+        if let Some(path) = &obs_cfg.trace_out {
+            obs::trace::write_chrome_trace(Path::new(path), &events)?;
+            manifest.save_sibling(Path::new(path))?;
+            log::info!("wrote {} trace events to {path}", events.len());
+        }
+        if obs_cfg.profile {
+            // the in-terminal profile shares the one drained event
+            // buffer with the chrome-trace file
+            print!("{}", obs::prof::profile(&events).render(10));
+        }
+    }
+    if let Some(path) = &obs_cfg.ledger {
+        if let Some(ledger) = obs::ledger::disarm() {
+            let stamp = manifest.to_json().to_pretty();
+            ledger.save(Path::new(path), Some(&stamp))?;
+            log::info!(
+                "wrote run digest ({} checkpoints) to {path}",
+                ledger.checkpoints.len()
+            );
+        }
     }
     if let Some(path) = &obs_cfg.explain {
         let records = obs::explain::disarm();
@@ -323,7 +389,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         seed = setup.seed;
         obs_base = ObsConfig::default();
     }
-    let obs_cfg = obs_config_from(args, obs_base);
+    let obs_cfg = obs_config_from(args, obs_base)?;
     let json = args.get_bool("json");
     args.reject_unknown()?;
     let manifest = run_manifest(args.get("config"), seed);
@@ -341,6 +407,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         // pollute the realized per-link series
         obs::timeline::arm();
     }
+    // same discipline for the run digest: only the realized replay counts
+    arm_ledger(&obs_cfg, None);
     let outcome = Simulator::new(&cluster, &jobs, &params).run(&plan);
     let summary = PolicySummary::from_outcome(policy.name(), plan.est_makespan(), &outcome);
     if json {
@@ -524,7 +592,7 @@ fn cmd_online(args: &Args) -> Result<()> {
             None => base_faults.build_trace(&cluster, options.max_slots, setup.seed)?,
         }
     };
-    let obs_cfg = obs_config_from(args, base_obs);
+    let obs_cfg = obs_config_from(args, base_obs)?;
     let json = args.get_bool("json");
     let out_dir = args.get("out").map(std::path::PathBuf::from);
     args.reject_unknown()?;
@@ -535,6 +603,8 @@ fn cmd_online(args: &Args) -> Result<()> {
         // policy, plus the clairvoyant reference's replay)
         obs::timeline::arm();
     }
+    // ditto the run digest — checkpoints align to --window when set
+    arm_ledger(&obs_cfg, options.window);
 
     log::info!(
         "online run: mean gap {gap} slots{}, {} polic{}, clairvoyant reference {}, \
@@ -604,7 +674,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     if let Some(d) = &out_dir {
         std::fs::create_dir_all(d)?;
         table.save_csv(&d.join("online.csv"))?;
-        std::fs::write(d.join("online.json"), table.to_json()?)?;
+        table.save_json(&d.join("online.json"))?;
         log::info!("wrote online.csv / online.json to {d:?}");
         for (name, series) in &windows {
             let slug = name.to_ascii_lowercase().replace(['-', ' '], "_");
@@ -633,42 +703,47 @@ fn cmd_figures(args: &Args) -> Result<()> {
         std::fs::create_dir_all(d)?;
     }
 
-    let mut reports = Vec::new();
+    // each report is printed and saved the moment its sweep finishes —
+    // nothing accumulates a (name, report) list across the run, and the
+    // JSON artifact streams row by row like the CSV
+    let emit = |name: &str, report: &FigureReport| -> Result<()> {
+        println!("{}", report.to_table());
+        if let Some(d) = &out_dir {
+            report.save_csv(&d.join(format!("{name}.csv")))?;
+            report.save_json(&d.join(format!("{name}.json")))?;
+            log::info!("wrote {name}.csv / {name}.json to {d:?}");
+        }
+        Ok(())
+    };
     if which == "4" || which == "all" {
-        reports.push(("fig4", experiments::fig4(&setup)?));
+        emit("fig4", &experiments::fig4(&setup)?)?;
     }
     if which == "5" || which == "all" {
         let kappas: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
-        reports.push(("fig5", experiments::fig5(&setup, &kappas)?));
+        emit("fig5", &experiments::fig5(&setup, &kappas)?)?;
     }
     if which == "6" || which == "all" {
         let mut s = setup.clone();
         s.horizon = 5000; // paper: 1500 (= 1200 x 1.25); our slot scale, see ExperimentSetup
-        reports.push(("fig6", experiments::fig6(&s, &[10, 12, 14, 16, 18, 20])?));
+        emit("fig6", &experiments::fig6(&s, &[10, 12, 14, 16, 18, 20])?)?;
     }
     if which == "7" || which == "all" {
-        reports.push(("fig7", experiments::fig7(&setup, &[1.0, 2.0, 4.0, 8.0])?));
+        emit("fig7", &experiments::fig7(&setup, &[1.0, 2.0, 4.0, 8.0])?)?;
     }
     if which == "online" {
-        reports.push((
+        emit(
             "online",
-            rarsched::experiments::online::online_sweep(&setup, &[0.0, 1.0, 5.0, 20.0])?,
-        ));
+            &rarsched::experiments::online::online_sweep(&setup, &[0.0, 1.0, 5.0, 20.0])?,
+        )?;
     }
     if which == "topology" {
-        reports.push((
-            "topology",
-            experiments::topology_sweep(&setup, 4, &[1.0, 2.0, 4.0, 8.0])?,
-        ));
+        emit("topology", &experiments::topology_sweep(&setup, 4, &[1.0, 2.0, 4.0, 8.0])?)?;
     }
     if which == "hetero" {
         // ToR capacity skews around the reference uplink: skinny (0.25x,
         // 0.5x — expressible as oversubscription, model-identical) through
         // relief links (2x, 4x — only the share model can see them)
-        reports.push((
-            "hetero",
-            experiments::hetero_sweep(&setup, 4, &[0.25, 0.5, 1.0, 2.0, 4.0])?,
-        ));
+        emit("hetero", &experiments::hetero_sweep(&setup, 4, &[0.25, 0.5, 1.0, 2.0, 4.0])?)?;
     }
     if which == "overload" {
         use rarsched::online::{AdmissionControl, MigrationControl};
@@ -686,7 +761,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("{}", table.to_table());
         if let Some(d) = &out_dir {
             table.save_csv(&d.join("overload.csv"))?;
-            std::fs::write(d.join("overload.json"), table.to_json()?)?;
+            table.save_json(&d.join("overload.json"))?;
             log::info!("wrote overload.csv / overload.json to {d:?}");
         }
     }
@@ -705,7 +780,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("{}", table.to_table());
         if let Some(d) = &out_dir {
             table.save_csv(&d.join("faults.csv"))?;
-            std::fs::write(d.join("faults.json"), table.to_json()?)?;
+            table.save_json(&d.join("faults.json"))?;
             log::info!("wrote faults.csv / faults.json to {d:?}");
         }
     }
@@ -739,10 +814,10 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if which == "ablations" {
         use rarsched::experiments::ablations as ab;
-        reports.push(("ablation_alpha", ab::ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0])?));
-        reports.push(("ablation_xi1", ab::ablation_xi1(&setup, &[0.1, 0.5, 1.0])?));
-        reports.push(("ablation_xi2", ab::ablation_xi2(&setup, &[0.0, 5.0e-4, 5.0e-3])?));
-        reports.push(("ablation_mix", ab::ablation_mix(&setup)?));
+        emit("ablation_alpha", &ab::ablation_alpha(&setup, &[0.0, 0.2, 0.5, 1.0])?)?;
+        emit("ablation_xi1", &ab::ablation_xi1(&setup, &[0.1, 0.5, 1.0])?)?;
+        emit("ablation_xi2", &ab::ablation_xi2(&setup, &[0.0, 5.0e-4, 5.0e-3])?)?;
+        emit("ablation_mix", &ab::ablation_mix(&setup)?)?;
     }
     if which == "motivation" || which == "all" {
         let (solo, contended) = experiments::motivation(&setup)?;
@@ -753,14 +828,6 @@ fn cmd_figures(args: &Args) -> Result<()> {
             contended as f64 / solo as f64
         );
         println!();
-    }
-    for (name, report) in &reports {
-        println!("{}", report.to_table());
-        if let Some(d) = &out_dir {
-            report.save_csv(&d.join(format!("{name}.csv")))?;
-            std::fs::write(d.join(format!("{name}.json")), report.to_json()?)?;
-            log::info!("wrote {name}.csv / {name}.json to {d:?}");
-        }
     }
     if let Some(d) = &out_dir {
         // provenance stamp alongside every artifact in the directory
@@ -910,6 +977,36 @@ fn cmd_obs_check(args: &Args) -> Result<()> {
     let events = obs::trace::validate_chrome_trace(&json)
         .map_err(|e| anyhow::anyhow!("{file} is not a valid chrome trace: {e}"))?;
     println!("{file}: OK ({events} trace events)");
+    Ok(())
+}
+
+/// Align two `--ledger` flight-recorder digests and report the first
+/// divergent checkpoint / stream / event. Exit 0 only when every stream
+/// digest matches — the verify.sh equivalence gate builds on this.
+fn cmd_diff(args: &Args) -> Result<()> {
+    let (a, b) = match args.positional() {
+        [a, b] => (a.clone(), b.clone()),
+        _ => anyhow::bail!("usage: rarsched diff <a.json> <b.json> [--json out.json]"),
+    };
+    let json_out = args.get("json").map(|s| s.to_string());
+    args.reject_unknown()?;
+    let la = obs::diff::load(std::path::Path::new(&a))?;
+    let lb = obs::diff::load(std::path::Path::new(&b))?;
+    let report = obs::diff::diff(&la, &lb);
+    print!("{}", report.render(&a, &b));
+    if let Some(path) = &json_out {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
+        let mut emitter =
+            rarsched::util::json::JsonEmitter::pretty(std::io::BufWriter::new(file));
+        report.write_json(&mut emitter)?;
+        let mut out = emitter.finish()?;
+        std::io::Write::flush(&mut out)?;
+        log::info!("wrote diff report to {path}");
+    }
+    if !report.clean() {
+        anyhow::bail!("ledgers diverge (first divergence reported above)");
+    }
     Ok(())
 }
 

@@ -165,6 +165,16 @@ impl FigureReport {
         Ok(())
     }
 
+    /// Stream the JSON straight to disk through a buffered writer —
+    /// byte-identical to `std::fs::write(path, self.to_json()?)` without
+    /// ever holding the whole document.
+    pub fn save_json(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut out = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_json(&mut out)?;
+        io::Write::flush(&mut out)?;
+        Ok(())
+    }
+
     /// Best (minimum-makespan) row.
     pub fn best(&self) -> Option<&ComparisonRow> {
         self.rows.iter().min_by_key(|r| r.makespan)
@@ -302,6 +312,16 @@ impl MetricTable {
     pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
         let mut out = io::BufWriter::new(std::fs::File::create(path)?);
         self.write_csv(&mut out)?;
+        io::Write::flush(&mut out)?;
+        Ok(())
+    }
+
+    /// Stream the JSON straight to disk through a buffered writer —
+    /// byte-identical to `std::fs::write(path, self.to_json()?)` without
+    /// ever holding the whole document.
+    pub fn save_json(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut out = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_json(&mut out)?;
         io::Write::flush(&mut out)?;
         Ok(())
     }
@@ -467,6 +487,14 @@ mod tests {
         let tp = dir.join("table.csv");
         t.save_csv(&tp).unwrap();
         assert_eq!(std::fs::read_to_string(&tp).unwrap(), t.to_csv());
+
+        // ...and save_json's, against the buffered to_json form
+        let fj = dir.join("fig.json");
+        f.save_json(&fj).unwrap();
+        assert_eq!(std::fs::read_to_string(&fj).unwrap(), f.to_json().unwrap());
+        let tj = dir.join("table.json");
+        t.save_json(&tj).unwrap();
+        assert_eq!(std::fs::read_to_string(&tj).unwrap(), t.to_json().unwrap());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,730 @@
+//! Divergence forensics: align two run ledgers and pin the first
+//! divergent checkpoint, stream and event.
+//!
+//! Consumes the JSON documents [`ledger`](crate::obs::ledger) writes and
+//! backs the `rarsched diff <a.json> <b.json>` subcommand. The
+//! comparison walks checkpoints in lockstep: the first ordinal where any
+//! recorded field differs (slot, queue census, free slots, link-count
+//! hash, counter-delta hash, or a per-stream digest) is *the* divergence
+//! — everything before it is proven bit-identical by the rolling
+//! hashes. When both runs were recorded with `--ledger-events`, the
+//! divergent interval's fingerprint rings narrow the answer further to
+//! the first divergent item ("slot 412, job 37, events/start"), and if
+//! either run also logged `--explain` decision audits the report
+//! cross-links them, since the audit records around the pinned slot are
+//! where the *why* lives.
+//!
+//! Output is human text ([`DiffReport::render`]) and streamed JSON
+//! ([`DiffReport::write_json`] via [`JsonEmitter`]). A clean report
+//! (zero divergence) is the equivalence-ladder success case and what
+//! `scripts/verify.sh` gates its mirrored-fabric smoke run on.
+
+use crate::util::{Json, JsonEmitter};
+use anyhow::{bail, Context};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Per-stream digest as read back from a ledger file (hashes stay hex
+/// strings — they are compared, never re-folded).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamSig {
+    pub name: String,
+    pub count: u64,
+    pub hash: String,
+}
+
+/// One item fingerprint from a checkpoint's `recent` ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FpDoc {
+    pub at: u64,
+    /// Trace job id (`-1` is the fabric-event sentinel).
+    pub job: i64,
+    pub stream: String,
+    pub tag: u64,
+    pub fp: String,
+}
+
+impl FpDoc {
+    /// Human label: "slot 412, job 37, events/start".
+    pub fn describe(&self) -> String {
+        const EVENT_KINDS: [&str; 8] = [
+            "arrival",
+            "start",
+            "completion",
+            "rejected",
+            "migrated",
+            "failed",
+            "recovered",
+            "degraded",
+        ];
+        const FAULT_KINDS: [&str; 5] =
+            ["server-crash", "server-recover", "gpu-fail", "link-degrade", "link-restore"];
+        let tag = match (self.stream.as_str(), self.tag) {
+            ("events", t) if (t as usize) < EVENT_KINDS.len() => {
+                format!("/{}", EVENT_KINDS[t as usize])
+            }
+            ("faults", t) if (t as usize) < FAULT_KINDS.len() => {
+                format!("/{}", FAULT_KINDS[t as usize])
+            }
+            _ => String::new(),
+        };
+        let job = if self.job < 0 { "fabric".to_string() } else { format!("job {}", self.job) };
+        format!("slot {}, {}, {}{}", self.at, job, self.stream, tag)
+    }
+}
+
+/// One checkpoint as read back from a ledger file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointDoc {
+    pub seq: u64,
+    pub at: u64,
+    pub pending: u64,
+    pub running: u64,
+    pub recovering: u64,
+    pub free_gpus: u64,
+    pub links_hash: String,
+    pub counters_hash: String,
+    pub streams: Vec<StreamSig>,
+    pub recent: Vec<FpDoc>,
+    pub dropped: u64,
+}
+
+/// A parsed ledger document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerDoc {
+    pub cadence: u64,
+    pub events: bool,
+    /// `--explain` path recorded at arm time, if any.
+    pub explain: Option<String>,
+    /// Final whole-run per-stream digests.
+    pub streams: Vec<StreamSig>,
+    pub checkpoints: Vec<CheckpointDoc>,
+    /// Config digest from the stamped manifest, if present.
+    pub config_digest: Option<String>,
+}
+
+fn parse_sigs(v: &Json) -> crate::Result<Vec<StreamSig>> {
+    let Json::Obj(pairs) = v else { bail!("stream digests must be an object") };
+    pairs
+        .iter()
+        .map(|(name, sig)| {
+            Ok(StreamSig {
+                name: name.clone(),
+                count: sig.req("count")?.as_u64().context("stream count")?,
+                hash: sig.req("hash")?.as_str().context("stream hash")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_fp(fp: &Json) -> crate::Result<FpDoc> {
+    let job = fp.req("job")?.as_f64()?;
+    if !job.is_finite() {
+        bail!("non-finite job id in event fingerprint");
+    }
+    Ok(FpDoc {
+        at: fp.req("at")?.as_u64()?,
+        job: job as i64,
+        stream: fp.req("stream")?.as_str()?.to_string(),
+        tag: fp.req("tag")?.as_u64()?,
+        fp: fp.req("fp")?.as_str()?.to_string(),
+    })
+}
+
+fn parse_checkpoint(cp: &Json) -> crate::Result<CheckpointDoc> {
+    let recent = match cp.get("recent") {
+        Some(arr) => arr
+            .as_arr()
+            .context("recent must be an array")?
+            .iter()
+            .map(parse_fp)
+            .collect::<crate::Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    Ok(CheckpointDoc {
+        seq: cp.req("seq")?.as_u64()?,
+        at: cp.req("at")?.as_u64()?,
+        pending: cp.req("pending")?.as_u64()?,
+        running: cp.req("running")?.as_u64()?,
+        recovering: cp.req("recovering")?.as_u64()?,
+        free_gpus: cp.req("free_gpus")?.as_u64()?,
+        links_hash: cp.req("links_hash")?.as_str()?.to_string(),
+        counters_hash: cp.req("counters_hash")?.as_str()?.to_string(),
+        streams: parse_sigs(cp.req("streams")?)?,
+        recent,
+        dropped: cp.get("dropped").map(Json::as_u64).transpose()?.unwrap_or(0),
+    })
+}
+
+/// Parse a ledger document (shared by [`load`] and the writer's
+/// roundtrip test).
+pub fn parse(doc: &Json) -> crate::Result<LedgerDoc> {
+    let version = doc.req("version")?.as_u64().context("ledger version")?;
+    if version != 1 {
+        bail!("unsupported ledger version {version} (expected 1)");
+    }
+    let checkpoints = doc
+        .req("checkpoints")?
+        .as_arr()
+        .context("checkpoints must be an array")?
+        .iter()
+        .enumerate()
+        .map(|(i, cp)| parse_checkpoint(cp).with_context(|| format!("checkpoint {i}")))
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(LedgerDoc {
+        cadence: doc.req("cadence")?.as_u64().context("cadence")?,
+        events: doc.req("events")?.as_bool().context("events flag")?,
+        explain: doc.get("explain").map(Json::as_str).transpose()?.map(str::to_string),
+        streams: parse_sigs(doc.req("streams")?)?,
+        checkpoints,
+        config_digest: doc
+            .get("manifest")
+            .and_then(|m| m.get("config_digest"))
+            .and_then(|d| d.as_str().ok())
+            .map(str::to_string),
+    })
+}
+
+/// Load and parse a ledger file, with clean errors for missing,
+/// truncated or corrupt documents.
+pub fn load(path: &Path) -> crate::Result<LedgerDoc> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading ledger {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .with_context(|| format!("ledger {} is not valid JSON (truncated?)", path.display()))?;
+    parse(&doc).with_context(|| format!("ledger {} is not a ledger document", path.display()))
+}
+
+/// The first divergent item inside a divergent checkpoint interval.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventDivergence {
+    /// Index into the interval's fingerprint ring.
+    pub index: usize,
+    /// Side A's item at that index (`None` past its ring).
+    pub a: Option<FpDoc>,
+    /// Side B's item at that index.
+    pub b: Option<FpDoc>,
+    /// True when the rings match entirely but overflowed
+    /// ([`ledger::RING_CAP`](crate::obs::ledger::RING_CAP)) — the first
+    /// divergent item lies beyond what was recorded.
+    pub truncated: bool,
+}
+
+/// Where two ledgers first part ways.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Divergence {
+    /// Ordinal of the first divergent checkpoint (== count of proven-
+    /// identical checkpoints before it).
+    pub seq: u64,
+    /// Side A's slot for that checkpoint (`None` when A ran out).
+    pub at_a: Option<u64>,
+    pub at_b: Option<u64>,
+    /// Divergent field/stream labels, e.g. `["events", "pending"]`;
+    /// `["checkpoint-count"]` when one run simply recorded more, and
+    /// `final:`-prefixed stream names for a tail-only divergence.
+    pub fields: Vec<String>,
+    /// First divergent item, when both runs recorded event rings.
+    pub first_event: Option<EventDivergence>,
+}
+
+/// Full comparison outcome for two ledgers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DiffReport {
+    /// Set when the ledgers were recorded at different cadences (their
+    /// checkpoints don't align; only final stream digests are compared).
+    pub cadence_mismatch: Option<(u64, u64)>,
+    /// Checkpoints proven bit-identical before the divergence (all of
+    /// them on a clean diff).
+    pub checkpoints_compared: usize,
+    pub divergence: Option<Divergence>,
+    /// Whether the stamped config digests match (informational — runs
+    /// being diffed usually differ in configuration by design).
+    pub configs_match: Option<bool>,
+    /// `--explain` paths recorded by each side, for cross-linking.
+    pub explain: (Option<String>, Option<String>),
+}
+
+impl DiffReport {
+    /// Zero divergence: every aligned checkpoint and every final stream
+    /// digest matched.
+    pub fn clean(&self) -> bool {
+        self.divergence.is_none() && self.cadence_mismatch.is_none()
+    }
+}
+
+fn sig_fields(a: &[StreamSig], b: &[StreamSig], prefix: &str, out: &mut Vec<String>) {
+    for sa in a {
+        match b.iter().find(|sb| sb.name == sa.name) {
+            Some(sb) => {
+                if sa.count != sb.count || sa.hash != sb.hash {
+                    out.push(format!("{prefix}{}", sa.name));
+                }
+            }
+            None => out.push(format!("{prefix}{}", sa.name)),
+        }
+    }
+    for sb in b {
+        if !a.iter().any(|sa| sa.name == sb.name) {
+            out.push(format!("{prefix}{}", sb.name));
+        }
+    }
+}
+
+fn first_event(a: &CheckpointDoc, b: &CheckpointDoc) -> Option<EventDivergence> {
+    let n = a.recent.len().max(b.recent.len());
+    for i in 0..n {
+        let (fa, fb) = (a.recent.get(i), b.recent.get(i));
+        if fa != fb {
+            return Some(EventDivergence {
+                index: i,
+                a: fa.cloned(),
+                b: fb.cloned(),
+                truncated: false,
+            });
+        }
+    }
+    // rings identical: the divergence happened past the recorded prefix
+    (a.dropped > 0 || b.dropped > 0).then_some(EventDivergence {
+        index: a.recent.len(),
+        a: None,
+        b: None,
+        truncated: true,
+    })
+}
+
+/// Align two ledgers and pin the first divergence (if any).
+pub fn diff(a: &LedgerDoc, b: &LedgerDoc) -> DiffReport {
+    let configs_match = match (&a.config_digest, &b.config_digest) {
+        (Some(da), Some(db)) => Some(da == db),
+        _ => None,
+    };
+    let explain = (a.explain.clone(), b.explain.clone());
+    if a.cadence != b.cadence {
+        return DiffReport {
+            cadence_mismatch: Some((a.cadence, b.cadence)),
+            checkpoints_compared: 0,
+            divergence: None,
+            configs_match,
+            explain,
+        };
+    }
+    let mut divergence = None;
+    let common = a.checkpoints.len().min(b.checkpoints.len());
+    for i in 0..common {
+        let (ca, cb) = (&a.checkpoints[i], &b.checkpoints[i]);
+        let mut fields = Vec::new();
+        sig_fields(&ca.streams, &cb.streams, "", &mut fields);
+        for (label, va, vb) in [
+            ("at", ca.at, cb.at),
+            ("pending", ca.pending, cb.pending),
+            ("running", ca.running, cb.running),
+            ("recovering", ca.recovering, cb.recovering),
+            ("free_gpus", ca.free_gpus, cb.free_gpus),
+        ] {
+            if va != vb {
+                fields.push(label.to_string());
+            }
+        }
+        if ca.links_hash != cb.links_hash {
+            fields.push("links".to_string());
+        }
+        if ca.counters_hash != cb.counters_hash {
+            fields.push("counters".to_string());
+        }
+        if !fields.is_empty() {
+            divergence = Some(Divergence {
+                seq: ca.seq,
+                at_a: Some(ca.at),
+                at_b: Some(cb.at),
+                fields,
+                first_event: first_event(ca, cb),
+            });
+            break;
+        }
+    }
+    if divergence.is_none() && a.checkpoints.len() != b.checkpoints.len() {
+        let (longer, at_a, at_b) = if a.checkpoints.len() > b.checkpoints.len() {
+            (&a.checkpoints[common], Some(a.checkpoints[common].at), None)
+        } else {
+            (&b.checkpoints[common], None, Some(b.checkpoints[common].at))
+        };
+        divergence = Some(Divergence {
+            seq: longer.seq,
+            at_a,
+            at_b,
+            fields: vec!["checkpoint-count".to_string()],
+            first_event: None,
+        });
+    }
+    if divergence.is_none() {
+        // tail: runs agree at every checkpoint but end differently
+        let mut fields = Vec::new();
+        sig_fields(&a.streams, &b.streams, "final:", &mut fields);
+        if !fields.is_empty() {
+            divergence = Some(Divergence {
+                seq: common as u64,
+                at_a: None,
+                at_b: None,
+                fields,
+                first_event: None,
+            });
+        }
+    }
+    let compared = match &divergence {
+        Some(d) => (d.seq as usize).min(common),
+        None => common,
+    };
+    DiffReport {
+        cadence_mismatch: None,
+        checkpoints_compared: compared,
+        divergence,
+        configs_match,
+        explain,
+    }
+}
+
+impl DiffReport {
+    /// Human-readable report; `a` and `b` label the two sides (usually
+    /// the ledger file paths).
+    pub fn render(&self, a: &str, b: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "ledger diff: {a} vs {b}");
+        if let Some(same) = self.configs_match {
+            let note = if same { "match" } else { "differ (expected for cross-config runs)" };
+            let _ = writeln!(out, "  config digests {note}");
+        }
+        if let Some((ca, cb)) = self.cadence_mismatch {
+            let _ = writeln!(
+                out,
+                "  cadence mismatch: {ca} vs {cb} slots — checkpoints do not align;\n  \
+                 re-record both runs with the same --ledger cadence to compare"
+            );
+            return out;
+        }
+        let _ = writeln!(out, "  {} checkpoint(s) bit-identical", self.checkpoints_compared);
+        let Some(d) = &self.divergence else {
+            let _ = writeln!(out, "  zero divergence: every stream digest matches");
+            return out;
+        };
+        let slot = |at: Option<u64>| at.map_or("-".to_string(), |t| t.to_string());
+        let _ = writeln!(
+            out,
+            "  FIRST DIVERGENCE at checkpoint {} (slot {} vs {}): {}",
+            d.seq,
+            slot(d.at_a),
+            slot(d.at_b),
+            d.fields.join(", ")
+        );
+        match &d.first_event {
+            Some(ev) if ev.truncated => {
+                let _ = writeln!(
+                    out,
+                    "    recorded event rings match — the first divergent item lies past the \
+                     ring capacity; lower the --ledger cadence and re-record to pin it"
+                );
+            }
+            Some(ev) => {
+                let side = |fp: &Option<FpDoc>| {
+                    fp.as_ref().map_or("(stream ended)".to_string(), |f| {
+                        format!("{} (fp {})", f.describe(), f.fp)
+                    })
+                };
+                let _ = writeln!(out, "    first divergent event (interval item {}):", ev.index);
+                let _ = writeln!(out, "      a: {}", side(&ev.a));
+                let _ = writeln!(out, "      b: {}", side(&ev.b));
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "    (no event rings recorded — re-run both sides with --ledger-events to \
+                     pin the first divergent event)"
+                );
+            }
+        }
+        match &self.explain {
+            (Some(ea), Some(eb)) => {
+                let _ = writeln!(
+                    out,
+                    "    decision audit: compare records near the pinned slot in {ea} vs {eb}"
+                );
+            }
+            (Some(e), None) | (None, Some(e)) => {
+                let _ = writeln!(
+                    out,
+                    "    decision audit: one side logged --explain ({e}); re-run the other \
+                     with --explain to compare the why"
+                );
+            }
+            (None, None) => {}
+        }
+        out
+    }
+
+    /// Stream the report as JSON (the machine-readable twin of
+    /// [`render`](Self::render)).
+    pub fn write_json<W: std::io::Write>(
+        &self,
+        emitter: &mut JsonEmitter<W>,
+    ) -> std::io::Result<()> {
+        fn fp<W: std::io::Write>(
+            e: &mut JsonEmitter<W>,
+            doc: &Option<FpDoc>,
+        ) -> std::io::Result<()> {
+            match doc {
+                None => e.null(),
+                Some(f) => {
+                    e.begin_obj()?;
+                    e.key("at")?;
+                    e.uint(f.at)?;
+                    e.key("job")?;
+                    e.num(f.job as f64)?;
+                    e.key("stream")?;
+                    e.str(&f.stream)?;
+                    e.key("tag")?;
+                    e.uint(f.tag)?;
+                    e.key("fp")?;
+                    e.str(&f.fp)?;
+                    e.key("describe")?;
+                    e.str(&f.describe())?;
+                    e.end_obj()
+                }
+            }
+        }
+        let e = emitter;
+        e.begin_obj()?;
+        e.key("clean")?;
+        e.bool(self.clean())?;
+        e.key("checkpoints_compared")?;
+        e.uint(self.checkpoints_compared as u64)?;
+        if let Some((ca, cb)) = self.cadence_mismatch {
+            e.key("cadence_mismatch")?;
+            e.begin_arr()?;
+            e.uint(ca)?;
+            e.uint(cb)?;
+            e.end_arr()?;
+        }
+        if let Some(same) = self.configs_match {
+            e.key("configs_match")?;
+            e.bool(same)?;
+        }
+        e.key("divergence")?;
+        match &self.divergence {
+            None => e.null()?,
+            Some(d) => {
+                e.begin_obj()?;
+                e.key("seq")?;
+                e.uint(d.seq)?;
+                e.key("at_a")?;
+                match d.at_a {
+                    Some(t) => e.uint(t)?,
+                    None => e.null()?,
+                }
+                e.key("at_b")?;
+                match d.at_b {
+                    Some(t) => e.uint(t)?,
+                    None => e.null()?,
+                }
+                e.key("fields")?;
+                e.begin_arr()?;
+                for f in &d.fields {
+                    e.str(f)?;
+                }
+                e.end_arr()?;
+                e.key("first_event")?;
+                match &d.first_event {
+                    None => e.null()?,
+                    Some(ev) => {
+                        e.begin_obj()?;
+                        e.key("index")?;
+                        e.uint(ev.index as u64)?;
+                        e.key("truncated")?;
+                        e.bool(ev.truncated)?;
+                        e.key("a")?;
+                        fp(e, &ev.a)?;
+                        e.key("b")?;
+                        fp(e, &ev.b)?;
+                        e.end_obj()?;
+                    }
+                }
+                e.end_obj()?;
+            }
+        }
+        e.key("explain")?;
+        e.begin_arr()?;
+        for side in [&self.explain.0, &self.explain.1] {
+            match side {
+                Some(p) => e.str(p)?,
+                None => e.null()?,
+            }
+        }
+        e.end_arr()?;
+        e.end_obj()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(name: &str, count: u64, hash: &str) -> StreamSig {
+        StreamSig { name: name.to_string(), count, hash: hash.to_string() }
+    }
+
+    fn sigs(hash: &str) -> Vec<StreamSig> {
+        ["events", "records", "rejections", "migrations", "faults"]
+            .iter()
+            .map(|n| sig(n, 3, hash))
+            .collect()
+    }
+
+    fn cp(seq: u64, at: u64, hash: &str) -> CheckpointDoc {
+        CheckpointDoc {
+            seq,
+            at,
+            pending: 1,
+            running: 2,
+            recovering: 0,
+            free_gpus: 4,
+            links_hash: "aa".to_string(),
+            counters_hash: "bb".to_string(),
+            streams: sigs(hash),
+            recent: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    fn doc(hashes: &[&str]) -> LedgerDoc {
+        LedgerDoc {
+            cadence: 100,
+            events: false,
+            explain: None,
+            streams: sigs(hashes.last().copied().unwrap_or("00")),
+            checkpoints: hashes
+                .iter()
+                .enumerate()
+                .map(|(i, h)| cp(i as u64, (i as u64 + 1) * 100, h))
+                .collect(),
+            config_digest: Some("cfg".to_string()),
+        }
+    }
+
+    #[test]
+    fn identical_ledgers_are_clean() {
+        let a = doc(&["11", "22", "33"]);
+        let report = diff(&a, &a.clone());
+        assert!(report.clean());
+        assert_eq!(report.checkpoints_compared, 3);
+        assert!(report.render("a.json", "b.json").contains("zero divergence"));
+    }
+
+    #[test]
+    fn first_divergent_checkpoint_and_stream_are_pinned() {
+        let a = doc(&["11", "22", "33"]);
+        let mut b = doc(&["11", "22", "33"]);
+        b.checkpoints[1].streams[0].hash = "ff".to_string();
+        b.checkpoints[1].pending = 9;
+        let report = diff(&a, &b);
+        assert!(!report.clean());
+        assert_eq!(report.checkpoints_compared, 1);
+        let d = report.divergence.unwrap();
+        assert_eq!(d.seq, 1);
+        assert_eq!(d.at_a, Some(200));
+        assert_eq!(d.fields, vec!["events".to_string(), "pending".to_string()]);
+        assert!(d.first_event.is_none());
+    }
+
+    #[test]
+    fn event_rings_narrow_to_the_first_divergent_item() {
+        let mk = |tag: u64| FpDoc {
+            at: 412,
+            job: 37,
+            stream: "events".to_string(),
+            tag,
+            fp: format!("{tag:016x}"),
+        };
+        let mut a = doc(&["11", "22"]);
+        let mut b = doc(&["11", "22"]);
+        a.checkpoints[1].streams[0].hash = "ee".to_string();
+        a.checkpoints[1].recent = vec![mk(0), mk(1)];
+        b.checkpoints[1].recent = vec![mk(0), mk(4)];
+        let report = diff(&a, &b);
+        let ev = report.divergence.unwrap().first_event.unwrap();
+        assert_eq!(ev.index, 1);
+        assert_eq!(ev.a.unwrap().tag, 1);
+        assert_eq!(ev.b.unwrap().describe(), "slot 412, job 37, events/migrated");
+        assert!(!ev.truncated);
+    }
+
+    #[test]
+    fn overflowed_identical_rings_report_truncation() {
+        let mut a = doc(&["11", "22"]);
+        let mut b = doc(&["11", "22"]);
+        a.checkpoints[1].streams[2].count = 7; // rejections diverge...
+        a.checkpoints[1].dropped = 5; // ...past the recorded ring
+        b.checkpoints[1].dropped = 5;
+        let report = diff(&a, &b);
+        let ev = report.divergence.unwrap().first_event.unwrap();
+        assert!(ev.truncated);
+    }
+
+    #[test]
+    fn length_and_tail_divergences_are_reported() {
+        // one run recorded more checkpoints
+        let a = doc(&["11", "22", "33"]);
+        let b = doc(&["11", "22"]);
+        let d = diff(&a, &b).divergence.unwrap();
+        assert_eq!(d.fields, vec!["checkpoint-count".to_string()]);
+        assert_eq!(d.seq, 2);
+        assert_eq!(d.at_a, Some(300));
+        assert_eq!(d.at_b, None);
+        // same checkpoints, different final digests
+        let a = doc(&["11", "22"]);
+        let mut b = doc(&["11", "22"]);
+        b.streams[1].hash = "ff".to_string();
+        let d = diff(&a, &b).divergence.unwrap();
+        assert_eq!(d.fields, vec!["final:records".to_string()]);
+    }
+
+    #[test]
+    fn cadence_mismatch_short_circuits() {
+        let a = doc(&["11"]);
+        let mut b = doc(&["11"]);
+        b.cadence = 50;
+        let report = diff(&a, &b);
+        assert!(!report.clean());
+        assert_eq!(report.cadence_mismatch, Some((100, 50)));
+        assert!(report.render("a", "b").contains("cadence mismatch"));
+    }
+
+    #[test]
+    fn report_json_streams_and_parses() {
+        let a = doc(&["11", "22"]);
+        let mut b = doc(&["11", "22"]);
+        b.checkpoints[1].streams[4].hash = "ff".to_string();
+        b.explain = Some("b_explain.json".to_string());
+        let report = diff(&a, &b);
+        let mut emitter = JsonEmitter::pretty(Vec::new());
+        report.write_json(&mut emitter).unwrap();
+        let text = String::from_utf8(emitter.finish().unwrap()).unwrap();
+        let json = Json::parse(&text).unwrap();
+        assert!(!json.req("clean").unwrap().as_bool().unwrap());
+        let d = json.req("divergence").unwrap();
+        assert_eq!(d.req("seq").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(d.req("fields").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn loader_rejects_corrupt_documents() {
+        let dir = crate::util::temp_dir("rarsched-ledger-diff").unwrap();
+        let garbage = dir.join("garbage.json");
+        std::fs::write(&garbage, "{\"version\": 1, \"cadence\":").unwrap();
+        let err = load(&garbage).unwrap_err().to_string();
+        assert!(err.contains("not valid JSON"), "got: {err}");
+        let wrong = dir.join("wrong.json");
+        std::fs::write(&wrong, "{\"version\": 2}").unwrap();
+        assert!(load(&wrong).is_err());
+        let missing = dir.join("missing.json");
+        assert!(load(&missing).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

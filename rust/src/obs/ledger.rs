@@ -1,0 +1,667 @@
+//! Run-digest flight recorder: per-stream rolling hashes plus periodic
+//! state checkpoints, cheap enough to arm on every run.
+//!
+//! Every equivalence ladder in this repo (tracker == snapshot,
+//! streaming == materialized, empty-fault-trace == fault-free, armed ==
+//! disarmed obs, MaxMinFair == EffectiveDegree on mirrored fabrics) is
+//! proven as "two runs are bit-identical" — and fails as one opaque
+//! `assert_eq!` over a whole outcome. The ledger turns each run into a
+//! compact digest that `rarsched diff` ([`crate::obs::diff`]) can align
+//! pairwise, so a broken ladder localizes to *the first divergent
+//! checkpoint, stream and event* instead of "the runs differ".
+//!
+//! Five streams are folded with an FNV-1a rolling hash (the same
+//! function as [`crate::runtime::config_digest`]): lifecycle **events**,
+//! completed job **records**, admission **rejections**, **migrations**
+//! and consumed **fault events**. Each stream costs O(1) memory — a
+//! 64-bit hash and a count — so the ledger composes with
+//! `run_streaming`. At a configurable slot cadence (optionally aligned
+//! to `--window` boundaries) the loop adds a [`Checkpoint`]: queue
+//! depths, free-slot census, a hash of the per-link ring counts and a
+//! hash of the obs counter deltas since arm. With `--ledger-events` a
+//! bounded ring keeps the *first* [`RING_CAP`] item fingerprints of each
+//! checkpoint interval, which is what lets the diff pin the first
+//! divergent event inside a divergent interval.
+//!
+//! Process-global facade in the [`timeline`](crate::obs::timeline) /
+//! [`explain`](crate::obs::explain) idiom: disarmed, every hook is one
+//! relaxed atomic load; armed, recording is a passive read of scheduler
+//! state that never flows back into a decision (the `obs_passivity`
+//! property test pins bit-identity with the ledger armed).
+//!
+//! Counter caveat: [`metrics`] counters are process-global and
+//! monotonic, so checkpoints hash the *delta from an arm-time snapshot*
+//! — two equivalent runs recorded in different processes (or after
+//! different warm-up work in the same process) still produce identical
+//! ledgers.
+
+use crate::faults::{FaultAction, FaultEvent};
+use crate::obs::metrics;
+use crate::sim::JobRecord;
+use crate::util::JsonEmitter;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// FNV-1a offset basis (mirrors `runtime::config_digest`).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one little-endian word into an FNV-1a hash.
+fn fnv_word(mut h: u64, w: u64) -> u64 {
+    for b in w.to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold a byte string into an FNV-1a hash.
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash a word sequence from the offset basis (item fingerprints).
+fn fnv_words(words: &[u64]) -> u64 {
+    words.iter().fold(FNV_OFFSET, |h, &w| fnv_word(h, w))
+}
+
+/// The five digested streams, in dense order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stream {
+    /// Lifecycle events (`RunSink::event` order).
+    Events,
+    /// Completed job records (completion order, residuals included).
+    Records,
+    /// Admission rejections.
+    Rejections,
+    /// Committed migrations.
+    Migrations,
+    /// Consumed fault events.
+    Faults,
+}
+
+/// Number of digested streams.
+pub const NUM_STREAMS: usize = 5;
+
+impl Stream {
+    pub const ALL: [Stream; NUM_STREAMS] = [
+        Stream::Events,
+        Stream::Records,
+        Stream::Rejections,
+        Stream::Migrations,
+        Stream::Faults,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stream::Events => "events",
+            Stream::Records => "records",
+            Stream::Rejections => "rejections",
+            Stream::Migrations => "migrations",
+            Stream::Faults => "faults",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Rolling digest of one stream: item count + FNV-1a hash of every
+/// word folded so far. O(1) memory regardless of run length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSig {
+    pub count: u64,
+    pub hash: u64,
+}
+
+impl StreamSig {
+    fn new() -> StreamSig {
+        StreamSig { count: 0, hash: FNV_OFFSET }
+    }
+
+    fn fold(&mut self, words: &[u64]) {
+        for &w in words {
+            self.hash = fnv_word(self.hash, w);
+        }
+        self.count += 1;
+    }
+}
+
+/// Ring capacity: the first `RING_CAP` item fingerprints of each
+/// checkpoint interval are kept (a *prefix*, so the first divergent
+/// event inside the interval is pinned exactly whenever it falls within
+/// capacity; overflow is reported as `dropped`).
+pub const RING_CAP: usize = 64;
+
+/// One recorded item fingerprint (`--ledger-events` mode only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventFp {
+    /// Slot the item was recorded at.
+    pub at: u64,
+    /// Trace job id (`u64::MAX` for the fabric-event sentinel).
+    pub job: u64,
+    pub stream: Stream,
+    /// Stream-specific tag (event-kind index, fault-action index, …).
+    pub tag: u64,
+    /// FNV-1a fingerprint over the item's full word encoding.
+    pub fp: u64,
+}
+
+/// Scheduler-state census captured by a [`Checkpoint`] — built by the
+/// caller so the probe reads are free when the ledger is disarmed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueCensus {
+    pub pending: usize,
+    pub running: usize,
+    pub recovering: usize,
+    /// Free schedulable GPU slots across healthy servers.
+    pub free_gpus: usize,
+}
+
+/// One periodic state checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Checkpoint ordinal (0-based).
+    pub seq: u64,
+    /// Slot the checkpoint was taken at.
+    pub at: u64,
+    pub census: QueueCensus,
+    /// FNV-1a over the per-link ring counts in link order
+    /// (offset basis when the engine recorded no link census).
+    pub links_hash: u64,
+    /// FNV-1a over the obs counter deltas since arm, name + value.
+    pub counters_hash: u64,
+    /// Per-stream digests as of this checkpoint.
+    pub streams: [StreamSig; NUM_STREAMS],
+    /// First item fingerprints of the interval (events mode only).
+    pub recent: Vec<EventFp>,
+    /// Fingerprints dropped past [`RING_CAP`] this interval.
+    pub dropped: u64,
+}
+
+/// The drained flight recorder: everything [`disarm`] hands back, ready
+/// for a [`save`](Ledger::save) stamped with the run manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ledger {
+    /// Checkpoint cadence in slots.
+    pub cadence: u64,
+    /// Whether event-fingerprint rings were recorded.
+    pub events: bool,
+    /// `--explain` output path recorded at arm time, for the diff's
+    /// decision-audit cross-link.
+    pub explain: Option<String>,
+    /// Final per-stream digests (cover the whole run, beyond the last
+    /// checkpoint).
+    pub streams: [StreamSig; NUM_STREAMS],
+    pub checkpoints: Vec<Checkpoint>,
+}
+
+struct LedgerState {
+    cadence: u64,
+    events: bool,
+    explain: Option<String>,
+    streams: [StreamSig; NUM_STREAMS],
+    ring: Vec<EventFp>,
+    dropped: u64,
+    seq: u64,
+    baseline: metrics::Snapshot,
+    checkpoints: Vec<Checkpoint>,
+}
+
+impl LedgerState {
+    fn note(&mut self, stream: Stream, at: u64, job: u64, tag: u64, words: &[u64]) {
+        self.streams[stream.index()].fold(words);
+        if self.events {
+            if self.ring.len() < RING_CAP {
+                self.ring.push(EventFp { at, job, stream, tag, fp: fnv_words(words) });
+            } else {
+                self.dropped += 1;
+            }
+        }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Next slot at which a cadence checkpoint is due (`u64::MAX` when
+/// disarmed), so the per-iteration due-check costs no lock.
+static NEXT_DUE: AtomicU64 = AtomicU64::new(u64::MAX);
+static STATE: Mutex<Option<LedgerState>> = Mutex::new(None);
+
+/// Arm the recorder (clears any previous state and snapshots the obs
+/// counters as the delta baseline). `explain` is the `--explain` output
+/// path, recorded so `rarsched diff` can cross-link decision audits.
+pub fn arm(cadence: u64, record_events: bool, explain: Option<String>) {
+    let cadence = cadence.max(1);
+    *STATE.lock().expect("ledger poisoned") = Some(LedgerState {
+        cadence,
+        events: record_events,
+        explain,
+        streams: [StreamSig::new(); NUM_STREAMS],
+        ring: Vec::new(),
+        dropped: 0,
+        seq: 0,
+        baseline: metrics::snapshot(),
+        checkpoints: Vec::new(),
+    });
+    NEXT_DUE.store(cadence, Ordering::Release);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm and drain: the recorded [`Ledger`], or `None` if the recorder
+/// was never armed.
+pub fn disarm() -> Option<Ledger> {
+    ARMED.store(false, Ordering::Release);
+    NEXT_DUE.store(u64::MAX, Ordering::Release);
+    let st = STATE.lock().expect("ledger poisoned").take()?;
+    Some(Ledger {
+        cadence: st.cadence,
+        events: st.events,
+        explain: st.explain,
+        streams: st.streams,
+        checkpoints: st.checkpoints,
+    })
+}
+
+/// Whether the recorder is armed — the hooks' fast path.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Fold one lifecycle event (mirrors `RunSink::event`).
+pub fn note_event(at: u64, job: u64, kind: u64) {
+    if !armed() {
+        return;
+    }
+    if let Some(st) = STATE.lock().expect("ledger poisoned").as_mut() {
+        st.note(Stream::Events, at, job, kind, &[at, job, kind]);
+    }
+}
+
+/// Fold one completed job record (mirrors `RunSink::record`).
+pub fn note_record(rec: &JobRecord) {
+    if !armed() {
+        return;
+    }
+    let words = [
+        rec.job.0 as u64,
+        rec.arrival,
+        rec.start,
+        rec.finish,
+        rec.span as u64,
+        rec.workers as u64,
+        rec.max_p as u64,
+        rec.mean_tau.to_bits(),
+        rec.iterations_done,
+        rec.migrations as u64,
+    ];
+    if let Some(st) = STATE.lock().expect("ledger poisoned").as_mut() {
+        st.note(Stream::Records, rec.finish, rec.job.0 as u64, 0, &words);
+    }
+}
+
+/// Fold one admission rejection (mirrors `RunSink::reject`).
+pub fn note_reject(at: u64, job: u64) {
+    if !armed() {
+        return;
+    }
+    if let Some(st) = STATE.lock().expect("ledger poisoned").as_mut() {
+        st.note(Stream::Rejections, at, job, 0, &[at, job]);
+    }
+}
+
+/// Fold one committed migration (mirrors `RunSink::migration`).
+pub fn note_migration(at: u64, job: u64, from_effective: f64, to_effective: f64, restart: u64) {
+    if !armed() {
+        return;
+    }
+    let words = [at, job, from_effective.to_bits(), to_effective.to_bits(), restart];
+    if let Some(st) = STATE.lock().expect("ledger poisoned").as_mut() {
+        st.note(Stream::Migrations, at, job, 0, &words);
+    }
+}
+
+/// Fold one consumed fault event (step-0 fault application).
+pub fn note_fault(fe: &FaultEvent) {
+    if !armed() {
+        return;
+    }
+    let (tag, words) = match fe.action {
+        FaultAction::ServerCrash { server } => (0u64, [fe.at, 0, server as u64, 0]),
+        FaultAction::ServerRecover { server } => (1, [fe.at, 1, server as u64, 0]),
+        FaultAction::GpuFail { server, gpu } => (2, [fe.at, 2, server as u64, gpu as u64]),
+        FaultAction::LinkDegrade { link, factor } => {
+            (3, [fe.at, 3, link as u64, factor.to_bits()])
+        }
+        FaultAction::LinkRestore { link } => (4, [fe.at, 4, link as u64, 0]),
+    };
+    if let Some(st) = STATE.lock().expect("ledger poisoned").as_mut() {
+        st.note(Stream::Faults, fe.at, u64::MAX, tag, &words);
+    }
+}
+
+/// Whether a cadence checkpoint is due at slot `t`. One relaxed load
+/// when disarmed; no lock either way.
+#[inline]
+pub fn checkpoint_due(t: u64) -> bool {
+    t >= NEXT_DUE.load(Ordering::Relaxed)
+}
+
+/// Record a checkpoint at slot `t` if one is due (or unconditionally
+/// with `force`, for the end-of-run tail checkpoint). `links` is only
+/// invoked when a checkpoint is actually taken, so the per-link count
+/// walk is free otherwise; engines without a maintained link census
+/// pass `|| []`.
+pub fn checkpoint<I, F>(t: u64, census: QueueCensus, force: bool, links: F)
+where
+    F: FnOnce() -> I,
+    I: IntoIterator<Item = u64>,
+{
+    if !armed() || (!force && !checkpoint_due(t)) {
+        return;
+    }
+    let mut guard = STATE.lock().expect("ledger poisoned");
+    let Some(st) = guard.as_mut() else {
+        return;
+    };
+    let links_hash = links().into_iter().fold(FNV_OFFSET, fnv_word);
+    let current = metrics::snapshot();
+    let counters_hash = st
+        .baseline
+        .delta(&current)
+        .iter()
+        .fold(FNV_OFFSET, |h, (name, &v)| fnv_word(fnv_bytes(h, name.as_bytes()), v));
+    let recent = std::mem::take(&mut st.ring);
+    let dropped = std::mem::take(&mut st.dropped);
+    st.checkpoints.push(Checkpoint {
+        seq: st.seq,
+        at: t,
+        census,
+        links_hash,
+        counters_hash,
+        streams: st.streams,
+        recent,
+        dropped,
+    });
+    st.seq += 1;
+    // next cadence boundary strictly after t
+    let next = (t / st.cadence + 1).saturating_mul(st.cadence);
+    NEXT_DUE.store(next, Ordering::Release);
+}
+
+fn hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+impl Ledger {
+    /// Stream the ledger as JSON through a [`JsonEmitter`], with the run
+    /// manifest (pre-rendered JSON text) stamped under `"manifest"`.
+    /// Hashes are emitted as 16-digit hex strings — a JSON number would
+    /// lose bits past 2^53.
+    pub fn write_json<W: std::io::Write>(
+        &self,
+        emitter: &mut JsonEmitter<W>,
+        manifest_json: Option<&str>,
+    ) -> std::io::Result<()> {
+        fn sigs<W: std::io::Write>(
+            e: &mut JsonEmitter<W>,
+            streams: &[StreamSig; NUM_STREAMS],
+        ) -> std::io::Result<()> {
+            e.begin_obj()?;
+            for s in Stream::ALL {
+                e.key(s.name())?;
+                e.begin_obj()?;
+                e.key("count")?;
+                e.uint(streams[s.index()].count)?;
+                e.key("hash")?;
+                e.str(&hex(streams[s.index()].hash))?;
+                e.end_obj()?;
+            }
+            e.end_obj()
+        }
+        let e = emitter;
+        e.begin_obj()?;
+        e.key("version")?;
+        e.uint(1)?;
+        e.key("cadence")?;
+        e.uint(self.cadence)?;
+        e.key("events")?;
+        e.bool(self.events)?;
+        if let Some(explain) = &self.explain {
+            e.key("explain")?;
+            e.str(explain)?;
+        }
+        e.key("streams")?;
+        sigs(e, &self.streams)?;
+        e.key("checkpoints")?;
+        e.begin_arr()?;
+        for cp in &self.checkpoints {
+            e.begin_obj()?;
+            e.key("seq")?;
+            e.uint(cp.seq)?;
+            e.key("at")?;
+            e.uint(cp.at)?;
+            e.key("pending")?;
+            e.uint(cp.census.pending as u64)?;
+            e.key("running")?;
+            e.uint(cp.census.running as u64)?;
+            e.key("recovering")?;
+            e.uint(cp.census.recovering as u64)?;
+            e.key("free_gpus")?;
+            e.uint(cp.census.free_gpus as u64)?;
+            e.key("links_hash")?;
+            e.str(&hex(cp.links_hash))?;
+            e.key("counters_hash")?;
+            e.str(&hex(cp.counters_hash))?;
+            e.key("streams")?;
+            sigs(e, &cp.streams)?;
+            if self.events {
+                e.key("recent")?;
+                e.begin_arr()?;
+                for fp in &cp.recent {
+                    e.begin_obj()?;
+                    e.key("at")?;
+                    e.uint(fp.at)?;
+                    e.key("job")?;
+                    if fp.job == u64::MAX {
+                        e.num(-1.0)?;
+                    } else {
+                        e.uint(fp.job)?;
+                    }
+                    e.key("stream")?;
+                    e.str(fp.stream.name())?;
+                    e.key("tag")?;
+                    e.uint(fp.tag)?;
+                    e.key("fp")?;
+                    e.str(&hex(fp.fp))?;
+                    e.end_obj()?;
+                }
+                e.end_arr()?;
+                e.key("dropped")?;
+                e.uint(cp.dropped)?;
+            }
+            e.end_obj()?;
+        }
+        e.end_arr()?;
+        if let Some(m) = manifest_json {
+            e.key("manifest")?;
+            e.raw(m)?;
+        }
+        e.end_obj()
+    }
+
+    /// Write the ledger to `path` (pretty JSON, streamed — never builds
+    /// the whole document in memory).
+    pub fn save(&self, path: &Path, manifest_json: Option<&str>) -> crate::Result<()> {
+        use anyhow::Context;
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating ledger file {}", path.display()))?;
+        let mut emitter = JsonEmitter::pretty(std::io::BufWriter::new(file));
+        self.write_json(&mut emitter, manifest_json)?;
+        let mut out = emitter.finish()?;
+        out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::JobId;
+    use std::sync::{Mutex as TestMutex, MutexGuard};
+
+    // The recorder is process-global; serialize tests touching it.
+    static LOCK: TestMutex<()> = TestMutex::new(());
+
+    fn lock() -> MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn rec(job: usize, finish: u64) -> JobRecord {
+        JobRecord {
+            job: JobId(job),
+            arrival: 0,
+            start: 1,
+            finish,
+            span: 2,
+            workers: 4,
+            max_p: 3,
+            mean_tau: 1.5,
+            iterations_done: 100,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn disarmed_hooks_record_nothing() {
+        let _g = lock();
+        assert!(!armed());
+        note_event(1, 0, 0);
+        note_record(&rec(0, 10));
+        note_reject(2, 1);
+        note_migration(3, 0, 4.0, 2.0, 5);
+        checkpoint(1000, QueueCensus::default(), false, || [1u64, 2]);
+        // arming immediately after sees a clean slate
+        arm(100, true, None);
+        let led = disarm().unwrap();
+        assert!(led.checkpoints.is_empty());
+        assert!(led.streams.iter().all(|s| s.count == 0 && s.hash == FNV_OFFSET));
+    }
+
+    #[test]
+    fn identical_sequences_fold_to_identical_ledgers() {
+        let _g = lock();
+        let run = || {
+            arm(10, true, None);
+            note_event(0, 0, 0);
+            note_event(1, 0, 1);
+            note_reject(2, 7);
+            note_migration(4, 0, 4.0, 2.0, 5);
+            note_fault(&FaultEvent {
+                at: 5,
+                action: FaultAction::LinkDegrade { link: 2, factor: 0.5 },
+            });
+            checkpoint(10, QueueCensus { pending: 1, running: 2, recovering: 0, free_gpus: 4 },
+                false, || [3u64, 0, 1]);
+            note_record(&rec(0, 12));
+            checkpoint(13, QueueCensus::default(), true, || [0u64, 0, 0]);
+            disarm().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(a.checkpoints.len(), 2);
+        assert_eq!(a.checkpoints[0].seq, 0);
+        assert_eq!(a.checkpoints[0].at, 10);
+        // the interval ring holds the five pre-checkpoint items in order
+        assert_eq!(a.checkpoints[0].recent.len(), 5);
+        assert_eq!(a.checkpoints[0].recent[0].stream, Stream::Events);
+        assert_eq!(a.checkpoints[1].recent.len(), 1);
+        assert_eq!(a.checkpoints[1].recent[0].stream, Stream::Records);
+        // final stream digests carry the whole run
+        assert_eq!(a.streams[Stream::Events.index()].count, 2);
+        assert_eq!(a.streams[Stream::Records.index()].count, 1);
+        assert_eq!(a.streams[Stream::Faults.index()].count, 1);
+    }
+
+    #[test]
+    fn perturbed_item_changes_exactly_its_stream_hash() {
+        let _g = lock();
+        let run = |kind: u64| {
+            arm(1000, false, None);
+            note_event(0, 0, 0);
+            note_event(5, 1, kind);
+            note_reject(9, 3);
+            disarm().unwrap()
+        };
+        let a = run(1);
+        let b = run(2);
+        assert_ne!(
+            a.streams[Stream::Events.index()].hash,
+            b.streams[Stream::Events.index()].hash
+        );
+        assert_eq!(a.streams[Stream::Rejections.index()], b.streams[Stream::Rejections.index()]);
+        assert_eq!(a.streams[Stream::Events.index()].count, 2);
+    }
+
+    #[test]
+    fn cadence_gates_checkpoints_and_ring_overflow_counts_drops() {
+        let _g = lock();
+        arm(100, true, None);
+        assert!(!checkpoint_due(99));
+        assert!(checkpoint_due(100));
+        for i in 0..(RING_CAP as u64 + 10) {
+            note_event(i, i, 0);
+        }
+        // not due yet: no checkpoint recorded
+        checkpoint(50, QueueCensus::default(), false, || [0u64; 0]);
+        checkpoint(120, QueueCensus::default(), false, std::iter::empty::<u64>);
+        // due again only past the next boundary
+        assert!(!checkpoint_due(150));
+        assert!(checkpoint_due(200));
+        let led = disarm().unwrap();
+        assert_eq!(led.checkpoints.len(), 1);
+        let cp = &led.checkpoints[0];
+        assert_eq!(cp.at, 120);
+        assert_eq!(cp.recent.len(), RING_CAP);
+        assert_eq!(cp.dropped, 10);
+        assert_eq!(cp.streams[Stream::Events.index()].count, RING_CAP as u64 + 10);
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_diff_loader() {
+        let _g = lock();
+        arm(10, true, Some("explain.json".to_string()));
+        note_event(0, 0, 0);
+        note_event(1, u64::MAX, 7); // fabric sentinel renders as -1
+        checkpoint(10, QueueCensus { pending: 1, running: 1, recovering: 0, free_gpus: 2 },
+            false, || [1u64, 2, 3]);
+        let led = disarm().unwrap();
+        let mut emitter = JsonEmitter::pretty(Vec::new());
+        led.write_json(&mut emitter, Some("{\"seed\": 1}")).unwrap();
+        let text = String::from_utf8(emitter.finish().unwrap()).unwrap();
+        let doc = crate::util::Json::parse(&text).unwrap();
+        assert_eq!(doc.req("cadence").unwrap().as_u64().unwrap(), 10);
+        assert_eq!(doc.req("explain").unwrap().as_str().unwrap(), "explain.json");
+        assert_eq!(doc.req("manifest").unwrap().req("seed").unwrap().as_u64().unwrap(), 1);
+        let cps = doc.req("checkpoints").unwrap().as_arr().unwrap();
+        assert_eq!(cps.len(), 1);
+        let recent = cps[0].req("recent").unwrap().as_arr().unwrap();
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[1].req("job").unwrap().as_f64().unwrap(), -1.0);
+        // the diff-side loader accepts what the writer emits
+        let parsed = crate::obs::diff::parse(&doc).unwrap();
+        assert_eq!(parsed.cadence, 10);
+        assert_eq!(parsed.checkpoints.len(), 1);
+        assert_eq!(parsed.checkpoints[0].recent.len(), 2);
+        assert_eq!(parsed.explain.as_deref(), Some("explain.json"));
+    }
+}

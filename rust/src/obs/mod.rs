@@ -24,6 +24,18 @@
 //!   effective degree and residual Gbps under the active
 //!   [`ContentionModel`](crate::net::ContentionModel)), sampled at
 //!   scheduling events and exported CSV/JSON (`figures --fig links`).
+//! * [`ledger`] — the run-digest flight recorder: FNV-1a rolling hashes
+//!   over the event/record/rejection/migration/fault streams plus
+//!   periodic state checkpoints, armed via `--ledger <file>`
+//!   (`--ledger-events` adds bounded per-interval event-fingerprint
+//!   rings), O(1) memory per stream.
+//! * [`diff`] — `rarsched diff <a.json> <b.json>`: aligns two ledgers
+//!   and pins the first divergent checkpoint, stream and event; the
+//!   forensics tool for a broken equivalence ladder ("ladder fails →
+//!   re-run both sides with `--ledger` → `rarsched diff`").
+//! * [`prof`] — in-terminal span profiling (`--profile`): folds the
+//!   [`trace`] sink's duration spans into a per-thread call tree with
+//!   total/self time, call counts and a top-N-by-self-time table.
 //!
 //! # The passivity invariant
 //!
@@ -45,12 +57,16 @@
 //! wall-clock time only while armed, so the disarmed stack never calls
 //! [`std::time::Instant::now`] on a hot path.
 
+pub mod diff;
 pub mod explain;
+pub mod ledger;
 pub mod metrics;
+pub mod prof;
 pub mod timeline;
 pub mod trace;
 
 pub use explain::Decision;
+pub use ledger::Ledger;
 pub use metrics::{Counter, Hist};
 pub use timeline::LinkSample;
 pub use trace::{MemSink, NullSink, TraceEvent, TraceSink};

@@ -1,0 +1,270 @@
+//! In-terminal span profiling: fold [`TraceEvent`] spans into a
+//! hierarchical total/self-time profile.
+//!
+//! `--trace-out` already records duration spans (`sim.period`,
+//! `bco.bisect_round`, `net.progressive_fill`, `par.worker`,
+//! `online.period`, …) but reading them needs an external Chrome-trace
+//! viewer. `--profile` folds the same [`MemSink`](crate::obs::trace::MemSink)
+//! events into a per-thread call tree printed at process end: every
+//! span path with its call count, **total** (wall time inside the span)
+//! and **self** time (total minus time attributed to directly nested
+//! spans), plus a flat top-N by self time — where the run actually
+//! spent its microseconds.
+//!
+//! Nesting is reconstructed the same way [`chrome_trace_json`]
+//! (crate::obs::trace::chrome_trace_json) orders its document: spans
+//! are sorted by `(ts, −dur)` per thread (a [`Span`](crate::obs::trace::Span)
+//! emits at *close*, so raw sink order is close-time) and a span nests
+//! under the deepest still-open span. Aggregation is purely a read of
+//! already-recorded events — arming `--profile` shares the passive
+//! trace sink and never touches a scheduling outcome.
+
+use crate::obs::trace::{Phase, TraceEvent};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Aggregated numbers for one span path on one thread.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PathStats {
+    pub count: u64,
+    pub total_us: u64,
+    pub self_us: u64,
+}
+
+/// One thread's profile: span paths (root-first name chains) to stats,
+/// in deterministic path order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ThreadProfile {
+    pub tid: u64,
+    /// Keyed by the full name chain from a root span down.
+    pub paths: BTreeMap<Vec<&'static str>, PathStats>,
+    pub spans: u64,
+}
+
+/// The folded profile for a whole event set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Profile {
+    pub threads: Vec<ThreadProfile>,
+    /// Complete spans folded (instants are skipped).
+    pub spans: u64,
+    pub instants: u64,
+}
+
+/// Fold trace events into a [`Profile`].
+pub fn profile(events: &[TraceEvent]) -> Profile {
+    let mut by_tid: BTreeMap<u64, Vec<&TraceEvent>> = BTreeMap::new();
+    let mut instants = 0u64;
+    for ev in events {
+        match ev.ph {
+            Phase::Complete => by_tid.entry(ev.tid).or_default().push(ev),
+            Phase::Instant => instants += 1,
+        }
+    }
+    let mut threads = Vec::new();
+    let mut spans = 0u64;
+    for (tid, mut evs) in by_tid {
+        evs.sort_by_key(|e| (e.ts_us, std::cmp::Reverse(e.dur_us)));
+        let mut paths: BTreeMap<Vec<&'static str>, PathStats> = BTreeMap::new();
+        // open-span stack: (end timestamp, name)
+        let mut stack: Vec<(u64, &'static str)> = Vec::new();
+        for ev in &evs {
+            while stack.last().is_some_and(|&(end, _)| ev.ts_us >= end) {
+                stack.pop();
+            }
+            let mut path: Vec<&'static str> = stack.iter().map(|&(_, n)| n).collect();
+            path.push(ev.name);
+            let stats = paths.entry(path).or_default();
+            stats.count += 1;
+            stats.total_us += ev.dur_us;
+            stack.push((ev.ts_us.saturating_add(ev.dur_us), ev.name));
+        }
+        // self = total − Σ direct-children totals (each child instance
+        // nests in exactly one parent instance, so the aggregate
+        // subtraction is exact)
+        let child_totals: BTreeMap<Vec<&'static str>, u64> = paths
+            .iter()
+            .filter(|(path, _)| path.len() > 1)
+            .map(|(path, stats)| (path[..path.len() - 1].to_vec(), stats.total_us))
+            .fold(BTreeMap::new(), |mut acc, (parent, total)| {
+                *acc.entry(parent).or_default() += total;
+                acc
+            });
+        for (path, stats) in &mut paths {
+            let children = child_totals.get(path).copied().unwrap_or(0);
+            stats.self_us = stats.total_us.saturating_sub(children);
+        }
+        let thread_spans = evs.len() as u64;
+        spans += thread_spans;
+        threads.push(ThreadProfile { tid, paths, spans: thread_spans });
+    }
+    Profile { threads, spans, instants }
+}
+
+fn fmt_us(us: u64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.2}s", us as f64 / 1_000_000.0)
+    } else if us >= 1_000 {
+        format!("{:.2}ms", us as f64 / 1_000.0)
+    } else {
+        format!("{us}us")
+    }
+}
+
+impl Profile {
+    pub fn is_empty(&self) -> bool {
+        self.spans == 0
+    }
+
+    /// Render the profile as indented text: per-thread call trees plus
+    /// a flat top-`top_n` table by self time.
+    pub fn render(&self, top_n: usize) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "profile: {} span(s), {} instant event(s), {} thread(s)",
+            self.spans,
+            self.instants,
+            self.threads.len()
+        );
+        if self.is_empty() {
+            let _ = writeln!(
+                out,
+                "  (no duration spans recorded — spans are emitted by the sim/online \
+                 rate loops, bisection and progressive fill)"
+            );
+            return out;
+        }
+        for thread in &self.threads {
+            let _ = writeln!(out, "\nthread {} ({} spans)", thread.tid, thread.spans);
+            let name_width = thread
+                .paths
+                .keys()
+                .map(|p| 2 * p.len() + p.last().map_or(0, |n| n.len()))
+                .max()
+                .unwrap_or(0);
+            // BTreeMap path order is exactly pre-order over the tree
+            for (path, stats) in &thread.paths {
+                let name = path.last().copied().unwrap_or("?");
+                let indented = format!("{}{}", "  ".repeat(path.len()), name);
+                let _ = writeln!(
+                    out,
+                    "{indented:<width$}  {count:>7}x  total {total:>9}  self {slf:>9}",
+                    width = name_width + 2,
+                    count = stats.count,
+                    total = fmt_us(stats.total_us),
+                    slf = fmt_us(stats.self_us),
+                );
+            }
+            let mut flat: BTreeMap<&'static str, PathStats> = BTreeMap::new();
+            for (path, stats) in &thread.paths {
+                if let Some(&name) = path.last() {
+                    let agg = flat.entry(name).or_default();
+                    agg.count += stats.count;
+                    agg.total_us += stats.total_us;
+                    agg.self_us += stats.self_us;
+                }
+            }
+            let mut ranked: Vec<(&'static str, PathStats)> = flat.into_iter().collect();
+            ranked.sort_by_key(|&(name, s)| (std::cmp::Reverse(s.self_us), name));
+            let _ = writeln!(out, "  top {} by self time:", top_n.min(ranked.len()));
+            for (name, s) in ranked.into_iter().take(top_n) {
+                let _ = writeln!(
+                    out,
+                    "    {:<24} {:>9} self ({} calls)",
+                    name,
+                    fmt_us(s.self_us),
+                    s.count
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &'static str, ts: u64, dur: u64, tid: u64) -> TraceEvent {
+        TraceEvent { name, cat: "test", ph: Phase::Complete, ts_us: ts, dur_us: dur, tid, args: Vec::new() }
+    }
+
+    fn instant(name: &'static str, ts: u64, tid: u64) -> TraceEvent {
+        TraceEvent { name, cat: "test", ph: Phase::Instant, ts_us: ts, dur_us: 0, tid, args: Vec::new() }
+    }
+
+    #[test]
+    fn nesting_and_self_time() {
+        // online.run [0,100) containing two online.period spans — in
+        // close-time emission order, the way a MemSink records them
+        let events = vec![
+            span("online.period", 10, 20, 1),
+            span("online.period", 40, 30, 1),
+            span("online.run", 0, 100, 1),
+            instant("job.arrive", 5, 1),
+        ];
+        let p = profile(&events);
+        assert_eq!(p.spans, 3);
+        assert_eq!(p.instants, 1);
+        assert_eq!(p.threads.len(), 1);
+        let paths = &p.threads[0].paths;
+        let run = &paths[&vec!["online.run"]];
+        assert_eq!((run.count, run.total_us, run.self_us), (1, 100, 50));
+        let period = &paths[&vec!["online.run", "online.period"]];
+        assert_eq!((period.count, period.total_us, period.self_us), (2, 50, 50));
+    }
+
+    #[test]
+    fn sibling_spans_do_not_nest() {
+        // back-to-back spans where the second starts exactly at the
+        // first's end — siblings, not parent/child
+        let events = vec![span("a", 0, 10, 1), span("b", 10, 10, 1)];
+        let p = profile(&events);
+        let paths = &p.threads[0].paths;
+        assert_eq!(paths.len(), 2);
+        assert!(paths.contains_key(&vec!["a"]));
+        assert!(paths.contains_key(&vec!["b"]));
+    }
+
+    #[test]
+    fn threads_fold_independently() {
+        let events = vec![
+            span("par.worker", 0, 50, 2),
+            span("par.worker", 0, 40, 3),
+            span("sim.run", 0, 100, 1),
+        ];
+        let p = profile(&events);
+        assert_eq!(p.threads.len(), 3);
+        assert_eq!(p.threads.iter().map(|t| t.tid).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn deep_chains_unwind_correctly() {
+        // a [0,100) > b [10,40) > c [20,10); then d [60,20) back under a
+        let events = vec![
+            span("c", 20, 10, 1),
+            span("b", 10, 40, 1),
+            span("d", 60, 20, 1),
+            span("a", 0, 100, 1),
+        ];
+        let p = profile(&events);
+        let paths = &p.threads[0].paths;
+        assert_eq!(paths[&vec!["a"]].self_us, 100 - 40 - 20);
+        assert_eq!(paths[&vec!["a", "b"]].self_us, 40 - 10);
+        assert_eq!(paths[&vec!["a", "b", "c"]].total_us, 10);
+        assert_eq!(paths[&vec!["a", "d"]].total_us, 20);
+    }
+
+    #[test]
+    fn render_shapes_and_empty_profile() {
+        let p = profile(&[]);
+        assert!(p.is_empty());
+        assert!(p.render(5).contains("no duration spans"));
+        let events = vec![span("online.period", 10, 20, 1), span("online.run", 0, 100, 1)];
+        let text = profile(&events).render(5);
+        assert!(text.contains("thread 1 (2 spans)"));
+        assert!(text.contains("online.run"));
+        assert!(text.contains("top 2 by self time:"));
+        assert!(text.contains("self"));
+    }
+}

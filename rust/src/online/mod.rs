@@ -223,36 +223,81 @@ fn coolest_sum(busies: &mut Vec<f64>, gpus: usize) -> f64 {
     busies.iter().take(gpus).sum()
 }
 
-/// Distribute one constant-rate period `[t, t+dt)` across the window
-/// buckets it overlaps (buckets are created on demand, so idle gaps
-/// appear as all-zero windows).
-// archlint: allow(release-panic) the while loop grows windows to cover idx before indexing it
-fn account_window(
-    windows: &mut Vec<WindowSample>,
-    w: u64,
-    t: u64,
-    dt: u64,
-    busy_per_slot: f64,
-    capacity_per_slot: f64,
-    queue_len: usize,
-) {
-    debug_assert!(w > 0);
-    let mut cur = t;
-    let end = t + dt;
-    while cur < end {
-        let idx = (cur / w) as usize;
-        while windows.len() <= idx {
-            let i = windows.len() as u64;
-            windows.push(WindowSample { start: i * w, ..WindowSample::default() });
+/// Open-bucket window accumulator: one [`WindowSample`] of state, with
+/// every closed bucket (idle gaps included, as all-zero windows) emitted
+/// through [`RunSink::window`] the moment its last slot is accounted.
+/// This keeps the window series O(1) in the core — the sink decides
+/// whether to collect it — while preserving the exact bucket tiling and
+/// per-bucket accumulation order of the old materialized series, so sums
+/// over windows still equal the run totals to the last ulp.
+#[derive(Debug, Default)]
+struct WindowAcc {
+    /// Bucket index of `open` (`open.start == open_idx × w`).
+    open_idx: u64,
+    open: WindowSample,
+    /// False until the first accounted span — before that there is no
+    /// open bucket to close or flush.
+    started: bool,
+}
+
+impl WindowAcc {
+    /// Distribute one constant-rate period `[t, t+dt)` across the window
+    /// buckets it overlaps, closing (emitting) every bucket the period
+    /// steps past.
+    fn account<K: RunSink>(
+        &mut self,
+        sink: &mut K,
+        w: u64,
+        t: u64,
+        dt: u64,
+        busy_per_slot: f64,
+        capacity_per_slot: f64,
+        queue_len: usize,
+    ) {
+        debug_assert!(w > 0);
+        let mut cur = t;
+        let end = t + dt;
+        while cur < end {
+            self.roll_to(sink, cur / w, w);
+            let bucket_end = (cur / w + 1) * w;
+            let overlap = bucket_end.min(end) - cur;
+            let s = &mut self.open;
+            s.busy_gpu_slots += busy_per_slot * overlap as f64;
+            s.queue_area += queue_len as f64 * overlap as f64;
+            s.max_queue = s.max_queue.max(queue_len);
+            s.capacity_gpu_slots += capacity_per_slot * overlap as f64;
+            cur = bucket_end.min(end);
         }
-        let bucket_end = (cur / w + 1) * w;
-        let overlap = bucket_end.min(end) - cur;
-        let s = &mut windows[idx];
-        s.busy_gpu_slots += busy_per_slot * overlap as f64;
-        s.queue_area += queue_len as f64 * overlap as f64;
-        s.max_queue = s.max_queue.max(queue_len);
-        s.capacity_gpu_slots += capacity_per_slot * overlap as f64;
-        cur = bucket_end.min(end);
+    }
+
+    /// Close every bucket strictly before `idx` (untouched ones emit as
+    /// all-zero windows) and make `idx` the open bucket.
+    fn roll_to<K: RunSink>(&mut self, sink: &mut K, idx: u64, w: u64) {
+        if !self.started {
+            // leading idle gap: the old series zero-filled from bucket 0
+            for i in 0..idx {
+                sink.window(WindowSample { start: i * w, ..WindowSample::default() });
+            }
+            self.open_idx = idx;
+            self.open = WindowSample { start: idx * w, ..WindowSample::default() };
+            self.started = true;
+            return;
+        }
+        while self.open_idx < idx {
+            let next = WindowSample {
+                start: (self.open_idx + 1) * w,
+                ..WindowSample::default()
+            };
+            sink.window(std::mem::replace(&mut self.open, next));
+            self.open_idx += 1;
+        }
+    }
+
+    /// Flush the still-open bucket at run end.
+    fn finish<K: RunSink>(self, sink: &mut K) {
+        if self.started {
+            sink.window(self.open);
+        }
     }
 }
 
@@ -304,6 +349,15 @@ pub trait RunSink {
     fn migration(&mut self, m: MigrationRecord) {
         let _ = m;
     }
+
+    /// A closed sliding-window bucket, in start order with no gaps
+    /// (never called unless [`OnlineOptions::window`] is set). The core
+    /// emits and drops — collecting the series is the sink's choice, so
+    /// `--window` no longer forces O(run length) memory on a streaming
+    /// run.
+    fn window(&mut self, w: WindowSample) {
+        let _ = w;
+    }
 }
 
 /// The collect-everything [`RunSink`]: event log, per-job records,
@@ -318,6 +372,8 @@ pub struct CollectSink {
     pub records: Vec<JobRecord>,
     pub rejected: Vec<JobId>,
     pub migrations: Vec<MigrationRecord>,
+    /// Sliding-window series (empty unless [`OnlineOptions::window`]).
+    pub windows: Vec<WindowSample>,
 }
 
 impl RunSink for CollectSink {
@@ -336,6 +392,10 @@ impl RunSink for CollectSink {
     fn migration(&mut self, m: MigrationRecord) {
         self.migrations.push(m);
     }
+
+    fn window(&mut self, w: WindowSample) {
+        self.windows.push(w);
+    }
 }
 
 /// The constant-memory [`RunSink`]: JCT and wait distributions fold into
@@ -352,6 +412,12 @@ pub struct StreamSink {
     pub event_counts: [u64; EventKind::COUNT],
     pub rejected: u64,
     pub migrations: u64,
+    /// Sliding-window series — the one opt-in series this sink keeps
+    /// (bounded by `slots / window`, not by the job count; armed only
+    /// when the caller asked for the series via
+    /// [`OnlineOptions::window`]). Probes that want a pure O(active) run
+    /// override [`RunSink::window`] to fold-and-drop instead.
+    pub windows: Vec<WindowSample>,
 }
 
 impl RunSink for StreamSink {
@@ -371,6 +437,52 @@ impl RunSink for StreamSink {
 
     fn migration(&mut self, _m: MigrationRecord) {
         self.migrations += 1;
+    }
+
+    fn window(&mut self, w: WindowSample) {
+        self.windows.push(w);
+    }
+}
+
+/// Forwarding [`RunSink`] that mirrors every item into the run-digest
+/// flight recorder ([`crate::obs::ledger`]) before handing it to the
+/// real sink. `run_core` wraps its sink in this unconditionally, so the
+/// ledger observes exactly the stream the sink observes — events,
+/// records, rejections and migrations in realized order. Disarmed, each
+/// hook costs one relaxed atomic load (the passivity contract).
+struct LedgerTap<'s, K: RunSink> {
+    inner: &'s mut K,
+}
+
+impl<K: RunSink> RunSink for LedgerTap<'_, K> {
+    fn event(&mut self, at: u64, job: JobId, kind: EventKind) {
+        crate::obs::ledger::note_event(at, job.0 as u64, kind.index() as u64);
+        self.inner.event(at, job, kind);
+    }
+
+    fn record(&mut self, record: JobRecord) {
+        crate::obs::ledger::note_record(&record);
+        self.inner.record(record);
+    }
+
+    fn reject(&mut self, at: u64, job: JobId) {
+        crate::obs::ledger::note_reject(at, job.0 as u64);
+        self.inner.reject(at, job);
+    }
+
+    fn migration(&mut self, m: MigrationRecord) {
+        crate::obs::ledger::note_migration(
+            m.at,
+            m.job.0 as u64,
+            m.from_effective,
+            m.to_effective,
+            m.restart_slots,
+        );
+        self.inner.migration(m);
+    }
+
+    fn window(&mut self, w: WindowSample) {
+        self.inner.window(w);
     }
 }
 
@@ -409,8 +521,6 @@ pub struct RunStats {
     /// Σ (re-place slot − kill slot) over committed recoveries — the
     /// starvation ledger of the recovery queue.
     pub recovery_wait_slots: u128,
-    /// Sliding-window series (empty unless [`OnlineOptions::window`]).
-    pub windows: Vec<WindowSample>,
 }
 
 impl RunStats {
@@ -879,7 +989,7 @@ impl<'a> OnlineScheduler<'a> {
         order.sort_by_key(|j| (j.arrival, j.id));
         let mut sink = CollectSink::default();
         let stats = self.run_core(order.into_iter(), policy, &mut sink);
-        let CollectSink { events, mut records, rejected, migrations } = sink;
+        let CollectSink { events, mut records, rejected, migrations, windows } = sink;
         records.sort_by_key(|r| r.job);
         OnlineOutcome {
             policy: policy.name().to_string(),
@@ -899,7 +1009,7 @@ impl<'a> OnlineScheduler<'a> {
             failed: stats.failed,
             recovered: stats.recovered,
             recovery_wait_slots: stats.recovery_wait_slots,
-            windows: stats.windows,
+            windows,
         }
     }
 
@@ -949,7 +1059,7 @@ impl<'a> OnlineScheduler<'a> {
             slots_simulated: stats.slots_simulated,
             periods: stats.periods,
             truncated: stats.truncated,
-            windows: stats.windows,
+            windows: sink.windows,
         }
     }
 
@@ -990,7 +1100,7 @@ impl<'a> OnlineScheduler<'a> {
         I: Iterator<Item = S>,
         K: RunSink,
     {
-        use crate::obs::{explain, metrics, timeline, trace};
+        use crate::obs::{explain, ledger, metrics, timeline, trace};
         let mut arrivals = arrivals.peekable();
         // Fault stream cursor. `fault_armed` gates every fault branch, so
         // an unarmed (or empty-trace) run never touches the recovery
@@ -1021,8 +1131,34 @@ impl<'a> OnlineScheduler<'a> {
         let admission_active = self.options.admission.is_active();
         let rate_cache = self.options.rate_cache;
         let window = self.options.window;
+        let mut win_acc = WindowAcc::default();
+        // Every sink stream flows through the flight-recorder tap — the
+        // ledger sees exactly what the sink sees. One relaxed atomic
+        // load per item when disarmed.
+        let sink = &mut LedgerTap { inner: sink };
 
         loop {
+            // Flight-recorder checkpoint (passive): one relaxed atomic
+            // load unless the ledger is armed AND the cadence slot is
+            // due; the queue census and per-link counts are computed
+            // only then.
+            if ledger::checkpoint_due(t) {
+                ledger::checkpoint(
+                    t,
+                    ledger::QueueCensus {
+                        pending: pending.len(),
+                        running: running.len(),
+                        recovering: recovering.len(),
+                        free_gpus: self.cluster.server_ids().map(|s| state.free_on(s)).sum(),
+                    },
+                    false,
+                    || {
+                        (0..topo.num_links())
+                            .map(|l| tracker.link_count(LinkId(l)) as u64)
+                            .collect::<Vec<u64>>()
+                    },
+                );
+            }
             // 0) Apply fault events due by now — faults precede arrivals
             //    at equal slots, so a crash at t kills before t's
             //    arrivals queue behind it. Kills release occupancy while
@@ -1037,6 +1173,7 @@ impl<'a> OnlineScheduler<'a> {
                         break;
                     };
                     metrics::incr(metrics::Counter::FaultEvents);
+                    ledger::note_fault(&fe);
                     match fe.action {
                         FaultAction::ServerCrash { server } => {
                             if server >= self.cluster.num_servers() {
@@ -1549,8 +1686,8 @@ impl<'a> OnlineScheduler<'a> {
                             // idle gap: zero busy GPUs, but the queue may
                             // hold a stuck (unplaceable) backlog
                             if at > t {
-                                account_window(
-                                    &mut stats.windows,
+                                win_acc.account(
+                                    sink,
                                     w,
                                     t,
                                     at - t,
@@ -1653,8 +1790,8 @@ impl<'a> OnlineScheduler<'a> {
                 // period; split the period exactly across window buckets
                 let busy_per_slot: f64 =
                     running.iter().map(|r| r.placement.num_workers() as f64).sum();
-                account_window(
-                    &mut stats.windows,
+                win_acc.account(
+                    sink,
                     w,
                     t,
                     dt,
@@ -1903,6 +2040,10 @@ impl<'a> OnlineScheduler<'a> {
             }
         }
 
+        // Close the window series: the still-open bucket flushes through
+        // the sink, so the emitted series tiles exactly what the old
+        // materialized one covered.
+        win_acc.finish(sink);
         stats.truncated = !pending.is_empty()
             || !running.is_empty()
             || !recovering.is_empty()
@@ -1943,6 +2084,27 @@ impl<'a> OnlineScheduler<'a> {
                     mean_tau: r.tau_sum / r.tau_slots.max(1) as f64,
                     iterations_done: kernel::completed_iterations(r.progress),
                     migrations: r.migrations,
+                },
+            );
+        }
+        // Forced final checkpoint: the record stream is complete here
+        // (residuals flushed), so two equivalent runs close their
+        // ledgers on identical digests even when the cadence never
+        // divided the final slot.
+        if ledger::armed() {
+            ledger::checkpoint(
+                t,
+                ledger::QueueCensus {
+                    pending: pending.len(),
+                    running: 0,
+                    recovering: 0,
+                    free_gpus: self.cluster.server_ids().map(|s| state.free_on(s)).sum(),
+                },
+                true,
+                || {
+                    (0..topo.num_links())
+                        .map(|l| tracker.link_count(LinkId(l)) as u64)
+                        .collect::<Vec<u64>>()
                 },
             );
         }
@@ -2230,7 +2392,7 @@ mod tests {
         assert_eq!(stats.slots_simulated, out.outcome.slots_simulated);
         assert_eq!(stats.periods, out.outcome.periods);
         assert_eq!(stats.max_pending, out.max_pending);
-        assert_eq!(stats.windows, out.windows);
+        assert_eq!(sink.windows, out.windows);
         let mut recs = sink.records;
         recs.sort_by_key(|r| r.job);
         assert_eq!(recs.len(), out.outcome.records.len());

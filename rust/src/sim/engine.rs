@@ -171,7 +171,7 @@ impl<'a> Simulator<'a> {
     /// (the planners' bisection loops) allocates only the output records.
     // archlint: allow(release-panic) event loop walks dense scratch vecs and a specs map keyed by the plan's own entries
     pub fn run_with<'p>(&self, scratch: &mut SimScratch, plan: &'p Plan) -> SimOutcome {
-        use crate::obs::{metrics, timeline, trace};
+        use crate::obs::{ledger, metrics, timeline, trace};
         let use_tracker = self.options.contention == ContentionMode::TrackerDirtySet;
         let entries = &plan.entries;
         let _run_span = trace::span("sim.run", "sim").arg("jobs", entries.len() as f64);
@@ -210,6 +210,39 @@ impl<'a> Simulator<'a> {
         while (!pending.is_empty() || arr_cursor < by_arrival.len() || !active.is_empty())
             && t < self.options.max_slots
         {
+            // Flight-recorder checkpoint (passive): one relaxed atomic
+            // load unless the ledger is armed AND the cadence slot is
+            // due. Link counts come from the tracker when it is live;
+            // snapshot mode hashes the empty link set (a constant), so
+            // cross-mode ledgers compare on the other streams.
+            if ledger::checkpoint_due(t) {
+                ledger::checkpoint(
+                    t,
+                    ledger::QueueCensus {
+                        pending: pending.len() + (by_arrival.len() - arr_cursor),
+                        running: active.len(),
+                        recovering: 0,
+                        free_gpus: self
+                            .cluster
+                            .server_ids()
+                            .map(|s| state.free_on(s))
+                            .sum(),
+                    },
+                    false,
+                    || {
+                        if use_tracker {
+                            (0..topo.num_links())
+                                .map(|l| {
+                                    tracker.link_count(crate::topology::LinkId(l)) as u64
+                                })
+                                .collect::<Vec<u64>>()
+                        } else {
+                            Vec::new()
+                        }
+                    },
+                );
+            }
+
             // 1a) Reveal arrivals due by now into the dispatch queue,
             //     preserving dispatch (plan) order: a newly arrived entry
             //     with an earlier plan position outranks already-waiting
@@ -428,7 +461,7 @@ impl<'a> Simulator<'a> {
                             active_idx[active[i].job.0] = i;
                         }
                     }
-                    records.push(JobRecord {
+                    let rec = JobRecord {
                         job: a.job,
                         arrival: a.spec.arrival,
                         start: a.start,
@@ -439,7 +472,9 @@ impl<'a> Simulator<'a> {
                         mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
                         iterations_done: a.spec.iterations,
                         migrations: 0,
-                    });
+                    };
+                    ledger::note_record(&rec);
+                    records.push(rec);
                 } else {
                     i += 1;
                 }
@@ -453,7 +488,7 @@ impl<'a> Simulator<'a> {
             !pending.is_empty() || arr_cursor < by_arrival.len() || !active.is_empty();
         // Record unfinished jobs (truncation) with what they achieved.
         for a in active {
-            records.push(JobRecord {
+            let rec = JobRecord {
                 job: a.job,
                 arrival: a.spec.arrival,
                 start: a.start,
@@ -464,9 +499,35 @@ impl<'a> Simulator<'a> {
                 mean_tau: a.tau_sum / a.tau_slots.max(1) as f64,
                 iterations_done: kernel::completed_iterations(a.progress),
                 migrations: 0,
-            });
+            };
+            ledger::note_record(&rec);
+            records.push(rec);
         }
         records.sort_by_key(|r| r.job);
+        // Forced final checkpoint: the record stream is complete, so two
+        // equivalent plan replays close their ledgers on identical
+        // digests regardless of cadence alignment.
+        if ledger::armed() {
+            ledger::checkpoint(
+                t,
+                ledger::QueueCensus {
+                    pending: pending.len() + (by_arrival.len() - arr_cursor),
+                    running: 0,
+                    recovering: 0,
+                    free_gpus: self.cluster.server_ids().map(|s| state.free_on(s)).sum(),
+                },
+                true,
+                || {
+                    if use_tracker {
+                        (0..topo.num_links())
+                            .map(|l| tracker.link_count(crate::topology::LinkId(l)) as u64)
+                            .collect::<Vec<u64>>()
+                    } else {
+                        Vec::new()
+                    }
+                },
+            );
+        }
 
         let makespan = records.iter().map(|r| r.finish).max().unwrap_or(0);
         let avg_jct = if records.is_empty() {

@@ -1,0 +1,199 @@
+//! End-to-end fixtures for the flight recorder + `rarsched diff`
+//! forensics loop (see `rarsched::obs::ledger` / `rarsched::obs::diff`):
+//!
+//! * two identical runs save ledgers that diff **clean** — the
+//!   equivalence gate `scripts/verify.sh` builds on;
+//! * a seed-perturbed and a fault-perturbed run each pin a *first*
+//!   divergent checkpoint, stream and (with `--ledger-events`) event;
+//! * truncated / corrupt / non-ledger files fail to load with clean
+//!   errors instead of panicking;
+//! * cadence-mismatched recordings refuse checkpoint alignment.
+//!
+//! The recorder is process-global, so every test here serializes on one
+//! lock (the same discipline as `tests/obs_passivity.rs`).
+
+use rarsched::cluster::Cluster;
+use rarsched::contention::ContentionParams;
+use rarsched::faults::{FaultSpec, FaultTrace};
+use rarsched::jobs::JobSpec;
+use rarsched::obs::{diff, ledger};
+use rarsched::online::{MigrationControl, OnlineOptions, OnlinePolicyKind, OnlineScheduler};
+use rarsched::runtime::RunManifest;
+use rarsched::topology::Topology;
+use rarsched::trace::TraceGenerator;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cluster() -> Cluster {
+    Cluster::uniform(4, 4, 1.0, 25.0).with_topology(Topology::racks(4, 2, 2.0))
+}
+
+fn jobs_for(seed: u64) -> Vec<JobSpec> {
+    TraceGenerator::paper_scaled(0.1).generate_online(seed, 1.0)
+}
+
+/// One migration-armed SJF-BCO run with the recorder armed; returns the
+/// closed ledger. Callers hold the obs lock.
+fn record(
+    jobs: &[JobSpec],
+    faults: Option<&FaultTrace>,
+    cadence: u64,
+    events: bool,
+) -> ledger::Ledger {
+    let params = ContentionParams::paper();
+    let cluster = cluster();
+    let options = OnlineOptions {
+        migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        max_slots: 10_000_000,
+        ..OnlineOptions::default()
+    };
+    assert!(!ledger::armed(), "recorder leaked from a previous case");
+    ledger::arm(cadence, events, None);
+    let mut sched = OnlineScheduler::new(&cluster, jobs, &params).with_options(options);
+    if let Some(f) = faults {
+        sched = sched.with_faults(f);
+    }
+    let _ = sched.run(OnlinePolicyKind::SjfBco.build().as_mut());
+    ledger::disarm().expect("armed ledger must disarm to a document")
+}
+
+/// Save, reload and parse a ledger — every fixture goes through the
+/// full disk roundtrip the CLI uses.
+fn roundtrip(led: &ledger::Ledger, dir: &Path, name: &str) -> diff::LedgerDoc {
+    let path = dir.join(name);
+    led.save(&path, None).unwrap();
+    diff::load(&path).unwrap()
+}
+
+#[test]
+fn identical_runs_diff_clean() {
+    let _guard = obs_lock();
+    let jobs = jobs_for(0x1ed6e4);
+    let dir = rarsched::util::temp_dir("ledger-diff-clean").unwrap();
+    let a = roundtrip(&record(&jobs, None, 200, true), &dir, "a.json");
+    let b = roundtrip(&record(&jobs, None, 200, true), &dir, "b.json");
+    assert!(!a.checkpoints.is_empty(), "fixture is vacuous without checkpoints");
+    let report = diff::diff(&a, &b);
+    assert!(report.clean(), "identical runs must diff clean: {report:?}");
+    assert_eq!(report.checkpoints_compared, a.checkpoints.len());
+    let text = report.render("a.json", "b.json");
+    assert!(text.contains("zero divergence"), "render: {text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn seed_perturbed_runs_pin_first_divergence() {
+    let _guard = obs_lock();
+    let dir = rarsched::util::temp_dir("ledger-diff-seed").unwrap();
+    let a = roundtrip(&record(&jobs_for(0x1ed6e4), None, 200, true), &dir, "a.json");
+    let b = roundtrip(&record(&jobs_for(0x0ddba1), None, 200, true), &dir, "b.json");
+    let report = diff::diff(&a, &b);
+    assert!(!report.clean(), "different traces must diverge");
+    let d = report.divergence.as_ref().expect("a pinned divergence");
+    assert!(!d.fields.is_empty(), "divergence names no field or stream");
+    // everything before the pinned checkpoint is proven identical
+    assert_eq!(report.checkpoints_compared, d.seq as usize);
+    // both sides recorded fingerprint rings, so the divergence narrows
+    // to a concrete first event (or an explicit truncation marker)
+    let ev = d.first_event.as_ref().expect("--ledger-events pins an event");
+    if !ev.truncated {
+        assert!(ev.a.is_some() || ev.b.is_some(), "event divergence with no sides");
+    }
+    let text = report.render("a.json", "b.json");
+    assert!(text.contains("FIRST DIVERGENCE"), "render: {text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_perturbed_runs_pin_first_divergence() {
+    let _guard = obs_lock();
+    let jobs = jobs_for(0x1ed6e4);
+    let faults = "server:900:200,seed:3"
+        .parse::<FaultSpec>()
+        .unwrap()
+        .generate(&cluster(), 20_000, 0x1ed6e4);
+    assert!(!faults.is_empty(), "fault fixture is vacuous without events");
+    let dir = rarsched::util::temp_dir("ledger-diff-fault").unwrap();
+    let a = roundtrip(&record(&jobs, None, 200, true), &dir, "a.json");
+    let b = roundtrip(&record(&jobs, Some(&faults), 200, true), &dir, "b.json");
+    let report = diff::diff(&a, &b);
+    assert!(!report.clean(), "fault injection must perturb the digest");
+    let d = report.divergence.as_ref().expect("a pinned divergence");
+    assert!(!d.fields.is_empty());
+    assert_eq!(report.checkpoints_compared, (d.seq as usize).min(a.checkpoints.len()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cadence_mismatch_refuses_alignment() {
+    let _guard = obs_lock();
+    let jobs = jobs_for(0x1ed6e4);
+    let dir = rarsched::util::temp_dir("ledger-diff-cadence").unwrap();
+    let a = roundtrip(&record(&jobs, None, 200, false), &dir, "a.json");
+    let b = roundtrip(&record(&jobs, None, 400, false), &dir, "b.json");
+    let report = diff::diff(&a, &b);
+    assert_eq!(report.cadence_mismatch, Some((200, 400)));
+    assert!(!report.clean());
+    assert!(report.render("a", "b").contains("cadence mismatch"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_stamp_surfaces_config_match() {
+    let _guard = obs_lock();
+    let jobs = jobs_for(0x1ed6e4);
+    let dir = rarsched::util::temp_dir("ledger-diff-manifest").unwrap();
+    let led = record(&jobs, None, 500, false);
+    let manifest = RunManifest::new(7, "config text", &["--flag".to_string()]);
+    let stamp = manifest.to_json().to_pretty();
+    let pa = dir.join("a.json");
+    let pb = dir.join("b.json");
+    led.save(&pa, Some(&stamp)).unwrap();
+    led.save(&pb, Some(&stamp)).unwrap();
+    let (a, b) = (diff::load(&pa).unwrap(), diff::load(&pb).unwrap());
+    assert!(a.config_digest.is_some(), "manifest stamp must surface the digest");
+    let report = diff::diff(&a, &b);
+    assert!(report.clean());
+    assert_eq!(report.configs_match, Some(true));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_and_corrupt_ledgers_error_cleanly() {
+    let _guard = obs_lock();
+    let jobs = jobs_for(0x1ed6e4);
+    let dir = rarsched::util::temp_dir("ledger-diff-corrupt").unwrap();
+    let path = dir.join("good.json");
+    record(&jobs, None, 500, true).save(&path, None).unwrap();
+    assert!(diff::load(&path).is_ok(), "the intact fixture must load");
+
+    // truncated mid-document: a clean "not valid JSON" error
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cut = dir.join("truncated.json");
+    std::fs::write(&cut, &text[..text.len() / 2]).unwrap();
+    let err = format!("{:#}", diff::load(&cut).unwrap_err());
+    assert!(err.contains("not valid JSON"), "unexpected error: {err}");
+
+    // valid JSON, but not a ledger document
+    let alien = dir.join("alien.json");
+    std::fs::write(&alien, "{\"rows\": []}").unwrap();
+    let err = format!("{:#}", diff::load(&alien).unwrap_err());
+    assert!(err.contains("not a ledger document"), "unexpected error: {err}");
+
+    // unsupported version number
+    let vers = dir.join("version.json");
+    std::fs::write(&vers, text.replacen("\"version\": 1", "\"version\": 9", 1)).unwrap();
+    let err = format!("{:#}", diff::load(&vers).unwrap_err());
+    assert!(err.contains("unsupported ledger version"), "unexpected error: {err}");
+
+    // missing file
+    let err = format!("{:#}", diff::load(&dir.join("nope.json")).unwrap_err());
+    assert!(err.contains("reading ledger"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

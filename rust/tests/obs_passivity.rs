@@ -14,6 +14,7 @@ use rarsched::cluster::Cluster;
 use rarsched::contention::ContentionParams;
 use rarsched::faults::FaultSpec;
 use rarsched::jobs::JobSpec;
+use rarsched::obs::ledger::{self, Stream};
 use rarsched::obs::trace::MemSink;
 use rarsched::obs::{explain, metrics, timeline, trace, Decision, LinkSample, TraceEvent};
 use rarsched::online::{
@@ -320,6 +321,161 @@ fn fault_injected_runs_are_identical_armed_and_disarmed() {
         // the deterministic case must actually exercise the kill path
         assert!(armed.failed > 0, "{ctx}: no gang killed; retune the fault trace");
     }
+}
+
+/// The flight recorder obeys the same passivity invariant as the other
+/// recorders: arming `--ledger` (checkpoints + event-fingerprint rings)
+/// is bit-identical to the disarmed stack on every fabric and engine
+/// mode, and two identical armed runs close on *equal* ledgers — the
+/// reproducibility that `rarsched diff` builds on.
+#[test]
+fn ledger_is_passive_and_reproducible_across_engines() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0xabcd, 2.0);
+    for (fabric, cluster) in fabrics() {
+        let plan = schedule(Policy::SjfBco, &cluster, &jobs, &params, 1_000_000).unwrap();
+        for (mode, options) in [
+            ("tracker", SimOptions::default()),
+            (
+                "snapshot",
+                SimOptions {
+                    contention: ContentionMode::SnapshotRebuild,
+                    ..SimOptions::default()
+                },
+            ),
+            ("slots", SimOptions { event_driven: false, ..SimOptions::default() }),
+        ] {
+            let ctx = format!("{fabric}/{mode}");
+            let sim = Simulator::new(&cluster, &jobs, &params).with_options(options);
+            assert!(!ledger::armed(), "{ctx}: recorder leaked from a previous case");
+            let baseline = sim.run(&plan);
+
+            ledger::arm(256, true, None);
+            let armed = sim.run(&plan);
+            let first = ledger::disarm().expect("armed ledger must disarm to a document");
+
+            assert_bitwise(&baseline, &armed, &ctx);
+            assert!(!first.checkpoints.is_empty(), "{ctx}: no checkpoints taken");
+            assert_eq!(
+                first.streams[Stream::Records.index()].count,
+                armed.records.len() as u64,
+                "{ctx}: record stream count"
+            );
+
+            // an identical second recording closes on an equal ledger —
+            // counter hashes are deltas from arm time, so a fresh
+            // process is not required for digest equality
+            ledger::arm(256, true, None);
+            let again = sim.run(&plan);
+            let second = ledger::disarm().unwrap();
+            assert_bitwise(&armed, &again, &ctx);
+            assert_eq!(first, second, "{ctx}: equivalent runs must hash identically");
+        }
+    }
+}
+
+/// The online loop under the full control grid — θ-admission, migration
+/// and fault injection — with the ledger armed: outcomes stay
+/// bit-identical, the stream counts reconcile against the outcome's own
+/// ledgers, and recording is reproducible run over run.
+#[test]
+fn ledger_is_passive_on_the_online_loop_and_under_faults() {
+    let _guard = obs_lock();
+    let params = ContentionParams::paper();
+    let jobs = jobs_for(0x5eed, 0.5);
+    let faults_cluster =
+        Cluster::uniform(8, 8, 1.0, 25.0).with_topology(Topology::racks(8, 4, 2.0));
+    let faults = "server:900:200,link:800:150:0.4,seed:3"
+        .parse::<FaultSpec>()
+        .unwrap()
+        .generate(&faults_cluster, 20_000, 0x5eed);
+    for (fabric, cluster) in fabrics() {
+        for (theta_on, migrate) in [(false, false), (true, true)] {
+            let admission = if theta_on {
+                AdmissionControl { theta: 6.0, queue_cap: 4 }
+            } else {
+                AdmissionControl::default()
+            };
+            let options = OnlineOptions {
+                admission,
+                migration: MigrationControl {
+                    enabled: migrate,
+                    max_moves: 2,
+                    restart_slots: 5,
+                },
+                max_slots: 10_000_000,
+                ..OnlineOptions::default()
+            };
+            let ctx = format!("{fabric} (theta={theta_on}, migrate={migrate})");
+            assert!(!ledger::armed(), "{ctx}: recorder leaked from a previous case");
+            let baseline = OnlineScheduler::new(&cluster, &jobs, &params)
+                .with_options(options)
+                .run(OnlinePolicyKind::SjfBco.build().as_mut());
+
+            ledger::arm(512, true, None);
+            let armed = OnlineScheduler::new(&cluster, &jobs, &params)
+                .with_options(options)
+                .run(OnlinePolicyKind::SjfBco.build().as_mut());
+            let first = ledger::disarm().unwrap();
+
+            assert_online_bitwise(&baseline, &armed, &ctx);
+            assert!(!first.checkpoints.is_empty(), "{ctx}: no checkpoints taken");
+            assert_eq!(
+                first.streams[Stream::Events.index()].count,
+                armed.events.events().len() as u64,
+                "{ctx}: event stream count"
+            );
+            assert_eq!(
+                first.streams[Stream::Records.index()].count,
+                armed.outcome.records.len() as u64,
+                "{ctx}: record stream count"
+            );
+            assert_eq!(
+                first.streams[Stream::Rejections.index()].count,
+                armed.rejected.len() as u64,
+                "{ctx}: rejection stream count"
+            );
+            assert_eq!(
+                first.streams[Stream::Migrations.index()].count,
+                armed.migrations.len() as u64,
+                "{ctx}: migration stream count"
+            );
+
+            ledger::arm(512, true, None);
+            let again = OnlineScheduler::new(&cluster, &jobs, &params)
+                .with_options(options)
+                .run(OnlinePolicyKind::SjfBco.build().as_mut());
+            let second = ledger::disarm().unwrap();
+            assert_online_bitwise(&armed, &again, &ctx);
+            assert_eq!(first, second, "{ctx}: equivalent runs must hash identically");
+        }
+    }
+    // fault injection flows through the fifth stream without perturbing
+    // the schedule
+    let options = OnlineOptions {
+        migration: MigrationControl { enabled: true, max_moves: 2, restart_slots: 5 },
+        max_slots: 10_000_000,
+        ..OnlineOptions::default()
+    };
+    assert!(!ledger::armed());
+    let baseline = OnlineScheduler::new(&faults_cluster, &jobs, &params)
+        .with_options(options)
+        .with_faults(&faults)
+        .run(OnlinePolicyKind::SjfBco.build().as_mut());
+    ledger::arm(512, true, None);
+    let armed = OnlineScheduler::new(&faults_cluster, &jobs, &params)
+        .with_options(options)
+        .with_faults(&faults)
+        .run(OnlinePolicyKind::SjfBco.build().as_mut());
+    let led = ledger::disarm().unwrap();
+    assert_online_bitwise(&baseline, &armed, "rack/sjf-bco faults+ledger");
+    let fault_count = led.streams[Stream::Faults.index()].count;
+    assert!(fault_count > 0, "fault stream must see the injected events");
+    assert!(
+        fault_count <= faults.len() as u64,
+        "fault stream digested more events than the trace holds"
+    );
 }
 
 /// The θ-on online configuration must actually exercise the rejection

@@ -11,6 +11,7 @@
 #                     unimplemented! in hot-path modules
 #                     (sim/ online/ contention/ net/ topology/ faults/)
 #   obs-binding     — `let name = metrics::get(...)` / `let name = obs::…`
+#                     / `let name = ledger::…` / `let name = prof::…`
 #                     in decision modules (sim/ online/ sched/
 #                     contention/ net/ faults/): observability results must not
 #                     feed scheduling state (underscore bindings pass)
@@ -122,7 +123,7 @@ NR == FNR {
     }
 
     # obs-binding: decision modules; `let _x =` (inspection) passes
-    if (dec && code ~ /let[ \t]+(mut[ \t]+)?[a-zA-Z][a-zA-Z0-9_]*[ \t]*=[ \t]*(metrics::get|obs::)/) {
+    if (dec && code ~ /let[ \t]+(mut[ \t]+)?[a-zA-Z][a-zA-Z0-9_]*[ \t]*=[ \t]*(metrics::get|obs::|ledger::|prof::)/) {
         printf "%s:%d: [obs-binding] observability result bound in a decision module: %s\n", path, FNR, trim(code)
         findings++
     }

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification pipeline: fallback lint -> fmt-check -> release
 # build -> tests -> archlint -> clippy -> bench smoke -> trace
-# well-formedness -> streaming smoke -> fault-injection smoke.
+# well-formedness -> streaming smoke -> fault-injection smoke ->
+# ledger diff smoke.
 #
 # Stage 1 is scripts/lint.sh — the toolchain-free awk mirror of the top
 # archlint rules. It runs BEFORE the cargo-presence check on purpose: a
@@ -25,13 +26,19 @@
 # block gated below) and BENCH_faults.json (fault-injection overhead:
 # no-trace vs empty-trace — asserted bit-identical in-bench and gated on
 # the recorded boolean here — plus storm cases with the recovery ledger)
-# so the perf trajectory is recorded across PRs. The last three stages
-# emit a real `--trace-out` Chrome-trace file gated by `rarsched
-# obs-check` (well-formed JSON, known phases, monotone non-negative
-# timestamps), run an `online --stream` smoke through the full CLI path,
-# gating on its artifacts and manifest stamp, and run the fault path
-# end-to-end: `fault-trace` dumps a seeded trace which `online --faults
-# @trace.json` replays, gated on the injection actually being routed.
+# and BENCH_ledger.json (flight-recorder overhead: disarmed vs armed
+# digesting across checkpoint cadences, passivity asserted in-bench and
+# gated on the recorded boolean here) so the perf trajectory is recorded
+# across PRs. The last four stages emit a real `--trace-out` Chrome-trace
+# file gated by `rarsched obs-check` (well-formed JSON, known phases,
+# monotone non-negative timestamps), run an `online --stream` smoke
+# through the full CLI path, gating on its artifacts and manifest stamp,
+# run the fault path end-to-end: `fault-trace` dumps a seeded trace which
+# `online --faults @trace.json` replays, gated on the injection actually
+# being routed — and close with divergence forensics: two runs that the
+# net/ equivalence guarantee pins bit-identical (EffectiveDegree vs
+# MaxMinFair on a capacity-mirroring fabric) record `--ledger` digests
+# which `rarsched diff` must report as zero divergence.
 #
 # Failure policy: when cargo is PRESENT, every stage is a hard gate —
 # fmt drift, a build error, a test failure, a missing bench artifact or
@@ -45,7 +52,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== [1/10] scripts/lint.sh (toolchain-free fallback rules) =="
+echo "== [1/11] scripts/lint.sh (toolchain-free fallback rules) =="
 # Hard gate, and the only one that runs without cargo.
 scripts/lint.sh
 
@@ -55,7 +62,7 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
-echo "== [2/10] cargo fmt --check =="
+echo "== [2/11] cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     # fmt drift is a hard failure (gated step)
     cargo fmt --all -- --check
@@ -63,13 +70,13 @@ else
     echo "WARN: rustfmt unavailable in this toolchain; fmt gate skipped"
 fi
 
-echo "== [3/10] cargo build --release =="
+echo "== [3/11] cargo build --release =="
 cargo build --release --offline
 
-echo "== [4/10] cargo test -q =="
+echo "== [4/11] cargo test -q =="
 cargo test -q --offline
 
-echo "== [5/10] archlint (self-hosted static analysis -> LINT.json) =="
+echo "== [5/11] archlint (self-hosted static analysis -> LINT.json) =="
 # The analyzer exits non-zero on any unannotated finding; --out writes
 # the artifact even on failure so the diagnostics land in both places.
 LINT_OUT="$PWD/LINT.json"
@@ -89,7 +96,7 @@ for field in '"findings_total": *0' '"rules"' '"allows"' '"manifest"'; do
 done
 echo "OK: LINT.json written and gated"
 
-echo "== [6/10] cargo clippy ([workspace.lints] profile) =="
+echo "== [6/11] cargo clippy ([workspace.lints] profile) =="
 # Curated warn-level surface (unwrap_used, indexing_slicing, float_cmp,
 # iter_over_hash_type, …) — soft-gated on toolchain availability because
 # clippy is not baked into every container; archlint above is the hard
@@ -100,7 +107,7 @@ else
     echo "WARN: cargo-clippy unavailable in this toolchain; clippy stage skipped"
 fi
 
-echo "== [7/10] bench smoke (online_hot_path + sim_engine + net_alloc + obs + stream + faults -> BENCH_*.json) =="
+echo "== [7/11] bench smoke (online_hot_path + sim_engine + net_alloc + obs + stream + faults + ledger -> BENCH_*.json) =="
 # cargo runs bench binaries with cwd at the package root (rust/), so pin
 # the output paths to the repo root explicitly.
 RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
@@ -146,9 +153,17 @@ RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
     RARSCHED_BENCH_FAULTS_OUT="$PWD/BENCH_faults.json" \
     cargo bench --offline --bench faults
 
+# Flight recorder: disarmed vs armed run-digest cost on the online loop
+# across checkpoint cadences (plus the --ledger-events fingerprint
+# ring). The bench asserts the passivity invariant on every armed mode
+# before writing the file.
+RARSCHED_BENCH_MS="${RARSCHED_BENCH_MS:-200}" \
+    RARSCHED_BENCH_LEDGER_OUT="$PWD/BENCH_ledger.json" \
+    cargo bench --offline --bench ledger
+
 for artifact in BENCH_topology.json BENCH_online_overload.json BENCH_sim_engine.json \
                 BENCH_net_alloc.json BENCH_obs.json BENCH_stream.json \
-                BENCH_faults.json; do
+                BENCH_faults.json BENCH_ledger.json; do
     if [ -f "$artifact" ]; then
         echo "OK: $artifact written"
     else
@@ -181,7 +196,18 @@ for field in '"empty_trace_exact_match": *true' '"manifest"'; do
 done
 echo "OK: BENCH_faults.json equivalence block gated"
 
-echo "== [8/10] trace export well-formedness (simulate --trace-out -> obs-check) =="
+# And on the ledger bench: every armed mode must have matched the
+# disarmed reference outcome bit for bit (asserted in-bench before the
+# file is written; gated here against stale artifacts).
+for field in '"passivity_ok": *true' '"manifest"'; do
+    if ! grep -Eq "$field" BENCH_ledger.json; then
+        echo "ERROR: BENCH_ledger.json missing $field" >&2
+        exit 1
+    fi
+done
+echo "OK: BENCH_ledger.json passivity block gated"
+
+echo "== [8/11] trace export well-formedness (simulate --trace-out -> obs-check) =="
 # Emit a real Chrome trace through the full CLI path, then gate on the
 # validator: well-formed JSON, known phases, non-negative and per-thread
 # monotone timestamps. The sample trace is a throwaway smoke artifact.
@@ -196,7 +222,7 @@ fi
 ./target/release/rarsched obs-check "$TRACE_SAMPLE"
 rm -f "$TRACE_SAMPLE" "$TRACE_SAMPLE.manifest.json"
 
-echo "== [9/10] streaming online smoke (online --stream -> artifacts + manifest) =="
+echo "== [9/11] streaming online smoke (online --stream -> artifacts + manifest) =="
 # The O(active)-memory engine through the full CLI path: a lazy 2000-job
 # stream on the 0.1-scale fabric, artifacts written by the same streaming
 # writers the tests pin byte-identical. Gate on the table artifacts and
@@ -218,7 +244,7 @@ fi
 echo "OK: streaming smoke artifacts + manifest stamp"
 rm -rf "$STREAM_DIR"
 
-echo "== [10/10] fault-injection smoke (fault-trace dump -> online --faults replay) =="
+echo "== [10/11] fault-injection smoke (fault-trace dump -> online --faults replay) =="
 # The fault path end-to-end through the CLI: dump a seeded trace with the
 # standalone subcommand, replay it through `online --faults @file`, and
 # gate on (a) the dump being a well-formed non-empty trace and (b) the
@@ -256,5 +282,33 @@ fi
 echo "OK: fault-injection smoke (trace dump + replay + injection recorded)"
 rm -rf "$FAULT_DIR"
 rm -f "$FAULT_TRACE"
+
+echo "== [11/11] ledger diff smoke (two equivalent runs -> rarsched diff) =="
+# Divergence forensics end-to-end through the CLI: record the run-digest
+# flight recorder on two runs the net/ equivalence guarantee pins bit
+# identical — EffectiveDegree vs MaxMinFair contention on a
+# capacity-mirroring rack fabric (tests/net_equivalence.rs) — then
+# `rarsched diff` must report zero divergence (exit 0; it exits non-zero
+# on the first divergent checkpoint). This is the workflow the diff
+# subcommand exists for: when an equivalence ladder breaks, the same two
+# commands localize WHERE the runs first part ways.
+LEDGER_DIR="$PWD/ledger_smoke"
+rm -rf "$LEDGER_DIR"
+mkdir -p "$LEDGER_DIR"
+./target/release/rarsched online --scale 0.1 --gap 1.0 --policies sjf-bco \
+    --no-clairvoyant --migrate --topology rack:4:2.0 --contention degree \
+    --ledger "$LEDGER_DIR/degree.json" --ledger-events >/dev/null
+./target/release/rarsched online --scale 0.1 --gap 1.0 --policies sjf-bco \
+    --no-clairvoyant --migrate --topology rack:4:2.0 --contention maxmin \
+    --ledger "$LEDGER_DIR/maxmin.json" --ledger-events >/dev/null
+for artifact in degree.json maxmin.json; do
+    if [ ! -f "$LEDGER_DIR/$artifact" ]; then
+        echo "ERROR: online --ledger did not emit $artifact" >&2
+        exit 1
+    fi
+done
+./target/release/rarsched diff "$LEDGER_DIR/degree.json" "$LEDGER_DIR/maxmin.json"
+echo "OK: ledger diff smoke (equivalent runs digest identically)"
+rm -rf "$LEDGER_DIR"
 
 echo "verify: all stages passed"
